@@ -1,0 +1,136 @@
+//! Galactic dust map (laptop-scale): the application that ran ICR with
+//! 122 *billion* parameters (paper §6, ref [24] — the Galactic 3D dust
+//! distribution via GP regression on spherical coordinates).
+//!
+//! The real reconstruction models log-dust-extinction on a spherical grid
+//! with a logarithmic radial axis. Here we build the same *structure* at
+//! laptop scale: a separable GP on (log-radius × galactic longitude),
+//! using the Kronecker identity `√(K_r ⊗ K_ℓ) = √K_r ⊗ √K_ℓ` — each axis
+//! gets its own 1-D ICR engine (log chart radially, regular chart in
+//! longitude, broadcasting the stationary refinement matrices exactly as
+//! §4.3 describes for invariant axes).
+//!
+//! Run: `cargo run --release --example galactic_dust`
+
+use icr::chart::{IdentityChart, LogChart};
+use icr::icr::{Geometry, IcrEngine, RefinementParams};
+use icr::kernels::Matern;
+use icr::rng::Rng;
+
+/// Apply a 1-D engine along the rows of an excitation matrix
+/// (dof × m) → (n × m): `out[:, j] = √K · xi[:, j]`.
+fn apply_axis0(engine: &IcrEngine, xi: &[f64], m: usize) -> Vec<f64> {
+    let dof = engine.total_dof();
+    let n = engine.n_points();
+    assert_eq!(xi.len(), dof * m);
+    let mut out = vec![0.0; n * m];
+    let mut col = vec![0.0; dof];
+    for j in 0..m {
+        for i in 0..dof {
+            col[i] = xi[i * m + j];
+        }
+        let s = engine.apply_sqrt(&col);
+        for i in 0..n {
+            out[i * m + j] = s[i];
+        }
+    }
+    out
+}
+
+/// Apply along rows: (r × dof) → (r × n): `out[i, :] = √K · xi[i, :]`.
+fn apply_axis1(engine: &IcrEngine, xi: &[f64], r: usize) -> Vec<f64> {
+    let dof = engine.total_dof();
+    let n = engine.n_points();
+    assert_eq!(xi.len(), r * dof);
+    let mut out = vec![0.0; r * n];
+    for i in 0..r {
+        let s = engine.apply_sqrt(&xi[i * dof..(i + 1) * dof]);
+        out[i * n..(i + 1) * n].copy_from_slice(&s);
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    // Radial axis: dust correlations with ρ = 0.5 kpc on distances from
+    // 60 pc to ~16 kpc — a log chart, exactly the [24] geometry.
+    let radial_params = RefinementParams::for_target(5, 4, 6, 1500)?;
+    let rgeo = Geometry::build(radial_params);
+    let rfin = rgeo.final_positions();
+    let (u0, u1) = (rfin[0], rfin[rfin.len() - 1]);
+    let beta = (16.0_f64 / 0.06).ln() / (u1 - u0);
+    let alpha = 0.06_f64.ln() - beta * u0;
+    let radial_chart = LogChart::new(alpha, beta);
+    let radial_kernel = Matern::nu32(0.5, 1.0);
+    let radial = IcrEngine::build(&radial_kernel, &radial_chart, radial_params)?;
+
+    // Longitude axis: translation invariant ⇒ stationary broadcast path.
+    let lon_params = RefinementParams::for_target(3, 2, 5, 360)?;
+    let lon_kernel = Matern::nu32(12.0, 1.0); // ~12° correlation length
+    let lon = IcrEngine::build(&lon_kernel, &IdentityChart::unit(), lon_params)?;
+
+    let (nr, nl) = (radial.n_points(), lon.n_points());
+    println!(
+        "dust grid: {nr} radial (log, {:.2}…{:.1} kpc) × {nl} longitude = {} voxels",
+        radial.domain_points()[0],
+        radial.domain_points()[nr - 1],
+        nr * nl
+    );
+    println!(
+        "radial engine stationary: {} | longitude engine stationary: {} (broadcast fast path)",
+        radial.is_stationary(),
+        lon.is_stationary()
+    );
+
+    // Sample the separable field: s = √K_r · Ξ · √K_ℓᵀ.
+    let mut rng = Rng::new(122_000_000_000);
+    let t0 = std::time::Instant::now();
+    let xi: Vec<f64> = rng.standard_normal_vec(radial.total_dof() * lon.total_dof());
+    let half = apply_axis1(&lon, &xi, radial.total_dof()); // radial-dof × nl
+    let field = apply_axis0(&radial, &half, nl); // nr × nl
+    let dt = t0.elapsed();
+    println!(
+        "sampled {}-voxel log-dust field in {:.1} ms ({:.0} ns/voxel — O(N), Eq. 13)",
+        nr * nl,
+        dt.as_secs_f64() * 1e3,
+        dt.as_nanos() as f64 / (nr * nl) as f64
+    );
+
+    // Column statistics: the marginal variance must be ≈ k_r(0)·k_ℓ(0) = 1.
+    let mean: f64 = field.iter().sum::<f64>() / field.len() as f64;
+    let var: f64 = field.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / field.len() as f64;
+    println!("field stats: mean {mean:+.3}, var {var:.3} (expected ≈ 1.0)");
+    anyhow::ensure!((var - 1.0).abs() < 0.5, "marginal variance off: {var}");
+
+    // Dust density = exp(log-field): report a simple observable, the
+    // radial profile of the mean density (averaged over longitude).
+    println!("\nradial mean-density profile (every ~{}th shell):", nr / 8);
+    for i in (0..nr).step_by((nr / 8).max(1)) {
+        let row_mean: f64 =
+            (0..nl).map(|j| field[i * nl + j].exp()).sum::<f64>() / nl as f64;
+        let r = radial.domain_points()[i];
+        let bar = "#".repeat((row_mean * 10.0).min(60.0) as usize);
+        println!("  r = {r:8.2} kpc  ⟨ρ⟩ = {row_mean:6.3}  {bar}");
+    }
+
+    // Empirical radial correlation vs the kernel (sanity of the Kronecker
+    // construction): corr(s[i0,:], s[i1,:]) ≈ k_r(d)·1 normalized.
+    let i0 = nr / 2;
+    let corr = |a: usize, b: usize| -> f64 {
+        let (ra, rb) = (&field[a * nl..(a + 1) * nl], &field[b * nl..(b + 1) * nl]);
+        let dot: f64 = ra.iter().zip(rb).map(|(x, y)| x * y).sum();
+        let na: f64 = ra.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = rb.iter().map(|x| x * x).sum::<f64>().sqrt();
+        dot / (na * nb)
+    };
+    println!("\nradial correlation from one sample (vs kernel):");
+    for di in [1usize, 4, 16, 64] {
+        let i1 = (i0 + di).min(nr - 1);
+        let d = (radial.domain_points()[i1] - radial.domain_points()[i0]).abs();
+        println!(
+            "  Δr = {d:7.3} kpc: empirical {:+.3}, kernel {:+.3}",
+            corr(i0, i1),
+            icr::kernels::Kernel::eval(&radial_kernel, d)
+        );
+    }
+    Ok(())
+}

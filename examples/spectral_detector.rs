@@ -1,0 +1,132 @@
+//! Spectral pixel detector — the chart example from the paper's §4.3:
+//! "a pixel detector measuring energies might have a regular, spatial
+//! pixel axis and a logarithmic, spectral energy axis."
+//!
+//! We model the detector's expected log-count surface as a separable GP
+//! on (pixel × log-energy), draw the true surface from the prior, observe
+//! noisy counts, and reconstruct the energy spectrum per pixel with the
+//! standardized-VI machinery (paper Eq. 3) along the energy axis.
+//!
+//! Run: `cargo run --release --example spectral_detector`
+
+use icr::chart::{IdentityChart, LogChart};
+use icr::icr::{Geometry, IcrEngine, RefinementParams};
+use icr::kernels::Matern;
+use icr::optim::Adam;
+use icr::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // Spatial axis: 96 pixels, regular, stationary broadcast path.
+    let px_params = RefinementParams::for_target(3, 2, 4, 96)?;
+    let px_kernel = Matern::nu32(6.0, 1.0); // features span ~6 pixels
+    let px = IcrEngine::build(&px_kernel, &IdentityChart::unit(), px_params)?;
+
+    // Energy axis: 1–100 keV on a log chart (constant resolution ΔE/E).
+    let en_params = RefinementParams::for_target(5, 4, 4, 128)?;
+    let egeo = Geometry::build(en_params);
+    let efin = egeo.final_positions();
+    let beta = (100.0_f64 / 1.0).ln() / (efin[efin.len() - 1] - efin[0]);
+    let alpha = 1.0_f64.ln() - beta * efin[0];
+    let en_chart = LogChart::new(alpha, beta);
+    // Detector response correlated over ~8 keV *in energy*: on the log
+    // grid that spans bins that are densely packed (ΔE ≪ ρ at 1 keV) to
+    // sparsely packed (ΔE ≈ ρ/2 at 100 keV) — spacing variation over two
+    // orders of magnitude, exactly the regime the chart exists for (§5).
+    let en_kernel = Matern::nu32(8.0, 0.8);
+    let en = IcrEngine::build(&en_kernel, &en_chart, en_params)?;
+
+    let (np_, ne) = (px.n_points(), en.n_points());
+    println!(
+        "detector: {np_} pixels × {ne} energy bins ({:.2}–{:.0} keV, log axis)",
+        en.domain_points()[0],
+        en.domain_points()[ne - 1]
+    );
+
+    // --- Ground truth: one draw of the separable prior. -----------------
+    let mut rng = Rng::new(0xDE7EC70);
+    let xi: Vec<f64> = rng.standard_normal_vec(px.total_dof() * en.total_dof());
+    // s = √K_px · Ξ · √K_enᵀ  (apply energy axis per row, then pixel axis
+    // per column).
+    let mut half = vec![0.0; px.total_dof() * ne];
+    for i in 0..px.total_dof() {
+        let s = en.apply_sqrt(&xi[i * en.total_dof()..(i + 1) * en.total_dof()]);
+        half[i * ne..(i + 1) * ne].copy_from_slice(&s);
+    }
+    let mut truth = vec![0.0; np_ * ne];
+    let mut col = vec![0.0; px.total_dof()];
+    for j in 0..ne {
+        for i in 0..px.total_dof() {
+            col[i] = half[i * ne + j];
+        }
+        let s = px.apply_sqrt(&col);
+        for i in 0..np_ {
+            truth[i * ne + j] = s[i];
+        }
+    }
+
+    // --- Observation: noisy log-counts on every second energy bin. ------
+    let sigma_n = 0.1;
+    let obs_idx: Vec<usize> = (0..ne).step_by(2).collect();
+
+    // --- Per-pixel spectral inference along the energy axis (Eq. 3). ----
+    // Each pixel row is an independent 1-D GP regression with the energy
+    // engine as prior: minimize ½‖(y−A√K ξ)/σ‖² + ½‖ξ‖² with Adam using
+    // the engine's hand-derived adjoint.
+    let report_pixels = [np_ / 4, np_ / 2, 3 * np_ / 4];
+    let mut total_rmse = 0.0;
+    let t0 = std::time::Instant::now();
+    for pix in 0..np_ {
+        let row = &truth[pix * ne..(pix + 1) * ne];
+        let y: Vec<f64> =
+            obs_idx.iter().map(|&j| row[j] + sigma_n * rng.standard_normal()).collect();
+
+        let dof = en.total_dof();
+        let mut xi_fit = vec![0.0; dof];
+        let mut opt = Adam::new(dof, 0.2);
+        let inv_var = 1.0 / (sigma_n * sigma_n);
+        let mut last_loss = 0.0;
+        for _ in 0..400 {
+            let s = en.apply_sqrt(&xi_fit);
+            let mut cot = vec![0.0; ne];
+            let mut loss = 0.0;
+            for (&j, &yj) in obs_idx.iter().zip(&y) {
+                let r = s[j] - yj;
+                loss += 0.5 * r * r * inv_var;
+                cot[j] = r * inv_var;
+            }
+            loss += 0.5 * xi_fit.iter().map(|v| v * v).sum::<f64>();
+            let mut grad = en.apply_sqrt_transpose(&cot);
+            for (g, &x) in grad.iter_mut().zip(&xi_fit) {
+                *g += x;
+            }
+            opt.step(&mut xi_fit, &grad);
+            last_loss = loss;
+        }
+        let recon = en.apply_sqrt(&xi_fit);
+        let rmse = (recon
+            .iter()
+            .zip(row)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / ne as f64)
+            .sqrt();
+        total_rmse += rmse;
+        if report_pixels.contains(&pix) {
+            println!(
+                "pixel {pix:3}: final loss {last_loss:9.2}, spectrum RMSE {rmse:.3} \
+                 (noise σ = {sigma_n})"
+            );
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let mean_rmse = total_rmse / np_ as f64;
+    println!(
+        "\nreconstructed {np_} spectra ({} obs each) in {dt:.2}s — mean RMSE {mean_rmse:.3}",
+        obs_idx.len()
+    );
+    // The reconstruction must beat the noise-free prior scale (≈0.8) and
+    // approach the noise floor.
+    anyhow::ensure!(mean_rmse < 0.2, "spectral reconstruction too poor: {mean_rmse}");
+    println!("OK: mean RMSE {mean_rmse:.3} ≪ prior std 0.8 — energy-axis chart works");
+    Ok(())
+}

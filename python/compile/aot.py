@@ -1,0 +1,299 @@
+"""AOT pipeline: lower every model variant to HLO *text* artifacts.
+
+This is the single point where Python runs — ``make artifacts`` invokes it
+once; the Rust coordinator then loads and executes the artifacts via PJRT
+with no Python on the request path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the offline
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Emitted artifacts (all f64, all with baked refinement matrices):
+
+- ``icr_apply_<tag>``        — xi (dof,) -> s (N,): the Fig. 4 ICR forward
+                               pass for each paper parametrization + size.
+- ``icr_apply_batch<B>_<tag>`` — xi (B, dof) -> s (B, N): the coordinator's
+                               dynamic-batching executables.
+- ``kissgp_forward_n<N>``    — (y (N,), probes (10, N)) -> (x, logdet,
+                               residual): the Fig. 4 baseline forward pass.
+- ``icr_loss_grad_<tag>``    — (xi, y_obs, sigma) -> (loss, grad): the
+                               standardized-VI objective for the Rust
+                               end-to-end regression driver.
+
+Every ICR artifact carries a validation vector (deterministic xi, expected
+output head + L2 norm) so the Rust runtime can self-check after compile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .charts import LogChart
+from .cov import matern32
+from .geometry import RefinementParams, build_positions
+from .icr import apply_sqrt, apply_sqrt_batch
+from .kissgp import build_kissgp, kissgp_forward
+from .model import make_loss_and_grad
+from .refinement import build_icr_model
+
+PAPER_TARGET_N = 200
+PAPER_N_LVL = 5
+PAPER_PARAMS = [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)]
+FIG4_SIZES = [128, 512, 2048, 8192]
+BATCH_SIZES = [8, 32]
+RHO = 1.0
+D_MIN = 0.02  # nearest-neighbour spacing sweep: 2%·rho … rho (paper §5.1)
+D_MAX = 1.0
+LANCZOS_PROBES = 10
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jittable function to HLO text (the interchange format)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer elides
+    # the baked refinement matrices as `constant({...})`, which parses back
+    # as garbage on the Rust side.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def paper_chart(params: RefinementParams) -> LogChart:
+    """The §5 geometry: final-level grid (unit spacing) maps to points with
+    nearest-neighbour distances from 2%·rho to rho."""
+    positions = build_positions(params)
+    final = positions[-1]
+    return LogChart.from_neighbor_distances(len(final), D_MIN, D_MAX, u0=final[0])
+
+
+def validation_xi(dof: int) -> np.ndarray:
+    """Deterministic pseudo-excitations shared with the Rust tests."""
+    return np.sin(0.37 * np.arange(dof, dtype=np.float64))
+
+
+def build_icr_artifact(c: int, f: int, target_n: int, n_lvl: int):
+    params = RefinementParams.for_target(c, f, n_lvl, target_n)
+    chart = paper_chart(params)
+    kernel = matern32(RHO)
+    model = build_icr_model(kernel, chart, params)
+    return params, chart, model
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, example_args, inputs, outputs, meta, validation=None):
+        t0 = time.time()
+        text = to_hlo_text(fn, *example_args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as fh:
+            fh.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "meta": meta,
+        }
+        if validation is not None:
+            entry["validation"] = validation
+        self.entries.append(entry)
+        print(f"  [{time.time() - t0:6.2f}s] {name}: {len(text) / 1e6:.2f} MB", flush=True)
+
+    def finalize(self):
+        manifest = {
+            "version": 1,
+            "generated_by": "python/compile/aot.py",
+            "jax_version": jax.__version__,
+            "dtype": "f64",
+            "lanczos_probes": LANCZOS_PROBES,
+            "artifacts": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as fh:
+            json.dump(manifest, fh, indent=2)
+        print(f"wrote {path} ({len(self.entries)} artifacts)")
+
+
+def icr_meta(params: RefinementParams, chart: LogChart, model, batch=1):
+    return {
+        "kind": "icr",
+        "n": params.final_size(),
+        "dof": params.total_dof(),
+        "n_csz": params.n_csz,
+        "n_fsz": params.n_fsz,
+        "n_lvl": params.n_lvl,
+        "n0": params.n0,
+        "kernel": "matern32",
+        "rho": RHO,
+        "amplitude": 1.0,
+        "chart": "log",
+        "chart_alpha": chart.alpha,
+        "chart_beta": chart.beta,
+        "excitation_sizes": params.excitation_sizes(),
+        "batch": batch,
+        "domain_points_head": [float(x) for x in model.domain_points[:8]],
+        "domain_points_l2": float(np.linalg.norm(model.domain_points)),
+    }
+
+
+def icr_validation(model, params) -> dict:
+    xi = validation_xi(params.total_dof())
+    out = np.asarray(apply_sqrt(model, jnp.asarray(xi), use_pallas=True))
+    return {
+        "xi": "sin(0.37*arange(dof))",
+        "out_head": [float(v) for v in out[:8]],
+        "out_l2": float(np.linalg.norm(out)),
+    }
+
+
+def emit_all(out_dir: str, quick: bool = False) -> None:
+    em = Emitter(out_dir)
+    kernel = matern32(RHO)
+
+    # --- ICR apply: the five §5.1 parametrizations at N ≈ 200. ---------
+    paper_params = [(5, 4)] if quick else PAPER_PARAMS
+    for c, f in paper_params:
+        params, chart, model = build_icr_artifact(c, f, PAPER_TARGET_N, PAPER_N_LVL)
+        tag = f"c{c}f{f}_n{params.final_size()}"
+        dof = params.total_dof()
+        em.emit(
+            f"icr_apply_{tag}",
+            lambda xi, m=model: (apply_sqrt(m, xi, use_pallas=True),),
+            (jax.ShapeDtypeStruct((dof,), jnp.float64),),
+            inputs=[{"name": "xi", "shape": [dof], "dtype": "f64"}],
+            outputs=[{"name": "s", "shape": [params.final_size()], "dtype": "f64"}],
+            meta=icr_meta(params, chart, model),
+            validation=icr_validation(model, params),
+        )
+
+    # --- Batched ICR apply for the coordinator's dynamic batcher. ------
+    params, chart, model = build_icr_artifact(5, 4, PAPER_TARGET_N, PAPER_N_LVL)
+    dof = params.total_dof()
+    n = params.final_size()
+    for b in [BATCH_SIZES[0]] if quick else BATCH_SIZES:
+        em.emit(
+            f"icr_apply_batch{b}_c5f4_n{n}",
+            lambda xi, m=model: (apply_sqrt_batch(m, xi, use_pallas=False),),
+            (jax.ShapeDtypeStruct((b, dof), jnp.float64),),
+            inputs=[{"name": "xi", "shape": [b, dof], "dtype": "f64"}],
+            outputs=[{"name": "s", "shape": [b, n], "dtype": "f64"}],
+            meta=icr_meta(params, chart, model, batch=b),
+        )
+
+    # --- Fig. 4 size sweep: ICR apply + KISS-GP forward per N. ---------
+    fig4_sizes = [128] if quick else FIG4_SIZES
+    for target in fig4_sizes:
+        params, chart, model = build_icr_artifact(3, 2, target, PAPER_N_LVL)
+        n = params.final_size()
+        dof = params.total_dof()
+        em.emit(
+            f"icr_apply_fig4_n{n}",
+            lambda xi, m=model: (apply_sqrt(m, xi, use_pallas=True),),
+            (jax.ShapeDtypeStruct((dof,), jnp.float64),),
+            inputs=[{"name": "xi", "shape": [dof], "dtype": "f64"}],
+            outputs=[{"name": "s", "shape": [n], "dtype": "f64"}],
+            meta=icr_meta(params, chart, model),
+            validation=icr_validation(model, params),
+        )
+
+        # KISS-GP on the same modeled points (paper: M = N, no padding for
+        # the speed lane, jitter for invertibility).
+        op = build_kissgp(kernel, model.domain_points, m=n, padding=0.0, jitter=1e-6)
+        em.emit(
+            f"kissgp_forward_n{n}",
+            lambda y, probes, o=op: kissgp_forward(o, y, probes),
+            (
+                jax.ShapeDtypeStruct((n,), jnp.float64),
+                jax.ShapeDtypeStruct((LANCZOS_PROBES, n), jnp.float64),
+            ),
+            inputs=[
+                {"name": "y", "shape": [n], "dtype": "f64"},
+                {"name": "probes", "shape": [LANCZOS_PROBES, n], "dtype": "f64"},
+            ],
+            outputs=[
+                {"name": "x", "shape": [n], "dtype": "f64"},
+                {"name": "logdet", "shape": [], "dtype": "f64"},
+                {"name": "residual", "shape": [], "dtype": "f64"},
+            ],
+            meta={
+                "kind": "kissgp",
+                "n": n,
+                "m": n,
+                "padding": 0.0,
+                "jitter": 1e-6,
+                "cg_iters": 40,
+                "lanczos_probes": LANCZOS_PROBES,
+                "lanczos_iters": 15,
+                "kernel": "matern32",
+                "rho": RHO,
+            },
+        )
+
+    # --- Standardized-VI loss+grad for the end-to-end driver. ----------
+    params, chart, model = build_icr_artifact(5, 4, PAPER_TARGET_N, PAPER_N_LVL)
+    dof = params.total_dof()
+    n = params.final_size()
+    obs_idx = np.arange(0, n, 2)  # observe every other point
+    lg = make_loss_and_grad(model, obs_idx, use_pallas=True)
+    em.emit(
+        f"icr_loss_grad_c5f4_n{n}",
+        lambda xi, y, sigma: lg(xi, y, sigma),
+        (
+            jax.ShapeDtypeStruct((dof,), jnp.float64),
+            jax.ShapeDtypeStruct((len(obs_idx),), jnp.float64),
+            jax.ShapeDtypeStruct((), jnp.float64),
+        ),
+        inputs=[
+            {"name": "xi", "shape": [dof], "dtype": "f64"},
+            {"name": "y_obs", "shape": [len(obs_idx)], "dtype": "f64"},
+            {"name": "sigma_n", "shape": [], "dtype": "f64"},
+        ],
+        outputs=[
+            {"name": "loss", "shape": [], "dtype": "f64"},
+            {"name": "grad", "shape": [dof], "dtype": "f64"},
+        ],
+        meta={
+            **icr_meta(params, chart, model),
+            "kind": "icr_loss_grad",
+            "obs_idx_stride": 2,
+            "n_obs": int(len(obs_idx)),
+        },
+    )
+
+    em.finalize()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--quick", action="store_true", help="emit the minimal set (CI smoke)")
+    args = ap.parse_args()
+    t0 = time.time()
+    emit_all(args.out, quick=args.quick)
+    print(f"total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Coordinate charts (paper §4.3) — build-time mirror of ``rust/src/chart``.
+
+ICR refines on a regular Euclidean grid; a user-provided chart ``phi^{-1}``
+maps grid coordinates into the modeled domain, and the kernel is evaluated
+there. The Rust-native engine and the JAX/Pallas artifacts must agree on
+this geometry bit-for-bit (up to f64 round-off): the artifact-gated
+integration tests in ``rust/tests/`` compare the two numerically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityChart:
+    """Affine chart ``x = offset + scale * u`` (the plain regular grid)."""
+
+    offset: float = 0.0
+    scale: float = 1.0
+
+    name = "identity"
+    is_affine = True
+
+    def to_domain(self, u):
+        return self.offset + self.scale * u
+
+    def to_grid(self, x):
+        return (x - self.offset) / self.scale
+
+
+@dataclasses.dataclass(frozen=True)
+class LogChart:
+    """Logarithmic chart ``x = exp(alpha + beta * u)`` — the §5 geometry."""
+
+    alpha: float
+    beta: float
+
+    name = "log"
+    is_affine = False
+
+    def to_domain(self, u):
+        import jax.numpy as jnp
+
+        return jnp.exp(self.alpha + self.beta * u)
+
+    def to_grid(self, x):
+        import jax.numpy as jnp
+
+        return (jnp.log(x) - self.alpha) / self.beta
+
+    @staticmethod
+    def from_neighbor_distances(n: int, d_min: float, d_max: float, u0: float = 0.0) -> "LogChart":
+        """Chart whose unit-spaced grid of ``n`` points starting at ``u0``
+        has nearest-neighbour *domain* distances sweeping ``d_min → d_max``
+        (paper §5.1: 2%·rho_0 … rho_0 over N ≈ 200 points)."""
+        assert n >= 3 and 0 < d_min < d_max
+        beta = math.log(d_max / d_min) / (n - 2)
+        alpha = math.log(d_min / (math.expm1(beta))) - beta * u0
+        return LogChart(alpha=alpha, beta=beta)
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerChart:
+    """Power-law chart ``x = x0 * (1 + u/u0)^gamma`` (radial stretches)."""
+
+    x0: float
+    u0: float
+    gamma: float
+
+    name = "power"
+    is_affine = False
+
+    def to_domain(self, u):
+        return self.x0 * (1.0 + u / self.u0) ** self.gamma
+
+    def to_grid(self, x):
+        return self.u0 * ((x / self.x0) ** (1.0 / self.gamma) - 1.0)

@@ -1,0 +1,84 @@
+"""Stationary isotropic covariance kernels (paper §3.1, Eq. 14).
+
+Mirror of ``rust/src/kernels``; written against ``jax.numpy`` so the same
+functions serve eager construction, tracing and Pallas reference oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Matern:
+    """Matérn-nu kernel; ``nu32`` is the paper's Eq. 14."""
+
+    nu: float
+    rho: float
+    amplitude: float = 1.0
+
+    @property
+    def name(self) -> str:
+        return {0.5: "matern12", 1.5: "matern32", 2.5: "matern52"}[self.nu]
+
+    def variance(self) -> float:
+        return self.amplitude**2
+
+    def eval(self, d):
+        d = jnp.abs(d)
+        a2 = self.amplitude**2
+        r = d / self.rho
+        if self.nu == 0.5:
+            return a2 * jnp.exp(-r)
+        if self.nu == 1.5:
+            s = math.sqrt(3.0) * r
+            return a2 * (1.0 + s) * jnp.exp(-s)
+        if self.nu == 2.5:
+            s = math.sqrt(5.0) * r
+            return a2 * (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+        raise ValueError(f"unsupported nu = {self.nu}")
+
+
+def matern12(rho: float, amplitude: float = 1.0) -> Matern:
+    return Matern(0.5, rho, amplitude)
+
+
+def matern32(rho: float, amplitude: float = 1.0) -> Matern:
+    """The paper's experiment kernel (Eq. 14)."""
+    return Matern(1.5, rho, amplitude)
+
+
+def matern52(rho: float, amplitude: float = 1.0) -> Matern:
+    return Matern(2.5, rho, amplitude)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rbf:
+    """Squared-exponential kernel."""
+
+    rho: float
+    amplitude: float = 1.0
+
+    name = "rbf"
+
+    def variance(self) -> float:
+        return self.amplitude**2
+
+    def eval(self, d):
+        r = d / self.rho
+        return self.amplitude**2 * jnp.exp(-0.5 * r * r)
+
+
+KERNELS = {
+    "matern12": matern12,
+    "matern32": matern32,
+    "matern52": matern52,
+    "rbf": Rbf,
+}
+
+
+def make_kernel(name: str, rho: float, amplitude: float = 1.0):
+    return KERNELS[name](rho, amplitude)

@@ -1,0 +1,121 @@
+"""Refinement geometry (paper §4.2-§4.4) — mirror of ``rust/src/icr/geometry.rs``.
+
+Each level-`l` window covers ``n_csz`` consecutive coarse pixels and emits
+``n_fsz`` fine pixels at half the coarse spacing, centred on the window;
+windows slide by ``n_fsz/2`` coarse pixels so the union of fine pixels is
+again a regular grid at doubled resolution. ``(3, 2)`` reproduces
+Algorithm 1's ``N_f = 2(N_c - 2)``.
+
+This module is pure Python (no jax) so both the AOT pipeline and the tests
+can use it without tracing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class RefinementParams:
+    """Refinement hyper-parameters (paper §4.4 tunables)."""
+
+    n_csz: int
+    n_fsz: int
+    n_lvl: int
+    n0: int
+
+    def __post_init__(self) -> None:
+        if self.n_csz < 3 or self.n_csz % 2 == 0:
+            raise ValueError(f"n_csz must be odd >= 3, got {self.n_csz}")
+        if self.n_fsz < 2 or self.n_fsz % 2 == 1:
+            raise ValueError(f"n_fsz must be even >= 2, got {self.n_fsz}")
+        if self.n0 < max(self.n_csz, 3):
+            raise ValueError(f"n0 = {self.n0} must be >= max(n_csz, 3)")
+        sizes = self.level_sizes()
+        for l, n in enumerate(sizes[1:], start=1):
+            if n < 1:
+                raise ValueError(f"level {l} collapses to zero pixels")
+        if self.n_lvl > 0 and sizes[self.n_lvl - 1] < self.n_csz:
+            raise ValueError(
+                f"level {self.n_lvl - 1} has {sizes[self.n_lvl - 1]} pixels < n_csz"
+            )
+
+    @property
+    def stride(self) -> int:
+        """Window stride in coarse pixels (= n_fsz / 2: resolution doubles)."""
+        return self.n_fsz // 2
+
+    def n_windows(self, nc: int) -> int:
+        if nc < self.n_csz:
+            return 0
+        return (nc - self.n_csz) // self.stride + 1
+
+    def level_sizes(self) -> List[int]:
+        sizes = [self.n0]
+        n = self.n0
+        for _ in range(self.n_lvl):
+            n = self.n_fsz * self.n_windows(n)
+            sizes.append(n)
+        return sizes
+
+    def final_size(self) -> int:
+        return self.level_sizes()[-1]
+
+    def total_dof(self) -> int:
+        sizes = self.level_sizes()
+        return self.n0 + sum(sizes[1:])
+
+    def excitation_sizes(self) -> List[int]:
+        return self.level_sizes()
+
+    @staticmethod
+    def for_target(n_csz: int, n_fsz: int, n_lvl: int, target: int) -> "RefinementParams":
+        """Smallest base grid whose final size reaches ``target``."""
+        n0 = max(n_csz, 3)
+        while n0 < target * 4 + 64:
+            try:
+                p = RefinementParams(n_csz, n_fsz, n_lvl, n0)
+            except ValueError:
+                n0 += 1
+                continue
+            if p.final_size() >= target:
+                return p
+            n0 += 1
+        raise ValueError(f"cannot reach target {target} with ({n_csz},{n_fsz})x{n_lvl}")
+
+    @staticmethod
+    def paper_candidates(n_lvl: int, target: int) -> List["RefinementParams"]:
+        """The §5.1 candidate set {(3,2),(3,4),(5,2),(5,4),(5,6)}."""
+        out = []
+        for c, f in [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)]:
+            try:
+                out.append(RefinementParams.for_target(c, f, n_lvl, target))
+            except ValueError:
+                pass
+        return out
+
+
+def refine_positions(params: RefinementParams, coarse: List[float]) -> List[float]:
+    """Fine-pixel grid coordinates from one refinement of ``coarse``."""
+    csz, fsz, s = params.n_csz, params.n_fsz, params.stride
+    nw = params.n_windows(len(coarse))
+    fine: List[float] = []
+    for w in range(nw):
+        i0 = w * s
+        first, last = coarse[i0], coarse[i0 + csz - 1]
+        center = 0.5 * (first + last)
+        dc = (last - first) / (csz - 1)
+        df = 0.5 * dc
+        for k in range(fsz):
+            fine.append(center + (k - (fsz - 1) / 2.0) * df)
+    return fine
+
+
+def build_positions(params: RefinementParams) -> List[List[float]]:
+    """Grid coordinates per level; base spacing 2^n_lvl → final ≈ unit."""
+    d0 = float(1 << params.n_lvl)
+    positions = [[i * d0 for i in range(params.n0)]]
+    for _ in range(params.n_lvl):
+        positions.append(refine_positions(params, positions[-1]))
+    return positions

@@ -1,0 +1,85 @@
+"""L2 — the full ICR forward pass: apply ``sqrt(K_ICR)`` (paper Alg. 1).
+
+Chains the L1 Pallas refinement kernels over all levels. The flat
+excitation layout matches the Rust engine (`rust/src/icr/engine.rs`):
+``[xi_base (n0), xi_level1 (n1), ..., xi_level_nlvl (N)]``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .geometry import RefinementParams
+from .kernels import ref as ref_kernels
+from .kernels import refine as pallas_kernels
+from .refinement import IcrModel, split_excitations
+
+
+def apply_sqrt(model: IcrModel, xi_flat, *, use_pallas: bool = True, block_w=None):
+    """Apply ``sqrt(K_ICR)`` to a flat excitation vector → field of shape (N,).
+
+    ``use_pallas=False`` routes through the pure-jnp oracle (``ref.py``) —
+    used by the test suite to pin the Pallas path and by HLO-size ablations.
+    """
+    params: RefinementParams = model.params
+    chunks = split_excitations(params, xi_flat)
+    s = ref_kernels.base_apply_ref(model.base_sqrt, chunks[0])
+    for l, lm in enumerate(model.levels):
+        nw = params.n_windows(s.shape[0])
+        xi_l = chunks[l + 1].reshape(nw, params.n_fsz)
+        if lm.stationary:
+            fn = (
+                pallas_kernels.refine_stationary_pallas
+                if use_pallas
+                else ref_kernels.refine_stationary_ref
+            )
+            kwargs = {"block_w": block_w} if use_pallas else {}
+            s = fn(s, lm.r, lm.sqrt_d, xi_l, params.stride, **kwargs)
+        else:
+            fn = (
+                pallas_kernels.refine_charted_pallas
+                if use_pallas
+                else ref_kernels.refine_charted_ref
+            )
+            kwargs = {"block_w": block_w} if use_pallas else {}
+            s = fn(s, lm.r, lm.sqrt_d, xi_l, params.stride, **kwargs)
+    return s
+
+
+def apply_sqrt_batch(model: IcrModel, xi_batch, *, use_pallas: bool = True):
+    """Vectorized apply over a batch of excitations: (B, dof) → (B, N).
+
+    The coordinator's dynamic batcher coalesces concurrent sampling
+    requests into one executable call of this shape.
+    """
+    import jax
+
+    return jax.vmap(lambda x: apply_sqrt(model, x, use_pallas=use_pallas))(xi_batch)
+
+
+def sqrt_matrix(model: IcrModel, *, use_pallas: bool = False):
+    """Materialize the (N, dof) matrix of sqrt(K_ICR) — evaluation only."""
+    dof = model.params.total_dof()
+    eye = jnp.eye(dof, dtype=jnp.float64)
+    return apply_sqrt_batch(model, eye, use_pallas=use_pallas).T
+
+
+def implicit_covariance(model: IcrModel, *, use_pallas: bool = False):
+    """K_ICR = S @ S.T — the Fig. 3 object."""
+    s = sqrt_matrix(model, use_pallas=use_pallas)
+    k = s @ s.T
+    return 0.5 * (k + k.T)
+
+
+def sample(model: IcrModel, key, *, use_pallas: bool = True, batch: Optional[int] = None):
+    """Draw approximate GP sample(s) with standard-normal excitations."""
+    import jax
+
+    dof = model.params.total_dof()
+    if batch is None:
+        xi = jax.random.normal(key, (dof,), dtype=jnp.float64)
+        return apply_sqrt(model, xi, use_pallas=use_pallas)
+    xi = jax.random.normal(key, (batch, dof), dtype=jnp.float64)
+    return apply_sqrt_batch(model, xi, use_pallas=use_pallas)

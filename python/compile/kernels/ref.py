@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the refinement step — the correctness reference the
+Pallas kernels (``refine.py``) are tested against (pytest + hypothesis).
+
+One refinement level (paper Eqs. 11-12, generalized to (n_csz, n_fsz)):
+
+    s_f[w*fsz + k] = sum_j R[k,j] * s_c[w*stride + j]
+                   + sum_m sqrtD[k,m] * xi[w, m]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def window_indices(nw: int, csz: int, stride: int):
+    """(nw, csz) gather indices of each window into the coarse vector."""
+    return stride * jnp.arange(nw)[:, None] + jnp.arange(csz)[None, :]
+
+
+def refine_stationary_ref(s_c, r, sqrt_d, xi, stride: int):
+    """Stationary refinement: one broadcast ``(R, sqrtD)`` pair.
+
+    s_c: (Nc,); r: (fsz, csz); sqrt_d: (fsz, fsz) lower; xi: (nw, fsz).
+    Returns the fine vector of shape (nw * fsz,).
+    """
+    nw, fsz = xi.shape
+    csz = r.shape[1]
+    windows = s_c[window_indices(nw, csz, stride)]  # (nw, csz)
+    interp = windows @ r.T  # (nw, fsz)
+    corr = xi @ sqrt_d.T  # (nw, fsz)
+    return (interp + corr).reshape(nw * fsz)
+
+
+def refine_charted_ref(s_c, r_all, sqrt_d_all, xi, stride: int):
+    """Charted refinement: per-window matrices.
+
+    r_all: (nw, fsz, csz); sqrt_d_all: (nw, fsz, fsz); xi: (nw, fsz).
+    """
+    nw, fsz = xi.shape
+    csz = r_all.shape[2]
+    windows = s_c[window_indices(nw, csz, stride)]  # (nw, csz)
+    interp = jnp.einsum("wkc,wc->wk", r_all, windows)
+    corr = jnp.einsum("wkm,wm->wk", sqrt_d_all, xi)
+    return (interp + corr).reshape(nw * fsz)
+
+
+def base_apply_ref(base_sqrt, xi0):
+    """Base level: dense lower-triangular apply ``s0 = L0 @ xi0``."""
+    return base_sqrt @ xi0

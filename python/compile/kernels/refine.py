@@ -1,0 +1,244 @@
+"""L1 — Pallas refinement kernels (the paper's compute hot-spot).
+
+The refinement step (paper Eqs. 11-12) is a strided stencil: every window
+of ``n_csz`` coarse pixels produces ``n_fsz`` fine pixels through a small
+interpolation matmul plus a lower-triangular correction matmul. The
+kernels tile the *window* axis: each grid program owns ``block_w`` windows,
+reads the coarse halo it needs, and fuses interpolation + correction in a
+single pass so the memory traffic per level is exactly
+``read s_c + read xi + write s_f``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the window tile is the VMEM
+working set — ``block_w·(n_csz + 2·n_fsz)`` f64 values plus the broadcast
+matrices; the contractions are (n_fsz × n_csz)·(n_csz) — VPU-sized, not
+MXU-sized — so the kernel is deliberately memory-bound and the right
+optimization is the fusion, not MXU tiling.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that both the
+pytest suite and the Rust runtime can run. Correctness vs ``ref.py`` is
+enforced by ``python/tests/test_refine_pallas.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def auto_block_w(nw: int) -> int:
+    """Choose the window-tile size.
+
+    Interpret-mode Pallas materializes the *full* coarse vector once per
+    grid program, so the per-level cost is O(n_blocks * N). A fixed tile
+    (the old default, 8) therefore made the whole apply O(N^2/8) — visible
+    as a log-log slope of ~1.7 in the Fig. 4 PJRT lane. Scaling the tile
+    with the window count caps the number of programs per level at ~16,
+    restoring O(N) (measured slope ~1.0; see EXPERIMENTS.md §Perf).
+    """
+    return max(8, min(1024, -(-nw // 16)))
+
+
+def _pad_windows(arr, nw_pad: int):
+    """Pad the leading window axis up to ``nw_pad``."""
+    pad = nw_pad - arr.shape[0]
+    if pad == 0:
+        return arr
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths)
+
+
+def _stationary_kernel(s_ref, r_ref, d_ref, xi_ref, o_ref, *, stride, csz, block_w, nw):
+    """One grid program: ``block_w`` windows of the stationary refinement."""
+    pid = pl.program_id(0)
+    w0 = pid * block_w
+    s = s_ref[...]  # full coarse vector (small; streamed once per program)
+    r = r_ref[...]  # (fsz, csz)
+    d = d_ref[...]  # (fsz, fsz) lower-triangular
+    xi = xi_ref[...]  # (block_w, fsz) — this program's tile
+    # Gather this tile's windows; clamp tail-padding reads into range.
+    w_idx = w0 + jnp.arange(block_w)
+    base = jnp.minimum(w_idx * stride, nw * stride)  # safe for pad windows
+    idx = base[:, None] + jnp.arange(csz)[None, :]
+    idx = jnp.minimum(idx, s.shape[0] - 1)
+    windows = s[idx]  # (block_w, csz)
+    # Fused interpolation + correction (Eqs. 11 + 12 in one pass).
+    o_ref[...] = windows @ r.T + xi @ d.T
+
+
+def _refine_stationary_pallas_raw(s_c, r, sqrt_d, xi, stride: int, block_w=None):
+    """Stationary refinement via Pallas; mirrors ``ref.refine_stationary_ref``.
+
+    s_c: (Nc,); r: (fsz, csz); sqrt_d: (fsz, fsz); xi: (nw, fsz) →
+    fine vector (nw * fsz,).
+    """
+    nw, fsz = xi.shape
+    csz = r.shape[1]
+    block_w = auto_block_w(nw) if block_w is None else block_w
+    block_w = max(1, min(block_w, nw))
+    n_blocks = -(-nw // block_w)
+    nw_pad = n_blocks * block_w
+    xi_p = _pad_windows(xi, nw_pad)
+
+    kernel = functools.partial(
+        _stationary_kernel, stride=stride, csz=csz, block_w=block_w, nw=nw
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(s_c.shape, lambda i: (0,)),  # full coarse vector
+            pl.BlockSpec(r.shape, lambda i: (0, 0)),
+            pl.BlockSpec(sqrt_d.shape, lambda i: (0, 0)),
+            pl.BlockSpec((block_w, fsz), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_w, fsz), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nw_pad, fsz), s_c.dtype),
+        interpret=True,
+    )(s_c, r, sqrt_d, xi_p)
+    return out[:nw].reshape(nw * fsz)
+
+
+def _charted_kernel(s_ref, r_ref, d_ref, xi_ref, o_ref, *, stride, csz, block_w, nw):
+    """One grid program: ``block_w`` windows with per-window matrices."""
+    pid = pl.program_id(0)
+    w0 = pid * block_w
+    s = s_ref[...]
+    r = r_ref[...]  # (block_w, fsz, csz) — this tile's matrices
+    d = d_ref[...]  # (block_w, fsz, fsz)
+    xi = xi_ref[...]  # (block_w, fsz)
+    w_idx = w0 + jnp.arange(block_w)
+    base = jnp.minimum(w_idx * stride, nw * stride)
+    idx = base[:, None] + jnp.arange(csz)[None, :]
+    idx = jnp.minimum(idx, s.shape[0] - 1)
+    windows = s[idx]  # (block_w, csz)
+    interp = jnp.einsum("wkc,wc->wk", r, windows)
+    corr = jnp.einsum("wkm,wm->wk", d, xi)
+    o_ref[...] = interp + corr
+
+
+def _refine_charted_pallas_raw(s_c, r_all, sqrt_d_all, xi, stride: int, block_w=None):
+    """Charted refinement via Pallas; mirrors ``ref.refine_charted_ref``.
+
+    r_all: (nw, fsz, csz); sqrt_d_all: (nw, fsz, fsz); xi: (nw, fsz).
+    """
+    nw, fsz = xi.shape
+    csz = r_all.shape[2]
+    block_w = auto_block_w(nw) if block_w is None else block_w
+    block_w = max(1, min(block_w, nw))
+    n_blocks = -(-nw // block_w)
+    nw_pad = n_blocks * block_w
+    xi_p = _pad_windows(xi, nw_pad)
+    r_p = _pad_windows(r_all, nw_pad)
+    d_p = _pad_windows(sqrt_d_all, nw_pad)
+
+    kernel = functools.partial(
+        _charted_kernel, stride=stride, csz=csz, block_w=block_w, nw=nw
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(s_c.shape, lambda i: (0,)),
+            pl.BlockSpec((block_w, fsz, csz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_w, fsz, fsz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_w, fsz), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_w, fsz), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nw_pad, fsz), s_c.dtype),
+        interpret=True,
+    )(s_c, r_p, d_p, xi_p)
+    return out[:nw].reshape(nw * fsz)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers.
+#
+# Pallas interpret-mode cannot be traced by jax.grad in this JAX version
+# (`pl.program_id` has no jvp rule outside a grid context). The refinement
+# is *linear* in (s_c, R, sqrtD-cols, xi) given the other inputs, so the
+# exact VJP is cheap to state by hand; the forward pass stays the Pallas
+# kernel, the backward is expressed in jnp (it lowers into the same fused
+# HLO as the ref oracle). This is also the honest TPU story: the backward
+# of a stencil is the transposed stencil.
+# ---------------------------------------------------------------------------
+
+from .ref import window_indices as _window_indices
+
+_STATIONARY_CACHE = {}
+_CHARTED_CACHE = {}
+
+
+def _stationary_vjp(stride: int, block_w: int):
+    key = (stride, block_w)
+    if key in _STATIONARY_CACHE:
+        return _STATIONARY_CACHE[key]
+
+    @jax.custom_vjp
+    def f(s_c, r, d, xi):
+        return _refine_stationary_pallas_raw(s_c, r, d, xi, stride, block_w)
+
+    def fwd(s_c, r, d, xi):
+        return f(s_c, r, d, xi), (s_c, r, d, xi)
+
+    def bwd(res, g):
+        s_c, r, d, xi = res
+        nw, fsz = xi.shape
+        csz = r.shape[1]
+        gw = g.reshape(nw, fsz)
+        idx = _window_indices(nw, csz, stride)
+        windows = s_c[idx]
+        d_sc = jnp.zeros_like(s_c).at[idx].add(gw @ r)
+        d_r = jnp.einsum("wk,wc->kc", gw, windows)
+        d_d = jnp.einsum("wk,wm->km", gw, xi)
+        d_xi = gw @ d
+        return d_sc, d_r, d_d, d_xi
+
+    f.defvjp(fwd, bwd)
+    _STATIONARY_CACHE[key] = f
+    return f
+
+
+def _charted_vjp(stride: int, block_w: int):
+    key = (stride, block_w)
+    if key in _CHARTED_CACHE:
+        return _CHARTED_CACHE[key]
+
+    @jax.custom_vjp
+    def f(s_c, r_all, d_all, xi):
+        return _refine_charted_pallas_raw(s_c, r_all, d_all, xi, stride, block_w)
+
+    def fwd(s_c, r_all, d_all, xi):
+        return f(s_c, r_all, d_all, xi), (s_c, r_all, d_all, xi)
+
+    def bwd(res, g):
+        s_c, r_all, d_all, xi = res
+        nw, fsz = xi.shape
+        csz = r_all.shape[2]
+        gw = g.reshape(nw, fsz)
+        idx = _window_indices(nw, csz, stride)
+        windows = s_c[idx]
+        d_sc = jnp.zeros_like(s_c).at[idx].add(jnp.einsum("wk,wkc->wc", gw, r_all))
+        d_r = jnp.einsum("wk,wc->wkc", gw, windows)
+        d_d = jnp.einsum("wk,wm->wkm", gw, xi)
+        d_xi = jnp.einsum("wk,wkm->wm", gw, d_all)
+        return d_sc, d_r, d_d, d_xi
+
+    f.defvjp(fwd, bwd)
+    _CHARTED_CACHE[key] = f
+    return f
+
+
+def refine_stationary_pallas(s_c, r, sqrt_d, xi, stride: int, block_w=None):
+    """Differentiable stationary Pallas refinement (see module docstring)."""
+    bw = auto_block_w(xi.shape[0]) if block_w is None else block_w
+    return _stationary_vjp(stride, bw)(s_c, r, sqrt_d, xi)
+
+
+def refine_charted_pallas(s_c, r_all, sqrt_d_all, xi, stride: int, block_w=None):
+    """Differentiable charted Pallas refinement (see module docstring)."""
+    bw = auto_block_w(xi.shape[0]) if block_w is None else block_w
+    return _charted_vjp(stride, bw)(s_c, r_all, sqrt_d_all, xi)

@@ -1,0 +1,59 @@
+"""L2 — GP regression through the standardized posterior (paper Eq. 3).
+
+With the generative view, inference needs neither `K⁻¹` nor `log|K|`:
+
+    -log p(y, xi) = 0.5·||(y_obs - A·s(xi)) / sigma_n||²  (Gaussian likelihood)
+                  + 0.5·||xi||²                           (standard prior)
+                  + const,
+
+where ``s(xi) = sqrt(K_ICR)·xi`` and ``A`` restricts to observed indices.
+Evaluating the posterior costs exactly two applications of the square
+root: one forward, one in the backward pass (paper §1) — which is visible
+here as ``jax.value_and_grad`` of a loss that contains a single
+``apply_sqrt`` call.
+
+The AOT pipeline lowers ``loss_and_grad`` so the Rust end-to-end driver
+(`examples/regression_e2e.rs`) can run the whole optimization loop without
+Python.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .icr import apply_sqrt
+from .refinement import IcrModel
+
+
+def make_loss(model: IcrModel, obs_idx: Optional[Sequence[int]] = None, *,
+              use_pallas: bool = True):
+    """Build ``loss(xi, y_obs, sigma_n)`` for a fixed observation pattern.
+
+    ``obs_idx`` (static) selects which modeled points are observed;
+    ``None`` observes every point.
+    """
+    idx = None if obs_idx is None else jnp.asarray(np.asarray(obs_idx, dtype=np.int64))
+
+    def loss(xi, y_obs, sigma_n):
+        s = apply_sqrt(model, xi, use_pallas=use_pallas)
+        pred = s if idx is None else s[idx]
+        resid = (y_obs - pred) / sigma_n
+        return 0.5 * jnp.sum(resid * resid) + 0.5 * jnp.sum(xi * xi)
+
+    return loss
+
+
+def make_loss_and_grad(model: IcrModel, obs_idx: Optional[Sequence[int]] = None, *,
+                       use_pallas: bool = True):
+    """``(xi, y_obs, sigma_n) -> (loss, dloss/dxi)`` — the artifact the Rust
+    optimizer consumes (two sqrt-applies per step, as the paper counts)."""
+    return jax.value_and_grad(make_loss(model, obs_idx, use_pallas=use_pallas))
+
+
+def predict(model: IcrModel, xi, *, use_pallas: bool = True):
+    """Posterior-mean field for optimized excitations (MAP of Eq. 3)."""
+    return apply_sqrt(model, xi, use_pallas=use_pallas)

@@ -1,0 +1,137 @@
+"""Refinement-matrix construction (paper Eqs. 5-9) in JAX.
+
+For each window of ``n_csz`` coarse pixels refined to ``n_fsz`` fine pixels:
+
+    R = K_fc @ inv(K_cc)                    (Eq. 7)
+    D = K_ff - K_fc @ inv(K_cc) @ K_cf      (Eq. 8)
+    s_f = R @ s_c + cholesky(D) @ xi        (Eq. 9)
+
+with all kernel blocks evaluated at the *charted* locations (§4.3).
+Stationary (affine-chart) levels get one broadcast pair; charted levels
+get per-window stacks built with ``vmap``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import RefinementParams, build_positions
+
+
+def _kernel_matrix(kernel, xa, xb):
+    return kernel.eval(jnp.abs(xa[:, None] - xb[None, :]))
+
+
+def window_matrices(kernel, chart, coarse_u, fine_u, jitter: float = 0.0):
+    """``(R, sqrtD)`` for one window from Euclidean grid coordinates.
+
+    ``coarse_u``: (n_csz,) grid coords; ``fine_u``: (n_fsz,) grid coords.
+    Returns ``R`` of shape (n_fsz, n_csz) and lower-triangular ``sqrtD`` of
+    shape (n_fsz, n_fsz).
+    """
+    xc = chart.to_domain(jnp.asarray(coarse_u))
+    xf = chart.to_domain(jnp.asarray(fine_u))
+    kcc = _kernel_matrix(kernel, xc, xc)
+    kfc = _kernel_matrix(kernel, xf, xc)
+    kff = _kernel_matrix(kernel, xf, xf)
+    if jitter:
+        kcc = kcc + jitter * jnp.eye(kcc.shape[0])
+    # R = K_fc K_cc^{-1} via a symmetric solve: R^T = K_cc^{-1} K_cf.
+    r = jax.scipy.linalg.solve(kcc, kfc.T, assume_a="pos").T
+    d = kff - r @ kfc.T
+    d = 0.5 * (d + d.T)
+    d = d + 1e-13 * kernel.variance() * jnp.eye(d.shape[0])
+    sqrt_d = jnp.linalg.cholesky(d)
+    return r, sqrt_d
+
+
+@dataclasses.dataclass
+class LevelMatrices:
+    """Matrices of one refinement level.
+
+    ``r``: (n_fsz, n_csz) if stationary else (n_windows, n_fsz, n_csz);
+    ``sqrt_d`` analogous with trailing (n_fsz, n_fsz).
+    """
+
+    r: jnp.ndarray
+    sqrt_d: jnp.ndarray
+    stationary: bool
+
+
+@dataclasses.dataclass
+class IcrModel:
+    """A fully constructed ICR model: geometry + matrices (L2 state).
+
+    Mirrors ``rust/src/icr/engine.rs::IcrEngine``. The apply itself lives
+    in ``kernels/refine.py`` (Pallas, L1) and ``kernels/ref.py`` (oracle).
+    """
+
+    params: RefinementParams
+    positions: List[np.ndarray]
+    base_sqrt: jnp.ndarray
+    levels: List[LevelMatrices]
+    domain_points: np.ndarray
+    kernel_name: str
+    chart_name: str
+
+
+def build_icr_model(kernel, chart, params: RefinementParams) -> IcrModel:
+    """Construct base Cholesky + per-level refinement matrices (§4.4 cost:
+    O(max(n_csz, n_fsz)^3 · N), amortized once per hyper-parameter set)."""
+    positions = [np.asarray(p, dtype=np.float64) for p in build_positions(params)]
+
+    base_u = jnp.asarray(positions[0])
+    xb = chart.to_domain(base_u)
+    k0 = _kernel_matrix(kernel, xb, xb)
+    k0 = k0 + 1e-13 * kernel.variance() * jnp.eye(k0.shape[0])
+    base_sqrt = jnp.linalg.cholesky(k0)
+
+    stationary = bool(getattr(chart, "is_affine", False))
+    levels: List[LevelMatrices] = []
+    for l in range(params.n_lvl):
+        coarse = positions[l]
+        fine = positions[l + 1]
+        nw = params.n_windows(len(coarse))
+        if stationary:
+            r, sd = window_matrices(kernel, chart, coarse[: params.n_csz], fine[: params.n_fsz])
+            levels.append(LevelMatrices(r=r, sqrt_d=sd, stationary=True))
+        else:
+            s = params.stride
+            cw = np.stack(
+                [coarse[w * s : w * s + params.n_csz] for w in range(nw)]
+            )  # (nw, csz)
+            fw = np.stack(
+                [fine[w * params.n_fsz : (w + 1) * params.n_fsz] for w in range(nw)]
+            )  # (nw, fsz)
+            build = jax.vmap(lambda c, f: window_matrices(kernel, chart, c, f))
+            r, sd = build(jnp.asarray(cw), jnp.asarray(fw))
+            levels.append(LevelMatrices(r=r, sqrt_d=sd, stationary=False))
+
+    domain_points = np.asarray(chart.to_domain(jnp.asarray(positions[-1])))
+    return IcrModel(
+        params=params,
+        positions=positions,
+        base_sqrt=base_sqrt,
+        levels=levels,
+        domain_points=domain_points,
+        kernel_name=getattr(kernel, "name", "unknown"),
+        chart_name=getattr(chart, "name", "unknown"),
+    )
+
+
+def split_excitations(params: RefinementParams, xi_flat) -> Sequence[jnp.ndarray]:
+    """Split a flat excitation vector into per-level chunks
+    ``[(n0,), (n1,), ...]`` matching the Rust engine's flat layout."""
+    sizes = params.excitation_sizes()
+    out = []
+    off = 0
+    for n in sizes:
+        out.append(xi_flat[off : off + n])
+        off += n
+    assert off == params.total_dof()
+    return out

@@ -1,0 +1,5 @@
+"""Shared fixtures: force f64 (the paper benchmarks in double precision)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

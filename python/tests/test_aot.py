@@ -1,0 +1,66 @@
+"""AOT pipeline smoke: quick-mode emission produces loadable HLO text and a
+well-formed manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.emit_all(out, quick=True)
+    return out
+
+
+def test_manifest_well_formed(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as fh:
+        m = json.load(fh)
+    assert m["version"] == 1
+    assert m["dtype"] == "f64"
+    assert len(m["artifacts"]) >= 4
+    names = [a["name"] for a in m["artifacts"]]
+    assert any(n.startswith("icr_apply_c5f4") for n in names)
+    assert any(n.startswith("kissgp_forward") for n in names)
+    assert any(n.startswith("icr_loss_grad") for n in names)
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(quick_artifacts, a["file"])), a["file"]
+        assert a["inputs"] and a["outputs"]
+
+
+def test_hlo_text_is_hlo(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as fh:
+        m = json.load(fh)
+    for a in m["artifacts"]:
+        with open(os.path.join(quick_artifacts, a["file"])) as fh:
+            head = fh.read(4096)
+        assert head.startswith("HloModule"), a["name"]
+        assert "ENTRY" in head or "ENTRY" in open(os.path.join(quick_artifacts, a["file"])).read()
+
+
+def test_validation_vectors_present_and_finite(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as fh:
+        m = json.load(fh)
+    icr = [a for a in m["artifacts"] if a["name"].startswith("icr_apply_c")]
+    assert icr
+    for a in icr:
+        v = a["validation"]
+        assert len(v["out_head"]) == 8
+        assert all(abs(x) < 1e6 for x in v["out_head"])
+        assert v["out_l2"] > 0
+
+
+def test_icr_meta_consistency(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as fh:
+        m = json.load(fh)
+    for a in m["artifacts"]:
+        meta = a["meta"]
+        if meta.get("kind") == "icr":
+            assert sum(meta["excitation_sizes"]) == meta["dof"]
+            assert meta["excitation_sizes"][-1] == meta["n"]
+            if meta["batch"] == 1 and a["name"].startswith("icr_apply"):
+                assert a["inputs"][0]["shape"] == [meta["dof"]]
+                assert a["outputs"][0]["shape"] == [meta["n"]]

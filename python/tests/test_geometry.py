@@ -1,0 +1,83 @@
+"""Geometry tests — must agree with rust/src/icr/geometry.rs bit-for-bit."""
+
+import pytest
+
+from compile.geometry import RefinementParams, build_positions, refine_positions
+
+
+def test_classic_32_growth_matches_paper():
+    # Paper §4.2: N_f = 2 (N_c - 2).
+    p = RefinementParams(3, 2, 5, 10)
+    assert p.level_sizes() == [10, 16, 28, 52, 100, 196]
+
+
+def test_five_four_reaches_exactly_200():
+    p = RefinementParams(5, 4, 5, 13)
+    assert p.final_size() == 200
+    assert p.total_dof() == 425
+
+
+def test_for_target_minimal_base():
+    for c, f in [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)]:
+        p = RefinementParams.for_target(c, f, 5, 200)
+        assert p.final_size() >= 200
+        if p.n0 > max(c, 3):
+            try:
+                smaller = RefinementParams(c, f, 5, p.n0 - 1)
+                assert smaller.final_size() < 200
+            except ValueError:
+                pass
+
+
+def test_paper_candidates_all_exist():
+    cands = RefinementParams.paper_candidates(5, 200)
+    assert len(cands) == 5
+    assert {(p.n_csz, p.n_fsz) for p in cands} == {(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)}
+
+
+@pytest.mark.parametrize(
+    "c,f,lvl,n0",
+    [(2, 2, 1, 8), (3, 3, 1, 8), (5, 2, 1, 4), (3, 2, 10, 3)],
+)
+def test_validation_rejects_bad_params(c, f, lvl, n0):
+    with pytest.raises(ValueError):
+        RefinementParams(c, f, lvl, n0)
+
+
+@pytest.mark.parametrize("c,f", [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)])
+def test_fine_grid_uniform_half_spacing(c, f):
+    p = RefinementParams(c, f, 1, 16)
+    pos = build_positions(p)
+    fine = pos[-1]
+    assert len(fine) == p.final_size()
+    d0 = float(1 << p.n_lvl)
+    for a, b in zip(fine, fine[1:]):
+        assert abs((b - a) - d0 / 2) < 1e-9
+
+
+def test_final_level_unit_spacing():
+    p = RefinementParams(3, 2, 4, 8)
+    fine = build_positions(p)[-1]
+    for a, b in zip(fine, fine[1:]):
+        assert abs(b - a - 1.0) < 1e-9
+
+
+def test_fine_pixels_at_quarter_offsets():
+    # (3,2): fine pixels at coarse-center ± Δc/4 (paper Fig. 1).
+    p = RefinementParams(3, 2, 1, 5)
+    pos = build_positions(p)
+    coarse, fine = pos[0], pos[1]
+    dc = coarse[1] - coarse[0]
+    assert abs(fine[0] - (coarse[1] - dc / 4)) < 1e-12
+    assert abs(fine[1] - (coarse[1] + dc / 4)) < 1e-12
+
+
+def test_refine_positions_nested_in_window():
+    p = RefinementParams(5, 4, 1, 16)
+    coarse = build_positions(p)[0]
+    fine = refine_positions(p, coarse)
+    s = p.stride
+    for w in range(p.n_windows(len(coarse))):
+        lo, hi = coarse[w * s], coarse[w * s + p.n_csz - 1]
+        for k in range(p.n_fsz):
+            assert lo < fine[w * p.n_fsz + k] < hi

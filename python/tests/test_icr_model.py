@@ -1,0 +1,98 @@
+"""L2 integration: full ICR model properties (paper §5.1 claims)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.charts import IdentityChart, LogChart
+from compile.cov import matern32
+from compile.geometry import RefinementParams, build_positions
+from compile.icr import apply_sqrt, apply_sqrt_batch, implicit_covariance
+from compile.refinement import build_icr_model
+
+
+def true_cov(kernel, pts):
+    pts = jnp.asarray(pts)
+    return np.asarray(kernel.eval(jnp.abs(pts[:, None] - pts[None, :])))
+
+
+def test_apply_is_linear():
+    p = RefinementParams(3, 2, 2, 6)
+    model = build_icr_model(matern32(3.0), IdentityChart(), p)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal(p.total_dof())
+    b = rng.standard_normal(p.total_dof())
+    fa = np.asarray(apply_sqrt(model, jnp.asarray(a)))
+    fb = np.asarray(apply_sqrt(model, jnp.asarray(b)))
+    combo = np.asarray(apply_sqrt(model, jnp.asarray(2.0 * a - 0.5 * b)))
+    np.testing.assert_allclose(combo, 2.0 * fa - 0.5 * fb, atol=1e-11)
+
+
+def test_implicit_covariance_tracks_truth_regular_grid():
+    p = RefinementParams(3, 2, 3, 10)
+    kernel = matern32(8.0)
+    model = build_icr_model(kernel, IdentityChart(), p)
+    k_icr = np.asarray(implicit_covariance(model))
+    k_true = true_cov(kernel, model.domain_points)
+    mae = np.abs(k_icr - k_true).mean()
+    assert mae < 0.02, mae
+
+
+def test_implicit_covariance_full_rank():
+    # §5.2: K_ICR = sqrt·sqrtᵀ is PSD and full rank by construction.
+    p = RefinementParams(3, 2, 2, 8)
+    model = build_icr_model(matern32(4.0), IdentityChart(), p)
+    k = np.asarray(implicit_covariance(model))
+    ev = np.linalg.eigvalsh(k)
+    assert ev.min() > 1e-10 * ev.max()
+
+
+def test_log_chart_paper_setting_small():
+    # Miniature §5.1: log-spaced points with nn distances 2%·rho → rho.
+    p = RefinementParams.for_target(5, 4, 3, 48)
+    pos = build_positions(p)
+    chart = LogChart.from_neighbor_distances(len(pos[-1]), 0.02, 1.0, u0=pos[-1][0])
+    kernel = matern32(1.0)
+    model = build_icr_model(kernel, chart, p)
+    # nn-distance sweep spans two orders of magnitude.
+    d = np.diff(model.domain_points)
+    assert d.max() / d.min() > 25.0
+    k_icr = np.asarray(implicit_covariance(model))
+    k_true = true_cov(kernel, model.domain_points)
+    mae = np.abs(k_icr - k_true).mean()
+    assert mae < 0.05, mae
+    ev = np.linalg.eigvalsh(k_icr)
+    assert ev.min() > 0.0
+
+
+def test_batch_apply_matches_loop():
+    p = RefinementParams(3, 2, 2, 8)
+    model = build_icr_model(matern32(4.0), IdentityChart(), p)
+    rng = np.random.default_rng(7)
+    xi = rng.standard_normal((5, p.total_dof()))
+    batched = np.asarray(apply_sqrt_batch(model, jnp.asarray(xi)))
+    for i in range(5):
+        single = np.asarray(apply_sqrt(model, jnp.asarray(xi[i])))
+        np.testing.assert_allclose(batched[i], single, atol=1e-12)
+
+
+def test_pallas_and_ref_paths_agree_end_to_end():
+    p = RefinementParams.for_target(5, 4, 3, 40)
+    pos = build_positions(p)
+    chart = LogChart.from_neighbor_distances(len(pos[-1]), 0.05, 1.0, u0=pos[-1][0])
+    model = build_icr_model(matern32(1.0), chart, p)
+    xi = np.sin(0.37 * np.arange(p.total_dof()))
+    a = np.asarray(apply_sqrt(model, jnp.asarray(xi), use_pallas=True))
+    b = np.asarray(apply_sqrt(model, jnp.asarray(xi), use_pallas=False))
+    np.testing.assert_allclose(a, b, atol=1e-12)
+
+
+def test_sample_moments():
+    p = RefinementParams(3, 2, 2, 8)
+    model = build_icr_model(matern32(4.0), IdentityChart(), p)
+    k = np.asarray(implicit_covariance(model))
+    keys = jax.random.split(jax.random.PRNGKey(0), 1)
+    xi = jax.random.normal(keys[0], (4000, p.total_dof()), dtype=jnp.float64)
+    s = np.asarray(apply_sqrt_batch(model, xi, use_pallas=False))
+    emp = s.T @ s / s.shape[0]
+    assert np.abs(np.diag(emp) - np.diag(k)).max() < 0.1

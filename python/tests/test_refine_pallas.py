@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas refinement kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path — hypothesis
+sweeps window counts, (n_csz, n_fsz) shapes, block sizes and dtypes, and
+asserts allclose against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import refine_charted_ref, refine_stationary_ref
+from compile.kernels.refine import refine_charted_pallas, refine_stationary_pallas
+
+SHAPES = [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)]
+
+
+def _random_case(rng, csz, fsz, nw, dtype):
+    stride = fsz // 2
+    nc = (nw - 1) * stride + csz
+    s_c = rng.standard_normal(nc).astype(dtype)
+    r = rng.standard_normal((fsz, csz)).astype(dtype)
+    d = np.tril(rng.standard_normal((fsz, fsz))).astype(dtype)
+    xi = rng.standard_normal((nw, fsz)).astype(dtype)
+    return s_c, r, d, xi, stride
+
+
+@pytest.mark.parametrize("csz,fsz", SHAPES)
+@pytest.mark.parametrize("nw", [1, 2, 7, 16])
+def test_stationary_matches_ref(csz, fsz, nw):
+    rng = np.random.default_rng(csz * 100 + fsz * 10 + nw)
+    s_c, r, d, xi, stride = _random_case(rng, csz, fsz, nw, np.float64)
+    want = refine_stationary_ref(jnp.asarray(s_c), jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride)
+    got = refine_stationary_pallas(jnp.asarray(s_c), jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("csz,fsz", SHAPES)
+@pytest.mark.parametrize("nw", [1, 3, 8, 13])
+def test_charted_matches_ref(csz, fsz, nw):
+    rng = np.random.default_rng(csz * 1000 + fsz * 100 + nw)
+    stride = fsz // 2
+    nc = (nw - 1) * stride + csz
+    s_c = rng.standard_normal(nc)
+    r_all = rng.standard_normal((nw, fsz, csz))
+    d_all = np.tril(rng.standard_normal((nw, fsz, fsz)))
+    xi = rng.standard_normal((nw, fsz))
+    want = refine_charted_ref(jnp.asarray(s_c), jnp.asarray(r_all), jnp.asarray(d_all), jnp.asarray(xi), stride)
+    got = refine_charted_pallas(jnp.asarray(s_c), jnp.asarray(r_all), jnp.asarray(d_all), jnp.asarray(xi), stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape=st.sampled_from(SHAPES),
+    nw=st.integers(min_value=1, max_value=40),
+    block_w=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stationary_hypothesis_sweep(shape, nw, block_w, seed):
+    csz, fsz = shape
+    rng = np.random.default_rng(seed)
+    s_c, r, d, xi, stride = _random_case(rng, csz, fsz, nw, np.float64)
+    want = refine_stationary_ref(jnp.asarray(s_c), jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride)
+    got = refine_stationary_pallas(
+        jnp.asarray(s_c), jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride, block_w=block_w
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from(SHAPES),
+    nw=st.integers(min_value=1, max_value=24),
+    block_w=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_charted_hypothesis_sweep(shape, nw, block_w, seed):
+    csz, fsz = shape
+    stride = fsz // 2
+    rng = np.random.default_rng(seed)
+    nc = (nw - 1) * stride + csz
+    s_c = rng.standard_normal(nc)
+    r_all = rng.standard_normal((nw, fsz, csz))
+    d_all = np.tril(rng.standard_normal((nw, fsz, fsz)))
+    xi = rng.standard_normal((nw, fsz))
+    want = refine_charted_ref(jnp.asarray(s_c), jnp.asarray(r_all), jnp.asarray(d_all), jnp.asarray(xi), stride)
+    got = refine_charted_pallas(
+        jnp.asarray(s_c), jnp.asarray(r_all), jnp.asarray(d_all), jnp.asarray(xi), stride, block_w=block_w
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 1e-5), (np.float64, 1e-12)])
+def test_dtype_sweep(dtype, tol):
+    rng = np.random.default_rng(5)
+    s_c, r, d, xi, stride = _random_case(rng, 3, 2, 9, dtype)
+    want = refine_stationary_ref(jnp.asarray(s_c), jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride)
+    got = refine_stationary_pallas(jnp.asarray(s_c), jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_pallas_kernel_is_jittable_and_gradable():
+    # The loss_grad artifact differentiates through the Pallas call.
+    rng = np.random.default_rng(11)
+    s_c, r, d, xi, stride = _random_case(rng, 3, 2, 6, np.float64)
+
+    def f(s):
+        out = refine_stationary_pallas(s, jnp.asarray(r), jnp.asarray(d), jnp.asarray(xi), stride)
+        return jnp.sum(out**2)
+
+    g = jax.grad(f)(jnp.asarray(s_c))
+    # Finite-difference check on a few coordinates.
+    eps = 1e-6
+    for i in [0, 3, len(s_c) - 1]:
+        sp = s_c.copy()
+        sp[i] += eps
+        sm = s_c.copy()
+        sm[i] -= eps
+        fd = (f(jnp.asarray(sp)) - f(jnp.asarray(sm))) / (2 * eps)
+        assert abs(float(g[i]) - float(fd)) < 1e-4

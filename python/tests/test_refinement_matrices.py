@@ -1,0 +1,84 @@
+"""Refinement-matrix construction (Eqs. 5-9) vs a numpy dense oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.charts import IdentityChart, LogChart
+from compile.cov import matern12, matern32, matern52
+from compile.geometry import RefinementParams
+from compile.refinement import build_icr_model, split_excitations, window_matrices
+
+
+def dense_rd(kernel, xc, xf):
+    kcc = np.asarray(kernel.eval(jnp.abs(jnp.asarray(xc)[:, None] - jnp.asarray(xc)[None, :])))
+    kfc = np.asarray(kernel.eval(jnp.abs(jnp.asarray(xf)[:, None] - jnp.asarray(xc)[None, :])))
+    kff = np.asarray(kernel.eval(jnp.abs(jnp.asarray(xf)[:, None] - jnp.asarray(xf)[None, :])))
+    r = kfc @ np.linalg.inv(kcc)
+    d = kff - r @ kfc.T
+    return r, d
+
+
+@pytest.mark.parametrize("kernel", [matern12(1.3), matern32(2.0), matern52(0.8)])
+def test_window_matrices_match_dense_identity_chart(kernel):
+    coarse = np.array([0.0, 1.0, 2.0])
+    fine = np.array([0.75, 1.25])
+    r, sd = window_matrices(kernel, IdentityChart(), coarse, fine)
+    r_want, d_want = dense_rd(kernel, coarse, fine)
+    np.testing.assert_allclose(np.asarray(r), r_want, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(sd) @ np.asarray(sd).T, d_want, atol=1e-9)
+
+
+def test_window_matrices_log_chart():
+    kernel = matern32(1.0)
+    chart = LogChart(alpha=-2.0, beta=0.08)
+    coarse = np.array([10.0, 14.0, 18.0, 22.0, 26.0])
+    fine = np.array([16.0, 17.0, 19.0, 20.0])
+    r, sd = window_matrices(kernel, chart, coarse, fine)
+    xc = np.exp(chart.alpha + chart.beta * coarse)
+    xf = np.exp(chart.alpha + chart.beta * fine)
+    r_want, d_want = dense_rd(kernel, xc, xf)
+    np.testing.assert_allclose(np.asarray(r), r_want, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(sd) @ np.asarray(sd).T, d_want, atol=1e-8)
+
+
+def test_sqrt_d_lower_triangular():
+    _, sd = window_matrices(
+        matern32(1.5), IdentityChart(), np.arange(5.0), np.array([1.6, 1.9, 2.1, 2.4])
+    )
+    sd = np.asarray(sd)
+    assert np.allclose(sd, np.tril(sd))
+
+
+def test_base_sqrt_reproduces_base_covariance():
+    p = RefinementParams(3, 2, 2, 8)
+    kernel = matern32(4.0)
+    model = build_icr_model(kernel, IdentityChart(), p)
+    l0 = np.asarray(model.base_sqrt)
+    base_u = model.positions[0]
+    k0 = np.asarray(kernel.eval(jnp.abs(jnp.asarray(base_u)[:, None] - jnp.asarray(base_u)[None, :])))
+    np.testing.assert_allclose(l0 @ l0.T, k0, atol=1e-8)
+
+
+def test_stationary_vs_charted_levels():
+    p = RefinementParams(3, 2, 2, 8)
+    kernel = matern32(4.0)
+    m_affine = build_icr_model(kernel, IdentityChart(), p)
+    assert all(lv.stationary for lv in m_affine.levels)
+    assert m_affine.levels[0].r.ndim == 2
+
+    m_log = build_icr_model(kernel, LogChart(alpha=0.0, beta=0.02), p)
+    assert all(not lv.stationary for lv in m_log.levels)
+    assert m_log.levels[0].r.ndim == 3
+    assert m_log.levels[0].r.shape[0] == p.n_windows(p.n0)
+
+
+def test_split_excitations_layout():
+    p = RefinementParams(3, 2, 3, 10)
+    xi = np.arange(p.total_dof(), dtype=np.float64)
+    chunks = split_excitations(p, jnp.asarray(xi))
+    sizes = p.excitation_sizes()
+    assert [c.shape[0] for c in chunks] == sizes
+    # Flat layout: base first, then levels in order.
+    assert float(chunks[0][0]) == 0.0
+    assert float(chunks[1][0]) == float(sizes[0])

@@ -1,0 +1,93 @@
+//! Coordinator benchmarks: request latency and batching throughput — L3
+//! must not be the bottleneck (the paper's contribution is the engine).
+
+use std::sync::Arc;
+
+use icr::bench::Runner;
+use icr::config::{ModelConfig, ServerConfig};
+use icr::coordinator::{Coordinator, NativeEngine, Request, Response};
+use icr::rng::Rng;
+
+fn main() {
+    let mut runner = Runner::new();
+
+    let model = ModelConfig { target_n: 200, ..ModelConfig::default() };
+    let engine = NativeEngine::from_config(&model).expect("engine");
+    let dof = {
+        use icr::coordinator::FieldEngine;
+        engine.total_dof()
+    };
+
+    runner.header("engine floor (direct calls, no coordinator)");
+    let mut rng = Rng::new(1);
+    let xi = rng.standard_normal_vec(dof);
+    let mut sink = 0.0;
+    {
+        use icr::coordinator::FieldEngine;
+        runner.bench("direct/apply_sqrt/n200", || {
+            sink += engine.apply_sqrt_batch(std::slice::from_ref(&xi)).unwrap()[0][0];
+        });
+    }
+    std::hint::black_box(sink);
+
+    runner.header("coordinator overhead and batching throughput");
+    for &(workers, max_batch) in &[(1usize, 1usize), (2, 8), (4, 32)] {
+        let cfg = ServerConfig {
+            model: model.clone(),
+            workers,
+            max_batch,
+            max_wait_us: 100,
+            ..ServerConfig::default()
+        };
+        let coord = Arc::new(Coordinator::start(cfg).expect("coordinator"));
+
+        // Single blocking request latency.
+        let c2 = coord.clone();
+        let mut seed = 0u64;
+        runner.bench(&format!("coord/w{workers}_b{max_batch}/single_sample"), || {
+            seed += 1;
+            match c2.call(Request::Sample { count: 1, seed }).unwrap() {
+                Response::Samples(s) => std::hint::black_box(s[0][0]),
+                _ => unreachable!(),
+            };
+        });
+
+        // Burst of 32 concurrent single-sample requests (throughput).
+        let c3 = coord.clone();
+        runner.bench(&format!("coord/w{workers}_b{max_batch}/burst32"), || {
+            let pending: Vec<_> = (0..32)
+                .map(|i| {
+                    seed += 1;
+                    c3.submit(Request::Sample { count: 1, seed: seed + i })
+                })
+                .collect();
+            for (_, rx) in pending {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+
+        Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+    }
+
+    runner.header("inference step rate (Adam over loss_grad, native adjoint)");
+    let cfg = ServerConfig { model: model.clone(), workers: 1, ..ServerConfig::default() };
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let n_obs = {
+        use icr::coordinator::FieldEngine;
+        coord.engine().obs_indices().len()
+    };
+    let mut rng = Rng::new(2);
+    let y = rng.standard_normal_vec(n_obs);
+    runner.bench("coord/infer_50steps/n200", || {
+        match coord
+            .call(Request::Infer { y_obs: y.clone(), sigma_n: 0.3, steps: 50, lr: 0.1 })
+            .unwrap()
+        {
+            Response::Inference { trace, .. } => std::hint::black_box(trace.losses[49]),
+            _ => unreachable!(),
+        };
+    });
+    coord.shutdown();
+
+    runner.dump_jsonl("results/bench_coordinator.jsonl").ok();
+}

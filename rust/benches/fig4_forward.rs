@@ -1,0 +1,59 @@
+//! Fig. 4 bench: forward-pass time, ICR vs KISS-GP, across N.
+//!
+//! The paper times one forward pass per method: ICR = one application of
+//! `√K_ICR`; KISS-GP = 40 CG iterations (inverse) + 10×15 stochastic
+//! Lanczos (log-det). Run `cargo bench --bench fig4_forward`; full-size
+//! sweeps (and the PJRT lane) live in `icr experiment fig4`.
+
+use icr::bench::Runner;
+use icr::experiments::{paper, paper_engine};
+use icr::kernels::Matern;
+use icr::kissgp::{KissGp, KissGpConfig};
+use icr::rng::Rng;
+
+fn main() {
+    let mut runner = Runner::new();
+    runner.header("Fig. 4 — forward pass: ICR apply vs KISS-GP CG+Lanczos (native)");
+    let mut rng = Rng::new(77);
+    let kernel = Matern::nu32(paper::RHO, 1.0);
+
+    for &target in &[256usize, 1024, 4096, 16384] {
+        // ICR: the §5.1 optimum (5,4) and the classical (3,2).
+        for &(c, f) in &[(5usize, 4usize), (3, 2)] {
+            let engine = paper_engine(c, f, target).expect("engine");
+            let xi = rng.standard_normal_vec(engine.total_dof());
+            let mut sink = 0.0;
+            runner.bench(&format!("icr_c{c}f{f}/apply_sqrt/n{}", engine.n_points()), || {
+                sink += engine.apply_sqrt(&xi)[0];
+            });
+            std::hint::black_box(sink);
+        }
+        // KISS-GP on the same modeled points.
+        let engine = paper_engine(3, 2, target).expect("engine");
+        let points = engine.domain_points().to_vec();
+        let n = points.len();
+        let kiss = KissGp::build(&kernel, &points, KissGpConfig::paper_speed(n)).expect("kiss");
+        let y = rng.standard_normal_vec(n);
+        let mut probe_rng = Rng::new(5);
+        let mut sink = 0.0;
+        runner.bench(&format!("kissgp/forward_cg40_slq/n{n}"), || {
+            let (x, logdet, _) = kiss.forward(&y, &mut probe_rng);
+            sink += x[0] + logdet;
+        });
+        std::hint::black_box(sink);
+    }
+
+    runner.dump_jsonl("results/bench_fig4.jsonl").ok();
+    // Headline check mirrored from the paper: ICR ≥ several × faster.
+    let icr_med: Vec<f64> = runner
+        .results
+        .iter()
+        .filter(|r| r.name.starts_with("icr_c5f4"))
+        .map(|r| r.median_ns)
+        .collect();
+    let kiss_med: Vec<f64> =
+        runner.results.iter().filter(|r| r.name.starts_with("kissgp")).map(|r| r.median_ns).collect();
+    for (i, (icr_t, kiss_t)) in icr_med.iter().zip(&kiss_med).enumerate() {
+        println!("speedup[{i}] = {:.1}x (KISS / ICR(5,4))", kiss_t / icr_t);
+    }
+}

@@ -1,0 +1,104 @@
+//! Refinement benchmarks: the Eq. 13 O(N) scaling claim and the §4.4
+//! construction-cost claim, plus stationary-vs-charted ablation.
+//!
+//! - `apply/*`: per-point apply cost must stay flat as N doubles (O(N)).
+//! - `construct/*`: refinement-matrix construction is O(N) with a
+//!   constant ∝ max(n_csz, n_fsz)³ (paper §4.4) and is amortized once per
+//!   kernel-hyperparameter update.
+//! - `ablation/*`: the broadcast (stationary) fast path vs per-window
+//!   matrices on the same geometry — the §4.3 symmetry optimization.
+
+use icr::bench::Runner;
+use icr::chart::{Chart, IdentityChart};
+use icr::experiments::paper_engine;
+use icr::icr::{IcrEngine, RefinementParams};
+use icr::kernels::Matern;
+use icr::rng::Rng;
+
+struct OpaqueIdentity;
+impl Chart for OpaqueIdentity {
+    fn to_domain(&self, u: f64) -> f64 {
+        u
+    }
+    fn to_grid(&self, x: f64) -> f64 {
+        x
+    }
+    fn name(&self) -> &'static str {
+        "opaque-identity"
+    }
+}
+
+fn main() {
+    let mut runner = Runner::new();
+    let mut rng = Rng::new(3);
+
+    runner.header("Eq. 13 — O(N) apply scaling (charted log grid, (5,4))");
+    let mut per_point = Vec::new();
+    for &target in &[512usize, 2048, 8192, 32768] {
+        let engine = paper_engine(5, 4, target).expect("engine");
+        let xi = rng.standard_normal_vec(engine.total_dof());
+        let mut sink = 0.0;
+        let r = runner.bench(&format!("apply/charted_c5f4/n{}", engine.n_points()), || {
+            sink += engine.apply_sqrt(&xi)[0];
+        });
+        if let Some(r) = r {
+            per_point.push((engine.n_points(), r.median_ns / engine.n_points() as f64));
+        }
+        std::hint::black_box(sink);
+    }
+    for (n, ns) in &per_point {
+        println!("  per-point cost at N={n}: {ns:.1} ns");
+    }
+
+    runner.header("§4.4 — construction cost (matrices per hyperparameter update)");
+    for &target in &[512usize, 2048, 8192] {
+        let params = RefinementParams::for_target(5, 4, 5, target).expect("params");
+        let chart = icr::experiments::paper_chart(params, 0.02, 1.0);
+        let kernel = Matern::nu32(1.0, 1.0);
+        let mut sink = 0;
+        runner.bench(&format!("construct/charted_c5f4/n{}", params.final_size()), || {
+            let e = IcrEngine::build(&kernel, &chart, params).expect("build");
+            sink += e.n_points();
+        });
+        std::hint::black_box(sink);
+    }
+
+    runner.header("§4.3 ablation — stationary broadcast vs per-window matrices");
+    let params = RefinementParams::for_target(5, 4, 5, 4096).expect("params");
+    let kernel = Matern::nu32(64.0, 1.0);
+    let fast = IcrEngine::build(&kernel, &IdentityChart::unit(), params).expect("fast");
+    let slow = IcrEngine::build(&kernel, &OpaqueIdentity, params).expect("slow");
+    assert!(fast.is_stationary() && !slow.is_stationary());
+    let xi = rng.standard_normal_vec(fast.total_dof());
+    let mut sink = 0.0;
+    runner.bench("ablation/apply_stationary/n4096", || {
+        sink += fast.apply_sqrt(&xi)[0];
+    });
+    runner.bench("ablation/apply_per_window/n4096", || {
+        sink += slow.apply_sqrt(&xi)[0];
+    });
+    std::hint::black_box(sink);
+    let mut sink2 = 0;
+    runner.bench("ablation/construct_stationary/n4096", || {
+        sink2 += IcrEngine::build(&kernel, &IdentityChart::unit(), params).unwrap().n_points();
+    });
+    runner.bench("ablation/construct_per_window/n4096", || {
+        sink2 += IcrEngine::build(&kernel, &OpaqueIdentity, params).unwrap().n_points();
+    });
+    std::hint::black_box(sink2);
+
+    runner.header("adjoint — apply_sqrt vs apply_sqrt_transpose (backprop cost, §1)");
+    let engine = paper_engine(5, 4, 4096).expect("engine");
+    let xi = rng.standard_normal_vec(engine.total_dof());
+    let g = rng.standard_normal_vec(engine.n_points());
+    let mut sink = 0.0;
+    runner.bench("adjoint/forward/n4096", || {
+        sink += engine.apply_sqrt(&xi)[0];
+    });
+    runner.bench("adjoint/transpose/n4096", || {
+        sink += engine.apply_sqrt_transpose(&g)[0];
+    });
+    std::hint::black_box(sink);
+
+    runner.dump_jsonl("results/bench_refinement.jsonl").ok();
+}

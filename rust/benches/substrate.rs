@@ -1,0 +1,78 @@
+//! Substrate micro-benchmarks: FFT, dense linear algebra, Krylov solvers
+//! and the RNG — the building blocks whose costs compose into Fig. 4.
+
+use icr::bench::Runner;
+use icr::fft::{circulant_matvec, fft_in_place, Complex};
+use icr::gp::kernel_matrix;
+use icr::kernels::Matern;
+use icr::kissgp::{conjugate_gradient, lanczos_logdet};
+use icr::linalg::{Cholesky, Matrix};
+use icr::rng::Rng;
+
+fn main() {
+    let mut runner = Runner::new();
+    let mut rng = Rng::new(9);
+
+    runner.header("FFT (KISS-GP's harmonic representation, Eq. 15)");
+    for &n in &[1024usize, 8192, 65536] {
+        let mut buf: Vec<Complex> =
+            (0..n).map(|_| Complex::new(rng.standard_normal(), rng.standard_normal())).collect();
+        runner.bench(&format!("fft/complex/n{n}"), || {
+            fft_in_place(&mut buf, false);
+        });
+        let c = rng.standard_normal_vec(n);
+        let x = rng.standard_normal_vec(n);
+        let mut sink = 0.0;
+        runner.bench(&format!("fft/circulant_matvec/n{n}"), || {
+            sink += circulant_matvec(&c, &x)[0];
+        });
+        std::hint::black_box(sink);
+    }
+
+    runner.header("dense linear algebra (base level + refinement matrices)");
+    for &n in &[5usize, 13, 64, 200] {
+        let kernel = Matern::nu32(1.0, 1.0);
+        let pts: Vec<f64> = (0..n).map(|i| (0.05 * i as f64).exp()).collect();
+        let k = kernel_matrix(&kernel, &pts);
+        let mut sink = 0.0;
+        runner.bench(&format!("linalg/cholesky/n{n}"), || {
+            sink += Cholesky::new(&k).unwrap().logdet();
+        });
+        std::hint::black_box(sink);
+    }
+    let a = Matrix::from_fn(128, 128, |r, c| ((r * 13 + c) as f64 * 0.1).sin());
+    let b = Matrix::from_fn(128, 128, |r, c| ((r + 7 * c) as f64 * 0.1).cos());
+    let mut sink = 0.0;
+    runner.bench("linalg/matmul/n128", || {
+        sink += a.matmul(&b)[(0, 0)];
+    });
+    std::hint::black_box(sink);
+
+    runner.header("Krylov solvers (the paper's KISS-GP budget: CG-40, SLQ 10x15)");
+    let kernel = Matern::nu32(1.0, 1.0);
+    let pts: Vec<f64> = (0..512).map(|i| i as f64 * 0.1).collect();
+    let k = kernel_matrix(&kernel, &pts);
+    let mut kj = k.clone();
+    for i in 0..512 {
+        kj[(i, i)] += 1e-3;
+    }
+    let y = rng.standard_normal_vec(512);
+    let mut sink = 0.0;
+    runner.bench("krylov/cg40_dense_mvm/n512", || {
+        sink += conjugate_gradient(|v| kj.matvec(v), &y, 40, 0.0).0[0];
+    });
+    let mut probe_rng = Rng::new(4);
+    runner.bench("krylov/slq_10x15_dense_mvm/n512", || {
+        sink += lanczos_logdet(|v| kj.matvec(v), 512, 10, 15, &mut probe_rng);
+    });
+    std::hint::black_box(sink);
+
+    runner.header("RNG (excitation generation on the sampling path)");
+    let mut buf = vec![0.0; 4096];
+    runner.bench("rng/standard_normal_4096", || {
+        rng.fill_standard_normal(&mut buf);
+    });
+    std::hint::black_box(buf[0]);
+
+    runner.dump_jsonl("results/bench_substrate.jsonl").ok();
+}

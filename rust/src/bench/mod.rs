@@ -1,0 +1,212 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Auto-calibrating micro/macro benchmark runner used by every
+//! `cargo bench` target: warms up, calibrates the per-sample iteration
+//! count to a target sample time, takes `samples` timed samples and
+//! reports min/median/mean/max — the same quantities Fig. 4 plots
+//! ("markers are placed at the median … minimum and maximum timings are
+//! shown as vertical bars").
+//!
+//! Environment knobs: `ICR_BENCH_TIME_MS` (per-benchmark budget, default
+//! 300), `ICR_BENCH_SAMPLES` (default 15).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.max_ns),
+        )
+    }
+
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::obj(vec![
+            ("name", crate::json::s(&self.name)),
+            ("iters_per_sample", crate::json::num(self.iters_per_sample as f64)),
+            ("samples", crate::json::num(self.samples as f64)),
+            ("min_ns", crate::json::num(self.min_ns)),
+            ("median_ns", crate::json::num(self.median_ns)),
+            ("mean_ns", crate::json::num(self.mean_ns)),
+            ("max_ns", crate::json::num(self.max_ns)),
+        ])
+    }
+}
+
+/// Pretty-print nanoseconds with a unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Benchmark runner collecting results and handling `--filter`/env knobs.
+pub struct Runner {
+    filter: Option<String>,
+    budget: Duration,
+    samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        // `cargo bench -- <filter>` passes the filter as a bare argument.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Runner {
+            filter,
+            budget: Duration::from_millis(env_u64("ICR_BENCH_TIME_MS", 300)),
+            samples: env_u64("ICR_BENCH_SAMPLES", 15) as usize,
+        results: Vec::new(),
+        }
+    }
+
+    pub fn header(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            "benchmark", "min", "median", "mean", "max"
+        );
+    }
+
+    /// Run one benchmark case; `f` is invoked `iters` times per sample.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Option<&BenchResult> {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return None;
+            }
+        }
+        // Warmup + calibration: find iters such that one sample costs
+        // roughly budget/samples.
+        let target = self.budget.as_nanos() as f64 / self.samples as f64;
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let elapsed = t0.elapsed().as_nanos() as f64;
+            if elapsed >= target || iters >= 1 << 30 {
+                // Scale to the target sample duration.
+                if elapsed > 0.0 && elapsed < target {
+                    iters = ((iters as f64) * (target / elapsed)).ceil() as u64;
+                } else if elapsed > 4.0 * target && iters > 1 {
+                    iters = ((iters as f64) * (target / elapsed)).ceil().max(1.0) as u64;
+                }
+                break;
+            }
+            iters *= 2;
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let result = BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples: self.samples,
+            min_ns: per_iter[0],
+            median_ns: per_iter[per_iter.len() / 2],
+            mean_ns: per_iter.iter().sum::<f64>() / per_iter.len() as f64,
+            max_ns: *per_iter.last().unwrap(),
+        };
+        println!("{}", result.row());
+        self.results.push(result);
+        self.results.last()
+    }
+
+    /// Write all results as JSON lines (appended) for later analysis.
+    pub fn dump_jsonl(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        for r in &self.results {
+            writeln!(f, "{}", r.to_json().to_json())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.500ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000s");
+    }
+
+    #[test]
+    fn bench_measures_sleepless_work() {
+        std::env::set_var("ICR_BENCH_TIME_MS", "20");
+        std::env::set_var("ICR_BENCH_SAMPLES", "5");
+        let mut r = Runner::new();
+        let mut acc = 0u64;
+        let res = r
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            })
+            .cloned();
+        let res = res.expect("benchmark filtered out unexpectedly");
+        assert!(res.min_ns <= res.median_ns && res.median_ns <= res.max_ns);
+        assert!(res.median_ns < 1e6, "trivial op should be sub-ms: {}", res.median_ns);
+    }
+
+    #[test]
+    fn result_json_roundtrip() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters_per_sample: 10,
+            samples: 3,
+            min_ns: 1.0,
+            median_ns: 2.0,
+            mean_ns: 2.5,
+            max_ns: 4.0,
+        };
+        let v = crate::json::Value::parse(&r.to_json().to_json()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("median_ns").unwrap().as_f64(), Some(2.0));
+    }
+}

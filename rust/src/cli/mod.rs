@@ -1,0 +1,234 @@
+//! Command-line argument parsing substrate.
+//!
+//! clap is not available offline; this is a small subcommand + flag parser
+//! with generated help, covering what the `icr` binary needs: nested
+//! subcommands, `--key value` / `--key=value` options, boolean switches,
+//! typed accessors with defaults and error messages naming the flag.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative flag spec used for help output and validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed command line: subcommand path, options, switches, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Error with the offending flag name.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw argv (without the program name). Leading bare words become
+    /// the subcommand path until the first `-`-prefixed token; everything
+    /// bare after the first flag is positional.
+    pub fn parse(argv: &[String], known_switches: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut in_command_prefix = true;
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(flag) = tok.strip_prefix("--") {
+                in_command_prefix = false;
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&flag) {
+                    out.switches.push(flag.to_string());
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| CliError(format!("flag --{flag} expects a value")))?;
+                    out.options.insert(flag.to_string(), val.clone());
+                    i += 1;
+                }
+            } else if in_command_prefix {
+                out.command.push(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, dflt: &'a str) -> &'a str {
+        self.get(name).unwrap_or(dflt)
+    }
+
+    pub fn get_usize(&self, name: &str, dflt: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(dflt),
+            Some(v) => v.parse().map_err(|e| CliError(format!("--{name}={v}: {e}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, dflt: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(dflt),
+            Some(v) => v.parse().map_err(|e| CliError(format!("--{name}={v}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, dflt: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(dflt),
+            Some(v) => v.parse().map_err(|e| CliError(format!("--{name}={v}: {e}"))),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 128,256,512`.
+    pub fn get_usize_list(&self, name: &str, dflt: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(dflt.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|e| CliError(format!("--{name}={v}: {e}"))))
+                .collect(),
+        }
+    }
+
+    /// Validate that every provided option is in `specs`.
+    pub fn validate(&self, specs: &[FlagSpec]) -> Result<(), CliError> {
+        for key in self.options.keys() {
+            if !specs.iter().any(|s| s.name == key) {
+                return Err(CliError(format!("unknown flag --{key}")));
+            }
+        }
+        for key in &self.switches {
+            if !specs.iter().any(|s| s.name == key && s.is_switch) {
+                return Err(CliError(format!("unknown switch --{key}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render a help screen for a subcommand.
+pub fn render_help(program: &str, about: &str, subcommands: &[(&str, &str)], flags: &[FlagSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{program} — {about}\n\n"));
+    if !subcommands.is_empty() {
+        out.push_str("SUBCOMMANDS:\n");
+        for (name, help) in subcommands {
+            out.push_str(&format!("  {name:<28} {help}\n"));
+        }
+        out.push('\n');
+    }
+    if !flags.is_empty() {
+        out.push_str("FLAGS:\n");
+        for f in flags {
+            let head = if f.is_switch {
+                format!("--{}", f.name)
+            } else if let Some(d) = f.default {
+                format!("--{} <v={}>", f.name, d)
+            } else {
+                format!("--{} <value>", f.name)
+            };
+            out.push_str(&format!("  {head:<28} {}\n", f.help));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_path_and_flags() {
+        let a = Args::parse(&argv("experiment fig4 --backend native --n 4096 --verbose"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.command, vec!["experiment", "fig4"]);
+        assert_eq!(a.get("backend"), Some("native"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 4096);
+        assert!(a.has_switch("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_positionals() {
+        let a = Args::parse(&argv("sample --seed=7 out.csv"), &[]).unwrap();
+        assert_eq!(a.command, vec!["sample"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let a = Args::parse(&argv("x --n abc"), &[]).unwrap();
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&argv("b --sizes 128,256, 512"), &[]).unwrap();
+        // note: "512" after the space is positional; list parses the value token
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap_err().0.contains("sizes"), true);
+        let b = Args::parse(&argv("b --sizes 128,256,512"), &[]).unwrap();
+        assert_eq!(b.get_usize_list("sizes", &[]).unwrap(), vec![128, 256, 512]);
+        assert_eq!(b.get_usize_list("other", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("cmd --flag"), &[]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown() {
+        let specs = [
+            FlagSpec { name: "n", help: "", default: Some("1"), is_switch: false },
+            FlagSpec { name: "verbose", help: "", default: None, is_switch: true },
+        ];
+        let good = Args::parse(&argv("c --n 3 --verbose"), &["verbose"]).unwrap();
+        assert!(good.validate(&specs).is_ok());
+        let bad = Args::parse(&argv("c --bogus 3"), &[]).unwrap();
+        assert!(bad.validate(&specs).is_err());
+    }
+
+    #[test]
+    fn help_renders_all_entries() {
+        let h = render_help(
+            "icr",
+            "test",
+            &[("sample", "draw a sample")],
+            &[FlagSpec { name: "n", help: "points", default: Some("200"), is_switch: false }],
+        );
+        assert!(h.contains("sample"));
+        assert!(h.contains("--n"));
+        assert!(h.contains("200"));
+    }
+}

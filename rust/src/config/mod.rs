@@ -1,0 +1,320 @@
+//! Typed configuration system.
+//!
+//! Configuration is layered, highest priority last:
+//! 1. built-in defaults,
+//! 2. a JSON config file (`--config path.json`),
+//! 3. CLI flags.
+//!
+//! The same [`ModelConfig`] drives the native engine, the PJRT engine and
+//! the experiment drivers, so a run is fully reproducible from its config
+//! dump (`icr serve --dump-config`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::chart::{parse_chart, Chart};
+use crate::cli::Args;
+use crate::icr::RefinementParams;
+use crate::json::{self, Value};
+use crate::kernels::{parse_kernel, Kernel};
+
+/// Which engine executes `√K_ICR` applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Rust-native engine (no artifacts needed).
+    Native,
+    /// AOT-compiled XLA executables via PJRT.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// The GP model: kernel + chart + refinement geometry.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub kernel_spec: String,
+    pub chart_spec: String,
+    pub n_csz: usize,
+    pub n_fsz: usize,
+    pub n_lvl: usize,
+    /// Target number of modeled points (base grid derived via
+    /// [`RefinementParams::for_target`]).
+    pub target_n: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        // The paper's §5.1 optimum: (5,4), n_lvl = 5, N ≈ 200, Matérn-3/2,
+        // log-spaced points spanning two orders of magnitude in spacing.
+        ModelConfig {
+            kernel_spec: "matern32(rho=1.0, amp=1.0)".into(),
+            chart_spec: "paper_log".into(),
+            n_csz: 5,
+            n_fsz: 4,
+            n_lvl: 5,
+            target_n: 200,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn refinement_params(&self) -> Result<RefinementParams> {
+        RefinementParams::for_target(self.n_csz, self.n_fsz, self.n_lvl, self.target_n)
+    }
+
+    pub fn kernel(&self) -> Result<Box<dyn Kernel>> {
+        parse_kernel(&self.kernel_spec).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Build the chart. `paper_log` is resolved against the final grid of
+    /// this config's geometry (the §5.1 construction: nn distances from
+    /// 2%·ρ to ρ across the modeled points).
+    pub fn chart(&self) -> Result<Box<dyn Chart>> {
+        if self.chart_spec == "paper_log" {
+            let params = self.refinement_params()?;
+            let geo = crate::icr::Geometry::build(params);
+            let fin = geo.final_positions();
+            let n = fin.len();
+            let rho = self.kernel()?.lengthscale();
+            let beta = (1.0_f64 / 0.02).ln() / (n as f64 - 2.0);
+            let alpha = (0.02 * rho / (beta.exp() - 1.0)).ln() - beta * fin[0];
+            return Ok(Box::new(crate::chart::LogChart::new(alpha, beta)));
+        }
+        parse_chart(&self.chart_spec).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn apply_json(&mut self, v: &Value) {
+        if let Some(s) = v.get("kernel").and_then(Value::as_str) {
+            self.kernel_spec = s.to_string();
+        }
+        if let Some(s) = v.get("chart").and_then(Value::as_str) {
+            self.chart_spec = s.to_string();
+        }
+        if let Some(x) = v.get("n_csz").and_then(Value::as_usize) {
+            self.n_csz = x;
+        }
+        if let Some(x) = v.get("n_fsz").and_then(Value::as_usize) {
+            self.n_fsz = x;
+        }
+        if let Some(x) = v.get("n_lvl").and_then(Value::as_usize) {
+            self.n_lvl = x;
+        }
+        if let Some(x) = v.get("target_n").and_then(Value::as_usize) {
+            self.target_n = x;
+        }
+    }
+
+    fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(k) = args.get("kernel") {
+            self.kernel_spec = k.to_string();
+        }
+        if let Some(c) = args.get("chart") {
+            self.chart_spec = c.to_string();
+        }
+        self.n_csz = args.get_usize("csz", self.n_csz)?;
+        self.n_fsz = args.get_usize("fsz", self.n_fsz)?;
+        self.n_lvl = args.get_usize("lvl", self.n_lvl)?;
+        self.target_n = args.get_usize("n", self.target_n)?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kernel", json::s(&self.kernel_spec)),
+            ("chart", json::s(&self.chart_spec)),
+            ("n_csz", json::num(self.n_csz as f64)),
+            ("n_fsz", json::num(self.n_fsz as f64)),
+            ("n_lvl", json::num(self.n_lvl as f64)),
+            ("target_n", json::num(self.target_n as f64)),
+        ])
+    }
+}
+
+/// The coordinator/server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub model: ModelConfig,
+    pub backend: Backend,
+    pub workers: usize,
+    /// Maximum requests coalesced into one batched apply.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub max_wait_us: u64,
+    pub artifact_dir: String,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            model: ModelConfig::default(),
+            backend: Backend::Native,
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 200,
+            artifact_dir: "artifacts".into(),
+            seed: 0xED40FE5,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Defaults ← JSON file (if given) ← CLI flags.
+    pub fn resolve(args: &Args) -> Result<ServerConfig> {
+        let mut cfg = ServerConfig::default();
+        if let Some(path) = args.get("config") {
+            cfg.apply_file(Path::new(path))
+                .with_context(|| format!("loading config file {path}"))?;
+        }
+        cfg.model.apply_args(args)?;
+        if let Some(b) = args.get("backend") {
+            cfg.backend = Backend::parse(b)?;
+        }
+        cfg.workers = args.get_usize("workers", cfg.workers)?.max(1);
+        cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?.max(1);
+        cfg.max_wait_us = args.get_u64("max-wait-us", cfg.max_wait_us)?;
+        if let Some(d) = args.get("artifacts") {
+            cfg.artifact_dir = d.to_string();
+        }
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(m) = v.get("model") {
+            self.model.apply_json(m);
+        }
+        if let Some(b) = v.get("backend").and_then(Value::as_str) {
+            self.backend = Backend::parse(b)?;
+        }
+        if let Some(w) = v.get("workers").and_then(Value::as_usize) {
+            self.workers = w;
+        }
+        if let Some(b) = v.get("max_batch").and_then(Value::as_usize) {
+            self.max_batch = b;
+        }
+        if let Some(w) = v.get("max_wait_us").and_then(Value::as_usize) {
+            self.max_wait_us = w as u64;
+        }
+        if let Some(d) = v.get("artifact_dir").and_then(Value::as_str) {
+            self.artifact_dir = d.to_string();
+        }
+        if let Some(s) = v.get("seed").and_then(Value::as_f64) {
+            self.seed = s as u64;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", self.model.to_json()),
+            ("backend", json::s(self.backend.name())),
+            ("workers", json::num(self.workers as f64)),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("max_wait_us", json::num(self.max_wait_us as f64)),
+            ("artifact_dir", json::s(&self.artifact_dir)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn defaults_are_paper_config() {
+        let cfg = ServerConfig::default();
+        let p = cfg.model.refinement_params().unwrap();
+        assert_eq!((p.n_csz, p.n_fsz, p.n_lvl), (5, 4, 5));
+        assert_eq!(p.final_size(), 200);
+        assert_eq!(cfg.model.kernel().unwrap().name(), "matern32");
+    }
+
+    #[test]
+    fn paper_log_chart_spans_two_orders_of_magnitude() {
+        let cfg = ModelConfig::default();
+        let chart = cfg.chart().unwrap();
+        let params = cfg.refinement_params().unwrap();
+        let geo = crate::icr::Geometry::build(params);
+        let pts: Vec<f64> = geo.final_positions().iter().map(|&u| chart.to_domain(u)).collect();
+        let gaps: Vec<f64> = pts.windows(2).map(|w| w[1] - w[0]).collect();
+        let dmin = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let dmax = gaps.iter().cloned().fold(0.0_f64, f64::max);
+        assert!((dmin - 0.02).abs() < 1e-9, "dmin {dmin}");
+        assert!((dmax - 1.0).abs() < 1e-8, "dmax {dmax}");
+    }
+
+    #[test]
+    fn cli_overrides_defaults() {
+        let args = Args::parse(
+            &argv("serve --backend pjrt --workers 4 --csz 3 --fsz 2 --n 128 --seed 7"),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.backend, Backend::Pjrt);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.model.n_csz, 3);
+        assert_eq!(cfg.model.target_n, 128);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn file_then_cli_layering() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_cfg_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"backend": "pjrt", "workers": 8, "model": {"n_csz": 3, "n_fsz": 2, "target_n": 300}}"#,
+        )
+        .unwrap();
+        let args = Args::parse(
+            &argv(&format!("serve --config {} --workers 2", path.display())),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.backend, Backend::Pjrt); // from file
+        assert_eq!(cfg.workers, 2); // CLI wins
+        assert_eq!(cfg.model.n_csz, 3); // from file
+        assert_eq!(cfg.model.target_n, 300);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn config_roundtrips_through_json() {
+        let cfg = ServerConfig::default();
+        let dumped = cfg.to_json().to_json_pretty();
+        let v = Value::parse(&dumped).unwrap();
+        assert_eq!(v.get_path("model.n_csz").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("backend").unwrap().as_str(), Some("native"));
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        assert!(Backend::parse("tpu-cluster").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: request routing, dynamic batching, worker pool.
+//!
+//! The paper's contribution is the O(N) generative GP algorithm (L1/L2 +
+//! the native engine); L3 wraps it in the serving harness a downstream
+//! user deploys: a [`server::Coordinator`] owning the process topology, a
+//! pluggable [`engine::FieldEngine`] (Rust-native or AOT/PJRT), per-seed
+//! deterministic sampling, bucketed batch routing and metrics.
+
+pub mod engine;
+pub mod request;
+pub mod server;
+
+pub use engine::{default_obs_indices, FieldEngine, NativeEngine, PjrtEngine};
+pub use request::{Envelope, Request, RequestId, Response};
+pub use server::Coordinator;

@@ -1,0 +1,79 @@
+//! Request/response protocol of the coordinator.
+
+use std::sync::mpsc;
+
+use crate::optim::Trace;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// What a client can ask the coordinator to do.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Draw `count` approximate GP samples with a client-provided seed.
+    /// Seeding per request (not per batch) guarantees results do not
+    /// depend on how the dynamic batcher groups concurrent requests.
+    Sample { count: usize, seed: u64 },
+    /// Apply `√K_ICR` to explicit excitations.
+    ApplySqrt { xi: Vec<f64> },
+    /// Posterior (MAP of the standardized objective, paper Eq. 3) for
+    /// observations at the engine's observation pattern.
+    Infer { y_obs: Vec<f64>, sigma_n: f64, steps: usize, lr: f64 },
+    /// Metrics snapshot.
+    Stats,
+}
+
+impl Request {
+    /// Whether this request can be coalesced with others into one batched
+    /// `apply_sqrt` executable call.
+    pub fn batchable(&self) -> bool {
+        matches!(self, Request::Sample { .. } | Request::ApplySqrt { .. })
+    }
+
+    /// Number of √K applies this request contributes to a batch.
+    pub fn apply_count(&self) -> usize {
+        match self {
+            Request::Sample { count, .. } => *count,
+            Request::ApplySqrt { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// Coordinator replies.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Samples(Vec<Vec<f64>>),
+    Field(Vec<f64>),
+    Inference { field: Vec<f64>, trace: Trace },
+    Stats(String),
+}
+
+/// A queued request with its reply channel.
+pub struct Envelope {
+    pub id: RequestId,
+    pub request: Request,
+    pub reply: mpsc::Sender<anyhow::Result<Response>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batchability_classification() {
+        assert!(Request::Sample { count: 3, seed: 1 }.batchable());
+        assert!(Request::ApplySqrt { xi: vec![] }.batchable());
+        assert!(!Request::Stats.batchable());
+        assert!(
+            !Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.batchable()
+        );
+    }
+
+    #[test]
+    fn apply_counts() {
+        assert_eq!(Request::Sample { count: 5, seed: 0 }.apply_count(), 5);
+        assert_eq!(Request::ApplySqrt { xi: vec![1.0] }.apply_count(), 1);
+        assert_eq!(Request::Stats.apply_count(), 0);
+    }
+}

@@ -1,0 +1,461 @@
+//! The coordinator: a thread-based request loop with dynamic batching.
+//!
+//! Clients `submit` requests; worker threads drain the shared queue,
+//! coalescing consecutive batchable requests (samples / explicit applies)
+//! into a single batched `√K_ICR` executable call of at most
+//! `max_batch` applies — the same bucketed-batching pattern a serving
+//! router uses, applied to GP field evaluation. Inference requests run
+//! the Adam loop inline on a worker.
+//!
+//! Determinism: every `Sample` carries its own seed and expands to
+//! excitations *before* batching, so responses are independent of how
+//! requests happen to be grouped. (Tested by the property suite.)
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{Backend, ServerConfig};
+use crate::metrics::Registry;
+use crate::optim::{Adam, Trace};
+use crate::rng::Rng;
+use crate::runtime::PjrtService;
+
+use super::engine::{FieldEngine, NativeEngine, PjrtEngine};
+use super::request::{Envelope, Request, RequestId, Response};
+
+struct Shared {
+    queue: Mutex<VecDeque<Envelope>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    engine: Arc<dyn FieldEngine>,
+    metrics: Registry,
+    cfg: ServerConfig,
+    next_id: AtomicU64,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build the engine dictated by the config and start the worker pool.
+    pub fn start(cfg: ServerConfig) -> Result<Coordinator> {
+        let engine: Arc<dyn FieldEngine> = match cfg.backend {
+            Backend::Native => Arc::new(NativeEngine::from_config(&cfg.model)?),
+            Backend::Pjrt => {
+                let svc = PjrtService::start(std::path::Path::new(&cfg.artifact_dir))?;
+                let e = PjrtEngine::from_config(svc, &cfg.model)?;
+                e.warmup()?;
+                Arc::new(e)
+            }
+        };
+        Self::start_with_engine(cfg, engine)
+    }
+
+    /// Start with an explicit engine (tests inject mocks here).
+    pub fn start_with_engine(cfg: ServerConfig, engine: Arc<dyn FieldEngine>) -> Result<Coordinator> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            engine,
+            metrics: Registry::new(),
+            cfg: cfg.clone(),
+            next_id: AtomicU64::new(1),
+        });
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("icr-worker-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning worker")
+            })
+            .collect();
+        Ok(Coordinator { shared, workers })
+    }
+
+    /// Engine metadata for clients.
+    pub fn engine(&self) -> &Arc<dyn FieldEngine> {
+        &self.shared.engine
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.shared.metrics
+    }
+
+    /// Enqueue a request; returns the reply receiver immediately.
+    pub fn submit(&self, request: Request) -> (RequestId, mpsc::Receiver<Result<Response>>) {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.shared.metrics.counter("requests_submitted").inc();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Envelope { id, request, reply: tx });
+            self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
+        }
+        self.shared.cv.notify_one();
+        (id, rx)
+    }
+
+    /// Submit and block for the reply.
+    pub fn call(&self, request: Request) -> Result<Response> {
+        let (_, rx) = self.submit(request);
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped the reply channel"))?
+    }
+
+    /// Drain the queue and stop all workers.
+    pub fn shutdown(self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Pop a batch: the first envelope plus, within the batching window, more
+/// batchable envelopes until `max_batch` applies are collected. Returns
+/// (envelopes, total applies).
+fn pop_batch(shared: &Shared) -> Option<Vec<Envelope>> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(first) = q.pop_front() {
+            if !first.request.batchable() {
+                shared.metrics.gauge("queue_depth").set(q.len() as f64);
+                return Some(vec![first]);
+            }
+            let mut batch = vec![first];
+            let mut applies: usize = batch[0].request.apply_count();
+            let deadline = Instant::now() + Duration::from_micros(shared.cfg.max_wait_us);
+            loop {
+                // Take whatever is already queued and batchable.
+                while applies < shared.cfg.max_batch {
+                    match q.front() {
+                        Some(e) if e.request.batchable()
+                            && applies + e.request.apply_count() <= shared.cfg.max_batch =>
+                        {
+                            let e = q.pop_front().unwrap();
+                            applies += e.request.apply_count();
+                            batch.push(e);
+                        }
+                        _ => break,
+                    }
+                }
+                if applies >= shared.cfg.max_batch || Instant::now() >= deadline {
+                    break;
+                }
+                // Wait briefly for stragglers to fill the batch.
+                let wait = deadline.saturating_duration_since(Instant::now());
+                let (guard, timeout) = shared.cv.wait_timeout(q, wait).unwrap();
+                q = guard;
+                if timeout.timed_out() && q.front().map(|e| !e.request.batchable()).unwrap_or(true)
+                {
+                    break;
+                }
+            }
+            shared.metrics.gauge("queue_depth").set(q.len() as f64);
+            shared
+                .metrics
+                .gauge("batch_occupancy")
+                .set(applies as f64 / shared.cfg.max_batch as f64);
+            shared.metrics.histogram("batch_applies").observe_ns(applies as u64);
+            return Some(batch);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        q = shared.cv.wait(q).unwrap();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(batch) = pop_batch(shared) {
+        process_batch(shared, batch);
+    }
+}
+
+fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
+    let t0 = Instant::now();
+    // Fast path: a single non-batchable request.
+    if batch.len() == 1 && !batch[0].request.batchable() {
+        let env = batch.into_iter().next().unwrap();
+        let result = serve_single(shared, &env.request);
+        shared.metrics.counter("requests_completed").inc();
+        shared.metrics.histogram("request_latency").observe(t0);
+        let _ = env.reply.send(result);
+        return;
+    }
+
+    // Expand every batchable request into excitation vectors.
+    let dof = shared.engine.total_dof();
+    let mut all_xi: Vec<Vec<f64>> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new(); // per-envelope [start, len)
+    for env in &batch {
+        let start = all_xi.len();
+        match &env.request {
+            Request::Sample { count, seed } => {
+                let mut rng = Rng::new(*seed);
+                for _ in 0..*count {
+                    all_xi.push(rng.standard_normal_vec(dof));
+                }
+            }
+            Request::ApplySqrt { xi } => all_xi.push(xi.clone()),
+            _ => unreachable!("non-batchable request in batch"),
+        }
+        spans.push((start, all_xi.len() - start));
+    }
+
+    let outputs = shared.engine.apply_sqrt_batch(&all_xi);
+    shared.metrics.counter("applies_executed").add(all_xi.len() as u64);
+    shared.metrics.histogram("batch_latency").observe(t0);
+
+    match outputs {
+        Ok(fields) => {
+            for (env, (start, len)) in batch.into_iter().zip(spans) {
+                let slice = fields[start..start + len].to_vec();
+                let resp = match &env.request {
+                    Request::Sample { .. } => Response::Samples(slice),
+                    Request::ApplySqrt { .. } => {
+                        Response::Field(slice.into_iter().next().unwrap())
+                    }
+                    _ => unreachable!(),
+                };
+                shared.metrics.counter("requests_completed").inc();
+                let _ = env.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            shared.metrics.counter("requests_failed").add(batch.len() as u64);
+            for env in batch {
+                let _ = env.reply.send(Err(anyhow::anyhow!("batched apply failed: {msg}")));
+            }
+        }
+    }
+    shared.metrics.histogram("request_latency").observe(t0);
+}
+
+fn serve_single(shared: &Shared, request: &Request) -> Result<Response> {
+    match request {
+        Request::Stats => Ok(Response::Stats(shared.metrics.render())),
+        Request::Infer { y_obs, sigma_n, steps, lr } => {
+            let engine = &shared.engine;
+            let dof = engine.total_dof();
+            let mut xi = vec![0.0; dof];
+            let mut opt = Adam::new(dof, *lr);
+            let mut trace = Trace::default();
+            let t0 = Instant::now();
+            for _ in 0..*steps {
+                let (loss, grad) = engine.loss_grad(&xi, y_obs, *sigma_n)?;
+                trace.losses.push(loss);
+                opt.step(&mut xi, &grad);
+            }
+            trace.wall_s = t0.elapsed().as_secs_f64();
+            shared.metrics.counter("inferences_completed").inc();
+            let field = engine.apply_sqrt_batch(std::slice::from_ref(&xi))?.remove(0);
+            Ok(Response::Inference { field, trace })
+        }
+        _ => unreachable!("batchable request routed to serve_single"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testutil::{prop_check, PropConfig};
+    use std::collections::HashSet;
+
+    fn test_config(workers: usize, max_batch: usize) -> ServerConfig {
+        ServerConfig {
+            model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() },
+            workers,
+            max_batch,
+            max_wait_us: 100,
+            ..ServerConfig::default()
+        }
+    }
+
+    fn start(workers: usize, max_batch: usize) -> Coordinator {
+        Coordinator::start(test_config(workers, max_batch)).unwrap()
+    }
+
+    #[test]
+    fn sample_request_roundtrip() {
+        let c = start(2, 8);
+        match c.call(Request::Sample { count: 3, seed: 42 }).unwrap() {
+            Response::Samples(s) => {
+                assert_eq!(s.len(), 3);
+                assert_eq!(s[0].len(), c.engine().n_points());
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed_regardless_of_batching() {
+        // Same seed through a busy coordinator (heavy batching) and a
+        // quiet one (no batching) must give identical samples.
+        let busy = start(1, 16);
+        let mut pending = Vec::new();
+        for i in 0..24 {
+            pending.push(busy.submit(Request::Sample { count: 1, seed: 1000 + i }));
+        }
+        let busy_results: Vec<Vec<f64>> = pending
+            .into_iter()
+            .map(|(_, rx)| match rx.recv().unwrap().unwrap() {
+                Response::Samples(mut s) => s.remove(0),
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        busy.shutdown();
+
+        let quiet = start(1, 1);
+        for (i, want) in busy_results.iter().enumerate() {
+            match quiet.call(Request::Sample { count: 1, seed: 1000 + i as u64 }).unwrap() {
+                Response::Samples(s) => assert_eq!(&s[0], want, "seed {i} diverged"),
+                other => panic!("{other:?}"),
+            }
+        }
+        quiet.shutdown();
+    }
+
+    #[test]
+    fn apply_sqrt_matches_direct_engine() {
+        let c = start(2, 4);
+        let dof = c.engine().total_dof();
+        let mut rng = Rng::new(9);
+        let xi = rng.standard_normal_vec(dof);
+        let direct = c.engine().apply_sqrt_batch(std::slice::from_ref(&xi)).unwrap().remove(0);
+        match c.call(Request::ApplySqrt { xi }).unwrap() {
+            Response::Field(f) => assert_eq!(f, direct),
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn infer_descends() {
+        let c = start(1, 4);
+        let n_obs = c.engine().obs_indices().len();
+        let mut rng = Rng::new(7);
+        let y = rng.standard_normal_vec(n_obs);
+        match c
+            .call(Request::Infer { y_obs: y, sigma_n: 0.5, steps: 60, lr: 0.1 })
+            .unwrap()
+        {
+            Response::Inference { field, trace } => {
+                assert_eq!(field.len(), c.engine().n_points());
+                assert!(trace.losses.len() == 60);
+                assert!(
+                    trace.losses[59] < 0.8 * trace.losses[0],
+                    "no descent: {} -> {}",
+                    trace.losses[0],
+                    trace.losses[59]
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_render() {
+        let c = start(1, 2);
+        let _ = c.call(Request::Sample { count: 1, seed: 0 }).unwrap();
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(text) => {
+                assert!(text.contains("requests_submitted"), "{text}");
+                assert!(text.contains("applies_executed"), "{text}");
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn prop_every_request_answered_exactly_once() {
+        // Property: under random request mixes, worker counts and batch
+        // limits, every request gets exactly one reply with the right
+        // shape and request ids never collide.
+        prop_check(
+            "coordinator-answers-everything",
+            PropConfig::with_seed(0xC0FFEE).cases(12).max_size(24),
+            |rng, size| {
+                let workers = 1 + rng.uniform_usize(3);
+                let max_batch = 1 + rng.uniform_usize(8);
+                let reqs: Vec<(usize, u64)> = (0..size.max(1))
+                    .map(|_| (1 + rng.uniform_usize(3), rng.next_u64()))
+                    .collect();
+                (workers, max_batch, reqs)
+            },
+            |(workers, max_batch, reqs)| {
+                let c = start(*workers, *max_batch);
+                let mut ids = HashSet::new();
+                let pending: Vec<_> = reqs
+                    .iter()
+                    .map(|(count, seed)| {
+                        let (id, rx) = c.submit(Request::Sample { count: *count, seed: *seed });
+                        if !ids.insert(id) {
+                            return Err(format!("duplicate request id {id}"));
+                        }
+                        Ok((count, rx))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                for (count, rx) in pending {
+                    let resp = rx
+                        .recv_timeout(Duration::from_secs(20))
+                        .map_err(|e| format!("no reply: {e}"))?
+                        .map_err(|e| format!("request failed: {e}"))?;
+                    match resp {
+                        Response::Samples(s) if s.len() == *count => {}
+                        Response::Samples(s) => {
+                            return Err(format!("wrong sample count {} != {count}", s.len()))
+                        }
+                        other => return Err(format!("wrong response {other:?}")),
+                    }
+                }
+                let submitted = c.metrics().counter("requests_submitted").get();
+                let completed = c.metrics().counter("requests_completed").get();
+                c.shutdown();
+                if submitted != completed {
+                    return Err(format!("submitted {submitted} != completed {completed}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_batches_respect_capacity() {
+        // After a run with many single-sample requests, the recorded batch
+        // sizes must never exceed max_batch.
+        let cfg = test_config(2, 5);
+        let c = Coordinator::start(cfg).unwrap();
+        let pending: Vec<_> =
+            (0..40).map(|i| c.submit(Request::Sample { count: 1, seed: i })).collect();
+        for (_, rx) in pending {
+            rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        }
+        // batch_applies histogram "observations" are batch sizes in ns
+        // units; p100 must be ≤ 5 → bucket upper edge ≤ 8.
+        let h = c.metrics().histogram("batch_applies");
+        assert!(h.quantile_ns(1.0) <= 8.0, "a batch exceeded max_batch");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_clean() {
+        let c = start(3, 4);
+        let _ = c.call(Request::Sample { count: 1, seed: 1 }).unwrap();
+        c.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,224 @@
+//! Fig. 4: forward-pass wall time, ICR vs KISS-GP, sweeping N.
+//!
+//! Protocol (paper §5.2): time a single forward pass. For ICR that is one
+//! application of `√K_ICR`; for KISS-GP it is applying the inverse with 40
+//! CG iterations plus a stochastic log-determinant with 10 probes × 15
+//! Lanczos iterations, all in double precision. ICR is shown for every
+//! §5.1 parametrization (different line styles in the figure).
+//!
+//! Lanes (substitution documented in DESIGN.md §3): the paper's CPU/GPU
+//! panels become our `native` (Rust engine) and `pjrt` (AOT-compiled XLA
+//! executable) backends — same algorithms, same backend per comparison.
+
+use anyhow::{Context, Result};
+
+use crate::kernels::Matern;
+use crate::kissgp::{KissGp, KissGpConfig};
+use crate::rng::Rng;
+use crate::runtime::PjrtRuntime;
+
+use super::{loglog_slope, paper, paper_engine, time_median_s, write_csv};
+
+/// One measurement row.
+#[derive(Debug, Clone)]
+pub struct TimingRow {
+    pub method: String,
+    pub n: usize,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl TimingRow {
+    fn csv(&self) -> String {
+        format!("{},{},{},{},{}", self.method, self.n, self.median_s, self.min_s, self.max_s)
+    }
+}
+
+/// Native lane: Rust engine vs Rust KISS-GP across sizes.
+pub fn run_native(sizes: &[usize], samples: usize) -> Result<Vec<TimingRow>> {
+    let kernel = Matern::nu32(paper::RHO, 1.0);
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(4242);
+
+    for &target in sizes {
+        // ICR, all five parametrizations.
+        for &(c, f) in &paper::CANDIDATES {
+            let engine = paper_engine(c, f, target)
+                .with_context(|| format!("ICR ({c},{f}) at N≈{target}"))?;
+            let xi = rng.standard_normal_vec(engine.total_dof());
+            let mut sink = 0.0;
+            let (med, min, max) = time_median_s(samples, || {
+                let out = engine.apply_sqrt(&xi);
+                sink += out[0];
+            });
+            std::hint::black_box(sink);
+            rows.push(TimingRow {
+                method: format!("icr_c{c}f{f}"),
+                n: engine.n_points(),
+                median_s: med,
+                min_s: min,
+                max_s: max,
+            });
+        }
+        // KISS-GP on the same modeled points as the (3,2) engine.
+        let engine = paper_engine(3, 2, target)?;
+        let points = engine.domain_points().to_vec();
+        let n = points.len();
+        let kiss = KissGp::build(&kernel, &points, KissGpConfig::paper_speed(n))?;
+        let y = rng.standard_normal_vec(n);
+        let mut probe_rng = Rng::new(99);
+        let mut sink = 0.0;
+        let (med, min, max) = time_median_s(samples, || {
+            let (x, logdet, _) = kiss.forward(&y, &mut probe_rng);
+            sink += x[0] + logdet;
+        });
+        std::hint::black_box(sink);
+        rows.push(TimingRow { method: "kissgp".into(), n, median_s: med, min_s: min, max_s: max });
+    }
+    Ok(rows)
+}
+
+/// PJRT lane: AOT-compiled executables for the sizes present in the
+/// artifact manifest.
+pub fn run_pjrt(artifact_dir: &std::path::Path, samples: usize) -> Result<Vec<TimingRow>> {
+    let rt = PjrtRuntime::new(artifact_dir)?;
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(4242);
+
+    // ICR applies (fig4-tagged artifacts).
+    let mut icr_specs: Vec<(String, usize, usize)> = rt
+        .manifest()
+        .by_kind("icr")
+        .into_iter()
+        .filter(|a| a.name.starts_with("icr_apply_fig4"))
+        .map(|a| (a.name.clone(), a.meta_usize("n").unwrap_or(0), a.meta_usize("dof").unwrap_or(0)))
+        .collect();
+    icr_specs.sort_by_key(|(_, n, _)| *n);
+    for (name, n, dof) in icr_specs {
+        let exe = rt.load(&name)?;
+        exe.self_check().with_context(|| format!("self-check {name}"))?;
+        let xi = rng.standard_normal_vec(dof);
+        let mut sink = 0.0;
+        let (med, min, max) = time_median_s(samples, || {
+            let out = exe.run_f64(&[&xi]).expect("icr apply");
+            sink += out[0][0];
+        });
+        std::hint::black_box(sink);
+        rows.push(TimingRow { method: "icr_pjrt".into(), n, median_s: med, min_s: min, max_s: max });
+    }
+
+    // KISS-GP forwards.
+    let mut kiss_specs: Vec<(String, usize)> = rt
+        .manifest()
+        .by_kind("kissgp")
+        .into_iter()
+        .map(|a| (a.name.clone(), a.meta_usize("n").unwrap_or(0)))
+        .collect();
+    kiss_specs.sort_by_key(|(_, n)| *n);
+    for (name, n) in kiss_specs {
+        let exe = rt.load(&name)?;
+        let y = rng.standard_normal_vec(n);
+        let probes: Vec<f64> = {
+            let mut p = Rng::new(99);
+            (0..rt.manifest().lanczos_probes * n)
+                .map(|_| if p.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+                .collect()
+        };
+        let mut sink = 0.0;
+        let (med, min, max) = time_median_s(samples, || {
+            let out = exe.run_f64(&[&y, &probes]).expect("kiss forward");
+            sink += out[1][0];
+        });
+        std::hint::black_box(sink);
+        rows.push(TimingRow { method: "kissgp_pjrt".into(), n, median_s: med, min_s: min, max_s: max });
+    }
+    Ok(rows)
+}
+
+/// Print the rows + paper-shape diagnostics, write the CSV.
+pub fn report(lane: &str, rows: &[TimingRow]) -> Result<()> {
+    println!("\nFig. 4 forward-pass timing — {lane} lane (median [min, max])");
+    println!("{:<14} {:>8} {:>14} {:>14} {:>14}", "method", "N", "median", "min", "max");
+    for r in rows {
+        println!(
+            "{:<14} {:>8} {:>12.3}µs {:>12.3}µs {:>12.3}µs",
+            r.method,
+            r.n,
+            r.median_s * 1e6,
+            r.min_s * 1e6,
+            r.max_s * 1e6
+        );
+    }
+
+    // Speedup at each N where both methods were measured.
+    let kiss_name = if lane == "pjrt" { "kissgp_pjrt" } else { "kissgp" };
+    let icr_pref = if lane == "pjrt" { "icr_pjrt" } else { "icr_" };
+    let kiss: Vec<&TimingRow> = rows.iter().filter(|r| r.method == kiss_name).collect();
+    println!("\nspeedup (KISS-GP median / fastest-ICR median) — paper claims ≈ one order of magnitude:");
+    let mut icr_ns = Vec::new();
+    let mut icr_ts = Vec::new();
+    for k in &kiss {
+        let best_icr = rows
+            .iter()
+            .filter(|r| r.method.starts_with(icr_pref) && close(r.n, k.n))
+            .map(|r| r.median_s)
+            .fold(f64::INFINITY, f64::min);
+        if best_icr.is_finite() {
+            println!("  N≈{:>7}: {:>8.1}×", k.n, k.median_s / best_icr);
+        }
+    }
+    for r in rows.iter().filter(|r| r.method.starts_with(icr_pref)) {
+        icr_ns.push(r.n as f64);
+        icr_ts.push(r.median_s);
+    }
+    if icr_ns.len() >= 3 {
+        println!(
+            "ICR log-log slope (Eq. 13 predicts ≈ 1.0): {:.3}",
+            loglog_slope(&icr_ns, &icr_ts)
+        );
+    }
+    let kiss_ns: Vec<f64> = kiss.iter().map(|r| r.n as f64).collect();
+    let kiss_ts: Vec<f64> = kiss.iter().map(|r| r.median_s).collect();
+    if kiss_ns.len() >= 3 {
+        println!("KISS-GP log-log slope (O(N log N) ⇒ slightly > 1): {:.3}", loglog_slope(&kiss_ns, &kiss_ts));
+    }
+
+    let csv: Vec<String> = rows.iter().map(TimingRow::csv).collect();
+    let path = write_csv(&format!("fig4_{lane}.csv"), "method,n,median_s,min_s,max_s", &csv)?;
+    println!("→ {}", path.display());
+    Ok(())
+}
+
+/// Two sizes "match" if within 10 % (candidate growth rules differ slightly).
+fn close(a: usize, b: usize) -> bool {
+    let (a, b) = (a as f64, b as f64);
+    (a - b).abs() <= 0.1 * a.max(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_lane_produces_rows_and_icr_wins() {
+        let rows = run_native(&[128], 3).unwrap();
+        // 5 ICR parametrizations + 1 KISS row.
+        assert_eq!(rows.len(), 6);
+        let kiss = rows.iter().find(|r| r.method == "kissgp").unwrap();
+        let best_icr = rows
+            .iter()
+            .filter(|r| r.method.starts_with("icr_"))
+            .map(|r| r.median_s)
+            .fold(f64::INFINITY, f64::min);
+        // The paper's headline: ICR forward ≫ faster than KISS forward.
+        assert!(
+            kiss.median_s > 3.0 * best_icr,
+            "expected ≥3× at N=128, got {}×",
+            kiss.median_s / best_icr
+        );
+        for r in &rows {
+            assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+        }
+    }
+}

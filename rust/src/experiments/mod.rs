@@ -1,0 +1,147 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation.
+//!
+//! | driver                 | paper artifact                                  |
+//! |------------------------|-------------------------------------------------|
+//! | [`kl_table`]           | §5.1 refinement-parameter selection (KL table)  |
+//! | [`fig3`]               | Fig. 3 covariance accuracy + §5.2 rank probe    |
+//! | [`fig4`]               | Fig. 4 forward-pass timing, ICR vs KISS-GP      |
+//!
+//! Each driver prints the rows the paper reports and writes CSV series to
+//! `results/` so the figures can be replotted.
+
+pub mod fig3;
+pub mod fig4;
+pub mod kl_table;
+
+use anyhow::Result;
+
+use crate::chart::LogChart;
+use crate::icr::{Geometry, IcrEngine, RefinementParams};
+use crate::kernels::Matern;
+
+/// The paper's §5 experimental constants.
+pub mod paper {
+    /// Matérn-3/2 length scale ρ₀ (Eq. 14); everything is in units of it.
+    pub const RHO: f64 = 1.0;
+    /// Nearest-neighbour spacing sweep: 2 %·ρ₀ … ρ₀ (§5.1).
+    pub const D_MIN: f64 = 0.02;
+    pub const D_MAX: f64 = 1.0;
+    /// Number of refinement levels (§5.1).
+    pub const N_LVL: usize = 5;
+    /// Target number of modeled points (§5.1).
+    pub const TARGET_N: usize = 200;
+    /// The §5.1 candidate parametrizations.
+    pub const CANDIDATES: [(usize, usize); 5] = [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)];
+}
+
+/// Build the §5 log chart for a given refinement geometry: unit-spaced
+/// final grid → nearest-neighbour domain distances from `d_min` to `d_max`.
+pub fn paper_chart(params: RefinementParams, d_min: f64, d_max: f64) -> LogChart {
+    let geo = Geometry::build(params);
+    let fin = geo.final_positions();
+    let n = fin.len();
+    let beta = (d_max / d_min).ln() / (n as f64 - 2.0);
+    let alpha = (d_min / (beta.exp() - 1.0)).ln() - beta * fin[0];
+    LogChart::new(alpha, beta)
+}
+
+/// Build the paper's ICR engine for one parametrization at a target size.
+pub fn paper_engine(n_csz: usize, n_fsz: usize, target_n: usize) -> Result<IcrEngine> {
+    let params = RefinementParams::for_target(n_csz, n_fsz, paper::N_LVL, target_n)?;
+    let chart = paper_chart(params, paper::D_MIN * paper::RHO, paper::D_MAX * paper::RHO);
+    let kernel = Matern::nu32(paper::RHO, 1.0);
+    IcrEngine::build(&kernel, &chart, params)
+}
+
+/// Write a CSV file under `results/`, creating the directory.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut body = String::with_capacity(rows.len() * 32 + header.len() + 1);
+    body.push_str(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(r);
+        body.push('\n');
+    }
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
+/// Median / min / max of repeated timings of `f` (seconds). Mirrors the
+/// paper's Fig. 4 protocol: "markers are placed at the median … minimum
+/// and maximum timings are shown as vertical bars".
+pub fn time_median_s(samples: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    // One untimed warmup.
+    f();
+    let mut times: Vec<f64> = (0..samples.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], times[0], *times.last().unwrap())
+}
+
+/// Least-squares slope of log(y) vs log(x) — the Eq. 13 scaling check
+/// (ICR must be ≈ 1.0 on a log-log plot of time vs N).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 = lx.iter().zip(&ly).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let var: f64 = lx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    cov / var
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_chart_hits_spacing_targets() {
+        let params = RefinementParams::for_target(5, 4, paper::N_LVL, paper::TARGET_N).unwrap();
+        let chart = paper_chart(params, 0.02, 1.0);
+        let geo = Geometry::build(params);
+        let pts: Vec<f64> = geo
+            .final_positions()
+            .iter()
+            .map(|&u| crate::chart::Chart::to_domain(&chart, u))
+            .collect();
+        let gaps: Vec<f64> = pts.windows(2).map(|w| w[1] - w[0]).collect();
+        let dmin = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let dmax = gaps.iter().cloned().fold(0.0_f64, f64::max);
+        assert!((dmin - 0.02).abs() < 1e-9);
+        assert!((dmax - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn paper_engine_builds_all_candidates() {
+        for &(c, f) in &paper::CANDIDATES {
+            let e = paper_engine(c, f, 64).unwrap();
+            assert!(e.n_points() >= 64, "({c},{f})");
+            assert!(!e.is_stationary(), "log chart must use per-window matrices");
+        }
+    }
+
+    #[test]
+    fn loglog_slope_of_power_law() {
+        let xs: Vec<f64> = (1..8).map(|i| (i as f64) * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(1.7)).collect();
+        assert!((loglog_slope(&xs, &ys) - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_median_ordering() {
+        let (med, min, max) = time_median_s(5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= med && med <= max);
+    }
+}

@@ -1,0 +1,251 @@
+//! Complex FFT substrate.
+//!
+//! The KISS-GP baseline (paper Eq. 15) represents the inducing-point kernel
+//! in the harmonic domain: `K ≈ W·F·P·Fᵀ·Wᵀ`. Applying it needs an FFT; so
+//! does the O(M log M) Toeplitz matrix-vector product via circulant
+//! embedding. No FFT crate is available offline, so this is a from-scratch
+//! iterative radix-2 Cooley–Tukey implementation with a real-convolution
+//! helper. Sizes are padded to powers of two by the callers.
+
+/// Minimal complex number (we only need arithmetic + conjugation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Complex) -> Self {
+        Complex { re: self.re * o.re - self.im * o.im, im: self.re * o.im + self.im * o.re }
+    }
+
+    #[inline]
+    pub fn add(self, o: Complex) -> Self {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Complex) -> Self {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+
+    #[inline]
+    pub fn scale(self, a: f64) -> Self {
+        Complex { re: self.re * a, im: self.im * a }
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// In-place radix-2 decimation-in-time FFT. `data.len()` must be a power
+/// of two. `inverse` applies the conjugate transform *and* the 1/n factor,
+/// so `ifft(fft(x)) = x`.
+pub fn fft_in_place(data: &mut [Complex], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Complex::new(ang.cos(), ang.sin());
+        let half = len / 2;
+        let mut i = 0;
+        while i < n {
+            let mut w = Complex::new(1.0, 0.0);
+            for k in 0..half {
+                let u = data[i + k];
+                let v = data[i + k + half].mul(w);
+                data[i + k] = u.add(v);
+                data[i + k + half] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv_n = 1.0 / n as f64;
+        for v in data.iter_mut() {
+            *v = v.scale(inv_n);
+        }
+    }
+}
+
+/// Forward FFT of a real signal (zero-padded to a power of two by caller).
+pub fn fft_real(x: &[f64]) -> Vec<Complex> {
+    let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+    fft_in_place(&mut buf, false);
+    buf
+}
+
+/// Inverse FFT returning only real parts (caller guarantees the spectrum is
+/// conjugate-symmetric up to round-off).
+pub fn ifft_real(spec: &[Complex]) -> Vec<f64> {
+    let mut buf = spec.to_vec();
+    fft_in_place(&mut buf, true);
+    buf.into_iter().map(|c| c.re).collect()
+}
+
+/// Circular convolution of two real signals of equal power-of-two length.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let fa = fft_real(a);
+    let fb = fft_real(b);
+    let prod: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    ifft_real(&prod)
+}
+
+/// Multiply by a circulant matrix whose first column is `c`: `y = C·x`,
+/// all length-n (power of two). This is the core of the O(M log M)
+/// Toeplitz MVM used by the KISS-GP baseline.
+pub fn circulant_matvec(c: &[f64], x: &[f64]) -> Vec<f64> {
+    circular_convolve(c, x)
+}
+
+/// Naive O(n²) DFT — test oracle only.
+#[cfg(test)]
+pub fn dft_naive(x: &[Complex], inverse: bool) -> Vec<Complex> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut out = vec![Complex::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex::ZERO;
+        for (t, &v) in x.iter().enumerate() {
+            let ang = sign * 2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+            acc = acc.add(v.mul(Complex::new(ang.cos(), ang.sin())));
+        }
+        *o = if inverse { acc.scale(1.0 / n as f64) } else { acc };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(101);
+        for &n in &[1usize, 2, 4, 8, 32, 128] {
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.standard_normal(), rng.standard_normal())).collect();
+            let want = dft_naive(&x, false);
+            let mut got = x.clone();
+            fft_in_place(&mut got, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.re - w.re).abs() < 1e-9 && (g.im - w.im).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(7);
+        let x: Vec<Complex> =
+            (0..256).map(|_| Complex::new(rng.standard_normal(), rng.standard_normal())).collect();
+        let mut buf = x.clone();
+        fft_in_place(&mut buf, false);
+        fft_in_place(&mut buf, true);
+        for (b, o) in buf.iter().zip(&x) {
+            assert!((b.re - o.re).abs() < 1e-12 && (b.im - o.im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = rng.standard_normal_vec(64);
+        let spec = fft_real(&x);
+        let e_time: f64 = x.iter().map(|v| v * v).sum();
+        let e_freq: f64 = spec.iter().map(|c| c.abs().powi(2)).sum::<f64>() / 64.0;
+        assert!((e_time - e_freq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn circular_convolution_matches_naive() {
+        let mut rng = Rng::new(3);
+        let n = 32;
+        let a = rng.standard_normal_vec(n);
+        let b = rng.standard_normal_vec(n);
+        let fast = circular_convolve(&a, &b);
+        for k in 0..n {
+            let mut want = 0.0;
+            for j in 0..n {
+                want += a[j] * b[(n + k - j) % n];
+            }
+            assert!((fast[k] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn circulant_matvec_matches_dense() {
+        let mut rng = Rng::new(9);
+        let n = 16;
+        let c = rng.standard_normal_vec(n);
+        let x = rng.standard_normal_vec(n);
+        let y = circulant_matvec(&c, &x);
+        for i in 0..n {
+            let mut want = 0.0;
+            for j in 0..n {
+                want += c[(n + i - j) % n] * x[j];
+            }
+            assert!((y[i] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn delta_impulse_spectrum_is_flat() {
+        let mut x = vec![0.0; 16];
+        x[0] = 1.0;
+        let spec = fft_real(&x);
+        for c in &spec {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_rejected() {
+        let mut buf = vec![Complex::ZERO; 12];
+        fft_in_place(&mut buf, false);
+    }
+}

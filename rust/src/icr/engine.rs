@@ -1,0 +1,577 @@
+//! The ICR engine: O(N) application of `√K_ICR` (paper Alg. 1 + §4.3).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::chart::Chart;
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+use super::geometry::{Geometry, RefinementParams};
+use super::matrices::{base_matrices, window_matrices, LevelMatrices, PackedWindows};
+
+/// A fully constructed ICR model for one kernel + chart + geometry.
+///
+/// Construction costs `O(max{n_csz, n_fsz}³·N)` (paper §4.4) and must be
+/// repeated when kernel hyper-parameters change; the *apply* is `O(N)` and
+/// is the operation Fig. 4 times.
+pub struct IcrEngine {
+    geometry: Geometry,
+    /// Lower-triangular Cholesky factor of the base-level covariance.
+    base_sqrt: Matrix,
+    /// Refinement matrices per level (broadcast or per-window).
+    levels: Vec<LevelMatrices>,
+    /// Chart image of the final-level grid: the modeled points in 𝒟.
+    domain_points: Vec<f64>,
+    /// Whether all levels use the stationary broadcast fast path.
+    stationary: bool,
+}
+
+impl std::fmt::Debug for IcrEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let p = self.geometry.params;
+        write!(
+            f,
+            "IcrEngine(({},{})x{} n0={} N={} dof={} stationary={})",
+            p.n_csz,
+            p.n_fsz,
+            p.n_lvl,
+            p.n0,
+            self.n_points(),
+            self.total_dof(),
+            self.stationary
+        )
+    }
+}
+
+impl IcrEngine {
+    /// Build refinement matrices for every level.
+    ///
+    /// With an affine chart and (necessarily stationary) isotropic kernel,
+    /// one `(R, √D)` pair per level is computed and broadcast — the §4.3
+    /// translation-invariance optimization. Otherwise every window gets
+    /// its own pair from its charted coordinates.
+    pub fn build(kernel: &dyn Kernel, chart: &dyn Chart, params: RefinementParams) -> Result<Self> {
+        params.validate()?;
+        let geometry = Geometry::build(params);
+        let base_sqrt = base_matrices(kernel, chart, &geometry.positions[0])
+            .context("building base level")?;
+
+        let stationary = chart.is_affine();
+        let mut levels = Vec::with_capacity(params.n_lvl);
+        for l in 0..params.n_lvl {
+            let coarse = &geometry.positions[l];
+            let fine = &geometry.positions[l + 1];
+            let nw = params.n_windows(coarse.len());
+            ensure!(nw > 0, "level {l} has no refinement windows");
+            let lm = if stationary {
+                // One window is representative of all of them.
+                let wm = window_matrices(
+                    kernel,
+                    chart,
+                    &coarse[0..params.n_csz],
+                    &fine[0..params.n_fsz],
+                )
+                .with_context(|| format!("level {l} stationary matrices"))?;
+                LevelMatrices::Stationary(wm)
+            } else {
+                let mut ms = Vec::with_capacity(nw);
+                for w in 0..nw {
+                    let i0 = w * params.stride();
+                    let wm = window_matrices(
+                        kernel,
+                        chart,
+                        &coarse[i0..i0 + params.n_csz],
+                        &fine[w * params.n_fsz..(w + 1) * params.n_fsz],
+                    )
+                    .with_context(|| format!("level {l} window {w}"))?;
+                    ms.push(wm);
+                }
+                LevelMatrices::Packed(PackedWindows::from_windows(ms))
+            };
+            levels.push(lm);
+        }
+
+        let domain_points = geometry.final_positions().iter().map(|&u| chart.to_domain(u)).collect();
+        Ok(IcrEngine { geometry, base_sqrt, levels, domain_points, stationary })
+    }
+
+    pub fn params(&self) -> RefinementParams {
+        self.geometry.params
+    }
+
+    /// Number of modeled points N.
+    pub fn n_points(&self) -> usize {
+        self.geometry.final_positions().len()
+    }
+
+    /// Total excitation degrees of freedom (length of the flat ξ vector).
+    pub fn total_dof(&self) -> usize {
+        self.geometry.params.total_dof()
+    }
+
+    /// Per-level excitation sizes `[n0, n1, …, n_{n_lvl}]`.
+    pub fn excitation_sizes(&self) -> Vec<usize> {
+        self.geometry.params.excitation_sizes()
+    }
+
+    /// Euclidean grid coordinates of the modeled points.
+    pub fn grid_positions(&self) -> &[f64] {
+        self.geometry.final_positions()
+    }
+
+    /// Modeled points in the domain 𝒟 (chart image of the final grid).
+    pub fn domain_points(&self) -> &[f64] {
+        &self.domain_points
+    }
+
+    /// Whether the broadcast fast path is active on every level.
+    pub fn is_stationary(&self) -> bool {
+        self.stationary
+    }
+
+    /// Apply `√K_ICR` to a flat excitation vector of length
+    /// [`Self::total_dof`]: the paper's *forward pass* — the operation
+    /// benchmarked against KISS-GP in Fig. 4.
+    pub fn apply_sqrt(&self, xi: &[f64]) -> Vec<f64> {
+        assert_eq!(xi.len(), self.total_dof(), "excitation length mismatch");
+        let params = self.geometry.params;
+        let (csz, fsz, stride) = (params.n_csz, params.n_fsz, params.stride());
+
+        // Base level: dense lower-triangular apply s⁽⁰⁾ = L₀·ξ⁽⁰⁾.
+        let n0 = params.n0;
+        let mut s = vec![0.0; n0];
+        let l0 = self.base_sqrt.as_slice();
+        for i in 0..n0 {
+            let row = &l0[i * n0..i * n0 + i + 1];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(&xi[..i + 1]) {
+                acc += a * b;
+            }
+            s[i] = acc;
+        }
+
+        // Refinements: s⁽ˡ⁾ = R·window(s⁽ˡ⁻¹⁾) + √D·ξ⁽ˡ⁾ per window.
+        let mut offset = n0;
+        for lm in &self.levels {
+            let nc = s.len();
+            let nw = params.n_windows(nc);
+            let nf = nw * fsz;
+            let xi_l = &xi[offset..offset + nf];
+            let mut fine = vec![0.0; nf];
+            match lm {
+                LevelMatrices::Stationary(wm) => {
+                    let r = &wm.r;
+                    let dsq = &wm.d_sqrt;
+                    for w in 0..nw {
+                        let cbase = w * stride;
+                        let fbase = w * fsz;
+                        let coarse_win = &s[cbase..cbase + csz];
+                        let xi_win = &xi_l[fbase..fbase + fsz];
+                        for k in 0..fsz {
+                            let rrow = &r[k * csz..(k + 1) * csz];
+                            let mut acc = 0.0;
+                            for (a, b) in rrow.iter().zip(coarse_win) {
+                                acc += a * b;
+                            }
+                            let drow = &dsq[k * fsz..k * fsz + k + 1];
+                            for (a, b) in drow.iter().zip(xi_win) {
+                                acc += a * b;
+                            }
+                            fine[fbase + k] = acc;
+                        }
+                    }
+                }
+                LevelMatrices::Packed(p) => {
+                    // Monomorphized fast paths for the §5.1 candidate
+                    // shapes let LLVM fully unroll + vectorize the inner
+                    // contractions (EXPERIMENTS.md §Perf, iteration 3).
+                    match (csz, fsz) {
+                        (3, 2) => apply_level_packed::<3, 2>(p, &s, xi_l, &mut fine, stride),
+                        (3, 4) => apply_level_packed::<3, 4>(p, &s, xi_l, &mut fine, stride),
+                        (5, 2) => apply_level_packed::<5, 2>(p, &s, xi_l, &mut fine, stride),
+                        (5, 4) => apply_level_packed::<5, 4>(p, &s, xi_l, &mut fine, stride),
+                        (5, 6) => apply_level_packed::<5, 6>(p, &s, xi_l, &mut fine, stride),
+                        _ => apply_level_packed_dyn(p, &s, xi_l, &mut fine, stride, csz, fsz),
+                    }
+                }
+            }
+            offset += nf;
+            s = fine;
+        }
+        s
+    }
+
+    /// Apply the transpose `√K_ICRᵀ` to a field-space cotangent — the
+    /// backward pass of the generative model. The paper's cost story
+    /// ("evaluating a GP requires applying the square-root … exactly
+    /// twice, once for the forward pass and once for backpropagating the
+    /// gradient", §1) is this pair: [`Self::apply_sqrt`] forward,
+    /// `apply_sqrt_transpose` backward, both O(N).
+    pub fn apply_sqrt_transpose(&self, g: &[f64]) -> Vec<f64> {
+        assert_eq!(g.len(), self.n_points(), "cotangent length mismatch");
+        let params = self.geometry.params;
+        let (csz, fsz, stride) = (params.n_csz, params.n_fsz, params.stride());
+        let sizes = params.excitation_sizes();
+        let mut out = vec![0.0; self.total_dof()];
+
+        // Walk levels in reverse: split the cotangent into the ξ-part
+        // (through √Dᵀ) and the coarse-part (through Rᵀ, scatter-add).
+        let mut g_fine = g.to_vec();
+        let mut offset = self.total_dof();
+        for (l, lm) in self.levels.iter().enumerate().rev() {
+            let nc = sizes[l];
+            let nw = params.n_windows(nc);
+            let nf = nw * fsz;
+            offset -= nf;
+            let mut g_coarse = vec![0.0; nc];
+            let g_xi = &mut out[offset..offset + nf];
+            for w in 0..nw {
+                let (r_w, d_w) = lm.window(w);
+                let cbase = w * stride;
+                let fbase = w * fsz;
+                let gw = &g_fine[fbase..fbase + fsz];
+                // ξ-cotangent: (√D)ᵀ · g (lower-triangular transpose).
+                for m in 0..fsz {
+                    let mut acc = 0.0;
+                    for k in m..fsz {
+                        acc += d_w[k * fsz + m] * gw[k];
+                    }
+                    g_xi[fbase + m] = acc;
+                }
+                // Coarse cotangent: Rᵀ · g, scatter-added over the window.
+                for j in 0..csz {
+                    let mut acc = 0.0;
+                    for k in 0..fsz {
+                        acc += r_w[k * csz + j] * gw[k];
+                    }
+                    g_coarse[cbase + j] += acc;
+                }
+            }
+            g_fine = g_coarse;
+        }
+
+        // Base level: L₀ᵀ · g.
+        let n0 = params.n0;
+        debug_assert_eq!(offset, n0);
+        let l0 = self.base_sqrt.as_slice();
+        for j in 0..n0 {
+            let mut acc = 0.0;
+            for i in j..n0 {
+                acc += l0[i * n0 + j] * g_fine[i];
+            }
+            out[j] = acc;
+        }
+        out
+    }
+
+    /// Draw one approximate GP sample (`√K_ICR · ξ`, ξ ~ 𝒩(0, 1)).
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        let xi = rng.standard_normal_vec(self.total_dof());
+        self.apply_sqrt(&xi)
+    }
+
+    /// Materialize the implicit covariance `K_ICR = S·Sᵀ` where `S` is the
+    /// `N × dof` matrix representation of `√K_ICR` (apply to unit
+    /// excitations). O(dof·N) — evaluation use only (Fig. 3, §5.1 KL).
+    pub fn implicit_covariance(&self) -> Matrix {
+        let n = self.n_points();
+        let dof = self.total_dof();
+        let mut smat = Matrix::zeros(n, dof);
+        let mut xi = vec![0.0; dof];
+        for j in 0..dof {
+            xi[j] = 1.0;
+            let col = self.apply_sqrt(&xi);
+            xi[j] = 0.0;
+            for i in 0..n {
+                smat[(i, j)] = col[i];
+            }
+        }
+        let mut k = smat.matmul_nt(&smat);
+        k.symmetrize();
+        k
+    }
+
+    /// The `N × dof` matrix of `√K_ICR` itself (for spectral analysis).
+    pub fn sqrt_matrix(&self) -> Matrix {
+        let n = self.n_points();
+        let dof = self.total_dof();
+        let mut smat = Matrix::zeros(n, dof);
+        let mut xi = vec![0.0; dof];
+        for j in 0..dof {
+            xi[j] = 1.0;
+            let col = self.apply_sqrt(&xi);
+            xi[j] = 0.0;
+            for i in 0..n {
+                smat[(i, j)] = col[i];
+            }
+        }
+        smat
+    }
+}
+
+
+/// Packed-level apply, monomorphized over the window shape so the
+/// contractions unroll (the Fig. 4 hot loop).
+fn apply_level_packed<const CSZ: usize, const FSZ: usize>(
+    p: &PackedWindows,
+    s: &[f64],
+    xi_l: &[f64],
+    fine: &mut [f64],
+    stride: usize,
+) {
+    debug_assert_eq!(p.n_csz, CSZ);
+    debug_assert_eq!(p.n_fsz, FSZ);
+    let nw = p.n_win;
+    let rsz = FSZ * CSZ;
+    let dsz = FSZ * FSZ;
+    for w in 0..nw {
+        let cbase = w * stride;
+        let fbase = w * FSZ;
+        let coarse_win: &[f64; CSZ] = s[cbase..cbase + CSZ].try_into().unwrap();
+        let xi_win: &[f64; FSZ] = xi_l[fbase..fbase + FSZ].try_into().unwrap();
+        let rwin = &p.r[w * rsz..(w + 1) * rsz];
+        let dwin = &p.d_sqrt[w * dsz..(w + 1) * dsz];
+        for k in 0..FSZ {
+            let mut acc = 0.0;
+            for j in 0..CSZ {
+                acc += rwin[k * CSZ + j] * coarse_win[j];
+            }
+            for m in 0..=k {
+                acc += dwin[k * FSZ + m] * xi_win[m];
+            }
+            fine[fbase + k] = acc;
+        }
+    }
+}
+
+/// Fallback for window shapes outside the §5.1 candidate set.
+fn apply_level_packed_dyn(
+    p: &PackedWindows,
+    s: &[f64],
+    xi_l: &[f64],
+    fine: &mut [f64],
+    stride: usize,
+    csz: usize,
+    fsz: usize,
+) {
+    let nw = p.n_win;
+    let rsz = fsz * csz;
+    let dsz = fsz * fsz;
+    for w in 0..nw {
+        let cbase = w * stride;
+        let fbase = w * fsz;
+        let coarse_win = &s[cbase..cbase + csz];
+        let xi_win = &xi_l[fbase..fbase + fsz];
+        let rwin = &p.r[w * rsz..(w + 1) * rsz];
+        let dwin = &p.d_sqrt[w * dsz..(w + 1) * dsz];
+        for k in 0..fsz {
+            let rrow = &rwin[k * csz..(k + 1) * csz];
+            let mut acc = 0.0;
+            for (a, b) in rrow.iter().zip(coarse_win) {
+                acc += a * b;
+            }
+            let drow = &dwin[k * fsz..k * fsz + k + 1];
+            for (a, b) in drow.iter().zip(xi_win) {
+                acc += a * b;
+            }
+            fine[fbase + k] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chart::{IdentityChart, LogChart};
+    use crate::gp::{covariance_errors, kernel_matrix, rank_probe};
+    use crate::kernels::Matern;
+
+    fn build_identity(csz: usize, fsz: usize, n_lvl: usize, n0: usize, rho: f64) -> IcrEngine {
+        let kern = Matern::nu32(rho, 1.0);
+        let chart = IdentityChart::unit();
+        let params = RefinementParams::new(csz, fsz, n_lvl, n0).unwrap();
+        IcrEngine::build(&kern, &chart, params).unwrap()
+    }
+
+    #[test]
+    fn shapes_and_dof_bookkeeping() {
+        let e = build_identity(3, 2, 3, 8, 4.0);
+        let sizes = e.excitation_sizes();
+        assert_eq!(sizes[0], 8);
+        assert_eq!(e.total_dof(), sizes.iter().sum::<usize>());
+        assert_eq!(e.n_points(), *sizes.last().unwrap());
+        assert!(e.is_stationary());
+        let xi = vec![0.0; e.total_dof()];
+        assert_eq!(e.apply_sqrt(&xi).len(), e.n_points());
+    }
+
+    #[test]
+    fn apply_is_linear() {
+        let e = build_identity(3, 2, 2, 6, 3.0);
+        let mut rng = Rng::new(1);
+        let a = rng.standard_normal_vec(e.total_dof());
+        let b = rng.standard_normal_vec(e.total_dof());
+        let combo: Vec<f64> = a.iter().zip(&b).map(|(x, y)| 2.0 * x - 0.5 * y).collect();
+        let lhs = e.apply_sqrt(&combo);
+        let fa = e.apply_sqrt(&a);
+        let fb = e.apply_sqrt(&b);
+        for i in 0..lhs.len() {
+            assert!((lhs[i] - (2.0 * fa[i] - 0.5 * fb[i])).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn implicit_covariance_close_to_truth_regular_grid() {
+        // Regular grid, kernel length-scale spanning several final pixels:
+        // ICR should track the exact covariance closely (paper Fig. 3
+        // quality, here on the identity chart).
+        let e = build_identity(3, 2, 3, 10, 8.0);
+        let kern = Matern::nu32(8.0, 1.0);
+        let truth = kernel_matrix(&kern, e.domain_points());
+        let approx = e.implicit_covariance();
+        let errs = covariance_errors(&approx, &truth);
+        assert!(errs.mae < 0.02, "MAE {}", errs.mae);
+        assert!(errs.max_abs < 0.2, "max {}", errs.max_abs);
+    }
+
+    #[test]
+    fn implicit_covariance_is_full_rank_psd() {
+        // The paper's §5.2 claim: K_ICR = √K √Kᵀ is PSD and full rank.
+        let e = build_identity(3, 2, 2, 8, 4.0);
+        let k = e.implicit_covariance();
+        let probe = rank_probe(&k);
+        assert_eq!(probe.rank, e.n_points());
+        assert!(probe.cholesky_ok, "λ_min = {}", probe.lambda_min);
+    }
+
+    #[test]
+    fn larger_windows_reduce_kl() {
+        // §5.1: more coarse neighbours (larger n_csz) retain more
+        // information. Compare (3,2) vs (5,2) on the same log-spaced
+        // modeled points (same final N), Matérn-3/2.
+        let kern = Matern::nu32(1.0, 1.0);
+        let n_lvl = 3;
+        let p32 = RefinementParams::for_target(3, 2, n_lvl, 40).unwrap();
+        let p52 = RefinementParams::for_target(5, 2, n_lvl, 40).unwrap();
+        // Identical final grids require identical final sizes; compare KL
+        // per point instead since sizes differ slightly.
+        let chart = LogChart::new(-3.0, 0.06);
+        let kl_per_point = |p: RefinementParams| {
+            let e = IcrEngine::build(&kern, &chart, p).unwrap();
+            let truth = kernel_matrix(&kern, e.domain_points());
+            let approx = e.implicit_covariance();
+            crate::gp::kl_divergence_zero_mean(&approx, &truth).unwrap() / e.n_points() as f64
+        };
+        let kl32 = kl_per_point(p32);
+        let kl52 = kl_per_point(p52);
+        assert!(kl52 < kl32, "KL/N (5,2) = {kl52} should beat (3,2) = {kl32}");
+    }
+
+    #[test]
+    fn charted_engine_matches_stationary_on_affine_chart() {
+        // Force the per-window path by wrapping the identity chart in a
+        // type that denies affinity; results must agree bit-for-bit-ish.
+        struct OpaqueIdentity;
+        impl Chart for OpaqueIdentity {
+            fn to_domain(&self, u: f64) -> f64 {
+                u
+            }
+            fn to_grid(&self, x: f64) -> f64 {
+                x
+            }
+            fn name(&self) -> &'static str {
+                "opaque-identity"
+            }
+        }
+        let kern = Matern::nu32(5.0, 1.0);
+        let params = RefinementParams::new(5, 4, 2, 9).unwrap();
+        let fast = IcrEngine::build(&kern, &IdentityChart::unit(), params).unwrap();
+        let slow = IcrEngine::build(&kern, &OpaqueIdentity, params).unwrap();
+        assert!(fast.is_stationary());
+        assert!(!slow.is_stationary());
+        let mut rng = Rng::new(99);
+        let xi = rng.standard_normal_vec(fast.total_dof());
+        let a = fast.apply_sqrt(&xi);
+        let b = slow.apply_sqrt(&xi);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transpose_satisfies_adjoint_identity() {
+        // ⟨S·x, y⟩ = ⟨x, Sᵀ·y⟩ for random x, y — on both the stationary
+        // and the charted path.
+        let engines = vec![
+            build_identity(3, 2, 3, 8, 4.0),
+            build_identity(5, 4, 2, 9, 3.0),
+            {
+                let kern = Matern::nu32(1.0, 1.0);
+                let params = RefinementParams::new(5, 4, 3, 9).unwrap();
+                let chart = LogChart::new(-2.0, 0.05);
+                IcrEngine::build(&kern, &chart, params).unwrap()
+            },
+        ];
+        let mut rng = Rng::new(77);
+        for e in &engines {
+            for _ in 0..4 {
+                let x = rng.standard_normal_vec(e.total_dof());
+                let y = rng.standard_normal_vec(e.n_points());
+                let sx = e.apply_sqrt(&x);
+                let sty = e.apply_sqrt_transpose(&y);
+                let lhs: f64 = sx.iter().zip(&y).map(|(a, b)| a * b).sum();
+                let rhs: f64 = x.iter().zip(&sty).map(|(a, b)| a * b).sum();
+                assert!(
+                    (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()),
+                    "adjoint identity violated: {lhs} vs {rhs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sample_statistics_match_implicit_covariance() {
+        let e = build_identity(3, 2, 2, 6, 4.0);
+        let k = e.implicit_covariance();
+        let n = e.n_points();
+        let mut rng = Rng::new(2024);
+        let n_samp = 30_000;
+        let mut acc = vec![0.0; n];
+        for _ in 0..n_samp {
+            let s = e.sample(&mut rng);
+            for i in 0..n {
+                acc[i] += s[i] * s[i];
+            }
+        }
+        for i in 0..n {
+            let emp = acc[i] / n_samp as f64;
+            let want = k[(i, i)];
+            assert!((emp - want).abs() < 0.06 * want.max(0.1), "var[{i}]: {emp} vs {want}");
+        }
+    }
+
+    #[test]
+    fn log_chart_covariance_tracks_truth() {
+        // The §5 setting in miniature: log-spaced points, Matérn-3/2.
+        let kern = Matern::nu32(1.0, 1.0);
+        let params = RefinementParams::for_target(5, 4, 3, 48).unwrap();
+        let g = Geometry::build(params);
+        let n = params.final_size();
+        let u0 = g.final_positions()[0];
+        // nn distances from 10%·ρ to ρ across the grid.
+        let beta = (1.0_f64 / 0.1).ln() / (n as f64 - 2.0);
+        let alpha = (0.1 / (beta.exp() - 1.0)).ln() - beta * u0;
+        let chart = LogChart::new(alpha, beta);
+        let e = IcrEngine::build(&kern, &chart, params).unwrap();
+        let truth = kernel_matrix(&kern, e.domain_points());
+        let approx = e.implicit_covariance();
+        let errs = covariance_errors(&approx, &truth);
+        // Loose sanity bounds; the precise numbers are the Fig. 3 driver's
+        // job (see experiments::fig3).
+        assert!(errs.mae < 0.05, "MAE {}", errs.mae);
+        assert!(errs.max_rel_to_variance < 0.5, "max rel {}", errs.max_rel_to_variance);
+        let probe = rank_probe(&approx);
+        assert_eq!(probe.rank, n, "K_ICR must stay full rank on charted grids");
+    }
+}

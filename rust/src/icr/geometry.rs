@@ -1,0 +1,323 @@
+//! Refinement geometry (paper §4.2–§4.4).
+//!
+//! ICR refines on a regular Euclidean grid. Each level-`l` window covers
+//! `n_csz` consecutive coarse pixels and emits `n_fsz` fine pixels at half
+//! the coarse spacing, centred on the window; windows slide by
+//! `n_fsz/2` coarse pixels so the union of all windows' fine pixels is
+//! again a regular grid with half the spacing ("each fine pixel takes up
+//! half the volume of a coarse pixel", §5.1). The classical
+//! `(n_csz, n_fsz) = (3, 2)` case of Algorithm 1 falls out as windows of 3
+//! sliding by 1, `N_f = 2(N_c − 2)`.
+
+use anyhow::{ensure, Result};
+
+/// Refinement hyper-parameters (paper §4.4 tunables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RefinementParams {
+    /// Coarse pixels per window, odd ≥ 3 (`n_csz`).
+    pub n_csz: usize,
+    /// Fine pixels per window, even ≥ 2 (`n_fsz`).
+    pub n_fsz: usize,
+    /// Number of refinement levels (`n_lvl`).
+    pub n_lvl: usize,
+    /// Base (coarsest) grid size, ≥ `n_csz` and ≥ 3 (paper: "at least 3
+    /// pixels for which the covariance matrix can be diagonalized
+    /// explicitly at negligible cost").
+    pub n0: usize,
+}
+
+impl RefinementParams {
+    pub fn new(n_csz: usize, n_fsz: usize, n_lvl: usize, n0: usize) -> Result<Self> {
+        let p = RefinementParams { n_csz, n_fsz, n_lvl, n0 };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// The paper's §5.1 candidate set: {(3,2),(3,4),(5,2),(5,4),(5,6)}.
+    pub fn paper_candidates(n_lvl: usize, target_n: usize) -> Vec<RefinementParams> {
+        [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)]
+            .iter()
+            .filter_map(|&(c, f)| Self::for_target(c, f, n_lvl, target_n).ok())
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_csz >= 3 && self.n_csz % 2 == 1, "n_csz must be odd ≥ 3, got {}", self.n_csz);
+        ensure!(self.n_fsz >= 2 && self.n_fsz % 2 == 0, "n_fsz must be even ≥ 2, got {}", self.n_fsz);
+        ensure!(self.n0 >= self.n_csz.max(3), "n0 = {} must be ≥ max(n_csz, 3)", self.n0);
+        // Every level must keep at least one full window.
+        let sizes = self.level_sizes();
+        for (l, &n) in sizes.iter().enumerate().skip(1) {
+            ensure!(n >= 1, "level {l} collapses to zero pixels");
+        }
+        if self.n_lvl > 0 {
+            ensure!(
+                sizes[self.n_lvl - 1] >= self.n_csz,
+                "level {} has {} pixels < n_csz = {}",
+                self.n_lvl - 1,
+                sizes[self.n_lvl - 1],
+                self.n_csz
+            );
+        }
+        Ok(())
+    }
+
+    /// Window stride in coarse pixels. The fine grid doubles the coarse
+    /// resolution, so each window must advance by `n_fsz/2` coarse pixels.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.n_fsz / 2
+    }
+
+    /// Number of refinement windows on a level with `nc` coarse pixels.
+    #[inline]
+    pub fn n_windows(&self, nc: usize) -> usize {
+        if nc < self.n_csz {
+            0
+        } else {
+            (nc - self.n_csz) / self.stride() + 1
+        }
+    }
+
+    /// Pixel count per level: `[n0, n1, …, n_{n_lvl}]`.
+    pub fn level_sizes(&self) -> Vec<usize> {
+        let mut sizes = Vec::with_capacity(self.n_lvl + 1);
+        sizes.push(self.n0);
+        let mut n = self.n0;
+        for _ in 0..self.n_lvl {
+            n = self.n_fsz * self.n_windows(n);
+            sizes.push(n);
+        }
+        sizes
+    }
+
+    /// Number of modeled points after all refinements.
+    pub fn final_size(&self) -> usize {
+        *self.level_sizes().last().unwrap()
+    }
+
+    /// Total excitation degrees of freedom: `n0 + Σ_l n_fsz·n_windows(l)`.
+    pub fn total_dof(&self) -> usize {
+        let sizes = self.level_sizes();
+        self.n0 + sizes[1..].iter().sum::<usize>()
+    }
+
+    /// Per-level excitation sizes `[n0, dof_1, …]` (each refined level's
+    /// dof equals its pixel count).
+    pub fn excitation_sizes(&self) -> Vec<usize> {
+        self.level_sizes()
+    }
+
+    /// Smallest base grid `n0` whose final size reaches `target` — the
+    /// §5.1 experiments fix `n_lvl = 5` and aim for N ≈ 200.
+    pub fn for_target(n_csz: usize, n_fsz: usize, n_lvl: usize, target: usize) -> Result<Self> {
+        let mut n0 = n_csz.max(3);
+        loop {
+            if let Ok(p) = RefinementParams::new(n_csz, n_fsz, n_lvl, n0) {
+                if p.final_size() >= target {
+                    return Ok(p);
+                }
+            }
+            n0 += 1;
+            ensure!(n0 < target * 4 + 64, "cannot reach target {target} with ({n_csz},{n_fsz})×{n_lvl}");
+        }
+    }
+
+    /// Operation-count estimate in the spirit of paper Eq. 13: the base
+    /// Cholesky apply plus `n_fsz·(n_csz + n_fsz)` multiply-adds per
+    /// window per level. Establishes the O(N) claim numerically.
+    pub fn flops_estimate(&self) -> usize {
+        let sizes = self.level_sizes();
+        let mut total = self.n0 * self.n0; // dense base-level apply
+        let mut nc = self.n0;
+        for _ in 0..self.n_lvl {
+            let nw = self.n_windows(nc);
+            total += nw * self.n_fsz * (self.n_csz + self.n_fsz);
+            nc = self.n_fsz * nw;
+        }
+        let _ = sizes;
+        total
+    }
+}
+
+/// Grid coordinates of every pixel on every level.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub params: RefinementParams,
+    /// `positions[l][i]`: Euclidean grid coordinate of pixel `i` at level
+    /// `l` (level 0 = coarsest, level `n_lvl` = the modeled points).
+    pub positions: Vec<Vec<f64>>,
+}
+
+impl Geometry {
+    /// Lay out the refinement pyramid. The base grid has spacing
+    /// `2^n_lvl` so the final level lands on (approximately) unit spacing,
+    /// starting at `base_offset`.
+    pub fn build(params: RefinementParams) -> Geometry {
+        let d0 = (1u64 << params.n_lvl) as f64;
+        let base: Vec<f64> = (0..params.n0).map(|i| i as f64 * d0).collect();
+        let mut positions = vec![base];
+        for l in 0..params.n_lvl {
+            let coarse = &positions[l];
+            positions.push(Self::refine_positions(params, coarse));
+        }
+        Geometry { params, positions }
+    }
+
+    /// Fine-pixel coordinates produced by one refinement of `coarse`.
+    pub fn refine_positions(params: RefinementParams, coarse: &[f64]) -> Vec<f64> {
+        let (csz, fsz, s) = (params.n_csz, params.n_fsz, params.stride());
+        let nw = params.n_windows(coarse.len());
+        let mut fine = Vec::with_capacity(nw * fsz);
+        for w in 0..nw {
+            let i0 = w * s;
+            let first = coarse[i0];
+            let last = coarse[i0 + csz - 1];
+            let center = 0.5 * (first + last);
+            // Local coarse spacing from the window extent (exact for the
+            // uniform grids this constructor builds; robust for charted
+            // engines that re-use this helper on slightly perturbed grids).
+            let dc = (last - first) / (csz - 1) as f64;
+            let df = 0.5 * dc;
+            for k in 0..fsz {
+                fine.push(center + (k as f64 - (fsz as f64 - 1.0) / 2.0) * df);
+            }
+        }
+        fine
+    }
+
+    /// Coordinates of the modeled points (finest level).
+    pub fn final_positions(&self) -> &[f64] {
+        self.positions.last().unwrap()
+    }
+
+    /// Coarse window start index for window `w` at level `l → l+1`.
+    #[inline]
+    pub fn window_start(&self, w: usize) -> usize {
+        w * self.params.stride()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classic_32_growth_matches_paper() {
+        // Paper §4.2: N_f = 2·(N_c − 2) for (3,2).
+        let p = RefinementParams::new(3, 2, 1, 10).unwrap();
+        assert_eq!(p.level_sizes(), vec![10, 16]);
+        let p = RefinementParams::new(3, 2, 5, 10).unwrap();
+        assert_eq!(p.level_sizes(), vec![10, 16, 28, 52, 100, 196]);
+    }
+
+    #[test]
+    fn five_four_reaches_exactly_200() {
+        // (5,4) with n_lvl = 5 and n0 = 13 lands exactly on N = 200 —
+        // matching the paper's §5.1 setting (N = 200, n_lvl = 5, optimum
+        // (5,4)).
+        let p = RefinementParams::new(5, 4, 5, 13).unwrap();
+        assert_eq!(p.final_size(), 200);
+    }
+
+    #[test]
+    fn for_target_finds_minimal_base() {
+        for &(c, f) in &[(3usize, 2usize), (3, 4), (5, 2), (5, 4), (5, 6)] {
+            let p = RefinementParams::for_target(c, f, 5, 200).unwrap();
+            assert!(p.final_size() >= 200, "({c},{f}): {}", p.final_size());
+            // Minimality: one smaller base must miss the target (or be invalid).
+            if p.n0 > c.max(3) {
+                let smaller = RefinementParams::new(c, f, 5, p.n0 - 1);
+                assert!(smaller.map(|q| q.final_size() < 200).unwrap_or(true));
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(RefinementParams::new(2, 2, 1, 8).is_err()); // even csz
+        assert!(RefinementParams::new(3, 3, 1, 8).is_err()); // odd fsz
+        assert!(RefinementParams::new(5, 2, 1, 4).is_err()); // n0 < csz
+        assert!(RefinementParams::new(3, 2, 10, 3).is_err()); // collapses
+    }
+
+    #[test]
+    fn fine_grid_is_uniform_with_half_spacing() {
+        for &(c, f) in &[(3usize, 2usize), (3, 4), (5, 2), (5, 4), (5, 6)] {
+            let p = RefinementParams::new(c, f, 1, 16).unwrap();
+            let g = Geometry::build(p);
+            let fine = g.final_positions();
+            assert_eq!(fine.len(), p.final_size());
+            let d0 = (1u64 << p.n_lvl) as f64;
+            let want = d0 / 2.0;
+            for pair in fine.windows(2) {
+                let gap = pair[1] - pair[0];
+                assert!((gap - want).abs() < 1e-9, "({c},{f}): gap {gap} want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn final_level_has_unit_spacing() {
+        let p = RefinementParams::new(3, 2, 4, 8).unwrap();
+        let g = Geometry::build(p);
+        for pair in g.final_positions().windows(2) {
+            assert!((pair[1] - pair[0] - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fine_pixels_centered_on_windows() {
+        // (3,2): fine pixels must sit at coarse-center ± Δc/4 (paper Fig. 1).
+        let p = RefinementParams::new(3, 2, 1, 5).unwrap();
+        let g = Geometry::build(p);
+        let coarse = &g.positions[0];
+        let fine = &g.positions[1];
+        let dc = coarse[1] - coarse[0];
+        // Window 0 centers on coarse[1].
+        assert!((fine[0] - (coarse[1] - dc / 4.0)).abs() < 1e-12);
+        assert!((fine[1] - (coarse[1] + dc / 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fine_pixels_nested_inside_window_span() {
+        for &(c, f) in &[(3usize, 4usize), (5, 4), (5, 6)] {
+            let p = RefinementParams::new(c, f, 1, 16).unwrap();
+            let g = Geometry::build(p);
+            let coarse = &g.positions[0];
+            let fine = &g.positions[1];
+            for w in 0..p.n_windows(coarse.len()) {
+                let i0 = g.window_start(w);
+                let lo = coarse[i0];
+                let hi = coarse[i0 + c - 1];
+                for k in 0..f {
+                    let x = fine[w * f + k];
+                    assert!(x > lo && x < hi, "({c},{f}) window {w}: fine {x} outside [{lo},{hi}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flops_estimate_is_linear_in_n() {
+        // Eq. 13: O(N) — cost per final pixel must be bounded.
+        let per_point: Vec<f64> = (3..9)
+            .map(|lvl| {
+                let p = RefinementParams::new(3, 2, lvl, 12).unwrap();
+                p.flops_estimate() as f64 / p.final_size() as f64
+            })
+            .collect();
+        let first = per_point[1];
+        for v in &per_point[1..] {
+            assert!((v / first - 1.0).abs() < 0.35, "per-point cost drifts: {per_point:?}");
+        }
+    }
+
+    #[test]
+    fn total_dof_exceeds_model_size() {
+        // dof = n0 + Σ level sizes ≥ N: √K_ICR is a tall (N × dof) operator.
+        let p = RefinementParams::new(5, 4, 5, 13).unwrap();
+        assert!(p.total_dof() >= p.final_size());
+        assert_eq!(p.total_dof(), 13 + p.level_sizes()[1..].iter().sum::<usize>());
+    }
+}

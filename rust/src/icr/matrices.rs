@@ -1,0 +1,295 @@
+//! Refinement matrices (paper Eqs. 5–9).
+//!
+//! For a window of `n_csz` coarse pixels refined to `n_fsz` fine pixels,
+//! the conditional distribution of the fine values given the coarse ones
+//! is Gaussian with mean `R·s^c` and covariance `D`:
+//!
+//! ```text
+//! R = K_fc · K_cc⁻¹                       (Eq. 7)
+//! D = K_ff − K_fc · K_cc⁻¹ · K_cf         (Eq. 8)
+//! s^f = R·s^c + √D·ξ                      (Eq. 9)
+//! ```
+//!
+//! where every kernel block is evaluated at the *charted* locations
+//! `k̃(ũ, ũ′) = k(φ⁻¹(ũ), φ⁻¹(ũ′))` (§4.3). Matrices are stored as flat
+//! row-major `Vec<f64>` because the apply loop is the measured hot path.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::chart::Chart;
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Matrix};
+
+/// The `(R, √D)` pair of one refinement window, flattened row-major.
+#[derive(Debug, Clone)]
+pub struct WindowMatrices {
+    /// `n_fsz × n_csz` interpolation matrix R.
+    pub r: Vec<f64>,
+    /// `n_fsz × n_fsz` *lower-triangular* Cholesky factor of D.
+    pub d_sqrt: Vec<f64>,
+    pub n_csz: usize,
+    pub n_fsz: usize,
+}
+
+/// All windows of one charted level, packed contiguously.
+///
+/// Per-window heap allocations (`Vec<WindowMatrices>`) cost a pointer
+/// chase per window in the O(N) apply loop; at N ≳ 32k that dominated the
+/// cache behaviour (EXPERIMENTS.md §Perf, iteration 2). Packing `R` and
+/// `√D` for all windows into two flat arrays makes the hot loop a pure
+/// streaming read.
+#[derive(Debug, Clone)]
+pub struct PackedWindows {
+    /// `n_win × n_fsz × n_csz`, row-major.
+    pub r: Vec<f64>,
+    /// `n_win × n_fsz × n_fsz` lower-triangular factors, row-major.
+    pub d_sqrt: Vec<f64>,
+    pub n_csz: usize,
+    pub n_fsz: usize,
+    pub n_win: usize,
+}
+
+impl PackedWindows {
+    pub fn from_windows(ms: Vec<WindowMatrices>) -> PackedWindows {
+        assert!(!ms.is_empty());
+        let (csz, fsz) = (ms[0].n_csz, ms[0].n_fsz);
+        let n_win = ms.len();
+        let mut r = Vec::with_capacity(n_win * fsz * csz);
+        let mut d = Vec::with_capacity(n_win * fsz * fsz);
+        for m in &ms {
+            assert_eq!((m.n_csz, m.n_fsz), (csz, fsz));
+            r.extend_from_slice(&m.r);
+            d.extend_from_slice(&m.d_sqrt);
+        }
+        PackedWindows { r, d_sqrt: d, n_csz: csz, n_fsz: fsz, n_win }
+    }
+
+    /// `R` block of window `w` (`n_fsz × n_csz`, row-major).
+    #[inline]
+    pub fn r_window(&self, w: usize) -> &[f64] {
+        let sz = self.n_fsz * self.n_csz;
+        &self.r[w * sz..(w + 1) * sz]
+    }
+
+    /// `√D` block of window `w` (`n_fsz × n_fsz`, row-major lower).
+    #[inline]
+    pub fn d_window(&self, w: usize) -> &[f64] {
+        let sz = self.n_fsz * self.n_fsz;
+        &self.d_sqrt[w * sz..(w + 1) * sz]
+    }
+}
+
+/// Refinement matrices of one level: a single broadcast pair on
+/// translation-invariant axes (stationary kernel + affine chart, §4.3), or
+/// packed per-window matrices otherwise.
+#[derive(Debug, Clone)]
+pub enum LevelMatrices {
+    Stationary(WindowMatrices),
+    Packed(PackedWindows),
+}
+
+impl LevelMatrices {
+    /// `(R, √D)` slices for window `w`.
+    #[inline]
+    pub fn window(&self, w: usize) -> (&[f64], &[f64]) {
+        match self {
+            LevelMatrices::Stationary(m) => (&m.r, &m.d_sqrt),
+            LevelMatrices::Packed(p) => (p.r_window(w), p.d_window(w)),
+        }
+    }
+
+    pub fn is_stationary(&self) -> bool {
+        matches!(self, LevelMatrices::Stationary(_))
+    }
+}
+
+/// Build `(R, √D)` for one window from the charted pixel coordinates.
+///
+/// `coarse` and `fine` are Euclidean *grid* coordinates; the kernel sees
+/// the chart image. `√D` falls back to an escalating diagonal jitter if
+/// `D` is positive semidefinite only up to round-off (the fine pixels are
+/// nearly determined by the coarse ones for very smooth kernels).
+pub fn window_matrices(
+    kernel: &dyn Kernel,
+    chart: &dyn Chart,
+    coarse: &[f64],
+    fine: &[f64],
+) -> Result<WindowMatrices> {
+    let (csz, fsz) = (coarse.len(), fine.len());
+    let xc: Vec<f64> = coarse.iter().map(|&u| chart.to_domain(u)).collect();
+    let xf: Vec<f64> = fine.iter().map(|&u| chart.to_domain(u)).collect();
+
+    let kcc = Matrix::from_fn(csz, csz, |i, j| kernel.eval((xc[i] - xc[j]).abs()));
+    let kfc = Matrix::from_fn(fsz, csz, |i, j| kernel.eval((xf[i] - xc[j]).abs()));
+    let kff = Matrix::from_fn(fsz, fsz, |i, j| kernel.eval((xf[i] - xf[j]).abs()));
+
+    let chol_cc = Cholesky::new(&kcc)
+        .or_else(|_| Cholesky::new_with_jitter(&kcc, 1e-12 * kernel.variance()))
+        .map_err(|e| anyhow!("coarse covariance K_cc not PD: {e}"))?;
+
+    // R = K_fc·K_cc⁻¹ row by row: row_i(R) = K_cc⁻¹·row_i(K_fc) (K_cc sym).
+    let mut r = Matrix::zeros(fsz, csz);
+    for i in 0..fsz {
+        let sol = chol_cc.solve(kfc.row(i));
+        for j in 0..csz {
+            r[(i, j)] = sol[j];
+        }
+    }
+
+    // D = K_ff − R·K_cf = K_ff − R·K_fcᵀ.
+    let mut d = &kff - &r.matmul_nt(&kfc);
+    d.symmetrize();
+
+    let d_sqrt = cholesky_with_jitter_ladder(&d, kernel.variance())
+        .context("conditional covariance D not factorizable")?;
+
+    Ok(WindowMatrices {
+        r: r.as_slice().to_vec(),
+        d_sqrt: d_sqrt.into_l().as_slice().to_vec(),
+        n_csz: csz,
+        n_fsz: fsz,
+    })
+}
+
+/// Cholesky with an escalating jitter ladder: exact first, then
+/// `10^{-14} … 10^{-8}` relative to the kernel variance scale.
+fn cholesky_with_jitter_ladder(d: &Matrix, scale: f64) -> Result<Cholesky> {
+    if let Ok(c) = Cholesky::new(d) {
+        return Ok(c);
+    }
+    let mut jitter = 1e-14 * scale.max(1e-300);
+    while jitter <= 1e-8 * scale {
+        if let Ok(c) = Cholesky::new_with_jitter(d, jitter) {
+            return Ok(c);
+        }
+        jitter *= 10.0;
+    }
+    Err(anyhow!("matrix stayed indefinite up to jitter 1e-8·variance"))
+}
+
+/// Dense reference for the base level: Cholesky of the charted kernel
+/// matrix over the coarsest grid ("an arbitrarily coarse grid … for which
+/// the covariance matrix can be diagonalized explicitly", §4.2).
+pub fn base_matrices(kernel: &dyn Kernel, chart: &dyn Chart, base: &[f64]) -> Result<Matrix> {
+    let x: Vec<f64> = base.iter().map(|&u| chart.to_domain(u)).collect();
+    let k = Matrix::from_fn(base.len(), base.len(), |i, j| kernel.eval((x[i] - x[j]).abs()));
+    let chol = cholesky_with_jitter_ladder(&k, kernel.variance())
+        .context("base-level covariance not PD")?;
+    Ok(chol.into_l())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chart::{IdentityChart, LogChart};
+    use crate::kernels::Matern;
+    use crate::linalg::Matrix;
+
+    /// Dense oracle: compute R and D directly with an explicit inverse.
+    fn dense_rd(kernel: &dyn Kernel, xc: &[f64], xf: &[f64]) -> (Matrix, Matrix) {
+        let csz = xc.len();
+        let fsz = xf.len();
+        let kcc = Matrix::from_fn(csz, csz, |i, j| kernel.eval((xc[i] - xc[j]).abs()));
+        let kfc = Matrix::from_fn(fsz, csz, |i, j| kernel.eval((xf[i] - xc[j]).abs()));
+        let kff = Matrix::from_fn(fsz, fsz, |i, j| kernel.eval((xf[i] - xf[j]).abs()));
+        let inv = Cholesky::new(&kcc).unwrap().inverse();
+        let r = kfc.matmul(&inv);
+        let d = &kff - &r.matmul_nt(&kfc);
+        (r, d)
+    }
+
+    #[test]
+    fn matches_dense_conditional_identity_chart() {
+        let kern = Matern::nu32(2.0, 1.0);
+        let chart = IdentityChart::unit();
+        let coarse = [0.0, 1.0, 2.0];
+        let fine = [0.75, 1.25];
+        let wm = window_matrices(&kern, &chart, &coarse, &fine).unwrap();
+        let (r, d) = dense_rd(&kern, &coarse, &fine);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert!((wm.r[i * 3 + j] - r[(i, j)]).abs() < 1e-10);
+            }
+        }
+        // √D·√Dᵀ = D.
+        let l = Matrix::from_flat(2, 2, &wm.d_sqrt);
+        let rec = l.matmul_nt(&l);
+        assert!((&rec - &d).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_dense_conditional_log_chart() {
+        let kern = Matern::nu32(1.0, 1.0);
+        let chart = LogChart::new(-2.0, 0.08);
+        let coarse = [10.0, 14.0, 18.0, 22.0, 26.0];
+        let fine = [16.0, 17.0, 19.0, 20.0];
+        let wm = window_matrices(&kern, &chart, &coarse, &fine).unwrap();
+        let xc: Vec<f64> = coarse.iter().map(|&u| chart.to_domain(u)).collect();
+        let xf: Vec<f64> = fine.iter().map(|&u| chart.to_domain(u)).collect();
+        let (r, d) = dense_rd(&kern, &xc, &xf);
+        for i in 0..4 {
+            for j in 0..5 {
+                assert!((wm.r[i * 5 + j] - r[(i, j)]).abs() < 1e-9);
+            }
+        }
+        let l = Matrix::from_flat(4, 4, &wm.d_sqrt);
+        assert!((&l.matmul_nt(&l) - &d).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn interpolation_weights_sum_near_one_inside() {
+        // For a slowly varying kernel, R should act like an interpolator:
+        // rows sum ≈ 1 for fine pixels inside the window.
+        let kern = Matern::nu32(50.0, 1.0); // very smooth at this scale
+        let chart = IdentityChart::unit();
+        let coarse = [0.0, 1.0, 2.0];
+        let fine = [0.75, 1.25];
+        let wm = window_matrices(&kern, &chart, &coarse, &fine).unwrap();
+        for i in 0..2 {
+            let s: f64 = wm.r[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-2, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn conditional_variance_shrinks_with_smoothness() {
+        // Smoother kernel ⇒ fine pixels better determined ⇒ smaller D.
+        let chart = IdentityChart::unit();
+        let coarse = [0.0, 1.0, 2.0];
+        let fine = [0.75, 1.25];
+        let d_rough = {
+            let wm = window_matrices(&Matern::nu12(1.0, 1.0), &chart, &coarse, &fine).unwrap();
+            wm.d_sqrt[0] * wm.d_sqrt[0]
+        };
+        let d_smooth = {
+            let wm = window_matrices(&Matern::nu52(4.0, 1.0), &chart, &coarse, &fine).unwrap();
+            wm.d_sqrt[0] * wm.d_sqrt[0]
+        };
+        assert!(d_smooth < d_rough, "smooth {d_smooth} vs rough {d_rough}");
+    }
+
+    #[test]
+    fn d_sqrt_is_lower_triangular() {
+        let kern = Matern::nu32(1.5, 1.0);
+        let chart = IdentityChart::unit();
+        let coarse = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let fine = [1.625, 1.875, 2.125, 2.375];
+        let wm = window_matrices(&kern, &chart, &coarse, &fine).unwrap();
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_eq!(wm.d_sqrt[i * 4 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn base_matrices_reproduce_kernel() {
+        let kern = Matern::nu32(3.0, 1.2);
+        let chart = LogChart::new(0.0, 0.05);
+        let base = [0.0, 8.0, 16.0, 24.0];
+        let l = base_matrices(&kern, &chart, &base).unwrap();
+        let x: Vec<f64> = base.iter().map(|&u| chart.to_domain(u)).collect();
+        let k = Matrix::from_fn(4, 4, |i, j| kern.eval((x[i] - x[j]).abs()));
+        assert!((&l.matmul_nt(&l) - &k).max_abs() < 1e-9);
+    }
+}

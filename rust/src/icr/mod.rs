@@ -1,0 +1,20 @@
+//! Iterative Charted Refinement — the paper's core contribution.
+//!
+//! Submodules:
+//! - [`geometry`]: refinement pyramid layout (paper §4.2, §4.4 tunables);
+//! - [`matrices`]: per-window `(R, √D)` construction (Eqs. 5–9, §4.3);
+//! - [`engine`]: the O(N) `√K_ICR` apply (Algorithm 1 generalized).
+//!
+//! The Rust-native engine here mirrors the JAX/Pallas implementation in
+//! `python/compile/` (L1/L2); the two are cross-checked numerically by the
+//! artifact-gated integration tests in `rust/tests/`.
+
+pub mod engine;
+pub mod geometry;
+pub mod matrices;
+pub mod separable;
+
+pub use engine::IcrEngine;
+pub use geometry::{Geometry, RefinementParams};
+pub use matrices::{base_matrices, window_matrices, LevelMatrices, PackedWindows, WindowMatrices};
+pub use separable::SeparableIcr;

@@ -1,0 +1,301 @@
+//! Stationary, isotropic covariance kernels (paper §3.1, Eq. 14).
+//!
+//! ICR requires a *decaying* kernel (abstract): correlations must fall off
+//! with distance so that a refinement conditioned on `n_csz` neighbouring
+//! coarse pixels loses little information. The experiments use the
+//! Matérn-3/2 kernel of Eq. 14; the library ships the Matérn family, RBF
+//! and the Ornstein–Uhlenbeck (Matérn-1/2 / exponential) kernel, each with
+//! amplitude and length-scale hyper-parameters, plus inverse-transform
+//! standardization of the hyper-parameters (paper §3.2).
+
+mod standardize;
+
+pub use standardize::{LogNormalPrior, StandardizedParam};
+
+/// A stationary isotropic covariance function `k(d)` of distance `d ≥ 0`.
+///
+/// Object-safe so that charts, engines and the coordinator can hold
+/// `Box<dyn Kernel>`.
+pub trait Kernel: Send + Sync {
+    /// Covariance at distance `d ≥ 0`.
+    fn eval(&self, d: f64) -> f64;
+
+    /// Marginal variance `k(0)`.
+    fn variance(&self) -> f64 {
+        self.eval(0.0)
+    }
+
+    /// Characteristic length scale ρ (used by grid-sizing heuristics).
+    fn lengthscale(&self) -> f64;
+
+    /// Human-readable name for manifests and logs.
+    fn name(&self) -> &'static str;
+
+    /// Continuous Fourier spectrum S(f) of the kernel, if known in closed
+    /// form. Used by the KISS-GP harmonic representation (paper Eq. 15).
+    fn spectrum(&self, _freq: f64) -> Option<f64> {
+        None
+    }
+}
+
+/// Matérn-ν covariance for ν ∈ {1/2, 3/2, 5/2}: the paper's Eq. 14 is
+/// [`Matern::nu32`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Matern {
+    /// Smoothness; only 0.5, 1.5 and 2.5 are supported (the closed forms).
+    pub nu: f64,
+    /// Characteristic length scale ρ (paper Eq. 14).
+    pub rho: f64,
+    /// Amplitude a: marginal std-dev; variance is a².
+    pub amplitude: f64,
+}
+
+impl Matern {
+    /// Matérn-1/2 (exponential / Ornstein–Uhlenbeck).
+    pub fn nu12(rho: f64, amplitude: f64) -> Self {
+        Matern { nu: 0.5, rho, amplitude }
+    }
+
+    /// Matérn-3/2 — the paper's experiment kernel (Eq. 14).
+    pub fn nu32(rho: f64, amplitude: f64) -> Self {
+        Matern { nu: 1.5, rho, amplitude }
+    }
+
+    /// Matérn-5/2.
+    pub fn nu52(rho: f64, amplitude: f64) -> Self {
+        Matern { nu: 2.5, rho, amplitude }
+    }
+}
+
+impl Kernel for Matern {
+    fn eval(&self, d: f64) -> f64 {
+        let d = d.abs();
+        let a2 = self.amplitude * self.amplitude;
+        if d == 0.0 {
+            return a2;
+        }
+        let r = d / self.rho;
+        let v = match self.nu {
+            x if (x - 0.5).abs() < 1e-12 => (-r).exp(),
+            x if (x - 1.5).abs() < 1e-12 => {
+                // Eq. 14: (1 + √3 d/ρ) exp(−√3 d/ρ)
+                let s = 3f64.sqrt() * r;
+                (1.0 + s) * (-s).exp()
+            }
+            x if (x - 2.5).abs() < 1e-12 => {
+                let s = 5f64.sqrt() * r;
+                (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+            other => panic!("unsupported Matérn smoothness nu={other}"),
+        };
+        a2 * v
+    }
+
+    fn lengthscale(&self) -> f64 {
+        self.rho
+    }
+
+    fn name(&self) -> &'static str {
+        match self.nu {
+            x if (x - 0.5).abs() < 1e-12 => "matern12",
+            x if (x - 1.5).abs() < 1e-12 => "matern32",
+            _ => "matern52",
+        }
+    }
+
+    fn spectrum(&self, freq: f64) -> Option<f64> {
+        // 1-D Matérn spectral density S(f) ∝ (2ν/ρ² + 4π²f²)^{-(ν+1/2)};
+        // normalized so that ∫S(f)df = k(0) = a².
+        let a2 = self.amplitude * self.amplitude;
+        let nu = self.nu;
+        let lam2 = 2.0 * nu / (self.rho * self.rho);
+        let w2 = 4.0 * std::f64::consts::PI * std::f64::consts::PI * freq * freq;
+        // Normalization for d=1: S(f) = a² · C · lam^{2ν} (lam² + w²)^{-(ν+1/2)}
+        // with C = 2 √π Γ(ν+1/2) / Γ(ν) · lam^{... } — use closed forms per ν.
+        let pi = std::f64::consts::PI;
+        let lam = lam2.sqrt();
+        let c = match nu {
+            x if (x - 0.5).abs() < 1e-12 => 2.0 * lam,                 // OU: 2λ/(λ²+w²)
+            x if (x - 1.5).abs() < 1e-12 => 4.0 * lam2 * lam,          // 4λ³/(λ²+w²)²
+            x if (x - 2.5).abs() < 1e-12 => 16.0 / 3.0 * lam2 * lam2 * lam, // 16/3 λ⁵/(λ²+w²)³
+            _ => return None,
+        };
+        let p = nu + 0.5;
+        let _ = pi;
+        Some(a2 * c * (lam2 + w2).powf(-p))
+    }
+}
+
+/// Radial Basis Function (squared-exponential) kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rbf {
+    /// Length scale ρ.
+    pub rho: f64,
+    /// Amplitude (marginal std-dev).
+    pub amplitude: f64,
+}
+
+impl Rbf {
+    pub fn new(rho: f64, amplitude: f64) -> Self {
+        Rbf { rho, amplitude }
+    }
+}
+
+impl Kernel for Rbf {
+    fn eval(&self, d: f64) -> f64 {
+        let r = d / self.rho;
+        self.amplitude * self.amplitude * (-0.5 * r * r).exp()
+    }
+
+    fn lengthscale(&self) -> f64 {
+        self.rho
+    }
+
+    fn name(&self) -> &'static str {
+        "rbf"
+    }
+
+    fn spectrum(&self, freq: f64) -> Option<f64> {
+        // S(f) = a² ρ √(2π) exp(−2π²ρ²f²)
+        let a2 = self.amplitude * self.amplitude;
+        let pi = std::f64::consts::PI;
+        Some(a2 * self.rho * (2.0 * pi).sqrt() * (-2.0 * pi * pi * self.rho * self.rho * freq * freq).exp())
+    }
+}
+
+/// Parse a kernel spec string like `matern32(rho=1.0, amp=1.0)` — used by
+/// the CLI and config system.
+pub fn parse_kernel(spec: &str) -> Result<Box<dyn Kernel>, String> {
+    let spec = spec.trim();
+    let (name, args) = match spec.find('(') {
+        Some(i) => {
+            let close = spec.rfind(')').ok_or_else(|| format!("unbalanced parens in kernel spec {spec:?}"))?;
+            (&spec[..i], &spec[i + 1..close])
+        }
+        None => (spec, ""),
+    };
+    let mut rho = 1.0;
+    let mut amp = 1.0;
+    for part in args.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| format!("bad kernel arg {part:?}, want key=value"))?;
+        let val: f64 = v.trim().parse().map_err(|e| format!("bad kernel value {v:?}: {e}"))?;
+        match k.trim() {
+            "rho" | "lengthscale" => rho = val,
+            "amp" | "amplitude" => amp = val,
+            other => return Err(format!("unknown kernel arg {other:?}")),
+        }
+    }
+    if rho <= 0.0 || amp <= 0.0 {
+        return Err(format!("kernel parameters must be positive, got rho={rho}, amp={amp}"));
+    }
+    match name {
+        "matern12" | "ou" | "exponential" => Ok(Box::new(Matern::nu12(rho, amp))),
+        "matern32" | "matern" => Ok(Box::new(Matern::nu32(rho, amp))),
+        "matern52" => Ok(Box::new(Matern::nu52(rho, amp))),
+        "rbf" | "sqexp" | "gaussian" => Ok(Box::new(Rbf::new(rho, amp))),
+        other => Err(format!("unknown kernel {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matern32_matches_eq14() {
+        let k = Matern::nu32(2.0, 1.0);
+        // k(d) = (1 + √3 d/ρ) exp(−√3 d/ρ)
+        let d = 1.7;
+        let s = 3f64.sqrt() * d / 2.0;
+        let want = (1.0 + s) * (-s).exp();
+        assert!((k.eval(d) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn variance_at_zero_distance() {
+        for k in [Matern::nu12(1.0, 2.0), Matern::nu32(1.0, 2.0), Matern::nu52(1.0, 2.0)] {
+            assert!((k.eval(0.0) - 4.0).abs() < 1e-15);
+            assert!((k.variance() - 4.0).abs() < 1e-15);
+        }
+        assert!((Rbf::new(1.0, 3.0).variance() - 9.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kernels_decay_monotonically() {
+        let kernels: Vec<Box<dyn Kernel>> = vec![
+            Box::new(Matern::nu12(1.0, 1.0)),
+            Box::new(Matern::nu32(1.0, 1.0)),
+            Box::new(Matern::nu52(1.0, 1.0)),
+            Box::new(Rbf::new(1.0, 1.0)),
+        ];
+        for k in &kernels {
+            let mut prev = k.eval(0.0);
+            for i in 1..100 {
+                let v = k.eval(i as f64 * 0.1);
+                assert!(v <= prev + 1e-15, "{} not decaying", k.name());
+                assert!(v >= 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn smoothness_ordering_near_zero() {
+        // Smoother kernels stay closer to k(0) for small d.
+        let d = 0.05;
+        let m12 = Matern::nu12(1.0, 1.0).eval(d);
+        let m32 = Matern::nu32(1.0, 1.0).eval(d);
+        let m52 = Matern::nu52(1.0, 1.0).eval(d);
+        let rbf = Rbf::new(1.0, 1.0).eval(d);
+        assert!(m12 < m32 && m32 < m52 && m52 < rbf);
+    }
+
+    #[test]
+    fn spectrum_integrates_to_variance() {
+        // ∫ S(f) df ≈ k(0) via trapezoid on a wide grid.
+        for k in [Matern::nu12(1.0, 1.0), Matern::nu32(1.3, 2.0), Matern::nu52(0.7, 1.0)] {
+            let df = 1e-3;
+            let mut acc = 0.0;
+            let mut f = -200.0;
+            while f < 200.0 {
+                acc += k.spectrum(f).unwrap() * df;
+                f += df;
+            }
+            assert!(
+                (acc - k.variance()).abs() < 2e-2 * k.variance(),
+                "{}: ∫S = {acc}, k(0) = {}",
+                k.name(),
+                k.variance()
+            );
+        }
+    }
+
+    #[test]
+    fn rbf_spectrum_integrates_to_variance() {
+        let k = Rbf::new(1.0, 1.0);
+        let df = 1e-3;
+        let mut acc = 0.0;
+        let mut f = -10.0;
+        while f < 10.0 {
+            acc += k.spectrum(f).unwrap() * df;
+            f += df;
+        }
+        assert!((acc - 1.0).abs() < 1e-3, "∫S = {acc}");
+    }
+
+    #[test]
+    fn parse_kernel_specs() {
+        let k = parse_kernel("matern32(rho=2.5, amp=0.5)").unwrap();
+        assert_eq!(k.name(), "matern32");
+        assert!((k.lengthscale() - 2.5).abs() < 1e-15);
+        assert!((k.variance() - 0.25).abs() < 1e-15);
+
+        assert!(parse_kernel("matern32").is_ok());
+        assert!(parse_kernel("rbf(rho=1)").is_ok());
+        assert!(parse_kernel("nope(rho=1)").is_err());
+        assert!(parse_kernel("matern32(rho=-1)").is_err());
+        assert!(parse_kernel("matern32(bogus=1)").is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Sparse local interpolation (the `W` of KISS-GP, paper Eqs. 1 & 15).
+//!
+//! KISS-GP maps a regular grid of inducing points to the modeled points
+//! with a sparse interpolation matrix `W` (Wilson & Nickisch 2015). We
+//! implement linear interpolation: each modeled point touches exactly two
+//! neighbouring inducing points. `W` is stored as per-row (index, weight)
+//! pairs, so `W·v` and `Wᵀ·v` are O(N).
+
+/// Regular inducing grid `u_j = u0 + j·spacing`, `j = 0 … m−1`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InducingGrid {
+    pub u0: f64,
+    pub spacing: f64,
+    pub m: usize,
+}
+
+impl InducingGrid {
+    /// Grid of `m` points covering `[lo, hi]` (inclusive).
+    pub fn covering(lo: f64, hi: f64, m: usize) -> Self {
+        assert!(m >= 2 && hi > lo, "need m ≥ 2 and hi > lo");
+        InducingGrid { u0: lo, spacing: (hi - lo) / (m - 1) as f64, m }
+    }
+
+    pub fn position(&self, j: usize) -> f64 {
+        self.u0 + j as f64 * self.spacing
+    }
+}
+
+/// Sparse linear-interpolation matrix `W` (N × M, two nonzeros per row).
+#[derive(Debug, Clone)]
+pub struct SparseInterp {
+    /// Left inducing index per modeled point.
+    pub idx: Vec<usize>,
+    /// Weight of the left inducing point (right gets `1 − w`).
+    pub w_left: Vec<f64>,
+    pub n: usize,
+    pub m: usize,
+}
+
+impl SparseInterp {
+    /// Build `W` for modeled points `x` on the inducing grid. Points are
+    /// clamped to the grid's span (KISS-GP assumes the grid covers them).
+    pub fn linear(points: &[f64], grid: &InducingGrid) -> SparseInterp {
+        let n = points.len();
+        let mut idx = Vec::with_capacity(n);
+        let mut w_left = Vec::with_capacity(n);
+        for &x in points {
+            let t = ((x - grid.u0) / grid.spacing).clamp(0.0, (grid.m - 1) as f64);
+            let j = (t.floor() as usize).min(grid.m - 2);
+            let frac = t - j as f64;
+            idx.push(j);
+            w_left.push(1.0 - frac);
+        }
+        SparseInterp { idx, w_left, n, m: grid.m }
+    }
+
+    /// `y = W·v` (M → N).
+    pub fn apply(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let j = self.idx[i];
+            let wl = self.w_left[i];
+            y[i] = wl * v[j] + (1.0 - wl) * v[j + 1];
+        }
+        y
+    }
+
+    /// `y = Wᵀ·v` (N → M).
+    pub fn apply_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let mut y = vec![0.0; self.m];
+        for i in 0..self.n {
+            let j = self.idx[i];
+            let wl = self.w_left[i];
+            y[j] += wl * v[i];
+            y[j + 1] += (1.0 - wl) * v[i];
+        }
+        y
+    }
+
+    /// Number of distinct inducing points touched by any modeled point —
+    /// the quantity behind the paper's §5.2 singularity remark (`K_KISS`
+    /// is singular unless at least `M − N + 1` inducing points are used).
+    pub fn touched_inducing_points(&self) -> usize {
+        let mut touched = vec![false; self.m];
+        for &j in &self.idx {
+            touched[j] = true;
+            touched[j + 1] = true;
+        }
+        touched.iter().filter(|&&t| t).count()
+    }
+
+    /// Dense materialization (tests / Fig. 3 only).
+    pub fn to_dense(&self) -> crate::linalg::Matrix {
+        let mut w = crate::linalg::Matrix::zeros(self.n, self.m);
+        for i in 0..self.n {
+            w[(i, self.idx[i])] = self.w_left[i];
+            w[(i, self.idx[i] + 1)] = 1.0 - self.w_left[i];
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covering_endpoints() {
+        let g = InducingGrid::covering(1.0, 5.0, 5);
+        assert_eq!(g.position(0), 1.0);
+        assert_eq!(g.position(4), 5.0);
+        assert_eq!(g.spacing, 1.0);
+    }
+
+    #[test]
+    fn exact_on_grid_points() {
+        let g = InducingGrid::covering(0.0, 10.0, 11);
+        let pts: Vec<f64> = (0..11).map(|i| i as f64).collect();
+        let w = SparseInterp::linear(&pts, &g);
+        let v: Vec<f64> = (0..11).map(|i| (i as f64).sin()).collect();
+        let y = w.apply(&v);
+        for (a, b) in y.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linear_functions_reproduced_exactly() {
+        let g = InducingGrid::covering(0.0, 4.0, 5);
+        let pts = [0.3, 1.7, 2.5, 3.9];
+        let w = SparseInterp::linear(&pts, &g);
+        let v: Vec<f64> = (0..5).map(|j| 2.0 * j as f64 + 1.0).collect(); // linear in u
+        let y = w.apply(&v);
+        for (i, &x) in pts.iter().enumerate() {
+            assert!((y[i] - (2.0 * x + 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_one() {
+        let g = InducingGrid::covering(-1.0, 1.0, 7);
+        let pts = [-0.99, -0.5, 0.0, 0.33, 0.98];
+        let w = SparseInterp::linear(&pts, &g).to_dense();
+        for i in 0..pts.len() {
+            let s: f64 = w.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_consistent_with_dense() {
+        let g = InducingGrid::covering(0.0, 3.0, 4);
+        let pts = [0.1, 0.4, 1.5, 2.7, 2.9];
+        let w = SparseInterp::linear(&pts, &g);
+        let dense = w.to_dense();
+        let v = [1.0, -2.0, 0.5, 3.0, -1.0];
+        let got = w.apply_t(&v);
+        let want = dense.matvec_t(&v);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range_points() {
+        let g = InducingGrid::covering(0.0, 1.0, 3);
+        let w = SparseInterp::linear(&[-5.0, 5.0], &g);
+        let v = [1.0, 2.0, 3.0];
+        let y = w.apply(&v);
+        assert!((y[0] - 1.0).abs() < 1e-12);
+        assert!((y[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustered_points_touch_few_inducing_points() {
+        // Log-spaced points cluster near the origin of a linear inducing
+        // grid — the geometry behind KISS-GP's rank deficiency (§5.2).
+        let n = 64;
+        let pts: Vec<f64> = (0..n).map(|i| (0.05 * i as f64).exp()).collect();
+        let lo = pts[0];
+        let hi = pts[n - 1];
+        let g = InducingGrid::covering(lo, hi, n);
+        let w = SparseInterp::linear(&pts, &g);
+        assert!(
+            w.touched_inducing_points() < n,
+            "clustered points must leave inducing points untouched"
+        );
+    }
+}

@@ -1,0 +1,292 @@
+//! The KISS-GP kernel representation and forward pass (paper Eqs. 1, 15).
+//!
+//! `K_KISS = W · F · P · Fᵀ · Wᵀ`: sparse interpolation `W` onto a regular
+//! grid of `M` inducing points, whose kernel matrix is (approximately)
+//! circulant and therefore diagonalized by the DFT `F` with spectrum `P`.
+//! Applying it costs O(N + M log M). The paper's timed *forward pass* is
+//! 40 CG iterations for `K⁻¹y` plus a 10-probe × 15-iteration stochastic
+//! Lanczos log-determinant (§5.2).
+
+use anyhow::{ensure, Result};
+
+use crate::fft::{fft_real, ifft_real, next_pow2, Complex};
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+use super::interp::{InducingGrid, SparseInterp};
+use super::solver::{conjugate_gradient, lanczos_logdet};
+
+/// Configuration mirroring the paper's two KISS-GP settings.
+#[derive(Debug, Clone, Copy)]
+pub struct KissGpConfig {
+    /// Number of inducing points M (paper: M = N).
+    pub m: usize,
+    /// Domain padding factor (paper: 0.5 for accuracy runs — Fig. 3;
+    /// 0.0 for the speed runs — Fig. 4).
+    pub padding: f64,
+    /// Diagonal jitter added to make `K_KISS` invertible (paper §5.2:
+    /// "necessary to add some small diagonal correction").
+    pub jitter: f64,
+    /// CG iteration budget for the inverse (paper: 40).
+    pub cg_iters: usize,
+    /// Stochastic log-det probes (paper: 10).
+    pub logdet_probes: usize,
+    /// Lanczos iterations per probe (paper: 15).
+    pub lanczos_iters: usize,
+}
+
+impl KissGpConfig {
+    /// The paper's Fig. 4 (speed) configuration for N modeled points.
+    pub fn paper_speed(n: usize) -> Self {
+        KissGpConfig { m: n, padding: 0.0, jitter: 1e-6, cg_iters: 40, logdet_probes: 10, lanczos_iters: 15 }
+    }
+
+    /// The paper's Fig. 3 (accuracy) configuration.
+    pub fn paper_accuracy(n: usize) -> Self {
+        KissGpConfig { m: n, padding: 0.5, jitter: 0.0, cg_iters: 40, logdet_probes: 10, lanczos_iters: 15 }
+    }
+}
+
+/// A KISS-GP model over fixed modeled points.
+pub struct KissGp {
+    grid: InducingGrid,
+    w: SparseInterp,
+    /// Circulant embedding size (power of two ≥ (1 + padding)·M).
+    n_fft: usize,
+    /// Spectrum of the circulant embedding of `K_UU` (the `P` of Eq. 15).
+    spectrum: Vec<f64>,
+    cfg: KissGpConfig,
+    n: usize,
+}
+
+impl KissGp {
+    /// Build the representation for `points` (positions in the modeled
+    /// domain 𝒟 — KISS-GP has no chart; its inducing grid is regular *in
+    /// the domain*, which is precisely why strongly varying spacings hurt
+    /// it, §5.2).
+    pub fn build(kernel: &dyn Kernel, points: &[f64], cfg: KissGpConfig) -> Result<Self> {
+        ensure!(points.len() >= 2, "need at least two modeled points");
+        ensure!(cfg.m >= 2, "need at least two inducing points");
+        let lo = points.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = points.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        ensure!(hi > lo, "degenerate point set");
+        let grid = InducingGrid::covering(lo, hi, cfg.m);
+        let w = SparseInterp::linear(points, &grid);
+
+        // Circulant embedding of the Toeplitz K_UU, padded per config.
+        let padded = ((cfg.m as f64) * (1.0 + cfg.padding)).ceil() as usize;
+        let n_fft = next_pow2(padded.max(2));
+        let mut col = vec![0.0; n_fft];
+        for (j, cj) in col.iter_mut().enumerate() {
+            let wrap = j.min(n_fft - j);
+            *cj = kernel.eval(wrap as f64 * grid.spacing);
+        }
+        let spectrum: Vec<f64> = fft_real(&col).iter().map(|c| c.re).collect();
+
+        Ok(KissGp { grid, w, n_fft, spectrum, cfg, n: points.len() })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn config(&self) -> &KissGpConfig {
+        &self.cfg
+    }
+
+    pub fn inducing_grid(&self) -> &InducingGrid {
+        &self.grid
+    }
+
+    /// Number of inducing points actually interpolated to — §5.2's rank
+    /// condition diagnostic.
+    pub fn touched_inducing_points(&self) -> usize {
+        self.w.touched_inducing_points()
+    }
+
+    /// Apply `K_UU` (via its circulant embedding) to an M-vector.
+    fn apply_kuu(&self, v: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(v.len(), self.cfg.m);
+        let mut padded = vec![0.0; self.n_fft];
+        padded[..self.cfg.m].copy_from_slice(v);
+        let mut spec = fft_real(&padded);
+        for (s, lam) in spec.iter_mut().zip(&self.spectrum) {
+            *s = Complex::new(s.re * lam, s.im * lam);
+        }
+        let full = ifft_real(&spec);
+        full[..self.cfg.m].to_vec()
+    }
+
+    /// Apply the full `K_KISS + jitter·I` to an N-vector in
+    /// O(N + M log M) — the baseline's MVM primitive.
+    pub fn apply_k(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let wt = self.w.apply_t(v);
+        let kw = self.apply_kuu(&wt);
+        let mut y = self.w.apply(&kw);
+        if self.cfg.jitter > 0.0 {
+            for (yi, vi) in y.iter_mut().zip(v) {
+                *yi += self.cfg.jitter * vi;
+            }
+        }
+        y
+    }
+
+    /// The paper's timed KISS-GP *forward pass*: `K⁻¹·y` with the fixed
+    /// CG budget plus the stochastic log-determinant. Returns
+    /// `(solution, logdet_estimate, cg_residual)`.
+    pub fn forward(&self, y: &[f64], rng: &mut Rng) -> (Vec<f64>, f64, f64) {
+        let (x, res) = conjugate_gradient(|v| self.apply_k(v), y, self.cfg.cg_iters, 0.0);
+        let logdet = lanczos_logdet(
+            |v| self.apply_k(v),
+            self.n,
+            self.cfg.logdet_probes,
+            self.cfg.lanczos_iters,
+            rng,
+        );
+        (x, logdet, res)
+    }
+
+    /// Materialize `K_KISS` densely (Fig. 3 / rank probe only; O(N²logN)).
+    pub fn covariance_matrix(&self) -> Matrix {
+        let n = self.n;
+        let mut k = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.apply_k(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                k[(i, j)] = col[i];
+            }
+        }
+        k.symmetrize();
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{covariance_errors, kernel_matrix, rank_probe};
+    use crate::kernels::Matern;
+
+    fn uniform_points(n: usize) -> Vec<f64> {
+        (0..n).map(|i| i as f64 * 0.35).collect()
+    }
+
+    fn log_points(n: usize) -> Vec<f64> {
+        // nn spacing from 2%·ρ to ρ with ρ = 1 (the §5 geometry).
+        let beta = (1.0_f64 / 0.02).ln() / (n as f64 - 2.0);
+        let alpha = (0.02 / (beta.exp() - 1.0)).ln();
+        (0..n).map(|i| (alpha + beta * i as f64).exp()).collect()
+    }
+
+    #[test]
+    fn apply_matches_dense_with_full_padding() {
+        // With padding ≥ 1.0 the circulant embedding reproduces the true
+        // Toeplitz K_UU exactly, so apply_k must equal dense W·K_UU·Wᵀ.
+        let kern = Matern::nu32(1.0, 1.0);
+        let pts = uniform_points(24);
+        let cfg = KissGpConfig { m: 24, padding: 1.0, jitter: 0.0, cg_iters: 40, logdet_probes: 10, lanczos_iters: 15 };
+        let model = KissGp::build(&kern, &pts, cfg).unwrap();
+        let wd = model.w.to_dense();
+        let grid_pts: Vec<f64> = (0..24).map(|j| model.grid.position(j)).collect();
+        let kuu = kernel_matrix(&kern, &grid_pts);
+        let dense = wd.matmul(&kuu).matmul_nt(&wd);
+        let mut rng = Rng::new(3);
+        let v = rng.standard_normal_vec(24);
+        let fast = model.apply_k(&v);
+        let want = dense.matvec(&v);
+        for (a, b) in fast.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn covariance_accurate_on_evenly_spaced_points() {
+        // §5.2: "errors decrease if points are spaced more similarly to
+        // the evenly spaced inducing points".
+        let kern = Matern::nu32(2.0, 1.0);
+        let pts = uniform_points(32);
+        let model = KissGp::build(&kern, &pts, KissGpConfig::paper_accuracy(32)).unwrap();
+        let approx = model.covariance_matrix();
+        let truth = kernel_matrix(&kern, &pts);
+        let errs = covariance_errors(&approx, &truth);
+        assert!(errs.mae < 5e-3, "MAE {}", errs.mae);
+    }
+
+    #[test]
+    fn covariance_degrades_on_log_spaced_points() {
+        // §5.2: errors "significantly increase for spacings varying over
+        // several orders of magnitude".
+        let kern = Matern::nu32(1.0, 1.0);
+        let even = {
+            let pts = uniform_points(48);
+            let m = KissGp::build(&kern, &pts, KissGpConfig::paper_accuracy(48)).unwrap();
+            covariance_errors(&m.covariance_matrix(), &kernel_matrix(&kern, &pts)).mae
+        };
+        let logspc = {
+            let pts = log_points(48);
+            let m = KissGp::build(&kern, &pts, KissGpConfig::paper_accuracy(48)).unwrap();
+            covariance_errors(&m.covariance_matrix(), &kernel_matrix(&kern, &pts)).mae
+        };
+        assert!(logspc > even, "log-spaced MAE {logspc} should exceed even MAE {even}");
+    }
+
+    #[test]
+    fn kiss_covariance_is_rank_deficient_on_clustered_points() {
+        // §5.2: K_KISS is generally singular for strongly varying spacings
+        // even with M = N; K_ICR never is (tested in icr::engine).
+        let kern = Matern::nu32(1.0, 1.0);
+        let pts = log_points(40);
+        let cfg = KissGpConfig { jitter: 0.0, ..KissGpConfig::paper_accuracy(40) };
+        let model = KissGp::build(&kern, &pts, cfg).unwrap();
+        assert!(model.touched_inducing_points() < 40);
+        let probe = rank_probe(&model.covariance_matrix());
+        assert!(probe.rank < 40, "rank {} should be deficient", probe.rank);
+        assert!(!probe.cholesky_ok);
+    }
+
+    #[test]
+    fn jitter_restores_invertibility() {
+        let kern = Matern::nu32(1.0, 1.0);
+        let pts = log_points(40);
+        let model = KissGp::build(&kern, &pts, KissGpConfig::paper_speed(40)).unwrap();
+        let probe = rank_probe(&model.covariance_matrix());
+        assert!(probe.cholesky_ok, "jittered K_KISS must be PD (λ_min = {})", probe.lambda_min);
+    }
+
+    #[test]
+    fn forward_pass_solves_and_estimates_logdet() {
+        let kern = Matern::nu32(1.0, 1.0);
+        let pts = uniform_points(64);
+        let cfg = KissGpConfig { jitter: 1e-3, ..KissGpConfig::paper_speed(64) };
+        let model = KissGp::build(&kern, &pts, cfg).unwrap();
+        let mut rng = Rng::new(7);
+        let y = rng.standard_normal_vec(64);
+        let (x, logdet, _res) = model.forward(&y, &mut rng);
+        // CG(40) result must approximately satisfy K·x = y.
+        let kx = model.apply_k(&x);
+        let err: f64 = kx.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        let y_norm: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(err < 0.05 * y_norm, "CG residual too large: {err} vs ‖y‖ = {y_norm}");
+        // Log-det estimate should be close to the dense value.
+        let dense = model.covariance_matrix();
+        let exact = crate::linalg::Cholesky::new(&dense).unwrap().logdet();
+        assert!((logdet - exact).abs() / exact.abs() < 0.15, "SLQ {logdet} vs exact {exact}");
+    }
+
+    #[test]
+    fn mvm_cost_scales_quasilinearly() {
+        // Structural check: n_fft stays within 4× of M (padding 0 →
+        // next_pow2(M)), so each MVM is O(M log M), not O(M²).
+        for &n in &[64usize, 256, 1024] {
+            let kern = Matern::nu32(1.0, 1.0);
+            let pts = uniform_points(n);
+            let model = KissGp::build(&kern, &pts, KissGpConfig::paper_speed(n)).unwrap();
+            assert!(model.n_fft <= 2 * n, "n_fft {} too large for M = {n}", model.n_fft);
+        }
+    }
+}

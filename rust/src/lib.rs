@@ -1,0 +1,42 @@
+//! # ICR — Sparse Kernel Gaussian Processes through Iterative Charted Refinement
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via XLA/PJRT) reproduction of
+//! Edenhofer et al., *"Sparse Kernel Gaussian Processes through Iterative
+//! Charted Refinement (ICR)"* (2022).
+//!
+//! ICR models a Gaussian process **generatively**: instead of inverting the
+//! kernel matrix and computing its log-determinant, the latent field is
+//! written as `s(ξ) = √K_ICR · ξ` with standard-normal excitations ξ, and
+//! `√K_ICR` is applied in **O(N)** by iteratively refining a coarse grid
+//! view of the process to finer resolutions through a user-provided
+//! coordinate chart.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L1/L2** live in `python/compile/` (Pallas refinement kernels + JAX
+//!   model), AOT-lowered once to HLO-text artifacts.
+//! - **L3** is this crate: the [`coordinator`] serving loop and [`runtime`]
+//!   PJRT executor, plus every substrate the paper's evaluation needs,
+//!   implemented from scratch: [`linalg`], [`fft`], [`rng`], [`kernels`],
+//!   [`chart`], the native [`icr`] engine, the [`kissgp`] baseline,
+//!   [`gp`] exact reference, [`config`]/[`cli`]/[`json`]/[`metrics`]
+//!   infrastructure, the [`bench`] harness and [`experiments`] drivers
+//!   that regenerate every table and figure of the paper.
+
+pub mod bench;
+pub mod chart;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fft;
+pub mod gp;
+pub mod icr;
+pub mod json;
+pub mod kernels;
+pub mod kissgp;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;

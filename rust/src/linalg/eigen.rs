@@ -1,0 +1,186 @@
+//! Symmetric eigensolver (cyclic Jacobi).
+//!
+//! Used by the §5.2 rank probe — the paper contrasts ICR's guaranteed
+//! full-rank `K_ICR = √K·√Kᵀ` with KISS-GP's generally singular
+//! `W·K_UU·Wᵀ`. Jacobi rotations are slow (O(n³) per sweep) but
+//! unconditionally robust and accurate for the N ≈ 200 matrices of the
+//! evaluation, which is exactly what a rank probe needs.
+
+use super::matrix::Matrix;
+
+/// Eigenvalues of a symmetric matrix, ascending.
+pub fn jacobi_eigenvalues(a: &Matrix) -> Vec<f64> {
+    jacobi_eigh(a, false).0
+}
+
+/// Eigendecomposition of a symmetric matrix via cyclic Jacobi sweeps.
+///
+/// Returns `(eigenvalues_ascending, Some(V))` with `A = V·diag(λ)·Vᵀ` when
+/// `want_vectors`, else `(eigenvalues_ascending, None)`. Only the lower
+/// triangle of `a` is trusted; the matrix is symmetrized internally.
+pub fn jacobi_eigh(a: &Matrix, want_vectors: bool) -> (Vec<f64>, Option<Matrix>) {
+    assert!(a.is_square(), "eigh of non-square matrix");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = if want_vectors { Some(Matrix::eye(n)) } else { None };
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm as convergence measure.
+        let mut off = 0.0;
+        for r in 0..n {
+            for c in (r + 1)..n {
+                off += m[(r, c)] * m[(r, c)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Stable rotation computation (Golub & Van Loan §8.4).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ)ᵀ · M · J(p,q,θ).
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                if let Some(vm) = v.as_mut() {
+                    for k in 0..n {
+                        let vkp = vm[(k, p)];
+                        let vkq = vm[(k, q)];
+                        vm[(k, p)] = c * vkp - s * vkq;
+                        vm[(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let evals: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let evecs = v.map(|vm| {
+        let mut sorted = Matrix::zeros(n, n);
+        for (newc, &oldc) in idx.iter().enumerate() {
+            for r in 0..n {
+                sorted[(r, newc)] = vm[(r, oldc)];
+            }
+        }
+        sorted
+    });
+    (evals, evecs)
+}
+
+/// Numerical rank of a symmetric PSD matrix: eigenvalues above
+/// `rel_tol · λ_max` count. This is the Fig. 3 / §5.2 rank probe.
+pub fn symmetric_rank(a: &Matrix, rel_tol: f64) -> usize {
+    let ev = jacobi_eigenvalues(a);
+    let lmax = ev.iter().fold(0.0_f64, |m, &v| m.max(v.abs()));
+    if lmax == 0.0 {
+        return 0;
+    }
+    ev.iter().filter(|&&v| v > rel_tol * lmax).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Cholesky;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0, 0.0], &[0.0, 1.0, 0.0], &[0.0, 0.0, 2.0]]);
+        let ev = jacobi_eigenvalues(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-12);
+        assert!((ev[1] - 2.0).abs() < 1e-12);
+        assert!((ev[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let ev = jacobi_eigenvalues(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-12);
+        assert!((ev[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_from_eigh() {
+        let b = Matrix::from_fn(5, 5, |r, c| ((r * 5 + c) as f64 * 0.17).sin());
+        let mut a = b.matmul_nt(&b);
+        a.symmetrize();
+        let (ev, v) = jacobi_eigh(&a, true);
+        let v = v.unwrap();
+        let mut d = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            d[(i, i)] = ev[i];
+        }
+        let rec = v.matmul(&d).matmul_nt(&v);
+        assert!((&rec - &a).max_abs() < 1e-9, "reconstruction error {:?}", (&rec - &a).max_abs());
+    }
+
+    #[test]
+    fn eigenvector_orthonormality() {
+        let b = Matrix::from_fn(6, 6, |r, c| ((r + 3 * c) as f64 * 0.29).cos());
+        let mut a = b.matmul_nt(&b);
+        a.symmetrize();
+        let (_, v) = jacobi_eigh(&a, true);
+        let v = v.unwrap();
+        let vtv = v.transpose().matmul(&v);
+        assert!((&vtv - &Matrix::eye(6)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let b = Matrix::from_fn(4, 4, |r, c| ((r * 4 + c) as f64 * 0.41).sin());
+        let mut a = b.matmul_nt(&b);
+        for i in 0..4 {
+            a[(i, i)] += 4.0;
+        }
+        let ev = jacobi_eigenvalues(&a);
+        let tr: f64 = ev.iter().sum();
+        assert!((tr - a.trace()).abs() < 1e-9);
+        let logdet_eig: f64 = ev.iter().map(|v| v.ln()).sum();
+        let logdet_chol = Cholesky::new(&a).unwrap().logdet();
+        assert!((logdet_eig - logdet_chol).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rank_probe_detects_singularity() {
+        // Rank-2 matrix of size 4.
+        let b = Matrix::from_fn(4, 2, |r, c| ((r * 2 + c) as f64 + 1.0).sqrt());
+        let a = b.matmul_nt(&b);
+        assert_eq!(symmetric_rank(&a, 1e-10), 2);
+        // Full-rank SPD.
+        let mut full = a.clone();
+        for i in 0..4 {
+            full[(i, i)] += 1.0;
+        }
+        assert_eq!(symmetric_rank(&full, 1e-10), 4);
+    }
+}

@@ -1,0 +1,112 @@
+//! Triangular solves.
+
+use super::matrix::Matrix;
+
+/// Solve `L·y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert!(l.is_square() && b.len() == n, "solve_lower shape mismatch");
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let mut acc = b[i];
+        for j in 0..i {
+            acc -= row[j] * y[j];
+        }
+        y[i] = acc / row[i];
+    }
+    y
+}
+
+/// Solve `Lᵀ·x = b` for lower-triangular `L` (back substitution on the
+/// transpose, without materializing it).
+pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert!(l.is_square() && b.len() == n, "solve_lower_transpose shape mismatch");
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for j in (i + 1)..n {
+            acc -= l[(j, i)] * x[j];
+        }
+        x[i] = acc / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `U·x = b` for upper-triangular `U` (back substitution).
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert!(u.is_square() && b.len() == n, "solve_upper shape mismatch");
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let row = u.row(i);
+        let mut acc = b[i];
+        for j in (i + 1)..n {
+            acc -= row[j] * x[j];
+        }
+        x[i] = acc / row[i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lower(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |r, c| {
+            if c > r {
+                0.0
+            } else if c == r {
+                2.0 + r as f64
+            } else {
+                ((r + 2 * c) as f64 * 0.31).cos()
+            }
+        })
+    }
+
+    #[test]
+    fn forward_substitution() {
+        let l = lower(6);
+        let x_true: Vec<f64> = (0..6).map(|i| (i as f64) - 2.5).collect();
+        let b = l.matvec(&x_true);
+        let x = solve_lower(&l, &b);
+        for (a, t) in x.iter().zip(&x_true) {
+            assert!((a - t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_back_substitution() {
+        let l = lower(6);
+        let x_true: Vec<f64> = (0..6).map(|i| ((i * i) as f64).sin()).collect();
+        let b = l.transpose().matvec(&x_true);
+        let x = solve_lower_transpose(&l, &b);
+        for (a, t) in x.iter().zip(&x_true) {
+            assert!((a - t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn upper_back_substitution() {
+        let u = lower(5).transpose();
+        let x_true = vec![1.0, 2.0, -1.0, 0.5, 3.0];
+        let b = u.matvec(&x_true);
+        let x = solve_upper(&u, &b);
+        for (a, t) in x.iter().zip(&x_true) {
+            assert!((a - t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solve_upper_equals_solve_lower_transpose() {
+        let l = lower(4);
+        let b = vec![1.0, -1.0, 2.0, 0.0];
+        let via_t = solve_lower_transpose(&l, &b);
+        let via_u = solve_upper(&l.transpose(), &b);
+        for (a, t) in via_t.iter().zip(&via_u) {
+            assert!((a - t).abs() < 1e-13);
+        }
+    }
+}

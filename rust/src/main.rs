@@ -1,0 +1,332 @@
+//! `icr` — leader binary: CLI over the coordinator, engines, experiment
+//! drivers and artifact tooling.
+//!
+//! After `make artifacts` (Python, once) everything here is pure Rust:
+//! the binary loads AOT-compiled HLO artifacts via PJRT or runs the
+//! native engine, with no Python on any request path.
+
+use std::io::{BufRead, Write};
+
+use anyhow::{bail, Context, Result};
+
+use icr::cli::{render_help, Args, FlagSpec};
+use icr::config::{Backend, ServerConfig};
+use icr::coordinator::{Coordinator, Request, Response};
+use icr::json::{self, Value};
+use icr::rng::Rng;
+use icr::runtime::PjrtRuntime;
+
+const SWITCHES: &[&str] = &["help", "dump-config", "dump-matrices", "rank-probe", "verbose"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, SWITCHES).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cmd: Vec<&str> = args.command.iter().map(String::as_str).collect();
+    match cmd.as_slice() {
+        [] | ["help"] => {
+            print_help();
+            Ok(())
+        }
+        ["sample"] => cmd_sample(&args),
+        ["serve"] => cmd_serve(&args),
+        ["infer"] => cmd_infer(&args),
+        ["artifacts-check"] => cmd_artifacts_check(&args),
+        ["experiment", "kl-table"] => {
+            let n = args.get_usize("n", icr::experiments::paper::TARGET_N)?;
+            icr::experiments::kl_table::run_and_report(n)?;
+            Ok(())
+        }
+        ["experiment", "fig3"] => {
+            let n = args.get_usize("n", icr::experiments::paper::TARGET_N)?;
+            icr::experiments::fig3::run_and_report(n, args.has_switch("dump-matrices"))?;
+            Ok(())
+        }
+        ["experiment", "fig4"] => cmd_fig4(&args),
+        other => bail!("unknown command {:?} — run `icr help`", other.join(" ")),
+    }
+}
+
+fn print_help() {
+    let subcommands = [
+        ("sample", "draw GP samples via the coordinator"),
+        ("serve", "JSONL request loop on stdin/stdout (the serving mode)"),
+        ("infer", "posterior inference on synthetic observations"),
+        ("experiment kl-table", "§5.1 refinement-parameter selection table"),
+        ("experiment fig3", "Fig. 3 covariance accuracy + §5.2 rank probe"),
+        ("experiment fig4", "Fig. 4 forward-pass timing sweep"),
+        ("artifacts-check", "compile + self-check every AOT artifact"),
+    ];
+    let flags = [
+        FlagSpec { name: "backend", help: "native | pjrt", default: Some("native"), is_switch: false },
+        FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
+        FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
+        FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
+        FlagSpec { name: "lvl", help: "refinement levels", default: Some("5"), is_switch: false },
+        FlagSpec { name: "kernel", help: "e.g. matern32(rho=1.0, amp=1.0)", default: None, is_switch: false },
+        FlagSpec { name: "chart", help: "paper_log | identity | log(...) | power(...)", default: None, is_switch: false },
+        FlagSpec { name: "config", help: "JSON config file", default: None, is_switch: false },
+        FlagSpec { name: "workers", help: "coordinator worker threads", default: Some("2"), is_switch: false },
+        FlagSpec { name: "max-batch", help: "max applies per batch", default: Some("8"), is_switch: false },
+        FlagSpec { name: "seed", help: "RNG seed", default: None, is_switch: false },
+        FlagSpec { name: "count", help: "samples to draw", default: Some("1"), is_switch: false },
+        FlagSpec { name: "sizes", help: "comma-separated N sweep (fig4)", default: None, is_switch: false },
+        FlagSpec { name: "samples", help: "timing samples per point (fig4)", default: Some("9"), is_switch: false },
+        FlagSpec { name: "artifacts", help: "artifact directory", default: Some("artifacts"), is_switch: false },
+        FlagSpec { name: "out", help: "output CSV path", default: None, is_switch: false },
+        FlagSpec { name: "steps", help: "optimizer steps (infer)", default: Some("300"), is_switch: false },
+        FlagSpec { name: "lr", help: "Adam learning rate (infer)", default: Some("0.1"), is_switch: false },
+        FlagSpec { name: "sigma", help: "noise std (infer)", default: Some("0.05"), is_switch: false },
+        FlagSpec { name: "dump-matrices", help: "fig3: write full covariance CSVs", default: None, is_switch: true },
+        FlagSpec { name: "dump-config", help: "print resolved config and exit", default: None, is_switch: true },
+    ];
+    print!("{}", render_help("icr", "Iterative Charted Refinement GP engine", &subcommands, &flags));
+}
+
+fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
+    let cfg = ServerConfig::resolve(args)?;
+    if args.has_switch("dump-config") {
+        println!("{}", cfg.to_json().to_json_pretty());
+        std::process::exit(0);
+    }
+    let coord = Coordinator::start(cfg.clone())?;
+    Ok((cfg, coord))
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let (cfg, coord) = make_coordinator(args)?;
+    let count = args.get_usize("count", 1)?;
+    eprintln!(
+        "engine: {} (N = {}, dof = {})",
+        coord.engine().name(),
+        coord.engine().n_points(),
+        coord.engine().total_dof()
+    );
+    let resp = coord.call(Request::Sample { count, seed: cfg.seed })?;
+    let samples = match resp {
+        Response::Samples(s) => s,
+        other => bail!("unexpected response {other:?}"),
+    };
+    let points = coord.engine().domain_points();
+    match args.get("out") {
+        Some(path) => {
+            let mut f = std::fs::File::create(path)?;
+            write!(f, "x")?;
+            for i in 0..count {
+                write!(f, ",sample{i}")?;
+            }
+            writeln!(f)?;
+            for (i, x) in points.iter().enumerate() {
+                write!(f, "{x:.9e}")?;
+                for s in &samples {
+                    write!(f, ",{:.9e}", s[i])?;
+                }
+                writeln!(f)?;
+            }
+            eprintln!("wrote {count} sample(s) → {path}");
+        }
+        None => {
+            for (k, s) in samples.iter().enumerate() {
+                let mean = s.iter().sum::<f64>() / s.len() as f64;
+                let var = s.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / s.len() as f64;
+                println!(
+                    "sample {k}: N = {}, mean = {mean:.4}, var = {var:.4}, head = {:?}",
+                    s.len(),
+                    &s[..s.len().min(4)]
+                );
+            }
+        }
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// JSONL serving loop: one request object per stdin line, one response
+/// object per stdout line. EOF drains and shuts down.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (cfg, coord) = make_coordinator(args)?;
+    eprintln!(
+        "icr serve: engine {} | workers {} | max_batch {} | reading JSONL from stdin",
+        coord.engine().name(),
+        cfg.workers,
+        cfg.max_batch
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut pending = Vec::new();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok(req) => {
+                let (id, rx) = coord.submit(req);
+                pending.push((id, rx));
+            }
+            Err(e) => {
+                let mut out = stdout.lock();
+                writeln!(out, "{}", json::obj(vec![("error", json::s(&format!("{e:#}")))]).to_json())?;
+            }
+        }
+    }
+    for (id, rx) in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("reply channel closed"))?;
+        let mut out = stdout.lock();
+        writeln!(out, "{}", render_response(id, resp).to_json())?;
+    }
+    eprintln!("{}", coord.metrics().render());
+    coord.shutdown();
+    Ok(())
+}
+
+fn parse_request(line: &str) -> Result<Request> {
+    let v = Value::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let op = v.get("op").and_then(Value::as_str).context("request needs op")?;
+    match op {
+        "sample" => Ok(Request::Sample {
+            count: v.get("count").and_then(Value::as_usize).unwrap_or(1),
+            seed: v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+        }),
+        "apply_sqrt" => {
+            let xi = v
+                .get("xi")
+                .and_then(Value::as_array)
+                .context("apply_sqrt needs xi")?
+                .iter()
+                .filter_map(Value::as_f64)
+                .collect();
+            Ok(Request::ApplySqrt { xi })
+        }
+        "infer" => {
+            let y = v
+                .get("y_obs")
+                .and_then(Value::as_array)
+                .context("infer needs y_obs")?
+                .iter()
+                .filter_map(Value::as_f64)
+                .collect();
+            Ok(Request::Infer {
+                y_obs: y,
+                sigma_n: v.get("sigma").and_then(Value::as_f64).unwrap_or(0.1),
+                steps: v.get("steps").and_then(Value::as_usize).unwrap_or(100),
+                lr: v.get("lr").and_then(Value::as_f64).unwrap_or(0.1),
+            })
+        }
+        "stats" => Ok(Request::Stats),
+        other => bail!("unknown op {other:?}"),
+    }
+}
+
+fn render_response(id: u64, resp: Result<Response>) -> Value {
+    let mut fields = vec![("id", json::num(id as f64))];
+    match resp {
+        Err(e) => fields.push(("error", json::s(&format!("{e:#}")))),
+        Ok(Response::Samples(s)) => {
+            fields.push((
+                "samples",
+                json::arr(
+                    s.into_iter()
+                        .map(|v| json::arr(v.into_iter().map(json::num).collect()))
+                        .collect(),
+                ),
+            ));
+        }
+        Ok(Response::Field(f)) => {
+            fields.push(("field", json::arr(f.into_iter().map(json::num).collect())));
+        }
+        Ok(Response::Inference { field, trace }) => {
+            fields.push(("field", json::arr(field.into_iter().map(json::num).collect())));
+            fields.push(("losses", json::arr(trace.losses.into_iter().map(json::num).collect())));
+            fields.push(("wall_s", json::num(trace.wall_s)));
+        }
+        Ok(Response::Stats(text)) => fields.push(("stats", json::s(&text))),
+    }
+    json::obj(fields)
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let (cfg, coord) = make_coordinator(args)?;
+    let steps = args.get_usize("steps", 300)?;
+    let lr = args.get_f64("lr", 0.1)?;
+    let sigma = args.get_f64("sigma", 0.05)?;
+
+    // Synthetic ground truth drawn from the model itself.
+    let engine = coord.engine();
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let xi_true = rng.standard_normal_vec(engine.total_dof());
+    let truth = engine.apply_sqrt_batch(std::slice::from_ref(&xi_true))?.remove(0);
+    let obs = engine.obs_indices();
+    let y_obs: Vec<f64> = obs.iter().map(|&i| truth[i] + sigma * rng.standard_normal()).collect();
+
+    eprintln!(
+        "infer: engine {} | {} observations of {} points | σ = {sigma}",
+        engine.name(),
+        obs.len(),
+        engine.n_points()
+    );
+    let resp = coord.call(Request::Infer { y_obs, sigma_n: sigma, steps, lr })?;
+    match resp {
+        Response::Inference { field, trace } => {
+            let rmse = {
+                let se: f64 =
+                    field.iter().zip(&truth).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+                (se / field.len() as f64).sqrt()
+            };
+            println!("loss curve: {}", trace.summary(steps / 10));
+            println!(
+                "loss {:.4e} → {:.4e} ({}× reduction) in {:.2}s; reconstruction RMSE = {rmse:.4}",
+                trace.losses[0],
+                trace.losses[trace.losses.len() - 1],
+                (trace.losses[0] / trace.losses[trace.losses.len() - 1]) as u64,
+                trace.wall_s
+            );
+        }
+        other => bail!("unexpected response {other:?}"),
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = PjrtRuntime::new(&dir)?;
+    println!(
+        "platform {} | manifest: {} artifacts in {}",
+        rt.platform(),
+        rt.manifest().len(),
+        dir.display()
+    );
+    let checked = rt.check_all()?;
+    for name in &checked {
+        println!("  self-check OK: {name}");
+    }
+    println!("compiled {} executables, {} validated", rt.cached_count(), checked.len());
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let backend = Backend::parse(args.get_or("backend", "native"))?;
+    let samples = args.get_usize("samples", 9)?;
+    match backend {
+        Backend::Native => {
+            let sizes = args.get_usize_list(
+                "sizes",
+                &[128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536],
+            )?;
+            let rows = icr::experiments::fig4::run_native(&sizes, samples)?;
+            icr::experiments::fig4::report("native", &rows)
+        }
+        Backend::Pjrt => {
+            let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let rows = icr::experiments::fig4::run_pjrt(&dir, samples)?;
+            icr::experiments::fig4::report("pjrt", &rows)
+        }
+    }
+}

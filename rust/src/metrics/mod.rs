@@ -1,0 +1,225 @@
+//! Metrics substrate: counters, gauges and timing histograms.
+//!
+//! The coordinator exposes per-request latencies, batch occupancy and
+//! engine throughput through a registry that renders to a Prometheus-like
+//! text format (`icr serve` prints it on shutdown and on SIGUSR-style
+//! `stats` requests).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bit-cast f64).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-scaled latency histogram (nanoseconds → ~2x buckets) plus exact
+/// count/sum so mean latency is exact.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+const N_BUCKETS: usize = 40; // 2^40 ns ≈ 18 min — plenty
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_ns(&self, ns: u64) {
+        let b = (64 - ns.max(1).leading_zeros() as usize - 1).min(N_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn observe(&self, since: Instant) {
+        self.observe_ns(since.elapsed().as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Named-metric registry shared across coordinator threads.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Text exposition (stable ordering for tests and diffing).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {}\n", g.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "histogram {name} count={} mean_us={:.1} p50_us={:.1} p99_us={:.1}\n",
+                h.count(),
+                h.mean_ns() / 1e3,
+                h.quantile_ns(0.5) / 1e3,
+                h.quantile_ns(0.99) / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_across_clones() {
+        let r = Registry::new();
+        let c1 = r.counter("requests");
+        let r2 = r.clone();
+        let c2 = r2.counter("requests");
+        c1.inc();
+        c2.add(4);
+        assert_eq!(r.counter("requests").get(), 5);
+    }
+
+    #[test]
+    fn gauges_store_latest() {
+        let r = Registry::new();
+        r.gauge("batch_occupancy").set(0.75);
+        assert!((r.gauge("batch_occupancy").get() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_statistics() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 1_000_000] {
+            h.observe_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        let mean = h.mean_ns();
+        assert!((mean - 200_300.0).abs() < 1.0, "{mean}");
+        // p50 should land near the small observations, p99 near the outlier.
+        assert!(h.quantile_ns(0.5) <= 1024.0);
+        assert!(h.quantile_ns(0.99) >= 1_000_000.0 / 2.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_observations() {
+        let h = Arc::new(Histogram::default());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.observe_ns(100 + (t * 1000 + i) as u64);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn render_contains_all_metric_kinds() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(1.5);
+        r.histogram("c").observe_ns(1000);
+        let text = r.render();
+        assert!(text.contains("counter a 1"));
+        assert!(text.contains("gauge b 1.5"));
+        assert!(text.contains("histogram c count=1"));
+    }
+}

@@ -1,0 +1,158 @@
+//! First-order optimizers for the standardized-VI objective (paper Eq. 3).
+//!
+//! The end-to-end regression driver minimizes
+//! `½‖(y − A·√K_ICR·ξ)/σ‖² + ½‖ξ‖²` over the excitations ξ. Gradients come
+//! either from the AOT'd `icr_loss_grad` artifact (PJRT lane) or from the
+//! native engine's hand-derived adjoint; the optimizer itself is backend
+//! agnostic — it just consumes `(loss, grad)` pairs.
+
+/// Adam (Kingma & Ba 2015) on a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+    }
+
+    /// One update step: `params ← params − lr·m̂/(√v̂ + ε)`.
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            params[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+/// Plain gradient descent with optional momentum (ablation baseline).
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, lr: f64, momentum: f64) -> Self {
+        Sgd { lr, momentum, velocity: vec![0.0; dim] }
+    }
+
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        for i in 0..params.len() {
+            self.velocity[i] = self.momentum * self.velocity[i] - self.lr * grad[i];
+            params[i] += self.velocity[i];
+        }
+    }
+}
+
+/// Optimization trace: per-step losses plus wall time, recorded by the
+/// end-to-end driver into EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub losses: Vec<f64>,
+    pub wall_s: f64,
+}
+
+impl Trace {
+    pub fn improvement(&self) -> f64 {
+        match (self.losses.first(), self.losses.last()) {
+            (Some(a), Some(b)) if *a != 0.0 => b / a,
+            _ => f64::NAN,
+        }
+    }
+
+    /// Render a compact loss curve (every `every`-th step) for logs.
+    pub fn summary(&self, every: usize) -> String {
+        let pts: Vec<String> = self
+            .losses
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % every.max(1) == 0 || *i == self.losses.len() - 1)
+            .map(|(i, l)| format!("{i}:{l:.4e}"))
+            .collect();
+        pts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic bowl: f(x) = ½‖x − c‖².
+    fn quad_grad(x: &[f64], c: &[f64]) -> (f64, Vec<f64>) {
+        let loss: f64 = x.iter().zip(c).map(|(a, b)| 0.5 * (a - b) * (a - b)).sum();
+        let grad: Vec<f64> = x.iter().zip(c).map(|(a, b)| a - b).collect();
+        (loss, grad)
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let c = vec![1.0, -2.0, 3.0, 0.5];
+        let mut x = vec![0.0; 4];
+        let mut opt = Adam::new(4, 0.1);
+        for _ in 0..500 {
+            let (_, g) = quad_grad(&x, &c);
+            opt.step(&mut x, &g);
+        }
+        for (a, b) in x.iter().zip(&c) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert_eq!(opt.steps_taken(), 500);
+    }
+
+    #[test]
+    fn sgd_with_momentum_converges() {
+        let c = vec![2.0, -1.0];
+        let mut x = vec![0.0; 2];
+        let mut opt = Sgd::new(2, 0.05, 0.9);
+        for _ in 0..400 {
+            let (_, g) = quad_grad(&x, &c);
+            opt.step(&mut x, &g);
+        }
+        for (a, b) in x.iter().zip(&c) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn adam_descends_in_aggregate() {
+        let c: Vec<f64> = (0..16).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut x = vec![0.0; 16];
+        let mut opt = Adam::new(16, 0.05);
+        let mut losses = Vec::new();
+        for _ in 0..200 {
+            let (l, g) = quad_grad(&x, &c);
+            losses.push(l);
+            opt.step(&mut x, &g);
+        }
+        assert!(losses[199] < 1e-2 * losses[0]);
+    }
+
+    #[test]
+    fn trace_summary_and_improvement() {
+        let t = Trace { losses: vec![100.0, 10.0, 1.0], wall_s: 0.5 };
+        assert!((t.improvement() - 0.01).abs() < 1e-12);
+        let s = t.summary(1);
+        assert!(s.contains("0:") && s.contains("2:"));
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT executor: compile HLO-text artifacts once, execute from the hot
+//! path with no Python anywhere.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compiled executables are cached by
+//! artifact name; the coordinator shares one [`PjrtRuntime`] across
+//! workers (the `xla` crate's client is internally synchronized).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling (exposed via metrics).
+    pub compile_time_s: f64,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with f64 host buffers, one per manifest input, in order.
+    /// Returns one `Vec<f64>` per manifest output (scalars → length 1).
+    pub fn run_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.spec.inputs) {
+            ensure!(
+                buf.len() == spec.element_count(),
+                "input {:?} of {}: expected {} elements ({:?}), got {}",
+                spec.name,
+                self.spec.name,
+                spec.element_count(),
+                spec.shape,
+                buf.len()
+            );
+            let lit = if spec.shape.is_empty() {
+                xla::Literal::scalar(buf[0])
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the result is always a tuple.
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&self.spec.outputs) {
+            let v = lit.to_vec::<f64>()?;
+            ensure!(
+                v.len() == ospec.element_count().max(1),
+                "output {:?} of {}: expected {} elements, got {}",
+                ospec.name,
+                self.spec.name,
+                ospec.element_count(),
+                v.len()
+            );
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Run the manifest's validation vector (deterministic excitations)
+    /// and verify head + L2 agreement with what Python computed at build
+    /// time. This is the cross-language correctness gate.
+    pub fn self_check(&self) -> Result<()> {
+        let val = self
+            .spec
+            .validation
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact {} has no validation block", self.spec.name))?;
+        let dof = self.spec.inputs[0].element_count();
+        let xi: Vec<f64> = (0..dof).map(|i| (0.37 * i as f64).sin()).collect();
+        let out = &self.run_f64(&[&xi])?[0];
+        for (i, (&got, &want)) in out.iter().zip(&val.out_head).enumerate() {
+            ensure!(
+                (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                "{}: self-check head[{i}] = {got} vs python {want}",
+                self.spec.name
+            );
+        }
+        let l2: f64 = out.iter().map(|v| v * v).sum::<f64>().sqrt();
+        ensure!(
+            (l2 - val.out_l2).abs() <= 1e-8 * (1.0 + val.out_l2),
+            "{}: self-check L2 = {l2} vs python {}",
+            self.spec.name,
+            val.out_l2
+        );
+        Ok(())
+    }
+}
+
+/// The shared PJRT runtime: one CPU client + a compile cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest from `artifact_dir`.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let compiled =
+            Arc::new(Executable { spec, exe, compile_time_s: t0.elapsed().as_secs_f64() });
+        self.cache.lock().unwrap().insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Convenience: load + execute in one call.
+    pub fn execute_f64(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        self.load(name)?.run_f64(inputs)
+    }
+
+    /// Compile every artifact and run every validation vector; returns the
+    /// list of checked names. `icr artifacts-check` exposes this.
+    pub fn check_all(&self) -> Result<Vec<String>> {
+        let names: Vec<String> = self.manifest.names().map(str::to_string).collect();
+        let mut checked = Vec::new();
+        for name in names {
+            let exe = self.load(&name)?;
+            if exe.spec().validation.is_some() {
+                exe.self_check().with_context(|| format!("self-check of {name}"))?;
+                checked.push(name);
+            }
+        }
+        Ok(checked)
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,272 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime (which loads,
+//! compiles and self-checks the artifacts it describes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Value;
+
+/// Shape + dtype of one executable input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v.get("name").and_then(Value::as_str).unwrap_or("").to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in shape")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.get("dtype").and_then(Value::as_str).unwrap_or("f64").to_string();
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Expected output for a deterministic validation excitation — lets the
+/// runtime prove, after compiling, that the artifact computes the same
+/// numbers the Python build did.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub out_head: Vec<f64>,
+    pub out_l2: f64,
+}
+
+/// One AOT-compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Value,
+    pub validation: Option<Validation>,
+}
+
+impl ArtifactSpec {
+    /// Metadata accessor with type coercion.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Value::as_usize)
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Value::as_str)
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta_str("kind").unwrap_or("unknown")
+    }
+}
+
+/// The parsed `artifacts/manifest.json` plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    pub dtype: String,
+    pub lanczos_probes: usize,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = Value::parse(&text).context("parsing manifest.json")?;
+        let version = root.get("version").and_then(Value::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let dtype = root.get("dtype").and_then(Value::as_str).unwrap_or("f64").to_string();
+        let lanczos_probes = root.get("lanczos_probes").and_then(Value::as_usize).unwrap_or(10);
+
+        let mut artifacts = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow!("artifact {name} missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = a.get("meta").cloned().unwrap_or(Value::Null);
+            let validation = a.get("validation").map(|v| -> Result<Validation> {
+                let out_head = v
+                    .get("out_head")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow!("validation missing out_head"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad out_head value")))
+                    .collect::<Result<Vec<_>>>()?;
+                let out_l2 = v
+                    .get("out_l2")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| anyhow!("validation missing out_l2"))?;
+                Ok(Validation { out_head, out_l2 })
+            });
+            let validation = match validation {
+                Some(v) => Some(v?),
+                None => None,
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name, file, inputs, outputs, meta, validation },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), version, dtype, lanczos_probes, artifacts })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} available)", self.len()))
+    }
+
+    /// All artifacts of a given `meta.kind`.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.values().filter(|a| a.kind() == kind).collect()
+    }
+
+    /// Find the batched ICR apply whose batch is the smallest ≥ `batch`
+    /// for the given model size — the router's bucketing rule.
+    pub fn best_icr_batch(&self, n: usize, batch: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind() == "icr" && a.meta_usize("n") == Some(n))
+            .filter(|a| a.meta_usize("batch").unwrap_or(1) >= batch)
+            .min_by_key(|a| a.meta_usize("batch").unwrap_or(1))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1, "dtype": "f64", "lanczos_probes": 10,
+          "artifacts": [
+            {"name": "icr_apply_c5f4_n200", "file": "a.hlo.txt",
+             "inputs": [{"name": "xi", "shape": [425], "dtype": "f64"}],
+             "outputs": [{"name": "s", "shape": [200], "dtype": "f64"}],
+             "meta": {"kind": "icr", "n": 200, "dof": 425, "batch": 1},
+             "validation": {"out_head": [0.1, 0.2], "out_l2": 14.5}},
+            {"name": "icr_apply_batch8", "file": "b.hlo.txt",
+             "inputs": [{"name": "xi", "shape": [8, 425], "dtype": "f64"}],
+             "outputs": [{"name": "s", "shape": [8, 200], "dtype": "f64"}],
+             "meta": {"kind": "icr", "n": 200, "dof": 425, "batch": 8}},
+            {"name": "icr_apply_batch32", "file": "c.hlo.txt",
+             "inputs": [{"name": "xi", "shape": [32, 425], "dtype": "f64"}],
+             "outputs": [{"name": "s", "shape": [32, 200], "dtype": "f64"}],
+             "meta": {"kind": "icr", "n": 200, "dof": 425, "batch": 32}},
+            {"name": "kissgp_forward_n200", "file": "d.hlo.txt",
+             "inputs": [{"name": "y", "shape": [200]}, {"name": "probes", "shape": [10, 200]}],
+             "outputs": [{"name": "x", "shape": [200]}, {"name": "logdet", "shape": []}],
+             "meta": {"kind": "kissgp", "n": 200}}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join(format!("icr_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, sample_manifest());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 4);
+        let a = m.get("icr_apply_c5f4_n200").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![425]);
+        assert_eq!(a.outputs[0].element_count(), 200);
+        assert_eq!(a.kind(), "icr");
+        assert_eq!(a.meta_usize("dof"), Some(425));
+        let v = a.validation.as_ref().unwrap();
+        assert_eq!(v.out_head.len(), 2);
+        assert!(m.get("nonexistent").is_err());
+        assert_eq!(m.by_kind("kissgp").len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_bucketing_picks_smallest_fitting() {
+        let dir = std::env::temp_dir().join(format!("icr_manifest_bucket_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, sample_manifest());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.best_icr_batch(200, 1).unwrap().meta_usize("batch"), Some(1));
+        assert_eq!(m.best_icr_batch(200, 2).unwrap().meta_usize("batch"), Some(8));
+        assert_eq!(m.best_icr_batch(200, 8).unwrap().meta_usize("batch"), Some(8));
+        assert_eq!(m.best_icr_batch(200, 9).unwrap().meta_usize("batch"), Some(32));
+        assert!(m.best_icr_batch(200, 33).is_none());
+        assert!(m.best_icr_batch(999, 1).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

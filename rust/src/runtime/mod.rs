@@ -1,0 +1,21 @@
+//! Runtime: load + execute AOT-compiled XLA artifacts via PJRT.
+//!
+//! `python/compile/aot.py` lowers every model variant to HLO text once
+//! (`make artifacts`); this module compiles those artifacts on the PJRT
+//! CPU client and executes them from the L3 hot path. Python never runs
+//! at request time.
+
+pub mod executor;
+pub mod manifest;
+pub mod service;
+
+pub use executor::{Executable, PjrtRuntime};
+pub use service::PjrtService;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec, Validation};
+
+use std::path::PathBuf;
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("ICR_ARTIFACT_DIR").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,140 @@
+//! Thread-confined PJRT actor.
+//!
+//! The `xla` crate's PJRT wrappers are `Rc`-based and therefore neither
+//! `Send` nor `Sync` — they must live on a single thread. The coordinator,
+//! however, is a multi-threaded worker pool. [`PjrtService`] bridges the
+//! two with the actor pattern: one dedicated thread owns the
+//! [`PjrtRuntime`] (client, compiled executables, cache) and serves
+//! execute/self-check commands over an mpsc channel. The handle is cheap
+//! to clone, `Send + Sync`, and keeps a *plain-data* copy of the manifest
+//! for routing decisions that don't need the runtime.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::executor::PjrtRuntime;
+use super::manifest::Manifest;
+
+enum Command {
+    Execute { name: String, inputs: Vec<Vec<f64>>, reply: mpsc::Sender<Result<Vec<Vec<f64>>>> },
+    SelfCheck { name: String, reply: mpsc::Sender<Result<()>> },
+    Warmup { names: Vec<String>, reply: mpsc::Sender<Result<()>> },
+    Platform { reply: mpsc::Sender<String> },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to a PJRT runtime living on its own
+/// thread.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Arc<Mutex<mpsc::Sender<Command>>>,
+    manifest: Arc<Manifest>,
+}
+
+impl PjrtService {
+    /// Spawn the actor thread; fails fast if the manifest is unreadable or
+    /// the PJRT client cannot be created.
+    pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
+        // Parse the manifest on the caller thread too — it is plain data
+        // and the handle needs it for routing.
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let dir: PathBuf = artifact_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("icr-pjrt".into())
+            .spawn(move || {
+                let runtime = match PjrtRuntime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for cmd in rx {
+                    match cmd {
+                        Command::Execute { name, inputs, reply } => {
+                            let refs: Vec<&[f64]> = inputs.iter().map(Vec::as_slice).collect();
+                            let _ = reply.send(runtime.execute_f64(&name, &refs));
+                        }
+                        Command::SelfCheck { name, reply } => {
+                            let result = runtime
+                                .load(&name)
+                                .and_then(|exe| exe.self_check())
+                                .with_context(|| format!("self-check {name}"));
+                            let _ = reply.send(result);
+                        }
+                        Command::Warmup { names, reply } => {
+                            let mut result = Ok(());
+                            for n in &names {
+                                if let Err(e) = runtime.load(n) {
+                                    result = Err(e).with_context(|| format!("warmup {n}"));
+                                    break;
+                                }
+                            }
+                            let _ = reply.send(result);
+                        }
+                        Command::Platform { reply } => {
+                            let _ = reply.send(runtime.platform());
+                        }
+                        Command::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning PJRT actor thread")?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("PJRT actor died during init"))??;
+        Ok(PjrtService { tx: Arc::new(Mutex::new(tx)), manifest })
+    }
+
+    /// Plain-data manifest for routing (no runtime round-trip).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn send(&self, cmd: Command) {
+        // A disconnected actor shows up as RecvError on the reply side.
+        let _ = self.tx.lock().unwrap().send(cmd);
+    }
+
+    pub fn execute_f64(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Command::Execute {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|s| s.to_vec()).collect(),
+            reply,
+        });
+        rx.recv().map_err(|_| anyhow::anyhow!("PJRT actor gone"))?
+    }
+
+    pub fn self_check(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Command::SelfCheck { name: name.to_string(), reply });
+        rx.recv().map_err(|_| anyhow::anyhow!("PJRT actor gone"))?
+    }
+
+    /// Pre-compile a set of artifacts.
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Command::Warmup { names: names.to_vec(), reply });
+        rx.recv().map_err(|_| anyhow::anyhow!("PJRT actor gone"))?
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Command::Platform { reply });
+        rx.recv().map_err(|_| anyhow::anyhow!("PJRT actor gone"))
+    }
+
+    /// Ask the actor to exit (outstanding commands are processed first).
+    pub fn shutdown(&self) {
+        self.send(Command::Shutdown);
+    }
+}

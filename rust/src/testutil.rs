@@ -1,0 +1,143 @@
+//! Hand-rolled property-testing harness (proptest is unavailable offline).
+//!
+//! [`prop_check`] runs a property over many seeded random cases and, on
+//! failure, retries with the same seed while *shrinking* a size hint so the
+//! reported counterexample is as small as the generator allows. Failures
+//! print the seed — re-running with `PropConfig::with_seed` reproduces them
+//! deterministically.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case derives its own stream).
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x1C50B15 ^ 0x9E3779B97F4A7C15, max_size: 64 }
+    }
+}
+
+impl PropConfig {
+    pub fn with_seed(seed: u64) -> Self {
+        PropConfig { seed, ..Default::default() }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` random inputs produced by `gen(rng, size)`.
+///
+/// `size` ramps up from 1 to `cfg.max_size` over the run (small cases
+/// first — cheap shrinking by construction). On failure the case is
+/// re-generated at smaller sizes with the same per-case stream to find a
+/// minimal failing size, then the test panics with a reproduction line.
+pub fn prop_check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    gen: impl Fn(&mut Rng, usize) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink: same stream, smaller sizes.
+            let mut minimal: Option<(usize, T, String)> = None;
+            for s in 1..size {
+                let mut rng = Rng::new(case_seed);
+                let candidate = gen(&mut rng, s);
+                if let Err(m) = prop(&candidate) {
+                    minimal = Some((s, candidate, m));
+                    break;
+                }
+            }
+            match minimal {
+                Some((s, c, m)) => panic!(
+                    "property {name:?} failed (case {case}, seed {case_seed:#x})\n\
+                     shrunk to size {s}: {m}\ninput: {c:?}"
+                ),
+                None => panic!(
+                    "property {name:?} failed (case {case}, seed {case_seed:#x}, size {size}): \
+                     {msg}\ninput: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        prop_check(
+            "sum-commutes",
+            PropConfig::default().cases(32),
+            |rng, size| (rng.standard_normal_vec(size), rng.standard_normal_vec(size)),
+            |(a, b)| {
+                **counter.borrow_mut() += 1;
+                let ab: f64 = a.iter().zip(b).map(|(x, y)| x + y).sum();
+                let ba: f64 = b.iter().zip(a).map(|(x, y)| x + y).sum();
+                if (ab - ba).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err("sum not commutative".into())
+                }
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        prop_check(
+            "always-fails-on-big",
+            PropConfig::default().cases(16).max_size(8),
+            |rng, size| rng.standard_normal_vec(size),
+            |v| if v.len() < 4 { Ok(()) } else { Err(format!("len {} ≥ 4", v.len())) },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Two identical runs generate identical inputs.
+        let collect = |seed| {
+            let mut all = Vec::new();
+            let sink = std::cell::RefCell::new(&mut all);
+            prop_check(
+                "collect",
+                PropConfig::with_seed(seed).cases(8),
+                |rng, size| rng.standard_normal_vec(size),
+                |v| {
+                    sink.borrow_mut().push(v.clone());
+                    Ok(())
+                },
+            );
+            all
+        };
+        assert_eq!(collect(42), collect(42));
+    }
+}

@@ -1,0 +1,154 @@
+//! End-to-end coordinator tests on the native backend (no artifacts
+//! needed): concurrent clients, mixed workloads, recovery statistics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use icr::config::{ModelConfig, ServerConfig};
+use icr::coordinator::{Coordinator, Request, Response};
+use icr::rng::Rng;
+
+fn small_cfg() -> ServerConfig {
+    ServerConfig {
+        model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() },
+        workers: 3,
+        max_batch: 6,
+        max_wait_us: 150,
+        ..ServerConfig::default()
+    }
+}
+
+#[test]
+fn concurrent_clients_mixed_workload() {
+    let coord = Arc::new(Coordinator::start(small_cfg()).unwrap());
+    let n_obs = coord.engine().obs_indices().len();
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(500 + t);
+            for i in 0..10u64 {
+                match t % 3 {
+                    0 => {
+                        let resp = coord.call(Request::Sample { count: 2, seed: t * 100 + i }).unwrap();
+                        match resp {
+                            Response::Samples(s) => assert_eq!(s.len(), 2),
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                    1 => {
+                        let xi = rng.standard_normal_vec(coord.engine().total_dof());
+                        match coord.call(Request::ApplySqrt { xi }).unwrap() {
+                            Response::Field(f) => {
+                                assert_eq!(f.len(), coord.engine().n_points())
+                            }
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                    _ => {
+                        let y = rng.standard_normal_vec(n_obs);
+                        match coord
+                            .call(Request::Infer { y_obs: y, sigma_n: 0.5, steps: 10, lr: 0.1 })
+                            .unwrap()
+                        {
+                            Response::Inference { trace, .. } => {
+                                assert_eq!(trace.losses.len(), 10)
+                            }
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let submitted = coord.metrics().counter("requests_submitted").get();
+    let completed = coord.metrics().counter("requests_completed").get();
+    assert_eq!(submitted, completed);
+    assert_eq!(submitted, 40);
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
+
+#[test]
+fn inference_recovers_model_generated_truth() {
+    // The headline end-to-end behaviour: data drawn from the model itself
+    // must be recoverable (posterior mean close to truth at observed and,
+    // thanks to the GP prior, at held-out points too).
+    let coord = Coordinator::start(small_cfg()).unwrap();
+    let engine = coord.engine();
+    let mut rng = Rng::new(2027);
+    let xi_true = rng.standard_normal_vec(engine.total_dof());
+    let truth = engine.apply_sqrt_batch(std::slice::from_ref(&xi_true)).unwrap().remove(0);
+    let sigma = 0.05;
+    let obs = engine.obs_indices();
+    let y: Vec<f64> = obs.iter().map(|&i| truth[i] + sigma * rng.standard_normal()).collect();
+
+    let resp = coord
+        .call(Request::Infer { y_obs: y, sigma_n: sigma, steps: 400, lr: 0.1 })
+        .unwrap();
+    match resp {
+        Response::Inference { field, trace } => {
+            assert!(
+                trace.losses.last().unwrap() < &(0.05 * trace.losses[0]),
+                "loss barely moved: {} -> {}",
+                trace.losses[0],
+                trace.losses.last().unwrap()
+            );
+            // RMSE over ALL points (held-out included).
+            let rmse = (field
+                .iter()
+                .zip(&truth)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                / field.len() as f64)
+                .sqrt();
+            let scale = (truth.iter().map(|v| v * v).sum::<f64>() / truth.len() as f64).sqrt();
+            assert!(rmse < 0.35 * scale, "reconstruction RMSE {rmse} vs field scale {scale}");
+        }
+        other => panic!("{other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn batching_actually_happens_under_load() {
+    let mut cfg = small_cfg();
+    cfg.workers = 1; // force queueing
+    cfg.max_wait_us = 2000;
+    let coord = Coordinator::start(cfg).unwrap();
+    let pending: Vec<_> =
+        (0..30).map(|i| coord.submit(Request::Sample { count: 1, seed: i })).collect();
+    for (_, rx) in pending {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    }
+    let applies = coord.metrics().counter("applies_executed").get();
+    assert_eq!(applies, 30);
+    // Mean batch size must exceed 1 — the batcher did coalesce.
+    let h = coord.metrics().histogram("batch_applies");
+    assert!(h.count() < 30, "every request went out in its own batch");
+    coord.shutdown();
+}
+
+#[test]
+fn deterministic_inference_given_seeded_data() {
+    // Two coordinators given identical data must produce identical fields.
+    let run = || {
+        let coord = Coordinator::start(small_cfg()).unwrap();
+        let n_obs = coord.engine().obs_indices().len();
+        let mut rng = Rng::new(31);
+        let y = rng.standard_normal_vec(n_obs);
+        let out = match coord
+            .call(Request::Infer { y_obs: y, sigma_n: 0.2, steps: 50, lr: 0.1 })
+            .unwrap()
+        {
+            Response::Inference { field, .. } => field,
+            other => panic!("{other:?}"),
+        };
+        coord.shutdown();
+        out
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,199 @@
+//! Randomized property sweep over the ICR configuration space: for any
+//! valid `(n_csz, n_fsz, n_lvl, n0)` × kernel × chart combination the
+//! paper's structural guarantees must hold — PSD full-rank implicit
+//! covariance, exact adjoint, linearity, and geometry bookkeeping.
+
+use icr::chart::{Chart, IdentityChart, LogChart, PowerChart};
+use icr::gp::rank_probe;
+use icr::icr::{IcrEngine, RefinementParams};
+use icr::kernels::{Kernel, Matern, Rbf};
+use icr::rng::Rng;
+use icr::testutil::{prop_check, PropConfig};
+
+fn random_engine_with(rng: &mut Rng, size: usize, allow_rbf: bool) -> (IcrEngine, String) {
+    let shapes = [(3usize, 2usize), (3, 4), (5, 2), (5, 4), (5, 6)];
+    let (csz, fsz) = shapes[rng.uniform_usize(shapes.len())];
+    let n_lvl = 1 + rng.uniform_usize(3);
+    let target = (8 + size * 2).min(96);
+    let params = RefinementParams::for_target(csz, fsz, n_lvl, target)
+        .expect("candidate shapes always admit a target");
+    let rho = 0.5 + 4.0 * rng.uniform();
+    let kernel: Box<dyn Kernel> = match rng.uniform_usize(if allow_rbf { 4 } else { 3 }) {
+        0 => Box::new(Matern::nu12(rho, 1.0)),
+        1 => Box::new(Matern::nu32(rho, 1.0)),
+        2 => Box::new(Matern::nu52(rho, 1.0)),
+        _ => Box::new(Rbf::new(rho + 1.0, 1.0)),
+    };
+    let chart: Box<dyn Chart> = match rng.uniform_usize(3) {
+        0 => Box::new(IdentityChart::new(rng.standard_normal(), 0.5 + rng.uniform())),
+        1 => Box::new(LogChart::new(-2.0 * rng.uniform(), 0.01 + 0.04 * rng.uniform())),
+        _ => Box::new(PowerChart::new(1.0, 8.0 + 8.0 * rng.uniform(), 1.0 + rng.uniform())),
+    };
+    let label = format!(
+        "({csz},{fsz})x{n_lvl} n0={} kernel={} chart={}",
+        params.n0,
+        kernel.name(),
+        chart.name()
+    );
+    let engine = IcrEngine::build(kernel.as_ref(), chart.as_ref(), params)
+        .unwrap_or_else(|e| panic!("build failed for {label}: {e:#}"));
+    (engine, label)
+}
+
+fn random_engine(rng: &mut Rng, size: usize) -> (IcrEngine, String) {
+    random_engine_with(rng, size, true)
+}
+
+#[test]
+fn prop_implicit_covariance_full_rank_for_matern() {
+    // The §5.2 full-rank guarantee, numerically: for the decaying Matérn
+    // family (the paper's setting) K_ICR = √K·√Kᵀ must be positive
+    // definite at f64 — witnessed by λ_min > 0 AND a jitter-free Cholesky.
+    // (The strict 1e-10-relative numerical-rank check lives in the Fig. 3
+    // driver at the paper's geometry; under *arbitrary* charts the
+    // smoothest Matérn-5/2 can push λ_min toward 1e-10·λ_max while
+    // remaining PD. RBF-class analytic kernels go beyond even that — see
+    // prop_psd_always_even_for_analytic_kernels.)
+    prop_check(
+        "icr-pd-matern",
+        PropConfig::with_seed(0xF111).cases(10).max_size(24),
+        |rng, size| random_engine_with(rng, size, false),
+        |(engine, label)| {
+            let k = engine.implicit_covariance();
+            let probe = rank_probe(&k);
+            if probe.lambda_min <= 0.0 {
+                return Err(format!("{label}: λ_min = {:.3e} ≤ 0", probe.lambda_min));
+            }
+            if !probe.cholesky_ok {
+                return Err(format!("{label}: jitter-free Cholesky failed"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_psd_always_even_for_analytic_kernels() {
+    // Weaker guarantee that holds for EVERY kernel including RBF: the
+    // construction can never produce negative eigenvalues beyond
+    // round-off (K = S·Sᵀ by construction).
+    prop_check(
+        "icr-psd",
+        PropConfig::with_seed(0xF112).cases(8).max_size(20),
+        |rng, size| random_engine(rng, size),
+        |(engine, label)| {
+            let k = engine.implicit_covariance();
+            let probe = rank_probe(&k);
+            if probe.lambda_min < -1e-9 * probe.lambda_max.abs() {
+                return Err(format!("{label}: negative eigenvalue {:.3e}", probe.lambda_min));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adjoint_identity_across_configs() {
+    prop_check(
+        "icr-adjoint",
+        PropConfig::with_seed(0xAD10).cases(12).max_size(32),
+        |rng, size| {
+            let (engine, label) = random_engine(rng, size);
+            let x = rng.standard_normal_vec(engine.total_dof());
+            let y = rng.standard_normal_vec(engine.n_points());
+            (engine, label, x, y)
+        },
+        |(engine, label, x, y)| {
+            let sx = engine.apply_sqrt(x);
+            let sty = engine.apply_sqrt_transpose(y);
+            let lhs: f64 = sx.iter().zip(y).map(|(a, b)| a * b).sum();
+            let rhs: f64 = x.iter().zip(&sty).map(|(a, b)| a * b).sum();
+            if (lhs - rhs).abs() > 1e-9 * (1.0 + lhs.abs()) {
+                return Err(format!("{label}: ⟨Sx,y⟩ = {lhs} ≠ ⟨x,Sᵀy⟩ = {rhs}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_apply_linearity_and_shapes() {
+    prop_check(
+        "icr-linearity",
+        PropConfig::with_seed(0x11EA).cases(12).max_size(32),
+        |rng, size| {
+            let (engine, label) = random_engine(rng, size);
+            let a = rng.standard_normal_vec(engine.total_dof());
+            let b = rng.standard_normal_vec(engine.total_dof());
+            let ca = rng.standard_normal();
+            let cb = rng.standard_normal();
+            (engine, label, a, b, ca, cb)
+        },
+        |(engine, label, a, b, ca, cb)| {
+            let sizes = engine.excitation_sizes();
+            if sizes.iter().sum::<usize>() != engine.total_dof() {
+                return Err(format!("{label}: excitation sizes don't sum to dof"));
+            }
+            if *sizes.last().unwrap() != engine.n_points() {
+                return Err(format!("{label}: last level size ≠ N"));
+            }
+            let combo: Vec<f64> =
+                a.iter().zip(b).map(|(x, y)| ca * x + cb * y).collect();
+            let lhs = engine.apply_sqrt(&combo);
+            let fa = engine.apply_sqrt(a);
+            let fb = engine.apply_sqrt(b);
+            for i in 0..lhs.len() {
+                let want = ca * fa[i] + cb * fb[i];
+                if (lhs[i] - want).abs() > 1e-9 * (1.0 + want.abs()) {
+                    return Err(format!("{label}: nonlinear at index {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_domain_points_strictly_monotone() {
+    // Charts are strictly monotone, so modeled points must be too — a
+    // geometry-corruption canary.
+    prop_check(
+        "icr-monotone-points",
+        PropConfig::with_seed(0x09A7).cases(14).max_size(40),
+        |rng, size| random_engine(rng, size),
+        |(engine, label)| {
+            let pts = engine.domain_points();
+            for w in pts.windows(2) {
+                if w[1] <= w[0] {
+                    return Err(format!("{label}: non-monotone points {} ≥ {}", w[0], w[1]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_marginal_variance_near_kernel_variance() {
+    // diag(K_ICR) ≈ k(0) within the paper's observed diagonal error band:
+    // a single refinement only loses correlation, but iterating can
+    // slightly *amplify* marginals (§5.1: errors "are smeared out and
+    // potentially amplified"; Fig. 3 reports diagonal errors up to
+    // 6.5e-2). We allow ±10 % — a violation beyond that indicates broken
+    // refinement matrices, not expected approximation error.
+    prop_check(
+        "icr-variance-band",
+        PropConfig::with_seed(0x7A9).cases(8).max_size(20),
+        |rng, size| random_engine(rng, size),
+        |(engine, label)| {
+            let k = engine.implicit_covariance();
+            for i in 0..engine.n_points() {
+                let v = k[(i, i)];
+                if !(0.5..=1.10).contains(&v) {
+                    return Err(format!("{label}: var[{i}] = {v} outside [0.5, 1.1]·k(0)"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,62 @@
+//! Whole-stack correctness oracle: the coordinator's MAP inference with
+//! the ICR prior must approach the *closed-form* GP posterior mean (with
+//! the exact kernel) to the accuracy of `K_ICR ≈ K` — tying the paper's
+//! Fig. 3 accuracy claim to actual downstream inference quality.
+
+use icr::config::{ModelConfig, ServerConfig};
+use icr::coordinator::{Coordinator, FieldEngine, Request, Response};
+use icr::gp::exact_posterior;
+use icr::kernels::Matern;
+use icr::rng::Rng;
+
+#[test]
+fn icr_map_tracks_exact_posterior_mean() {
+    let cfg = ServerConfig {
+        model: ModelConfig { n_csz: 5, n_fsz: 4, n_lvl: 3, target_n: 64, ..ModelConfig::default() },
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let engine = coord.engine();
+    let points = engine.domain_points();
+    let obs = engine.obs_indices();
+    let sigma = 0.1;
+
+    // Data from the EXACT GP (not the ICR prior) — a mild model mismatch,
+    // as in real use.
+    let kernel = Matern::nu32(1.0, 1.0);
+    let exact_gp = icr::gp::ExactGp::new(&kernel, &points).unwrap();
+    let mut rng = Rng::new(808);
+    let truth = exact_gp.sample(&mut rng);
+    let y: Vec<f64> = obs.iter().map(|&i| truth[i] + sigma * rng.standard_normal()).collect();
+
+    // Closed-form reference.
+    let post = exact_posterior(&kernel, &points, &obs, &y, sigma).unwrap();
+
+    // ICR MAP through the coordinator.
+    let field = match coord
+        .call(Request::Infer { y_obs: y.clone(), sigma_n: sigma, steps: 1500, lr: 0.05 })
+        .unwrap()
+    {
+        Response::Inference { field, .. } => field,
+        other => panic!("{other:?}"),
+    };
+
+    // Agreement: RMSE between ICR-MAP and the exact posterior mean must be
+    // far below both the field scale and the posterior uncertainty.
+    let n = points.len();
+    let rmse = (field
+        .iter()
+        .zip(&post.mean)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / n as f64)
+        .sqrt();
+    let scale = (post.mean.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt();
+    let mean_std = (post.var.iter().sum::<f64>() / n as f64).sqrt();
+    assert!(
+        rmse < 0.35 * mean_std.max(0.05) || rmse < 0.1 * scale,
+        "ICR MAP vs exact posterior mean: RMSE {rmse} (scale {scale}, posterior std {mean_std})"
+    );
+    coord.shutdown();
+}
