@@ -1,33 +1,48 @@
-//! Quickstart: sample a Gaussian process with ICR in O(N).
+//! Quickstart: the unified `GpModel` API in five steps.
 //!
-//! Builds the paper's §5 model — a Matérn-3/2 GP on ~200 logarithmically
-//! spaced points whose nearest-neighbour distances sweep two orders of
-//! magnitude — draws samples through the coordinator, and verifies the
-//! key §5.2 property live: the implicit covariance is full rank.
+//! 1. Build the paper's §5 model with the fluent `ModelBuilder`.
+//! 2. Sample it directly — `√K_ICR · ξ` in O(N).
+//! 3. Stand up a multi-model coordinator (native ICR + the KISS-GP
+//!    baseline) and route requests by model id, exactly like
+//!    `icr serve --models kiss=kissgp` does over JSONL protocol v2.
+//! 4. Run posterior inference through the same interface.
+//! 5. Verify the key §5.2 structural claim live: `K_ICR` is full rank.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! The JSONL equivalent of step 3 (two models in one `icr serve`
+//! process):
+//!
+//! ```text
+//! $ icr serve --models kiss=kissgp <<'EOF'
+//! {"op": "sample", "count": 1, "seed": 7}
+//! {"v": 2, "op": "sample", "model": "kiss", "id": 1, "count": 1, "seed": 7}
+//! {"v": 2, "op": "stats", "id": 2}
+//! EOF
+//! ```
+//!
+//! The first (bare v1) line is answered by the default native model; the
+//! tagged v2 lines route by `model` and echo the client `id`.
 
-use icr::config::ServerConfig;
-use icr::coordinator::{Coordinator, Request, Response};
-use icr::gp::{covariance_errors, kernel_matrix, rank_probe};
-use icr::kernels::Matern;
+use icr::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // 1. The paper-default configuration: Matérn-3/2 (Eq. 14), log chart,
-    //    (n_csz, n_fsz) = (5, 4), n_lvl = 5, N = 200.
-    let cfg = ServerConfig::default();
-    println!("model: {}", cfg.model.to_json().to_json());
-
-    // 2. Start the coordinator (native Rust engine, no artifacts needed).
-    let coord = Coordinator::start(cfg)?;
-    let engine = coord.engine();
+    // 1. The paper-default model through the builder: Matérn-3/2 (Eq. 14),
+    //    log chart, (n_csz, n_fsz) = (5, 4), n_lvl = 5, N = 200.
+    let model = <dyn GpModel>::builder()
+        .kernel("matern32(rho=1.0, amp=1.0)")
+        .chart("paper_log")
+        .windows(5, 4)
+        .levels(5)
+        .target_n(200)
+        .backend(Backend::Native)
+        .build()?;
+    let d = model.descriptor();
     println!(
-        "engine: {} | N = {} modeled points, {} excitation dof",
-        engine.name(),
-        engine.n_points(),
-        engine.total_dof()
+        "model: {} | backend {} | kernel {} | chart {} | N = {}, dof = {}",
+        d.name, d.backend, d.kernel, d.chart, d.n, d.dof
     );
-    let pts = engine.domain_points();
+    let pts = model.domain_points();
     println!(
         "modeled points span [{:.3}, {:.3}]·ρ₀, nn-spacing {:.3}…{:.3}",
         pts[0],
@@ -36,22 +51,65 @@ fn main() -> anyhow::Result<()> {
         pts[pts.len() - 1] - pts[pts.len() - 2]
     );
 
-    // 3. Draw three samples (one batched request; the batcher coalesces).
-    let resp = coord.call(Request::Sample { count: 3, seed: 42 })?;
-    let samples = match resp {
-        Response::Samples(s) => s,
-        other => anyhow::bail!("unexpected response {other:?}"),
-    };
-    for (i, s) in samples.iter().enumerate() {
+    // 2. Three seeded samples straight from the model (no server needed).
+    for (i, s) in model.sample(3, 42)?.iter().enumerate() {
         let mean = s.iter().sum::<f64>() / s.len() as f64;
         let std = (s.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / s.len() as f64).sqrt();
         println!("sample {i}: mean {mean:+.3}, std {std:.3}, head {:?}", &s[..4]);
     }
 
-    // 4. The paper's key structural claims, verified on the spot.
-    let native = icr::coordinator::NativeEngine::from_config(&ServerConfig::default().model)?;
+    // 3. A two-model coordinator: the default native model plus the
+    //    KISS-GP baseline on the SAME modeled points, routed by name.
+    let mut cfg = ServerConfig::default();
+    cfg.extra_models = vec![ModelSpec {
+        name: "kiss".into(),
+        backend: Backend::Kissgp,
+        model: cfg.model.clone(),
+    }];
+    let coord = Coordinator::start(cfg)?;
+    println!("\ncoordinator hosts: {:?}", coord.model_names());
+    for name in ["default", "kiss"] {
+        match coord.call_model(Some(name), Request::Sample { count: 1, seed: 7 })? {
+            Response::Samples(s) => println!(
+                "  {name:>7} → sample of {} points (head {:+.3}, {:+.3})",
+                s[0].len(),
+                s[0][0],
+                s[0][1]
+            ),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    // 4. Posterior inference (MAP of the standardized objective, Eq. 3)
+    //    on data drawn from the native model itself.
+    let truth = model.sample(1, 2027)?.remove(0);
+    let sigma = 0.05;
+    let mut rng = Rng::new(11);
+    let y: Vec<f64> =
+        model.obs_indices().iter().map(|&i| truth[i] + sigma * rng.standard_normal()).collect();
+    match coord.call(Request::Infer { y_obs: y, sigma_n: sigma, steps: 200, lr: 0.1 })? {
+        Response::Inference { field, trace } => {
+            let rmse = (field
+                .iter()
+                .zip(&truth)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                / field.len() as f64)
+                .sqrt();
+            println!(
+                "\ninference: loss {:.3e} → {:.3e} in {} steps, reconstruction RMSE {rmse:.4}",
+                trace.losses[0],
+                trace.losses[trace.losses.len() - 1],
+                trace.losses.len()
+            );
+        }
+        other => anyhow::bail!("unexpected response {other:?}"),
+    }
+
+    // 5. The paper's key structural claims, verified on the spot.
+    let native = NativeEngine::from_config(&ServerConfig::default().model)?;
     let k_icr = native.inner().implicit_covariance();
-    let probe = rank_probe(&k_icr);
+    let probe = icr::gp::rank_probe(&k_icr);
     println!(
         "\nK_ICR rank: {}/{} (λ_min = {:.2e}) — full rank by construction (§5.2)",
         probe.rank,
@@ -59,8 +117,8 @@ fn main() -> anyhow::Result<()> {
         probe.lambda_min
     );
     let kernel = Matern::nu32(1.0, 1.0);
-    let truth = kernel_matrix(&kernel, native.inner().domain_points());
-    let errs = covariance_errors(&k_icr, &truth);
+    let truth_k = icr::gp::kernel_matrix(&kernel, native.inner().domain_points());
+    let errs = icr::gp::covariance_errors(&k_icr, &truth_k);
     println!(
         "covariance accuracy vs exact kernel: MAE {:.2e}, max {:.2e} (paper: 5.8e-3, 1.3e-1)",
         errs.mae, errs.max_abs

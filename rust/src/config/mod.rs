@@ -19,13 +19,17 @@ use crate::icr::RefinementParams;
 use crate::json::{self, Value};
 use crate::kernels::{parse_kernel, Kernel};
 
-/// Which engine executes `√K_ICR` applies.
+/// Which engine family executes a model's applies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
-    /// Rust-native engine (no artifacts needed).
+    /// Rust-native ICR engine (no artifacts needed).
     Native,
     /// AOT-compiled XLA executables via PJRT.
     Pjrt,
+    /// KISS-GP baseline (circulant spectral square root).
+    Kissgp,
+    /// Exact dense reference (Cholesky square root, O(N³) build).
+    Exact,
 }
 
 impl Backend {
@@ -33,7 +37,9 @@ impl Backend {
         match s {
             "native" => Ok(Backend::Native),
             "pjrt" | "xla" => Ok(Backend::Pjrt),
-            other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+            "kissgp" | "kiss" => Ok(Backend::Kissgp),
+            "exact" | "dense" => Ok(Backend::Exact),
+            other => anyhow::bail!("unknown backend {other:?} (native|pjrt|kissgp|exact)"),
         }
     }
 
@@ -41,6 +47,8 @@ impl Backend {
         match self {
             Backend::Native => "native",
             Backend::Pjrt => "pjrt",
+            Backend::Kissgp => "kissgp",
+            Backend::Exact => "exact",
         }
     }
 }
@@ -134,6 +142,16 @@ impl ModelConfig {
         Ok(())
     }
 
+    /// Modeled locations in the domain 𝒟: the chart image of the final
+    /// refinement grid. Every engine family of this config models these
+    /// same points, which is what makes cross-model serving comparable.
+    pub fn domain_points(&self) -> Result<Vec<f64>> {
+        let params = self.refinement_params()?;
+        let geo = crate::icr::Geometry::build(params);
+        let chart = self.chart()?;
+        Ok(geo.final_positions().iter().map(|&u| chart.to_domain(u)).collect())
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("kernel", json::s(&self.kernel_spec)),
@@ -146,11 +164,40 @@ impl ModelConfig {
     }
 }
 
+/// The name under which the coordinator's primary model is registered,
+/// and the model v1 (untagged) protocol frames route to.
+pub const DEFAULT_MODEL_NAME: &str = "default";
+
+/// A named model hosted by the coordinator: registry key + engine family
+/// + model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub backend: Backend,
+    pub model: ModelConfig,
+}
+
+impl ModelSpec {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("backend", json::s(self.backend.name())),
+            ("model", self.model.to_json()),
+        ])
+    }
+}
+
 /// The coordinator/server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Configuration of the default model (v1 behavior; registered under
+    /// [`DEFAULT_MODEL_NAME`]).
     pub model: ModelConfig,
+    /// Engine family of the default model.
     pub backend: Backend,
+    /// Additional named models hosted alongside the default one. Protocol
+    /// v2 requests route by the `model` field of the frame.
+    pub extra_models: Vec<ModelSpec>,
     pub workers: usize,
     /// Maximum requests coalesced into one batched apply.
     pub max_batch: usize,
@@ -165,6 +212,7 @@ impl Default for ServerConfig {
         ServerConfig {
             model: ModelConfig::default(),
             backend: Backend::Native,
+            extra_models: Vec::new(),
             workers: 2,
             max_batch: 8,
             max_wait_us: 200,
@@ -186,6 +234,39 @@ impl ServerConfig {
         if let Some(b) = args.get("backend") {
             cfg.backend = Backend::parse(b)?;
         }
+        if args.get("models").is_none() {
+            // Re-materialize file-declared extras on top of the
+            // CLI-finalized base model: apply_file ran before the CLI
+            // overrides, and extras must share the final geometry.
+            if let Some(path) = args.get("config") {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("re-reading config file {path}"))?;
+                let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+                cfg.apply_models_json(&v)?;
+            }
+        }
+        if let Some(list) = args.get("models") {
+            // `--models kiss=kissgp,ref=exact`: extra named models sharing
+            // the default model's geometry/kernel but each on its own
+            // engine family (the quick path to a multi-model server; the
+            // config file's `models` array allows full per-model configs).
+            cfg.extra_models = list
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|pair| -> Result<ModelSpec> {
+                    let (name, backend) = pair
+                        .trim()
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("--models entry {pair:?} is not name=backend"))?;
+                    anyhow::ensure!(!name.trim().is_empty(), "--models entry {pair:?} has empty name");
+                    Ok(ModelSpec {
+                        name: name.trim().to_string(),
+                        backend: Backend::parse(backend.trim())?,
+                        model: cfg.model.clone(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
         cfg.workers = args.get_usize("workers", cfg.workers)?.max(1);
         cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?.max(1);
         cfg.max_wait_us = args.get_u64("max-wait-us", cfg.max_wait_us)?;
@@ -193,7 +274,31 @@ impl ServerConfig {
             cfg.artifact_dir = d.to_string();
         }
         cfg.seed = args.get_u64("seed", cfg.seed)?;
+        cfg.validate_models()?;
         Ok(cfg)
+    }
+
+    /// The full registry: the default model first, then the extras.
+    pub fn model_specs(&self) -> Vec<ModelSpec> {
+        let mut specs = vec![ModelSpec {
+            name: DEFAULT_MODEL_NAME.to_string(),
+            backend: self.backend,
+            model: self.model.clone(),
+        }];
+        specs.extend(self.extra_models.iter().cloned());
+        specs
+    }
+
+    fn validate_models(&self) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in self.model_specs() {
+            anyhow::ensure!(
+                seen.insert(spec.name.clone()),
+                "duplicate model name {:?} in registry",
+                spec.name
+            );
+        }
+        Ok(())
     }
 
     pub fn apply_file(&mut self, path: &Path) -> Result<()> {
@@ -220,6 +325,38 @@ impl ServerConfig {
         if let Some(s) = v.get("seed").and_then(Value::as_f64) {
             self.seed = s as u64;
         }
+        self.apply_models_json(&v)?;
+        Ok(())
+    }
+
+    /// Materialize the `models` array of a config document. Each entry is
+    /// `{"name": ..., "backend": ..., "model": {...}}`; the per-model
+    /// config starts from the *current* top-level model and applies the
+    /// entry's overrides, so shared geometry need not be repeated.
+    /// [`Self::resolve`] calls this again after CLI flags so extras
+    /// inherit the finalized base geometry, keeping every family on the
+    /// same modeled points.
+    fn apply_models_json(&mut self, v: &Value) -> Result<()> {
+        let Some(models) = v.get("models").and_then(Value::as_array) else {
+            return Ok(());
+        };
+        self.extra_models.clear();
+        for entry in models {
+            let name = entry
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow::anyhow!("models[] entry missing \"name\""))?
+                .to_string();
+            let backend = match entry.get("backend").and_then(Value::as_str) {
+                Some(b) => Backend::parse(b)?,
+                None => self.backend,
+            };
+            let mut model = self.model.clone();
+            if let Some(m) = entry.get("model") {
+                model.apply_json(m);
+            }
+            self.extra_models.push(ModelSpec { name, backend, model });
+        }
         Ok(())
     }
 
@@ -227,6 +364,10 @@ impl ServerConfig {
         json::obj(vec![
             ("model", self.model.to_json()),
             ("backend", json::s(self.backend.name())),
+            (
+                "models",
+                json::arr(self.extra_models.iter().map(ModelSpec::to_json).collect()),
+            ),
             ("workers", json::num(self.workers as f64)),
             ("max_batch", json::num(self.max_batch as f64)),
             ("max_wait_us", json::num(self.max_wait_us as f64)),
@@ -316,5 +457,65 @@ mod tests {
     #[test]
     fn bad_backend_rejected() {
         assert!(Backend::parse("tpu-cluster").is_err());
+    }
+
+    #[test]
+    fn all_backends_roundtrip_names() {
+        for b in [Backend::Native, Backend::Pjrt, Backend::Kissgp, Backend::Exact] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn models_flag_builds_named_registry() {
+        let args = Args::parse(&argv("serve --models kiss=kissgp,ref=exact --n 48"), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        let specs = cfg.model_specs();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].name, DEFAULT_MODEL_NAME);
+        assert_eq!(specs[1].name, "kiss");
+        assert_eq!(specs[1].backend, Backend::Kissgp);
+        assert_eq!(specs[2].name, "ref");
+        assert_eq!(specs[2].backend, Backend::Exact);
+        // Extras inherit the (CLI-overridden) default geometry.
+        assert_eq!(specs[1].model.target_n, 48);
+    }
+
+    #[test]
+    fn duplicate_model_names_rejected() {
+        let args = Args::parse(&argv("serve --models a=native,a=exact"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        let args = Args::parse(&argv("serve --models default=exact"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+    }
+
+    #[test]
+    fn models_from_config_file_with_overrides() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_models_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"model": {"n_csz": 3, "n_fsz": 2, "target_n": 40},
+                "models": [{"name": "kiss", "backend": "kissgp"},
+                           {"name": "big", "model": {"target_n": 96}}]}"#,
+        )
+        .unwrap();
+        let args = Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.extra_models.len(), 2);
+        assert_eq!(cfg.extra_models[0].backend, Backend::Kissgp);
+        assert_eq!(cfg.extra_models[0].model.target_n, 40); // inherited
+        assert_eq!(cfg.extra_models[1].backend, Backend::Native); // inherited
+        assert_eq!(cfg.extra_models[1].model.target_n, 96); // overridden
+
+        // CLI flags finalize the base model BEFORE extras materialize, so
+        // file-declared extras share the final geometry.
+        let args =
+            Args::parse(&argv(&format!("serve --config {} --n 64", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.model.target_n, 64);
+        assert_eq!(cfg.extra_models[0].model.target_n, 64); // follows CLI
+        assert_eq!(cfg.extra_models[1].model.target_n, 96); // own override wins
+        std::fs::remove_file(&path).ok();
     }
 }

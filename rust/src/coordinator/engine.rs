@@ -1,336 +1,11 @@
-//! Engine abstraction: the coordinator routes applies to either the
-//! Rust-native ICR engine or an AOT-compiled PJRT executable. Both
-//! implement the same trait, and the artifact-gated integration tests
-//! assert they agree numerically.
+//! Back-compat shim: the engine abstraction graduated into the top-level
+//! [`crate::model`] module as the unified [`GpModel`] trait (see
+//! `DESIGN.md` §2). Existing imports of
+//! `icr::coordinator::{FieldEngine, NativeEngine, PjrtEngine}` keep
+//! working; new code should use `icr::prelude::*`.
 
-use anyhow::{anyhow, ensure, Context, Result};
+pub use crate::model::{default_obs_indices, NativeEngine, PjrtEngine};
 
-use crate::config::ModelConfig;
-use crate::icr::IcrEngine;
-use crate::runtime::PjrtService;
-
-/// A backend able to apply `√K_ICR` (batched) and evaluate the
-/// standardized regression objective.
-pub trait FieldEngine: Send + Sync {
-    fn name(&self) -> String;
-    /// Number of modeled points N.
-    fn n_points(&self) -> usize;
-    /// Excitation dimension.
-    fn total_dof(&self) -> usize;
-    /// Modeled locations in the domain.
-    fn domain_points(&self) -> Vec<f64>;
-    /// Apply `√K_ICR` to each excitation vector.
-    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>>;
-    /// `(loss, ∂loss/∂ξ)` of the standardized objective (paper Eq. 3)
-    /// with observations on the engine's observation pattern.
-    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64) -> Result<(f64, Vec<f64>)>;
-    /// Indices of observed points for [`Self::loss_grad`].
-    fn obs_indices(&self) -> Vec<usize>;
-}
-
-/// Observation pattern shared by both engines and the AOT'd loss artifact:
-/// every other modeled point (stride 2, offset 0).
-pub fn default_obs_indices(n: usize) -> Vec<usize> {
-    (0..n).step_by(2).collect()
-}
-
-// ---------------------------------------------------------------------
-// Native engine
-// ---------------------------------------------------------------------
-
-/// The Rust-native backend wrapping [`IcrEngine`].
-pub struct NativeEngine {
-    engine: IcrEngine,
-    obs: Vec<usize>,
-}
-
-impl NativeEngine {
-    pub fn from_config(model: &ModelConfig) -> Result<Self> {
-        let kernel = model.kernel()?;
-        let chart = model.chart()?;
-        let params = model.refinement_params()?;
-        let engine = IcrEngine::build(kernel.as_ref(), chart.as_ref(), params)
-            .context("building native ICR engine")?;
-        let obs = default_obs_indices(engine.n_points());
-        Ok(NativeEngine { engine, obs })
-    }
-
-    pub fn inner(&self) -> &IcrEngine {
-        &self.engine
-    }
-}
-
-impl FieldEngine for NativeEngine {
-    fn name(&self) -> String {
-        format!("native(n={})", self.engine.n_points())
-    }
-
-    fn n_points(&self) -> usize {
-        self.engine.n_points()
-    }
-
-    fn total_dof(&self) -> usize {
-        self.engine.total_dof()
-    }
-
-    fn domain_points(&self) -> Vec<f64> {
-        self.engine.domain_points().to_vec()
-    }
-
-    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        xi.iter()
-            .map(|x| {
-                ensure!(x.len() == self.total_dof(), "xi length mismatch");
-                Ok(self.engine.apply_sqrt(x))
-            })
-            .collect()
-    }
-
-    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64) -> Result<(f64, Vec<f64>)> {
-        ensure!(xi.len() == self.total_dof(), "xi length mismatch");
-        ensure!(y_obs.len() == self.obs.len(), "y_obs length mismatch");
-        ensure!(sigma_n > 0.0, "noise std must be positive");
-        let s = self.engine.apply_sqrt(xi);
-        let inv_var = 1.0 / (sigma_n * sigma_n);
-        // loss = ½‖(y − s[obs])/σ‖² + ½‖ξ‖².
-        let mut loss = 0.0;
-        let mut cotangent = vec![0.0; self.n_points()];
-        for (&o, &y) in self.obs.iter().zip(y_obs) {
-            let r = s[o] - y;
-            loss += 0.5 * r * r * inv_var;
-            cotangent[o] = r * inv_var;
-        }
-        loss += 0.5 * xi.iter().map(|v| v * v).sum::<f64>();
-        // grad = Sᵀ·cotangent + ξ.
-        let mut grad = self.engine.apply_sqrt_transpose(&cotangent);
-        for (g, &x) in grad.iter_mut().zip(xi) {
-            *g += x;
-        }
-        Ok((loss, grad))
-    }
-
-    fn obs_indices(&self) -> Vec<usize> {
-        self.obs.clone()
-    }
-}
-
-// ---------------------------------------------------------------------
-// PJRT engine
-// ---------------------------------------------------------------------
-
-/// The PJRT backend executing AOT-compiled artifacts through the
-/// thread-confined [`PjrtService`] actor. Batch requests are routed to
-/// the smallest compiled batch executable that fits and padded up to its
-/// batch size (standard bucketed batching).
-pub struct PjrtEngine {
-    service: PjrtService,
-    apply_name: String,
-    loss_grad_name: Option<String>,
-    n: usize,
-    dof: usize,
-    domain_points_head: Vec<f64>,
-    obs: Vec<usize>,
-}
-
-impl PjrtEngine {
-    /// Pick artifacts matching the model config's (n_csz, n_fsz, target N).
-    pub fn from_config(service: PjrtService, model: &ModelConfig) -> Result<Self> {
-        let params = model.refinement_params()?;
-        let n = params.final_size();
-        let (apply_name, dof, domain_points_head, loss_grad_name) = {
-            let manifest = service.manifest();
-            let apply = manifest
-                .by_kind("icr")
-                .into_iter()
-                .find(|a| {
-                    a.meta_usize("n") == Some(n)
-                        && a.meta_usize("n_csz") == Some(params.n_csz)
-                        && a.meta_usize("n_fsz") == Some(params.n_fsz)
-                        && a.meta_usize("batch").unwrap_or(1) == 1
-                })
-                .ok_or_else(|| {
-                    anyhow!(
-                        "no icr_apply artifact for (csz={}, fsz={}, n={n}); run `make artifacts`",
-                        params.n_csz,
-                        params.n_fsz
-                    )
-                })?;
-            let dof = apply.meta_usize("dof").unwrap_or(params.total_dof());
-            let head = apply
-                .meta
-                .get("domain_points_head")
-                .and_then(crate::json::Value::as_array)
-                .map(|a| a.iter().filter_map(crate::json::Value::as_f64).collect())
-                .unwrap_or_default();
-            let lg = manifest
-                .by_kind("icr_loss_grad")
-                .into_iter()
-                .find(|a| a.meta_usize("n") == Some(n))
-                .map(|a| a.name.clone());
-            (apply.name.clone(), dof, head, lg)
-        };
-        Ok(PjrtEngine {
-            service,
-            apply_name,
-            loss_grad_name,
-            n,
-            dof,
-            domain_points_head,
-            obs: default_obs_indices(n),
-        })
-    }
-
-    /// Compile-and-validate eagerly (otherwise the first request pays).
-    pub fn warmup(&self) -> Result<()> {
-        self.service.self_check(&self.apply_name)?;
-        if let Some(lg) = &self.loss_grad_name {
-            self.service.warmup(std::slice::from_ref(lg))?;
-        }
-        Ok(())
-    }
-}
-
-impl FieldEngine for PjrtEngine {
-    fn name(&self) -> String {
-        format!(
-            "pjrt({}, platform={})",
-            self.apply_name,
-            self.service.platform().unwrap_or_else(|_| "?".into())
-        )
-    }
-
-    fn n_points(&self) -> usize {
-        self.n
-    }
-
-    fn total_dof(&self) -> usize {
-        self.dof
-    }
-
-    fn domain_points(&self) -> Vec<f64> {
-        // The manifest carries only a head (full points are recomputable
-        // from the chart); native engines give the full vector.
-        self.domain_points_head.clone()
-    }
-
-    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        for x in xi {
-            ensure!(x.len() == self.dof, "xi length mismatch");
-        }
-        // Route to the smallest batched executable that fits; fall back to
-        // per-request singles when none is compiled.
-        if xi.len() > 1 {
-            let spec = self
-                .service
-                .manifest()
-                .best_icr_batch(self.n, xi.len())
-                .map(|s| (s.name.clone(), s.meta_usize("batch").unwrap_or(1)));
-            if let Some((name, b)) = spec {
-                let mut flat = vec![0.0; b * self.dof];
-                for (i, x) in xi.iter().enumerate() {
-                    flat[i * self.dof..(i + 1) * self.dof].copy_from_slice(x);
-                }
-                let out = self.service.execute_f64(&name, &[&flat])?;
-                let s = &out[0];
-                return Ok((0..xi.len())
-                    .map(|i| s[i * self.n..(i + 1) * self.n].to_vec())
-                    .collect());
-            }
-        }
-        xi.iter()
-            .map(|x| Ok(self.service.execute_f64(&self.apply_name, &[&x[..]])?.remove(0)))
-            .collect()
-    }
-
-    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64) -> Result<(f64, Vec<f64>)> {
-        let name = self
-            .loss_grad_name
-            .as_ref()
-            .ok_or_else(|| anyhow!("no icr_loss_grad artifact for n={}", self.n))?;
-        ensure!(xi.len() == self.dof, "xi length mismatch");
-        ensure!(y_obs.len() == self.obs.len(), "y_obs length mismatch");
-        let sigma = [sigma_n];
-        let mut out = self.service.execute_f64(name, &[xi, y_obs, &sigma])?;
-        let grad = out.remove(1);
-        let loss = out.remove(0)[0];
-        Ok((loss, grad))
-    }
-
-    fn obs_indices(&self) -> Vec<usize> {
-        self.obs.clone()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::rng::Rng;
-
-    fn native() -> NativeEngine {
-        let model = ModelConfig {
-            n_csz: 3,
-            n_fsz: 2,
-            n_lvl: 3,
-            target_n: 40,
-            ..ModelConfig::default()
-        };
-        NativeEngine::from_config(&model).unwrap()
-    }
-
-    #[test]
-    fn native_engine_shapes() {
-        let e = native();
-        assert!(e.n_points() >= 40);
-        assert_eq!(e.obs_indices().len(), e.n_points().div_ceil(2));
-        assert_eq!(e.domain_points().len(), e.n_points());
-        assert!(e.name().starts_with("native"));
-    }
-
-    #[test]
-    fn native_batch_matches_singles() {
-        let e = native();
-        let mut rng = Rng::new(3);
-        let xi: Vec<Vec<f64>> = (0..4).map(|_| rng.standard_normal_vec(e.total_dof())).collect();
-        let batch = e.apply_sqrt_batch(&xi).unwrap();
-        for (i, x) in xi.iter().enumerate() {
-            let single = e.apply_sqrt_batch(std::slice::from_ref(x)).unwrap();
-            assert_eq!(batch[i], single[0]);
-        }
-    }
-
-    #[test]
-    fn native_loss_grad_matches_finite_differences() {
-        let e = native();
-        let mut rng = Rng::new(5);
-        let xi = rng.standard_normal_vec(e.total_dof());
-        let y: Vec<f64> = rng.standard_normal_vec(e.obs_indices().len());
-        let sigma = 0.3;
-        let (l0, grad) = e.loss_grad(&xi, &y, sigma).unwrap();
-        assert!(l0 > 0.0);
-        let eps = 1e-6;
-        for &i in &[0usize, 7, e.total_dof() - 1] {
-            let mut xp = xi.clone();
-            xp[i] += eps;
-            let (lp, _) = e.loss_grad(&xp, &y, sigma).unwrap();
-            let mut xm = xi.clone();
-            xm[i] -= eps;
-            let (lm, _) = e.loss_grad(&xm, &y, sigma).unwrap();
-            let fd = (lp - lm) / (2.0 * eps);
-            assert!(
-                (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
-                "grad[{i}] = {} vs fd {fd}",
-                grad[i]
-            );
-        }
-    }
-
-    #[test]
-    fn native_loss_grad_validates_inputs() {
-        let e = native();
-        let xi = vec![0.0; e.total_dof()];
-        let y = vec![0.0; e.obs_indices().len()];
-        assert!(e.loss_grad(&xi[1..], &y, 0.1).is_err());
-        assert!(e.loss_grad(&xi, &y[1..], 0.1).is_err());
-        assert!(e.loss_grad(&xi, &y, -1.0).is_err());
-    }
-}
+/// Deprecated name of [`crate::model::GpModel`], kept so pre-v2 call
+/// sites (`use icr::coordinator::FieldEngine`) still compile.
+pub use crate::model::GpModel as FieldEngine;

@@ -2,14 +2,19 @@
 //!
 //! The paper's contribution is the O(N) generative GP algorithm (L1/L2 +
 //! the native engine); L3 wraps it in the serving harness a downstream
-//! user deploys: a [`server::Coordinator`] owning the process topology, a
-//! pluggable [`engine::FieldEngine`] (Rust-native or AOT/PJRT), per-seed
-//! deterministic sampling, bucketed batch routing and metrics.
+//! user deploys: a [`server::Coordinator`] owning the process topology
+//! and a **named registry** of [`crate::model::GpModel`]s (Rust-native,
+//! AOT/PJRT, KISS-GP, exact dense), per-seed deterministic sampling,
+//! per-model bucketed batch routing, per-model metrics, and the versioned
+//! JSONL wire codec in [`protocol`] (v1 untagged legacy + v2 tagged
+//! multi-model frames).
 
 pub mod engine;
+pub mod protocol;
 pub mod request;
 pub mod server;
 
 pub use engine::{default_obs_indices, FieldEngine, NativeEngine, PjrtEngine};
+pub use protocol::{RequestFrame, ResponseFrame, PROTOCOL_VERSION, SUPPORTED_PROTOCOLS};
 pub use request::{Envelope, Request, RequestId, Response};
 pub use server::Coordinator;

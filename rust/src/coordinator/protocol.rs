@@ -1,0 +1,379 @@
+//! Versioned JSONL wire protocol of `icr serve`.
+//!
+//! **v1 (legacy, untagged)** — one bare request object per line, no
+//! version or model field; always served by the default model, responses
+//! keyed by payload (`{"id": .., "samples": [...]}`). Still accepted for
+//! back-compat.
+//!
+//! **v2 (tagged, multi-model)** — frames carry an explicit version tag
+//! and route by model name:
+//!
+//! ```json
+//! {"v": 2, "op": "sample", "model": "kiss", "id": 7, "count": 2, "seed": 42}
+//! {"v": 2, "id": 7, "model": "kiss", "ok": true, "result": {"samples": [[...]]}}
+//! {"v": 2, "id": 7, "ok": false, "error": {"kind": "unknown_model", "message": "..."}}
+//! ```
+//!
+//! `id` is the client correlation id, echoed verbatim (the server assigns
+//! its own internal [`RequestId`] when the client sends none). Errors are
+//! typed [`IcrError`] frames, not strings. The full grammar is documented
+//! in `DESIGN.md` §4.
+
+use std::collections::BTreeMap;
+
+use crate::error::IcrError;
+use crate::json::{self, Value};
+use crate::optim::Trace;
+
+use super::request::{Request, RequestId, Response};
+
+/// Protocol versions this server speaks, oldest first.
+pub const SUPPORTED_PROTOCOLS: [u64; 2] = [1, 2];
+
+/// The current (preferred) protocol version.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// A decoded request line: protocol version, routing target, client
+/// correlation id, and the request itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// 1 for untagged legacy frames, 2 for tagged frames.
+    pub version: u64,
+    /// Routing target; `None` means the default model.
+    pub model: Option<String>,
+    /// Client-chosen correlation id echoed in the response.
+    pub client_id: Option<u64>,
+    pub request: Request,
+}
+
+impl RequestFrame {
+    /// A v2 frame for `request` routed to `model`.
+    pub fn v2(model: Option<&str>, client_id: Option<u64>, request: Request) -> Self {
+        RequestFrame {
+            version: 2,
+            model: model.map(str::to_string),
+            client_id,
+            request,
+        }
+    }
+
+    /// A legacy v1 frame (default model, no correlation id).
+    pub fn v1(request: Request) -> Self {
+        RequestFrame { version: 1, model: None, client_id: None, request }
+    }
+}
+
+/// Parse one JSONL request line (either protocol version).
+pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
+    let v = Value::parse(line).map_err(|e| IcrError::MalformedRequest(e.to_string()))?;
+    let version = match v.get("v") {
+        None => 1,
+        Some(val) => val
+            .as_f64()
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+            .map(|x| x as u64)
+            .ok_or_else(|| IcrError::MalformedRequest("\"v\" must be an integer".into()))?,
+    };
+    if !SUPPORTED_PROTOCOLS.contains(&version) {
+        return Err(IcrError::UnsupportedProtocol(version));
+    }
+    let model = match v.get("model") {
+        None => None,
+        Some(m) => Some(
+            m.as_str()
+                .ok_or_else(|| IcrError::MalformedRequest("\"model\" must be a string".into()))?
+                .to_string(),
+        ),
+    };
+    if version == 1 && model.is_some() {
+        return Err(IcrError::MalformedRequest(
+            "model routing requires a v2 frame ({\"v\": 2, ...})".into(),
+        ));
+    }
+    let client_id = v.get("id").and_then(Value::as_f64).map(|x| x as u64);
+    let op = v
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or_else(|| IcrError::MalformedRequest("request needs \"op\"".into()))?;
+    let request = match op {
+        "sample" => Request::Sample {
+            count: v.get("count").and_then(Value::as_usize).unwrap_or(1),
+            seed: v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+        },
+        "apply_sqrt" => {
+            let xi = v
+                .get("xi")
+                .and_then(Value::as_array)
+                .ok_or_else(|| IcrError::MalformedRequest("apply_sqrt needs \"xi\"".into()))?
+                .iter()
+                .filter_map(Value::as_f64)
+                .collect();
+            Request::ApplySqrt { xi }
+        }
+        "infer" => {
+            let y_obs = v
+                .get("y_obs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| IcrError::MalformedRequest("infer needs \"y_obs\"".into()))?
+                .iter()
+                .filter_map(Value::as_f64)
+                .collect();
+            Request::Infer {
+                y_obs,
+                sigma_n: v.get("sigma").and_then(Value::as_f64).unwrap_or(0.1),
+                steps: v.get("steps").and_then(Value::as_usize).unwrap_or(100),
+                lr: v.get("lr").and_then(Value::as_f64).unwrap_or(0.1),
+            }
+        }
+        "stats" => Request::Stats,
+        other => return Err(IcrError::UnknownOp(other.to_string())),
+    };
+    Ok(RequestFrame { version, model, client_id, request })
+}
+
+/// Encode a request frame to its wire object (the client side of the
+/// codec; also what the round-trip tests exercise).
+pub fn encode_request(frame: &RequestFrame) -> Value {
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    if frame.version >= 2 {
+        fields.push(("v", json::num(frame.version as f64)));
+        if let Some(m) = &frame.model {
+            fields.push(("model", json::s(m)));
+        }
+        if let Some(id) = frame.client_id {
+            fields.push(("id", json::num(id as f64)));
+        }
+    }
+    fields.push(("op", json::s(frame.request.op())));
+    match &frame.request {
+        Request::Sample { count, seed } => {
+            fields.push(("count", json::num(*count as f64)));
+            fields.push(("seed", json::num(*seed as f64)));
+        }
+        Request::ApplySqrt { xi } => {
+            fields.push(("xi", json::arr(xi.iter().map(|&x| json::num(x)).collect())));
+        }
+        Request::Infer { y_obs, sigma_n, steps, lr } => {
+            fields.push(("y_obs", json::arr(y_obs.iter().map(|&x| json::num(x)).collect())));
+            fields.push(("sigma", json::num(*sigma_n)));
+            fields.push(("steps", json::num(*steps as f64)));
+            fields.push(("lr", json::num(*lr)));
+        }
+        Request::Stats => {}
+    }
+    json::obj(fields)
+}
+
+/// Payload object of a successful response (shared by both versions).
+fn result_payload(resp: &Response) -> Value {
+    match resp {
+        Response::Samples(s) => json::obj(vec![(
+            "samples",
+            json::arr(
+                s.iter()
+                    .map(|v| json::arr(v.iter().map(|&x| json::num(x)).collect()))
+                    .collect(),
+            ),
+        )]),
+        Response::Field(f) => {
+            json::obj(vec![("field", json::arr(f.iter().map(|&x| json::num(x)).collect()))])
+        }
+        Response::Inference { field, trace } => json::obj(vec![
+            ("field", json::arr(field.iter().map(|&x| json::num(x)).collect())),
+            ("losses", json::arr(trace.losses.iter().map(|&x| json::num(x)).collect())),
+            ("wall_s", json::num(trace.wall_s)),
+        ]),
+        Response::Stats(v) => json::obj(vec![("stats", v.clone())]),
+    }
+}
+
+/// Encode a response frame.
+///
+/// v2 wraps the payload in `{"v": 2, "id", "model", "ok", "result" |
+/// "error"}`; v1 flattens the payload next to the id, stringifies the
+/// error, and keeps `stats` a *string* (serialized JSON now, rendered
+/// text before) so legacy clients parsing it as text keep working.
+pub fn encode_response(
+    version: u64,
+    id: RequestId,
+    model: Option<&str>,
+    result: &Result<Response, IcrError>,
+) -> Value {
+    if version <= 1 {
+        let mut fields = vec![("id", json::num(id as f64))];
+        let payload = match result {
+            Err(e) => {
+                fields.push(("error", json::s(&e.to_string())));
+                return json::obj(fields);
+            }
+            Ok(Response::Stats(v)) => {
+                json::obj(vec![("stats", json::s(&v.to_json_pretty()))])
+            }
+            Ok(resp) => result_payload(resp),
+        };
+        if let Value::Object(map) = payload {
+            let mut out: BTreeMap<String, Value> = map;
+            out.insert("id".to_string(), json::num(id as f64));
+            return Value::Object(out);
+        }
+        unreachable!("result_payload always returns an object");
+    }
+    let mut fields = vec![("v", json::num(version as f64)), ("id", json::num(id as f64))];
+    if let Some(m) = model {
+        fields.push(("model", json::s(m)));
+    }
+    match result {
+        Ok(resp) => {
+            fields.push(("ok", Value::Bool(true)));
+            fields.push(("result", result_payload(resp)));
+        }
+        Err(e) => {
+            fields.push(("ok", Value::Bool(false)));
+            fields.push((
+                "error",
+                json::obj(vec![
+                    ("kind", json::s(e.kind())),
+                    ("message", json::s(&e.to_string())),
+                ]),
+            ));
+        }
+    }
+    json::obj(fields)
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub version: u64,
+    pub id: RequestId,
+    pub model: Option<String>,
+    pub result: Result<Response, IcrError>,
+}
+
+/// Decode a response object (either version) back into a [`ResponseFrame`]
+/// — the client side of the codec, exercised by the round-trip tests.
+pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
+    let version = v.get("v").and_then(Value::as_f64).map(|x| x as u64).unwrap_or(1);
+    let id = v
+        .get("id")
+        .and_then(Value::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| IcrError::MalformedRequest("response needs \"id\"".into()))?;
+    let model = v.get("model").and_then(Value::as_str).map(str::to_string);
+
+    // Error frames.
+    if let Some(err) = v.get("error") {
+        let decoded = match err {
+            Value::String(msg) => IcrError::from_wire("internal", msg),
+            _ => {
+                let kind = err.get("kind").and_then(Value::as_str).unwrap_or("internal");
+                let message = err.get("message").and_then(Value::as_str).unwrap_or("");
+                IcrError::from_wire(kind, message)
+            }
+        };
+        return Ok(ResponseFrame { version, id, model, result: Err(decoded) });
+    }
+
+    // Success: v2 nests the payload under "result", v1 flattens it.
+    let payload = if version >= 2 {
+        v.get("result")
+            .ok_or_else(|| IcrError::MalformedRequest("v2 response needs \"result\"".into()))?
+    } else {
+        v
+    };
+    let floats = |val: &Value| -> Vec<f64> {
+        val.as_array().map(|a| a.iter().filter_map(Value::as_f64).collect()).unwrap_or_default()
+    };
+    let response = if let Some(s) = payload.get("samples").and_then(Value::as_array) {
+        Response::Samples(s.iter().map(&floats).collect())
+    } else if let Some(stats) = payload.get("stats") {
+        // v1 carries stats as a serialized-JSON string; v2 as an object.
+        match stats {
+            Value::String(text) => {
+                Response::Stats(Value::parse(text).unwrap_or_else(|_| stats.clone()))
+            }
+            _ => Response::Stats(stats.clone()),
+        }
+    } else if payload.get("losses").is_some() {
+        Response::Inference {
+            field: floats(payload.get("field").unwrap_or(&Value::Null)),
+            trace: Trace {
+                losses: floats(payload.get("losses").unwrap_or(&Value::Null)),
+                wall_s: payload.get("wall_s").and_then(Value::as_f64).unwrap_or(0.0),
+            },
+        }
+    } else if let Some(f) = payload.get("field") {
+        Response::Field(floats(f))
+    } else {
+        return Err(IcrError::MalformedRequest("unrecognized response payload".into()));
+    };
+    Ok(ResponseFrame { version, id, model, result: Ok(response) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_lines_parse_as_version_one_default_model() {
+        let f = parse_request(r#"{"op": "sample", "count": 3, "seed": 9}"#).unwrap();
+        assert_eq!(f.version, 1);
+        assert_eq!(f.model, None);
+        assert_eq!(f.request, Request::Sample { count: 3, seed: 9 });
+    }
+
+    #[test]
+    fn v2_lines_carry_model_and_id() {
+        let f = parse_request(r#"{"v": 2, "op": "stats", "model": "kiss", "id": 44}"#).unwrap();
+        assert_eq!(f.version, 2);
+        assert_eq!(f.model.as_deref(), Some("kiss"));
+        assert_eq!(f.client_id, Some(44));
+        assert_eq!(f.request, Request::Stats);
+    }
+
+    #[test]
+    fn v1_frames_may_not_route() {
+        let err = parse_request(r#"{"op": "stats", "model": "kiss"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+    }
+
+    #[test]
+    fn unknown_version_and_op_are_typed_errors() {
+        assert_eq!(
+            parse_request(r#"{"v": 9, "op": "stats"}"#).unwrap_err().kind(),
+            "unsupported_protocol"
+        );
+        assert_eq!(
+            parse_request(r#"{"v": 2, "op": "transmogrify"}"#).unwrap_err().kind(),
+            "unknown_op"
+        );
+        assert_eq!(parse_request("not json").unwrap_err().kind(), "malformed_request");
+    }
+
+    #[test]
+    fn request_encode_parse_roundtrip_v2() {
+        let frames = [
+            RequestFrame::v2(Some("kiss"), Some(5), Request::Sample { count: 2, seed: 7 }),
+            RequestFrame::v2(None, None, Request::ApplySqrt { xi: vec![0.5, -1.25] }),
+            RequestFrame::v2(
+                Some("default"),
+                Some(1),
+                Request::Infer { y_obs: vec![1.0, 2.0], sigma_n: 0.25, steps: 50, lr: 0.05 },
+            ),
+            RequestFrame::v2(Some("ref"), Some(2), Request::Stats),
+        ];
+        for frame in &frames {
+            let line = encode_request(frame).to_json();
+            let back = parse_request(&line).unwrap();
+            assert_eq!(&back, frame, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn request_encode_parse_roundtrip_v1() {
+        let frame = RequestFrame::v1(Request::Sample { count: 4, seed: 3 });
+        let line = encode_request(&frame).to_json();
+        assert!(!line.contains("\"v\""), "v1 must stay untagged: {line}");
+        assert_eq!(parse_request(&line).unwrap(), frame);
+    }
+}

@@ -1,25 +1,28 @@
-//! Request/response protocol of the coordinator.
+//! Request/response protocol of the coordinator (in-process side; the
+//! JSONL wire codec lives in [`super::protocol`]).
 
 use std::sync::mpsc;
 
+use crate::error::IcrError;
+use crate::json::Value;
 use crate::optim::Trace;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
 /// What a client can ask the coordinator to do.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Draw `count` approximate GP samples with a client-provided seed.
     /// Seeding per request (not per batch) guarantees results do not
     /// depend on how the dynamic batcher groups concurrent requests.
     Sample { count: usize, seed: u64 },
-    /// Apply `√K_ICR` to explicit excitations.
+    /// Apply `√K` to explicit excitations.
     ApplySqrt { xi: Vec<f64> },
     /// Posterior (MAP of the standardized objective, paper Eq. 3) for
-    /// observations at the engine's observation pattern.
+    /// observations at the model's observation pattern.
     Infer { y_obs: Vec<f64>, sigma_n: f64, steps: usize, lr: f64 },
-    /// Metrics snapshot.
+    /// Metrics snapshot (structured, per-model).
     Stats,
 }
 
@@ -38,22 +41,36 @@ impl Request {
             _ => 0,
         }
     }
+
+    /// Protocol `op` tag of this request.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Sample { .. } => "sample",
+            Request::ApplySqrt { .. } => "apply_sqrt",
+            Request::Infer { .. } => "infer",
+            Request::Stats => "stats",
+        }
+    }
 }
 
 /// Coordinator replies.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Samples(Vec<Vec<f64>>),
     Field(Vec<f64>),
     Inference { field: Vec<f64>, trace: Trace },
-    Stats(String),
+    /// Structured stats document (see `Registry::to_json` and the
+    /// server's per-model assembly).
+    Stats(Value),
 }
 
-/// A queued request with its reply channel.
+/// A queued request with its routing target and reply channel.
 pub struct Envelope {
     pub id: RequestId,
+    /// Registry name of the model serving this request.
+    pub model: String,
     pub request: Request,
-    pub reply: mpsc::Sender<anyhow::Result<Response>>,
+    pub reply: mpsc::Sender<Result<Response, IcrError>>,
 }
 
 #[cfg(test)]
@@ -75,5 +92,16 @@ mod tests {
         assert_eq!(Request::Sample { count: 5, seed: 0 }.apply_count(), 5);
         assert_eq!(Request::ApplySqrt { xi: vec![1.0] }.apply_count(), 1);
         assert_eq!(Request::Stats.apply_count(), 0);
+    }
+
+    #[test]
+    fn op_tags_are_stable() {
+        assert_eq!(Request::Sample { count: 1, seed: 0 }.op(), "sample");
+        assert_eq!(Request::ApplySqrt { xi: vec![] }.op(), "apply_sqrt");
+        assert_eq!(
+            Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.op(),
+            "infer"
+        );
+        assert_eq!(Request::Stats.op(), "stats");
     }
 }

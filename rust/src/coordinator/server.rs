@@ -1,40 +1,59 @@
-//! The coordinator: a thread-based request loop with dynamic batching.
+//! The coordinator: a thread-based request loop with dynamic batching
+//! over a **named multi-model registry**.
 //!
-//! Clients `submit` requests; worker threads drain the shared queue,
-//! coalescing consecutive batchable requests (samples / explicit applies)
-//! into a single batched `√K_ICR` executable call of at most
-//! `max_batch` applies — the same bucketed-batching pattern a serving
-//! router uses, applied to GP field evaluation. Inference requests run
-//! the Adam loop inline on a worker.
+//! Clients `submit` requests (optionally routed to a named model); worker
+//! threads drain the shared queue, coalescing consecutive batchable
+//! requests *for the same model* (samples / explicit applies) into a
+//! single batched `√K` executable call of at most `max_batch` applies —
+//! the same bucketed-batching pattern a serving router uses, applied to
+//! GP field evaluation. Inference requests run the Adam loop inline on a
+//! worker.
 //!
 //! Determinism: every `Sample` carries its own seed and expands to
 //! excitations *before* batching, so responses are independent of how
 //! requests happen to be grouped. (Tested by the property suite.)
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{Backend, ServerConfig};
+use crate::config::{ServerConfig, DEFAULT_MODEL_NAME};
+use crate::error::IcrError;
+use crate::json::{self, Value};
 use crate::metrics::Registry;
-use crate::optim::{Adam, Trace};
+use crate::model::{GpModel, ModelBuilder};
 use crate::rng::Rng;
-use crate::runtime::PjrtService;
 
-use super::engine::{FieldEngine, NativeEngine, PjrtEngine};
+use super::protocol::SUPPORTED_PROTOCOLS;
 use super::request::{Envelope, Request, RequestId, Response};
+
+/// One hosted model: the engine plus its private metrics.
+struct ModelEntry {
+    model: Arc<dyn GpModel>,
+    metrics: Registry,
+}
 
 struct Shared {
     queue: Mutex<VecDeque<Envelope>>,
     cv: Condvar,
     shutdown: AtomicBool,
-    engine: Arc<dyn FieldEngine>,
+    models: BTreeMap<String, ModelEntry>,
+    default_model: String,
     metrics: Registry,
     cfg: ServerConfig,
     next_id: AtomicU64,
+}
+
+impl Shared {
+    fn entry(&self, name: &str) -> Result<&ModelEntry, IcrError> {
+        self.models.get(name).ok_or_else(|| IcrError::UnknownModel {
+            name: name.to_string(),
+            available: self.models.keys().cloned().collect(),
+        })
+    }
 }
 
 /// Handle to a running coordinator.
@@ -44,27 +63,46 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build the engine dictated by the config and start the worker pool.
+    /// Build every model in the config's registry and start the worker
+    /// pool. The default model preserves the single-model v1 behavior;
+    /// extra named models are routable via [`Coordinator::submit_to`].
     pub fn start(cfg: ServerConfig) -> Result<Coordinator> {
-        let engine: Arc<dyn FieldEngine> = match cfg.backend {
-            Backend::Native => Arc::new(NativeEngine::from_config(&cfg.model)?),
-            Backend::Pjrt => {
-                let svc = PjrtService::start(std::path::Path::new(&cfg.artifact_dir))?;
-                let e = PjrtEngine::from_config(svc, &cfg.model)?;
-                e.warmup()?;
-                Arc::new(e)
-            }
-        };
-        Self::start_with_engine(cfg, engine)
+        let mut models: Vec<(String, Arc<dyn GpModel>)> = Vec::new();
+        for spec in cfg.model_specs() {
+            let model = ModelBuilder::from_spec(&spec)
+                .artifact_dir(&cfg.artifact_dir)
+                .build()
+                .map_err(|e| anyhow::anyhow!("building model {:?}: {e}", spec.name))?;
+            models.push((spec.name, model));
+        }
+        Self::start_with_models(cfg, models)
     }
 
-    /// Start with an explicit engine (tests inject mocks here).
-    pub fn start_with_engine(cfg: ServerConfig, engine: Arc<dyn FieldEngine>) -> Result<Coordinator> {
+    /// Start with a single explicit engine under the default name (tests
+    /// inject mocks here).
+    pub fn start_with_engine(cfg: ServerConfig, engine: Arc<dyn GpModel>) -> Result<Coordinator> {
+        Self::start_with_models(cfg, vec![(DEFAULT_MODEL_NAME.to_string(), engine)])
+    }
+
+    /// Start with an explicit named registry; the first entry is the
+    /// default model.
+    pub fn start_with_models(
+        cfg: ServerConfig,
+        models: Vec<(String, Arc<dyn GpModel>)>,
+    ) -> Result<Coordinator> {
+        anyhow::ensure!(!models.is_empty(), "coordinator needs at least one model");
+        let default_model = models[0].0.clone();
+        let mut registry = BTreeMap::new();
+        for (name, model) in models {
+            let prev = registry.insert(name.clone(), ModelEntry { model, metrics: Registry::new() });
+            anyhow::ensure!(prev.is_none(), "duplicate model name {name:?}");
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            engine,
+            models: registry,
+            default_model,
             metrics: Registry::new(),
             cfg: cfg.clone(),
             next_id: AtomicU64::new(1),
@@ -81,33 +119,88 @@ impl Coordinator {
         Ok(Coordinator { shared, workers })
     }
 
-    /// Engine metadata for clients.
-    pub fn engine(&self) -> &Arc<dyn FieldEngine> {
-        &self.shared.engine
+    /// The default model (v1 clients' implicit target).
+    pub fn engine(&self) -> &Arc<dyn GpModel> {
+        &self.shared.models[&self.shared.default_model].model
+    }
+
+    /// A named model from the registry.
+    pub fn model(&self, name: &str) -> Option<&Arc<dyn GpModel>> {
+        self.shared.models.get(name).map(|e| &e.model)
+    }
+
+    /// Registry names, default model first.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names = vec![self.shared.default_model.clone()];
+        names.extend(self.shared.models.keys().filter(|n| **n != self.shared.default_model).cloned());
+        names
+    }
+
+    /// Name of the default model.
+    pub fn default_model(&self) -> &str {
+        &self.shared.default_model
     }
 
     pub fn metrics(&self) -> &Registry {
         &self.shared.metrics
     }
 
-    /// Enqueue a request; returns the reply receiver immediately.
-    pub fn submit(&self, request: Request) -> (RequestId, mpsc::Receiver<Result<Response>>) {
+    /// Per-model metrics registry.
+    pub fn model_metrics(&self, name: &str) -> Option<&Registry> {
+        self.shared.models.get(name).map(|e| &e.metrics)
+    }
+
+    /// Enqueue a request for the default model.
+    pub fn submit(&self, request: Request) -> (RequestId, mpsc::Receiver<Result<Response, IcrError>>) {
+        self.submit_to(None, request)
+    }
+
+    /// Enqueue a request for a named model (`None` = default); returns the
+    /// reply receiver immediately. Unknown names answer with a typed
+    /// [`IcrError::UnknownModel`] on the receiver instead of enqueueing.
+    pub fn submit_to(
+        &self,
+        model: Option<&str>,
+        request: Request,
+    ) -> (RequestId, mpsc::Receiver<Result<Response, IcrError>>) {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        let name = model.unwrap_or(&self.shared.default_model).to_string();
         self.shared.metrics.counter("requests_submitted").inc();
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Envelope { id, request, reply: tx });
-            self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
+        match self.shared.entry(&name) {
+            Err(e) => {
+                self.shared.metrics.counter("requests_failed").inc();
+                let _ = tx.send(Err(e));
+            }
+            Ok(entry) => {
+                entry.metrics.counter("requests_submitted").inc();
+                {
+                    let mut q = self.shared.queue.lock().unwrap();
+                    q.push_back(Envelope { id, model: name, request, reply: tx });
+                    self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
+                }
+                self.shared.cv.notify_one();
+            }
         }
-        self.shared.cv.notify_one();
         (id, rx)
     }
 
-    /// Submit and block for the reply.
-    pub fn call(&self, request: Request) -> Result<Response> {
-        let (_, rx) = self.submit(request);
-        rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped the reply channel"))?
+    /// Submit to the default model and block for the reply.
+    pub fn call(&self, request: Request) -> Result<Response, IcrError> {
+        self.call_model(None, request)
+    }
+
+    /// Submit to a named model and block for the reply.
+    pub fn call_model(&self, model: Option<&str>, request: Request) -> Result<Response, IcrError> {
+        let (_, rx) = self.submit_to(model, request);
+        rx.recv()
+            .map_err(|_| IcrError::Internal("coordinator dropped the reply channel".into()))?
+    }
+
+    /// Structured stats snapshot (same document served for `stats`
+    /// requests): global counters plus a per-model section.
+    pub fn stats_json(&self) -> Value {
+        stats_json(&self.shared)
     }
 
     /// Drain the queue and stop all workers.
@@ -120,9 +213,30 @@ impl Coordinator {
     }
 }
 
+fn stats_json(shared: &Shared) -> Value {
+    let mut models: BTreeMap<String, Value> = BTreeMap::new();
+    for (name, entry) in &shared.models {
+        let mut section = entry.metrics.to_json();
+        if let Value::Object(map) = &mut section {
+            map.insert("descriptor".to_string(), entry.model.descriptor().to_json());
+        }
+        models.insert(name.clone(), section);
+    }
+    json::obj(vec![
+        ("version", json::s(crate::VERSION)),
+        (
+            "protocol",
+            json::arr(SUPPORTED_PROTOCOLS.iter().map(|&v| json::num(v as f64)).collect()),
+        ),
+        ("default_model", json::s(&shared.default_model)),
+        ("global", shared.metrics.to_json()),
+        ("models", Value::Object(models)),
+    ])
+}
+
 /// Pop a batch: the first envelope plus, within the batching window, more
-/// batchable envelopes until `max_batch` applies are collected. Returns
-/// (envelopes, total applies).
+/// batchable envelopes *for the same model* until `max_batch` applies are
+/// collected.
 fn pop_batch(shared: &Shared) -> Option<Vec<Envelope>> {
     let mut q = shared.queue.lock().unwrap();
     loop {
@@ -131,16 +245,20 @@ fn pop_batch(shared: &Shared) -> Option<Vec<Envelope>> {
                 shared.metrics.gauge("queue_depth").set(q.len() as f64);
                 return Some(vec![first]);
             }
+            let model = first.model.clone();
             let mut batch = vec![first];
             let mut applies: usize = batch[0].request.apply_count();
             let deadline = Instant::now() + Duration::from_micros(shared.cfg.max_wait_us);
+            let coalescable = |e: &Envelope, applies: usize, max: usize| {
+                e.request.batchable()
+                    && e.model == model
+                    && applies + e.request.apply_count() <= max
+            };
             loop {
-                // Take whatever is already queued and batchable.
+                // Take whatever is already queued, batchable and co-routed.
                 while applies < shared.cfg.max_batch {
                     match q.front() {
-                        Some(e) if e.request.batchable()
-                            && applies + e.request.apply_count() <= shared.cfg.max_batch =>
-                        {
+                        Some(e) if coalescable(e, applies, shared.cfg.max_batch) => {
                             let e = q.pop_front().unwrap();
                             applies += e.request.apply_count();
                             batch.push(e);
@@ -155,7 +273,10 @@ fn pop_batch(shared: &Shared) -> Option<Vec<Envelope>> {
                 let wait = deadline.saturating_duration_since(Instant::now());
                 let (guard, timeout) = shared.cv.wait_timeout(q, wait).unwrap();
                 q = guard;
-                if timeout.timed_out() && q.front().map(|e| !e.request.batchable()).unwrap_or(true)
+                if timeout.timed_out()
+                    && q.front()
+                        .map(|e| !coalescable(e, applies, shared.cfg.max_batch))
+                        .unwrap_or(true)
                 {
                     break;
                 }
@@ -181,20 +302,49 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
+/// Terminal accounting for one request: `requests_completed` and
+/// `requests_failed` are disjoint, so
+/// `submitted == completed + failed + in-flight` holds globally and per
+/// model (unknown-model rejections count as failed at submit time).
+fn complete(shared: &Shared, entry: &ModelEntry, failed: bool) {
+    if failed {
+        shared.metrics.counter("requests_failed").inc();
+        entry.metrics.counter("requests_failed").inc();
+    } else {
+        shared.metrics.counter("requests_completed").inc();
+        entry.metrics.counter("requests_completed").inc();
+    }
+}
+
 fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     let t0 = Instant::now();
+    // Every envelope in a batch routes to the same model (pop_batch only
+    // coalesces co-routed requests), so resolve the entry once.
+    let entry = match shared.entry(&batch[0].model) {
+        Ok(e) => e,
+        Err(e) => {
+            // Defensive: submit_to validates names, so this only triggers
+            // if a test enqueues raw envelopes.
+            for env in batch {
+                let _ = env.reply.send(Err(e.clone()));
+            }
+            return;
+        }
+    };
+
     // Fast path: a single non-batchable request.
     if batch.len() == 1 && !batch[0].request.batchable() {
         let env = batch.into_iter().next().unwrap();
-        let result = serve_single(shared, &env.request);
-        shared.metrics.counter("requests_completed").inc();
+        let result = serve_single(shared, entry, &env.request);
+        complete(shared, entry, result.is_err());
         shared.metrics.histogram("request_latency").observe(t0);
+        entry.metrics.histogram("request_latency").observe(t0);
         let _ = env.reply.send(result);
         return;
     }
 
     // Expand every batchable request into excitation vectors.
-    let dof = shared.engine.total_dof();
+    let dof = entry.model.total_dof();
     let mut all_xi: Vec<Vec<f64>> = Vec::new();
     let mut spans: Vec<(usize, usize)> = Vec::new(); // per-envelope [start, len)
     for env in &batch {
@@ -212,9 +362,12 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         spans.push((start, all_xi.len() - start));
     }
 
-    let outputs = shared.engine.apply_sqrt_batch(&all_xi);
+    let outputs = entry.model.apply_sqrt_batch(&all_xi);
     shared.metrics.counter("applies_executed").add(all_xi.len() as u64);
+    entry.metrics.counter("applies_executed").add(all_xi.len() as u64);
+    entry.metrics.counter("batches_executed").inc();
     shared.metrics.histogram("batch_latency").observe(t0);
+    entry.metrics.histogram("batch_latency").observe(t0);
 
     match outputs {
         Ok(fields) => {
@@ -227,39 +380,32 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                     }
                     _ => unreachable!(),
                 };
-                shared.metrics.counter("requests_completed").inc();
+                complete(shared, entry, false);
                 let _ = env.reply.send(Ok(resp));
             }
         }
         Err(e) => {
-            let msg = format!("{e:#}");
-            shared.metrics.counter("requests_failed").add(batch.len() as u64);
             for env in batch {
-                let _ = env.reply.send(Err(anyhow::anyhow!("batched apply failed: {msg}")));
+                complete(shared, entry, true);
+                let _ = env.reply.send(Err(e.clone()));
             }
         }
     }
     shared.metrics.histogram("request_latency").observe(t0);
+    entry.metrics.histogram("request_latency").observe(t0);
 }
 
-fn serve_single(shared: &Shared, request: &Request) -> Result<Response> {
+fn serve_single(
+    shared: &Shared,
+    entry: &ModelEntry,
+    request: &Request,
+) -> Result<Response, IcrError> {
     match request {
-        Request::Stats => Ok(Response::Stats(shared.metrics.render())),
+        Request::Stats => Ok(Response::Stats(stats_json(shared))),
         Request::Infer { y_obs, sigma_n, steps, lr } => {
-            let engine = &shared.engine;
-            let dof = engine.total_dof();
-            let mut xi = vec![0.0; dof];
-            let mut opt = Adam::new(dof, *lr);
-            let mut trace = Trace::default();
-            let t0 = Instant::now();
-            for _ in 0..*steps {
-                let (loss, grad) = engine.loss_grad(&xi, y_obs, *sigma_n)?;
-                trace.losses.push(loss);
-                opt.step(&mut xi, &grad);
-            }
-            trace.wall_s = t0.elapsed().as_secs_f64();
+            let (field, trace) = entry.model.infer(y_obs, *sigma_n, *steps, *lr)?;
             shared.metrics.counter("inferences_completed").inc();
-            let field = engine.apply_sqrt_batch(std::slice::from_ref(&xi))?.remove(0);
+            entry.metrics.counter("inferences_completed").inc();
             Ok(Response::Inference { field, trace })
         }
         _ => unreachable!("batchable request routed to serve_single"),
@@ -269,7 +415,7 @@ fn serve_single(shared: &Shared, request: &Request) -> Result<Response> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelConfig;
+    use crate::config::{Backend, ModelConfig, ModelSpec};
     use crate::testutil::{prop_check, PropConfig};
     use std::collections::HashSet;
 
@@ -368,15 +514,108 @@ mod tests {
     }
 
     #[test]
-    fn stats_render() {
+    fn stats_are_structured_and_per_model() {
         let c = start(1, 2);
         let _ = c.call(Request::Sample { count: 1, seed: 0 }).unwrap();
         match c.call(Request::Stats).unwrap() {
-            Response::Stats(text) => {
-                assert!(text.contains("requests_submitted"), "{text}");
-                assert!(text.contains("applies_executed"), "{text}");
+            Response::Stats(v) => {
+                assert!(
+                    v.get_path("global.counters.requests_submitted")
+                        .and_then(Value::as_f64)
+                        .unwrap()
+                        >= 1.0,
+                    "{}",
+                    v.to_json()
+                );
+                assert_eq!(
+                    v.get_path("models.default.descriptor.backend").and_then(Value::as_str),
+                    Some("native")
+                );
+                assert!(
+                    v.get_path("models.default.counters.applies_executed")
+                        .and_then(Value::as_f64)
+                        .unwrap()
+                        >= 1.0
+                );
+                assert_eq!(v.get("default_model").and_then(Value::as_str), Some("default"));
             }
             other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn multi_model_routing_and_isolation() {
+        let mut cfg = test_config(2, 4);
+        cfg.extra_models = vec![
+            ModelSpec { name: "kiss".into(), backend: Backend::Kissgp, model: cfg.model.clone() },
+            ModelSpec { name: "ref".into(), backend: Backend::Exact, model: cfg.model.clone() },
+        ];
+        let c = Coordinator::start(cfg).unwrap();
+        assert_eq!(c.model_names(), vec!["default", "kiss", "ref"]);
+
+        // Same N everywhere (same modeled points), different dof.
+        let n = c.engine().n_points();
+        assert_eq!(c.model("kiss").unwrap().n_points(), n);
+        assert_eq!(c.model("ref").unwrap().n_points(), n);
+
+        // Route a sample to each; shapes and per-model counters line up.
+        for name in ["default", "kiss", "ref"] {
+            match c.call_model(Some(name), Request::Sample { count: 2, seed: 5 }).unwrap() {
+                Response::Samples(s) => {
+                    assert_eq!(s.len(), 2, "{name}");
+                    assert_eq!(s[0].len(), n, "{name}");
+                }
+                other => panic!("{name}: {other:?}"),
+            }
+            assert_eq!(c.model_metrics(name).unwrap().counter("applies_executed").get(), 2);
+        }
+
+        // Unknown model answers with a typed error, not a hang.
+        match c.call_model(Some("nope"), Request::Stats) {
+            Err(IcrError::UnknownModel { name, available }) => {
+                assert_eq!(name, "nope");
+                assert_eq!(available, vec!["default", "kiss", "ref"]);
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_never_mix_models() {
+        // One worker, generous batching window: interleaved requests for
+        // two models must still produce correct per-model outputs.
+        let mut cfg = test_config(1, 16);
+        cfg.max_wait_us = 2000;
+        cfg.extra_models = vec![ModelSpec {
+            name: "ref".into(),
+            backend: Backend::Exact,
+            model: cfg.model.clone(),
+        }];
+        let c = Coordinator::start(cfg).unwrap();
+        let n = c.engine().n_points();
+        let pending: Vec<_> = (0..20)
+            .map(|i| {
+                let target = if i % 2 == 0 { None } else { Some("ref") };
+                (i, c.submit_to(target, Request::Sample { count: 1, seed: 7 }))
+            })
+            .collect();
+        // Seed 7 must give the model-specific deterministic answer on both
+        // engines — mixing a batch would feed the wrong dof/engine.
+        let want_native = c.engine().sample(1, 7).unwrap().remove(0);
+        let want_exact = c.model("ref").unwrap().sample(1, 7).unwrap().remove(0);
+        for (i, (_, rx)) in pending {
+            let got = match rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap() {
+                Response::Samples(mut s) => s.remove(0),
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(got.len(), n);
+            if i % 2 == 0 {
+                assert_eq!(got, want_native, "request {i} not served by native");
+            } else {
+                assert_eq!(got, want_exact, "request {i} not served by exact");
+            }
         }
         c.shutdown();
     }

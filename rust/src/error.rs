@@ -1,0 +1,148 @@
+//! Typed error surface of the serving stack (protocol v2).
+//!
+//! The request path used to funnel every failure through stringly
+//! `anyhow::Error`; v2 of the JSONL protocol reports machine-readable
+//! error frames instead, so the coordinator and the wire codec share this
+//! enum. Each variant maps to a stable `kind` string on the wire
+//! (`{"error": {"kind": "...", "message": "..."}}`).
+
+use std::fmt;
+
+/// Errors produced on the coordinator request path and encoded into
+/// protocol-v2 error frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IcrError {
+    /// Request named a model the registry does not host.
+    UnknownModel { name: String, available: Vec<String> },
+    /// Request `op` is not part of the protocol.
+    UnknownOp(String),
+    /// Frame was not valid JSON / missing required fields.
+    MalformedRequest(String),
+    /// Frame declared a protocol version the server does not speak.
+    UnsupportedProtocol(u64),
+    /// A vector argument had the wrong length.
+    ShapeMismatch { what: &'static str, expected: usize, got: usize },
+    /// A scalar argument was out of range (σ ≤ 0, steps = 0, …).
+    InvalidParameter(String),
+    /// The model cannot serve this op (e.g. no loss-grad artifact).
+    Unsupported(String),
+    /// The backing engine failed executing the request.
+    Backend(String),
+    /// Coordinator-internal failure (dropped reply channel, poisoned lock).
+    Internal(String),
+}
+
+impl IcrError {
+    /// Stable wire identifier for the error class.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            IcrError::UnknownModel { .. } => "unknown_model",
+            IcrError::UnknownOp(_) => "unknown_op",
+            IcrError::MalformedRequest(_) => "malformed_request",
+            IcrError::UnsupportedProtocol(_) => "unsupported_protocol",
+            IcrError::ShapeMismatch { .. } => "shape_mismatch",
+            IcrError::InvalidParameter(_) => "invalid_parameter",
+            IcrError::Unsupported(_) => "unsupported",
+            IcrError::Backend(_) => "backend",
+            IcrError::Internal(_) => "internal",
+        }
+    }
+
+    /// Wrap an engine/backend failure, keeping the full anyhow chain.
+    pub fn backend(e: impl fmt::Display) -> Self {
+        IcrError::Backend(format!("{e}"))
+    }
+
+    /// Reconstruct from a decoded wire frame. Unknown kinds degrade to
+    /// [`IcrError::Internal`] so old clients survive new server kinds.
+    pub fn from_wire(kind: &str, message: &str) -> Self {
+        match kind {
+            "unknown_model" => {
+                IcrError::UnknownModel { name: message.to_string(), available: Vec::new() }
+            }
+            "unknown_op" => IcrError::UnknownOp(message.to_string()),
+            "malformed_request" => IcrError::MalformedRequest(message.to_string()),
+            "unsupported_protocol" => {
+                IcrError::UnsupportedProtocol(message.parse().unwrap_or(0))
+            }
+            "shape_mismatch" => {
+                IcrError::ShapeMismatch { what: "wire", expected: 0, got: 0 }
+            }
+            "invalid_parameter" => IcrError::InvalidParameter(message.to_string()),
+            "unsupported" => IcrError::Unsupported(message.to_string()),
+            "backend" => IcrError::Backend(message.to_string()),
+            _ => IcrError::Internal(message.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for IcrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IcrError::UnknownModel { name, available } => {
+                write!(f, "unknown model {name:?} (available: {})", available.join(", "))
+            }
+            IcrError::UnknownOp(op) => write!(f, "unknown op {op:?}"),
+            IcrError::MalformedRequest(m) => write!(f, "malformed request: {m}"),
+            IcrError::UnsupportedProtocol(v) => {
+                write!(f, "unsupported protocol version {v} (supported: 1, 2)")
+            }
+            IcrError::ShapeMismatch { what, expected, got } => {
+                write!(f, "{what} length mismatch: expected {expected}, got {got}")
+            }
+            IcrError::InvalidParameter(m) => write!(f, "invalid parameter: {m}"),
+            IcrError::Unsupported(m) => write!(f, "unsupported operation: {m}"),
+            IcrError::Backend(m) => write!(f, "backend failure: {m}"),
+            IcrError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IcrError {}
+
+impl From<anyhow::Error> for IcrError {
+    fn from(e: anyhow::Error) -> Self {
+        IcrError::Backend(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_stable_and_distinct() {
+        let errs = [
+            IcrError::UnknownModel { name: "x".into(), available: vec![] },
+            IcrError::UnknownOp("x".into()),
+            IcrError::MalformedRequest("x".into()),
+            IcrError::UnsupportedProtocol(3),
+            IcrError::ShapeMismatch { what: "xi", expected: 1, got: 2 },
+            IcrError::InvalidParameter("x".into()),
+            IcrError::Unsupported("x".into()),
+            IcrError::Backend("x".into()),
+            IcrError::Internal("x".into()),
+        ];
+        let kinds: std::collections::BTreeSet<&str> = errs.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds.len(), errs.len());
+        for e in &errs {
+            // Every kind survives a wire round-trip onto the same kind.
+            assert_eq!(IcrError::from_wire(e.kind(), "m").kind(), e.kind());
+        }
+    }
+
+    #[test]
+    fn display_names_the_problem() {
+        let e = IcrError::UnknownModel { name: "kiss".into(), available: vec!["default".into()] };
+        let msg = e.to_string();
+        assert!(msg.contains("kiss") && msg.contains("default"), "{msg}");
+    }
+
+    #[test]
+    fn anyhow_interop_both_directions() {
+        let ic: IcrError = anyhow::anyhow!("boom").into();
+        assert_eq!(ic.kind(), "backend");
+        let back: anyhow::Error = IcrError::UnknownOp("z".into()).into();
+        assert!(back.to_string().contains("unknown op"));
+    }
+}

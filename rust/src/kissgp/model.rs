@@ -133,6 +133,57 @@ impl KissGp {
         y
     }
 
+    /// Excitation dimension of the generative view: the circulant
+    /// embedding size. `√K_KISS · ξ` consumes one excitation per
+    /// embedding slot (see [`Self::apply_sqrt_embedding`]).
+    pub fn sqrt_dof(&self) -> usize {
+        self.n_fft
+    }
+
+    /// Smallest spectral value of the circulant embedding. Negative values
+    /// are clamped to zero by the square root, so a strongly negative
+    /// floor means the generative covariance `√K·√Kᵀ` deviates from
+    /// `K_KISS` by up to `|floor|` per mode (padding ≥ 1 makes it exact).
+    pub fn spectrum_floor(&self) -> f64 {
+        self.spectrum.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Generative square root: `W · (F⁻¹·diag(√λ⁺)·F · ξ)[..M]`.
+    ///
+    /// The circulant embedding `C = F⁻¹·diag(λ)·F` has a real symmetric
+    /// square root `S = F⁻¹·diag(√λ⁺)·F` (negative spectral mass clamped);
+    /// restricting `S·ξ` to the first `M` slots and interpolating with `W`
+    /// gives a sample whose covariance is `W·C[..M,..M]·Wᵀ = K_KISS`
+    /// (minus jitter). This is the KISS-GP realization of the paper's
+    /// generative view `s = √K·ξ`, costing the same O(N + M log M) as an
+    /// MVM — it is what lets the baseline sit behind the same `GpModel`
+    /// interface as ICR.
+    pub fn apply_sqrt_embedding(&self, xi: &[f64]) -> Vec<f64> {
+        assert_eq!(xi.len(), self.n_fft, "excitation length mismatch");
+        let mut spec = fft_real(xi);
+        for (s, lam) in spec.iter_mut().zip(&self.spectrum) {
+            let r = lam.max(0.0).sqrt();
+            *s = Complex::new(s.re * r, s.im * r);
+        }
+        let z = ifft_real(&spec);
+        self.w.apply(&z[..self.cfg.m])
+    }
+
+    /// Adjoint of [`Self::apply_sqrt_embedding`]: `S·pad(Wᵀ·g)` (the
+    /// circulant square root is symmetric, so `Sᵀ = S`).
+    pub fn apply_sqrt_embedding_transpose(&self, g: &[f64]) -> Vec<f64> {
+        assert_eq!(g.len(), self.n, "cotangent length mismatch");
+        let wt = self.w.apply_t(g);
+        let mut padded = vec![0.0; self.n_fft];
+        padded[..self.cfg.m].copy_from_slice(&wt);
+        let mut spec = fft_real(&padded);
+        for (s, lam) in spec.iter_mut().zip(&self.spectrum) {
+            let r = lam.max(0.0).sqrt();
+            *s = Complex::new(s.re * r, s.im * r);
+        }
+        ifft_real(&spec)
+    }
+
     /// The paper's timed KISS-GP *forward pass*: `K⁻¹·y` with the fixed
     /// CG budget plus the stochastic log-determinant. Returns
     /// `(solution, logdet_estimate, cg_residual)`.
@@ -276,6 +327,51 @@ mod tests {
         let dense = model.covariance_matrix();
         let exact = crate::linalg::Cholesky::new(&dense).unwrap().logdet();
         assert!((logdet - exact).abs() / exact.abs() < 0.15, "SLQ {logdet} vs exact {exact}");
+    }
+
+    #[test]
+    fn sqrt_embedding_reproduces_covariance_with_full_padding() {
+        // With padding ≥ 1 the embedding is exact and PSD, so the implicit
+        // covariance Σ_j (√K e_j)(√K e_j)ᵀ must equal K_KISS (no jitter).
+        let kern = Matern::nu32(1.5, 1.0);
+        let pts = uniform_points(20);
+        let cfg = KissGpConfig { m: 20, padding: 1.0, jitter: 0.0, cg_iters: 40, logdet_probes: 10, lanczos_iters: 15 };
+        let model = KissGp::build(&kern, &pts, cfg).unwrap();
+        assert!(model.spectrum_floor() > -1e-12, "embedding spectrum not PSD");
+        let dof = model.sqrt_dof();
+        let n = model.n();
+        let mut acc = Matrix::zeros(n, n);
+        let mut e = vec![0.0; dof];
+        for j in 0..dof {
+            e[j] = 1.0;
+            let col = model.apply_sqrt_embedding(&e);
+            e[j] = 0.0;
+            for r in 0..n {
+                for c in 0..n {
+                    acc[(r, c)] += col[r] * col[c];
+                }
+            }
+        }
+        let want = model.covariance_matrix();
+        let err = (&acc - &want).max_abs();
+        assert!(err < 1e-9, "implicit vs MVM covariance differ by {err}");
+    }
+
+    #[test]
+    fn sqrt_embedding_adjoint_identity() {
+        let kern = Matern::nu32(1.0, 1.0);
+        let pts = log_points(32);
+        let model = KissGp::build(&kern, &pts, KissGpConfig::paper_speed(32)).unwrap();
+        let mut rng = Rng::new(41);
+        for _ in 0..3 {
+            let x = rng.standard_normal_vec(model.sqrt_dof());
+            let y = rng.standard_normal_vec(model.n());
+            let sx = model.apply_sqrt_embedding(&x);
+            let sty = model.apply_sqrt_embedding_transpose(&y);
+            let lhs: f64 = sx.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let rhs: f64 = x.iter().zip(&sty).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+        }
     }
 
     #[test]

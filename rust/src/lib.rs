@@ -14,19 +14,36 @@
 //! Layer map (see `DESIGN.md`):
 //! - **L1/L2** live in `python/compile/` (Pallas refinement kernels + JAX
 //!   model), AOT-lowered once to HLO-text artifacts.
-//! - **L3** is this crate: the [`coordinator`] serving loop and [`runtime`]
-//!   PJRT executor, plus every substrate the paper's evaluation needs,
-//!   implemented from scratch: [`linalg`], [`fft`], [`rng`], [`kernels`],
-//!   [`chart`], the native [`icr`] engine, the [`kissgp`] baseline,
-//!   [`gp`] exact reference, [`config`]/[`cli`]/[`json`]/[`metrics`]
-//!   infrastructure, the [`bench`] harness and [`experiments`] drivers
-//!   that regenerate every table and figure of the paper.
+//! - **L3** is this crate: the [`coordinator`] serving loop (multi-model
+//!   registry + versioned JSONL protocol) and [`runtime`] PJRT executor,
+//!   the unified [`model`] API ([`model::GpModel`] + [`model::ModelBuilder`])
+//!   over every engine family, plus every substrate the paper's evaluation
+//!   needs, implemented from scratch: [`linalg`], [`fft`], [`rng`],
+//!   [`kernels`], [`chart`], the native [`icr`] engine, the [`kissgp`]
+//!   baseline, [`gp`] exact reference, [`config`]/[`cli`]/[`json`]/
+//!   [`error`]/[`metrics`] infrastructure, the [`bench`] harness and
+//!   [`experiments`] drivers that regenerate every table and figure of
+//!   the paper.
+//!
+//! Start with [`prelude`]:
+//!
+//! ```ignore
+//! use icr::prelude::*;
+//!
+//! let model = <dyn GpModel>::builder()
+//!     .kernel("matern32(rho=1.0, amp=1.0)")
+//!     .chart("paper_log")
+//!     .target_n(200)
+//!     .build()?;
+//! let samples = model.sample(3, 42)?;
+//! ```
 
 pub mod bench;
 pub mod chart;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod fft;
 pub mod gp;
@@ -36,7 +53,33 @@ pub mod kernels;
 pub mod kissgp;
 pub mod linalg;
 pub mod metrics;
+pub mod model;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
 pub mod testutil;
+
+/// Crate version (from `Cargo.toml`), reported by `icr --version`, the
+/// serve banner, and `stats` responses.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// One-stop imports for building and serving models.
+pub mod prelude {
+    pub use crate::chart::{Chart, IdentityChart, LogChart};
+    pub use crate::config::{
+        Backend, ModelConfig, ModelSpec, ServerConfig, DEFAULT_MODEL_NAME,
+    };
+    pub use crate::coordinator::{
+        Coordinator, Request, Response, PROTOCOL_VERSION, SUPPORTED_PROTOCOLS,
+    };
+    pub use crate::error::IcrError;
+    pub use crate::icr::{IcrEngine, RefinementParams};
+    pub use crate::kernels::{Kernel, Matern, Rbf};
+    pub use crate::model::{
+        default_obs_indices, ExactModel, GpModel, KissGpModel, ModelBuilder,
+        ModelDescriptor, NativeEngine, PjrtEngine,
+    };
+    pub use crate::optim::Trace;
+    pub use crate::rng::Rng;
+    pub use crate::VERSION;
+}

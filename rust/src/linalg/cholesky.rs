@@ -136,6 +136,23 @@ impl Cholesky {
         }
         y
     }
+
+    /// Apply the transposed factor: `Lᵀ·x` — the adjoint of
+    /// [`Self::apply_sqrt`], needed for backpropagating through the dense
+    /// generative model (mirrors `IcrEngine::apply_sqrt_transpose`).
+    pub fn apply_sqrt_transpose(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        assert_eq!(x.len(), n);
+        let mut y = vec![0.0; n];
+        for j in 0..n {
+            let mut acc = 0.0;
+            for i in j..n {
+                acc += self.l[(i, j)] * x[i];
+            }
+            y[j] = acc;
+        }
+        y
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +215,20 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-13);
         }
+    }
+
+    #[test]
+    fn apply_sqrt_transpose_satisfies_adjoint_identity() {
+        // ⟨L·x, y⟩ = ⟨x, Lᵀ·y⟩ for random-ish x, y.
+        let a = spd_matrix(6);
+        let ch = Cholesky::new(&a).unwrap();
+        let x: Vec<f64> = (0..6).map(|i| ((i * 7) as f64 * 0.13).sin()).collect();
+        let y: Vec<f64> = (0..6).map(|i| ((i * 3) as f64 * 0.29).cos()).collect();
+        let lx = ch.apply_sqrt(&x);
+        let lty = ch.apply_sqrt_transpose(&y);
+        let lhs: f64 = lx.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let rhs: f64 = x.iter().zip(&lty).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-12, "{lhs} vs {rhs}");
     }
 
     #[test]

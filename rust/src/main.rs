@@ -11,12 +11,13 @@ use anyhow::{bail, Context, Result};
 
 use icr::cli::{render_help, Args, FlagSpec};
 use icr::config::{Backend, ServerConfig};
-use icr::coordinator::{Coordinator, Request, Response};
-use icr::json::{self, Value};
+use icr::coordinator::{protocol, Coordinator, Request, Response};
+use icr::model::GpModel;
 use icr::rng::Rng;
 use icr::runtime::PjrtRuntime;
 
-const SWITCHES: &[&str] = &["help", "dump-config", "dump-matrices", "rank-probe", "verbose"];
+const SWITCHES: &[&str] =
+    &["help", "version", "dump-config", "dump-matrices", "rank-probe", "verbose"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -26,12 +27,26 @@ fn main() {
     }
 }
 
+fn protocol_line() -> String {
+    let versions: Vec<String> =
+        protocol::SUPPORTED_PROTOCOLS.iter().map(|v| format!("v{v}")).collect();
+    format!("icr {} | protocols {} (current v{})", icr::VERSION, versions.join(", "), protocol::PROTOCOL_VERSION)
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, SWITCHES).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.has_switch("version") {
+        println!("{}", protocol_line());
+        return Ok(());
+    }
     let cmd: Vec<&str> = args.command.iter().map(String::as_str).collect();
     match cmd.as_slice() {
         [] | ["help"] => {
             print_help();
+            Ok(())
+        }
+        ["version"] => {
+            println!("{}", protocol_line());
             Ok(())
         }
         ["sample"] => cmd_sample(&args),
@@ -58,13 +73,15 @@ fn print_help() {
         ("sample", "draw GP samples via the coordinator"),
         ("serve", "JSONL request loop on stdin/stdout (the serving mode)"),
         ("infer", "posterior inference on synthetic observations"),
+        ("version", "print crate + protocol versions"),
         ("experiment kl-table", "§5.1 refinement-parameter selection table"),
         ("experiment fig3", "Fig. 3 covariance accuracy + §5.2 rank probe"),
         ("experiment fig4", "Fig. 4 forward-pass timing sweep"),
         ("artifacts-check", "compile + self-check every AOT artifact"),
     ];
     let flags = [
-        FlagSpec { name: "backend", help: "native | pjrt", default: Some("native"), is_switch: false },
+        FlagSpec { name: "backend", help: "native | pjrt | kissgp | exact", default: Some("native"), is_switch: false },
+        FlagSpec { name: "models", help: "extra named models, e.g. kiss=kissgp,ref=exact", default: None, is_switch: false },
         FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
         FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
         FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
@@ -85,8 +102,12 @@ fn print_help() {
         FlagSpec { name: "sigma", help: "noise std (infer)", default: Some("0.05"), is_switch: false },
         FlagSpec { name: "dump-matrices", help: "fig3: write full covariance CSVs", default: None, is_switch: true },
         FlagSpec { name: "dump-config", help: "print resolved config and exit", default: None, is_switch: true },
+        FlagSpec { name: "version", help: "print crate + protocol versions", default: None, is_switch: true },
     ];
     print!("{}", render_help("icr", "Iterative Charted Refinement GP engine", &subcommands, &flags));
+    println!("PROTOCOL:\n  {}", protocol_line());
+    println!("  serve speaks JSONL: v1 untagged frames (default model) and v2 tagged");
+    println!("  frames with model routing — see DESIGN.md §4.");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -148,12 +169,23 @@ fn cmd_sample(args: &Args) -> Result<()> {
 }
 
 /// JSONL serving loop: one request object per stdin line, one response
-/// object per stdout line. EOF drains and shuts down.
+/// object per stdout line. Accepts both protocol versions (v1 untagged →
+/// default model; v2 tagged → routed by `model`). EOF drains and shuts
+/// down, printing a structured stats document to stderr.
 fn cmd_serve(args: &Args) -> Result<()> {
     let (cfg, coord) = make_coordinator(args)?;
+    let model_list: Vec<String> = coord
+        .model_names()
+        .iter()
+        .map(|name| {
+            let m = coord.model(name).expect("registered model");
+            format!("{name}={}(n={})", m.descriptor().backend, m.n_points())
+        })
+        .collect();
     eprintln!(
-        "icr serve: engine {} | workers {} | max_batch {} | reading JSONL from stdin",
-        coord.engine().name(),
+        "{} | serve: models [{}] | workers {} | max_batch {} | reading JSONL from stdin",
+        protocol_line(),
+        model_list.join(", "),
         cfg.workers,
         cfg.max_batch
     );
@@ -165,90 +197,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line) {
-            Ok(req) => {
-                let (id, rx) = coord.submit(req);
-                pending.push((id, rx));
+        match protocol::parse_request(&line) {
+            Ok(frame) => {
+                let (id, rx) = coord.submit_to(frame.model.as_deref(), frame.request);
+                let model =
+                    frame.model.unwrap_or_else(|| coord.default_model().to_string());
+                pending.push((frame.version, frame.client_id.unwrap_or(id), model, rx));
             }
             Err(e) => {
+                // Error frames are versioned like the request would have
+                // been (best effort: unparseable lines answer in v2).
+                let version = if line.contains("\"v\"") { 2 } else { 1 };
                 let mut out = stdout.lock();
-                writeln!(out, "{}", json::obj(vec![("error", json::s(&format!("{e:#}")))]).to_json())?;
+                writeln!(
+                    out,
+                    "{}",
+                    protocol::encode_response(version, 0, None, &Err(e)).to_json()
+                )?;
             }
         }
     }
-    for (id, rx) in pending {
-        let resp = rx.recv().map_err(|_| anyhow::anyhow!("reply channel closed"))?;
+    for (version, id, model, rx) in pending {
+        let result = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("reply channel closed"))?;
         let mut out = stdout.lock();
-        writeln!(out, "{}", render_response(id, resp).to_json())?;
+        writeln!(
+            out,
+            "{}",
+            protocol::encode_response(version, id, Some(&model), &result).to_json()
+        )?;
     }
-    eprintln!("{}", coord.metrics().render());
+    eprintln!("{}", coord.stats_json().to_json_pretty());
     coord.shutdown();
     Ok(())
-}
-
-fn parse_request(line: &str) -> Result<Request> {
-    let v = Value::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let op = v.get("op").and_then(Value::as_str).context("request needs op")?;
-    match op {
-        "sample" => Ok(Request::Sample {
-            count: v.get("count").and_then(Value::as_usize).unwrap_or(1),
-            seed: v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
-        }),
-        "apply_sqrt" => {
-            let xi = v
-                .get("xi")
-                .and_then(Value::as_array)
-                .context("apply_sqrt needs xi")?
-                .iter()
-                .filter_map(Value::as_f64)
-                .collect();
-            Ok(Request::ApplySqrt { xi })
-        }
-        "infer" => {
-            let y = v
-                .get("y_obs")
-                .and_then(Value::as_array)
-                .context("infer needs y_obs")?
-                .iter()
-                .filter_map(Value::as_f64)
-                .collect();
-            Ok(Request::Infer {
-                y_obs: y,
-                sigma_n: v.get("sigma").and_then(Value::as_f64).unwrap_or(0.1),
-                steps: v.get("steps").and_then(Value::as_usize).unwrap_or(100),
-                lr: v.get("lr").and_then(Value::as_f64).unwrap_or(0.1),
-            })
-        }
-        "stats" => Ok(Request::Stats),
-        other => bail!("unknown op {other:?}"),
-    }
-}
-
-fn render_response(id: u64, resp: Result<Response>) -> Value {
-    let mut fields = vec![("id", json::num(id as f64))];
-    match resp {
-        Err(e) => fields.push(("error", json::s(&format!("{e:#}")))),
-        Ok(Response::Samples(s)) => {
-            fields.push((
-                "samples",
-                json::arr(
-                    s.into_iter()
-                        .map(|v| json::arr(v.into_iter().map(json::num).collect()))
-                        .collect(),
-                ),
-            ));
-        }
-        Ok(Response::Field(f)) => {
-            fields.push(("field", json::arr(f.into_iter().map(json::num).collect())));
-        }
-        Ok(Response::Inference { field, trace }) => {
-            fields.push(("field", json::arr(field.into_iter().map(json::num).collect())));
-            fields.push(("losses", json::arr(trace.losses.into_iter().map(json::num).collect())));
-            fields.push(("wall_s", json::num(trace.wall_s)));
-        }
-        Ok(Response::Stats(text)) => fields.push(("stats", json::s(&text))),
-    }
-    json::obj(fields)
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
@@ -328,5 +310,9 @@ fn cmd_fig4(args: &Args) -> Result<()> {
             let rows = icr::experiments::fig4::run_pjrt(&dir, samples)?;
             icr::experiments::fig4::report("pjrt", &rows)
         }
+        other => bail!(
+            "fig4 compares the native and pjrt lanes; backend {:?} is not timed here",
+            other.name()
+        ),
     }
 }

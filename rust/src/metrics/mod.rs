@@ -135,6 +135,60 @@ impl Registry {
         self.inner.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// Structured exposition: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: {count, mean_us, p50_us, p99_us}}}`.
+    /// Protocol-v2 `stats` responses embed this per model and globally.
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        use std::collections::BTreeMap;
+        let counters: BTreeMap<String, Value> = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), Value::Number(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Value> = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, g)| (name.clone(), Value::Number(g.get())))
+            .collect();
+        let histograms: BTreeMap<String, Value> = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| {
+                let mean = h.mean_ns();
+                (
+                    name.clone(),
+                    crate::json::obj(vec![
+                        ("count", Value::Number(h.count() as f64)),
+                        ("mean_us", Value::Number(if mean.is_nan() { 0.0 } else { mean / 1e3 })),
+                        (
+                            "p50_us",
+                            Value::Number(if h.count() == 0 { 0.0 } else { h.quantile_ns(0.5) / 1e3 }),
+                        ),
+                        (
+                            "p99_us",
+                            Value::Number(if h.count() == 0 { 0.0 } else { h.quantile_ns(0.99) / 1e3 }),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        crate::json::obj(vec![
+            ("counters", Value::Object(counters)),
+            ("gauges", Value::Object(gauges)),
+            ("histograms", Value::Object(histograms)),
+        ])
+    }
+
     /// Text exposition (stable ordering for tests and diffing).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -209,6 +263,22 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn to_json_exposes_all_metric_kinds() {
+        let r = Registry::new();
+        r.counter("requests").add(3);
+        r.gauge("depth").set(2.5);
+        r.histogram("latency").observe_ns(4096);
+        let v = r.to_json();
+        assert_eq!(v.get_path("counters.requests").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get_path("gauges.depth").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get_path("histograms.latency.count").unwrap().as_usize(), Some(1));
+        assert!(v.get_path("histograms.latency.p99_us").unwrap().as_f64().unwrap() > 0.0);
+        // Serialization must be valid JSON (no NaN/inf leaks).
+        let text = v.to_json();
+        assert!(crate::json::Value::parse(&text).is_ok(), "{text}");
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Fluent construction path for every [`GpModel`] backend.
+//!
+//! ```ignore
+//! use icr::prelude::*;
+//!
+//! let model = <dyn GpModel>::builder()
+//!     .kernel("matern32(rho=1.0, amp=1.0)")
+//!     .chart("paper_log")
+//!     .windows(5, 4)
+//!     .levels(5)
+//!     .target_n(200)
+//!     .backend(Backend::Native)
+//!     .build()?;
+//! ```
+
+use std::sync::Arc;
+
+use crate::config::{Backend, ModelConfig, ModelSpec};
+use crate::error::IcrError;
+use crate::runtime::PjrtService;
+
+use super::{ExactModel, GpModel, KissGpModel, NativeEngine, PjrtEngine};
+
+/// Builder for any engine family; defaults are the paper's §5.1 optimum
+/// on the native backend.
+#[derive(Debug, Clone)]
+pub struct ModelBuilder {
+    model: ModelConfig,
+    backend: Backend,
+    artifact_dir: String,
+}
+
+impl Default for ModelBuilder {
+    fn default() -> Self {
+        ModelBuilder {
+            model: ModelConfig::default(),
+            backend: Backend::Native,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ModelBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from an existing [`ModelConfig`] (e.g. a parsed config file).
+    pub fn from_config(model: ModelConfig) -> Self {
+        ModelBuilder { model, ..Self::default() }
+    }
+
+    /// Start from a named registry spec.
+    pub fn from_spec(spec: &ModelSpec) -> Self {
+        ModelBuilder { model: spec.model.clone(), backend: spec.backend, ..Self::default() }
+    }
+
+    /// Kernel spec string, e.g. `matern32(rho=1.0, amp=1.0)`.
+    pub fn kernel(mut self, spec: &str) -> Self {
+        self.model.kernel_spec = spec.to_string();
+        self
+    }
+
+    /// Chart spec string: `paper_log` | `identity` | `log(...)` | `power(...)`.
+    pub fn chart(mut self, spec: &str) -> Self {
+        self.model.chart_spec = spec.to_string();
+        self
+    }
+
+    /// Refinement window shape `(n_csz, n_fsz)`.
+    pub fn windows(mut self, n_csz: usize, n_fsz: usize) -> Self {
+        self.model.n_csz = n_csz;
+        self.model.n_fsz = n_fsz;
+        self
+    }
+
+    /// Number of refinement levels.
+    pub fn levels(mut self, n_lvl: usize) -> Self {
+        self.model.n_lvl = n_lvl;
+        self
+    }
+
+    /// Target number of modeled points N.
+    pub fn target_n(mut self, n: usize) -> Self {
+        self.model.target_n = n;
+        self
+    }
+
+    /// Engine family executing the model.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Artifact directory for the PJRT backend.
+    pub fn artifact_dir(mut self, dir: &str) -> Self {
+        self.artifact_dir = dir.to_string();
+        self
+    }
+
+    /// The accumulated model configuration.
+    pub fn config(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    /// Construct the model. PJRT spins up (and warms) its own service
+    /// actor; the other families are pure in-process builds.
+    pub fn build(self) -> Result<Arc<dyn GpModel>, IcrError> {
+        match self.backend {
+            Backend::Native => {
+                let e = NativeEngine::from_config(&self.model).map_err(IcrError::from)?;
+                Ok(Arc::new(e))
+            }
+            Backend::Pjrt => {
+                let svc = PjrtService::start(std::path::Path::new(&self.artifact_dir))
+                    .map_err(IcrError::from)?;
+                let e = PjrtEngine::from_config(svc, &self.model).map_err(IcrError::from)?;
+                e.warmup().map_err(IcrError::from)?;
+                Ok(Arc::new(e))
+            }
+            Backend::Kissgp => {
+                let e = KissGpModel::from_config(&self.model).map_err(IcrError::from)?;
+                Ok(Arc::new(e))
+            }
+            Backend::Exact => {
+                let e = ExactModel::from_config(&self.model).map_err(IcrError::from)?;
+                Ok(Arc::new(e))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_every_knob() {
+        let b = ModelBuilder::new()
+            .kernel("matern52(rho=2.0, amp=1.0)")
+            .chart("identity")
+            .windows(3, 2)
+            .levels(2)
+            .target_n(24)
+            .backend(Backend::Exact)
+            .artifact_dir("custom");
+        assert_eq!(b.config().kernel_spec, "matern52(rho=2.0, amp=1.0)");
+        assert_eq!(b.config().chart_spec, "identity");
+        assert_eq!((b.config().n_csz, b.config().n_fsz), (3, 2));
+        assert_eq!(b.config().n_lvl, 2);
+        assert_eq!(b.config().target_n, 24);
+        assert_eq!(b.artifact_dir, "custom");
+    }
+
+    #[test]
+    fn builds_native_kiss_and_exact_on_the_same_points() {
+        let mk = |backend| {
+            ModelBuilder::new()
+                .windows(3, 2)
+                .levels(3)
+                .target_n(40)
+                .backend(backend)
+                .build()
+                .unwrap()
+        };
+        let native = mk(Backend::Native);
+        let kiss = mk(Backend::Kissgp);
+        let exact = mk(Backend::Exact);
+        assert_eq!(native.n_points(), kiss.n_points());
+        assert_eq!(native.n_points(), exact.n_points());
+        let pn = native.domain_points();
+        let pk = kiss.domain_points();
+        for (a, b) in pn.iter().zip(&pk) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dyn_entry_point_works() {
+        let model = <dyn GpModel>::builder()
+            .windows(3, 2)
+            .levels(2)
+            .target_n(16)
+            .build()
+            .unwrap();
+        assert_eq!(model.descriptor().backend, "native");
+    }
+}

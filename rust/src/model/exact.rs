@@ -1,0 +1,149 @@
+//! Exact dense GP reference behind the [`GpModel`] interface.
+//!
+//! `√K` is the dense Cholesky factor — O(N³) to build, O(N²) to apply.
+//! This is the ground-truth model the approximations are measured against
+//! (Fig. 3); hosting it in the same registry lets a deployment A/B an
+//! exact small model against sparse large ones over one protocol.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::error::IcrError;
+use crate::gp::ExactGp;
+use crate::linalg::Cholesky;
+
+use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+
+/// Dense exact GP on the modeled points of a [`ModelConfig`].
+pub struct ExactModel {
+    chol: Cholesky,
+    points: Vec<f64>,
+    obs: Vec<usize>,
+    kernel_spec: String,
+    chart_spec: String,
+}
+
+impl ExactModel {
+    /// Build the dense reference on the same modeled points the native
+    /// engine would use. Fails if the kernel matrix is not numerically PD.
+    pub fn from_config(cfg: &ModelConfig) -> Result<Self> {
+        let points = cfg.domain_points()?;
+        let kernel = cfg.kernel()?;
+        let gp = ExactGp::new(kernel.as_ref(), &points)?;
+        let chol = Cholesky::new(gp.covariance())
+            .map_err(|e| anyhow::anyhow!("exact covariance not PD: {e}"))?;
+        let obs = default_obs_indices(points.len());
+        Ok(ExactModel {
+            chol,
+            points,
+            obs,
+            kernel_spec: cfg.kernel_spec.clone(),
+            chart_spec: cfg.chart_spec.clone(),
+        })
+    }
+}
+
+impl GpModel for ExactModel {
+    fn descriptor(&self) -> ModelDescriptor {
+        ModelDescriptor {
+            name: format!("exact(n={})", self.points.len()),
+            backend: "exact",
+            kernel: self.kernel_spec.clone(),
+            chart: self.chart_spec.clone(),
+            n: self.points.len(),
+            dof: self.points.len(),
+        }
+    }
+
+    fn n_points(&self) -> usize {
+        self.points.len()
+    }
+
+    fn total_dof(&self) -> usize {
+        self.points.len()
+    }
+
+    fn domain_points(&self) -> Vec<f64> {
+        self.points.clone()
+    }
+
+    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        let dof = self.total_dof();
+        xi.iter()
+            .map(|x| {
+                if x.len() != dof {
+                    return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
+                }
+                Ok(self.chol.apply_sqrt(x))
+            })
+            .collect()
+    }
+
+    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
+        -> Result<(f64, Vec<f64>), IcrError> {
+        check_loss_grad_args(self.total_dof(), self.obs.len(), xi, y_obs, sigma_n)?;
+        Ok(super::gaussian_map_loss_grad(
+            self.n_points(),
+            &self.obs,
+            xi,
+            y_obs,
+            sigma_n,
+            |x| self.chol.apply_sqrt(x),
+            |c| self.chol.apply_sqrt_transpose(c),
+        ))
+    }
+
+    fn obs_indices(&self) -> Vec<usize> {
+        self.obs.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::exact_posterior;
+    use crate::rng::Rng;
+
+    fn exact() -> ExactModel {
+        let cfg = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 2, target_n: 24, ..ModelConfig::default() };
+        ExactModel::from_config(&cfg).unwrap()
+    }
+
+    #[test]
+    fn shapes_and_descriptor() {
+        let m = exact();
+        assert_eq!(m.total_dof(), m.n_points());
+        assert_eq!(m.domain_points().len(), m.n_points());
+        assert_eq!(m.descriptor().backend, "exact");
+    }
+
+    #[test]
+    fn infer_reaches_closed_form_posterior_mean() {
+        // With the EXACT square root, the MAP of the standardized
+        // objective equals the closed-form posterior mean — the dense
+        // version of the posterior_oracle integration test.
+        let m = exact();
+        let kernel = crate::kernels::parse_kernel("matern32(rho=1.0, amp=1.0)").unwrap();
+        let mut rng = Rng::new(12);
+        let y = rng.standard_normal_vec(m.obs_indices().len());
+        let sigma = 0.2;
+        let (field, trace) = m.infer(&y, sigma, 3000, 0.05).unwrap();
+        assert!(trace.losses[2999] < trace.losses[0]);
+        let post = exact_posterior(
+            kernel.as_ref(),
+            &m.domain_points(),
+            &m.obs_indices(),
+            &y,
+            sigma,
+        )
+        .unwrap();
+        for i in 0..m.n_points() {
+            assert!(
+                (field[i] - post.mean[i]).abs() < 2e-2,
+                "point {i}: MAP {} vs closed form {}",
+                field[i],
+                post.mean[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! KISS-GP baseline behind the [`GpModel`] interface.
+//!
+//! The generative view `s = √K_KISS·ξ` uses the circulant spectral square
+//! root (`KissGp::apply_sqrt_embedding`): excitations live on the FFT
+//! embedding grid (dof = n_fft ≥ M), samples land on the N modeled points.
+//! Serving KISS-GP through the same trait as ICR is exactly the §5
+//! comparison — same kernel, same modeled points, different approximation.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::error::IcrError;
+use crate::kissgp::{KissGp, KissGpConfig};
+
+use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+
+/// KISS-GP model over the modeled points of a [`ModelConfig`].
+pub struct KissGpModel {
+    model: KissGp,
+    points: Vec<f64>,
+    obs: Vec<usize>,
+    kernel_spec: String,
+    chart_spec: String,
+}
+
+impl KissGpModel {
+    /// Build on the same modeled points (chart image of the refinement
+    /// grid) the native engine would use, so cross-model comparisons are
+    /// apples-to-apples. Uses the paper's Fig. 4 speed configuration
+    /// (M = N, padding 0, jitter 1e-6).
+    pub fn from_config(cfg: &ModelConfig) -> Result<Self> {
+        let points = cfg.domain_points()?;
+        let kernel = cfg.kernel()?;
+        let kiss = KissGp::build(kernel.as_ref(), &points, KissGpConfig::paper_speed(points.len()))?;
+        let obs = default_obs_indices(points.len());
+        Ok(KissGpModel {
+            model: kiss,
+            points,
+            obs,
+            kernel_spec: cfg.kernel_spec.clone(),
+            chart_spec: cfg.chart_spec.clone(),
+        })
+    }
+
+    pub fn inner(&self) -> &KissGp {
+        &self.model
+    }
+}
+
+impl GpModel for KissGpModel {
+    fn descriptor(&self) -> ModelDescriptor {
+        ModelDescriptor {
+            name: format!("kissgp(n={}, m={})", self.points.len(), self.model.config().m),
+            backend: "kissgp",
+            kernel: self.kernel_spec.clone(),
+            chart: self.chart_spec.clone(),
+            n: self.points.len(),
+            dof: self.model.sqrt_dof(),
+        }
+    }
+
+    fn n_points(&self) -> usize {
+        self.points.len()
+    }
+
+    fn total_dof(&self) -> usize {
+        self.model.sqrt_dof()
+    }
+
+    fn domain_points(&self) -> Vec<f64> {
+        self.points.clone()
+    }
+
+    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        let dof = self.total_dof();
+        xi.iter()
+            .map(|x| {
+                if x.len() != dof {
+                    return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
+                }
+                Ok(self.model.apply_sqrt_embedding(x))
+            })
+            .collect()
+    }
+
+    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
+        -> Result<(f64, Vec<f64>), IcrError> {
+        check_loss_grad_args(self.total_dof(), self.obs.len(), xi, y_obs, sigma_n)?;
+        Ok(super::gaussian_map_loss_grad(
+            self.n_points(),
+            &self.obs,
+            xi,
+            y_obs,
+            sigma_n,
+            |x| self.model.apply_sqrt_embedding(x),
+            |c| self.model.apply_sqrt_embedding_transpose(c),
+        ))
+    }
+
+    fn obs_indices(&self) -> Vec<usize> {
+        self.obs.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn kiss() -> KissGpModel {
+        let cfg = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() };
+        KissGpModel::from_config(&cfg).unwrap()
+    }
+
+    #[test]
+    fn shapes_and_descriptor() {
+        let m = kiss();
+        assert!(m.n_points() >= 40);
+        assert!(m.total_dof() >= m.n_points());
+        assert_eq!(m.domain_points().len(), m.n_points());
+        let d = m.descriptor();
+        assert_eq!(d.backend, "kissgp");
+        assert_eq!(d.dof, m.total_dof());
+    }
+
+    #[test]
+    fn loss_grad_matches_finite_differences() {
+        let m = kiss();
+        let mut rng = Rng::new(6);
+        let xi = rng.standard_normal_vec(m.total_dof());
+        let y = rng.standard_normal_vec(m.obs_indices().len());
+        let sigma = 0.4;
+        let (l0, grad) = m.loss_grad(&xi, &y, sigma).unwrap();
+        assert!(l0 > 0.0);
+        let eps = 1e-6;
+        for &i in &[0usize, 11, m.total_dof() - 1] {
+            let mut xp = xi.clone();
+            xp[i] += eps;
+            let (lp, _) = m.loss_grad(&xp, &y, sigma).unwrap();
+            let mut xm = xi.clone();
+            xm[i] -= eps;
+            let (lm, _) = m.loss_grad(&xm, &y, sigma).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "grad[{i}] = {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sample_statistics_have_unit_scale_marginals() {
+        // Samples through the circulant sqrt must carry roughly the kernel
+        // marginal variance (amp² = 1) on interior points.
+        let m = kiss();
+        let n = m.n_points();
+        let n_samp = 4000;
+        let mut acc = vec![0.0; n];
+        for s in 0..n_samp {
+            let draw = m.sample(1, 10_000 + s as u64).unwrap().remove(0);
+            for i in 0..n {
+                acc[i] += draw[i] * draw[i];
+            }
+        }
+        let mid = n / 2;
+        let emp = acc[mid] / n_samp as f64;
+        assert!((emp - 1.0).abs() < 0.25, "marginal variance at midpoint: {emp}");
+    }
+}

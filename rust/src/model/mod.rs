@@ -1,0 +1,248 @@
+//! The unified model API: every GP approximation in the crate behind one
+//! object-safe trait.
+//!
+//! The paper's pitch is a *generative* GP (`s = √K·ξ`) whose square root
+//! applies in O(N); the serving layer should not care which approximation
+//! provides that square root. [`GpModel`] is that seam: the native ICR
+//! engine, the AOT/PJRT engine, the KISS-GP baseline and the exact dense
+//! reference all implement it, the [`crate::coordinator`] hosts any number
+//! of them by name, and [`ModelBuilder`] is the one construction path
+//! (`<dyn GpModel>::builder().kernel(...).chart(...).build()`).
+//!
+//! Architecture notes live in `DESIGN.md` §2.
+
+pub mod builder;
+pub mod exact;
+pub mod kiss;
+pub mod native;
+pub mod pjrt;
+
+pub use builder::ModelBuilder;
+pub use exact::ExactModel;
+pub use kiss::KissGpModel;
+pub use native::NativeEngine;
+pub use pjrt::PjrtEngine;
+
+use std::time::Instant;
+
+use crate::error::IcrError;
+use crate::json::{self, Value};
+use crate::optim::{Adam, Trace};
+use crate::rng::Rng;
+
+/// Observation pattern shared by every backend and the AOT'd loss
+/// artifact: every other modeled point (stride 2, offset 0).
+pub fn default_obs_indices(n: usize) -> Vec<usize> {
+    (0..n).step_by(2).collect()
+}
+
+/// Static metadata describing a constructed model: what a client sees when
+/// it asks the registry what is being served.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDescriptor {
+    /// Human-readable instance label, e.g. `native(n=200)`.
+    pub name: String,
+    /// Engine family: `native` | `pjrt` | `kissgp` | `exact`.
+    pub backend: &'static str,
+    /// Kernel spec string, e.g. `matern32(rho=1.0, amp=1.0)`.
+    pub kernel: String,
+    /// Chart spec string, e.g. `paper_log`.
+    pub chart: String,
+    /// Number of modeled points N.
+    pub n: usize,
+    /// Excitation degrees of freedom (length of ξ).
+    pub dof: usize,
+}
+
+impl ModelDescriptor {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("backend", json::s(self.backend)),
+            ("kernel", json::s(&self.kernel)),
+            ("chart", json::s(&self.chart)),
+            ("n", json::num(self.n as f64)),
+            ("dof", json::num(self.dof as f64)),
+        ])
+    }
+}
+
+/// A backend able to serve the generative GP operations: apply `√K`
+/// (batched), draw seeded samples, and evaluate/optimize the standardized
+/// regression objective (paper Eq. 3).
+///
+/// Object safety is deliberate — the coordinator stores `Arc<dyn GpModel>`
+/// per registry entry, and the ROADMAP's sharding/batching work composes
+/// models without knowing their family.
+pub trait GpModel: Send + Sync {
+    /// Descriptor metadata (N, dof, backend, kernel/chart specs).
+    fn descriptor(&self) -> ModelDescriptor;
+
+    /// Number of modeled points N.
+    fn n_points(&self) -> usize;
+
+    /// Excitation dimension (length of the flat ξ vector).
+    fn total_dof(&self) -> usize;
+
+    /// Modeled locations in the domain 𝒟.
+    fn domain_points(&self) -> Vec<f64>;
+
+    /// Apply `√K` to each excitation vector.
+    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError>;
+
+    /// `(loss, ∂loss/∂ξ)` of the standardized objective (paper Eq. 3)
+    /// with observations on the model's observation pattern.
+    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
+        -> Result<(f64, Vec<f64>), IcrError>;
+
+    /// Indices of observed points for [`Self::loss_grad`].
+    fn obs_indices(&self) -> Vec<usize>;
+
+    /// Display name; defaults to the descriptor label.
+    fn name(&self) -> String {
+        self.descriptor().name
+    }
+
+    /// Draw `count` approximate GP samples for a client seed.
+    ///
+    /// The default expands the seed into excitations with [`Rng`] and
+    /// applies the square root — byte-identical to what the coordinator's
+    /// dynamic batcher does, so samples never depend on the path taken.
+    fn sample(&self, count: usize, seed: u64) -> Result<Vec<Vec<f64>>, IcrError> {
+        let dof = self.total_dof();
+        let mut rng = Rng::new(seed);
+        let xi: Vec<Vec<f64>> = (0..count).map(|_| rng.standard_normal_vec(dof)).collect();
+        self.apply_sqrt_batch(&xi)
+    }
+
+    /// Posterior MAP of the standardized objective: `steps` Adam updates
+    /// from ξ = 0, returning the inferred field and the loss trace.
+    fn infer(
+        &self,
+        y_obs: &[f64],
+        sigma_n: f64,
+        steps: usize,
+        lr: f64,
+    ) -> Result<(Vec<f64>, Trace), IcrError> {
+        if steps == 0 {
+            return Err(IcrError::InvalidParameter("steps must be ≥ 1".into()));
+        }
+        let dof = self.total_dof();
+        let mut xi = vec![0.0; dof];
+        let mut opt = Adam::new(dof, lr);
+        let mut trace = Trace::default();
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let (loss, grad) = self.loss_grad(&xi, y_obs, sigma_n)?;
+            trace.losses.push(loss);
+            opt.step(&mut xi, &grad);
+        }
+        trace.wall_s = t0.elapsed().as_secs_f64();
+        let field = self.apply_sqrt_batch(std::slice::from_ref(&xi))?.remove(0);
+        Ok((field, trace))
+    }
+}
+
+impl dyn GpModel {
+    /// Entry point of the fluent construction path:
+    /// `<dyn GpModel>::builder().kernel(...).chart(...).build()`.
+    pub fn builder() -> ModelBuilder {
+        ModelBuilder::new()
+    }
+}
+
+/// Shared argument validation for `loss_grad` implementations.
+pub(crate) fn check_loss_grad_args(
+    dof: usize,
+    n_obs: usize,
+    xi: &[f64],
+    y_obs: &[f64],
+    sigma_n: f64,
+) -> Result<(), IcrError> {
+    if xi.len() != dof {
+        return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: xi.len() });
+    }
+    if y_obs.len() != n_obs {
+        return Err(IcrError::ShapeMismatch { what: "y_obs", expected: n_obs, got: y_obs.len() });
+    }
+    if sigma_n <= 0.0 || !sigma_n.is_finite() {
+        return Err(IcrError::InvalidParameter(format!("noise std must be positive, got {sigma_n}")));
+    }
+    Ok(())
+}
+
+/// Shared body of the standardized MAP objective (paper Eq. 3):
+/// `loss = ½‖(y − (√K·ξ)[obs])/σ‖² + ½‖ξ‖²`, `grad = √Kᵀ·cot + ξ`,
+/// parameterized by the engine's forward/adjoint square-root applies.
+/// Every in-process family (native, KISS-GP, exact) routes through this
+/// so the objective can only ever change in one place.
+pub(crate) fn gaussian_map_loss_grad(
+    n_points: usize,
+    obs: &[usize],
+    xi: &[f64],
+    y_obs: &[f64],
+    sigma_n: f64,
+    apply_sqrt: impl FnOnce(&[f64]) -> Vec<f64>,
+    apply_sqrt_transpose: impl FnOnce(&[f64]) -> Vec<f64>,
+) -> (f64, Vec<f64>) {
+    let s = apply_sqrt(xi);
+    let inv_var = 1.0 / (sigma_n * sigma_n);
+    let mut loss = 0.0;
+    let mut cotangent = vec![0.0; n_points];
+    for (&o, &y) in obs.iter().zip(y_obs) {
+        let r = s[o] - y;
+        loss += 0.5 * r * r * inv_var;
+        cotangent[o] = r * inv_var;
+    }
+    loss += 0.5 * xi.iter().map(|v| v * v).sum::<f64>();
+    let mut grad = apply_sqrt_transpose(&cotangent);
+    for (g, &x) in grad.iter_mut().zip(xi) {
+        *g += x;
+    }
+    (loss, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_obs_pattern_is_stride_two() {
+        assert_eq!(default_obs_indices(5), vec![0, 2, 4]);
+        assert_eq!(default_obs_indices(4).len(), 2);
+        assert_eq!(default_obs_indices(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn descriptor_serializes_every_field() {
+        let d = ModelDescriptor {
+            name: "native(n=200)".into(),
+            backend: "native",
+            kernel: "matern32(rho=1.0, amp=1.0)".into(),
+            chart: "paper_log".into(),
+            n: 200,
+            dof: 263,
+        };
+        let v = d.to_json();
+        assert_eq!(v.get("backend").unwrap().as_str(), Some("native"));
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(200));
+        assert_eq!(v.get("dof").unwrap().as_usize(), Some(263));
+    }
+
+    #[test]
+    fn loss_grad_arg_checks() {
+        assert!(check_loss_grad_args(3, 2, &[0.0; 3], &[0.0; 2], 0.1).is_ok());
+        assert!(matches!(
+            check_loss_grad_args(3, 2, &[0.0; 4], &[0.0; 2], 0.1),
+            Err(IcrError::ShapeMismatch { what: "xi", .. })
+        ));
+        assert!(matches!(
+            check_loss_grad_args(3, 2, &[0.0; 3], &[0.0; 1], 0.1),
+            Err(IcrError::ShapeMismatch { what: "y_obs", .. })
+        ));
+        assert!(matches!(
+            check_loss_grad_args(3, 2, &[0.0; 3], &[0.0; 2], -1.0),
+            Err(IcrError::InvalidParameter(_))
+        ));
+    }
+}

@@ -1,0 +1,181 @@
+//! The Rust-native backend wrapping [`IcrEngine`].
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::error::IcrError;
+use crate::icr::IcrEngine;
+
+use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+
+/// The Rust-native engine behind the [`GpModel`] interface.
+pub struct NativeEngine {
+    engine: IcrEngine,
+    obs: Vec<usize>,
+    kernel_spec: String,
+    chart_spec: String,
+}
+
+impl NativeEngine {
+    pub fn from_config(model: &ModelConfig) -> Result<Self> {
+        let kernel = model.kernel()?;
+        let chart = model.chart()?;
+        let params = model.refinement_params()?;
+        let engine = IcrEngine::build(kernel.as_ref(), chart.as_ref(), params)
+            .context("building native ICR engine")?;
+        let obs = default_obs_indices(engine.n_points());
+        Ok(NativeEngine {
+            engine,
+            obs,
+            kernel_spec: model.kernel_spec.clone(),
+            chart_spec: model.chart_spec.clone(),
+        })
+    }
+
+    pub fn inner(&self) -> &IcrEngine {
+        &self.engine
+    }
+}
+
+impl GpModel for NativeEngine {
+    fn descriptor(&self) -> ModelDescriptor {
+        ModelDescriptor {
+            name: format!("native(n={})", self.engine.n_points()),
+            backend: "native",
+            kernel: self.kernel_spec.clone(),
+            chart: self.chart_spec.clone(),
+            n: self.engine.n_points(),
+            dof: self.engine.total_dof(),
+        }
+    }
+
+    fn n_points(&self) -> usize {
+        self.engine.n_points()
+    }
+
+    fn total_dof(&self) -> usize {
+        self.engine.total_dof()
+    }
+
+    fn domain_points(&self) -> Vec<f64> {
+        self.engine.domain_points().to_vec()
+    }
+
+    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        let dof = self.total_dof();
+        xi.iter()
+            .map(|x| {
+                if x.len() != dof {
+                    return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
+                }
+                Ok(self.engine.apply_sqrt(x))
+            })
+            .collect()
+    }
+
+    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
+        -> Result<(f64, Vec<f64>), IcrError> {
+        check_loss_grad_args(self.total_dof(), self.obs.len(), xi, y_obs, sigma_n)?;
+        Ok(super::gaussian_map_loss_grad(
+            self.n_points(),
+            &self.obs,
+            xi,
+            y_obs,
+            sigma_n,
+            |x| self.engine.apply_sqrt(x),
+            |c| self.engine.apply_sqrt_transpose(c),
+        ))
+    }
+
+    fn obs_indices(&self) -> Vec<usize> {
+        self.obs.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn native() -> NativeEngine {
+        let model = ModelConfig {
+            n_csz: 3,
+            n_fsz: 2,
+            n_lvl: 3,
+            target_n: 40,
+            ..ModelConfig::default()
+        };
+        NativeEngine::from_config(&model).unwrap()
+    }
+
+    #[test]
+    fn native_engine_shapes() {
+        let e = native();
+        assert!(e.n_points() >= 40);
+        assert_eq!(e.obs_indices().len(), e.n_points().div_ceil(2));
+        assert_eq!(e.domain_points().len(), e.n_points());
+        assert!(e.name().starts_with("native"));
+        let d = e.descriptor();
+        assert_eq!(d.backend, "native");
+        assert_eq!(d.n, e.n_points());
+        assert_eq!(d.dof, e.total_dof());
+    }
+
+    #[test]
+    fn native_batch_matches_singles() {
+        let e = native();
+        let mut rng = Rng::new(3);
+        let xi: Vec<Vec<f64>> = (0..4).map(|_| rng.standard_normal_vec(e.total_dof())).collect();
+        let batch = e.apply_sqrt_batch(&xi).unwrap();
+        for (i, x) in xi.iter().enumerate() {
+            let single = e.apply_sqrt_batch(std::slice::from_ref(x)).unwrap();
+            assert_eq!(batch[i], single[0]);
+        }
+    }
+
+    #[test]
+    fn native_loss_grad_matches_finite_differences() {
+        let e = native();
+        let mut rng = Rng::new(5);
+        let xi = rng.standard_normal_vec(e.total_dof());
+        let y: Vec<f64> = rng.standard_normal_vec(e.obs_indices().len());
+        let sigma = 0.3;
+        let (l0, grad) = e.loss_grad(&xi, &y, sigma).unwrap();
+        assert!(l0 > 0.0);
+        let eps = 1e-6;
+        for &i in &[0usize, 7, e.total_dof() - 1] {
+            let mut xp = xi.clone();
+            xp[i] += eps;
+            let (lp, _) = e.loss_grad(&xp, &y, sigma).unwrap();
+            let mut xm = xi.clone();
+            xm[i] -= eps;
+            let (lm, _) = e.loss_grad(&xm, &y, sigma).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "grad[{i}] = {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn native_loss_grad_validates_inputs() {
+        let e = native();
+        let xi = vec![0.0; e.total_dof()];
+        let y = vec![0.0; e.obs_indices().len()];
+        assert!(e.loss_grad(&xi[1..], &y, 0.1).is_err());
+        assert!(e.loss_grad(&xi, &y[1..], 0.1).is_err());
+        assert!(e.loss_grad(&xi, &y, -1.0).is_err());
+    }
+
+    #[test]
+    fn default_sample_is_deterministic_per_seed() {
+        let e = native();
+        let a = e.sample(2, 99).unwrap();
+        let b = e.sample(2, 99).unwrap();
+        assert_eq!(a, b);
+        let c = e.sample(2, 100).unwrap();
+        assert_ne!(a, c);
+    }
+}

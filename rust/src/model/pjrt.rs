@@ -1,0 +1,176 @@
+//! The PJRT backend executing AOT-compiled artifacts through the
+//! thread-confined [`PjrtService`] actor. Batch requests are routed to
+//! the smallest compiled batch executable that fits and padded up to its
+//! batch size (standard bucketed batching).
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::error::IcrError;
+use crate::runtime::PjrtService;
+
+use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+
+/// AOT/PJRT engine behind the [`GpModel`] interface.
+pub struct PjrtEngine {
+    service: PjrtService,
+    apply_name: String,
+    loss_grad_name: Option<String>,
+    n: usize,
+    dof: usize,
+    domain_points_head: Vec<f64>,
+    obs: Vec<usize>,
+    kernel_spec: String,
+    chart_spec: String,
+}
+
+impl PjrtEngine {
+    /// Pick artifacts matching the model config's (n_csz, n_fsz, target N).
+    pub fn from_config(service: PjrtService, model: &ModelConfig) -> Result<Self> {
+        let params = model.refinement_params()?;
+        let n = params.final_size();
+        let (apply_name, dof, domain_points_head, loss_grad_name) = {
+            let manifest = service.manifest();
+            let apply = manifest
+                .by_kind("icr")
+                .into_iter()
+                .find(|a| {
+                    a.meta_usize("n") == Some(n)
+                        && a.meta_usize("n_csz") == Some(params.n_csz)
+                        && a.meta_usize("n_fsz") == Some(params.n_fsz)
+                        && a.meta_usize("batch").unwrap_or(1) == 1
+                })
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no icr_apply artifact for (csz={}, fsz={}, n={n}); run `make artifacts`",
+                        params.n_csz,
+                        params.n_fsz
+                    )
+                })?;
+            let dof = apply.meta_usize("dof").unwrap_or(params.total_dof());
+            let head = apply
+                .meta
+                .get("domain_points_head")
+                .and_then(crate::json::Value::as_array)
+                .map(|a| a.iter().filter_map(crate::json::Value::as_f64).collect())
+                .unwrap_or_default();
+            let lg = manifest
+                .by_kind("icr_loss_grad")
+                .into_iter()
+                .find(|a| a.meta_usize("n") == Some(n))
+                .map(|a| a.name.clone());
+            (apply.name.clone(), dof, head, lg)
+        };
+        Ok(PjrtEngine {
+            service,
+            apply_name,
+            loss_grad_name,
+            n,
+            dof,
+            domain_points_head,
+            obs: default_obs_indices(n),
+            kernel_spec: model.kernel_spec.clone(),
+            chart_spec: model.chart_spec.clone(),
+        })
+    }
+
+    /// Compile-and-validate eagerly (otherwise the first request pays).
+    pub fn warmup(&self) -> Result<()> {
+        self.service.self_check(&self.apply_name)?;
+        if let Some(lg) = &self.loss_grad_name {
+            self.service.warmup(std::slice::from_ref(lg))?;
+        }
+        Ok(())
+    }
+}
+
+impl GpModel for PjrtEngine {
+    fn descriptor(&self) -> ModelDescriptor {
+        ModelDescriptor {
+            name: format!(
+                "pjrt({}, platform={})",
+                self.apply_name,
+                self.service.platform().unwrap_or_else(|_| "?".into())
+            ),
+            backend: "pjrt",
+            kernel: self.kernel_spec.clone(),
+            chart: self.chart_spec.clone(),
+            n: self.n,
+            dof: self.dof,
+        }
+    }
+
+    fn n_points(&self) -> usize {
+        self.n
+    }
+
+    fn total_dof(&self) -> usize {
+        self.dof
+    }
+
+    fn domain_points(&self) -> Vec<f64> {
+        // The manifest carries only a head (full points are recomputable
+        // from the chart); native engines give the full vector.
+        self.domain_points_head.clone()
+    }
+
+    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        for x in xi {
+            if x.len() != self.dof {
+                return Err(IcrError::ShapeMismatch {
+                    what: "xi",
+                    expected: self.dof,
+                    got: x.len(),
+                });
+            }
+        }
+        // Route to the smallest batched executable that fits; fall back to
+        // per-request singles when none is compiled.
+        if xi.len() > 1 {
+            let spec = self
+                .service
+                .manifest()
+                .best_icr_batch(self.n, xi.len())
+                .map(|s| (s.name.clone(), s.meta_usize("batch").unwrap_or(1)));
+            if let Some((name, b)) = spec {
+                let mut flat = vec![0.0; b * self.dof];
+                for (i, x) in xi.iter().enumerate() {
+                    flat[i * self.dof..(i + 1) * self.dof].copy_from_slice(x);
+                }
+                let out =
+                    self.service.execute_f64(&name, &[&flat]).map_err(IcrError::from)?;
+                let s = &out[0];
+                return Ok((0..xi.len())
+                    .map(|i| s[i * self.n..(i + 1) * self.n].to_vec())
+                    .collect());
+            }
+        }
+        xi.iter()
+            .map(|x| {
+                Ok(self
+                    .service
+                    .execute_f64(&self.apply_name, &[&x[..]])
+                    .map_err(IcrError::from)?
+                    .remove(0))
+            })
+            .collect()
+    }
+
+    fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
+        -> Result<(f64, Vec<f64>), IcrError> {
+        let name = self.loss_grad_name.as_ref().ok_or_else(|| {
+            IcrError::Unsupported(format!("no icr_loss_grad artifact for n={}", self.n))
+        })?;
+        check_loss_grad_args(self.dof, self.obs.len(), xi, y_obs, sigma_n)?;
+        let sigma = [sigma_n];
+        let mut out =
+            self.service.execute_f64(name, &[xi, y_obs, &sigma]).map_err(IcrError::from)?;
+        let grad = out.remove(1);
+        let loss = out.remove(0)[0];
+        Ok((loss, grad))
+    }
+
+    fn obs_indices(&self) -> Vec<usize> {
+        self.obs.clone()
+    }
+}

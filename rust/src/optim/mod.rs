@@ -67,7 +67,7 @@ impl Sgd {
 
 /// Optimization trace: per-step losses plus wall time, recorded by the
 /// end-to-end driver into EXPERIMENTS.md.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     pub losses: Vec<f64>,
     pub wall_s: f64,

@@ -1,11 +1,13 @@
 //! End-to-end coordinator tests on the native backend (no artifacts
-//! needed): concurrent clients, mixed workloads, recovery statistics.
+//! needed): concurrent clients, mixed workloads, multi-model serving,
+//! recovery statistics.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use icr::config::{ModelConfig, ServerConfig};
-use icr::coordinator::{Coordinator, Request, Response};
+use icr::config::{Backend, ModelConfig, ModelSpec, ServerConfig};
+use icr::coordinator::{protocol, Coordinator, Request, Response};
+use icr::json::Value;
 use icr::rng::Rng;
 
 fn small_cfg() -> ServerConfig {
@@ -129,6 +131,96 @@ fn batching_actually_happens_under_load() {
     // Mean batch size must exceed 1 — the batcher did coalesce.
     let h = coord.metrics().histogram("batch_applies");
     assert!(h.count() < 30, "every request went out in its own batch");
+    coord.shutdown();
+}
+
+#[test]
+fn serve_two_named_models_over_both_protocol_versions() {
+    // The acceptance scenario for the protocol-v2 redesign: one process
+    // hosts the native ICR model AND the KISS-GP baseline, v2 frames
+    // route by model id, bare v1 frames are answered by the default
+    // model, and unknown models produce typed v2 error frames — all
+    // through the same wire codec `icr serve` uses.
+    let mut cfg = small_cfg();
+    cfg.extra_models = vec![ModelSpec {
+        name: "kiss".into(),
+        backend: Backend::Kissgp,
+        model: cfg.model.clone(),
+    }];
+    let coord = Coordinator::start(cfg).unwrap();
+    assert_eq!(coord.model_names(), vec!["default", "kiss"]);
+
+    let serve_line = |line: &str| -> Value {
+        match protocol::parse_request(line) {
+            Ok(frame) => {
+                let result = coord.call_model(frame.model.as_deref(), frame.request);
+                let model = frame
+                    .model
+                    .clone()
+                    .unwrap_or_else(|| coord.default_model().to_string());
+                protocol::encode_response(
+                    frame.version,
+                    frame.client_id.unwrap_or(0),
+                    Some(&model),
+                    &result,
+                )
+            }
+            Err(e) => protocol::encode_response(2, 0, None, &Err(e)),
+        }
+    };
+
+    // 1. v2 frame routed to the KISS-GP baseline.
+    let v = serve_line(r#"{"v": 2, "op": "sample", "model": "kiss", "id": 1, "count": 1, "seed": 9}"#);
+    assert_eq!(v.get("model").and_then(Value::as_str), Some("kiss"));
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    let kiss_direct = coord.model("kiss").unwrap().sample(1, 9).unwrap().remove(0);
+    let wire: Vec<f64> = v
+        .get_path("result.samples")
+        .and_then(Value::as_array)
+        .unwrap()[0]
+        .as_array()
+        .unwrap()
+        .iter()
+        .filter_map(Value::as_f64)
+        .collect();
+    assert_eq!(wire.len(), kiss_direct.len());
+    for (a, b) in wire.iter().zip(&kiss_direct) {
+        assert!((a - b).abs() < 1e-12, "wire sample diverges from kiss engine");
+    }
+
+    // 2. Bare v1 frame → default (native) model, legacy flat response.
+    let v = serve_line(r#"{"op": "sample", "count": 1, "seed": 9}"#);
+    assert!(v.get("v").is_none(), "v1 reply must stay untagged");
+    let native_direct = coord.engine().sample(1, 9).unwrap().remove(0);
+    let wire: Vec<f64> = v
+        .get("samples")
+        .and_then(Value::as_array)
+        .unwrap()[0]
+        .as_array()
+        .unwrap()
+        .iter()
+        .filter_map(Value::as_f64)
+        .collect();
+    for (a, b) in wire.iter().zip(&native_direct) {
+        assert!((a - b).abs() < 1e-12, "v1 frame not served by the default model");
+    }
+    // Same seed, different engines: the two replies must differ.
+    assert_ne!(wire, kiss_direct);
+
+    // 3. Unknown model → typed error frame.
+    let v = serve_line(r#"{"v": 2, "op": "stats", "model": "nope", "id": 3}"#);
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(v.get_path("error.kind").and_then(Value::as_str), Some("unknown_model"));
+
+    // 4. Stats carry per-model sections for both hosted models.
+    let v = serve_line(r#"{"v": 2, "op": "stats", "id": 4}"#);
+    let stats = v.get_path("result.stats").unwrap();
+    assert!(stats.get_path("models.default.counters.requests_completed").is_some());
+    assert!(stats.get_path("models.kiss.counters.requests_completed").is_some());
+    assert_eq!(
+        stats.get_path("models.kiss.descriptor.backend").and_then(Value::as_str),
+        Some("kissgp")
+    );
     coord.shutdown();
 }
 

@@ -1,0 +1,218 @@
+//! JSONL protocol round-trips: every v2 request/response frame kind must
+//! survive encode → serialize → parse → decode, error frames must carry
+//! typed kinds, and bare v1 frames must keep working against the default
+//! model (back-compat acceptance of the protocol bump).
+
+use icr::config::{ModelConfig, ServerConfig};
+use icr::coordinator::protocol::{
+    decode_response, encode_request, encode_response, parse_request, RequestFrame,
+    PROTOCOL_VERSION, SUPPORTED_PROTOCOLS,
+};
+use icr::coordinator::{Coordinator, Request, Response};
+use icr::error::IcrError;
+use icr::json::{self, Value};
+use icr::optim::Trace;
+
+fn all_requests() -> Vec<Request> {
+    vec![
+        Request::Sample { count: 3, seed: 1234 },
+        Request::ApplySqrt { xi: vec![0.25, -1.5, 3.0] },
+        Request::Infer { y_obs: vec![0.5, -0.5, 1.0], sigma_n: 0.125, steps: 40, lr: 0.05 },
+        Request::Stats,
+    ]
+}
+
+fn all_responses() -> Vec<Response> {
+    vec![
+        Response::Samples(vec![vec![1.0, 2.0], vec![-0.5, 0.25]]),
+        Response::Field(vec![0.125, -2.0, 3.5]),
+        Response::Inference {
+            field: vec![1.0, -1.0],
+            trace: Trace { losses: vec![10.0, 5.0, 2.5], wall_s: 0.125 },
+        },
+        Response::Stats(json::obj(vec![(
+            "global",
+            json::obj(vec![("counters", json::obj(vec![("requests_submitted", json::num(4.0))]))]),
+        )])),
+    ]
+}
+
+#[test]
+fn supported_versions_are_one_and_two() {
+    assert_eq!(SUPPORTED_PROTOCOLS, [1, 2]);
+    assert_eq!(PROTOCOL_VERSION, 2);
+}
+
+#[test]
+fn every_v2_request_frame_roundtrips() {
+    for (i, request) in all_requests().into_iter().enumerate() {
+        let frame = RequestFrame::v2(Some("kiss"), Some(100 + i as u64), request);
+        let line = encode_request(&frame).to_json();
+        let back = parse_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(back, frame, "frame {i} diverged through the wire: {line}");
+    }
+}
+
+#[test]
+fn every_v2_response_frame_roundtrips() {
+    for (i, response) in all_responses().into_iter().enumerate() {
+        let model = if i % 2 == 0 { Some("default") } else { Some("kiss") };
+        let encoded = encode_response(2, 40 + i as u64, model, &Ok(response.clone()));
+        // Through actual text, as on the wire.
+        let reparsed = Value::parse(&encoded.to_json()).unwrap();
+        let frame = decode_response(&reparsed).unwrap();
+        assert_eq!(frame.version, 2);
+        assert_eq!(frame.id, 40 + i as u64);
+        assert_eq!(frame.model.as_deref(), model);
+        assert_eq!(frame.result.as_ref().unwrap(), &response, "response {i}");
+    }
+}
+
+#[test]
+fn v2_error_frames_carry_typed_kinds() {
+    let errors = vec![
+        IcrError::UnknownModel { name: "nope".into(), available: vec!["default".into()] },
+        IcrError::UnknownOp("transmogrify".into()),
+        IcrError::MalformedRequest("bad json".into()),
+        IcrError::UnsupportedProtocol(9),
+        IcrError::ShapeMismatch { what: "xi", expected: 10, got: 3 },
+        IcrError::InvalidParameter("sigma".into()),
+        IcrError::Unsupported("no artifact".into()),
+        IcrError::Backend("engine exploded".into()),
+        IcrError::Internal("oops".into()),
+    ];
+    for err in errors {
+        let encoded = encode_response(2, 7, None, &Err(err.clone()));
+        let text = encoded.to_json();
+        let reparsed = Value::parse(&text).unwrap();
+        assert_eq!(reparsed.get("ok").and_then(Value::as_bool), Some(false), "{text}");
+        assert_eq!(
+            reparsed.get_path("error.kind").and_then(Value::as_str),
+            Some(err.kind()),
+            "{text}"
+        );
+        let frame = decode_response(&reparsed).unwrap();
+        assert_eq!(frame.result.unwrap_err().kind(), err.kind());
+    }
+}
+
+#[test]
+fn v1_request_lines_stay_untagged_and_roundtrip() {
+    for request in all_requests() {
+        let frame = RequestFrame::v1(request);
+        let line = encode_request(&frame).to_json();
+        assert!(!line.contains("\"v\""), "v1 line got tagged: {line}");
+        assert!(!line.contains("\"model\""), "v1 line got a model field: {line}");
+        assert_eq!(parse_request(&line).unwrap(), frame);
+    }
+}
+
+#[test]
+fn v1_response_rendering_matches_legacy_shape() {
+    let v = encode_response(1, 3, None, &Ok(Response::Field(vec![1.0, 2.0])));
+    // Legacy flat shape: {"id": 3, "field": [...]} — no "v"/"ok"/"result".
+    assert_eq!(v.get("id").and_then(Value::as_usize), Some(3));
+    assert!(v.get("field").is_some());
+    assert!(v.get("v").is_none() && v.get("ok").is_none() && v.get("result").is_none());
+    let frame = decode_response(&v).unwrap();
+    assert_eq!(frame.version, 1);
+    assert_eq!(frame.result.unwrap(), Response::Field(vec![1.0, 2.0]));
+
+    let err = encode_response(1, 4, None, &Err(IcrError::UnknownOp("x".into())));
+    assert!(err.get("error").and_then(Value::as_str).is_some(), "v1 errors are strings");
+}
+
+#[test]
+fn v1_stats_stay_a_string_on_the_wire() {
+    // Legacy clients parse {"id": .., "stats": "<text>"}; the structured
+    // document must be serialized into that string for v1, while v2 gets
+    // the object. decode_response recovers the structure from both.
+    let stats = json::obj(vec![("default_model", json::s("default"))]);
+    let v1 = encode_response(1, 9, None, &Ok(Response::Stats(stats.clone())));
+    let text = v1.get("stats").and_then(Value::as_str).expect("v1 stats must be a string");
+    assert!(Value::parse(text).is_ok(), "v1 stats string should hold serialized JSON");
+    let decoded = decode_response(&Value::parse(&v1.to_json()).unwrap()).unwrap();
+    assert_eq!(decoded.result.unwrap(), Response::Stats(stats.clone()));
+
+    let v2 = encode_response(2, 9, None, &Ok(Response::Stats(stats.clone())));
+    assert!(
+        v2.get_path("result.stats").unwrap().as_object().is_some(),
+        "v2 stats must be a structured object"
+    );
+}
+
+#[test]
+fn v1_frames_are_served_by_the_default_model_end_to_end() {
+    // A coordinator hosting two models must answer a bare v1 frame with
+    // the default model's result — the back-compat acceptance criterion.
+    let model = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() };
+    let mut cfg = ServerConfig { model, workers: 2, ..ServerConfig::default() };
+    cfg.extra_models = vec![icr::config::ModelSpec {
+        name: "ref".into(),
+        backend: icr::config::Backend::Exact,
+        model: cfg.model.clone(),
+    }];
+    let coord = Coordinator::start(cfg).unwrap();
+
+    let frame = parse_request(r#"{"op": "sample", "count": 1, "seed": 77}"#).unwrap();
+    assert_eq!(frame.version, 1);
+    let resp = coord.call_model(frame.model.as_deref(), frame.request).unwrap();
+    let direct = coord.engine().sample(1, 77).unwrap();
+    match resp {
+        Response::Samples(s) => assert_eq!(s, direct, "v1 frame not routed to default model"),
+        other => panic!("{other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn v2_frames_route_by_model_id_end_to_end() {
+    let model = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() };
+    let mut cfg = ServerConfig { model, workers: 2, ..ServerConfig::default() };
+    cfg.extra_models = vec![icr::config::ModelSpec {
+        name: "ref".into(),
+        backend: icr::config::Backend::Exact,
+        model: cfg.model.clone(),
+    }];
+    let coord = Coordinator::start(cfg).unwrap();
+
+    let frame =
+        parse_request(r#"{"v": 2, "op": "sample", "model": "ref", "id": 5, "count": 1, "seed": 3}"#)
+            .unwrap();
+    let resp = coord.call_model(frame.model.as_deref(), frame.request.clone()).unwrap();
+    let direct = coord.model("ref").unwrap().sample(1, 3).unwrap();
+    match &resp {
+        Response::Samples(s) => assert_eq!(s, &direct, "v2 frame not routed to named model"),
+        other => panic!("{other:?}"),
+    }
+
+    // And the response encodes as a tagged v2 frame echoing the client id.
+    let encoded =
+        encode_response(frame.version, frame.client_id.unwrap(), frame.model.as_deref(), &Ok(resp));
+    let reparsed = Value::parse(&encoded.to_json()).unwrap();
+    assert_eq!(reparsed.get("v").and_then(Value::as_usize), Some(2));
+    assert_eq!(reparsed.get("id").and_then(Value::as_usize), Some(5));
+    assert_eq!(reparsed.get("model").and_then(Value::as_str), Some("ref"));
+    assert_eq!(reparsed.get("ok").and_then(Value::as_bool), Some(true));
+    coord.shutdown();
+}
+
+#[test]
+fn stats_response_is_structured_json_on_the_wire() {
+    let model = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 2, target_n: 16, ..ModelConfig::default() };
+    let cfg = ServerConfig { model, workers: 1, ..ServerConfig::default() };
+    let coord = Coordinator::start(cfg).unwrap();
+    let _ = coord.call(Request::Sample { count: 1, seed: 0 }).unwrap();
+    let resp = coord.call(Request::Stats).unwrap();
+    let encoded = encode_response(2, 1, Some("default"), &Ok(resp));
+    let reparsed = Value::parse(&encoded.to_json()).unwrap();
+    let stats = reparsed.get_path("result.stats").expect("stats payload");
+    assert!(stats.get_path("global.counters.requests_submitted").is_some());
+    assert!(stats.get_path("models.default.descriptor.backend").is_some());
+    assert_eq!(
+        stats.get("protocol").and_then(Value::as_array).map(|a| a.len()),
+        Some(2),
+        "stats must advertise both protocol versions"
+    );
+    coord.shutdown();
+}
