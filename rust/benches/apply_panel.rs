@@ -1,0 +1,161 @@
+//! Panel-apply bench: blocked multi-excitation `√K` applies vs serial
+//! single applies, swept over batch size × thread count × N, forward and
+//! adjoint. This is the perf trajectory of the batched execution path
+//! (`DESIGN.md` §6): run with `--json` to write `BENCH_apply.json`
+//! (overridable as `--json=path`), e.g.
+//!
+//! ```text
+//! cargo bench --bench apply_panel -- --json
+//! ```
+
+use icr::bench::Runner;
+use icr::chart::IdentityChart;
+use icr::experiments::paper_chart;
+use icr::icr::{IcrEngine, PanelWorkspace, RefinementParams};
+use icr::json;
+use icr::kernels::Matern;
+use icr::rng::Rng;
+
+/// Deep refinement geometry: enough levels that the dense base-level
+/// apply stays negligible even at the largest N (the asymptotic regime
+/// the O(N) claim is about).
+fn deep_params(target: usize) -> RefinementParams {
+    let mut lvl = 5;
+    loop {
+        let p = RefinementParams::for_target(5, 4, lvl, target).expect("refinement params");
+        if p.n0 <= 64 || lvl >= 12 {
+            return p;
+        }
+        lvl += 1;
+    }
+}
+
+fn median(runner: &Runner, name: &str) -> Option<f64> {
+    runner.results.iter().find(|r| r.name == name).map(|r| r.median_ns)
+}
+
+fn main() {
+    let mut runner = Runner::new();
+    runner.header("blocked √K panel apply — batch × threads × N");
+    let kernel = Matern::nu32(1.0, 1.0);
+    let sizes = [1024usize, 4096, 16384];
+    let threads = [1usize, 2, 4];
+    const B: usize = 8;
+
+    let mut rng = Rng::new(4242);
+    for &target in &sizes {
+        let params = deep_params(target);
+        let chart = paper_chart(params, 0.02, 1.0);
+        let engine = IcrEngine::build(&kernel, &chart, params).expect("charted engine");
+        let n = engine.n_points();
+        let dof = engine.total_dof();
+        let panel = rng.standard_normal_vec(B * dof);
+        let gpanel = rng.standard_normal_vec(B * n);
+        let mut ws = PanelWorkspace::new();
+        let mut out = vec![0.0; B * n];
+        let mut gout = vec![0.0; B * dof];
+        let mut sink = 0.0;
+
+        // Baseline: B sequential single-excitation applies (the pre-panel
+        // serving path — what a coalesced batch used to cost).
+        runner.bench(&format!("apply/serial/b{B}/n{n}"), || {
+            for b in 0..B {
+                sink += engine.apply_sqrt(&panel[b * dof..(b + 1) * dof])[0];
+            }
+        });
+        runner.bench(&format!("transpose/serial/b{B}/n{n}"), || {
+            for b in 0..B {
+                sink += engine.apply_sqrt_transpose(&gpanel[b * n..(b + 1) * n])[0];
+            }
+        });
+
+        // Blocked panel applies, threaded across windows.
+        for &t in &threads {
+            runner.bench(&format!("apply/panel/b{B}/t{t}/n{n}"), || {
+                engine.apply_sqrt_multi_with(&panel, B, t, &mut ws, &mut out);
+                sink += out[0];
+            });
+            runner.bench(&format!("transpose/panel/b{B}/t{t}/n{n}"), || {
+                engine.apply_sqrt_transpose_multi_with(&gpanel, B, t, &mut ws, &mut gout);
+                sink += gout[0];
+            });
+        }
+
+        // Single-lane panel: window parallelism without batching.
+        for &t in &[1usize, 2] {
+            runner.bench(&format!("apply/panel/b1/t{t}/n{n}"), || {
+                engine.apply_sqrt_multi_with(&panel[..dof], 1, t, &mut ws, &mut out[..n]);
+                sink += out[0];
+            });
+        }
+        std::hint::black_box(sink);
+    }
+
+    // One stationary lane at the largest N: the broadcast fast path also
+    // benefits from lane blocking (R stays cache-resident, lanes share it).
+    {
+        let target = *sizes.last().unwrap();
+        let params = deep_params(target);
+        let engine = IcrEngine::build(&kernel, &IdentityChart::unit(), params)
+            .expect("stationary engine");
+        assert!(engine.is_stationary());
+        let n = engine.n_points();
+        let dof = engine.total_dof();
+        let panel = rng.standard_normal_vec(B * dof);
+        let mut ws = PanelWorkspace::new();
+        let mut out = vec![0.0; B * n];
+        let mut sink = 0.0;
+        runner.bench(&format!("apply_stationary/serial/b{B}/n{n}"), || {
+            for b in 0..B {
+                sink += engine.apply_sqrt(&panel[b * dof..(b + 1) * dof])[0];
+            }
+        });
+        runner.bench(&format!("apply_stationary/panel/b{B}/t1/n{n}"), || {
+            engine.apply_sqrt_multi_with(&panel, B, 1, &mut ws, &mut out);
+            sink += out[0];
+        });
+        std::hint::black_box(sink);
+    }
+
+    // Summaries: batching speedup (panel t1 vs B serial singles) and
+    // thread scaling (t1 vs t2/t4) per N, printed and persisted.
+    let mut summary: Vec<json::Value> = Vec::new();
+    for &target in &sizes {
+        let params = deep_params(target);
+        let n = params.final_size();
+        let serial = median(&runner, &format!("apply/serial/b{B}/n{n}"));
+        let t1 = median(&runner, &format!("apply/panel/b{B}/t1/n{n}"));
+        if let (Some(serial), Some(t1)) = (serial, t1) {
+            let speedup = serial / t1;
+            println!("apply n={n}: panel(B={B}, t=1) speedup over {B} serial singles = {speedup:.2}x");
+            summary.push(json::obj(vec![
+                ("metric", json::s("apply_panel_vs_serial")),
+                ("n", json::num(n as f64)),
+                ("batch", json::num(B as f64)),
+                ("speedup", json::num(speedup)),
+            ]));
+        }
+        for &t in &[2usize, 4] {
+            if let (Some(t1), Some(tt)) =
+                (t1, median(&runner, &format!("apply/panel/b{B}/t{t}/n{n}")))
+            {
+                let scaling = t1 / tt;
+                println!("apply n={n}: thread scaling t{t}/t1 = {scaling:.2}x");
+                summary.push(json::obj(vec![
+                    ("metric", json::s("apply_thread_scaling")),
+                    ("n", json::num(n as f64)),
+                    ("threads", json::num(t as f64)),
+                    ("speedup", json::num(scaling)),
+                ]));
+            }
+        }
+    }
+
+    runner.dump_jsonl("results/bench_apply.jsonl").ok();
+    if runner.json_requested() {
+        match runner.dump_json("BENCH_apply.json", "apply_panel", vec![("summary", json::arr(summary))]) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write JSON results: {e}"),
+        }
+    }
+}

@@ -9,7 +9,13 @@
 //!
 //! Environment knobs: `ICR_BENCH_TIME_MS` (per-benchmark budget, default
 //! 300), `ICR_BENCH_SAMPLES` (default 15).
+//!
+//! JSON mode: `cargo bench --bench <target> -- --json[=path]` makes the
+//! bench write a single structured JSON document (suite metadata + every
+//! result) via [`Runner::dump_json`] — the machine-readable perf
+//! trajectory CI tracks per PR (e.g. `BENCH_apply.json`).
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -71,6 +77,8 @@ pub struct Runner {
     filter: Option<String>,
     budget: Duration,
     samples: usize,
+    json: bool,
+    json_path: Option<String>,
     pub results: Vec<BenchResult>,
 }
 
@@ -82,14 +90,32 @@ impl Default for Runner {
 
 impl Runner {
     pub fn new() -> Self {
-        // `cargo bench -- <filter>` passes the filter as a bare argument.
+        // `cargo bench -- <filter>` passes the filter as a bare argument;
+        // `--json[=path]` switches on the structured JSON dump.
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        let mut json = false;
+        let mut json_path = None;
+        for a in std::env::args().skip(1) {
+            if a == "--json" {
+                json = true;
+            } else if let Some(p) = a.strip_prefix("--json=") {
+                json = true;
+                json_path = Some(p.to_string());
+            }
+        }
         Runner {
             filter,
             budget: Duration::from_millis(env_u64("ICR_BENCH_TIME_MS", 300)),
             samples: env_u64("ICR_BENCH_SAMPLES", 15) as usize,
-        results: Vec::new(),
+            json,
+            json_path,
+            results: Vec::new(),
         }
+    }
+
+    /// Whether `--json` was passed on the bench command line.
+    pub fn json_requested(&self) -> bool {
+        self.json
     }
 
     pub fn header(&self, title: &str) {
@@ -152,6 +178,40 @@ impl Runner {
         self.results.last()
     }
 
+    /// Write one structured JSON document: suite metadata, caller-provided
+    /// summary entries (e.g. computed speedups) and every result. The path
+    /// is `default_path` unless overridden via `--json=path`. Returns the
+    /// path written.
+    pub fn dump_json(
+        &self,
+        default_path: &str,
+        suite: &str,
+        extra: Vec<(&str, crate::json::Value)>,
+    ) -> std::io::Result<PathBuf> {
+        use std::io::Write;
+        let path = PathBuf::from(self.json_path.clone().unwrap_or_else(|| default_path.to_string()));
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut pairs: Vec<(&str, crate::json::Value)> = vec![
+            ("suite", crate::json::s(suite)),
+            ("version", crate::json::s(crate::VERSION)),
+            ("bench_time_ms", crate::json::num(self.budget.as_millis() as f64)),
+            ("samples", crate::json::num(self.samples as f64)),
+        ];
+        pairs.extend(extra);
+        pairs.push((
+            "results",
+            crate::json::arr(self.results.iter().map(BenchResult::to_json).collect()),
+        ));
+        let doc = crate::json::obj(pairs);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", doc.to_json_pretty())?;
+        Ok(path)
+    }
+
     /// Write all results as JSON lines (appended) for later analysis.
     pub fn dump_jsonl(&self, path: &str) -> std::io::Result<()> {
         use std::io::Write;
@@ -192,6 +252,36 @@ mod tests {
         let res = res.expect("benchmark filtered out unexpectedly");
         assert!(res.min_ns <= res.median_ns && res.median_ns <= res.max_ns);
         assert!(res.median_ns < 1e6, "trivial op should be sub-ms: {}", res.median_ns);
+    }
+
+    #[test]
+    fn dump_json_writes_structured_document() {
+        let mut r = Runner::new();
+        r.results.push(BenchResult {
+            name: "apply/panel/b8/t1/n1024".into(),
+            iters_per_sample: 4,
+            samples: 3,
+            min_ns: 10.0,
+            median_ns: 12.0,
+            mean_ns: 12.5,
+            max_ns: 15.0,
+        });
+        let path = std::env::temp_dir().join(format!("icr_bench_{}.json", std::process::id()));
+        let written = r
+            .dump_json(
+                path.to_str().unwrap(),
+                "apply_panel",
+                vec![("speedup_b8", crate::json::num(3.5))],
+            )
+            .unwrap();
+        let text = std::fs::read_to_string(&written).unwrap();
+        let v = crate::json::Value::parse(&text).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str(), Some("apply_panel"));
+        assert_eq!(v.get("speedup_b8").unwrap().as_f64(), Some(3.5));
+        let results = v.get("results").unwrap().as_array().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("median_ns").unwrap().as_f64(), Some(12.0));
+        std::fs::remove_file(&written).ok();
     }
 
     #[test]

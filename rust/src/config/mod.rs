@@ -203,6 +203,11 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch before dispatching.
     pub max_wait_us: u64,
+    /// Scoped threads per batched `√K` panel apply (`--apply-threads`;
+    /// `0` = one per available core). Outputs are bit-identical at every
+    /// setting — the knob trades per-request latency against worker
+    /// parallelism (`DESIGN.md` §6).
+    pub apply_threads: usize,
     pub artifact_dir: String,
     pub seed: u64,
 }
@@ -216,6 +221,7 @@ impl Default for ServerConfig {
             workers: 2,
             max_batch: 8,
             max_wait_us: 200,
+            apply_threads: 1,
             artifact_dir: "artifacts".into(),
             seed: 0xED40FE5,
         }
@@ -270,6 +276,7 @@ impl ServerConfig {
         cfg.workers = args.get_usize("workers", cfg.workers)?.max(1);
         cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?.max(1);
         cfg.max_wait_us = args.get_u64("max-wait-us", cfg.max_wait_us)?;
+        cfg.apply_threads = args.get_usize("apply-threads", cfg.apply_threads)?;
         if let Some(d) = args.get("artifacts") {
             cfg.artifact_dir = d.to_string();
         }
@@ -318,6 +325,9 @@ impl ServerConfig {
         }
         if let Some(w) = v.get("max_wait_us").and_then(Value::as_usize) {
             self.max_wait_us = w as u64;
+        }
+        if let Some(t) = v.get("apply_threads").and_then(Value::as_usize) {
+            self.apply_threads = t;
         }
         if let Some(d) = v.get("artifact_dir").and_then(Value::as_str) {
             self.artifact_dir = d.to_string();
@@ -371,6 +381,7 @@ impl ServerConfig {
             ("workers", json::num(self.workers as f64)),
             ("max_batch", json::num(self.max_batch as f64)),
             ("max_wait_us", json::num(self.max_wait_us as f64)),
+            ("apply_threads", json::num(self.apply_threads as f64)),
             ("artifact_dir", json::s(&self.artifact_dir)),
             ("seed", json::num(self.seed as f64)),
         ])
@@ -411,7 +422,7 @@ mod tests {
     #[test]
     fn cli_overrides_defaults() {
         let args = Args::parse(
-            &argv("serve --backend pjrt --workers 4 --csz 3 --fsz 2 --n 128 --seed 7"),
+            &argv("serve --backend pjrt --workers 4 --csz 3 --fsz 2 --n 128 --seed 7 --apply-threads 3"),
             &[],
         )
         .unwrap();
@@ -421,6 +432,25 @@ mod tests {
         assert_eq!(cfg.model.n_csz, 3);
         assert_eq!(cfg.model.target_n, 128);
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.apply_threads, 3);
+    }
+
+    #[test]
+    fn apply_threads_defaults_and_json_roundtrip() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.apply_threads, 1);
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("apply_threads").unwrap().as_usize(), Some(1));
+        // `0` (auto) is representable from file config.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_threads_{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"apply_threads": 0, "max_batch": 16}"#).unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.apply_threads, 0);
+        assert_eq!(cfg.max_batch, 16);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -71,6 +71,7 @@ impl Coordinator {
         for spec in cfg.model_specs() {
             let model = ModelBuilder::from_spec(&spec)
                 .artifact_dir(&cfg.artifact_dir)
+                .apply_threads(cfg.apply_threads)
                 .build()
                 .map_err(|e| anyhow::anyhow!("building model {:?}: {e}", spec.name))?;
             models.push((spec.name, model));
@@ -343,51 +344,96 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         return;
     }
 
-    // Expand every batchable request into excitation vectors.
+    // Expand every batchable request into one flat excitation panel: the
+    // whole coalesced batch reaches the model as a single blocked `√K`
+    // panel apply, so `batch_occupancy` buys real memory-bandwidth reuse
+    // instead of a serial loop over lanes (`DESIGN.md` §6). Envelopes with
+    // malformed excitations are answered individually up front and never
+    // poison the rest of the batch.
     let dof = entry.model.total_dof();
-    let mut all_xi: Vec<Vec<f64>> = Vec::new();
-    let mut spans: Vec<(usize, usize)> = Vec::new(); // per-envelope [start, len)
+    let mut panel: Vec<f64> = Vec::new();
+    // Per-envelope (start lane, lane count), or None if rejected early.
+    let mut spans: Vec<Option<(usize, usize)>> = Vec::with_capacity(batch.len());
+    let mut applies = 0usize;
     for env in &batch {
-        let start = all_xi.len();
         match &env.request {
             Request::Sample { count, seed } => {
                 let mut rng = Rng::new(*seed);
+                panel.reserve(*count * dof);
                 for _ in 0..*count {
-                    all_xi.push(rng.standard_normal_vec(dof));
+                    panel.extend_from_slice(&rng.standard_normal_vec(dof));
+                }
+                spans.push(Some((applies, *count)));
+                applies += *count;
+            }
+            Request::ApplySqrt { xi } => {
+                if xi.len() != dof {
+                    spans.push(None);
+                } else {
+                    panel.extend_from_slice(xi);
+                    spans.push(Some((applies, 1)));
+                    applies += 1;
                 }
             }
-            Request::ApplySqrt { xi } => all_xi.push(xi.clone()),
             _ => unreachable!("non-batchable request in batch"),
         }
-        spans.push((start, all_xi.len() - start));
     }
 
-    let outputs = entry.model.apply_sqrt_batch(&all_xi);
-    shared.metrics.counter("applies_executed").add(all_xi.len() as u64);
-    entry.metrics.counter("applies_executed").add(all_xi.len() as u64);
+    let outputs = entry.model.apply_sqrt_panel(&panel, applies);
+    shared.metrics.counter("applies_executed").add(applies as u64);
+    entry.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("batches_executed").inc();
     shared.metrics.histogram("batch_latency").observe(t0);
     entry.metrics.histogram("batch_latency").observe(t0);
 
+    let n = entry.model.n_points();
     match outputs {
         Ok(fields) => {
-            for (env, (start, len)) in batch.into_iter().zip(spans) {
-                let slice = fields[start..start + len].to_vec();
-                let resp = match &env.request {
-                    Request::Sample { .. } => Response::Samples(slice),
-                    Request::ApplySqrt { .. } => {
-                        Response::Field(slice.into_iter().next().unwrap())
+            for (env, span) in batch.into_iter().zip(spans) {
+                let result = match span {
+                    None => Err(IcrError::ShapeMismatch {
+                        what: "xi",
+                        expected: dof,
+                        got: match &env.request {
+                            Request::ApplySqrt { xi } => xi.len(),
+                            _ => 0,
+                        },
+                    }),
+                    Some((start, len)) => {
+                        let rows: Vec<Vec<f64>> = (start..start + len)
+                            .map(|lane| fields[lane * n..(lane + 1) * n].to_vec())
+                            .collect();
+                        Ok(match &env.request {
+                            Request::Sample { .. } => Response::Samples(rows),
+                            Request::ApplySqrt { .. } => {
+                                Response::Field(rows.into_iter().next().unwrap())
+                            }
+                            _ => unreachable!(),
+                        })
                     }
-                    _ => unreachable!(),
                 };
-                complete(shared, entry, false);
-                let _ = env.reply.send(Ok(resp));
+                complete(shared, entry, result.is_err());
+                let _ = env.reply.send(result);
             }
         }
         Err(e) => {
-            for env in batch {
+            // Envelopes rejected before the panel was built still answer
+            // with their own typed shape error, not the backend failure
+            // they never participated in.
+            for (env, span) in batch.into_iter().zip(spans) {
+                let err = match span {
+                    None => IcrError::ShapeMismatch {
+                        what: "xi",
+                        expected: dof,
+                        got: match &env.request {
+                            Request::ApplySqrt { xi } => xi.len(),
+                            _ => 0,
+                        },
+                    },
+                    Some(_) => e.clone(),
+                };
                 complete(shared, entry, true);
-                let _ = env.reply.send(Err(e.clone()));
+                let _ = env.reply.send(Err(err));
             }
         }
     }
@@ -485,6 +531,54 @@ mod tests {
             Response::Field(f) => assert_eq!(f, direct),
             other => panic!("{other:?}"),
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn malformed_apply_does_not_poison_the_batch() {
+        // A wrong-length ApplySqrt coalesced with healthy requests must be
+        // answered with its own typed error while the rest of the batch is
+        // served normally.
+        let mut cfg = test_config(1, 8);
+        cfg.max_wait_us = 2000;
+        let c = Coordinator::start(cfg).unwrap();
+        let dof = c.engine().total_dof();
+        let bad = c.submit(Request::ApplySqrt { xi: vec![0.0; dof + 1] });
+        let good: Vec<_> =
+            (0..4).map(|i| c.submit(Request::Sample { count: 1, seed: i })).collect();
+        match bad.1.recv_timeout(Duration::from_secs(20)).unwrap() {
+            Err(IcrError::ShapeMismatch { .. }) => {}
+            other => panic!("expected shape error, got {other:?}"),
+        }
+        for (i, (_, rx)) in good.into_iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap() {
+                Response::Samples(s) => {
+                    assert_eq!(s.len(), 1, "request {i}");
+                    assert_eq!(s[0].len(), c.engine().n_points(), "request {i}");
+                }
+                other => panic!("request {i}: {other:?}"),
+            }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn apply_threads_config_serves_identical_samples() {
+        // The --apply-threads knob must never change served bytes.
+        let mut cfg = test_config(2, 8);
+        cfg.apply_threads = 4;
+        let c = Coordinator::start(cfg).unwrap();
+        let want = c.engine().sample(2, 31).unwrap();
+        match c.call(Request::Sample { count: 2, seed: 31 }).unwrap() {
+            Response::Samples(s) => assert_eq!(s, want),
+            other => panic!("{other:?}"),
+        }
+        let reference = Coordinator::start(test_config(1, 1)).unwrap();
+        match reference.call(Request::Sample { count: 2, seed: 31 }).unwrap() {
+            Response::Samples(s) => assert_eq!(s, want),
+            other => panic!("{other:?}"),
+        }
+        reference.shutdown();
         c.shutdown();
     }
 

@@ -1,4 +1,9 @@
 //! The ICR engine: O(N) application of `√K_ICR` (paper Alg. 1 + §4.3).
+//!
+//! Both the single-excitation applies and the blocked multi-excitation
+//! (panel) applies execute through the monomorphized kernels in
+//! [`super::panel`]; the single-vector API is simply the one-lane panel.
+//! See `DESIGN.md` §6 for the batched execution path.
 
 use anyhow::{ensure, Context, Result};
 
@@ -9,6 +14,7 @@ use crate::rng::Rng;
 
 use super::geometry::{Geometry, RefinementParams};
 use super::matrices::{base_matrices, window_matrices, LevelMatrices, PackedWindows};
+use super::panel::{self, EngineRefs, PanelWorkspace};
 
 /// A fully constructed ICR model for one kernel + chart + geometry.
 ///
@@ -130,76 +136,22 @@ impl IcrEngine {
         self.stationary
     }
 
+    /// Borrowed view handed to the panel kernels.
+    fn refs(&self) -> EngineRefs<'_> {
+        EngineRefs {
+            params: self.geometry.params,
+            base_sqrt: self.base_sqrt.as_slice(),
+            levels: &self.levels,
+        }
+    }
+
     /// Apply `√K_ICR` to a flat excitation vector of length
     /// [`Self::total_dof`]: the paper's *forward pass* — the operation
-    /// benchmarked against KISS-GP in Fig. 4.
+    /// benchmarked against KISS-GP in Fig. 4. Executes as a one-lane
+    /// panel through the shared monomorphized kernels.
     pub fn apply_sqrt(&self, xi: &[f64]) -> Vec<f64> {
         assert_eq!(xi.len(), self.total_dof(), "excitation length mismatch");
-        let params = self.geometry.params;
-        let (csz, fsz, stride) = (params.n_csz, params.n_fsz, params.stride());
-
-        // Base level: dense lower-triangular apply s⁽⁰⁾ = L₀·ξ⁽⁰⁾.
-        let n0 = params.n0;
-        let mut s = vec![0.0; n0];
-        let l0 = self.base_sqrt.as_slice();
-        for i in 0..n0 {
-            let row = &l0[i * n0..i * n0 + i + 1];
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(&xi[..i + 1]) {
-                acc += a * b;
-            }
-            s[i] = acc;
-        }
-
-        // Refinements: s⁽ˡ⁾ = R·window(s⁽ˡ⁻¹⁾) + √D·ξ⁽ˡ⁾ per window.
-        let mut offset = n0;
-        for lm in &self.levels {
-            let nc = s.len();
-            let nw = params.n_windows(nc);
-            let nf = nw * fsz;
-            let xi_l = &xi[offset..offset + nf];
-            let mut fine = vec![0.0; nf];
-            match lm {
-                LevelMatrices::Stationary(wm) => {
-                    let r = &wm.r;
-                    let dsq = &wm.d_sqrt;
-                    for w in 0..nw {
-                        let cbase = w * stride;
-                        let fbase = w * fsz;
-                        let coarse_win = &s[cbase..cbase + csz];
-                        let xi_win = &xi_l[fbase..fbase + fsz];
-                        for k in 0..fsz {
-                            let rrow = &r[k * csz..(k + 1) * csz];
-                            let mut acc = 0.0;
-                            for (a, b) in rrow.iter().zip(coarse_win) {
-                                acc += a * b;
-                            }
-                            let drow = &dsq[k * fsz..k * fsz + k + 1];
-                            for (a, b) in drow.iter().zip(xi_win) {
-                                acc += a * b;
-                            }
-                            fine[fbase + k] = acc;
-                        }
-                    }
-                }
-                LevelMatrices::Packed(p) => {
-                    // Monomorphized fast paths for the §5.1 candidate
-                    // shapes let LLVM fully unroll + vectorize the inner
-                    // contractions (EXPERIMENTS.md §Perf, iteration 3).
-                    match (csz, fsz) {
-                        (3, 2) => apply_level_packed::<3, 2>(p, &s, xi_l, &mut fine, stride),
-                        (3, 4) => apply_level_packed::<3, 4>(p, &s, xi_l, &mut fine, stride),
-                        (5, 2) => apply_level_packed::<5, 2>(p, &s, xi_l, &mut fine, stride),
-                        (5, 4) => apply_level_packed::<5, 4>(p, &s, xi_l, &mut fine, stride),
-                        (5, 6) => apply_level_packed::<5, 6>(p, &s, xi_l, &mut fine, stride),
-                        _ => apply_level_packed_dyn(p, &s, xi_l, &mut fine, stride, csz, fsz),
-                    }
-                }
-            }
-            offset += nf;
-            s = fine;
-        }
-        s
+        self.apply_sqrt_multi(xi, 1, 1)
     }
 
     /// Apply the transpose `√K_ICRᵀ` to a field-space cotangent — the
@@ -210,59 +162,77 @@ impl IcrEngine {
     /// `apply_sqrt_transpose` backward, both O(N).
     pub fn apply_sqrt_transpose(&self, g: &[f64]) -> Vec<f64> {
         assert_eq!(g.len(), self.n_points(), "cotangent length mismatch");
-        let params = self.geometry.params;
-        let (csz, fsz, stride) = (params.n_csz, params.n_fsz, params.stride());
-        let sizes = params.excitation_sizes();
-        let mut out = vec![0.0; self.total_dof()];
+        self.apply_sqrt_transpose_multi(g, 1, 1)
+    }
 
-        // Walk levels in reverse: split the cotangent into the ξ-part
-        // (through √Dᵀ) and the coarse-part (through Rᵀ, scatter-add).
-        let mut g_fine = g.to_vec();
-        let mut offset = self.total_dof();
-        for (l, lm) in self.levels.iter().enumerate().rev() {
-            let nc = sizes[l];
-            let nw = params.n_windows(nc);
-            let nf = nw * fsz;
-            offset -= nf;
-            let mut g_coarse = vec![0.0; nc];
-            let g_xi = &mut out[offset..offset + nf];
-            for w in 0..nw {
-                let (r_w, d_w) = lm.window(w);
-                let cbase = w * stride;
-                let fbase = w * fsz;
-                let gw = &g_fine[fbase..fbase + fsz];
-                // ξ-cotangent: (√D)ᵀ · g (lower-triangular transpose).
-                for m in 0..fsz {
-                    let mut acc = 0.0;
-                    for k in m..fsz {
-                        acc += d_w[k * fsz + m] * gw[k];
-                    }
-                    g_xi[fbase + m] = acc;
-                }
-                // Coarse cotangent: Rᵀ · g, scatter-added over the window.
-                for j in 0..csz {
-                    let mut acc = 0.0;
-                    for k in 0..fsz {
-                        acc += r_w[k * csz + j] * gw[k];
-                    }
-                    g_coarse[cbase + j] += acc;
-                }
-            }
-            g_fine = g_coarse;
-        }
-
-        // Base level: L₀ᵀ · g.
-        let n0 = params.n0;
-        debug_assert_eq!(offset, n0);
-        let l0 = self.base_sqrt.as_slice();
-        for j in 0..n0 {
-            let mut acc = 0.0;
-            for i in j..n0 {
-                acc += l0[i * n0 + j] * g_fine[i];
-            }
-            out[j] = acc;
-        }
+    /// Apply `√K_ICR` to a flat row-major `batch × dof` panel of
+    /// excitations, returning the `batch × N` output panel.
+    ///
+    /// Per refinement window the `(R, √D)` pair is loaded once and
+    /// contracted against every lane (blocked matrix–matrix products);
+    /// windows are split across up to `threads` scoped threads
+    /// (`0` = one per core). Results are bit-for-bit identical to
+    /// stacking [`Self::apply_sqrt`] lane by lane, at every thread count.
+    pub fn apply_sqrt_multi(&self, panel: &[f64], batch: usize, threads: usize) -> Vec<f64> {
+        let mut ws = PanelWorkspace::new();
+        let mut out = vec![0.0; batch * self.n_points()];
+        self.apply_sqrt_multi_with(panel, batch, threads, &mut ws, &mut out);
         out
+    }
+
+    /// [`Self::apply_sqrt_multi`] with caller-provided scratch and output
+    /// (the zero-allocation serving path; reuse `ws` across calls).
+    pub fn apply_sqrt_multi_with(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        threads: usize,
+        ws: &mut PanelWorkspace,
+        out: &mut [f64],
+    ) {
+        panel::apply_sqrt_panel(
+            &self.refs(),
+            panel,
+            batch,
+            crate::parallel::resolve_threads(threads),
+            ws,
+            out,
+        );
+    }
+
+    /// Apply `√K_ICRᵀ` to a flat row-major `batch × N` panel of
+    /// cotangents, returning the `batch × dof` output panel. Same blocked
+    /// execution and determinism guarantee as [`Self::apply_sqrt_multi`].
+    pub fn apply_sqrt_transpose_multi(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        threads: usize,
+    ) -> Vec<f64> {
+        let mut ws = PanelWorkspace::new();
+        let mut out = vec![0.0; batch * self.total_dof()];
+        self.apply_sqrt_transpose_multi_with(panel, batch, threads, &mut ws, &mut out);
+        out
+    }
+
+    /// [`Self::apply_sqrt_transpose_multi`] with caller-provided scratch
+    /// and output.
+    pub fn apply_sqrt_transpose_multi_with(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        threads: usize,
+        ws: &mut PanelWorkspace,
+        out: &mut [f64],
+    ) {
+        panel::apply_sqrt_transpose_panel(
+            &self.refs(),
+            panel,
+            batch,
+            crate::parallel::resolve_threads(threads),
+            ws,
+            out,
+        );
     }
 
     /// Draw one approximate GP sample (`√K_ICR · ξ`, ξ ~ 𝒩(0, 1)).
@@ -271,112 +241,43 @@ impl IcrEngine {
         self.apply_sqrt(&xi)
     }
 
-    /// Materialize the implicit covariance `K_ICR = S·Sᵀ` where `S` is the
-    /// `N × dof` matrix representation of `√K_ICR` (apply to unit
-    /// excitations). O(dof·N) — evaluation use only (Fig. 3, §5.1 KL).
-    pub fn implicit_covariance(&self) -> Matrix {
-        let n = self.n_points();
-        let dof = self.total_dof();
-        let mut smat = Matrix::zeros(n, dof);
-        let mut xi = vec![0.0; dof];
-        for j in 0..dof {
-            xi[j] = 1.0;
-            let col = self.apply_sqrt(&xi);
-            xi[j] = 0.0;
-            for i in 0..n {
-                smat[(i, j)] = col[i];
-            }
-        }
-        let mut k = smat.matmul_nt(&smat);
-        k.symmetrize();
-        k
-    }
-
-    /// The `N × dof` matrix of `√K_ICR` itself (for spectral analysis).
+    /// The `N × dof` matrix of `√K_ICR` itself (for spectral analysis):
+    /// unit-excitation panels applied one lane block at a time, so scratch
+    /// stays O(lanes·dof). O(dof·N) — evaluation use only (Fig. 3, §5.1
+    /// KL).
     pub fn sqrt_matrix(&self) -> Matrix {
         let n = self.n_points();
         let dof = self.total_dof();
         let mut smat = Matrix::zeros(n, dof);
-        let mut xi = vec![0.0; dof];
-        for j in 0..dof {
-            xi[j] = 1.0;
-            let col = self.apply_sqrt(&xi);
-            xi[j] = 0.0;
-            for i in 0..n {
-                smat[(i, j)] = col[i];
+        let mut ws = PanelWorkspace::new();
+        let lanes = crate::parallel::MAX_LANES;
+        let mut panel = vec![0.0; lanes * dof];
+        let mut out = vec![0.0; lanes * n];
+        let mut j0 = 0;
+        while j0 < dof {
+            let b = lanes.min(dof - j0);
+            for q in 0..b {
+                panel[q * dof + j0 + q] = 1.0;
             }
+            self.apply_sqrt_multi_with(&panel[..b * dof], b, 1, &mut ws, &mut out[..b * n]);
+            for q in 0..b {
+                panel[q * dof + j0 + q] = 0.0;
+                for i in 0..n {
+                    smat[(i, j0 + q)] = out[q * n + i];
+                }
+            }
+            j0 += b;
         }
         smat
     }
-}
 
-
-/// Packed-level apply, monomorphized over the window shape so the
-/// contractions unroll (the Fig. 4 hot loop).
-fn apply_level_packed<const CSZ: usize, const FSZ: usize>(
-    p: &PackedWindows,
-    s: &[f64],
-    xi_l: &[f64],
-    fine: &mut [f64],
-    stride: usize,
-) {
-    debug_assert_eq!(p.n_csz, CSZ);
-    debug_assert_eq!(p.n_fsz, FSZ);
-    let nw = p.n_win;
-    let rsz = FSZ * CSZ;
-    let dsz = FSZ * FSZ;
-    for w in 0..nw {
-        let cbase = w * stride;
-        let fbase = w * FSZ;
-        let coarse_win: &[f64; CSZ] = s[cbase..cbase + CSZ].try_into().unwrap();
-        let xi_win: &[f64; FSZ] = xi_l[fbase..fbase + FSZ].try_into().unwrap();
-        let rwin = &p.r[w * rsz..(w + 1) * rsz];
-        let dwin = &p.d_sqrt[w * dsz..(w + 1) * dsz];
-        for k in 0..FSZ {
-            let mut acc = 0.0;
-            for j in 0..CSZ {
-                acc += rwin[k * CSZ + j] * coarse_win[j];
-            }
-            for m in 0..=k {
-                acc += dwin[k * FSZ + m] * xi_win[m];
-            }
-            fine[fbase + k] = acc;
-        }
-    }
-}
-
-/// Fallback for window shapes outside the §5.1 candidate set.
-fn apply_level_packed_dyn(
-    p: &PackedWindows,
-    s: &[f64],
-    xi_l: &[f64],
-    fine: &mut [f64],
-    stride: usize,
-    csz: usize,
-    fsz: usize,
-) {
-    let nw = p.n_win;
-    let rsz = fsz * csz;
-    let dsz = fsz * fsz;
-    for w in 0..nw {
-        let cbase = w * stride;
-        let fbase = w * fsz;
-        let coarse_win = &s[cbase..cbase + csz];
-        let xi_win = &xi_l[fbase..fbase + fsz];
-        let rwin = &p.r[w * rsz..(w + 1) * rsz];
-        let dwin = &p.d_sqrt[w * dsz..(w + 1) * dsz];
-        for k in 0..fsz {
-            let rrow = &rwin[k * csz..(k + 1) * csz];
-            let mut acc = 0.0;
-            for (a, b) in rrow.iter().zip(coarse_win) {
-                acc += a * b;
-            }
-            let drow = &dwin[k * fsz..k * fsz + k + 1];
-            for (a, b) in drow.iter().zip(xi_win) {
-                acc += a * b;
-            }
-            fine[fbase + k] = acc;
-        }
+    /// Materialize the implicit covariance `K_ICR = S·Sᵀ` where `S` is
+    /// [`Self::sqrt_matrix`]. O(dof·N²) — evaluation use only.
+    pub fn implicit_covariance(&self) -> Matrix {
+        let smat = self.sqrt_matrix();
+        let mut k = smat.matmul_nt(&smat);
+        k.symmetrize();
+        k
     }
 }
 
@@ -391,6 +292,13 @@ mod tests {
         let kern = Matern::nu32(rho, 1.0);
         let chart = IdentityChart::unit();
         let params = RefinementParams::new(csz, fsz, n_lvl, n0).unwrap();
+        IcrEngine::build(&kern, &chart, params).unwrap()
+    }
+
+    fn build_log(csz: usize, fsz: usize, n_lvl: usize, n0: usize) -> IcrEngine {
+        let kern = Matern::nu32(1.0, 1.0);
+        let params = RefinementParams::new(csz, fsz, n_lvl, n0).unwrap();
+        let chart = LogChart::new(-2.0, 0.05);
         IcrEngine::build(&kern, &chart, params).unwrap()
     }
 
@@ -422,6 +330,68 @@ mod tests {
     }
 
     #[test]
+    fn multi_apply_matches_stacked_singles_bitwise() {
+        // The determinism contract of the panel path, at the engine level:
+        // every (geometry, batch, threads) combination reproduces stacked
+        // single applies bit for bit, forward and adjoint.
+        let engines =
+            vec![build_identity(5, 4, 3, 9, 3.0), build_log(5, 4, 3, 9), build_log(3, 2, 3, 8)];
+        let mut rng = Rng::new(2207);
+        for e in &engines {
+            let dof = e.total_dof();
+            let n = e.n_points();
+            for &batch in &[1usize, 3, 8] {
+                let panel: Vec<f64> = (0..batch * dof).map(|_| rng.standard_normal()).collect();
+                let gpanel: Vec<f64> = (0..batch * n).map(|_| rng.standard_normal()).collect();
+                let mut want_fwd = Vec::new();
+                let mut want_bwd = Vec::new();
+                for b in 0..batch {
+                    want_fwd.extend(e.apply_sqrt(&panel[b * dof..(b + 1) * dof]));
+                    want_bwd.extend(e.apply_sqrt_transpose(&gpanel[b * n..(b + 1) * n]));
+                }
+                for &threads in &[1usize, 2, 4] {
+                    let got = e.apply_sqrt_multi(&panel, batch, threads);
+                    assert_eq!(got.len(), want_fwd.len());
+                    assert!(
+                        got.iter().zip(&want_fwd).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{e:?}: forward panel b={batch} t={threads} diverged"
+                    );
+                    let got = e.apply_sqrt_transpose_multi(&gpanel, batch, threads);
+                    assert_eq!(got.len(), want_bwd.len());
+                    assert!(
+                        got.iter().zip(&want_bwd).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{e:?}: adjoint panel b={batch} t={threads} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_apply_reuses_workspace_across_shapes() {
+        // One workspace serving engines of different sizes and both
+        // directions must never corrupt results (grow-only scratch).
+        let big = build_log(5, 4, 3, 9);
+        let small = build_identity(3, 2, 2, 6, 3.0);
+        let mut ws = PanelWorkspace::new();
+        let mut rng = Rng::new(77);
+        for e in [&big, &small, &big] {
+            let dof = e.total_dof();
+            let n = e.n_points();
+            let panel: Vec<f64> = (0..3 * dof).map(|_| rng.standard_normal()).collect();
+            let mut out = vec![0.0; 3 * n];
+            e.apply_sqrt_multi_with(&panel, 3, 2, &mut ws, &mut out);
+            let want = e.apply_sqrt_multi(&panel, 3, 1);
+            assert!(out.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+            let gpanel: Vec<f64> = (0..2 * n).map(|_| rng.standard_normal()).collect();
+            let mut gout = vec![0.0; 2 * dof];
+            e.apply_sqrt_transpose_multi_with(&gpanel, 2, 2, &mut ws, &mut gout);
+            let want = e.apply_sqrt_transpose_multi(&gpanel, 2, 1);
+            assert!(gout.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
     fn implicit_covariance_close_to_truth_regular_grid() {
         // Regular grid, kernel length-scale spanning several final pixels:
         // ICR should track the exact covariance closely (paper Fig. 3
@@ -443,6 +413,25 @@ mod tests {
         let probe = rank_probe(&k);
         assert_eq!(probe.rank, e.n_points());
         assert!(probe.cholesky_ok, "λ_min = {}", probe.lambda_min);
+    }
+
+    #[test]
+    fn sqrt_matrix_columns_are_unit_excitation_applies() {
+        // Guards the shared multi-apply helper behind sqrt_matrix /
+        // implicit_covariance: column j must equal √K·e_j exactly.
+        for e in [&build_identity(3, 2, 2, 8, 4.0), &build_log(5, 4, 2, 9)] {
+            let s = e.sqrt_matrix();
+            let dof = e.total_dof();
+            let mut xi = vec![0.0; dof];
+            for &j in &[0usize, 1, dof / 2, dof - 1] {
+                xi[j] = 1.0;
+                let col = e.apply_sqrt(&xi);
+                xi[j] = 0.0;
+                for i in 0..e.n_points() {
+                    assert_eq!(s[(i, j)].to_bits(), col[i].to_bits(), "col {j} row {i}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -471,7 +460,8 @@ mod tests {
     #[test]
     fn charted_engine_matches_stationary_on_affine_chart() {
         // Force the per-window path by wrapping the identity chart in a
-        // type that denies affinity; results must agree bit-for-bit-ish.
+        // type that denies affinity; results must agree bit-for-bit-ish —
+        // forward AND adjoint (the broadcast fast path covers both).
         struct OpaqueIdentity;
         impl Chart for OpaqueIdentity {
             fn to_domain(&self, u: f64) -> f64 {
@@ -497,6 +487,12 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-10, "{x} vs {y}");
         }
+        let g = rng.standard_normal_vec(fast.n_points());
+        let at = fast.apply_sqrt_transpose(&g);
+        let bt = slow.apply_sqrt_transpose(&g);
+        for (x, y) in at.iter().zip(&bt) {
+            assert!((x - y).abs() < 1e-10, "transpose: {x} vs {y}");
+        }
     }
 
     #[test]
@@ -506,12 +502,7 @@ mod tests {
         let engines = vec![
             build_identity(3, 2, 3, 8, 4.0),
             build_identity(5, 4, 2, 9, 3.0),
-            {
-                let kern = Matern::nu32(1.0, 1.0);
-                let params = RefinementParams::new(5, 4, 3, 9).unwrap();
-                let chart = LogChart::new(-2.0, 0.05);
-                IcrEngine::build(&kern, &chart, params).unwrap()
-            },
+            build_log(5, 4, 3, 9),
         ];
         let mut rng = Rng::new(77);
         for e in &engines {

@@ -89,15 +89,6 @@ pub enum LevelMatrices {
 }
 
 impl LevelMatrices {
-    /// `(R, √D)` slices for window `w`.
-    #[inline]
-    pub fn window(&self, w: usize) -> (&[f64], &[f64]) {
-        match self {
-            LevelMatrices::Stationary(m) => (&m.r, &m.d_sqrt),
-            LevelMatrices::Packed(p) => (p.r_window(w), p.d_window(w)),
-        }
-    }
-
     pub fn is_stationary(&self) -> bool {
         matches!(self, LevelMatrices::Stationary(_))
     }

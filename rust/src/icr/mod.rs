@@ -3,7 +3,9 @@
 //! Submodules:
 //! - [`geometry`]: refinement pyramid layout (paper §4.2, §4.4 tunables);
 //! - [`matrices`]: per-window `(R, √D)` construction (Eqs. 5–9, §4.3);
-//! - [`engine`]: the O(N) `√K_ICR` apply (Algorithm 1 generalized).
+//! - [`engine`]: the O(N) `√K_ICR` apply (Algorithm 1 generalized);
+//! - [`panel`]: blocked multi-excitation kernels + scratch workspace
+//!   (the batched execution path, `DESIGN.md` §6).
 //!
 //! The Rust-native engine here mirrors the JAX/Pallas implementation in
 //! `python/compile/` (L1/L2); the two are cross-checked numerically by the
@@ -12,9 +14,11 @@
 pub mod engine;
 pub mod geometry;
 pub mod matrices;
+pub mod panel;
 pub mod separable;
 
 pub use engine::IcrEngine;
 pub use geometry::{Geometry, RefinementParams};
 pub use matrices::{base_matrices, window_matrices, LevelMatrices, PackedWindows, WindowMatrices};
+pub use panel::{PanelWorkspace, MAX_LANES};
 pub use separable::SeparableIcr;

@@ -1,0 +1,653 @@
+//! Blocked multi-excitation (panel) execution of `√K_ICR` and its adjoint.
+//!
+//! The serial apply streams the packed `R`/`√D` arrays from memory once
+//! *per excitation*; a batch of B pays B× the bandwidth. Here the batch
+//! dimension is made real: lanes are processed in interleaved blocks of up
+//! to [`MAX_LANES`], so every refinement-matrix element loaded from memory
+//! is contracted against all lanes of the block (small matrix–matrix
+//! products instead of B matrix–vector products). Windows are additionally
+//! partitioned across scoped threads (`crate::parallel::run_chunked`).
+//!
+//! **Determinism guarantee.** Each lane's accumulation order is exactly
+//! the serial single-apply order — lane blocking only adds independent
+//! accumulators, never reassociates a sum — and thread partitioning splits
+//! *outputs*, never reductions. The adjoint's coarse scatter-add is
+//! rewritten as a per-coarse-pixel *gather* over the (≤ ⌈n_csz/stride⌉)
+//! windows touching it, in ascending window order: the same left-to-right
+//! sum the serial loop produces. Results are therefore bit-for-bit
+//! identical to the serial path for every `(batch, threads)` — enforced by
+//! `rust/tests/panel_equivalence.rs`.
+//!
+//! Layout: panels are flat row-major `B × dof` (one lane per row); inside
+//! a lane block everything is lane-interleaved (`value index × lane`), so
+//! the innermost loops are contiguous and vectorize. Scratch lives in a
+//! reusable [`PanelWorkspace`] — the hot loop performs zero allocation.
+
+// The indexed lane loops are deliberate: they spell out the exact per-lane
+// accumulation order the determinism guarantee is stated in terms of (and
+// LLVM vectorizes them as written).
+#![allow(clippy::needless_range_loop)]
+
+use crate::parallel::{lane_block, run_chunked};
+
+use super::geometry::RefinementParams;
+use super::matrices::LevelMatrices;
+
+pub use crate::parallel::MAX_LANES;
+
+/// Don't spawn threads for levels smaller than this many output elements:
+/// the scoped-thread round trip costs more than it saves.
+const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Reusable scratch for panel applies: one staging buffer of `dof` slots
+/// and two ping-pong level buffers, each `max_level` slots, times the lane
+/// width. Grows on demand, never shrinks; reuse it across calls to keep
+/// the hot loop allocation-free.
+#[derive(Debug, Default)]
+pub struct PanelWorkspace {
+    /// Interleaved ξ staging (forward) / interleaved output (adjoint).
+    stage: Vec<f64>,
+    /// Ping-pong level buffers.
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
+impl PanelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, dof: usize, max_level: usize, lanes: usize) {
+        let want_stage = dof * lanes;
+        if self.stage.len() < want_stage {
+            self.stage.resize(want_stage, 0.0);
+        }
+        let want = max_level * lanes;
+        if self.a.len() < want {
+            self.a.resize(want, 0.0);
+        }
+        if self.b.len() < want {
+            self.b.resize(want, 0.0);
+        }
+    }
+}
+
+/// Borrowed view of the engine internals the panel path needs.
+pub(crate) struct EngineRefs<'a> {
+    pub params: RefinementParams,
+    pub base_sqrt: &'a [f64],
+    pub levels: &'a [LevelMatrices],
+}
+
+/// One level's matrices as flat arrays plus per-window strides. A
+/// stationary (broadcast) level is simply stride 0 — every window reads
+/// the same `(R, √D)` block — which routes both level kinds through the
+/// same monomorphized kernels.
+struct LevelView<'a> {
+    r: &'a [f64],
+    d: &'a [f64],
+    r_stride: usize,
+    d_stride: usize,
+}
+
+fn level_view(lm: &LevelMatrices) -> LevelView<'_> {
+    match lm {
+        LevelMatrices::Stationary(wm) => {
+            LevelView { r: &wm.r, d: &wm.d_sqrt, r_stride: 0, d_stride: 0 }
+        }
+        LevelMatrices::Packed(p) => LevelView {
+            r: &p.r,
+            d: &p.d_sqrt,
+            r_stride: p.n_fsz * p.n_csz,
+            d_stride: p.n_fsz * p.n_fsz,
+        },
+    }
+}
+
+/// Effective thread count for a section of `items` outputs of `unit`
+/// elements each.
+fn par_threads(threads: usize, items: usize, unit: usize) -> usize {
+    if threads <= 1 || items.saturating_mul(unit) < PAR_MIN_ELEMS {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Gather lanes `b0..b0+nb` of a row-major panel into interleaved layout.
+fn interleave(panel: &[f64], row_len: usize, b0: usize, nb: usize, dst: &mut [f64]) {
+    debug_assert_eq!(dst.len(), row_len * nb);
+    if nb == 1 {
+        dst.copy_from_slice(&panel[b0 * row_len..(b0 + 1) * row_len]);
+        return;
+    }
+    for i in 0..row_len {
+        for q in 0..nb {
+            dst[i * nb + q] = panel[(b0 + q) * row_len + i];
+        }
+    }
+}
+
+/// Scatter an interleaved block back to lanes `b0..b0+nb` of `out`.
+fn deinterleave(src: &[f64], row_len: usize, b0: usize, nb: usize, out: &mut [f64]) {
+    debug_assert_eq!(src.len(), row_len * nb);
+    if nb == 1 {
+        out[b0 * row_len..(b0 + 1) * row_len].copy_from_slice(src);
+        return;
+    }
+    for i in 0..row_len {
+        for q in 0..nb {
+            out[(b0 + q) * row_len + i] = src[i * nb + q];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Monomorphized kernels over (CSZ, FSZ, NB): the §5.1 candidate shapes ×
+// lane-block widths {1, 2, 4, 8}, with dynamic fallbacks for other shapes.
+// ---------------------------------------------------------------------------
+
+/// Forward refinement of windows `w0..w0+wn`:
+/// `fine[k] = Σ_j R[k,j]·s[j] + Σ_{m≤k} √D[k,m]·ξ[m]` per lane.
+fn fwd_level_mono<const CSZ: usize, const FSZ: usize, const NB: usize>(
+    lv: &LevelView<'_>,
+    stride: usize,
+    s_il: &[f64],
+    xi_il: &[f64],
+    fine: &mut [f64],
+    w0: usize,
+    wn: usize,
+) {
+    for wi in 0..wn {
+        let w = w0 + wi;
+        let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + FSZ * CSZ];
+        let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + FSZ * FSZ];
+        let cbase = w * stride * NB;
+        let xbase = w * FSZ * NB;
+        let fbase = wi * FSZ * NB;
+        for k in 0..FSZ {
+            let mut acc = [0.0f64; NB];
+            for j in 0..CSZ {
+                let rv = rwin[k * CSZ + j];
+                let sv = &s_il[cbase + j * NB..cbase + (j + 1) * NB];
+                for q in 0..NB {
+                    acc[q] += rv * sv[q];
+                }
+            }
+            for m in 0..=k {
+                let dv = dwin[k * FSZ + m];
+                let xv = &xi_il[xbase + m * NB..xbase + (m + 1) * NB];
+                for q in 0..NB {
+                    acc[q] += dv * xv[q];
+                }
+            }
+            fine[fbase + k * NB..fbase + (k + 1) * NB].copy_from_slice(&acc);
+        }
+    }
+}
+
+/// Dynamic-shape fallback of [`fwd_level_mono`].
+#[allow(clippy::too_many_arguments)]
+fn fwd_level_dyn(
+    csz: usize,
+    fsz: usize,
+    nb: usize,
+    lv: &LevelView<'_>,
+    stride: usize,
+    s_il: &[f64],
+    xi_il: &[f64],
+    fine: &mut [f64],
+    w0: usize,
+    wn: usize,
+) {
+    debug_assert!(nb <= MAX_LANES);
+    let rsz = fsz * csz;
+    let dsz = fsz * fsz;
+    for wi in 0..wn {
+        let w = w0 + wi;
+        let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + rsz];
+        let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + dsz];
+        let cbase = w * stride * nb;
+        let xbase = w * fsz * nb;
+        let fbase = wi * fsz * nb;
+        for k in 0..fsz {
+            let mut acc = [0.0f64; MAX_LANES];
+            for j in 0..csz {
+                let rv = rwin[k * csz + j];
+                let sv = &s_il[cbase + j * nb..cbase + (j + 1) * nb];
+                for q in 0..nb {
+                    acc[q] += rv * sv[q];
+                }
+            }
+            for m in 0..=k {
+                let dv = dwin[k * fsz + m];
+                let xv = &xi_il[xbase + m * nb..xbase + (m + 1) * nb];
+                for q in 0..nb {
+                    acc[q] += dv * xv[q];
+                }
+            }
+            fine[fbase + k * nb..fbase + (k + 1) * nb].copy_from_slice(&acc[..nb]);
+        }
+    }
+}
+
+/// Adjoint ξ-cotangent of windows `w0..w0+wn`:
+/// `g_ξ[m] = Σ_{k≥m} √D[k,m]·g[k]` per lane (disjoint per window).
+fn bwd_xi_mono<const CSZ: usize, const FSZ: usize, const NB: usize>(
+    lv: &LevelView<'_>,
+    g_il: &[f64],
+    gxi: &mut [f64],
+    w0: usize,
+    wn: usize,
+) {
+    for wi in 0..wn {
+        let w = w0 + wi;
+        let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + FSZ * FSZ];
+        let gbase = w * FSZ * NB;
+        let obase = wi * FSZ * NB;
+        for m in 0..FSZ {
+            let mut acc = [0.0f64; NB];
+            for k in m..FSZ {
+                let dv = dwin[k * FSZ + m];
+                let gv = &g_il[gbase + k * NB..gbase + (k + 1) * NB];
+                for q in 0..NB {
+                    acc[q] += dv * gv[q];
+                }
+            }
+            gxi[obase + m * NB..obase + (m + 1) * NB].copy_from_slice(&acc);
+        }
+    }
+}
+
+/// Dynamic-shape fallback of [`bwd_xi_mono`].
+#[allow(clippy::too_many_arguments)]
+fn bwd_xi_dyn(
+    csz: usize,
+    fsz: usize,
+    nb: usize,
+    lv: &LevelView<'_>,
+    g_il: &[f64],
+    gxi: &mut [f64],
+    w0: usize,
+    wn: usize,
+) {
+    let _ = csz;
+    debug_assert!(nb <= MAX_LANES);
+    let dsz = fsz * fsz;
+    for wi in 0..wn {
+        let w = w0 + wi;
+        let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + dsz];
+        let gbase = w * fsz * nb;
+        let obase = wi * fsz * nb;
+        for m in 0..fsz {
+            let mut acc = [0.0f64; MAX_LANES];
+            for k in m..fsz {
+                let dv = dwin[k * fsz + m];
+                let gv = &g_il[gbase + k * nb..gbase + (k + 1) * nb];
+                for q in 0..nb {
+                    acc[q] += dv * gv[q];
+                }
+            }
+            gxi[obase + m * nb..obase + (m + 1) * nb].copy_from_slice(&acc[..nb]);
+        }
+    }
+}
+
+/// Adjoint coarse-cotangent for coarse pixels `c0..c0+cn`, as a gather:
+/// the serial loop scatter-adds `Rᵀ·g` window by window; summing the same
+/// per-window contributions in ascending window order per coarse pixel
+/// reproduces it bit-for-bit with disjoint writes.
+#[allow(clippy::too_many_arguments)]
+fn bwd_coarse_mono<const CSZ: usize, const FSZ: usize, const NB: usize>(
+    lv: &LevelView<'_>,
+    stride: usize,
+    g_il: &[f64],
+    gc: &mut [f64],
+    c0: usize,
+    cn: usize,
+    nw: usize,
+) {
+    for ci in 0..cn {
+        let c = c0 + ci;
+        let w_min = if c >= CSZ { (c - CSZ) / stride + 1 } else { 0 };
+        let w_max = (c / stride).min(nw - 1);
+        let mut acc = [0.0f64; NB];
+        let mut w = w_min;
+        while w <= w_max {
+            let j = c - w * stride;
+            let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + FSZ * CSZ];
+            let gbase = w * FSZ * NB;
+            let mut part = [0.0f64; NB];
+            for k in 0..FSZ {
+                let rv = rwin[k * CSZ + j];
+                let gv = &g_il[gbase + k * NB..gbase + (k + 1) * NB];
+                for q in 0..NB {
+                    part[q] += rv * gv[q];
+                }
+            }
+            for q in 0..NB {
+                acc[q] += part[q];
+            }
+            w += 1;
+        }
+        gc[ci * NB..(ci + 1) * NB].copy_from_slice(&acc);
+    }
+}
+
+/// Dynamic-shape fallback of [`bwd_coarse_mono`].
+#[allow(clippy::too_many_arguments)]
+fn bwd_coarse_dyn(
+    csz: usize,
+    fsz: usize,
+    nb: usize,
+    lv: &LevelView<'_>,
+    stride: usize,
+    g_il: &[f64],
+    gc: &mut [f64],
+    c0: usize,
+    cn: usize,
+    nw: usize,
+) {
+    debug_assert!(nb <= MAX_LANES);
+    let rsz = fsz * csz;
+    for ci in 0..cn {
+        let c = c0 + ci;
+        let w_min = if c >= csz { (c - csz) / stride + 1 } else { 0 };
+        let w_max = (c / stride).min(nw - 1);
+        let mut acc = [0.0f64; MAX_LANES];
+        let mut w = w_min;
+        while w <= w_max {
+            let j = c - w * stride;
+            let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + rsz];
+            let gbase = w * fsz * nb;
+            let mut part = [0.0f64; MAX_LANES];
+            for k in 0..fsz {
+                let rv = rwin[k * csz + j];
+                let gv = &g_il[gbase + k * nb..gbase + (k + 1) * nb];
+                for q in 0..nb {
+                    part[q] += rv * gv[q];
+                }
+            }
+            for q in 0..nb {
+                acc[q] += part[q];
+            }
+            w += 1;
+        }
+        gc[ci * nb..(ci + 1) * nb].copy_from_slice(&acc[..nb]);
+    }
+}
+
+/// Base level forward: dense lower-triangular `L₀·ξ` per lane.
+fn base_fwd_mono<const NB: usize>(l0: &[f64], n0: usize, x_il: &[f64], y_il: &mut [f64]) {
+    for i in 0..n0 {
+        let row = &l0[i * n0..i * n0 + i + 1];
+        let mut acc = [0.0f64; NB];
+        for (j, &lij) in row.iter().enumerate() {
+            let xv = &x_il[j * NB..(j + 1) * NB];
+            for q in 0..NB {
+                acc[q] += lij * xv[q];
+            }
+        }
+        y_il[i * NB..(i + 1) * NB].copy_from_slice(&acc);
+    }
+}
+
+/// Base level adjoint: `L₀ᵀ·g` per lane.
+fn base_bwd_mono<const NB: usize>(l0: &[f64], n0: usize, g_il: &[f64], y_il: &mut [f64]) {
+    for j in 0..n0 {
+        let mut acc = [0.0f64; NB];
+        for i in j..n0 {
+            let lij = l0[i * n0 + j];
+            let gv = &g_il[i * NB..(i + 1) * NB];
+            for q in 0..NB {
+                acc[q] += lij * gv[q];
+            }
+        }
+        y_il[j * NB..(j + 1) * NB].copy_from_slice(&acc);
+    }
+}
+
+/// Dispatch a level kernel to its `(CSZ, FSZ, NB)` monomorphization (§5.1
+/// candidate shapes × block widths) or the dynamic fallback.
+macro_rules! dispatch_level {
+    ($mono:ident, $dynf:ident, $csz:expr, $fsz:expr, $nb:expr, ($($a:expr),* $(,)?)) => {
+        match ($csz, $fsz, $nb) {
+            (3, 2, 1) => $mono::<3, 2, 1>($($a),*),
+            (3, 2, 2) => $mono::<3, 2, 2>($($a),*),
+            (3, 2, 4) => $mono::<3, 2, 4>($($a),*),
+            (3, 2, 8) => $mono::<3, 2, 8>($($a),*),
+            (3, 4, 1) => $mono::<3, 4, 1>($($a),*),
+            (3, 4, 2) => $mono::<3, 4, 2>($($a),*),
+            (3, 4, 4) => $mono::<3, 4, 4>($($a),*),
+            (3, 4, 8) => $mono::<3, 4, 8>($($a),*),
+            (5, 2, 1) => $mono::<5, 2, 1>($($a),*),
+            (5, 2, 2) => $mono::<5, 2, 2>($($a),*),
+            (5, 2, 4) => $mono::<5, 2, 4>($($a),*),
+            (5, 2, 8) => $mono::<5, 2, 8>($($a),*),
+            (5, 4, 1) => $mono::<5, 4, 1>($($a),*),
+            (5, 4, 2) => $mono::<5, 4, 2>($($a),*),
+            (5, 4, 4) => $mono::<5, 4, 4>($($a),*),
+            (5, 4, 8) => $mono::<5, 4, 8>($($a),*),
+            (5, 6, 1) => $mono::<5, 6, 1>($($a),*),
+            (5, 6, 2) => $mono::<5, 6, 2>($($a),*),
+            (5, 6, 4) => $mono::<5, 6, 4>($($a),*),
+            (5, 6, 8) => $mono::<5, 6, 8>($($a),*),
+            _ => $dynf($csz, $fsz, $nb, $($a),*),
+        }
+    };
+}
+
+fn base_fwd(l0: &[f64], n0: usize, nb: usize, x_il: &[f64], y_il: &mut [f64]) {
+    match nb {
+        1 => base_fwd_mono::<1>(l0, n0, x_il, y_il),
+        2 => base_fwd_mono::<2>(l0, n0, x_il, y_il),
+        4 => base_fwd_mono::<4>(l0, n0, x_il, y_il),
+        _ => base_fwd_mono::<8>(l0, n0, x_il, y_il),
+    }
+}
+
+fn base_bwd(l0: &[f64], n0: usize, nb: usize, g_il: &[f64], y_il: &mut [f64]) {
+    match nb {
+        1 => base_bwd_mono::<1>(l0, n0, g_il, y_il),
+        2 => base_bwd_mono::<2>(l0, n0, g_il, y_il),
+        4 => base_bwd_mono::<4>(l0, n0, g_il, y_il),
+        _ => base_bwd_mono::<8>(l0, n0, g_il, y_il),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Orchestration: lane blocks × levels × window chunks.
+// ---------------------------------------------------------------------------
+
+/// Forward panel apply: `out[b] = √K_ICR · panel[b]` for every lane.
+pub(crate) fn apply_sqrt_panel(
+    refs: &EngineRefs<'_>,
+    panel: &[f64],
+    batch: usize,
+    threads: usize,
+    ws: &mut PanelWorkspace,
+    out: &mut [f64],
+) {
+    let params = refs.params;
+    let dof = params.total_dof();
+    let sizes = params.excitation_sizes();
+    let n = *sizes.last().unwrap();
+    assert_eq!(panel.len(), batch * dof, "excitation panel length mismatch");
+    assert_eq!(out.len(), batch * n, "output panel length mismatch");
+    if batch == 0 {
+        return;
+    }
+    let max_level = sizes.iter().copied().max().unwrap_or(params.n0);
+    ws.ensure(dof, max_level, lane_block(batch));
+    let threads = threads.max(1);
+    let (csz, fsz, stride, n0) = (params.n_csz, params.n_fsz, params.stride(), params.n0);
+
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let nb = lane_block(batch - b0);
+        let PanelWorkspace { stage, a, b } = &mut *ws;
+        interleave(panel, dof, b0, nb, &mut stage[..dof * nb]);
+        let stage: &[f64] = &stage[..dof * nb];
+        let mut cur: &mut [f64] = &mut a[..];
+        let mut nxt: &mut [f64] = &mut b[..];
+
+        // Base level.
+        base_fwd(refs.base_sqrt, n0, nb, &stage[..n0 * nb], &mut cur[..n0 * nb]);
+
+        // Refinement levels.
+        let mut offset = n0;
+        for (l, lm) in refs.levels.iter().enumerate() {
+            let nc = sizes[l];
+            let nw = params.n_windows(nc);
+            let nf = nw * fsz;
+            let lv = level_view(lm);
+            let xi_l = &stage[offset * nb..(offset + nf) * nb];
+            let s_il = &cur[..nc * nb];
+            let fine = &mut nxt[..nf * nb];
+            let t = par_threads(threads, nw, fsz * nb);
+            run_chunked(fine, fsz * nb, nw, t, |w0, wn, chunk| {
+                dispatch_level!(
+                    fwd_level_mono,
+                    fwd_level_dyn,
+                    csz,
+                    fsz,
+                    nb,
+                    (&lv, stride, s_il, xi_l, chunk, w0, wn)
+                );
+            });
+            offset += nf;
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        debug_assert_eq!(offset, dof);
+
+        deinterleave(&cur[..n * nb], n, b0, nb, out);
+        b0 += nb;
+    }
+}
+
+/// Adjoint panel apply: `out[b] = √K_ICRᵀ · panel[b]` for every lane.
+pub(crate) fn apply_sqrt_transpose_panel(
+    refs: &EngineRefs<'_>,
+    panel: &[f64],
+    batch: usize,
+    threads: usize,
+    ws: &mut PanelWorkspace,
+    out: &mut [f64],
+) {
+    let params = refs.params;
+    let dof = params.total_dof();
+    let sizes = params.excitation_sizes();
+    let n = *sizes.last().unwrap();
+    assert_eq!(panel.len(), batch * n, "cotangent panel length mismatch");
+    assert_eq!(out.len(), batch * dof, "output panel length mismatch");
+    if batch == 0 {
+        return;
+    }
+    let max_level = sizes.iter().copied().max().unwrap_or(params.n0);
+    ws.ensure(dof, max_level, lane_block(batch));
+    let threads = threads.max(1);
+    let (csz, fsz, stride, n0) = (params.n_csz, params.n_fsz, params.stride(), params.n0);
+
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let nb = lane_block(batch - b0);
+        let PanelWorkspace { stage, a, b } = &mut *ws;
+        interleave(panel, n, b0, nb, &mut a[..n * nb]);
+        let out_il: &mut [f64] = &mut stage[..dof * nb];
+        let mut cur: &mut [f64] = &mut a[..];
+        let mut nxt: &mut [f64] = &mut b[..];
+
+        // Walk levels in reverse, splitting the cotangent into the ξ-part
+        // (through √Dᵀ) and the coarse part (through Rᵀ, gathered).
+        let mut offset = dof;
+        for (l, lm) in refs.levels.iter().enumerate().rev() {
+            let nc = sizes[l];
+            let nw = params.n_windows(nc);
+            let nf = nw * fsz;
+            offset -= nf;
+            let lv = level_view(lm);
+            let g_il = &cur[..nf * nb];
+
+            let gxi = &mut out_il[offset * nb..(offset + nf) * nb];
+            let t = par_threads(threads, nw, fsz * nb);
+            run_chunked(gxi, fsz * nb, nw, t, |w0, wn, chunk| {
+                dispatch_level!(bwd_xi_mono, bwd_xi_dyn, csz, fsz, nb, (&lv, g_il, chunk, w0, wn));
+            });
+
+            let gc = &mut nxt[..nc * nb];
+            let t = par_threads(threads, nc, nb);
+            run_chunked(gc, nb, nc, t, |c0, cn, chunk| {
+                dispatch_level!(
+                    bwd_coarse_mono,
+                    bwd_coarse_dyn,
+                    csz,
+                    fsz,
+                    nb,
+                    (&lv, stride, g_il, chunk, c0, cn, nw)
+                );
+            });
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        debug_assert_eq!(offset, n0);
+
+        // Base level.
+        base_bwd(refs.base_sqrt, n0, nb, &cur[..n0 * nb], &mut out_il[..n0 * nb]);
+
+        deinterleave(&out_il[..dof * nb], dof, b0, nb, out);
+        b0 += nb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_block_decomposition_is_greedy() {
+        assert_eq!(lane_block(1), 1);
+        assert_eq!(lane_block(2), 2);
+        assert_eq!(lane_block(3), 2);
+        assert_eq!(lane_block(4), 4);
+        assert_eq!(lane_block(7), 4);
+        assert_eq!(lane_block(8), 8);
+        assert_eq!(lane_block(100), 8);
+        // The greedy chain always terminates covering the whole batch.
+        for batch in 1..40usize {
+            let mut rem = batch;
+            let mut total = 0;
+            while rem > 0 {
+                let nb = lane_block(rem);
+                assert!(nb <= rem);
+                total += nb;
+                rem -= nb;
+            }
+            assert_eq!(total, batch);
+        }
+    }
+
+    #[test]
+    fn interleave_roundtrips() {
+        let rows = 7;
+        for &nb in &[1usize, 2, 4, 8] {
+            let batch = nb + 1;
+            let panel: Vec<f64> = (0..batch * rows).map(|i| i as f64 * 0.5).collect();
+            let mut il = vec![0.0; rows * nb];
+            interleave(&panel, rows, 1, nb, &mut il);
+            for i in 0..rows {
+                for q in 0..nb {
+                    assert_eq!(il[i * nb + q], panel[(1 + q) * rows + i]);
+                }
+            }
+            let mut back = vec![0.0; batch * rows];
+            deinterleave(&il, rows, 1, nb, &mut back);
+            assert_eq!(&back[rows..(1 + nb) * rows], &panel[rows..(1 + nb) * rows]);
+        }
+    }
+
+    #[test]
+    fn par_threads_gates_small_levels() {
+        assert_eq!(par_threads(4, 10, 8), 1);
+        assert_eq!(par_threads(4, 4096, 8), 4);
+        assert_eq!(par_threads(1, 1 << 20, 8), 1);
+    }
+}

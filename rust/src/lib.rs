@@ -55,6 +55,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod parallel;
 pub mod rng;
 pub mod runtime;
 pub mod testutil;
@@ -73,7 +74,7 @@ pub mod prelude {
         Coordinator, Request, Response, PROTOCOL_VERSION, SUPPORTED_PROTOCOLS,
     };
     pub use crate::error::IcrError;
-    pub use crate::icr::{IcrEngine, RefinementParams};
+    pub use crate::icr::{IcrEngine, PanelWorkspace, RefinementParams};
     pub use crate::kernels::{Kernel, Matern, Rbf};
     pub use crate::model::{
         default_obs_indices, ExactModel, GpModel, KissGpModel, ModelBuilder,

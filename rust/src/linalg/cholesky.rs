@@ -153,6 +153,108 @@ impl Cholesky {
         }
         y
     }
+
+    /// Apply the factor to a flat row-major `batch × n` panel in one
+    /// triangular panel sweep: `L` is streamed once per lane *block*
+    /// (up to [`crate::parallel::MAX_LANES`] interleaved lanes) instead
+    /// of once per lane. Bit-for-bit identical to stacking
+    /// [`Self::apply_sqrt`].
+    pub fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; batch * self.dim()];
+        self.apply_sqrt_panel_into(panel, batch, &mut out);
+        out
+    }
+
+    /// [`Self::apply_sqrt_panel`] writing into caller-provided storage.
+    pub fn apply_sqrt_panel_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
+        self.panel_apply(panel, batch, out, false);
+    }
+
+    /// Adjoint panel apply `Lᵀ·X` over a flat row-major `batch × n`
+    /// panel; bit-for-bit identical to stacking
+    /// [`Self::apply_sqrt_transpose`].
+    pub fn apply_sqrt_transpose_panel(&self, panel: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; batch * self.dim()];
+        self.apply_sqrt_transpose_panel_into(panel, batch, &mut out);
+        out
+    }
+
+    /// [`Self::apply_sqrt_transpose_panel`] writing into caller storage.
+    pub fn apply_sqrt_transpose_panel_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
+        self.panel_apply(panel, batch, out, true);
+    }
+
+    fn panel_apply(&self, panel: &[f64], batch: usize, out: &mut [f64], transpose: bool) {
+        let n = self.dim();
+        assert_eq!(panel.len(), batch * n, "panel length mismatch");
+        assert_eq!(out.len(), batch * n, "output panel length mismatch");
+        let l = self.l.as_slice();
+        // One staging buffer, sized for the widest lane block of this call.
+        let mut x_il = vec![0.0; n * crate::parallel::lane_block(batch.max(1))];
+        let mut b0 = 0usize;
+        while b0 < batch {
+            let nb = crate::parallel::lane_block(batch - b0);
+            let stage = &mut x_il[..n * nb];
+            match nb {
+                1 => tri_panel_block::<1>(l, n, panel, b0, stage, out, transpose),
+                2 => tri_panel_block::<2>(l, n, panel, b0, stage, out, transpose),
+                4 => tri_panel_block::<4>(l, n, panel, b0, stage, out, transpose),
+                _ => tri_panel_block::<8>(l, n, panel, b0, stage, out, transpose),
+            }
+            b0 += nb;
+        }
+    }
+}
+
+/// One interleaved lane block of `L·X` (or `Lᵀ·X`): load each `L` element
+/// once, contract against all `NB` lanes. Per-lane accumulation order
+/// matches the single-vector applies exactly.
+#[allow(clippy::needless_range_loop)] // indexed lane loops keep the order explicit
+fn tri_panel_block<const NB: usize>(
+    l: &[f64],
+    n: usize,
+    panel: &[f64],
+    b0: usize,
+    x_il: &mut [f64],
+    out: &mut [f64],
+    transpose: bool,
+) {
+    // Stage the block lane-interleaved so the inner loops are contiguous.
+    debug_assert_eq!(x_il.len(), n * NB);
+    for i in 0..n {
+        for q in 0..NB {
+            x_il[i * NB + q] = panel[(b0 + q) * n + i];
+        }
+    }
+    if transpose {
+        for j in 0..n {
+            let mut acc = [0.0f64; NB];
+            for i in j..n {
+                let lij = l[i * n + j];
+                let xv = &x_il[i * NB..(i + 1) * NB];
+                for q in 0..NB {
+                    acc[q] += lij * xv[q];
+                }
+            }
+            for q in 0..NB {
+                out[(b0 + q) * n + j] = acc[q];
+            }
+        }
+    } else {
+        for i in 0..n {
+            let row = &l[i * n..i * n + i + 1];
+            let mut acc = [0.0f64; NB];
+            for (j, &lij) in row.iter().enumerate() {
+                let xv = &x_il[j * NB..(j + 1) * NB];
+                for q in 0..NB {
+                    acc[q] += lij * xv[q];
+                }
+            }
+            for q in 0..NB {
+                out[(b0 + q) * n + i] = acc[q];
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +331,28 @@ mod tests {
         let lhs: f64 = lx.iter().zip(&y).map(|(a, b)| a * b).sum();
         let rhs: f64 = x.iter().zip(&lty).map(|(a, b)| a * b).sum();
         assert!((lhs - rhs).abs() < 1e-12, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn panel_applies_match_stacked_singles_bitwise() {
+        let a = spd_matrix(9);
+        let ch = Cholesky::new(&a).unwrap();
+        let n = ch.dim();
+        for batch in [1usize, 3, 8, 11] {
+            let panel: Vec<f64> =
+                (0..batch * n).map(|k| ((k * 13) as f64 * 0.071).sin() * 2.0).collect();
+            let fwd = ch.apply_sqrt_panel(&panel, batch);
+            let bwd = ch.apply_sqrt_transpose_panel(&panel, batch);
+            for b in 0..batch {
+                let lane = &panel[b * n..(b + 1) * n];
+                let want_f = ch.apply_sqrt(lane);
+                let want_b = ch.apply_sqrt_transpose(lane);
+                for i in 0..n {
+                    assert_eq!(fwd[b * n + i].to_bits(), want_f[i].to_bits(), "fwd b{b} i{i}");
+                    assert_eq!(bwd[b * n + i].to_bits(), want_b[i].to_bits(), "bwd b{b} i{i}");
+                }
+            }
+        }
     }
 
     #[test]

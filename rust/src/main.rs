@@ -91,6 +91,7 @@ fn print_help() {
         FlagSpec { name: "config", help: "JSON config file", default: None, is_switch: false },
         FlagSpec { name: "workers", help: "coordinator worker threads", default: Some("2"), is_switch: false },
         FlagSpec { name: "max-batch", help: "max applies per batch", default: Some("8"), is_switch: false },
+        FlagSpec { name: "apply-threads", help: "threads per batched √K apply (0 = all cores)", default: Some("1"), is_switch: false },
         FlagSpec { name: "seed", help: "RNG seed", default: None, is_switch: false },
         FlagSpec { name: "count", help: "samples to draw", default: Some("1"), is_switch: false },
         FlagSpec { name: "sizes", help: "comma-separated N sweep (fig4)", default: None, is_switch: false },
@@ -183,11 +184,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     eprintln!(
-        "{} | serve: models [{}] | workers {} | max_batch {} | reading JSONL from stdin",
+        "{} | serve: models [{}] | workers {} | max_batch {} | apply_threads {} | reading JSONL from stdin",
         protocol_line(),
         model_list.join(", "),
         cfg.workers,
-        cfg.max_batch
+        cfg.max_batch,
+        icr::parallel::resolve_threads(cfg.apply_threads)
     );
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();

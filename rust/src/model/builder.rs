@@ -28,6 +28,7 @@ pub struct ModelBuilder {
     model: ModelConfig,
     backend: Backend,
     artifact_dir: String,
+    apply_threads: usize,
 }
 
 impl Default for ModelBuilder {
@@ -36,6 +37,7 @@ impl Default for ModelBuilder {
             model: ModelConfig::default(),
             backend: Backend::Native,
             artifact_dir: "artifacts".into(),
+            apply_threads: 1,
         }
     }
 }
@@ -98,6 +100,14 @@ impl ModelBuilder {
         self
     }
 
+    /// Scoped-thread count for batched `√K` panel applies (`0` = one per
+    /// available core). Applies to the in-process engine families; results
+    /// are bit-identical at every setting (`DESIGN.md` §6).
+    pub fn apply_threads(mut self, threads: usize) -> Self {
+        self.apply_threads = threads;
+        self
+    }
+
     /// The accumulated model configuration.
     pub fn config(&self) -> &ModelConfig {
         &self.model
@@ -108,7 +118,9 @@ impl ModelBuilder {
     pub fn build(self) -> Result<Arc<dyn GpModel>, IcrError> {
         match self.backend {
             Backend::Native => {
-                let e = NativeEngine::from_config(&self.model).map_err(IcrError::from)?;
+                let e = NativeEngine::from_config(&self.model)
+                    .map_err(IcrError::from)?
+                    .with_apply_threads(self.apply_threads);
                 Ok(Arc::new(e))
             }
             Backend::Pjrt => {
@@ -119,11 +131,15 @@ impl ModelBuilder {
                 Ok(Arc::new(e))
             }
             Backend::Kissgp => {
-                let e = KissGpModel::from_config(&self.model).map_err(IcrError::from)?;
+                let e = KissGpModel::from_config(&self.model)
+                    .map_err(IcrError::from)?
+                    .with_apply_threads(self.apply_threads);
                 Ok(Arc::new(e))
             }
             Backend::Exact => {
-                let e = ExactModel::from_config(&self.model).map_err(IcrError::from)?;
+                let e = ExactModel::from_config(&self.model)
+                    .map_err(IcrError::from)?
+                    .with_apply_threads(self.apply_threads);
                 Ok(Arc::new(e))
             }
         }
@@ -143,7 +159,9 @@ mod tests {
             .levels(2)
             .target_n(24)
             .backend(Backend::Exact)
-            .artifact_dir("custom");
+            .artifact_dir("custom")
+            .apply_threads(4);
+        assert_eq!(b.apply_threads, 4);
         assert_eq!(b.config().kernel_spec, "matern52(rho=2.0, amp=1.0)");
         assert_eq!(b.config().chart_spec, "identity");
         assert_eq!((b.config().n_csz, b.config().n_fsz), (3, 2));

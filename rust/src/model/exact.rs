@@ -11,6 +11,7 @@ use crate::config::ModelConfig;
 use crate::error::IcrError;
 use crate::gp::ExactGp;
 use crate::linalg::Cholesky;
+use crate::parallel::{resolve_threads, run_chunked};
 
 use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
 
@@ -21,6 +22,7 @@ pub struct ExactModel {
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
+    threads: usize,
 }
 
 impl ExactModel {
@@ -39,7 +41,16 @@ impl ExactModel {
             obs,
             kernel_spec: cfg.kernel_spec.clone(),
             chart_spec: cfg.chart_spec.clone(),
+            threads: 1,
         })
+    }
+
+    /// Set the scoped-thread count for panel applies (`0` = one per
+    /// available core). Lanes are partitioned across threads; results are
+    /// bit-identical at every setting.
+    pub fn with_apply_threads(mut self, threads: usize) -> Self {
+        self.threads = resolve_threads(threads);
+        self
     }
 }
 
@@ -68,15 +79,42 @@ impl GpModel for ExactModel {
     }
 
     fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
-        let dof = self.total_dof();
-        xi.iter()
-            .map(|x| {
-                if x.len() != dof {
-                    return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
-                }
-                Ok(self.chol.apply_sqrt(x))
-            })
-            .collect()
+        super::batch_via_panel(self, xi)
+    }
+
+    fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let n = self.total_dof();
+        if panel.len() != batch * n {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * n,
+                got: panel.len(),
+            });
+        }
+        // One triangular panel sweep per lane chunk instead of per-lane
+        // column applies; lanes split across scoped threads.
+        let mut out = vec![0.0; batch * n];
+        run_chunked(&mut out, n, batch, self.threads, |b0, count, chunk| {
+            self.chol.apply_sqrt_panel_into(&panel[b0 * n..(b0 + count) * n], count, chunk);
+        });
+        Ok(out)
+    }
+
+    fn apply_sqrt_transpose_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let n = self.total_dof();
+        if panel.len() != batch * n {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * n,
+                got: panel.len(),
+            });
+        }
+        let mut out = vec![0.0; batch * n];
+        run_chunked(&mut out, n, batch, self.threads, |b0, count, chunk| {
+            self.chol
+                .apply_sqrt_transpose_panel_into(&panel[b0 * n..(b0 + count) * n], count, chunk);
+        });
+        Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
@@ -115,6 +153,28 @@ mod tests {
         assert_eq!(m.total_dof(), m.n_points());
         assert_eq!(m.domain_points().len(), m.n_points());
         assert_eq!(m.descriptor().backend, "exact");
+    }
+
+    #[test]
+    fn panel_matches_singles_at_every_thread_count() {
+        let base = exact();
+        let n = base.total_dof();
+        let mut rng = Rng::new(21);
+        let panel: Vec<f64> = (0..5 * n).map(|_| rng.standard_normal()).collect();
+        let want_f = base.apply_sqrt_panel(&panel, 5).unwrap();
+        let want_b = base.apply_sqrt_transpose_panel(&panel, 5).unwrap();
+        for b in 0..5 {
+            let lane = &panel[b * n..(b + 1) * n];
+            let single = base.chol.apply_sqrt(lane);
+            assert_eq!(&want_f[b * n..(b + 1) * n], &single[..], "lane {b}");
+        }
+        for threads in [2usize, 4] {
+            let m = exact().with_apply_threads(threads);
+            let got_f = m.apply_sqrt_panel(&panel, 5).unwrap();
+            let got_b = m.apply_sqrt_transpose_panel(&panel, 5).unwrap();
+            assert!(got_f.iter().zip(&want_f).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(got_b.iter().zip(&want_b).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::config::ModelConfig;
 use crate::error::IcrError;
 use crate::kissgp::{KissGp, KissGpConfig};
+use crate::parallel::{resolve_threads, run_chunked};
 
 use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
 
@@ -21,6 +22,7 @@ pub struct KissGpModel {
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
+    threads: usize,
 }
 
 impl KissGpModel {
@@ -39,7 +41,16 @@ impl KissGpModel {
             obs,
             kernel_spec: cfg.kernel_spec.clone(),
             chart_spec: cfg.chart_spec.clone(),
+            threads: 1,
         })
+    }
+
+    /// Set the scoped-thread count for panel applies (`0` = one per
+    /// available core). Each lane's FFT chain is independent, so lanes
+    /// partition across threads with bit-identical results.
+    pub fn with_apply_threads(mut self, threads: usize) -> Self {
+        self.threads = resolve_threads(threads);
+        self
     }
 
     pub fn inner(&self) -> &KissGp {
@@ -72,15 +83,51 @@ impl GpModel for KissGpModel {
     }
 
     fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        super::batch_via_panel(self, xi)
+    }
+
+    fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
         let dof = self.total_dof();
-        xi.iter()
-            .map(|x| {
-                if x.len() != dof {
-                    return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
-                }
-                Ok(self.model.apply_sqrt_embedding(x))
-            })
-            .collect()
+        if panel.len() != batch * dof {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * dof,
+                got: panel.len(),
+            });
+        }
+        // Each lane is an independent FFT chain; split lanes across
+        // scoped threads (per-lane arithmetic is untouched, so the panel
+        // output is bit-identical to the stacked singles).
+        let n = self.n_points();
+        let mut out = vec![0.0; batch * n];
+        run_chunked(&mut out, n, batch, self.threads, |b0, count, chunk| {
+            for i in 0..count {
+                let lane = &panel[(b0 + i) * dof..(b0 + i + 1) * dof];
+                chunk[i * n..(i + 1) * n].copy_from_slice(&self.model.apply_sqrt_embedding(lane));
+            }
+        });
+        Ok(out)
+    }
+
+    fn apply_sqrt_transpose_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let n = self.n_points();
+        if panel.len() != batch * n {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * n,
+                got: panel.len(),
+            });
+        }
+        let dof = self.total_dof();
+        let mut out = vec![0.0; batch * dof];
+        run_chunked(&mut out, dof, batch, self.threads, |b0, count, chunk| {
+            for i in 0..count {
+                let lane = &panel[(b0 + i) * n..(b0 + i + 1) * n];
+                chunk[i * dof..(i + 1) * dof]
+                    .copy_from_slice(&self.model.apply_sqrt_embedding_transpose(lane));
+            }
+        });
+        Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)

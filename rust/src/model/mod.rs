@@ -90,6 +90,42 @@ pub trait GpModel: Send + Sync {
     /// Apply `√K` to each excitation vector.
     fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError>;
 
+    /// Apply `√K` to a flat row-major `batch × dof` panel, returning the
+    /// flat `batch × n` output panel.
+    ///
+    /// This is the coordinator's serving primitive: the batcher hands one
+    /// coalesced panel to the model so the engine can amortize its memory
+    /// traffic across the whole batch (`DESIGN.md` §6). Every in-tree
+    /// engine overrides this with a genuinely blocked implementation whose
+    /// output is bit-for-bit the stacked single applies; the default
+    /// unpacks lanes and delegates to [`Self::apply_sqrt_batch`] so
+    /// out-of-tree implementations keep working.
+    fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let dof = self.total_dof();
+        if panel.len() != batch * dof {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * dof,
+                got: panel.len(),
+            });
+        }
+        let xi: Vec<Vec<f64>> = panel.chunks(dof.max(1)).map(<[f64]>::to_vec).collect();
+        let rows = self.apply_sqrt_batch(&xi)?;
+        Ok(rows.into_iter().flatten().collect())
+    }
+
+    /// Apply `√Kᵀ` to a flat row-major `batch × n` panel of cotangents,
+    /// returning the flat `batch × dof` output panel — the batched
+    /// backward pass. Engines without a batched adjoint report a typed
+    /// [`IcrError::Unsupported`].
+    fn apply_sqrt_transpose_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let _ = (panel, batch);
+        Err(IcrError::Unsupported(format!(
+            "{} does not serve batched transpose applies",
+            self.name()
+        )))
+    }
+
     /// `(loss, ∂loss/∂ξ)` of the standardized objective (paper Eq. 3)
     /// with observations on the model's observation pattern.
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
@@ -105,14 +141,20 @@ pub trait GpModel: Send + Sync {
 
     /// Draw `count` approximate GP samples for a client seed.
     ///
-    /// The default expands the seed into excitations with [`Rng`] and
-    /// applies the square root — byte-identical to what the coordinator's
-    /// dynamic batcher does, so samples never depend on the path taken.
+    /// The default expands the seed into an excitation panel with [`Rng`]
+    /// and applies the square root — byte-identical to what the
+    /// coordinator's dynamic batcher does, so samples never depend on the
+    /// path taken.
     fn sample(&self, count: usize, seed: u64) -> Result<Vec<Vec<f64>>, IcrError> {
         let dof = self.total_dof();
         let mut rng = Rng::new(seed);
-        let xi: Vec<Vec<f64>> = (0..count).map(|_| rng.standard_normal_vec(dof)).collect();
-        self.apply_sqrt_batch(&xi)
+        let mut panel = Vec::with_capacity(count * dof);
+        for _ in 0..count {
+            panel.extend_from_slice(&rng.standard_normal_vec(dof));
+        }
+        let flat = self.apply_sqrt_panel(&panel, count)?;
+        let n = self.n_points();
+        Ok(flat.chunks(n.max(1)).map(<[f64]>::to_vec).collect())
     }
 
     /// Posterior MAP of the standardized objective: `steps` Adam updates
@@ -138,7 +180,7 @@ pub trait GpModel: Send + Sync {
             opt.step(&mut xi, &grad);
         }
         trace.wall_s = t0.elapsed().as_secs_f64();
-        let field = self.apply_sqrt_batch(std::slice::from_ref(&xi))?.remove(0);
+        let field = self.apply_sqrt_panel(&xi, 1)?;
         Ok((field, trace))
     }
 }
@@ -149,6 +191,29 @@ impl dyn GpModel {
     pub fn builder() -> ModelBuilder {
         ModelBuilder::new()
     }
+}
+
+/// Shared bridge from the Vec-of-lanes convenience API to the panel
+/// serving primitive: validate every lane's shape, flatten into one flat
+/// panel, apply once, re-chunk into rows. Every in-tree engine's
+/// `apply_sqrt_batch` delegates here so the bridge exists exactly once.
+pub(crate) fn batch_via_panel(
+    model: &dyn GpModel,
+    xi: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>, IcrError> {
+    let dof = model.total_dof();
+    for x in xi {
+        if x.len() != dof {
+            return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
+        }
+    }
+    let mut panel = Vec::with_capacity(xi.len() * dof);
+    for x in xi {
+        panel.extend_from_slice(x);
+    }
+    let flat = model.apply_sqrt_panel(&panel, xi.len())?;
+    let n = model.n_points();
+    Ok(flat.chunks(n.max(1)).map(<[f64]>::to_vec).collect())
 }
 
 /// Shared argument validation for `loss_grad` implementations.

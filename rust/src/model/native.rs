@@ -1,19 +1,29 @@
 //! The Rust-native backend wrapping [`IcrEngine`].
 
+use std::sync::Mutex;
+
 use anyhow::{Context, Result};
 
 use crate::config::ModelConfig;
 use crate::error::IcrError;
-use crate::icr::IcrEngine;
+use crate::icr::{IcrEngine, PanelWorkspace};
+use crate::parallel::resolve_threads;
 
 use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
 
 /// The Rust-native engine behind the [`GpModel`] interface.
+///
+/// Panel applies run through the engine's blocked multi-excitation path
+/// with `apply_threads` scoped threads per call; scratch workspaces are
+/// pooled so concurrent coordinator workers never allocate in the hot
+/// loop (`DESIGN.md` §6).
 pub struct NativeEngine {
     engine: IcrEngine,
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
+    threads: usize,
+    workspaces: Mutex<Vec<PanelWorkspace>>,
 }
 
 impl NativeEngine {
@@ -29,11 +39,33 @@ impl NativeEngine {
             obs,
             kernel_spec: model.kernel_spec.clone(),
             chart_spec: model.chart_spec.clone(),
+            threads: 1,
+            workspaces: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Set the scoped-thread count used by panel applies (`0` = one per
+    /// available core). Results are bit-identical at every setting.
+    pub fn with_apply_threads(mut self, threads: usize) -> Self {
+        self.threads = resolve_threads(threads);
+        self
+    }
+
+    /// The configured panel-apply thread count.
+    pub fn apply_threads(&self) -> usize {
+        self.threads
     }
 
     pub fn inner(&self) -> &IcrEngine {
         &self.engine
+    }
+
+    fn take_workspace(&self) -> PanelWorkspace {
+        self.workspaces.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_workspace(&self, ws: PanelWorkspace) {
+        self.workspaces.lock().unwrap().push(ws);
     }
 }
 
@@ -62,15 +94,39 @@ impl GpModel for NativeEngine {
     }
 
     fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        super::batch_via_panel(self, xi)
+    }
+
+    fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
         let dof = self.total_dof();
-        xi.iter()
-            .map(|x| {
-                if x.len() != dof {
-                    return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: x.len() });
-                }
-                Ok(self.engine.apply_sqrt(x))
-            })
-            .collect()
+        if panel.len() != batch * dof {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * dof,
+                got: panel.len(),
+            });
+        }
+        let mut ws = self.take_workspace();
+        let mut out = vec![0.0; batch * self.n_points()];
+        self.engine.apply_sqrt_multi_with(panel, batch, self.threads, &mut ws, &mut out);
+        self.put_workspace(ws);
+        Ok(out)
+    }
+
+    fn apply_sqrt_transpose_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let n = self.n_points();
+        if panel.len() != batch * n {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * n,
+                got: panel.len(),
+            });
+        }
+        let mut ws = self.take_workspace();
+        let mut out = vec![0.0; batch * self.total_dof()];
+        self.engine.apply_sqrt_transpose_multi_with(panel, batch, self.threads, &mut ws, &mut out);
+        self.put_workspace(ws);
+        Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
@@ -119,6 +175,8 @@ mod tests {
         assert_eq!(d.backend, "native");
         assert_eq!(d.n, e.n_points());
         assert_eq!(d.dof, e.total_dof());
+        assert_eq!(e.apply_threads(), 1);
+        assert!(native().with_apply_threads(0).apply_threads() >= 1);
     }
 
     #[test]
@@ -130,6 +188,43 @@ mod tests {
         for (i, x) in xi.iter().enumerate() {
             let single = e.apply_sqrt_batch(std::slice::from_ref(x)).unwrap();
             assert_eq!(batch[i], single[0]);
+        }
+    }
+
+    #[test]
+    fn native_panel_matches_batch_at_every_thread_count() {
+        let base = native();
+        let dof = base.total_dof();
+        let mut rng = Rng::new(8);
+        let panel: Vec<f64> = (0..5 * dof).map(|_| rng.standard_normal()).collect();
+        let want = base.apply_sqrt_panel(&panel, 5).unwrap();
+        for threads in [2usize, 4] {
+            let e = native().with_apply_threads(threads);
+            let got = e.apply_sqrt_panel(&panel, 5).unwrap();
+            assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // Bad panel shapes are typed errors.
+        assert!(matches!(
+            base.apply_sqrt_panel(&panel[1..], 5),
+            Err(IcrError::ShapeMismatch { what: "panel", .. })
+        ));
+        assert!(matches!(
+            base.apply_sqrt_transpose_panel(&panel, 5),
+            Err(IcrError::ShapeMismatch { what: "panel", .. })
+        ));
+    }
+
+    #[test]
+    fn native_transpose_panel_matches_engine() {
+        let e = native();
+        let n = e.n_points();
+        let mut rng = Rng::new(12);
+        let panel: Vec<f64> = (0..3 * n).map(|_| rng.standard_normal()).collect();
+        let flat = e.apply_sqrt_transpose_panel(&panel, 3).unwrap();
+        let dof = e.total_dof();
+        for b in 0..3 {
+            let want = e.inner().apply_sqrt_transpose(&panel[b * n..(b + 1) * n]);
+            assert_eq!(&flat[b * dof..(b + 1) * dof], &want[..]);
         }
     }
 

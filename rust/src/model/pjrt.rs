@@ -115,45 +115,44 @@ impl GpModel for PjrtEngine {
     }
 
     fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
-        for x in xi {
-            if x.len() != self.dof {
-                return Err(IcrError::ShapeMismatch {
-                    what: "xi",
-                    expected: self.dof,
-                    got: x.len(),
-                });
-            }
+        super::batch_via_panel(self, xi)
+    }
+
+    fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        if panel.len() != batch * self.dof {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * self.dof,
+                got: panel.len(),
+            });
         }
-        // Route to the smallest batched executable that fits; fall back to
-        // per-request singles when none is compiled.
-        if xi.len() > 1 {
+        // Route the panel to the smallest batched executable that fits,
+        // zero-padded up to its compiled batch size; fall back to per-lane
+        // singles when none is compiled.
+        if batch > 1 {
             let spec = self
                 .service
                 .manifest()
-                .best_icr_batch(self.n, xi.len())
+                .best_icr_batch(self.n, batch)
                 .map(|s| (s.name.clone(), s.meta_usize("batch").unwrap_or(1)));
             if let Some((name, b)) = spec {
                 let mut flat = vec![0.0; b * self.dof];
-                for (i, x) in xi.iter().enumerate() {
-                    flat[i * self.dof..(i + 1) * self.dof].copy_from_slice(x);
-                }
-                let out =
-                    self.service.execute_f64(&name, &[&flat]).map_err(IcrError::from)?;
-                let s = &out[0];
-                return Ok((0..xi.len())
-                    .map(|i| s[i * self.n..(i + 1) * self.n].to_vec())
-                    .collect());
+                flat[..batch * self.dof].copy_from_slice(panel);
+                let out = self.service.execute_f64(&name, &[&flat]).map_err(IcrError::from)?;
+                return Ok(out[0][..batch * self.n].to_vec());
             }
         }
-        xi.iter()
-            .map(|x| {
-                Ok(self
-                    .service
-                    .execute_f64(&self.apply_name, &[&x[..]])
+        let mut out = Vec::with_capacity(batch * self.n);
+        for b in 0..batch {
+            let lane = &panel[b * self.dof..(b + 1) * self.dof];
+            out.extend(
+                self.service
+                    .execute_f64(&self.apply_name, &[lane])
                     .map_err(IcrError::from)?
-                    .remove(0))
-            })
-            .collect()
+                    .remove(0),
+            );
+        }
+        Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)

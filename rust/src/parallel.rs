@@ -1,0 +1,134 @@
+//! Deterministic scoped-thread partitioning for the panel hot paths.
+//!
+//! Every parallel section in the crate follows one discipline: the output
+//! array is split into *disjoint contiguous chunks* (one per thread) and
+//! each output element is computed by exactly one thread with exactly the
+//! arithmetic the serial path would use. No atomics, no reductions across
+//! threads — which is what makes the multi-apply bit-for-bit identical to
+//! the serial path at every thread count (see `DESIGN.md` §6).
+
+/// Resolve a thread-count knob: `0` means "one per available core".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Maximum lanes per interleaved block — the widest monomorphized panel
+/// kernel anywhere in the crate (ICR levels and triangular panel sweeps
+/// share the same blocking policy).
+pub const MAX_LANES: usize = 8;
+
+/// Greedy lane-block width for `rem` remaining lanes: 8, 4, 2, 1. Shared
+/// by every panel implementation so blocking policy can only change in
+/// one place.
+pub fn lane_block(rem: usize) -> usize {
+    if rem >= 8 {
+        8
+    } else if rem >= 4 {
+        4
+    } else if rem >= 2 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Run `f` over `items` work items whose outputs are contiguous runs of
+/// `unit` elements in `out` (`out.len() == items * unit`), split across up
+/// to `threads` scoped threads.
+///
+/// `f(start, count, chunk)` must fill `chunk` (the outputs of items
+/// `start..start + count`) reading only shared state — determinism then
+/// holds by construction because chunking never changes *which* serial
+/// computation produces an element, only *who* runs it.
+///
+/// With `threads <= 1` (or a single item) no thread is spawned and `f`
+/// runs inline, so the serial path stays allocation- and syscall-free.
+pub fn run_chunked<F>(out: &mut [f64], unit: usize, items: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(out.len(), items * unit, "run_chunked: output/items mismatch");
+    let t = threads.min(items).max(1);
+    if t == 1 {
+        f(0, items, out);
+        return;
+    }
+    std::thread::scope(|sc| {
+        let fref = &f;
+        let mut rest = out;
+        let mut start = 0usize;
+        for i in 0..t {
+            // Balanced: ceil of what remains over the threads left.
+            let count = (items - start).div_ceil(t - i);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(count * unit);
+            rest = tail;
+            let s = start;
+            start += count;
+            if i == t - 1 {
+                // The caller's thread does the last chunk instead of idling.
+                fref(s, count, chunk);
+            } else {
+                sc.spawn(move || fref(s, count, chunk));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn chunking_covers_every_item_exactly_once() {
+        for items in [0usize, 1, 2, 5, 16, 33] {
+            for threads in [1usize, 2, 3, 4, 7] {
+                let unit = 3;
+                let mut out = vec![0.0; items * unit];
+                run_chunked(&mut out, unit, items, threads, |start, count, chunk| {
+                    assert_eq!(chunk.len(), count * unit);
+                    for i in 0..count {
+                        for u in 0..unit {
+                            chunk[i * unit + u] += ((start + i) * unit + u) as f64 + 1.0;
+                        }
+                    }
+                });
+                for (k, v) in out.iter().enumerate() {
+                    assert_eq!(*v, k as f64 + 1.0, "item {k} written wrong ({items}x{threads})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        // The determinism contract in miniature: same chunk function, any
+        // thread count, identical bits.
+        let items = 101;
+        let unit = 4;
+        let work = |start: usize, count: usize, chunk: &mut [f64]| {
+            for i in 0..count {
+                let g = (start + i) as f64;
+                for u in 0..unit {
+                    chunk[i * unit + u] = (g * 0.37 + u as f64).sin() * 1e3;
+                }
+            }
+        };
+        let mut serial = vec![0.0; items * unit];
+        run_chunked(&mut serial, unit, items, 1, work);
+        for t in [2usize, 3, 4, 8] {
+            let mut par = vec![0.0; items * unit];
+            run_chunked(&mut par, unit, items, t, work);
+            assert!(serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! The determinism contract of the blocked panel execution path
+//! (`DESIGN.md` §6): multi-excitation applies are **bit-for-bit** the
+//! stacked single applies — forward and adjoint, across every engine
+//! family behind [`GpModel`], thread counts {1, 2, 4}, batch sizes
+//! {1, 3, 8}, and both stationary (affine chart) and charted (LogChart)
+//! geometries.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use icr::chart::{Chart, IdentityChart, LogChart};
+use icr::config::Backend;
+use icr::icr::{IcrEngine, RefinementParams};
+use icr::kernels::{Kernel, Matern};
+use icr::model::{GpModel, ModelBuilder};
+use icr::rng::Rng;
+use icr::testutil::{prop_check, PropConfig};
+
+const BATCHES: [usize; 3] = [1, 3, 8];
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Every family constructible in this environment, at a given panel
+/// thread count: native on the charted paper geometry, native stationary
+/// (identity chart), KISS-GP, exact dense, and PJRT when artifacts exist.
+fn families(threads: usize) -> Vec<(&'static str, Arc<dyn GpModel>)> {
+    let mk = |backend, chart: &str| {
+        ModelBuilder::new()
+            .windows(3, 2)
+            .levels(3)
+            .target_n(40)
+            .chart(chart)
+            .backend(backend)
+            .apply_threads(threads)
+            .build()
+            .unwrap()
+    };
+    let mut out = vec![
+        ("native-charted", mk(Backend::Native, "paper_log")),
+        ("native-stationary", mk(Backend::Native, "identity")),
+        ("kissgp", mk(Backend::Kissgp, "paper_log")),
+        ("exact", mk(Backend::Exact, "paper_log")),
+    ];
+    if Path::new("artifacts/manifest.json").exists() {
+        match ModelBuilder::new().backend(Backend::Pjrt).apply_threads(threads).build() {
+            Ok(m) => out.push(("pjrt", m)),
+            Err(e) => eprintln!("SKIP pjrt panel equivalence: {e}"),
+        }
+    }
+    out
+}
+
+#[test]
+fn panel_equals_stacked_singles_across_families() {
+    // Reference lanes from the thread-count-1 models; every (family,
+    // batch, threads) combination must reproduce them exactly.
+    for &threads in &THREADS {
+        for (name, m) in families(threads) {
+            let dof = m.total_dof();
+            let n = m.n_points();
+            for &batch in &BATCHES {
+                let mut lane_rng = Rng::new(1000 + batch as u64);
+                let panel: Vec<f64> =
+                    (0..batch * dof).map(|_| lane_rng.standard_normal()).collect();
+                let flat = m.apply_sqrt_panel(&panel, batch).unwrap();
+                assert_eq!(flat.len(), batch * n, "{name} b{batch} t{threads}");
+                let singles = m
+                    .apply_sqrt_batch(
+                        &panel.chunks(dof).map(<[f64]>::to_vec).collect::<Vec<_>>(),
+                    )
+                    .unwrap();
+                for (b, want) in singles.iter().enumerate() {
+                    assert!(
+                        bits_eq(&flat[b * n..(b + 1) * n], want),
+                        "{name}: panel lane {b} (b={batch}, t={threads}) diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn panel_is_thread_count_invariant() {
+    // Serving bytes must not depend on the --apply-threads knob: compare
+    // every family at t ∈ {2, 4} against its own t = 1 output.
+    for &batch in &BATCHES {
+        let reference: Vec<(&str, Vec<f64>)> = families(1)
+            .into_iter()
+            .map(|(name, m)| {
+                let mut rng = Rng::new(77 + batch as u64);
+                let panel: Vec<f64> =
+                    (0..batch * m.total_dof()).map(|_| rng.standard_normal()).collect();
+                (name, m.apply_sqrt_panel(&panel, batch).unwrap())
+            })
+            .collect();
+        for &threads in &THREADS[1..] {
+            for ((name, m), (ref_name, want)) in
+                families(threads).into_iter().zip(&reference)
+            {
+                assert_eq!(name, *ref_name);
+                let mut rng = Rng::new(77 + batch as u64);
+                let panel: Vec<f64> =
+                    (0..batch * m.total_dof()).map(|_| rng.standard_normal()).collect();
+                let got = m.apply_sqrt_panel(&panel, batch).unwrap();
+                assert!(bits_eq(&got, want), "{name}: t{threads} b{batch} changed bytes");
+            }
+        }
+    }
+}
+
+#[test]
+fn transpose_panel_equals_stacked_lanes_across_families() {
+    for &threads in &THREADS {
+        for (name, m) in families(threads) {
+            let n = m.n_points();
+            let dof = m.total_dof();
+            let mut rng = Rng::new(0x7A39);
+            for &batch in &BATCHES {
+                let panel: Vec<f64> = (0..batch * n).map(|_| rng.standard_normal()).collect();
+                let flat = match m.apply_sqrt_transpose_panel(&panel, batch) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        // PJRT has no adjoint executable: a typed refusal.
+                        assert_eq!(e.kind(), "unsupported", "{name}: {e}");
+                        continue;
+                    }
+                };
+                assert_eq!(flat.len(), batch * dof, "{name} b{batch} t{threads}");
+                for b in 0..batch {
+                    let lane = m
+                        .apply_sqrt_transpose_panel(&panel[b * n..(b + 1) * n], 1)
+                        .unwrap();
+                    assert!(
+                        bits_eq(&flat[b * dof..(b + 1) * dof], &lane),
+                        "{name}: adjoint lane {b} (b={batch}, t={threads}) diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adjoint_panels_satisfy_the_adjoint_identity() {
+    // ⟨√K·x, y⟩ = ⟨x, √Kᵀ·y⟩ lane by lane through the panel APIs.
+    for (name, m) in families(2) {
+        if m.descriptor().backend == "pjrt" {
+            continue;
+        }
+        let n = m.n_points();
+        let dof = m.total_dof();
+        let mut rng = Rng::new(0xAD70 ^ 0x1111);
+        let batch = 3;
+        let x: Vec<f64> = (0..batch * dof).map(|_| rng.standard_normal()).collect();
+        let y: Vec<f64> = (0..batch * n).map(|_| rng.standard_normal()).collect();
+        let sx = m.apply_sqrt_panel(&x, batch).unwrap();
+        let sty = m.apply_sqrt_transpose_panel(&y, batch).unwrap();
+        for b in 0..batch {
+            let lhs: f64 =
+                sx[b * n..(b + 1) * n].iter().zip(&y[b * n..(b + 1) * n]).map(|(a, c)| a * c).sum();
+            let rhs: f64 = x[b * dof..(b + 1) * dof]
+                .iter()
+                .zip(&sty[b * dof..(b + 1) * dof])
+                .map(|(a, c)| a * c)
+                .sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()),
+                "{name}: lane {b} adjoint identity violated: {lhs} vs {rhs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_engine_panel_bitwise_across_random_geometries() {
+    // Randomized sweep over the ICR configuration space (both stationary
+    // and charted): apply_sqrt_multi / apply_sqrt_transpose_multi must be
+    // bit-for-bit the stacked single applies for random (batch, threads).
+    prop_check(
+        "panel-bitwise-equivalence",
+        PropConfig::with_seed(0x9A4E1).cases(12).max_size(28),
+        |rng, size| {
+            let shapes = [(3usize, 2usize), (3, 4), (5, 2), (5, 4), (5, 6)];
+            let (csz, fsz) = shapes[rng.uniform_usize(shapes.len())];
+            let n_lvl = 1 + rng.uniform_usize(3);
+            let target = (8 + size * 2).min(72);
+            let params = RefinementParams::for_target(csz, fsz, n_lvl, target)
+                .expect("candidate shapes always admit a target");
+            let kernel = Matern::nu32(0.5 + 3.0 * rng.uniform(), 1.0);
+            let stationary = rng.uniform() < 0.5;
+            let chart: Box<dyn Chart> = if stationary {
+                Box::new(IdentityChart::unit())
+            } else {
+                Box::new(LogChart::new(-2.0 * rng.uniform(), 0.01 + 0.04 * rng.uniform()))
+            };
+            let engine = IcrEngine::build(&kernel, chart.as_ref(), params).unwrap();
+            let batch = BATCHES[rng.uniform_usize(BATCHES.len())];
+            let threads = THREADS[rng.uniform_usize(THREADS.len())];
+            let panel = rng.standard_normal_vec(batch * engine.total_dof());
+            let gpanel = rng.standard_normal_vec(batch * engine.n_points());
+            (engine, batch, threads, panel, gpanel)
+        },
+        |(engine, batch, threads, panel, gpanel)| {
+            let dof = engine.total_dof();
+            let n = engine.n_points();
+            let fwd = engine.apply_sqrt_multi(panel, *batch, *threads);
+            let bwd = engine.apply_sqrt_transpose_multi(gpanel, *batch, *threads);
+            for b in 0..*batch {
+                let want = engine.apply_sqrt(&panel[b * dof..(b + 1) * dof]);
+                if !bits_eq(&fwd[b * n..(b + 1) * n], &want) {
+                    return Err(format!(
+                        "{engine:?}: forward lane {b}/{batch} (t={threads}) diverged"
+                    ));
+                }
+                let want = engine.apply_sqrt_transpose(&gpanel[b * n..(b + 1) * n]);
+                if !bits_eq(&bwd[b * dof..(b + 1) * dof], &want) {
+                    return Err(format!(
+                        "{engine:?}: adjoint lane {b}/{batch} (t={threads}) diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stationary_and_opaque_charted_panels_agree() {
+    // The broadcast fast path (stride-0 window view) against the packed
+    // per-window path on the same affine geometry, through the panel API.
+    struct OpaqueIdentity;
+    impl Chart for OpaqueIdentity {
+        fn to_domain(&self, u: f64) -> f64 {
+            u
+        }
+        fn to_grid(&self, x: f64) -> f64 {
+            x
+        }
+        fn name(&self) -> &'static str {
+            "opaque-identity"
+        }
+    }
+    let kern: Box<dyn Kernel> = Box::new(Matern::nu32(5.0, 1.0));
+    let params = RefinementParams::new(5, 4, 2, 9).unwrap();
+    let fast = IcrEngine::build(kern.as_ref(), &IdentityChart::unit(), params).unwrap();
+    let slow = IcrEngine::build(kern.as_ref(), &OpaqueIdentity, params).unwrap();
+    assert!(fast.is_stationary() && !slow.is_stationary());
+    let mut rng = Rng::new(55);
+    let batch = 8;
+    let panel = rng.standard_normal_vec(batch * fast.total_dof());
+    let gpanel = rng.standard_normal_vec(batch * fast.n_points());
+    for &t in &THREADS {
+        let a = fast.apply_sqrt_multi(&panel, batch, t);
+        let b = slow.apply_sqrt_multi(&panel, batch, t);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10, "forward t{t}: {x} vs {y}");
+        }
+        let a = fast.apply_sqrt_transpose_multi(&gpanel, batch, t);
+        let b = slow.apply_sqrt_transpose_multi(&gpanel, batch, t);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10, "adjoint t{t}: {x} vs {y}");
+        }
+    }
+}
