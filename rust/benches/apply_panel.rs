@@ -14,6 +14,7 @@ use icr::experiments::paper_chart;
 use icr::icr::{IcrEngine, PanelWorkspace, RefinementParams};
 use icr::json;
 use icr::kernels::Matern;
+use icr::parallel::Exec;
 use icr::rng::Rng;
 
 /// Deep refinement geometry: enough levels that the dense base-level
@@ -69,7 +70,9 @@ fn main() {
             }
         });
 
-        // Blocked panel applies, threaded across windows.
+        // Blocked panel applies: scoped-spawn baseline vs the persistent
+        // worker pool at every thread count (t = 1 shares the serial
+        // path, so only the scoped name is recorded there).
         for &t in &threads {
             runner.bench(&format!("apply/panel/b{B}/t{t}/n{n}"), || {
                 engine.apply_sqrt_multi_with(&panel, B, t, &mut ws, &mut out);
@@ -78,6 +81,29 @@ fn main() {
             runner.bench(&format!("transpose/panel/b{B}/t{t}/n{n}"), || {
                 engine.apply_sqrt_transpose_multi_with(&gpanel, B, t, &mut ws, &mut gout);
                 sink += gout[0];
+            });
+            if t > 1 {
+                let exec = Exec::pooled(t);
+                runner.bench(&format!("apply/pool/b{B}/t{t}/n{n}"), || {
+                    engine.apply_sqrt_panel_exec(&panel, B, &exec, &mut ws, &mut out);
+                    sink += out[0];
+                });
+                runner.bench(&format!("transpose/pool/b{B}/t{t}/n{n}"), || {
+                    engine.apply_sqrt_transpose_panel_exec(&gpanel, B, &exec, &mut ws, &mut gout);
+                    sink += gout[0];
+                });
+            }
+        }
+
+        // SIMD-off (pure scalar) reference at t = 1 so the microkernel
+        // win is visible in the JSON trajectory.
+        {
+            let scalar = IcrEngine::build(&kernel, &chart, params)
+                .expect("scalar engine")
+                .with_simd(false);
+            runner.bench(&format!("apply/scalar/b{B}/t1/n{n}"), || {
+                scalar.apply_sqrt_multi_with(&panel, B, 1, &mut ws, &mut out);
+                sink += out[0];
             });
         }
 
@@ -148,6 +174,34 @@ fn main() {
                     ("speedup", json::num(scaling)),
                 ]));
             }
+            // Pool vs scoped-spawn at the same thread count: the
+            // persistent-pool dispatch must not lose to per-level spawns
+            // (and should win at small N, where spawn cost dominates).
+            if let (Some(scoped), Some(pool)) = (
+                median(&runner, &format!("apply/panel/b{B}/t{t}/n{n}")),
+                median(&runner, &format!("apply/pool/b{B}/t{t}/n{n}")),
+            ) {
+                let speedup = scoped / pool;
+                println!("apply n={n}: pool vs scoped at t{t} = {speedup:.2}x");
+                summary.push(json::obj(vec![
+                    ("metric", json::s("apply_pool_vs_scoped")),
+                    ("n", json::num(n as f64)),
+                    ("threads", json::num(t as f64)),
+                    ("speedup", json::num(speedup)),
+                ]));
+            }
+        }
+        if let (Some(scalar), Some(simd)) = (
+            median(&runner, &format!("apply/scalar/b{B}/t1/n{n}")),
+            median(&runner, &format!("apply/panel/b{B}/t1/n{n}")),
+        ) {
+            let speedup = scalar / simd;
+            println!("apply n={n}: simd vs scalar at t1 = {speedup:.2}x");
+            summary.push(json::obj(vec![
+                ("metric", json::s("apply_simd_vs_scalar")),
+                ("n", json::num(n as f64)),
+                ("speedup", json::num(speedup)),
+            ]));
         }
     }
 

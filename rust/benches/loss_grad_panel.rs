@@ -1,0 +1,137 @@
+//! Batched `loss_grad` bench: multi-chain inference sweeps through the
+//! blocked panel path vs per-chain serial `loss_grad` calls, swept over
+//! chain count B × threads × N. This is the inference-side twin of
+//! `apply_panel` (`DESIGN.md` §7): run with `--json` to write
+//! `BENCH_loss_grad.json` (overridable as `--json=path`), e.g.
+//!
+//! ```text
+//! cargo bench --bench loss_grad_panel -- --json
+//! ```
+
+use icr::bench::Runner;
+use icr::config::ModelConfig;
+use icr::json;
+use icr::model::{GpModel, NativeEngine};
+use icr::parallel::Exec;
+use icr::rng::Rng;
+
+/// Deep refinement geometry (mirrors `apply_panel`): enough levels that
+/// the dense base-level apply stays negligible at every N.
+fn deep_config(target: usize) -> ModelConfig {
+    let mut lvl = 5;
+    loop {
+        let cfg =
+            ModelConfig { n_csz: 5, n_fsz: 4, n_lvl: lvl, target_n: target, ..ModelConfig::default() };
+        match cfg.refinement_params() {
+            Ok(p) if p.n0 <= 64 || lvl >= 12 => return cfg,
+            _ => lvl += 1,
+        }
+    }
+}
+
+fn median(runner: &Runner, name: &str) -> Option<f64> {
+    runner.results.iter().find(|r| r.name == name).map(|r| r.median_ns)
+}
+
+fn main() {
+    let mut runner = Runner::new();
+    runner.header("batched loss_grad — chains × threads × N");
+    let sizes = [1024usize, 4096];
+    let threads = [1usize, 2, 4];
+    let batches = [1usize, 4, 8];
+
+    let mut rng = Rng::new(7117);
+    for &target in &sizes {
+        let cfg = deep_config(target);
+        for &t in &threads {
+            let model = NativeEngine::from_config(&cfg)
+                .expect("native engine")
+                .with_exec(Exec::pooled(t));
+            let n = model.n_points();
+            let dof = model.total_dof();
+            let y = rng.standard_normal_vec(model.obs_indices().len());
+            let sigma = 0.2;
+            for &b in &batches {
+                let panel = rng.standard_normal_vec(b * dof);
+                let mut losses = vec![0.0; b];
+                let mut grad = vec![0.0; b * dof];
+                let mut sink = 0.0;
+
+                // Baseline (t = 1 only): B sequential single-chain
+                // loss_grad calls — what a multi-restart loop used to
+                // cost per sweep.
+                if t == 1 {
+                    runner.bench(&format!("loss_grad/serial/b{b}/n{n}"), || {
+                        for c in 0..b {
+                            let (l, _g) = model
+                                .loss_grad(&panel[c * dof..(c + 1) * dof], &y, sigma)
+                                .expect("loss_grad");
+                            sink += l;
+                        }
+                    });
+                }
+
+                // Batched panel sweep: one forward + one adjoint panel
+                // apply for all B chains, buffers reused across calls.
+                runner.bench(&format!("loss_grad/panel/b{b}/t{t}/n{n}"), || {
+                    model
+                        .loss_grad_panel_into(&panel, b, &y, sigma, &mut losses, &mut grad)
+                        .expect("loss_grad_panel");
+                    sink += losses[0] + grad[0];
+                });
+                std::hint::black_box(sink);
+            }
+        }
+    }
+
+    // Summaries: panel-vs-serial speedup per (B, N) at t = 1 and thread
+    // scaling of the B = 8 panel sweep.
+    let mut summary: Vec<json::Value> = Vec::new();
+    for &target in &sizes {
+        let cfg = deep_config(target);
+        let n = cfg.refinement_params().expect("params").final_size();
+        for &b in &batches {
+            let serial = median(&runner, &format!("loss_grad/serial/b{b}/n{n}"));
+            let panel = median(&runner, &format!("loss_grad/panel/b{b}/t1/n{n}"));
+            if let (Some(serial), Some(panel)) = (serial, panel) {
+                let speedup = serial / panel;
+                println!(
+                    "loss_grad n={n}: panel(B={b}, t=1) speedup over {b} serial = {speedup:.2}x"
+                );
+                summary.push(json::obj(vec![
+                    ("metric", json::s("loss_grad_panel_vs_serial")),
+                    ("n", json::num(n as f64)),
+                    ("batch", json::num(b as f64)),
+                    ("speedup", json::num(speedup)),
+                ]));
+            }
+        }
+        let t1 = median(&runner, &format!("loss_grad/panel/b8/t1/n{n}"));
+        for &t in &[2usize, 4] {
+            if let (Some(t1), Some(tt)) =
+                (t1, median(&runner, &format!("loss_grad/panel/b8/t{t}/n{n}")))
+            {
+                let scaling = t1 / tt;
+                println!("loss_grad n={n}: thread scaling t{t}/t1 (B=8) = {scaling:.2}x");
+                summary.push(json::obj(vec![
+                    ("metric", json::s("loss_grad_thread_scaling")),
+                    ("n", json::num(n as f64)),
+                    ("threads", json::num(t as f64)),
+                    ("speedup", json::num(scaling)),
+                ]));
+            }
+        }
+    }
+
+    runner.dump_jsonl("results/bench_loss_grad.jsonl").ok();
+    if runner.json_requested() {
+        match runner.dump_json(
+            "BENCH_loss_grad.json",
+            "loss_grad_panel",
+            vec![("summary", json::arr(summary))],
+        ) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write JSON results: {e}"),
+        }
+    }
+}

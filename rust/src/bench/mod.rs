@@ -55,6 +55,24 @@ impl BenchResult {
     }
 }
 
+/// Hardware metadata embedded in every `--json` dump so speedup numbers
+/// are comparable across machines: core count, the resolved default
+/// `apply_threads` this process would use (`ICR_APPLY_THREADS` honored,
+/// `0` resolved to cores), and the detected target features driving the
+/// SIMD microkernel dispatch.
+pub fn hardware_json() -> crate::json::Value {
+    let f = crate::parallel::cpu_features();
+    let apply_threads =
+        crate::parallel::resolve_threads(crate::parallel::default_apply_threads());
+    crate::json::obj(vec![
+        ("cores", crate::json::num(f.cores as f64)),
+        ("apply_threads_resolved", crate::json::num(apply_threads as f64)),
+        ("avx2", crate::json::Value::Bool(f.avx2)),
+        ("fma", crate::json::Value::Bool(f.fma)),
+        ("simd_enabled", crate::json::Value::Bool(crate::parallel::simd_enabled())),
+    ])
+}
+
 /// Pretty-print nanoseconds with a unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -200,6 +218,7 @@ impl Runner {
             ("version", crate::json::s(crate::VERSION)),
             ("bench_time_ms", crate::json::num(self.budget.as_millis() as f64)),
             ("samples", crate::json::num(self.samples as f64)),
+            ("hardware", hardware_json()),
         ];
         pairs.extend(extra);
         pairs.push((
@@ -278,6 +297,12 @@ mod tests {
         let v = crate::json::Value::parse(&text).unwrap();
         assert_eq!(v.get("suite").unwrap().as_str(), Some("apply_panel"));
         assert_eq!(v.get("speedup_b8").unwrap().as_f64(), Some(3.5));
+        // Hardware metadata rides along in every dump.
+        let hw = v.get("hardware").expect("hardware section");
+        assert!(hw.get("cores").unwrap().as_usize().unwrap() >= 1);
+        assert!(hw.get("apply_threads_resolved").unwrap().as_usize().unwrap() >= 1);
+        assert!(hw.get("avx2").and_then(crate::json::Value::as_bool).is_some());
+        assert!(hw.get("fma").and_then(crate::json::Value::as_bool).is_some());
         let results = v.get("results").unwrap().as_array().unwrap();
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("median_ns").unwrap().as_f64(), Some(12.0));

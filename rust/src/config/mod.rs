@@ -203,10 +203,12 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch before dispatching.
     pub max_wait_us: u64,
-    /// Scoped threads per batched `√K` panel apply (`--apply-threads`;
-    /// `0` = one per available core). Outputs are bit-identical at every
-    /// setting — the knob trades per-request latency against worker
-    /// parallelism (`DESIGN.md` §6).
+    /// Worker-pool lanes per batched `√K` panel apply (`--apply-threads`;
+    /// `0` = one per available core). The coordinator builds one
+    /// persistent pool of this width and shares it across every hosted
+    /// model. Outputs are bit-identical at every setting — the knob
+    /// trades per-request latency against worker parallelism
+    /// (`DESIGN.md` §6/§7). Defaults to `ICR_APPLY_THREADS` when set.
     pub apply_threads: usize,
     pub artifact_dir: String,
     pub seed: u64,
@@ -221,7 +223,7 @@ impl Default for ServerConfig {
             workers: 2,
             max_batch: 8,
             max_wait_us: 200,
-            apply_threads: 1,
+            apply_threads: crate::parallel::default_apply_threads(),
             artifact_dir: "artifacts".into(),
             seed: 0xED40FE5,
         }
@@ -437,10 +439,13 @@ mod tests {
 
     #[test]
     fn apply_threads_defaults_and_json_roundtrip() {
+        // The default honors ICR_APPLY_THREADS (CI forces 4 through the
+        // pool); unset it is 1.
+        let want = crate::parallel::default_apply_threads();
         let cfg = ServerConfig::default();
-        assert_eq!(cfg.apply_threads, 1);
+        assert_eq!(cfg.apply_threads, want);
         let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
-        assert_eq!(v.get("apply_threads").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("apply_threads").unwrap().as_usize(), Some(want));
         // `0` (auto) is representable from file config.
         let dir = std::env::temp_dir();
         let path = dir.join(format!("icr_threads_{}.json", std::process::id()));

@@ -23,6 +23,7 @@ use std::collections::BTreeMap;
 
 use crate::error::IcrError;
 use crate::json::{self, Value};
+use crate::model::MultiInference;
 use crate::optim::Trace;
 
 use super::request::{Request, RequestId, Response};
@@ -125,6 +126,23 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
                 lr: v.get("lr").and_then(Value::as_f64).unwrap_or(0.1),
             }
         }
+        "infer_multi" => {
+            let y_obs = v
+                .get("y_obs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| IcrError::MalformedRequest("infer_multi needs \"y_obs\"".into()))?
+                .iter()
+                .filter_map(Value::as_f64)
+                .collect();
+            Request::InferMulti {
+                y_obs,
+                sigma_n: v.get("sigma").and_then(Value::as_f64).unwrap_or(0.1),
+                steps: v.get("steps").and_then(Value::as_usize).unwrap_or(100),
+                lr: v.get("lr").and_then(Value::as_f64).unwrap_or(0.1),
+                restarts: v.get("restarts").and_then(Value::as_usize).unwrap_or(1),
+                seed: v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            }
+        }
         "stats" => Request::Stats,
         other => return Err(IcrError::UnknownOp(other.to_string())),
     };
@@ -159,6 +177,14 @@ pub fn encode_request(frame: &RequestFrame) -> Value {
             fields.push(("steps", json::num(*steps as f64)));
             fields.push(("lr", json::num(*lr)));
         }
+        Request::InferMulti { y_obs, sigma_n, steps, lr, restarts, seed } => {
+            fields.push(("y_obs", json::arr(y_obs.iter().map(|&x| json::num(x)).collect())));
+            fields.push(("sigma", json::num(*sigma_n)));
+            fields.push(("steps", json::num(*steps as f64)));
+            fields.push(("lr", json::num(*lr)));
+            fields.push(("restarts", json::num(*restarts as f64)));
+            fields.push(("seed", json::num(*seed as f64)));
+        }
         Request::Stats => {}
     }
     json::obj(fields)
@@ -182,6 +208,28 @@ fn result_payload(resp: &Response) -> Value {
             ("field", json::arr(field.iter().map(|&x| json::num(x)).collect())),
             ("losses", json::arr(trace.losses.iter().map(|&x| json::num(x)).collect())),
             ("wall_s", json::num(trace.wall_s)),
+        ]),
+        Response::MultiInference(mi) => json::obj(vec![
+            (
+                "fields",
+                json::arr(
+                    mi.fields
+                        .iter()
+                        .map(|f| json::arr(f.iter().map(|&x| json::num(x)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "losses",
+                json::arr(
+                    mi.traces
+                        .iter()
+                        .map(|t| json::arr(t.losses.iter().map(|&x| json::num(x)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("wall_s", json::num(mi.traces.first().map(|t| t.wall_s).unwrap_or(0.0))),
+            ("best", json::num(mi.best as f64)),
         ]),
         Response::Stats(v) => json::obj(vec![("stats", v.clone())]),
     }
@@ -286,6 +334,20 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
     };
     let response = if let Some(s) = payload.get("samples").and_then(Value::as_array) {
         Response::Samples(s.iter().map(&floats).collect())
+    } else if let Some(fs) = payload.get("fields").and_then(Value::as_array) {
+        // Multi-restart inference (checked before "losses": both carry a
+        // losses key, but here it is one array per chain).
+        let wall_s = payload.get("wall_s").and_then(Value::as_f64).unwrap_or(0.0);
+        let traces: Vec<Trace> = payload
+            .get("losses")
+            .and_then(Value::as_array)
+            .map(|ls| ls.iter().map(|l| Trace { losses: floats(l), wall_s }).collect())
+            .unwrap_or_default();
+        Response::MultiInference(MultiInference {
+            fields: fs.iter().map(&floats).collect(),
+            traces,
+            best: payload.get("best").and_then(Value::as_usize).unwrap_or(0),
+        })
     } else if let Some(stats) = payload.get("stats") {
         // v1 carries stats as a serialized-JSON string; v2 as an object.
         match stats {
@@ -360,12 +422,44 @@ mod tests {
                 Some(1),
                 Request::Infer { y_obs: vec![1.0, 2.0], sigma_n: 0.25, steps: 50, lr: 0.05 },
             ),
+            RequestFrame::v2(
+                Some("default"),
+                Some(3),
+                Request::InferMulti {
+                    y_obs: vec![0.5, -1.0],
+                    sigma_n: 0.5,
+                    steps: 20,
+                    lr: 0.1,
+                    restarts: 4,
+                    seed: 77,
+                },
+            ),
             RequestFrame::v2(Some("ref"), Some(2), Request::Stats),
         ];
         for frame in &frames {
             let line = encode_request(frame).to_json();
             let back = parse_request(&line).unwrap();
             assert_eq!(&back, frame, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn multi_inference_response_roundtrips_v2() {
+        let mi = MultiInference {
+            fields: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            traces: vec![
+                Trace { losses: vec![9.0, 1.0], wall_s: 0.5 },
+                Trace { losses: vec![8.0, 2.0], wall_s: 0.5 },
+            ],
+            best: 0,
+        };
+        let encoded =
+            encode_response(2, 7, Some("default"), &Ok(Response::MultiInference(mi.clone())));
+        let frame = decode_response(&encoded).unwrap();
+        assert_eq!(frame.id, 7);
+        match frame.result.unwrap() {
+            Response::MultiInference(back) => assert_eq!(back, mi),
+            other => panic!("{other:?}"),
         }
     }
 

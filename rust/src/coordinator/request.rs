@@ -5,6 +5,7 @@ use std::sync::mpsc;
 
 use crate::error::IcrError;
 use crate::json::Value;
+use crate::model::MultiInference;
 use crate::optim::Trace;
 
 /// Monotonically increasing request identifier.
@@ -22,6 +23,18 @@ pub enum Request {
     /// Posterior (MAP of the standardized objective, paper Eq. 3) for
     /// observations at the model's observation pattern.
     Infer { y_obs: Vec<f64>, sigma_n: f64, steps: usize, lr: f64 },
+    /// Multi-restart posterior: `restarts` independent ξ chains stepped
+    /// together through one batched `loss_grad` panel per sweep
+    /// (`GpModel::infer_multi`). Chain 0 starts at ξ = 0; the rest from
+    /// `seed`-derived excitations.
+    InferMulti {
+        y_obs: Vec<f64>,
+        sigma_n: f64,
+        steps: usize,
+        lr: f64,
+        restarts: usize,
+        seed: u64,
+    },
     /// Metrics snapshot (structured, per-model).
     Stats,
 }
@@ -48,6 +61,7 @@ impl Request {
             Request::Sample { .. } => "sample",
             Request::ApplySqrt { .. } => "apply_sqrt",
             Request::Infer { .. } => "infer",
+            Request::InferMulti { .. } => "infer_multi",
             Request::Stats => "stats",
         }
     }
@@ -59,6 +73,9 @@ pub enum Response {
     Samples(Vec<Vec<f64>>),
     Field(Vec<f64>),
     Inference { field: Vec<f64>, trace: Trace },
+    /// Multi-restart inference: per-chain fields and traces plus the
+    /// best-chain index.
+    MultiInference(MultiInference),
     /// Structured stats document (see `Registry::to_json` and the
     /// server's per-model assembly).
     Stats(Value),
@@ -85,6 +102,15 @@ mod tests {
         assert!(
             !Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.batchable()
         );
+        assert!(!Request::InferMulti {
+            y_obs: vec![],
+            sigma_n: 0.1,
+            steps: 1,
+            lr: 0.1,
+            restarts: 4,
+            seed: 0
+        }
+        .batchable());
     }
 
     #[test]
@@ -101,6 +127,18 @@ mod tests {
         assert_eq!(
             Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.op(),
             "infer"
+        );
+        assert_eq!(
+            Request::InferMulti {
+                y_obs: vec![],
+                sigma_n: 0.1,
+                steps: 1,
+                lr: 0.1,
+                restarts: 2,
+                seed: 9
+            }
+            .op(),
+            "infer_multi"
         );
         assert_eq!(Request::Stats.op(), "stats");
     }

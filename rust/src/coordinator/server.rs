@@ -25,6 +25,7 @@ use crate::error::IcrError;
 use crate::json::{self, Value};
 use crate::metrics::Registry;
 use crate::model::{GpModel, ModelBuilder};
+use crate::parallel::Exec;
 use crate::rng::Rng;
 
 use super::protocol::SUPPORTED_PROTOCOLS;
@@ -66,12 +67,16 @@ impl Coordinator {
     /// Build every model in the config's registry and start the worker
     /// pool. The default model preserves the single-model v1 behavior;
     /// extra named models are routable via [`Coordinator::submit_to`].
+    /// One persistent `apply_threads`-lane worker pool is shared by every
+    /// hosted model, so panel parallelism costs one set of parked threads
+    /// for the whole registry instead of per-request thread spawns.
     pub fn start(cfg: ServerConfig) -> Result<Coordinator> {
+        let exec = Exec::pooled(cfg.apply_threads);
         let mut models: Vec<(String, Arc<dyn GpModel>)> = Vec::new();
         for spec in cfg.model_specs() {
             let model = ModelBuilder::from_spec(&spec)
                 .artifact_dir(&cfg.artifact_dir)
-                .apply_threads(cfg.apply_threads)
+                .exec(exec.clone())
                 .build()
                 .map_err(|e| anyhow::anyhow!("building model {:?}: {e}", spec.name))?;
             models.push((spec.name, model));
@@ -358,11 +363,13 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     for env in &batch {
         match &env.request {
             Request::Sample { count, seed } => {
+                // Expand the seed straight into the flat panel (identical
+                // bytes to per-lane standard_normal_vec, no per-lane
+                // temporaries on the batcher hot path).
                 let mut rng = Rng::new(*seed);
-                panel.reserve(*count * dof);
-                for _ in 0..*count {
-                    panel.extend_from_slice(&rng.standard_normal_vec(dof));
-                }
+                let len = panel.len();
+                panel.resize(len + *count * dof, 0.0);
+                rng.fill_standard_normal(&mut panel[len..]);
                 spans.push(Some((applies, *count)));
                 applies += *count;
             }
@@ -453,6 +460,14 @@ fn serve_single(
             shared.metrics.counter("inferences_completed").inc();
             entry.metrics.counter("inferences_completed").inc();
             Ok(Response::Inference { field, trace })
+        }
+        Request::InferMulti { y_obs, sigma_n, steps, lr, restarts, seed } => {
+            let mi = entry.model.infer_multi(y_obs, *sigma_n, *steps, *lr, *restarts, *seed)?;
+            shared.metrics.counter("inferences_completed").inc();
+            entry.metrics.counter("inferences_completed").inc();
+            shared.metrics.counter("inference_chains").add(*restarts as u64);
+            entry.metrics.counter("inference_chains").add(*restarts as u64);
+            Ok(Response::MultiInference(mi))
         }
         _ => unreachable!("batchable request routed to serve_single"),
     }
@@ -604,6 +619,46 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn infer_multi_serves_best_chain_and_matches_single_infer() {
+        let c = start(1, 4);
+        let n_obs = c.engine().obs_indices().len();
+        let mut rng = Rng::new(8);
+        let y = rng.standard_normal_vec(n_obs);
+        let single = match c
+            .call(Request::Infer { y_obs: y.clone(), sigma_n: 0.5, steps: 40, lr: 0.1 })
+            .unwrap()
+        {
+            Response::Inference { field, .. } => field,
+            other => panic!("{other:?}"),
+        };
+        match c
+            .call(Request::InferMulti {
+                y_obs: y,
+                sigma_n: 0.5,
+                steps: 40,
+                lr: 0.1,
+                restarts: 3,
+                seed: 11,
+            })
+            .unwrap()
+        {
+            Response::MultiInference(mi) => {
+                assert_eq!(mi.fields.len(), 3);
+                assert_eq!(mi.traces.len(), 3);
+                assert!(mi.best < 3);
+                // Chain 0 starts at ξ = 0, exactly like single infer.
+                assert_eq!(mi.fields[0], single);
+                let finals: Vec<f64> =
+                    mi.traces.iter().map(|t| *t.losses.last().unwrap()).collect();
+                assert!(finals.iter().all(|&l| l >= finals[mi.best]));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(c.metrics().counter("inference_chains").get() >= 3);
         c.shutdown();
     }
 

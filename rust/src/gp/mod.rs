@@ -10,7 +10,7 @@
 
 pub mod posterior;
 
-pub use posterior::{exact_posterior, ExactPosterior};
+pub use posterior::{exact_posterior, exact_posterior_multi, ExactPosterior};
 
 use crate::kernels::Kernel;
 use crate::linalg::{jacobi_eigenvalues, Cholesky, Matrix};

@@ -38,8 +38,37 @@ pub fn exact_posterior(
     y: &[f64],
     sigma_n: f64,
 ) -> Result<ExactPosterior> {
-    anyhow::ensure!(obs_idx.len() == y.len(), "obs/y length mismatch");
+    let mut batch = exact_posterior_multi(kernel, points, obs_idx, y, 1, sigma_n)?;
+    Ok(batch.remove(0))
+}
+
+/// Exact posteriors for `batch` observation vectors sharing one
+/// observation pattern (a flat row-major `batch × n_obs` panel `y_panel`)
+/// — the closed-form oracle of [`crate::model::GpModel::infer_multi`].
+///
+/// The expensive pieces — the noisy kernel Cholesky, the cross-kernel
+/// matrix, and the marginal variances (which do not depend on `y` at
+/// all) — are computed **once** and amortized over every right-hand
+/// side, mirroring how the batched `loss_grad` panel amortizes the
+/// engine applies.
+pub fn exact_posterior_multi(
+    kernel: &dyn Kernel,
+    points: &[f64],
+    obs_idx: &[usize],
+    y_panel: &[f64],
+    batch: usize,
+    sigma_n: f64,
+) -> Result<Vec<ExactPosterior>> {
+    anyhow::ensure!(batch >= 1, "batch must be ≥ 1");
+    anyhow::ensure!(
+        y_panel.len() == batch * obs_idx.len(),
+        "obs/y panel length mismatch: expected {} × {}, got {}",
+        batch,
+        obs_idx.len(),
+        y_panel.len()
+    );
     anyhow::ensure!(sigma_n > 0.0, "noise std must be positive");
+    let n_obs = obs_idx.len();
     let obs_pts: Vec<f64> = obs_idx.iter().map(|&i| points[i]).collect();
 
     let mut kaa = kernel_matrix(kernel, &obs_pts);
@@ -48,12 +77,10 @@ pub fn exact_posterior(
     }
     let chol = Cholesky::new(&kaa)
         .map_err(|e| anyhow::anyhow!("noisy kernel matrix not PD: {e}"))?;
-    let alpha = chol.solve(y);
-
     let k_star_a: Matrix = cross_kernel_matrix(kernel, points, &obs_pts);
-    let mean = k_star_a.matvec(&alpha);
 
-    // Marginal variances: k(x,x) − k_{xA} (K_AA+σ²)⁻¹ k_{Ax}.
+    // Marginal variances: k(x,x) − k_{xA} (K_AA+σ²)⁻¹ k_{Ax} — shared by
+    // every lane (they depend only on the observation pattern).
     let mut var = Vec::with_capacity(points.len());
     for i in 0..points.len() {
         let kxa = k_star_a.row(i);
@@ -61,7 +88,15 @@ pub fn exact_posterior(
         let reduction: f64 = kxa.iter().zip(&sol).map(|(a, b)| a * b).sum();
         var.push((kernel.variance() - reduction).max(0.0));
     }
-    Ok(ExactPosterior { mean, var })
+
+    let mut out = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let y = &y_panel[b * n_obs..(b + 1) * n_obs];
+        let alpha = chol.solve(y);
+        let mean = k_star_a.matvec(&alpha);
+        out.push(ExactPosterior { mean, var: var.clone() });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -93,6 +128,33 @@ mod tests {
         assert!(post.var[0] < post.var[5]);
         assert!(post.var[5] < post.var[19]);
         assert!(post.var[19] <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn multi_posterior_matches_per_lane_singles() {
+        let kernel = Matern::nu32(1.0, 1.0);
+        let points: Vec<f64> = (0..14).map(|i| i as f64 * 0.35).collect();
+        let obs: Vec<usize> = vec![0, 4, 9, 13];
+        let mut rng = Rng::new(5);
+        let batch = 3;
+        let y_panel = rng.standard_normal_vec(batch * obs.len());
+        let multi =
+            exact_posterior_multi(&kernel, &points, &obs, &y_panel, batch, 0.1).unwrap();
+        assert_eq!(multi.len(), batch);
+        for b in 0..batch {
+            let single = exact_posterior(
+                &kernel,
+                &points,
+                &obs,
+                &y_panel[b * obs.len()..(b + 1) * obs.len()],
+                0.1,
+            )
+            .unwrap();
+            assert_eq!(multi[b].mean, single.mean, "lane {b} mean");
+            assert_eq!(multi[b].var, single.var, "lane {b} var");
+        }
+        // Shape errors are reported, not mis-indexed.
+        assert!(exact_posterior_multi(&kernel, &points, &obs, &y_panel, 2, 0.1).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use anyhow::{ensure, Context, Result};
 use crate::chart::Chart;
 use crate::kernels::Kernel;
 use crate::linalg::Matrix;
+use crate::parallel::Exec;
 use crate::rng::Rng;
 
 use super::geometry::{Geometry, RefinementParams};
@@ -31,6 +32,10 @@ pub struct IcrEngine {
     domain_points: Vec<f64>,
     /// Whether all levels use the stationary broadcast fast path.
     stationary: bool,
+    /// Whether panel applies use the AVX2 microkernels (selected once at
+    /// build from `crate::parallel::simd_enabled`; bit-identical either
+    /// way).
+    simd: bool,
 }
 
 impl std::fmt::Debug for IcrEngine {
@@ -99,7 +104,21 @@ impl IcrEngine {
         }
 
         let domain_points = geometry.final_positions().iter().map(|&u| chart.to_domain(u)).collect();
-        Ok(IcrEngine { geometry, base_sqrt, levels, domain_points, stationary })
+        let simd = crate::parallel::simd_enabled();
+        Ok(IcrEngine { geometry, base_sqrt, levels, domain_points, stationary, simd })
+    }
+
+    /// Force the SIMD microkernel dispatch on (subject to hardware
+    /// support) or off for this engine. Results are bit-identical either
+    /// way; this is the equivalence-test and benchmarking knob.
+    pub fn with_simd(mut self, on: bool) -> Self {
+        self.simd = on && crate::parallel::simd_supported();
+        self
+    }
+
+    /// Whether the AVX2 microkernels are active on this engine.
+    pub fn simd_active(&self) -> bool {
+        self.simd
     }
 
     pub fn params(&self) -> RefinementParams {
@@ -142,6 +161,7 @@ impl IcrEngine {
             params: self.geometry.params,
             base_sqrt: self.base_sqrt.as_slice(),
             levels: &self.levels,
+            simd: self.simd,
         }
     }
 
@@ -182,6 +202,8 @@ impl IcrEngine {
 
     /// [`Self::apply_sqrt_multi`] with caller-provided scratch and output
     /// (the zero-allocation serving path; reuse `ws` across calls).
+    /// Spawns scoped threads per level section; the pooled serving path
+    /// is [`Self::apply_sqrt_panel_exec`].
     pub fn apply_sqrt_multi_with(
         &self,
         panel: &[f64],
@@ -190,14 +212,21 @@ impl IcrEngine {
         ws: &mut PanelWorkspace,
         out: &mut [f64],
     ) {
-        panel::apply_sqrt_panel(
-            &self.refs(),
-            panel,
-            batch,
-            crate::parallel::resolve_threads(threads),
-            ws,
-            out,
-        );
+        self.apply_sqrt_panel_exec(panel, batch, &Exec::scoped(threads), ws, out);
+    }
+
+    /// Forward panel apply through an explicit [`Exec`] — inline, scoped
+    /// spawns, or the persistent worker pool. This is the serving hot
+    /// path; all executors produce bit-identical output.
+    pub fn apply_sqrt_panel_exec(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        exec: &Exec,
+        ws: &mut PanelWorkspace,
+        out: &mut [f64],
+    ) {
+        panel::apply_sqrt_panel(&self.refs(), panel, batch, exec, ws, out);
     }
 
     /// Apply `√K_ICRᵀ` to a flat row-major `batch × N` panel of
@@ -225,14 +254,20 @@ impl IcrEngine {
         ws: &mut PanelWorkspace,
         out: &mut [f64],
     ) {
-        panel::apply_sqrt_transpose_panel(
-            &self.refs(),
-            panel,
-            batch,
-            crate::parallel::resolve_threads(threads),
-            ws,
-            out,
-        );
+        self.apply_sqrt_transpose_panel_exec(panel, batch, &Exec::scoped(threads), ws, out);
+    }
+
+    /// Adjoint panel apply through an explicit [`Exec`] (see
+    /// [`Self::apply_sqrt_panel_exec`]).
+    pub fn apply_sqrt_transpose_panel_exec(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        exec: &Exec,
+        ws: &mut PanelWorkspace,
+        out: &mut [f64],
+    ) {
+        panel::apply_sqrt_transpose_panel(&self.refs(), panel, batch, exec, ws, out);
     }
 
     /// Draw one approximate GP sample (`√K_ICR · ξ`, ξ ~ 𝒩(0, 1)).
@@ -364,6 +399,58 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_engines_agree_bitwise() {
+        // The AVX2 microkernels use separate mul+add in the scalar
+        // accumulation order, so forcing SIMD on/off must not change a
+        // single bit (on CPUs without AVX2 both paths are scalar and the
+        // assertion is trivially true).
+        for mk in [
+            (|| build_log(5, 4, 3, 9)) as fn() -> IcrEngine,
+            || build_identity(5, 4, 3, 9, 3.0),
+            || build_log(3, 2, 3, 8),
+        ] {
+            let scalar = mk().with_simd(false);
+            let simd = mk().with_simd(true);
+            assert!(!scalar.simd_active());
+            let mut rng = Rng::new(31);
+            let dof = scalar.total_dof();
+            let n = scalar.n_points();
+            for &batch in &[1usize, 4, 8, 11] {
+                let panel = rng.standard_normal_vec(batch * dof);
+                let gpanel = rng.standard_normal_vec(batch * n);
+                let a = scalar.apply_sqrt_multi(&panel, batch, 1);
+                let b = simd.apply_sqrt_multi(&panel, batch, 1);
+                assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+                let a = scalar.apply_sqrt_transpose_multi(&gpanel, batch, 1);
+                let b = simd.apply_sqrt_transpose_multi(&gpanel, batch, 1);
+                assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_exec_matches_scoped_and_serial_bitwise() {
+        let e = build_log(5, 4, 3, 9);
+        let dof = e.total_dof();
+        let n = e.n_points();
+        let mut rng = Rng::new(90);
+        let batch = 8;
+        let panel = rng.standard_normal_vec(batch * dof);
+        let gpanel = rng.standard_normal_vec(batch * n);
+        let want_f = e.apply_sqrt_multi(&panel, batch, 1);
+        let want_b = e.apply_sqrt_transpose_multi(&gpanel, batch, 1);
+        let mut ws = PanelWorkspace::new();
+        for exec in [Exec::scoped(4), Exec::pooled(4), Exec::pooled(2)] {
+            let mut out = vec![0.0; batch * n];
+            e.apply_sqrt_panel_exec(&panel, batch, &exec, &mut ws, &mut out);
+            assert!(out.iter().zip(&want_f).all(|(x, y)| x.to_bits() == y.to_bits()));
+            let mut gout = vec![0.0; batch * dof];
+            e.apply_sqrt_transpose_panel_exec(&gpanel, batch, &exec, &mut ws, &mut gout);
+            assert!(gout.iter().zip(&want_b).all(|(x, y)| x.to_bits() == y.to_bits()));
         }
     }
 

@@ -6,17 +6,25 @@
 //! to [`MAX_LANES`], so every refinement-matrix element loaded from memory
 //! is contracted against all lanes of the block (small matrix–matrix
 //! products instead of B matrix–vector products). Windows are additionally
-//! partitioned across scoped threads (`crate::parallel::run_chunked`).
+//! partitioned across an [`Exec`] — inline, scoped threads, or the
+//! persistent worker pool (`crate::parallel`).
+//!
+//! The 8- and 4-lane block contractions also have explicit AVX2
+//! microkernels (the [`simd`] module), selected once at engine build when
+//! the CPU reports AVX2+FMA (`crate::parallel::simd_enabled`). They use
+//! separate mul+add — never fused multiply-add — so each lane performs
+//! exactly the scalar kernel's arithmetic in exactly its order.
 //!
 //! **Determinism guarantee.** Each lane's accumulation order is exactly
 //! the serial single-apply order — lane blocking only adds independent
-//! accumulators, never reassociates a sum — and thread partitioning splits
-//! *outputs*, never reductions. The adjoint's coarse scatter-add is
-//! rewritten as a per-coarse-pixel *gather* over the (≤ ⌈n_csz/stride⌉)
-//! windows touching it, in ascending window order: the same left-to-right
-//! sum the serial loop produces. Results are therefore bit-for-bit
-//! identical to the serial path for every `(batch, threads)` — enforced by
-//! `rust/tests/panel_equivalence.rs`.
+//! accumulators, never reassociates a sum, and the SIMD kernels vectorize
+//! across *lanes* only — and thread partitioning splits *outputs*, never
+//! reductions. The adjoint's coarse scatter-add is rewritten as a
+//! per-coarse-pixel *gather* over the (≤ ⌈n_csz/stride⌉) windows touching
+//! it, in ascending window order: the same left-to-right sum the serial
+//! loop produces. Results are therefore bit-for-bit identical to the
+//! serial scalar path for every `(batch, threads, executor, simd)` —
+//! enforced by `rust/tests/panel_equivalence.rs`.
 //!
 //! Layout: panels are flat row-major `B × dof` (one lane per row); inside
 //! a lane block everything is lane-interleaved (`value index × lane`), so
@@ -28,16 +36,12 @@
 // LLVM vectorizes them as written).
 #![allow(clippy::needless_range_loop)]
 
-use crate::parallel::{lane_block, run_chunked};
+use crate::parallel::{lane_block, par_threads, Exec};
 
 use super::geometry::RefinementParams;
 use super::matrices::LevelMatrices;
 
 pub use crate::parallel::MAX_LANES;
-
-/// Don't spawn threads for levels smaller than this many output elements:
-/// the scoped-thread round trip costs more than it saves.
-const PAR_MIN_ELEMS: usize = 16 * 1024;
 
 /// Reusable scratch for panel applies: one staging buffer of `dof` slots
 /// and two ping-pong level buffers, each `max_level` slots, times the lane
@@ -77,6 +81,8 @@ pub(crate) struct EngineRefs<'a> {
     pub params: RefinementParams,
     pub base_sqrt: &'a [f64],
     pub levels: &'a [LevelMatrices],
+    /// Whether the AVX2 microkernels were selected at engine build.
+    pub simd: bool,
 }
 
 /// One level's matrices as flat arrays plus per-window strides. A
@@ -101,16 +107,6 @@ fn level_view(lm: &LevelMatrices) -> LevelView<'_> {
             r_stride: p.n_fsz * p.n_csz,
             d_stride: p.n_fsz * p.n_fsz,
         },
-    }
-}
-
-/// Effective thread count for a section of `items` outputs of `unit`
-/// elements each.
-fn par_threads(threads: usize, items: usize, unit: usize) -> usize {
-    if threads <= 1 || items.saturating_mul(unit) < PAR_MIN_ELEMS {
-        1
-    } else {
-        threads
     }
 }
 
@@ -407,6 +403,265 @@ fn base_bwd_mono<const NB: usize>(l0: &[f64], n0: usize, g_il: &[f64], y_il: &mu
     }
 }
 
+// ---------------------------------------------------------------------------
+// AVX2 microkernels for the 8- and 4-lane blocks. Each vector op is the
+// per-lane scalar op (broadcast-mul then add, never fused), performed in
+// the scalar kernels' exact accumulation order — so the results are
+// bit-for-bit identical to the scalar path. Only reached when the engine
+// selected SIMD at build time (AVX2+FMA detected).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::LevelView;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub(super) unsafe fn fwd_level_x8(
+        csz: usize,
+        fsz: usize,
+        lv: &LevelView<'_>,
+        stride: usize,
+        s_il: &[f64],
+        xi_il: &[f64],
+        fine: &mut [f64],
+        w0: usize,
+        wn: usize,
+    ) {
+        const NB: usize = 8;
+        let rsz = fsz * csz;
+        let dsz = fsz * fsz;
+        for wi in 0..wn {
+            let w = w0 + wi;
+            let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + rsz];
+            let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + dsz];
+            let cbase = w * stride * NB;
+            let xbase = w * fsz * NB;
+            let fbase = wi * fsz * NB;
+            for k in 0..fsz {
+                let mut acc0 = _mm256_setzero_pd();
+                let mut acc1 = _mm256_setzero_pd();
+                for j in 0..csz {
+                    let rv = _mm256_set1_pd(rwin[k * csz + j]);
+                    let p = s_il.as_ptr().add(cbase + j * NB);
+                    acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(rv, _mm256_loadu_pd(p)));
+                    acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(rv, _mm256_loadu_pd(p.add(4))));
+                }
+                for m in 0..=k {
+                    let dv = _mm256_set1_pd(dwin[k * fsz + m]);
+                    let p = xi_il.as_ptr().add(xbase + m * NB);
+                    acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(dv, _mm256_loadu_pd(p)));
+                    acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(dv, _mm256_loadu_pd(p.add(4))));
+                }
+                let q = fine.as_mut_ptr().add(fbase + k * NB);
+                _mm256_storeu_pd(q, acc0);
+                _mm256_storeu_pd(q.add(4), acc1);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub(super) unsafe fn fwd_level_x4(
+        csz: usize,
+        fsz: usize,
+        lv: &LevelView<'_>,
+        stride: usize,
+        s_il: &[f64],
+        xi_il: &[f64],
+        fine: &mut [f64],
+        w0: usize,
+        wn: usize,
+    ) {
+        const NB: usize = 4;
+        let rsz = fsz * csz;
+        let dsz = fsz * fsz;
+        for wi in 0..wn {
+            let w = w0 + wi;
+            let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + rsz];
+            let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + dsz];
+            let cbase = w * stride * NB;
+            let xbase = w * fsz * NB;
+            let fbase = wi * fsz * NB;
+            for k in 0..fsz {
+                let mut acc = _mm256_setzero_pd();
+                for j in 0..csz {
+                    let rv = _mm256_set1_pd(rwin[k * csz + j]);
+                    let p = s_il.as_ptr().add(cbase + j * NB);
+                    acc = _mm256_add_pd(acc, _mm256_mul_pd(rv, _mm256_loadu_pd(p)));
+                }
+                for m in 0..=k {
+                    let dv = _mm256_set1_pd(dwin[k * fsz + m]);
+                    let p = xi_il.as_ptr().add(xbase + m * NB);
+                    acc = _mm256_add_pd(acc, _mm256_mul_pd(dv, _mm256_loadu_pd(p)));
+                }
+                _mm256_storeu_pd(fine.as_mut_ptr().add(fbase + k * NB), acc);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub(super) unsafe fn bwd_xi_x8(
+        fsz: usize,
+        lv: &LevelView<'_>,
+        g_il: &[f64],
+        gxi: &mut [f64],
+        w0: usize,
+        wn: usize,
+    ) {
+        const NB: usize = 8;
+        let dsz = fsz * fsz;
+        for wi in 0..wn {
+            let w = w0 + wi;
+            let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + dsz];
+            let gbase = w * fsz * NB;
+            let obase = wi * fsz * NB;
+            for m in 0..fsz {
+                let mut acc0 = _mm256_setzero_pd();
+                let mut acc1 = _mm256_setzero_pd();
+                for k in m..fsz {
+                    let dv = _mm256_set1_pd(dwin[k * fsz + m]);
+                    let p = g_il.as_ptr().add(gbase + k * NB);
+                    acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(dv, _mm256_loadu_pd(p)));
+                    acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(dv, _mm256_loadu_pd(p.add(4))));
+                }
+                let q = gxi.as_mut_ptr().add(obase + m * NB);
+                _mm256_storeu_pd(q, acc0);
+                _mm256_storeu_pd(q.add(4), acc1);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub(super) unsafe fn bwd_xi_x4(
+        fsz: usize,
+        lv: &LevelView<'_>,
+        g_il: &[f64],
+        gxi: &mut [f64],
+        w0: usize,
+        wn: usize,
+    ) {
+        const NB: usize = 4;
+        let dsz = fsz * fsz;
+        for wi in 0..wn {
+            let w = w0 + wi;
+            let dwin = &lv.d[w * lv.d_stride..w * lv.d_stride + dsz];
+            let gbase = w * fsz * NB;
+            let obase = wi * fsz * NB;
+            for m in 0..fsz {
+                let mut acc = _mm256_setzero_pd();
+                for k in m..fsz {
+                    let dv = _mm256_set1_pd(dwin[k * fsz + m]);
+                    acc = _mm256_add_pd(
+                        acc,
+                        _mm256_mul_pd(dv, _mm256_loadu_pd(g_il.as_ptr().add(gbase + k * NB))),
+                    );
+                }
+                _mm256_storeu_pd(gxi.as_mut_ptr().add(obase + m * NB), acc);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub(super) unsafe fn bwd_coarse_x8(
+        csz: usize,
+        fsz: usize,
+        lv: &LevelView<'_>,
+        stride: usize,
+        g_il: &[f64],
+        gc: &mut [f64],
+        c0: usize,
+        cn: usize,
+        nw: usize,
+    ) {
+        const NB: usize = 8;
+        let rsz = fsz * csz;
+        for ci in 0..cn {
+            let c = c0 + ci;
+            let w_min = if c >= csz { (c - csz) / stride + 1 } else { 0 };
+            let w_max = (c / stride).min(nw - 1);
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            let mut w = w_min;
+            while w <= w_max {
+                let j = c - w * stride;
+                let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + rsz];
+                let gbase = w * fsz * NB;
+                let mut part0 = _mm256_setzero_pd();
+                let mut part1 = _mm256_setzero_pd();
+                for k in 0..fsz {
+                    let rv = _mm256_set1_pd(rwin[k * csz + j]);
+                    let p = g_il.as_ptr().add(gbase + k * NB);
+                    part0 = _mm256_add_pd(part0, _mm256_mul_pd(rv, _mm256_loadu_pd(p)));
+                    part1 = _mm256_add_pd(part1, _mm256_mul_pd(rv, _mm256_loadu_pd(p.add(4))));
+                }
+                acc0 = _mm256_add_pd(acc0, part0);
+                acc1 = _mm256_add_pd(acc1, part1);
+                w += 1;
+            }
+            let q = gc.as_mut_ptr().add(ci * NB);
+            _mm256_storeu_pd(q, acc0);
+            _mm256_storeu_pd(q.add(4), acc1);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::missing_safety_doc)]
+    pub(super) unsafe fn bwd_coarse_x4(
+        csz: usize,
+        fsz: usize,
+        lv: &LevelView<'_>,
+        stride: usize,
+        g_il: &[f64],
+        gc: &mut [f64],
+        c0: usize,
+        cn: usize,
+        nw: usize,
+    ) {
+        const NB: usize = 4;
+        let rsz = fsz * csz;
+        for ci in 0..cn {
+            let c = c0 + ci;
+            let w_min = if c >= csz { (c - csz) / stride + 1 } else { 0 };
+            let w_max = (c / stride).min(nw - 1);
+            let mut acc = _mm256_setzero_pd();
+            let mut w = w_min;
+            while w <= w_max {
+                let j = c - w * stride;
+                let rwin = &lv.r[w * lv.r_stride..w * lv.r_stride + rsz];
+                let gbase = w * fsz * NB;
+                let mut part = _mm256_setzero_pd();
+                for k in 0..fsz {
+                    let rv = _mm256_set1_pd(rwin[k * csz + j]);
+                    part = _mm256_add_pd(
+                        part,
+                        _mm256_mul_pd(rv, _mm256_loadu_pd(g_il.as_ptr().add(gbase + k * NB))),
+                    );
+                }
+                acc = _mm256_add_pd(acc, part);
+                w += 1;
+            }
+            _mm256_storeu_pd(gc.as_mut_ptr().add(ci * NB), acc);
+        }
+    }
+}
+
 /// Dispatch a level kernel to its `(CSZ, FSZ, NB)` monomorphization (§5.1
 /// candidate shapes × block widths) or the dynamic fallback.
 macro_rules! dispatch_level {
@@ -437,6 +692,97 @@ macro_rules! dispatch_level {
     };
 }
 
+/// Forward level kernel: AVX2 microkernel when selected and the block is
+/// 8 or 4 lanes wide, else the monomorphized/dynamic scalar kernels.
+#[allow(clippy::too_many_arguments)]
+fn fwd_level_any(
+    simd: bool,
+    csz: usize,
+    fsz: usize,
+    nb: usize,
+    lv: &LevelView<'_>,
+    stride: usize,
+    s_il: &[f64],
+    xi_il: &[f64],
+    fine: &mut [f64],
+    w0: usize,
+    wn: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd && nb == 8 {
+        // SAFETY: `simd` is only true when AVX2 was detected at engine
+        // build (`crate::parallel::simd_enabled`).
+        unsafe { simd::fwd_level_x8(csz, fsz, lv, stride, s_il, xi_il, fine, w0, wn) };
+        return;
+    } else if simd && nb == 4 {
+        unsafe { simd::fwd_level_x4(csz, fsz, lv, stride, s_il, xi_il, fine, w0, wn) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    dispatch_level!(fwd_level_mono, fwd_level_dyn, csz, fsz, nb, (
+        lv, stride, s_il, xi_il, fine, w0, wn
+    ));
+}
+
+/// Adjoint ξ level kernel with the same SIMD dispatch as [`fwd_level_any`].
+#[allow(clippy::too_many_arguments)]
+fn bwd_xi_any(
+    simd: bool,
+    csz: usize,
+    fsz: usize,
+    nb: usize,
+    lv: &LevelView<'_>,
+    g_il: &[f64],
+    gxi: &mut [f64],
+    w0: usize,
+    wn: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd && nb == 8 {
+        // SAFETY: as in `fwd_level_any`.
+        unsafe { simd::bwd_xi_x8(fsz, lv, g_il, gxi, w0, wn) };
+        return;
+    } else if simd && nb == 4 {
+        unsafe { simd::bwd_xi_x4(fsz, lv, g_il, gxi, w0, wn) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    dispatch_level!(bwd_xi_mono, bwd_xi_dyn, csz, fsz, nb, (lv, g_il, gxi, w0, wn));
+}
+
+/// Adjoint coarse level kernel with the same SIMD dispatch.
+#[allow(clippy::too_many_arguments)]
+fn bwd_coarse_any(
+    simd: bool,
+    csz: usize,
+    fsz: usize,
+    nb: usize,
+    lv: &LevelView<'_>,
+    stride: usize,
+    g_il: &[f64],
+    gc: &mut [f64],
+    c0: usize,
+    cn: usize,
+    nw: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd && nb == 8 {
+        // SAFETY: as in `fwd_level_any`.
+        unsafe { simd::bwd_coarse_x8(csz, fsz, lv, stride, g_il, gc, c0, cn, nw) };
+        return;
+    } else if simd && nb == 4 {
+        unsafe { simd::bwd_coarse_x4(csz, fsz, lv, stride, g_il, gc, c0, cn, nw) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    dispatch_level!(bwd_coarse_mono, bwd_coarse_dyn, csz, fsz, nb, (
+        lv, stride, g_il, gc, c0, cn, nw
+    ));
+}
+
 fn base_fwd(l0: &[f64], n0: usize, nb: usize, x_il: &[f64], y_il: &mut [f64]) {
     match nb {
         1 => base_fwd_mono::<1>(l0, n0, x_il, y_il),
@@ -464,7 +810,7 @@ pub(crate) fn apply_sqrt_panel(
     refs: &EngineRefs<'_>,
     panel: &[f64],
     batch: usize,
-    threads: usize,
+    exec: &Exec,
     ws: &mut PanelWorkspace,
     out: &mut [f64],
 ) {
@@ -479,7 +825,8 @@ pub(crate) fn apply_sqrt_panel(
     }
     let max_level = sizes.iter().copied().max().unwrap_or(params.n0);
     ws.ensure(dof, max_level, lane_block(batch));
-    let threads = threads.max(1);
+    let threads = exec.threads().max(1);
+    let simd = refs.simd;
     let (csz, fsz, stride, n0) = (params.n_csz, params.n_fsz, params.stride(), params.n0);
 
     let mut b0 = 0usize;
@@ -505,15 +852,8 @@ pub(crate) fn apply_sqrt_panel(
             let s_il = &cur[..nc * nb];
             let fine = &mut nxt[..nf * nb];
             let t = par_threads(threads, nw, fsz * nb);
-            run_chunked(fine, fsz * nb, nw, t, |w0, wn, chunk| {
-                dispatch_level!(
-                    fwd_level_mono,
-                    fwd_level_dyn,
-                    csz,
-                    fsz,
-                    nb,
-                    (&lv, stride, s_il, xi_l, chunk, w0, wn)
-                );
+            exec.run_chunked(fine, fsz * nb, nw, t, |w0, wn, chunk| {
+                fwd_level_any(simd, csz, fsz, nb, &lv, stride, s_il, xi_l, chunk, w0, wn);
             });
             offset += nf;
             std::mem::swap(&mut cur, &mut nxt);
@@ -530,7 +870,7 @@ pub(crate) fn apply_sqrt_transpose_panel(
     refs: &EngineRefs<'_>,
     panel: &[f64],
     batch: usize,
-    threads: usize,
+    exec: &Exec,
     ws: &mut PanelWorkspace,
     out: &mut [f64],
 ) {
@@ -545,7 +885,8 @@ pub(crate) fn apply_sqrt_transpose_panel(
     }
     let max_level = sizes.iter().copied().max().unwrap_or(params.n0);
     ws.ensure(dof, max_level, lane_block(batch));
-    let threads = threads.max(1);
+    let threads = exec.threads().max(1);
+    let simd = refs.simd;
     let (csz, fsz, stride, n0) = (params.n_csz, params.n_fsz, params.stride(), params.n0);
 
     let mut b0 = 0usize;
@@ -570,21 +911,14 @@ pub(crate) fn apply_sqrt_transpose_panel(
 
             let gxi = &mut out_il[offset * nb..(offset + nf) * nb];
             let t = par_threads(threads, nw, fsz * nb);
-            run_chunked(gxi, fsz * nb, nw, t, |w0, wn, chunk| {
-                dispatch_level!(bwd_xi_mono, bwd_xi_dyn, csz, fsz, nb, (&lv, g_il, chunk, w0, wn));
+            exec.run_chunked(gxi, fsz * nb, nw, t, |w0, wn, chunk| {
+                bwd_xi_any(simd, csz, fsz, nb, &lv, g_il, chunk, w0, wn);
             });
 
             let gc = &mut nxt[..nc * nb];
             let t = par_threads(threads, nc, nb);
-            run_chunked(gc, nb, nc, t, |c0, cn, chunk| {
-                dispatch_level!(
-                    bwd_coarse_mono,
-                    bwd_coarse_dyn,
-                    csz,
-                    fsz,
-                    nb,
-                    (&lv, stride, g_il, chunk, c0, cn, nw)
-                );
+            exec.run_chunked(gc, nb, nc, t, |c0, cn, chunk| {
+                bwd_coarse_any(simd, csz, fsz, nb, &lv, stride, g_il, chunk, c0, cn, nw);
             });
             std::mem::swap(&mut cur, &mut nxt);
         }
@@ -642,12 +976,5 @@ mod tests {
             deinterleave(&il, rows, 1, nb, &mut back);
             assert_eq!(&back[rows..(1 + nb) * rows], &panel[rows..(1 + nb) * rows]);
         }
-    }
-
-    #[test]
-    fn par_threads_gates_small_levels() {
-        assert_eq!(par_threads(4, 10, 8), 1);
-        assert_eq!(par_threads(4, 4096, 8), 4);
-        assert_eq!(par_threads(1, 1 << 20, 8), 1);
     }
 }

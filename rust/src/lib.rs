@@ -78,9 +78,10 @@ pub mod prelude {
     pub use crate::kernels::{Kernel, Matern, Rbf};
     pub use crate::model::{
         default_obs_indices, ExactModel, GpModel, KissGpModel, ModelBuilder,
-        ModelDescriptor, NativeEngine, PjrtEngine,
+        ModelDescriptor, MultiInference, NativeEngine, PjrtEngine,
     };
     pub use crate::optim::Trace;
+    pub use crate::parallel::{Exec, WorkerPool};
     pub use crate::rng::Rng;
     pub use crate::VERSION;
 }

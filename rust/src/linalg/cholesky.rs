@@ -166,8 +166,24 @@ impl Cholesky {
     }
 
     /// [`Self::apply_sqrt_panel`] writing into caller-provided storage.
+    /// Uses the AVX2 microkernels when the process-wide SIMD dispatch is
+    /// on (`crate::parallel::simd_enabled`); results are bit-identical
+    /// either way.
     pub fn apply_sqrt_panel_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
-        self.panel_apply(panel, batch, out, false);
+        self.panel_apply(panel, batch, out, false, crate::parallel::simd_enabled());
+    }
+
+    /// [`Self::apply_sqrt_panel_into`] with an explicit SIMD selection
+    /// (engines pin the policy once at model build; `true` is still
+    /// subject to hardware support).
+    pub fn apply_sqrt_panel_into_with(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        out: &mut [f64],
+        simd: bool,
+    ) {
+        self.panel_apply(panel, batch, out, false, simd && crate::parallel::simd_supported());
     }
 
     /// Adjoint panel apply `Lᵀ·X` over a flat row-major `batch × n`
@@ -181,10 +197,29 @@ impl Cholesky {
 
     /// [`Self::apply_sqrt_transpose_panel`] writing into caller storage.
     pub fn apply_sqrt_transpose_panel_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
-        self.panel_apply(panel, batch, out, true);
+        self.panel_apply(panel, batch, out, true, crate::parallel::simd_enabled());
     }
 
-    fn panel_apply(&self, panel: &[f64], batch: usize, out: &mut [f64], transpose: bool) {
+    /// [`Self::apply_sqrt_transpose_panel_into`] with an explicit SIMD
+    /// selection (see [`Self::apply_sqrt_panel_into_with`]).
+    pub fn apply_sqrt_transpose_panel_into_with(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        out: &mut [f64],
+        simd: bool,
+    ) {
+        self.panel_apply(panel, batch, out, true, simd && crate::parallel::simd_supported());
+    }
+
+    fn panel_apply(
+        &self,
+        panel: &[f64],
+        batch: usize,
+        out: &mut [f64],
+        transpose: bool,
+        simd: bool,
+    ) {
         let n = self.dim();
         assert_eq!(panel.len(), batch * n, "panel length mismatch");
         assert_eq!(out.len(), batch * n, "output panel length mismatch");
@@ -195,6 +230,20 @@ impl Cholesky {
         while b0 < batch {
             let nb = crate::parallel::lane_block(batch - b0);
             let stage = &mut x_il[..n * nb];
+            #[cfg(target_arch = "x86_64")]
+            if simd && nb == 8 {
+                // SAFETY: `simd` is only true when AVX2 was detected
+                // (`parallel::simd_supported`, ANDed in by every caller).
+                unsafe { simd::tri_panel_x8(l, n, panel, b0, stage, out, transpose) };
+                b0 += nb;
+                continue;
+            } else if simd && nb == 4 {
+                unsafe { simd::tri_panel_x4(l, n, panel, b0, stage, out, transpose) };
+                b0 += nb;
+                continue;
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            let _ = simd;
             match nb {
                 1 => tri_panel_block::<1>(l, n, panel, b0, stage, out, transpose),
                 2 => tri_panel_block::<2>(l, n, panel, b0, stage, out, transpose),
@@ -202,6 +251,127 @@ impl Cholesky {
                 _ => tri_panel_block::<8>(l, n, panel, b0, stage, out, transpose),
             }
             b0 += nb;
+        }
+    }
+}
+
+/// AVX2 variants of the triangular panel sweep for the 8- and 4-lane
+/// blocks. Broadcast-mul then add — never fused — in the scalar kernel's
+/// exact accumulation order, so the results are bit-for-bit identical to
+/// [`tri_panel_block`] (enforced by the tests below and
+/// `rust/tests/panel_equivalence.rs`).
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::needless_range_loop)] // indexed lane loops keep the order explicit
+mod simd {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::missing_safety_doc)]
+    pub(super) unsafe fn tri_panel_x8(
+        l: &[f64],
+        n: usize,
+        panel: &[f64],
+        b0: usize,
+        x_il: &mut [f64],
+        out: &mut [f64],
+        transpose: bool,
+    ) {
+        const NB: usize = 8;
+        debug_assert_eq!(x_il.len(), n * NB);
+        for i in 0..n {
+            for q in 0..NB {
+                x_il[i * NB + q] = panel[(b0 + q) * n + i];
+            }
+        }
+        let mut tmp = [0.0f64; NB];
+        if transpose {
+            for j in 0..n {
+                let mut acc0 = _mm256_setzero_pd();
+                let mut acc1 = _mm256_setzero_pd();
+                for i in j..n {
+                    let lij = _mm256_set1_pd(l[i * n + j]);
+                    let p = x_il.as_ptr().add(i * NB);
+                    acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(lij, _mm256_loadu_pd(p)));
+                    acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(lij, _mm256_loadu_pd(p.add(4))));
+                }
+                _mm256_storeu_pd(tmp.as_mut_ptr(), acc0);
+                _mm256_storeu_pd(tmp.as_mut_ptr().add(4), acc1);
+                for q in 0..NB {
+                    out[(b0 + q) * n + j] = tmp[q];
+                }
+            }
+        } else {
+            for i in 0..n {
+                let mut acc0 = _mm256_setzero_pd();
+                let mut acc1 = _mm256_setzero_pd();
+                for j in 0..=i {
+                    let lij = _mm256_set1_pd(l[i * n + j]);
+                    let p = x_il.as_ptr().add(j * NB);
+                    acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(lij, _mm256_loadu_pd(p)));
+                    acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(lij, _mm256_loadu_pd(p.add(4))));
+                }
+                _mm256_storeu_pd(tmp.as_mut_ptr(), acc0);
+                _mm256_storeu_pd(tmp.as_mut_ptr().add(4), acc1);
+                for q in 0..NB {
+                    out[(b0 + q) * n + i] = tmp[q];
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::missing_safety_doc)]
+    pub(super) unsafe fn tri_panel_x4(
+        l: &[f64],
+        n: usize,
+        panel: &[f64],
+        b0: usize,
+        x_il: &mut [f64],
+        out: &mut [f64],
+        transpose: bool,
+    ) {
+        const NB: usize = 4;
+        debug_assert_eq!(x_il.len(), n * NB);
+        for i in 0..n {
+            for q in 0..NB {
+                x_il[i * NB + q] = panel[(b0 + q) * n + i];
+            }
+        }
+        let mut tmp = [0.0f64; NB];
+        if transpose {
+            for j in 0..n {
+                let mut acc = _mm256_setzero_pd();
+                for i in j..n {
+                    let lij = _mm256_set1_pd(l[i * n + j]);
+                    acc = _mm256_add_pd(
+                        acc,
+                        _mm256_mul_pd(lij, _mm256_loadu_pd(x_il.as_ptr().add(i * NB))),
+                    );
+                }
+                _mm256_storeu_pd(tmp.as_mut_ptr(), acc);
+                for q in 0..NB {
+                    out[(b0 + q) * n + j] = tmp[q];
+                }
+            }
+        } else {
+            for i in 0..n {
+                let mut acc = _mm256_setzero_pd();
+                for j in 0..=i {
+                    let lij = _mm256_set1_pd(l[i * n + j]);
+                    acc = _mm256_add_pd(
+                        acc,
+                        _mm256_mul_pd(lij, _mm256_loadu_pd(x_il.as_ptr().add(j * NB))),
+                    );
+                }
+                _mm256_storeu_pd(tmp.as_mut_ptr(), acc);
+                for q in 0..NB {
+                    out[(b0 + q) * n + i] = tmp[q];
+                }
+            }
         }
     }
 }
@@ -352,6 +522,29 @@ mod tests {
                     assert_eq!(bwd[b * n + i].to_bits(), want_b[i].to_bits(), "bwd b{b} i{i}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_panel_sweeps_agree_bitwise() {
+        // Force the SIMD and scalar paths explicitly; on CPUs without
+        // AVX2 both calls run scalar and the assertion is trivially true.
+        let a = spd_matrix(17);
+        let ch = Cholesky::new(&a).unwrap();
+        let n = ch.dim();
+        for batch in [4usize, 8, 12, 9] {
+            let panel: Vec<f64> =
+                (0..batch * n).map(|k| ((k * 7) as f64 * 0.093).sin() * 1.5).collect();
+            let mut scalar_f = vec![0.0; batch * n];
+            let mut simd_f = vec![0.0; batch * n];
+            ch.apply_sqrt_panel_into_with(&panel, batch, &mut scalar_f, false);
+            ch.apply_sqrt_panel_into_with(&panel, batch, &mut simd_f, true);
+            assert!(scalar_f.iter().zip(&simd_f).all(|(x, y)| x.to_bits() == y.to_bits()));
+            let mut scalar_b = vec![0.0; batch * n];
+            let mut simd_b = vec![0.0; batch * n];
+            ch.apply_sqrt_transpose_panel_into_with(&panel, batch, &mut scalar_b, false);
+            ch.apply_sqrt_transpose_panel_into_with(&panel, batch, &mut simd_b, true);
+            assert!(scalar_b.iter().zip(&simd_b).all(|(x, y)| x.to_bits() == y.to_bits()));
         }
     }
 

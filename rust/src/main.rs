@@ -99,6 +99,7 @@ fn print_help() {
         FlagSpec { name: "artifacts", help: "artifact directory", default: Some("artifacts"), is_switch: false },
         FlagSpec { name: "out", help: "output CSV path", default: None, is_switch: false },
         FlagSpec { name: "steps", help: "optimizer steps (infer)", default: Some("300"), is_switch: false },
+        FlagSpec { name: "restarts", help: "independent MAP chains stepped as one batched sweep (infer)", default: Some("1"), is_switch: false },
         FlagSpec { name: "lr", help: "Adam learning rate (infer)", default: Some("0.1"), is_switch: false },
         FlagSpec { name: "sigma", help: "noise std (infer)", default: Some("0.05"), is_switch: false },
         FlagSpec { name: "dump-matrices", help: "fig3: write full covariance CSVs", default: None, is_switch: true },
@@ -238,6 +239,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_infer(args: &Args) -> Result<()> {
     let (cfg, coord) = make_coordinator(args)?;
     let steps = args.get_usize("steps", 300)?;
+    let restarts = args.get_usize("restarts", 1)?;
     let lr = args.get_f64("lr", 0.1)?;
     let sigma = args.get_f64("sigma", 0.05)?;
 
@@ -255,24 +257,44 @@ fn cmd_infer(args: &Args) -> Result<()> {
         obs.len(),
         engine.n_points()
     );
-    let resp = coord.call(Request::Infer { y_obs, sigma_n: sigma, steps, lr })?;
-    match resp {
-        Response::Inference { field, trace } => {
-            let rmse = {
-                let se: f64 =
-                    field.iter().zip(&truth).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
-                (se / field.len() as f64).sqrt()
-            };
-            println!("loss curve: {}", trace.summary(steps / 10));
-            println!(
-                "loss {:.4e} → {:.4e} ({}× reduction) in {:.2}s; reconstruction RMSE = {rmse:.4}",
-                trace.losses[0],
-                trace.losses[trace.losses.len() - 1],
-                (trace.losses[0] / trace.losses[trace.losses.len() - 1]) as u64,
-                trace.wall_s
-            );
+    let report = |label: &str, field: &[f64], trace: &icr::optim::Trace| {
+        let rmse = {
+            let se: f64 = field.iter().zip(&truth).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+            (se / field.len() as f64).sqrt()
+        };
+        println!("{label}loss curve: {}", trace.summary(steps / 10));
+        println!(
+            "{label}loss {:.4e} → {:.4e} ({}× reduction) in {:.2}s; reconstruction RMSE = {rmse:.4}",
+            trace.losses[0],
+            trace.losses[trace.losses.len() - 1],
+            (trace.losses[0] / trace.losses[trace.losses.len() - 1]) as u64,
+            trace.wall_s
+        );
+    };
+    if restarts > 1 {
+        let resp = coord.call(Request::InferMulti {
+            y_obs,
+            sigma_n: sigma,
+            steps,
+            lr,
+            restarts,
+            seed: cfg.seed,
+        })?;
+        match resp {
+            Response::MultiInference(mi) => {
+                for b in 0..mi.fields.len() {
+                    let tag = if b == mi.best { " (best)" } else { "" };
+                    report(&format!("chain {b}{tag}: "), &mi.fields[b], &mi.traces[b]);
+                }
+            }
+            other => bail!("unexpected response {other:?}"),
         }
-        other => bail!("unexpected response {other:?}"),
+    } else {
+        let resp = coord.call(Request::Infer { y_obs, sigma_n: sigma, steps, lr })?;
+        match resp {
+            Response::Inference { field, trace } => report("", &field, &trace),
+            other => bail!("unexpected response {other:?}"),
+        }
     }
     coord.shutdown();
     Ok(())

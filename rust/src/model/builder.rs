@@ -17,6 +17,7 @@ use std::sync::Arc;
 
 use crate::config::{Backend, ModelConfig, ModelSpec};
 use crate::error::IcrError;
+use crate::parallel::Exec;
 use crate::runtime::PjrtService;
 
 use super::{ExactModel, GpModel, KissGpModel, NativeEngine, PjrtEngine};
@@ -29,6 +30,8 @@ pub struct ModelBuilder {
     backend: Backend,
     artifact_dir: String,
     apply_threads: usize,
+    exec: Option<Exec>,
+    simd: Option<bool>,
 }
 
 impl Default for ModelBuilder {
@@ -37,7 +40,9 @@ impl Default for ModelBuilder {
             model: ModelConfig::default(),
             backend: Backend::Native,
             artifact_dir: "artifacts".into(),
-            apply_threads: 1,
+            apply_threads: crate::parallel::default_apply_threads(),
+            exec: None,
+            simd: None,
         }
     }
 }
@@ -100,11 +105,30 @@ impl ModelBuilder {
         self
     }
 
-    /// Scoped-thread count for batched `√K` panel applies (`0` = one per
-    /// available core). Applies to the in-process engine families; results
-    /// are bit-identical at every setting (`DESIGN.md` §6).
+    /// Thread count for batched `√K` panel applies (`0` = one per
+    /// available core): the model gets its own persistent worker pool of
+    /// that width. Applies to the in-process engine families; results
+    /// are bit-identical at every setting (`DESIGN.md` §6/§7). Defaults
+    /// to the `ICR_APPLY_THREADS` environment variable, else 1.
     pub fn apply_threads(mut self, threads: usize) -> Self {
         self.apply_threads = threads;
+        self
+    }
+
+    /// Explicit executor for panel applies — overrides
+    /// [`Self::apply_threads`]. Used to share one worker pool across
+    /// models (the coordinator does this for its whole registry) or to
+    /// pin the scoped-spawn/serial paths in tests and benches.
+    pub fn exec(mut self, exec: Exec) -> Self {
+        self.exec = Some(exec);
+        self
+    }
+
+    /// Force the SIMD microkernel dispatch on (subject to hardware
+    /// support) or off; default is auto-detection. Bit-identical either
+    /// way — this is the equivalence-test and benchmarking knob.
+    pub fn simd(mut self, on: bool) -> Self {
+        self.simd = Some(on);
         self
     }
 
@@ -114,32 +138,43 @@ impl ModelBuilder {
     }
 
     /// Construct the model. PJRT spins up (and warms) its own service
-    /// actor; the other families are pure in-process builds.
+    /// actor; the other families are pure in-process builds. Every family
+    /// receives the same executor — an explicit [`Self::exec`] if given,
+    /// else a fresh persistent pool of [`Self::apply_threads`] lanes.
     pub fn build(self) -> Result<Arc<dyn GpModel>, IcrError> {
+        let exec = self.exec.clone().unwrap_or_else(|| Exec::pooled(self.apply_threads));
         match self.backend {
             Backend::Native => {
-                let e = NativeEngine::from_config(&self.model)
+                let mut e = NativeEngine::from_config(&self.model)
                     .map_err(IcrError::from)?
-                    .with_apply_threads(self.apply_threads);
+                    .with_exec(exec);
+                if let Some(on) = self.simd {
+                    e = e.with_simd(on);
+                }
                 Ok(Arc::new(e))
             }
             Backend::Pjrt => {
                 let svc = PjrtService::start(std::path::Path::new(&self.artifact_dir))
                     .map_err(IcrError::from)?;
-                let e = PjrtEngine::from_config(svc, &self.model).map_err(IcrError::from)?;
+                let e = PjrtEngine::from_config(svc, &self.model)
+                    .map_err(IcrError::from)?
+                    .with_exec(exec);
                 e.warmup().map_err(IcrError::from)?;
                 Ok(Arc::new(e))
             }
             Backend::Kissgp => {
                 let e = KissGpModel::from_config(&self.model)
                     .map_err(IcrError::from)?
-                    .with_apply_threads(self.apply_threads);
+                    .with_exec(exec);
                 Ok(Arc::new(e))
             }
             Backend::Exact => {
-                let e = ExactModel::from_config(&self.model)
+                let mut e = ExactModel::from_config(&self.model)
                     .map_err(IcrError::from)?
-                    .with_apply_threads(self.apply_threads);
+                    .with_exec(exec);
+                if let Some(on) = self.simd {
+                    e = e.with_simd(on);
+                }
                 Ok(Arc::new(e))
             }
         }
@@ -190,6 +225,20 @@ mod tests {
         let pk = kiss.domain_points();
         for (a, b) in pn.iter().zip(&pk) {
             assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn explicit_exec_and_simd_knobs_do_not_change_bytes() {
+        let pool = Arc::new(crate::parallel::WorkerPool::new(2));
+        let mk = |b: ModelBuilder| b.windows(3, 2).levels(2).target_n(16).build().unwrap();
+        let reference = mk(ModelBuilder::new().apply_threads(1));
+        let pooled = mk(ModelBuilder::new().exec(Exec::with_pool(&pool)));
+        let scoped = mk(ModelBuilder::new().exec(Exec::scoped(2)));
+        let scalar = mk(ModelBuilder::new().simd(false));
+        let want = reference.sample(3, 5).unwrap();
+        for m in [&pooled, &scoped, &scalar] {
+            assert_eq!(m.sample(3, 5).unwrap(), want);
         }
     }
 

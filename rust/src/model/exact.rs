@@ -11,9 +11,11 @@ use crate::config::ModelConfig;
 use crate::error::IcrError;
 use crate::gp::ExactGp;
 use crate::linalg::Cholesky;
-use crate::parallel::{resolve_threads, run_chunked};
+use crate::parallel::Exec;
 
-use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+use super::{
+    check_loss_grad_panel_args, check_obs_args, default_obs_indices, GpModel, ModelDescriptor,
+};
 
 /// Dense exact GP on the modeled points of a [`ModelConfig`].
 pub struct ExactModel {
@@ -22,7 +24,10 @@ pub struct ExactModel {
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
-    threads: usize,
+    exec: Exec,
+    /// AVX2 microkernels for the triangular panel sweeps (pinned at model
+    /// build; bit-identical either way).
+    simd: bool,
 }
 
 impl ExactModel {
@@ -41,16 +46,44 @@ impl ExactModel {
             obs,
             kernel_spec: cfg.kernel_spec.clone(),
             chart_spec: cfg.chart_spec.clone(),
-            threads: 1,
+            exec: Exec::Serial,
+            simd: crate::parallel::simd_enabled(),
         })
     }
 
-    /// Set the scoped-thread count for panel applies (`0` = one per
-    /// available core). Lanes are partitioned across threads; results are
-    /// bit-identical at every setting.
+    /// Set the panel-apply thread count (`0` = one per available core):
+    /// builds a private persistent worker pool. Lanes are partitioned
+    /// across threads; results are bit-identical at every setting.
     pub fn with_apply_threads(mut self, threads: usize) -> Self {
-        self.threads = resolve_threads(threads);
+        self.exec = Exec::pooled(threads);
         self
+    }
+
+    /// Run panel applies on an explicit executor (shared pool injection).
+    pub fn with_exec(mut self, exec: Exec) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Force the SIMD microkernel dispatch on (subject to hardware
+    /// support) or off; bit-identical either way.
+    pub fn with_simd(mut self, on: bool) -> Self {
+        self.simd = on && crate::parallel::simd_supported();
+        self
+    }
+
+    /// Panel apply into caller storage: lane chunks across the executor,
+    /// one triangular panel sweep per lane block inside each chunk.
+    fn panel_into(&self, panel: &[f64], batch: usize, out: &mut [f64], transpose: bool) {
+        let n = self.points.len();
+        self.exec.run_chunked(out, n, batch, self.exec.threads(), |b0, count, chunk| {
+            let sub = &panel[b0 * n..(b0 + count) * n];
+            if transpose {
+                self.chol.apply_sqrt_transpose_panel_into_with(sub, count, chunk, self.simd);
+            } else {
+                self.chol.apply_sqrt_panel_into_with(sub, count, chunk, self.simd);
+            }
+        });
     }
 }
 
@@ -91,12 +124,8 @@ impl GpModel for ExactModel {
                 got: panel.len(),
             });
         }
-        // One triangular panel sweep per lane chunk instead of per-lane
-        // column applies; lanes split across scoped threads.
         let mut out = vec![0.0; batch * n];
-        run_chunked(&mut out, n, batch, self.threads, |b0, count, chunk| {
-            self.chol.apply_sqrt_panel_into(&panel[b0 * n..(b0 + count) * n], count, chunk);
-        });
+        self.panel_into(panel, batch, &mut out, false);
         Ok(out)
     }
 
@@ -110,25 +139,41 @@ impl GpModel for ExactModel {
             });
         }
         let mut out = vec![0.0; batch * n];
-        run_chunked(&mut out, n, batch, self.threads, |b0, count, chunk| {
-            self.chol
-                .apply_sqrt_transpose_panel_into(&panel[b0 * n..(b0 + count) * n], count, chunk);
-        });
+        self.panel_into(panel, batch, &mut out, true);
         Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
         -> Result<(f64, Vec<f64>), IcrError> {
-        check_loss_grad_args(self.total_dof(), self.obs.len(), xi, y_obs, sigma_n)?;
-        Ok(super::gaussian_map_loss_grad(
+        super::loss_grad_via_panel(self, xi, y_obs, sigma_n)
+    }
+
+    fn loss_grad_panel_into(
+        &self,
+        xi_panel: &[f64],
+        batch: usize,
+        y_obs: &[f64],
+        sigma_n: f64,
+        losses: &mut [f64],
+        grad_panel: &mut [f64],
+    ) -> Result<(), IcrError> {
+        check_obs_args(self.obs.len(), y_obs, sigma_n)?;
+        check_loss_grad_panel_args(self.total_dof(), xi_panel, batch, losses, grad_panel)?;
+        super::gaussian_map_loss_grad_panel(
             self.n_points(),
             &self.obs,
-            xi,
+            xi_panel,
+            batch,
             y_obs,
             sigma_n,
-            |x| self.chol.apply_sqrt(x),
-            |c| self.chol.apply_sqrt_transpose(c),
-        ))
+            losses,
+            grad_panel,
+            |p, b| self.apply_sqrt_panel(p, b),
+            |p, b, out| {
+                self.panel_into(p, b, out, true);
+                Ok(())
+            },
+        )
     }
 
     fn obs_indices(&self) -> Vec<usize> {
@@ -174,6 +219,31 @@ mod tests {
             let got_b = m.apply_sqrt_transpose_panel(&panel, 5).unwrap();
             assert!(got_f.iter().zip(&want_f).all(|(a, b)| a.to_bits() == b.to_bits()));
             assert!(got_b.iter().zip(&want_b).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // Scoped spawns and SIMD-off agree too.
+        for m in [exact().with_exec(Exec::scoped(4)), exact().with_simd(false)] {
+            let got_f = m.apply_sqrt_panel(&panel, 5).unwrap();
+            assert!(got_f.iter().zip(&want_f).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn exact_loss_grad_panel_matches_stacked_singles_bitwise() {
+        let m = exact().with_apply_threads(2);
+        let dof = m.total_dof();
+        let mut rng = Rng::new(9);
+        let y = rng.standard_normal_vec(m.obs_indices().len());
+        for batch in [1usize, 3, 8] {
+            let panel = rng.standard_normal_vec(batch * dof);
+            let (losses, grads) = m.loss_grad_panel(&panel, batch, &y, 0.3).unwrap();
+            for b in 0..batch {
+                let (l, g) = m.loss_grad(&panel[b * dof..(b + 1) * dof], &y, 0.3).unwrap();
+                assert_eq!(losses[b].to_bits(), l.to_bits());
+                assert!(grads[b * dof..(b + 1) * dof]
+                    .iter()
+                    .zip(&g)
+                    .all(|(a, c)| a.to_bits() == c.to_bits()));
+            }
         }
     }
 

@@ -11,9 +11,11 @@ use anyhow::Result;
 use crate::config::ModelConfig;
 use crate::error::IcrError;
 use crate::kissgp::{KissGp, KissGpConfig};
-use crate::parallel::{resolve_threads, run_chunked};
+use crate::parallel::Exec;
 
-use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+use super::{
+    check_loss_grad_panel_args, check_obs_args, default_obs_indices, GpModel, ModelDescriptor,
+};
 
 /// KISS-GP model over the modeled points of a [`ModelConfig`].
 pub struct KissGpModel {
@@ -22,7 +24,7 @@ pub struct KissGpModel {
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
-    threads: usize,
+    exec: Exec,
 }
 
 impl KissGpModel {
@@ -41,20 +43,52 @@ impl KissGpModel {
             obs,
             kernel_spec: cfg.kernel_spec.clone(),
             chart_spec: cfg.chart_spec.clone(),
-            threads: 1,
+            exec: Exec::Serial,
         })
     }
 
-    /// Set the scoped-thread count for panel applies (`0` = one per
-    /// available core). Each lane's FFT chain is independent, so lanes
-    /// partition across threads with bit-identical results.
+    /// Set the panel-apply thread count (`0` = one per available core):
+    /// builds a private persistent worker pool. Each lane's FFT chain is
+    /// independent, so lanes partition across the pool with bit-identical
+    /// results.
     pub fn with_apply_threads(mut self, threads: usize) -> Self {
-        self.threads = resolve_threads(threads);
+        self.exec = Exec::pooled(threads);
+        self
+    }
+
+    /// Run panel applies on an explicit executor (shared pool injection).
+    pub fn with_exec(mut self, exec: Exec) -> Self {
+        self.exec = exec;
         self
     }
 
     pub fn inner(&self) -> &KissGp {
         &self.model
+    }
+
+    /// Forward lanes into caller storage (lane chunks on the executor).
+    fn fwd_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
+        let dof = self.model.sqrt_dof();
+        let n = self.points.len();
+        self.exec.run_chunked(out, n, batch, self.exec.threads(), |b0, count, chunk| {
+            for i in 0..count {
+                let lane = &panel[(b0 + i) * dof..(b0 + i + 1) * dof];
+                chunk[i * n..(i + 1) * n].copy_from_slice(&self.model.apply_sqrt_embedding(lane));
+            }
+        });
+    }
+
+    /// Adjoint lanes into caller storage.
+    fn bwd_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
+        let dof = self.model.sqrt_dof();
+        let n = self.points.len();
+        self.exec.run_chunked(out, dof, batch, self.exec.threads(), |b0, count, chunk| {
+            for i in 0..count {
+                let lane = &panel[(b0 + i) * n..(b0 + i + 1) * n];
+                chunk[i * dof..(i + 1) * dof]
+                    .copy_from_slice(&self.model.apply_sqrt_embedding_transpose(lane));
+            }
+        });
     }
 }
 
@@ -95,17 +129,8 @@ impl GpModel for KissGpModel {
                 got: panel.len(),
             });
         }
-        // Each lane is an independent FFT chain; split lanes across
-        // scoped threads (per-lane arithmetic is untouched, so the panel
-        // output is bit-identical to the stacked singles).
-        let n = self.n_points();
-        let mut out = vec![0.0; batch * n];
-        run_chunked(&mut out, n, batch, self.threads, |b0, count, chunk| {
-            for i in 0..count {
-                let lane = &panel[(b0 + i) * dof..(b0 + i + 1) * dof];
-                chunk[i * n..(i + 1) * n].copy_from_slice(&self.model.apply_sqrt_embedding(lane));
-            }
-        });
+        let mut out = vec![0.0; batch * self.n_points()];
+        self.fwd_into(panel, batch, &mut out);
         Ok(out)
     }
 
@@ -118,30 +143,42 @@ impl GpModel for KissGpModel {
                 got: panel.len(),
             });
         }
-        let dof = self.total_dof();
-        let mut out = vec![0.0; batch * dof];
-        run_chunked(&mut out, dof, batch, self.threads, |b0, count, chunk| {
-            for i in 0..count {
-                let lane = &panel[(b0 + i) * n..(b0 + i + 1) * n];
-                chunk[i * dof..(i + 1) * dof]
-                    .copy_from_slice(&self.model.apply_sqrt_embedding_transpose(lane));
-            }
-        });
+        let mut out = vec![0.0; batch * self.total_dof()];
+        self.bwd_into(panel, batch, &mut out);
         Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
         -> Result<(f64, Vec<f64>), IcrError> {
-        check_loss_grad_args(self.total_dof(), self.obs.len(), xi, y_obs, sigma_n)?;
-        Ok(super::gaussian_map_loss_grad(
+        super::loss_grad_via_panel(self, xi, y_obs, sigma_n)
+    }
+
+    fn loss_grad_panel_into(
+        &self,
+        xi_panel: &[f64],
+        batch: usize,
+        y_obs: &[f64],
+        sigma_n: f64,
+        losses: &mut [f64],
+        grad_panel: &mut [f64],
+    ) -> Result<(), IcrError> {
+        check_obs_args(self.obs.len(), y_obs, sigma_n)?;
+        check_loss_grad_panel_args(self.total_dof(), xi_panel, batch, losses, grad_panel)?;
+        super::gaussian_map_loss_grad_panel(
             self.n_points(),
             &self.obs,
-            xi,
+            xi_panel,
+            batch,
             y_obs,
             sigma_n,
-            |x| self.model.apply_sqrt_embedding(x),
-            |c| self.model.apply_sqrt_embedding_transpose(c),
-        ))
+            losses,
+            grad_panel,
+            |p, b| self.apply_sqrt_panel(p, b),
+            |p, b, out| {
+                self.bwd_into(p, b, out);
+                Ok(())
+            },
+        )
     }
 
     fn obs_indices(&self) -> Vec<usize> {
@@ -193,6 +230,26 @@ mod tests {
                 "grad[{i}] = {} vs fd {fd}",
                 grad[i]
             );
+        }
+    }
+
+    #[test]
+    fn kiss_loss_grad_panel_matches_stacked_singles_bitwise() {
+        let m = kiss().with_apply_threads(2);
+        let dof = m.total_dof();
+        let mut rng = Rng::new(61);
+        let y = rng.standard_normal_vec(m.obs_indices().len());
+        for batch in [1usize, 3] {
+            let panel = rng.standard_normal_vec(batch * dof);
+            let (losses, grads) = m.loss_grad_panel(&panel, batch, &y, 0.4).unwrap();
+            for b in 0..batch {
+                let (l, g) = m.loss_grad(&panel[b * dof..(b + 1) * dof], &y, 0.4).unwrap();
+                assert_eq!(losses[b].to_bits(), l.to_bits());
+                assert!(grads[b * dof..(b + 1) * dof]
+                    .iter()
+                    .zip(&g)
+                    .all(|(a, c)| a.to_bits() == c.to_bits()));
+            }
         }
     }
 

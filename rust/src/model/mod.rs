@@ -36,6 +36,33 @@ pub fn default_obs_indices(n: usize) -> Vec<usize> {
     (0..n).step_by(2).collect()
 }
 
+/// Upper bound on [`GpModel::infer_multi`] restart chains. The sweep
+/// allocates several `restarts × dof` buffers (ξ, gradient, Adam state,
+/// fields), so an unbounded client-supplied count would turn a tiny
+/// `infer_multi` frame into a multi-gigabyte allocation on the serving
+/// path; past this bound the request is rejected with a typed error.
+pub const MAX_INFER_RESTARTS: usize = 1024;
+
+/// Result of a batched multi-chain MAP run ([`GpModel::infer_multi`]):
+/// one field and loss trace per restart chain plus the index of the chain
+/// with the lowest final loss.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiInference {
+    /// Inferred field per chain (`restarts × n`).
+    pub fields: Vec<Vec<f64>>,
+    /// Per-chain loss trace; `wall_s` is the shared sweep wall time.
+    pub traces: Vec<Trace>,
+    /// Chain with the lowest final loss.
+    pub best: usize,
+}
+
+impl MultiInference {
+    /// The best chain's inferred field.
+    pub fn best_field(&self) -> &[f64] {
+        &self.fields[self.best]
+    }
+}
+
 /// Static metadata describing a constructed model: what a client sees when
 /// it asks the registry what is being served.
 #[derive(Debug, Clone, PartialEq)]
@@ -131,6 +158,55 @@ pub trait GpModel: Send + Sync {
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
         -> Result<(f64, Vec<f64>), IcrError>;
 
+    /// Batched objective: evaluate the standardized loss and its adjoint
+    /// gradient for `batch` independent excitation chains sharing one set
+    /// of observations, writing per-chain losses into `losses`
+    /// (`batch` slots) and the flat `batch × dof` gradient panel into
+    /// `grad_panel` — the inference-side twin of
+    /// [`Self::apply_sqrt_panel`], and the reason multi-chain MAP sweeps
+    /// amortize memory traffic the way sampling does (`DESIGN.md` §7).
+    ///
+    /// Caller-provided buffers let optimizer loops reuse the loss and
+    /// gradient storage across steps — the adjoint writes straight into
+    /// `grad_panel` (the engines' internal forward/cotangent panels are
+    /// still engine-managed). The default unrolls to per-lane
+    /// [`Self::loss_grad`] calls so any implementation works; in-tree
+    /// engines override it with one forward + one adjoint panel apply.
+    /// Results are bit-for-bit the stacked per-lane `loss_grad`s.
+    fn loss_grad_panel_into(
+        &self,
+        xi_panel: &[f64],
+        batch: usize,
+        y_obs: &[f64],
+        sigma_n: f64,
+        losses: &mut [f64],
+        grad_panel: &mut [f64],
+    ) -> Result<(), IcrError> {
+        let dof = self.total_dof();
+        check_loss_grad_panel_args(dof, xi_panel, batch, losses, grad_panel)?;
+        for b in 0..batch {
+            let (l, g) = self.loss_grad(&xi_panel[b * dof..(b + 1) * dof], y_obs, sigma_n)?;
+            losses[b] = l;
+            grad_panel[b * dof..(b + 1) * dof].copy_from_slice(&g);
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience over [`Self::loss_grad_panel_into`]:
+    /// returns `(losses, grad_panel)`.
+    fn loss_grad_panel(
+        &self,
+        xi_panel: &[f64],
+        batch: usize,
+        y_obs: &[f64],
+        sigma_n: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>), IcrError> {
+        let mut losses = vec![0.0; batch];
+        let mut grad = vec![0.0; batch * self.total_dof()];
+        self.loss_grad_panel_into(xi_panel, batch, y_obs, sigma_n, &mut losses, &mut grad)?;
+        Ok((losses, grad))
+    }
+
     /// Indices of observed points for [`Self::loss_grad`].
     fn obs_indices(&self) -> Vec<usize>;
 
@@ -148,10 +224,8 @@ pub trait GpModel: Send + Sync {
     fn sample(&self, count: usize, seed: u64) -> Result<Vec<Vec<f64>>, IcrError> {
         let dof = self.total_dof();
         let mut rng = Rng::new(seed);
-        let mut panel = Vec::with_capacity(count * dof);
-        for _ in 0..count {
-            panel.extend_from_slice(&rng.standard_normal_vec(dof));
-        }
+        let mut panel = vec![0.0; count * dof];
+        rng.fill_standard_normal(&mut panel);
         let flat = self.apply_sqrt_panel(&panel, count)?;
         let n = self.n_points();
         Ok(flat.chunks(n.max(1)).map(<[f64]>::to_vec).collect())
@@ -159,6 +233,9 @@ pub trait GpModel: Send + Sync {
 
     /// Posterior MAP of the standardized objective: `steps` Adam updates
     /// from ξ = 0, returning the inferred field and the loss trace.
+    /// Runs as the single chain of [`Self::infer_multi`], so the loss and
+    /// gradient buffers are allocated once and reused across every
+    /// optimizer step.
     fn infer(
         &self,
         y_obs: &[f64],
@@ -166,22 +243,75 @@ pub trait GpModel: Send + Sync {
         steps: usize,
         lr: f64,
     ) -> Result<(Vec<f64>, Trace), IcrError> {
+        let mut mi = self.infer_multi(y_obs, sigma_n, steps, lr, 1, 0)?;
+        Ok((mi.fields.remove(0), mi.traces.remove(0)))
+    }
+
+    /// Multi-restart posterior MAP: step `restarts` independent ξ chains
+    /// through `steps` Adam sweeps, evaluating the objective of all
+    /// chains per sweep with one batched [`Self::loss_grad_panel_into`]
+    /// call — the adjoint gets the same lane amortization the forward
+    /// pass gets in sampling. Chain 0 starts at ξ = 0 (so a single chain
+    /// reproduces [`Self::infer`] bit for bit); chains 1.. start from
+    /// seeded standard-normal excitations, giving basin diversity for
+    /// multi-modal objectives. Adam is element-wise, so one optimizer
+    /// over the flat `restarts × dof` panel is exactly `restarts`
+    /// independent optimizers.
+    fn infer_multi(
+        &self,
+        y_obs: &[f64],
+        sigma_n: f64,
+        steps: usize,
+        lr: f64,
+        restarts: usize,
+        seed: u64,
+    ) -> Result<MultiInference, IcrError> {
         if steps == 0 {
             return Err(IcrError::InvalidParameter("steps must be ≥ 1".into()));
         }
+        if restarts == 0 {
+            return Err(IcrError::InvalidParameter("restarts must be ≥ 1".into()));
+        }
+        if restarts > MAX_INFER_RESTARTS {
+            return Err(IcrError::InvalidParameter(format!(
+                "restarts must be ≤ {MAX_INFER_RESTARTS}, got {restarts}"
+            )));
+        }
         let dof = self.total_dof();
-        let mut xi = vec![0.0; dof];
-        let mut opt = Adam::new(dof, lr);
-        let mut trace = Trace::default();
+        let b = restarts;
+        let mut xi = vec![0.0; b * dof];
+        if b > 1 {
+            let mut rng = Rng::new(seed);
+            rng.fill_standard_normal(&mut xi[dof..]);
+        }
+        let mut opt = Adam::new(b * dof, lr);
+        let mut traces = vec![Trace::default(); b];
+        // Loss and gradient buffers are allocated once and reused across
+        // every sweep; the adjoint writes into `grad` in place.
+        let mut losses = vec![0.0; b];
+        let mut grad = vec![0.0; b * dof];
         let t0 = Instant::now();
         for _ in 0..steps {
-            let (loss, grad) = self.loss_grad(&xi, y_obs, sigma_n)?;
-            trace.losses.push(loss);
+            self.loss_grad_panel_into(&xi, b, y_obs, sigma_n, &mut losses, &mut grad)?;
+            for (t, &l) in traces.iter_mut().zip(&losses) {
+                t.losses.push(l);
+            }
             opt.step(&mut xi, &grad);
         }
-        trace.wall_s = t0.elapsed().as_secs_f64();
-        let field = self.apply_sqrt_panel(&xi, 1)?;
-        Ok((field, trace))
+        let wall_s = t0.elapsed().as_secs_f64();
+        for t in &mut traces {
+            t.wall_s = wall_s;
+        }
+        let flat = self.apply_sqrt_panel(&xi, b)?;
+        let n = self.n_points();
+        let fields: Vec<Vec<f64>> = flat.chunks(n.max(1)).map(<[f64]>::to_vec).collect();
+        let best = losses
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(MultiInference { fields, traces, best })
     }
 }
 
@@ -216,6 +346,37 @@ pub(crate) fn batch_via_panel(
     Ok(flat.chunks(n.max(1)).map(<[f64]>::to_vec).collect())
 }
 
+/// Shared single-chain objective via the batched panel path: validate ξ,
+/// run [`GpModel::loss_grad_panel_into`] with `batch = 1`. Every
+/// in-process family's `loss_grad` delegates here so the B = 1 bridge
+/// exists exactly once (PJRT keeps its artifact-backed `loss_grad`).
+pub(crate) fn loss_grad_via_panel(
+    model: &dyn GpModel,
+    xi: &[f64],
+    y_obs: &[f64],
+    sigma_n: f64,
+) -> Result<(f64, Vec<f64>), IcrError> {
+    let dof = model.total_dof();
+    if xi.len() != dof {
+        return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: xi.len() });
+    }
+    let mut losses = [0.0];
+    let mut grad = vec![0.0; dof];
+    model.loss_grad_panel_into(xi, 1, y_obs, sigma_n, &mut losses, &mut grad)?;
+    Ok((losses[0], grad))
+}
+
+/// Shared validation of observation arguments (`y_obs` length, noise σ).
+pub(crate) fn check_obs_args(n_obs: usize, y_obs: &[f64], sigma_n: f64) -> Result<(), IcrError> {
+    if y_obs.len() != n_obs {
+        return Err(IcrError::ShapeMismatch { what: "y_obs", expected: n_obs, got: y_obs.len() });
+    }
+    if sigma_n <= 0.0 || !sigma_n.is_finite() {
+        return Err(IcrError::InvalidParameter(format!("noise std must be positive, got {sigma_n}")));
+    }
+    Ok(())
+}
+
 /// Shared argument validation for `loss_grad` implementations.
 pub(crate) fn check_loss_grad_args(
     dof: usize,
@@ -227,44 +388,82 @@ pub(crate) fn check_loss_grad_args(
     if xi.len() != dof {
         return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: xi.len() });
     }
-    if y_obs.len() != n_obs {
-        return Err(IcrError::ShapeMismatch { what: "y_obs", expected: n_obs, got: y_obs.len() });
+    check_obs_args(n_obs, y_obs, sigma_n)
+}
+
+/// Shared shape validation for `loss_grad_panel_into` implementations
+/// (the observation arguments are checked by [`check_obs_args`]).
+pub(crate) fn check_loss_grad_panel_args(
+    dof: usize,
+    xi_panel: &[f64],
+    batch: usize,
+    losses: &[f64],
+    grad_panel: &[f64],
+) -> Result<(), IcrError> {
+    if xi_panel.len() != batch * dof {
+        return Err(IcrError::ShapeMismatch {
+            what: "panel",
+            expected: batch * dof,
+            got: xi_panel.len(),
+        });
     }
-    if sigma_n <= 0.0 || !sigma_n.is_finite() {
-        return Err(IcrError::InvalidParameter(format!("noise std must be positive, got {sigma_n}")));
+    if losses.len() != batch {
+        return Err(IcrError::ShapeMismatch { what: "losses", expected: batch, got: losses.len() });
+    }
+    if grad_panel.len() != batch * dof {
+        return Err(IcrError::ShapeMismatch {
+            what: "grad_panel",
+            expected: batch * dof,
+            got: grad_panel.len(),
+        });
     }
     Ok(())
 }
 
-/// Shared body of the standardized MAP objective (paper Eq. 3):
-/// `loss = ½‖(y − (√K·ξ)[obs])/σ‖² + ½‖ξ‖²`, `grad = √Kᵀ·cot + ξ`,
-/// parameterized by the engine's forward/adjoint square-root applies.
-/// Every in-process family (native, KISS-GP, exact) routes through this
-/// so the objective can only ever change in one place.
-pub(crate) fn gaussian_map_loss_grad(
+/// Shared body of the batched standardized MAP objective (paper Eq. 3):
+/// per chain `b`, `loss_b = ½‖(y − (√K·ξ_b)[obs])/σ‖² + ½‖ξ_b‖²` and
+/// `grad_b = √Kᵀ·cot_b + ξ_b`, parameterized by the engine's batched
+/// forward/adjoint square-root panel applies. Every in-process family
+/// (native, KISS-GP, exact) routes through this — single-lane
+/// `loss_grad` is the `batch = 1` case — so the objective can only ever
+/// change in one place. Per-lane arithmetic order is exactly the serial
+/// single-chain order, so results are bit-for-bit the stacked
+/// single-chain evaluations.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gaussian_map_loss_grad_panel(
     n_points: usize,
     obs: &[usize],
-    xi: &[f64],
+    xi_panel: &[f64],
+    batch: usize,
     y_obs: &[f64],
     sigma_n: f64,
-    apply_sqrt: impl FnOnce(&[f64]) -> Vec<f64>,
-    apply_sqrt_transpose: impl FnOnce(&[f64]) -> Vec<f64>,
-) -> (f64, Vec<f64>) {
-    let s = apply_sqrt(xi);
+    losses: &mut [f64],
+    grad_panel: &mut [f64],
+    apply_sqrt_panel: impl FnOnce(&[f64], usize) -> Result<Vec<f64>, IcrError>,
+    apply_sqrt_transpose_panel_into: impl FnOnce(&[f64], usize, &mut [f64]) -> Result<(), IcrError>,
+) -> Result<(), IcrError> {
+    let dof = if batch == 0 { 0 } else { xi_panel.len() / batch };
+    let s = apply_sqrt_panel(xi_panel, batch)?;
     let inv_var = 1.0 / (sigma_n * sigma_n);
-    let mut loss = 0.0;
-    let mut cotangent = vec![0.0; n_points];
-    for (&o, &y) in obs.iter().zip(y_obs) {
-        let r = s[o] - y;
-        loss += 0.5 * r * r * inv_var;
-        cotangent[o] = r * inv_var;
+    let mut cot = vec![0.0; batch * n_points];
+    for b in 0..batch {
+        let s_b = &s[b * n_points..(b + 1) * n_points];
+        let cot_b = &mut cot[b * n_points..(b + 1) * n_points];
+        let mut loss = 0.0;
+        for (&o, &y) in obs.iter().zip(y_obs) {
+            let r = s_b[o] - y;
+            loss += 0.5 * r * r * inv_var;
+            cot_b[o] = r * inv_var;
+        }
+        let xi_b = &xi_panel[b * dof..(b + 1) * dof];
+        loss += 0.5 * xi_b.iter().map(|v| v * v).sum::<f64>();
+        losses[b] = loss;
     }
-    loss += 0.5 * xi.iter().map(|v| v * v).sum::<f64>();
-    let mut grad = apply_sqrt_transpose(&cotangent);
-    for (g, &x) in grad.iter_mut().zip(xi) {
+    apply_sqrt_transpose_panel_into(&cot, batch, grad_panel)?;
+    for (g, &x) in grad_panel.iter_mut().zip(xi_panel) {
         *g += x;
     }
-    (loss, grad)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -292,6 +491,33 @@ mod tests {
         assert_eq!(v.get("backend").unwrap().as_str(), Some("native"));
         assert_eq!(v.get("n").unwrap().as_usize(), Some(200));
         assert_eq!(v.get("dof").unwrap().as_usize(), Some(263));
+    }
+
+    #[test]
+    fn loss_grad_panel_arg_checks() {
+        assert!(check_loss_grad_panel_args(3, &[0.0; 6], 2, &[0.0; 2], &[0.0; 6]).is_ok());
+        assert!(matches!(
+            check_loss_grad_panel_args(3, &[0.0; 5], 2, &[0.0; 2], &[0.0; 6]),
+            Err(IcrError::ShapeMismatch { what: "panel", .. })
+        ));
+        assert!(matches!(
+            check_loss_grad_panel_args(3, &[0.0; 6], 2, &[0.0; 1], &[0.0; 6]),
+            Err(IcrError::ShapeMismatch { what: "losses", .. })
+        ));
+        assert!(matches!(
+            check_loss_grad_panel_args(3, &[0.0; 6], 2, &[0.0; 2], &[0.0; 7]),
+            Err(IcrError::ShapeMismatch { what: "grad_panel", .. })
+        ));
+    }
+
+    #[test]
+    fn multi_inference_best_field_indexes_fields() {
+        let mi = MultiInference {
+            fields: vec![vec![1.0], vec![2.0]],
+            traces: vec![Trace::default(), Trace::default()],
+            best: 1,
+        };
+        assert_eq!(mi.best_field(), &[2.0]);
     }
 
     #[test]

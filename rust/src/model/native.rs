@@ -7,22 +7,25 @@ use anyhow::{Context, Result};
 use crate::config::ModelConfig;
 use crate::error::IcrError;
 use crate::icr::{IcrEngine, PanelWorkspace};
-use crate::parallel::resolve_threads;
+use crate::parallel::Exec;
 
-use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
+use super::{
+    check_loss_grad_panel_args, check_obs_args, default_obs_indices, GpModel, ModelDescriptor,
+};
 
 /// The Rust-native engine behind the [`GpModel`] interface.
 ///
 /// Panel applies run through the engine's blocked multi-excitation path
-/// with `apply_threads` scoped threads per call; scratch workspaces are
-/// pooled so concurrent coordinator workers never allocate in the hot
-/// loop (`DESIGN.md` §6).
+/// on the model's [`Exec`] — by default a persistent worker pool sized by
+/// `apply_threads` — and scratch workspaces are pooled so concurrent
+/// coordinator workers never allocate in the hot loop (`DESIGN.md`
+/// §6/§7).
 pub struct NativeEngine {
     engine: IcrEngine,
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
-    threads: usize,
+    exec: Exec,
     workspaces: Mutex<Vec<PanelWorkspace>>,
 }
 
@@ -39,21 +42,37 @@ impl NativeEngine {
             obs,
             kernel_spec: model.kernel_spec.clone(),
             chart_spec: model.chart_spec.clone(),
-            threads: 1,
+            exec: Exec::Serial,
             workspaces: Mutex::new(Vec::new()),
         })
     }
 
-    /// Set the scoped-thread count used by panel applies (`0` = one per
-    /// available core). Results are bit-identical at every setting.
+    /// Set the panel-apply thread count (`0` = one per available core):
+    /// builds a private persistent [`crate::parallel::WorkerPool`] of
+    /// that width. Results are bit-identical at every setting.
     pub fn with_apply_threads(mut self, threads: usize) -> Self {
-        self.threads = resolve_threads(threads);
+        self.exec = Exec::pooled(threads);
+        self
+    }
+
+    /// Run panel applies on an explicit executor (serial, scoped spawns,
+    /// or a shared worker pool — the coordinator hands every hosted model
+    /// one pooled `Exec`).
+    pub fn with_exec(mut self, exec: Exec) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Force the SIMD microkernel dispatch on (subject to hardware
+    /// support) or off; bit-identical either way.
+    pub fn with_simd(mut self, on: bool) -> Self {
+        self.engine = self.engine.with_simd(on);
         self
     }
 
     /// The configured panel-apply thread count.
     pub fn apply_threads(&self) -> usize {
-        self.threads
+        self.exec.threads()
     }
 
     pub fn inner(&self) -> &IcrEngine {
@@ -108,7 +127,7 @@ impl GpModel for NativeEngine {
         }
         let mut ws = self.take_workspace();
         let mut out = vec![0.0; batch * self.n_points()];
-        self.engine.apply_sqrt_multi_with(panel, batch, self.threads, &mut ws, &mut out);
+        self.engine.apply_sqrt_panel_exec(panel, batch, &self.exec, &mut ws, &mut out);
         self.put_workspace(ws);
         Ok(out)
     }
@@ -122,29 +141,57 @@ impl GpModel for NativeEngine {
                 got: panel.len(),
             });
         }
-        let mut ws = self.take_workspace();
         let mut out = vec![0.0; batch * self.total_dof()];
-        self.engine.apply_sqrt_transpose_multi_with(panel, batch, self.threads, &mut ws, &mut out);
-        self.put_workspace(ws);
+        self.transpose_panel_into(panel, batch, &mut out);
         Ok(out)
     }
 
     fn loss_grad(&self, xi: &[f64], y_obs: &[f64], sigma_n: f64)
         -> Result<(f64, Vec<f64>), IcrError> {
-        check_loss_grad_args(self.total_dof(), self.obs.len(), xi, y_obs, sigma_n)?;
-        Ok(super::gaussian_map_loss_grad(
+        super::loss_grad_via_panel(self, xi, y_obs, sigma_n)
+    }
+
+    fn loss_grad_panel_into(
+        &self,
+        xi_panel: &[f64],
+        batch: usize,
+        y_obs: &[f64],
+        sigma_n: f64,
+        losses: &mut [f64],
+        grad_panel: &mut [f64],
+    ) -> Result<(), IcrError> {
+        check_obs_args(self.obs.len(), y_obs, sigma_n)?;
+        check_loss_grad_panel_args(self.total_dof(), xi_panel, batch, losses, grad_panel)?;
+        super::gaussian_map_loss_grad_panel(
             self.n_points(),
             &self.obs,
-            xi,
+            xi_panel,
+            batch,
             y_obs,
             sigma_n,
-            |x| self.engine.apply_sqrt(x),
-            |c| self.engine.apply_sqrt_transpose(c),
-        ))
+            losses,
+            grad_panel,
+            |p, b| self.apply_sqrt_panel(p, b),
+            |p, b, out| {
+                self.transpose_panel_into(p, b, out);
+                Ok(())
+            },
+        )
     }
 
     fn obs_indices(&self) -> Vec<usize> {
         self.obs.clone()
+    }
+}
+
+impl NativeEngine {
+    /// Adjoint panel apply into caller storage (shared by the trait's
+    /// transpose apply and the batched objective's gradient path, which
+    /// writes straight into the reused gradient buffer).
+    fn transpose_panel_into(&self, panel: &[f64], batch: usize, out: &mut [f64]) {
+        let mut ws = self.take_workspace();
+        self.engine.apply_sqrt_transpose_panel_exec(panel, batch, &self.exec, &mut ws, out);
+        self.put_workspace(ws);
     }
 }
 
@@ -203,6 +250,10 @@ mod tests {
             let got = e.apply_sqrt_panel(&panel, 5).unwrap();
             assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
+        // Scoped spawns and the pool serve identical bytes too.
+        let e = native().with_exec(Exec::scoped(4));
+        let got = e.apply_sqrt_panel(&panel, 5).unwrap();
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
         // Bad panel shapes are typed errors.
         assert!(matches!(
             base.apply_sqrt_panel(&panel[1..], 5),
@@ -255,6 +306,66 @@ mod tests {
     }
 
     #[test]
+    fn native_loss_grad_panel_matches_stacked_singles_bitwise() {
+        let e = native().with_apply_threads(2);
+        let dof = e.total_dof();
+        let mut rng = Rng::new(44);
+        let y = rng.standard_normal_vec(e.obs_indices().len());
+        let sigma = 0.25;
+        for batch in [1usize, 3, 8] {
+            let panel = rng.standard_normal_vec(batch * dof);
+            let (losses, grads) = e.loss_grad_panel(&panel, batch, &y, sigma).unwrap();
+            for b in 0..batch {
+                let (l, g) = e.loss_grad(&panel[b * dof..(b + 1) * dof], &y, sigma).unwrap();
+                assert_eq!(losses[b].to_bits(), l.to_bits(), "loss lane {b} of {batch}");
+                assert!(
+                    grads[b * dof..(b + 1) * dof]
+                        .iter()
+                        .zip(&g)
+                        .all(|(a, c)| a.to_bits() == c.to_bits()),
+                    "grad lane {b} of {batch} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_infer_multi_single_chain_reproduces_infer() {
+        let e = native();
+        let mut rng = Rng::new(6);
+        let y = rng.standard_normal_vec(e.obs_indices().len());
+        let (field, trace) = e.infer(&y, 0.4, 30, 0.1).unwrap();
+        let mi = e.infer_multi(&y, 0.4, 30, 0.1, 1, 999).unwrap();
+        assert_eq!(mi.best, 0);
+        assert_eq!(mi.fields[0], field);
+        assert_eq!(mi.traces[0].losses, trace.losses);
+    }
+
+    #[test]
+    fn native_infer_multi_restarts_descend_and_pick_best() {
+        let e = native().with_apply_threads(2);
+        let mut rng = Rng::new(7);
+        let y = rng.standard_normal_vec(e.obs_indices().len());
+        let mi = e.infer_multi(&y, 0.4, 50, 0.1, 3, 17).unwrap();
+        assert_eq!(mi.fields.len(), 3);
+        assert_eq!(mi.traces.len(), 3);
+        assert!(mi.best < 3);
+        let finals: Vec<f64> = mi.traces.iter().map(|t| *t.losses.last().unwrap()).collect();
+        for (b, t) in mi.traces.iter().enumerate() {
+            assert_eq!(t.losses.len(), 50);
+            assert!(t.losses[49] < t.losses[0], "chain {b} did not descend");
+        }
+        assert!(finals.iter().all(|&l| l >= finals[mi.best]));
+        assert_eq!(mi.best_field().len(), e.n_points());
+        // Deterministic per seed, seed-sensitive in the restart chains.
+        let mi2 = e.infer_multi(&y, 0.4, 50, 0.1, 3, 17).unwrap();
+        assert_eq!(mi.fields, mi2.fields);
+        let mi3 = e.infer_multi(&y, 0.4, 50, 0.1, 3, 18).unwrap();
+        assert_eq!(mi.fields[0], mi3.fields[0], "chain 0 starts at ξ=0, seed-independent");
+        assert_ne!(mi.fields[1], mi3.fields[1], "restart chains must follow the seed");
+    }
+
+    #[test]
     fn native_loss_grad_validates_inputs() {
         let e = native();
         let xi = vec![0.0; e.total_dof()];
@@ -262,6 +373,14 @@ mod tests {
         assert!(e.loss_grad(&xi[1..], &y, 0.1).is_err());
         assert!(e.loss_grad(&xi, &y[1..], 0.1).is_err());
         assert!(e.loss_grad(&xi, &y, -1.0).is_err());
+        assert!(e.infer_multi(&y, 0.1, 0, 0.1, 1, 0).is_err());
+        assert!(e.infer_multi(&y, 0.1, 5, 0.1, 0, 0).is_err());
+        // Unbounded client-supplied chain counts are rejected, not
+        // allocated.
+        assert!(matches!(
+            e.infer_multi(&y, 0.1, 5, 0.1, crate::model::MAX_INFER_RESTARTS + 1, 0),
+            Err(IcrError::InvalidParameter(_))
+        ));
     }
 
     #[test]

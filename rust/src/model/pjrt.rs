@@ -7,6 +7,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ModelConfig;
 use crate::error::IcrError;
+use crate::parallel::{par_threads, Exec};
 use crate::runtime::PjrtService;
 
 use super::{check_loss_grad_args, default_obs_indices, GpModel, ModelDescriptor};
@@ -22,6 +23,9 @@ pub struct PjrtEngine {
     obs: Vec<usize>,
     kernel_spec: String,
     chart_spec: String,
+    /// Executor for host-side panel staging (the executable itself runs
+    /// on the thread-confined PJRT actor).
+    exec: Exec,
 }
 
 impl PjrtEngine {
@@ -71,7 +75,15 @@ impl PjrtEngine {
             obs: default_obs_indices(n),
             kernel_spec: model.kernel_spec.clone(),
             chart_spec: model.chart_spec.clone(),
+            exec: Exec::Serial,
         })
+    }
+
+    /// Run host-side panel staging on an explicit executor (the
+    /// coordinator shares one pooled `Exec` across every hosted model).
+    pub fn with_exec(mut self, exec: Exec) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Compile-and-validate eagerly (otherwise the first request pays).
@@ -137,7 +149,19 @@ impl GpModel for PjrtEngine {
                 .map(|s| (s.name.clone(), s.meta_usize("batch").unwrap_or(1)));
             if let Some((name, b)) = spec {
                 let mut flat = vec![0.0; b * self.dof];
-                flat[..batch * self.dof].copy_from_slice(panel);
+                // Stage lanes across the executor; a big panel is a pure
+                // memory copy, which parallelizes trivially and
+                // deterministically.
+                let t = par_threads(self.exec.threads(), batch, self.dof);
+                self.exec.run_chunked(
+                    &mut flat[..batch * self.dof],
+                    self.dof,
+                    batch,
+                    t,
+                    |b0, count, chunk| {
+                        chunk.copy_from_slice(&panel[b0 * self.dof..(b0 + count) * self.dof]);
+                    },
+                );
                 let out = self.service.execute_f64(&name, &[&flat]).map_err(IcrError::from)?;
                 return Ok(out[0][..batch * self.n].to_vec());
             }

@@ -1,11 +1,26 @@
-//! Deterministic scoped-thread partitioning for the panel hot paths.
+//! Deterministic parallel execution for the panel hot paths.
 //!
 //! Every parallel section in the crate follows one discipline: the output
-//! array is split into *disjoint contiguous chunks* (one per thread) and
-//! each output element is computed by exactly one thread with exactly the
-//! arithmetic the serial path would use. No atomics, no reductions across
-//! threads — which is what makes the multi-apply bit-for-bit identical to
-//! the serial path at every thread count (see `DESIGN.md` §6).
+//! array is split into *disjoint contiguous chunks* (one per task) and
+//! each output element is computed by exactly one task with exactly the
+//! arithmetic the serial path would use. No atomics on data, no
+//! reductions across threads — which is what makes the multi-apply
+//! bit-for-bit identical to the serial path at every thread count (see
+//! `DESIGN.md` §6/§7).
+//!
+//! Two executors implement the discipline:
+//! - [`run_chunked`] spawns scoped threads per section (the original
+//!   baseline; zero setup cost, per-section spawn cost);
+//! - [`WorkerPool`] keeps long-lived threads parked on a condvar and
+//!   dispatches the same chunk tasks to them (microsecond dispatch, the
+//!   serving default).
+//!
+//! [`Exec`] selects between them (plus an inline serial mode) and is the
+//! handle engines and models carry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Resolve a thread-count knob: `0` means "one per available core".
 pub fn resolve_threads(requested: usize) -> usize {
@@ -14,6 +29,13 @@ pub fn resolve_threads(requested: usize) -> usize {
     } else {
         requested
     }
+}
+
+/// Default `apply_threads` for builders/configs: the `ICR_APPLY_THREADS`
+/// environment variable when set (CI forces the whole test suite through
+/// the worker pool this way), else `1`.
+pub fn default_apply_threads() -> usize {
+    std::env::var("ICR_APPLY_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
 }
 
 /// Maximum lanes per interleaved block — the widest monomorphized panel
@@ -35,6 +57,85 @@ pub fn lane_block(rem: usize) -> usize {
         1
     }
 }
+
+/// Don't parallelize sections smaller than this many output elements: the
+/// dispatch round trip costs more than it saves. Shared by every panel
+/// call site so the gate can only change in one place.
+pub const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Effective thread count for a section of `items` outputs of `unit`
+/// elements each (gates small sections to the inline serial path).
+pub fn par_threads(threads: usize, items: usize, unit: usize) -> usize {
+    if threads <= 1 || items.saturating_mul(unit) < PAR_MIN_ELEMS {
+        1
+    } else {
+        threads
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CPU feature detection and the SIMD dispatch policy.
+// ---------------------------------------------------------------------------
+
+/// Target features detected once per process (used by the SIMD kernel
+/// dispatch and recorded in bench JSON so speedups are comparable across
+/// machines).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuFeatures {
+    /// Available hardware parallelism (`resolve_threads(0)`).
+    pub cores: usize,
+    pub avx2: bool,
+    pub fma: bool,
+}
+
+/// Detect target features (cached after the first call).
+pub fn cpu_features() -> CpuFeatures {
+    static FEATURES: OnceLock<CpuFeatures> = OnceLock::new();
+    *FEATURES.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        let (avx2, fma) = (
+            std::arch::is_x86_feature_detected!("avx2"),
+            std::arch::is_x86_feature_detected!("fma"),
+        );
+        #[cfg(not(target_arch = "x86_64"))]
+        let (avx2, fma) = (false, false);
+        CpuFeatures { cores: resolve_threads(0), avx2, fma }
+    })
+}
+
+/// Whether the explicit SIMD microkernels are usable on this CPU. The
+/// dispatch requires AVX2+FMA hardware; the kernels themselves use
+/// separate mul+add (never fused ops) so their results stay bit-for-bit
+/// identical to the scalar path (`DESIGN.md` §7).
+pub fn simd_supported() -> bool {
+    let f = cpu_features();
+    f.avx2 && f.fma
+}
+
+/// 0 = forced off, 1 = forced on (if supported), 2 = auto (on if supported).
+static SIMD_OVERRIDE: AtomicU8 = AtomicU8::new(2);
+
+/// Whether engines built *now* select the SIMD microkernels. Engines
+/// sample this once at build time; [`set_simd_enabled`] lets tests and
+/// benches force the scalar path for equivalence comparisons. Because
+/// SIMD and scalar kernels are bit-for-bit identical, toggling this is
+/// observable only in performance.
+pub fn simd_enabled() -> bool {
+    match SIMD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => false,
+        _ => simd_supported(),
+    }
+}
+
+/// Force the SIMD dispatch on (subject to hardware support) or off for
+/// engines built after this call. Test/bench knob.
+pub fn set_simd_enabled(on: bool) {
+    SIMD_OVERRIDE.store(u8::from(on), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Scoped-thread executor (the per-section spawn baseline).
+// ---------------------------------------------------------------------------
 
 /// Run `f` over `items` work items whose outputs are contiguous runs of
 /// `unit` elements in `out` (`out.len() == items * unit`), split across up
@@ -78,6 +179,287 @@ where
     });
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool.
+// ---------------------------------------------------------------------------
+
+/// Raw pointer wrappers that let chunk tasks cross thread boundaries. The
+/// pool's completion latch guarantees the pointees outlive every access.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// One dispatched parallel section: `n_tasks` chunk tasks claimed by
+/// whichever threads get there first. Chunk *contents* are a pure
+/// function of the task index (closed-form balanced partition), so the
+/// claiming order cannot affect results.
+struct Job {
+    task: RawTask,
+    n_tasks: usize,
+    /// Next unclaimed task index (may overshoot `n_tasks`).
+    next: AtomicUsize,
+    /// Tasks not yet finished; the last finisher latches `done`.
+    pending: AtomicUsize,
+    poisoned: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Claim and run tasks until the job is exhausted.
+    fn run_tasks(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_tasks {
+                return;
+            }
+            // SAFETY: the submitter blocks in `wait_done` until `pending`
+            // hits zero, so the closure (and everything it borrows) is
+            // alive for every claimed task.
+            let f = unsafe { &*self.task.0 };
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+                self.poisoned.store(true, Ordering::Release);
+            }
+            if self.pending.fetch_sub(1, Ordering::Release) == 1 {
+                std::sync::atomic::fence(Ordering::Acquire);
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn wait_done(&self) {
+        let mut d = self.done.lock().unwrap();
+        while !*d {
+            d = self.done_cv.wait(d).unwrap();
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent pool of worker threads parked on a condvar, dispatching
+/// the same disjoint-contiguous-chunk tasks [`run_chunked`] spawns scoped
+/// threads for. Replacing the per-section spawns with a parked-thread
+/// wakeup is what makes window parallelism profitable at small N
+/// (`DESIGN.md` §7).
+///
+/// The pool spawns `threads - 1` workers; the submitting thread always
+/// participates as the remaining lane, so a pool of width 1 runs
+/// everything inline. Dropping the pool joins every worker. The pool is
+/// shared (`Arc`) across engines, models and coordinator workers;
+/// concurrent submissions queue and drain FIFO.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    width: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WorkerPool(width={})", self.width)
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool of `threads` total execution lanes (`0` = one per
+    /// available core): `threads - 1` parked workers plus the submitter.
+    pub fn new(threads: usize) -> WorkerPool {
+        let width = resolve_threads(threads).max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..width)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("icr-pool-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, width }
+    }
+
+    /// Total execution lanes (spawned workers + the submitting thread).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Dispatch one parallel section: identical contract and identical
+    /// results to [`run_chunked`] (the partition is the same balanced
+    /// split, in closed form). The submitter claims chunks alongside the
+    /// workers and returns only when every chunk is finished.
+    pub fn run_chunked<F>(&self, out: &mut [f64], unit: usize, items: usize, threads: usize, f: F)
+    where
+        F: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        debug_assert_eq!(out.len(), items * unit, "run_chunked: output/items mismatch");
+        let t = threads.min(self.width).min(items).max(1);
+        if t <= 1 {
+            f(0, items, out);
+            return;
+        }
+        // Closed form of run_chunked's sequential balanced split: task i
+        // covers q + (i < r) items starting at i*q + min(i, r).
+        let (q, r) = (items / t, items % t);
+        let base = SendPtr(out.as_mut_ptr());
+        let chunk_task = move |i: usize| {
+            let start = i * q + i.min(r);
+            let count = q + usize::from(i < r);
+            // SAFETY: tasks cover disjoint `[start*unit, (start+count)*unit)`
+            // ranges of `out`, which the submitter keeps borrowed until the
+            // job completes.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(start * unit), count * unit) };
+            f(start, count, chunk);
+        };
+        let taskref: &(dyn Fn(usize) + Sync) = &chunk_task;
+        // SAFETY: the fake 'static lifetime never escapes this call — the
+        // completion latch below keeps `chunk_task` alive for every access.
+        let taskref: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(taskref) };
+        let job = Arc::new(Job {
+            task: RawTask(taskref as *const _),
+            n_tasks: t,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(t),
+            poisoned: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        job.run_tasks();
+        job.wait_done();
+        {
+            // Drop the queue's reference if no worker got to it.
+            let mut q = self.shared.queue.lock().unwrap();
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if job.poisoned.load(Ordering::Acquire) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        // Skip fully claimed jobs (their submitter cleans up too; this is
+        // just eager housekeeping), take the first active one.
+        while q.front().is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.n_tasks) {
+            q.pop_front();
+        }
+        if let Some(job) = q.front().cloned() {
+            drop(q);
+            job.run_tasks();
+            q = shared.queue.lock().unwrap();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        q = shared.work_cv.wait(q).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor handle.
+// ---------------------------------------------------------------------------
+
+/// How panel sections execute: inline, scoped spawns, or the persistent
+/// pool. Engines and models carry an `Exec`; the coordinator builds one
+/// pooled `Exec` and shares it across every hosted model.
+#[derive(Clone, Debug, Default)]
+pub enum Exec {
+    /// Everything inline on the calling thread.
+    #[default]
+    Serial,
+    /// `std::thread::scope` spawns per section (the pre-pool baseline,
+    /// kept for benchmarking and as a fallback).
+    Scoped(usize),
+    /// Dispatch to a persistent [`WorkerPool`].
+    Pool(Arc<WorkerPool>),
+}
+
+impl Exec {
+    /// Scoped-spawn executor with `threads` lanes (`0` = one per core).
+    pub fn scoped(threads: usize) -> Exec {
+        let t = resolve_threads(threads);
+        if t <= 1 {
+            Exec::Serial
+        } else {
+            Exec::Scoped(t)
+        }
+    }
+
+    /// Pooled executor with its own `threads`-lane pool (`0` = one per
+    /// core). A single lane needs no pool and degrades to `Serial`.
+    pub fn pooled(threads: usize) -> Exec {
+        let t = resolve_threads(threads);
+        if t <= 1 {
+            Exec::Serial
+        } else {
+            Exec::Pool(Arc::new(WorkerPool::new(t)))
+        }
+    }
+
+    /// Executor sharing an existing pool.
+    pub fn with_pool(pool: &Arc<WorkerPool>) -> Exec {
+        if pool.width() <= 1 {
+            Exec::Serial
+        } else {
+            Exec::Pool(pool.clone())
+        }
+    }
+
+    /// Execution lanes this executor can bring to one section.
+    pub fn threads(&self) -> usize {
+        match self {
+            Exec::Serial => 1,
+            Exec::Scoped(t) => *t,
+            Exec::Pool(p) => p.width(),
+        }
+    }
+
+    /// Run one chunked section through this executor with at most
+    /// `threads` lanes (callers pass the [`par_threads`]-gated count).
+    /// All three variants produce bit-identical results.
+    pub fn run_chunked<F>(&self, out: &mut [f64], unit: usize, items: usize, threads: usize, f: F)
+    where
+        F: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        match self {
+            Exec::Serial => run_chunked(out, unit, items, 1, f),
+            Exec::Scoped(t) => run_chunked(out, unit, items, threads.min(*t), f),
+            Exec::Pool(p) => p.run_chunked(out, unit, items, threads, f),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +468,26 @@ mod tests {
     fn resolve_threads_zero_is_auto() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn par_threads_gates_small_sections() {
+        assert_eq!(par_threads(4, 10, 8), 1);
+        assert_eq!(par_threads(4, 4096, 8), 4);
+        assert_eq!(par_threads(1, 1 << 20, 8), 1);
+    }
+
+    #[test]
+    fn cpu_features_are_coherent() {
+        let f = cpu_features();
+        assert!(f.cores >= 1);
+        // The SIMD dispatch may only claim support when both features are
+        // detected; the runtime toggle can only narrow it.
+        assert_eq!(simd_supported(), f.avx2 && f.fma);
+        set_simd_enabled(false);
+        assert!(!simd_enabled());
+        set_simd_enabled(true);
+        assert_eq!(simd_enabled(), simd_supported());
     }
 
     #[test]
@@ -130,5 +532,130 @@ mod tests {
             run_chunked(&mut par, unit, items, t, work);
             assert!(serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
+    }
+
+    #[test]
+    fn pool_matches_scoped_partition_and_bits() {
+        // The pool's closed-form partition must reproduce run_chunked's
+        // sequential balanced split, and therefore its bits.
+        let work = |start: usize, count: usize, chunk: &mut [f64]| {
+            for i in 0..count {
+                chunk[i] = ((start + i) as f64 * 0.61).sin() * 1e2;
+            }
+        };
+        for items in [1usize, 2, 7, 16, 101, 1000] {
+            let mut serial = vec![0.0; items];
+            run_chunked(&mut serial, 1, items, 1, work);
+            for threads in [2usize, 3, 4, 8] {
+                let pool = WorkerPool::new(threads);
+                let mut out = vec![0.0; items];
+                pool.run_chunked(&mut out, 1, items, threads, work);
+                assert!(
+                    serial.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "pool diverged at items={items} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_and_joins_on_drop() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.width(), 4);
+        // Many submissions through one pool, interleaved sizes.
+        for round in 0..50usize {
+            let items = 1 + (round % 13);
+            let mut out = vec![0.0; items * 2];
+            pool.run_chunked(&mut out, 2, items, 4, |start, count, chunk| {
+                for i in 0..count {
+                    chunk[i * 2] = (start + i) as f64;
+                    chunk[i * 2 + 1] = round as f64;
+                }
+            });
+            for i in 0..items {
+                assert_eq!(out[i * 2], i as f64);
+                assert_eq!(out[i * 2 + 1], round as f64);
+            }
+        }
+        drop(pool); // must join all workers without hanging
+    }
+
+    #[test]
+    fn pool_handles_concurrent_submitters() {
+        let pool = Arc::new(WorkerPool::new(3));
+        std::thread::scope(|sc| {
+            for s in 0..4u64 {
+                let pool = pool.clone();
+                sc.spawn(move || {
+                    for round in 0..20usize {
+                        let items = 5 + round;
+                        let mut out = vec![0.0; items];
+                        pool.run_chunked(&mut out, 1, items, 3, |start, count, chunk| {
+                            for i in 0..count {
+                                chunk[i] = (start + i) as f64 + s as f64 * 1e6;
+                            }
+                        });
+                        for (i, v) in out.iter().enumerate() {
+                            assert_eq!(*v, i as f64 + s as f64 * 1e6);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_width_one_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.width(), 1);
+        let mut out = vec![0.0; 8];
+        pool.run_chunked(&mut out, 1, 8, 4, |start, count, chunk| {
+            for i in 0..count {
+                chunk[i] = (start + i) as f64;
+            }
+        });
+        assert_eq!(out[7], 7.0);
+    }
+
+    #[test]
+    fn exec_variants_agree_bitwise() {
+        let work = |start: usize, count: usize, chunk: &mut [f64]| {
+            for i in 0..count {
+                chunk[i] = ((start + i) as f64 * 1.37).cos();
+            }
+        };
+        let items = 64;
+        let mut want = vec![0.0; items];
+        Exec::Serial.run_chunked(&mut want, 1, items, 1, work);
+        for exec in [Exec::scoped(4), Exec::pooled(4)] {
+            assert_eq!(exec.threads(), 4);
+            let mut got = vec![0.0; items];
+            exec.run_chunked(&mut got, 1, items, 4, work);
+            assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        assert_eq!(Exec::scoped(1).threads(), 1);
+        assert!(matches!(Exec::pooled(1), Exec::Serial));
+    }
+
+    #[test]
+    fn pool_propagates_task_panics() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = vec![0.0; 4];
+            pool.run_chunked(&mut out, 1, 4, 2, |start, _count, _chunk| {
+                if start == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "submitter must observe the task panic");
+        // The pool survives a poisoned job.
+        let mut out = vec![0.0; 4];
+        pool.run_chunked(&mut out, 1, 4, 2, |start, count, chunk| {
+            for i in 0..count {
+                chunk[i] = (start + i) as f64;
+            }
+        });
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0]);
     }
 }

@@ -176,6 +176,39 @@ fn infer_descends_on_every_family() {
 }
 
 #[test]
+fn infer_multi_single_chain_matches_infer_everywhere() {
+    // infer() is defined as chain 0 of infer_multi(); families must honor
+    // that identity exactly, and multi-restart runs must return per-chain
+    // traces with a valid best index.
+    for m in models() {
+        let name = m.name();
+        let mut rng = Rng::new(37);
+        let y = rng.standard_normal_vec(m.obs_indices().len());
+        let (field, trace) = match m.infer(&y, 0.5, 30, 0.1) {
+            Ok(r) => r,
+            Err(e) => {
+                assert_eq!(e.kind(), "unsupported", "{name}: {e}");
+                continue;
+            }
+        };
+        let mi = m.infer_multi(&y, 0.5, 30, 0.1, 1, 4242).unwrap();
+        assert_eq!(mi.fields.len(), 1, "{name}");
+        assert_eq!(mi.fields[0], field, "{name}: single-chain infer_multi diverged");
+        assert_eq!(mi.traces[0].losses, trace.losses, "{name}");
+        assert_eq!(mi.best, 0, "{name}");
+
+        let mi = m.infer_multi(&y, 0.5, 30, 0.1, 3, 4242).unwrap();
+        assert_eq!(mi.fields.len(), 3, "{name}");
+        assert_eq!(mi.traces.len(), 3, "{name}");
+        assert!(mi.best < 3, "{name}");
+        assert_eq!(mi.fields[0], field, "{name}: chain 0 must still start at ξ = 0");
+        let finals: Vec<f64> = mi.traces.iter().map(|t| *t.losses.last().unwrap()).collect();
+        assert!(finals.iter().all(|&l| l >= finals[mi.best]), "{name}: best not minimal");
+        assert_eq!(mi.best_field().len(), m.n_points(), "{name}");
+    }
+}
+
+#[test]
 fn shape_errors_are_typed() {
     for m in models() {
         let name = m.name();

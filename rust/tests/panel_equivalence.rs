@@ -1,9 +1,11 @@
 //! The determinism contract of the blocked panel execution path
-//! (`DESIGN.md` §6): multi-excitation applies are **bit-for-bit** the
+//! (`DESIGN.md` §6/§7): multi-excitation applies are **bit-for-bit** the
 //! stacked single applies — forward and adjoint, across every engine
 //! family behind [`GpModel`], thread counts {1, 2, 4}, batch sizes
-//! {1, 3, 8}, and both stationary (affine chart) and charted (LogChart)
-//! geometries.
+//! {1, 3, 8}, both stationary (affine chart) and charted (LogChart)
+//! geometries, every executor (serial / scoped spawns / persistent
+//! worker pool), SIMD microkernels on or off, and the batched
+//! `loss_grad` panel.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -13,6 +15,7 @@ use icr::config::Backend;
 use icr::icr::{IcrEngine, RefinementParams};
 use icr::kernels::{Kernel, Matern};
 use icr::model::{GpModel, ModelBuilder};
+use icr::parallel::{Exec, WorkerPool};
 use icr::rng::Rng;
 use icr::testutil::{prop_check, PropConfig};
 
@@ -23,29 +26,28 @@ fn bits_eq(a: &[f64], b: &[f64]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
-/// Every family constructible in this environment, at a given panel
-/// thread count: native on the charted paper geometry, native stationary
-/// (identity chart), KISS-GP, exact dense, and PJRT when artifacts exist.
-fn families(threads: usize) -> Vec<(&'static str, Arc<dyn GpModel>)> {
-    let mk = |backend, chart: &str| {
-        ModelBuilder::new()
-            .windows(3, 2)
-            .levels(3)
-            .target_n(40)
-            .chart(chart)
-            .backend(backend)
-            .apply_threads(threads)
-            .build()
-            .unwrap()
-    };
+/// The shared small geometry every family models.
+fn family_builder(backend: Backend, chart: &str) -> ModelBuilder {
+    ModelBuilder::new().windows(3, 2).levels(3).target_n(40).chart(chart).backend(backend)
+}
+
+/// Every family constructible in this environment, with `customize`
+/// applied to every builder (PJRT included, so executor/SIMD/thread
+/// knobs are exercised there too when artifacts exist): native on the
+/// charted paper geometry, native stationary (identity chart), KISS-GP,
+/// exact dense, and PJRT.
+fn families_with(
+    customize: impl Fn(ModelBuilder) -> ModelBuilder,
+) -> Vec<(&'static str, Arc<dyn GpModel>)> {
+    let mk = |b: ModelBuilder| customize(b).build().unwrap();
     let mut out = vec![
-        ("native-charted", mk(Backend::Native, "paper_log")),
-        ("native-stationary", mk(Backend::Native, "identity")),
-        ("kissgp", mk(Backend::Kissgp, "paper_log")),
-        ("exact", mk(Backend::Exact, "paper_log")),
+        ("native-charted", mk(family_builder(Backend::Native, "paper_log"))),
+        ("native-stationary", mk(family_builder(Backend::Native, "identity"))),
+        ("kissgp", mk(family_builder(Backend::Kissgp, "paper_log"))),
+        ("exact", mk(family_builder(Backend::Exact, "paper_log"))),
     ];
     if Path::new("artifacts/manifest.json").exists() {
-        match ModelBuilder::new().backend(Backend::Pjrt).apply_threads(threads).build() {
+        match customize(ModelBuilder::new().backend(Backend::Pjrt)).build() {
             Ok(m) => out.push(("pjrt", m)),
             Err(e) => eprintln!("SKIP pjrt panel equivalence: {e}"),
         }
@@ -53,10 +55,17 @@ fn families(threads: usize) -> Vec<(&'static str, Arc<dyn GpModel>)> {
     out
 }
 
+/// Families at a given panel thread count (each with its own pool).
+fn families(threads: usize) -> Vec<(&'static str, Arc<dyn GpModel>)> {
+    families_with(|b| b.apply_threads(threads))
+}
+
 #[test]
 fn panel_equals_stacked_singles_across_families() {
-    // Reference lanes from the thread-count-1 models; every (family,
-    // batch, threads) combination must reproduce them exactly.
+    // Reference lanes are true ONE-LANE panel applies (apply_sqrt_batch
+    // would route through the same multi-lane call under test, proving
+    // nothing); every (family, batch, threads) combination must
+    // reproduce the single-lane bits exactly.
     for &threads in &THREADS {
         for (name, m) in families(threads) {
             let dof = m.total_dof();
@@ -67,14 +76,10 @@ fn panel_equals_stacked_singles_across_families() {
                     (0..batch * dof).map(|_| lane_rng.standard_normal()).collect();
                 let flat = m.apply_sqrt_panel(&panel, batch).unwrap();
                 assert_eq!(flat.len(), batch * n, "{name} b{batch} t{threads}");
-                let singles = m
-                    .apply_sqrt_batch(
-                        &panel.chunks(dof).map(<[f64]>::to_vec).collect::<Vec<_>>(),
-                    )
-                    .unwrap();
-                for (b, want) in singles.iter().enumerate() {
+                for b in 0..batch {
+                    let want = m.apply_sqrt_panel(&panel[b * dof..(b + 1) * dof], 1).unwrap();
                     assert!(
-                        bits_eq(&flat[b * n..(b + 1) * n], want),
+                        bits_eq(&flat[b * n..(b + 1) * n], &want),
                         "{name}: panel lane {b} (b={batch}, t={threads}) diverged"
                     );
                 }
@@ -226,6 +231,177 @@ fn prop_engine_panel_bitwise_across_random_geometries() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn pool_scoped_and_serial_executors_are_bitwise_identical() {
+    // The persistent worker pool, per-section scoped spawns and the
+    // inline serial path must serve identical bytes for every family ×
+    // batch × thread count — forward and adjoint. One shared pool is
+    // reused across all families, like the coordinator does.
+    let reference = families_with(|b| b.exec(Exec::Serial));
+    for &threads in &THREADS[1..] {
+        let pool = Arc::new(WorkerPool::new(threads));
+        let variants = [
+            ("scoped", families_with(|b| b.exec(Exec::scoped(threads)))),
+            ("pool", families_with(|b| b.exec(Exec::with_pool(&pool)))),
+        ];
+        for (exec_name, models) in variants {
+            for ((name, m), (ref_name, r)) in models.iter().zip(&reference) {
+                assert_eq!(name, ref_name);
+                let dof = m.total_dof();
+                let n = m.n_points();
+                for &batch in &BATCHES {
+                    let mut rng = Rng::new(0x5EED ^ batch as u64);
+                    let panel: Vec<f64> =
+                        (0..batch * dof).map(|_| rng.standard_normal()).collect();
+                    let want = r.apply_sqrt_panel(&panel, batch).unwrap();
+                    let got = m.apply_sqrt_panel(&panel, batch).unwrap();
+                    assert!(
+                        bits_eq(&got, &want),
+                        "{name}: {exec_name} t{threads} b{batch} forward diverged"
+                    );
+                    let gpanel: Vec<f64> =
+                        (0..batch * n).map(|_| rng.standard_normal()).collect();
+                    match (
+                        m.apply_sqrt_transpose_panel(&gpanel, batch),
+                        r.apply_sqrt_transpose_panel(&gpanel, batch),
+                    ) {
+                        (Ok(got), Ok(want)) => assert!(
+                            bits_eq(&got, &want),
+                            "{name}: {exec_name} t{threads} b{batch} adjoint diverged"
+                        ),
+                        (Err(e), Err(_)) => assert_eq!(e.kind(), "unsupported", "{name}"),
+                        (a, b) => panic!("{name}: adjoint support differs: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_and_scalar_models_are_bitwise_identical() {
+    // The AVX2 microkernels vs the scalar kernels, across every family ×
+    // batch (8-lane and 4-lane blocks both covered) — forward, adjoint
+    // and the batched objective. On CPUs without AVX2 both builds run
+    // scalar and the assertions are trivially true.
+    let scalar = families_with(|b| b.simd(false));
+    let simd = families_with(|b| b.simd(true));
+    for ((name, s), (_, v)) in scalar.iter().zip(&simd) {
+        let dof = s.total_dof();
+        let n = s.n_points();
+        for &batch in &[1usize, 3, 4, 8, 12] {
+            let mut rng = Rng::new(0x51D ^ batch as u64);
+            let panel: Vec<f64> = (0..batch * dof).map(|_| rng.standard_normal()).collect();
+            let want = s.apply_sqrt_panel(&panel, batch).unwrap();
+            let got = v.apply_sqrt_panel(&panel, batch).unwrap();
+            assert!(bits_eq(&got, &want), "{name}: simd b{batch} forward diverged");
+            let gpanel: Vec<f64> = (0..batch * n).map(|_| rng.standard_normal()).collect();
+            if let (Ok(want), Ok(got)) = (
+                s.apply_sqrt_transpose_panel(&gpanel, batch),
+                v.apply_sqrt_transpose_panel(&gpanel, batch),
+            ) {
+                assert!(bits_eq(&got, &want), "{name}: simd b{batch} adjoint diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn loss_grad_panel_is_bitwise_stacked_singles_across_families() {
+    // The batched objective must be bit-for-bit the per-chain loss_grad
+    // at every (family, batch, threads) — losses and gradient lanes.
+    for &threads in &THREADS {
+        for (name, m) in families(threads) {
+            let dof = m.total_dof();
+            let mut rng = Rng::new(0x10E5 + threads as u64);
+            let y = rng.standard_normal_vec(m.obs_indices().len());
+            let sigma = 0.3;
+            for &batch in &BATCHES {
+                let panel = rng.standard_normal_vec(batch * dof);
+                let (losses, grads) = match m.loss_grad_panel(&panel, batch, &y, sigma) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // PJRT without a loss-grad artifact: typed refusal.
+                        assert_eq!(e.kind(), "unsupported", "{name}: {e}");
+                        continue;
+                    }
+                };
+                assert_eq!(losses.len(), batch, "{name}");
+                assert_eq!(grads.len(), batch * dof, "{name}");
+                for b in 0..batch {
+                    let (l, g) =
+                        m.loss_grad(&panel[b * dof..(b + 1) * dof], &y, sigma).unwrap();
+                    assert_eq!(
+                        losses[b].to_bits(),
+                        l.to_bits(),
+                        "{name}: loss lane {b} (b={batch}, t={threads}) diverged"
+                    );
+                    assert!(
+                        bits_eq(&grads[b * dof..(b + 1) * dof], &g),
+                        "{name}: grad lane {b} (b={batch}, t={threads}) diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn worker_pool_lifecycle_join_and_reuse_across_models() {
+    // One pool shared across models of different families and shapes:
+    // repeated submissions stay correct, models can be dropped while the
+    // pool lives on, and dropping the pool joins every worker without
+    // hanging.
+    let pool = Arc::new(WorkerPool::new(4));
+    assert_eq!(pool.width(), 4);
+    let exec = Exec::with_pool(&pool);
+    let serial = ModelBuilder::new()
+        .windows(5, 4)
+        .levels(3)
+        .target_n(60)
+        .exec(Exec::Serial)
+        .build()
+        .unwrap();
+    let want = serial.sample(8, 3).unwrap();
+    for round in 0..3 {
+        let a = ModelBuilder::new()
+            .windows(5, 4)
+            .levels(3)
+            .target_n(60)
+            .exec(exec.clone())
+            .build()
+            .unwrap();
+        let b = ModelBuilder::new()
+            .windows(3, 2)
+            .levels(2)
+            .target_n(24)
+            .backend(Backend::Exact)
+            .exec(exec.clone())
+            .build()
+            .unwrap();
+        assert_eq!(a.sample(8, 3).unwrap(), want, "round {round}");
+        let bn = b.n_points();
+        let panel: Vec<f64> = (0..8 * bn).map(|i| (i as f64 * 0.17).sin()).collect();
+        let flat = b.apply_sqrt_panel(&panel, 8).unwrap();
+        let single = b.apply_sqrt_panel(&panel[..bn], 1).unwrap();
+        assert!(bits_eq(&flat[..bn], &single), "round {round}: exact lane 0 diverged");
+        // Models dropped here; the pool must survive and stay usable.
+    }
+    // Still usable directly after every model is gone.
+    let mut out = vec![0.0; 64];
+    pool.run_chunked(&mut out, 1, 64, 4, |start, count, chunk| {
+        for i in 0..count {
+            chunk[i] = (start + i) as f64;
+        }
+    });
+    assert_eq!(out[63], 63.0);
+    let weak = Arc::downgrade(&pool);
+    drop(exec);
+    drop(pool);
+    // Every Exec clone released its Arc and drop joined the workers.
+    assert!(weak.upgrade().is_none(), "pool leaked a reference");
 }
 
 #[test]

@@ -1,11 +1,13 @@
 //! Whole-stack correctness oracle: the coordinator's MAP inference with
 //! the ICR prior must approach the *closed-form* GP posterior mean (with
 //! the exact kernel) to the accuracy of `K_ICR ≈ K` — tying the paper's
-//! Fig. 3 accuracy claim to actual downstream inference quality.
+//! Fig. 3 accuracy claim to actual downstream inference quality. The
+//! multi-chain variant checks the batched `infer_multi` sweep against
+//! the amortized multi-RHS oracle (`gp::exact_posterior_multi`).
 
 use icr::config::{ModelConfig, ServerConfig};
 use icr::coordinator::{Coordinator, FieldEngine, Request, Response};
-use icr::gp::exact_posterior;
+use icr::gp::{exact_posterior, exact_posterior_multi};
 use icr::kernels::Matern;
 use icr::rng::Rng;
 
@@ -58,5 +60,64 @@ fn icr_map_tracks_exact_posterior_mean() {
         rmse < 0.35 * mean_std.max(0.05) || rmse < 0.1 * scale,
         "ICR MAP vs exact posterior mean: RMSE {rmse} (scale {scale}, posterior std {mean_std})"
     );
+    coord.shutdown();
+}
+
+#[test]
+fn multi_restart_map_tracks_exact_posterior_from_every_chain() {
+    // The batched multi-chain sweep must converge every restart to the
+    // same (unimodal) posterior mode — checked against the amortized
+    // closed-form oracle on the same observation pattern.
+    let cfg = ServerConfig {
+        model: ModelConfig { n_csz: 5, n_fsz: 4, n_lvl: 3, target_n: 48, ..ModelConfig::default() },
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let engine = coord.engine();
+    let points = engine.domain_points();
+    let obs = engine.obs_indices();
+    let sigma = 0.1;
+
+    let kernel = Matern::nu32(1.0, 1.0);
+    let exact_gp = icr::gp::ExactGp::new(&kernel, &points).unwrap();
+    let mut rng = Rng::new(4111);
+    let truth = exact_gp.sample(&mut rng);
+    let y: Vec<f64> = obs.iter().map(|&i| truth[i] + sigma * rng.standard_normal()).collect();
+
+    let post = exact_posterior_multi(&kernel, &points, &obs, &y, 1, sigma)
+        .unwrap()
+        .remove(0);
+
+    let mi = match coord
+        .call(Request::InferMulti {
+            y_obs: y,
+            sigma_n: sigma,
+            steps: 1500,
+            lr: 0.05,
+            restarts: 3,
+            seed: 99,
+        })
+        .unwrap()
+    {
+        Response::MultiInference(mi) => mi,
+        other => panic!("{other:?}"),
+    };
+    let n = points.len();
+    let scale = (post.mean.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt();
+    let mean_std = (post.var.iter().sum::<f64>() / n as f64).sqrt();
+    for (b, field) in mi.fields.iter().enumerate() {
+        let rmse = (field
+            .iter()
+            .zip(&post.mean)
+            .map(|(a, c)| (a - c) * (a - c))
+            .sum::<f64>()
+            / n as f64)
+            .sqrt();
+        assert!(
+            rmse < 0.5 * mean_std.max(0.05) || rmse < 0.15 * scale,
+            "chain {b}: RMSE {rmse} vs exact posterior (scale {scale}, std {mean_std})"
+        );
+    }
     coord.shutdown();
 }

@@ -11,6 +11,7 @@ use icr::coordinator::protocol::{
 use icr::coordinator::{Coordinator, Request, Response};
 use icr::error::IcrError;
 use icr::json::{self, Value};
+use icr::model::MultiInference;
 use icr::optim::Trace;
 
 fn all_requests() -> Vec<Request> {
@@ -18,6 +19,14 @@ fn all_requests() -> Vec<Request> {
         Request::Sample { count: 3, seed: 1234 },
         Request::ApplySqrt { xi: vec![0.25, -1.5, 3.0] },
         Request::Infer { y_obs: vec![0.5, -0.5, 1.0], sigma_n: 0.125, steps: 40, lr: 0.05 },
+        Request::InferMulti {
+            y_obs: vec![0.25, -0.75],
+            sigma_n: 0.25,
+            steps: 30,
+            lr: 0.05,
+            restarts: 4,
+            seed: 17,
+        },
         Request::Stats,
     ]
 }
@@ -30,6 +39,14 @@ fn all_responses() -> Vec<Response> {
             field: vec![1.0, -1.0],
             trace: Trace { losses: vec![10.0, 5.0, 2.5], wall_s: 0.125 },
         },
+        Response::MultiInference(MultiInference {
+            fields: vec![vec![1.0, -1.0], vec![0.5, 0.25]],
+            traces: vec![
+                Trace { losses: vec![9.0, 3.0], wall_s: 0.25 },
+                Trace { losses: vec![8.0, 4.0], wall_s: 0.25 },
+            ],
+            best: 0,
+        }),
         Response::Stats(json::obj(vec![(
             "global",
             json::obj(vec![("counters", json::obj(vec![("requests_submitted", json::num(4.0))]))]),
