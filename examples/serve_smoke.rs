@@ -1,0 +1,139 @@
+//! Serve-smoke: the CI leg for the network serving subsystem.
+//!
+//! Starts a Unix-socket server with a 2-member replica set, drives 50
+//! mixed v1/v2 requests from 4 concurrent clients, checks the `stats`
+//! transport gauges, then drains gracefully. Exits non-zero on any
+//! failed frame or missing gauge.
+//!
+//! ```text
+//! cargo run --release --example serve_smoke
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use icr::config::{Backend, ModelConfig, ReplicaSpec, ServerConfig};
+use icr::coordinator::Coordinator;
+use icr::json::Value;
+use icr::net::{ListenAddr, NetServer, RoutePolicy};
+
+fn rpc(reader: &mut BufReader<UnixStream>, writer: &mut UnixStream, line: &str) -> Value {
+    writeln!(writer, "{line}").expect("send");
+    writer.flush().expect("flush");
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp).expect("recv");
+    assert!(n > 0, "server hung up mid-request");
+    Value::parse(&resp).unwrap_or_else(|e| panic!("bad frame {resp:?}: {e}"))
+}
+
+fn main() {
+    let sock = std::env::temp_dir().join(format!("icr_smoke_{}.sock", std::process::id()));
+    let cfg = ServerConfig {
+        model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() },
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 1000,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Unix(sock.clone()),
+        replicas: vec![ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 2 }],
+        route_policy: RoutePolicy::SeedAffinity,
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind");
+    println!("serve-smoke: listening on {}", server.local_addr());
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let n_obs = coord.engine().obs_indices().len();
+    let y_json = vec!["0.2"; n_obs].join(",");
+
+    // 4 concurrent clients × 12–13 mixed v1/v2 requests = 50 total.
+    let per_client = [13usize, 13, 12, 12];
+    std::thread::scope(|sc| {
+        for (t, &count) in per_client.iter().enumerate() {
+            let sock = sock.clone();
+            let y_json = y_json.clone();
+            sc.spawn(move || {
+                let stream = UnixStream::connect(&sock).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                let mut writer = stream;
+                for i in 0..count {
+                    let seed = (t * 100 + i) as u64;
+                    let v = match i % 4 {
+                        0 => rpc(
+                            &mut reader,
+                            &mut writer,
+                            &format!(r#"{{"op": "sample", "count": 1, "seed": {seed}}}"#),
+                        ),
+                        1 => rpc(
+                            &mut reader,
+                            &mut writer,
+                            &format!(
+                                r#"{{"v": 2, "op": "sample", "model": "gp", "id": {i}, "count": 2, "seed": {seed}}}"#
+                            ),
+                        ),
+                        2 => rpc(
+                            &mut reader,
+                            &mut writer,
+                            &format!(
+                                r#"{{"v": 2, "op": "infer_multi", "id": {i}, "y_obs": [{y_json}], "sigma": 0.5, "steps": 5, "lr": 0.1, "restarts": 2, "seed": {seed}}}"#
+                            ),
+                        ),
+                        _ => rpc(&mut reader, &mut writer, r#"{"v": 2, "op": "stats"}"#),
+                    };
+                    let failed = v.get("error").is_some()
+                        || v.get("ok").and_then(Value::as_bool) == Some(false);
+                    assert!(!failed, "client {t} request {i} failed: {}", v.to_json());
+                }
+            });
+        }
+    });
+
+    // A final connection reads the stats document and checks the
+    // transport gauges the dashboard scrapes.
+    let stream = UnixStream::connect(&sock).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let v = rpc(&mut reader, &mut writer, r#"{"v": 2, "op": "stats"}"#);
+    let stats = v.get_path("result.stats").expect("stats payload");
+    let gauge = |path: &str| {
+        stats
+            .get_path(path)
+            .and_then(Value::as_f64)
+            .unwrap_or_else(|| panic!("missing stats path {path}"))
+    };
+    assert!(gauge("transport.counters.connections_total") >= 5.0, "connections_total");
+    assert!(gauge("transport.counters.frames_in") >= 51.0, "frames_in");
+    assert!(gauge("transport.counters.frames_out") >= 50.0, "frames_out");
+    assert!(gauge("transport.gauges.connections_open") >= 1.0, "connections_open");
+    assert!(gauge("transport.gauges.queue_depth") >= 0.0, "queue_depth");
+    assert_eq!(
+        stats.get_path("replica_sets.policy").and_then(Value::as_str),
+        Some("seed_affinity")
+    );
+    let members = stats
+        .get_path("replica_sets.sets.gp.members")
+        .and_then(Value::as_array)
+        .expect("replica members");
+    assert_eq!(members.len(), 2);
+    let routed: f64 =
+        members.iter().filter_map(|m| m.get("routed").and_then(Value::as_f64)).sum();
+    assert!(routed >= 1.0, "no request was routed through the replica set");
+    drop(writer);
+    drop(reader);
+
+    // Graceful drain, then done.
+    stop.store(true, Ordering::SeqCst);
+    handle.join().expect("server thread").expect("server run");
+    std::fs::remove_file(&sock).ok();
+    println!(
+        "serve-smoke OK: 50 mixed v1/v2 requests over 4 concurrent clients, {} applies in {} batches (mean batch {:.2})",
+        coord.metrics().counter("applies_executed").get(),
+        coord.metrics().histogram("batch_applies").count(),
+        coord.metrics().counter("applies_executed").get() as f64
+            / coord.metrics().histogram("batch_applies").count().max(1) as f64
+    );
+}

@@ -1,0 +1,182 @@
+//! Serve-path throughput bench: a real Unix-socket server under
+//! synchronous JSONL clients, swept over connections × batch × model
+//! family. Reports requests/sec plus client-observed p50/p99 latency and
+//! the realized mean batch size (cross-connection coalescing). Run with
+//! `--json` to write `BENCH_serve.json` (overridable as `--json=path`),
+//! embedding the same hardware metadata block as `BENCH_apply.json`:
+//!
+//! ```text
+//! cargo bench --bench serve_throughput -- --json
+//! ```
+//!
+//! Knobs: `ICR_BENCH_SERVE_REQS` (requests per client, default 200).
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use icr::bench::hardware_json;
+use icr::config::{Backend, ModelConfig, ServerConfig};
+use icr::coordinator::Coordinator;
+use icr::json::{self, Value};
+use icr::net::{ListenAddr, NetServer};
+
+struct CaseResult {
+    name: String,
+    requests: usize,
+    requests_per_sec: f64,
+    p50_us: f64,
+    p99_us: f64,
+    mean_batch: f64,
+}
+
+impl CaseResult {
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("requests", json::num(self.requests as f64)),
+            ("requests_per_sec", json::num(self.requests_per_sec)),
+            ("p50_us", json::num(self.p50_us)),
+            ("p99_us", json::num(self.p99_us)),
+            ("mean_batch", json::num(self.mean_batch)),
+        ])
+    }
+}
+
+fn quantile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn run_case(family: &str, backend: Backend, conns: usize, batch: usize, reqs: usize) -> CaseResult {
+    let sock = std::env::temp_dir().join(format!(
+        "icr_bench_{}_{family}_{conns}_{batch}.sock",
+        std::process::id()
+    ));
+    let cfg = ServerConfig {
+        model: ModelConfig::default(), // the paper's N ≈ 200 geometry
+        backend,
+        workers: 2,
+        max_batch: 16,
+        max_wait_us: 200,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Unix(sock.clone()),
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let t0 = Instant::now();
+    let mut all_lat_us: Vec<f64> = Vec::with_capacity(conns * reqs);
+    std::thread::scope(|sc| {
+        let mut threads = Vec::new();
+        for c in 0..conns {
+            let sock = sock.clone();
+            threads.push(sc.spawn(move || {
+                let stream = UnixStream::connect(&sock).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                let mut writer = stream;
+                let mut lat = Vec::with_capacity(reqs);
+                let mut line = String::new();
+                for i in 0..reqs {
+                    let seed = (c * reqs + i) as u64;
+                    let t = Instant::now();
+                    writeln!(
+                        writer,
+                        r#"{{"v": 2, "op": "sample", "id": {i}, "count": {batch}, "seed": {seed}}}"#
+                    )
+                    .expect("send");
+                    writer.flush().expect("flush");
+                    line.clear();
+                    let n = reader.read_line(&mut line).expect("recv");
+                    assert!(n > 0, "server hung up");
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                    assert!(line.contains("\"ok\":true"), "request failed: {line}");
+                }
+                lat
+            }));
+        }
+        for t in threads {
+            all_lat_us.extend(t.join().expect("client thread"));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let applies = coord.metrics().counter("applies_executed").get() as f64;
+    let batches = coord.metrics().histogram("batch_applies").count() as f64;
+    stop.store(true, Ordering::SeqCst);
+    handle.join().expect("server thread").expect("server run");
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+    std::fs::remove_file(&sock).ok();
+
+    all_lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = conns * reqs;
+    CaseResult {
+        name: format!("serve/{family}/c{conns}/b{batch}"),
+        requests: total,
+        requests_per_sec: total as f64 / wall,
+        p50_us: quantile(&all_lat_us, 0.50),
+        p99_us: quantile(&all_lat_us, 0.99),
+        mean_batch: if batches > 0.0 { applies / batches } else { 0.0 },
+    }
+}
+
+fn main() {
+    let mut json_out = false;
+    let mut json_path = "BENCH_serve.json".to_string();
+    for a in std::env::args().skip(1) {
+        if a == "--json" {
+            json_out = true;
+        } else if let Some(p) = a.strip_prefix("--json=") {
+            json_out = true;
+            json_path = p.to_string();
+        }
+    }
+    let reqs: usize = std::env::var("ICR_BENCH_SERVE_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+
+    println!("== serve throughput — connections × batch × model family ==");
+    println!(
+        "{:<28} {:>10} {:>14} {:>10} {:>10} {:>10}",
+        "case", "requests", "req/s", "p50_us", "p99_us", "mean_batch"
+    );
+    let families = [("native", Backend::Native), ("kissgp", Backend::Kissgp)];
+    let mut results: Vec<CaseResult> = Vec::new();
+    for (family, backend) in families {
+        for conns in [1usize, 4] {
+            for batch in [1usize, 8] {
+                let r = run_case(family, backend, conns, batch, reqs);
+                println!(
+                    "{:<28} {:>10} {:>14.0} {:>10.1} {:>10.1} {:>10.2}",
+                    r.name, r.requests, r.requests_per_sec, r.p50_us, r.p99_us, r.mean_batch
+                );
+                results.push(r);
+            }
+        }
+    }
+
+    if json_out {
+        let doc = json::obj(vec![
+            ("suite", json::s("serve_throughput")),
+            ("version", json::s(icr::VERSION)),
+            ("requests_per_client", json::num(reqs as f64)),
+            ("hardware", hardware_json()),
+            ("results", json::arr(results.iter().map(CaseResult::to_json).collect())),
+        ]);
+        match std::fs::write(&json_path, format!("{}\n", doc.to_json_pretty())) {
+            Ok(()) => println!("wrote {json_path}"),
+            Err(e) => eprintln!("failed to write JSON results: {e}"),
+        }
+    }
+}

@@ -18,6 +18,7 @@ use crate::cli::Args;
 use crate::icr::RefinementParams;
 use crate::json::{self, Value};
 use crate::kernels::{parse_kernel, Kernel};
+use crate::net::{ListenAddr, RoutePolicy};
 
 /// Which engine family executes a model's applies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -187,6 +188,67 @@ impl ModelSpec {
     }
 }
 
+/// A replica set declaration: `count` identical registry entries named
+/// `{name}@0..{name}@count-1`, all built from the server's base model on
+/// `backend` and sharing the coordinator's one worker pool. Requests
+/// addressed to the logical `name` are routed across the members by the
+/// configured [`RoutePolicy`] (`DESIGN.md` §8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaSpec {
+    pub name: String,
+    pub backend: Backend,
+    pub count: usize,
+}
+
+impl ReplicaSpec {
+    /// Validated constructor — the one path every replica declaration
+    /// (CLI or config file) goes through, enforcing the `@` reservation
+    /// for member names.
+    pub fn new(name: &str, backend: Backend, count: usize) -> Result<ReplicaSpec> {
+        let name = name.trim();
+        anyhow::ensure!(!name.is_empty(), "replica set name may not be empty");
+        anyhow::ensure!(
+            !name.contains('@'),
+            "replica set name {name:?} may not contain '@' (reserved for member names)"
+        );
+        anyhow::ensure!(count >= 1, "replica set {name:?} needs count >= 1");
+        Ok(ReplicaSpec { name: name.to_string(), backend, count })
+    }
+
+    /// Parse one `name=backend:count` entry (`gp=native:3`; a missing
+    /// `:count` means one replica).
+    pub fn parse(entry: &str) -> Result<ReplicaSpec> {
+        let (name, rest) = entry
+            .trim()
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--replicas entry {entry:?} is not name=backend:count"))?;
+        let (backend, count) = match rest.split_once(':') {
+            Some((b, c)) => {
+                let count: usize = c
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--replicas entry {entry:?}: bad count: {e}"))?;
+                (Backend::parse(b.trim())?, count)
+            }
+            None => (Backend::parse(rest.trim())?, 1),
+        };
+        Self::new(name, backend, count).with_context(|| format!("--replicas entry {entry:?}"))
+    }
+
+    /// Registry entry names of the members, in routing order.
+    pub fn member_names(&self) -> Vec<String> {
+        (0..self.count).map(|i| format!("{}@{i}", self.name)).collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("backend", json::s(self.backend.name())),
+            ("count", json::num(self.count as f64)),
+        ])
+    }
+}
+
 /// The coordinator/server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -212,6 +274,24 @@ pub struct ServerConfig {
     pub apply_threads: usize,
     pub artifact_dir: String,
     pub seed: u64,
+    /// Where `icr serve` listens (`--listen stdio|tcp:HOST:PORT|unix:PATH`,
+    /// default stdio — the legacy loop, byte-identical).
+    pub listen: ListenAddr,
+    /// Concurrent-connection cap for socket transports; connections
+    /// beyond it are refused with a typed `overloaded` frame.
+    pub max_connections: usize,
+    /// Close a connection with nothing in flight after this long
+    /// (`--idle-timeout-ms`, 0 disables).
+    pub idle_timeout_ms: u64,
+    /// Bound on the coordinator's request queue (`--queue-limit`, 0 =
+    /// unbounded). When full, submits answer immediately with a typed
+    /// `overloaded` error instead of queueing — the backpressure signal
+    /// socket sessions forward to their clients.
+    pub queue_limit: usize,
+    /// Replica sets over the registry (`--replicas gp=native:3`).
+    pub replicas: Vec<ReplicaSpec>,
+    /// How replica sets pick members (`--route-policy`).
+    pub route_policy: RoutePolicy,
 }
 
 impl Default for ServerConfig {
@@ -226,6 +306,12 @@ impl Default for ServerConfig {
             apply_threads: crate::parallel::default_apply_threads(),
             artifact_dir: "artifacts".into(),
             seed: 0xED40FE5,
+            listen: ListenAddr::Stdio,
+            max_connections: 64,
+            idle_timeout_ms: 300_000,
+            queue_limit: 0,
+            replicas: Vec::new(),
+            route_policy: RoutePolicy::default(),
         }
     }
 }
@@ -283,6 +369,22 @@ impl ServerConfig {
             cfg.artifact_dir = d.to_string();
         }
         cfg.seed = args.get_u64("seed", cfg.seed)?;
+        if let Some(l) = args.get("listen") {
+            cfg.listen = ListenAddr::parse(l).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        cfg.max_connections = args.get_usize("max-connections", cfg.max_connections)?.max(1);
+        cfg.idle_timeout_ms = args.get_u64("idle-timeout-ms", cfg.idle_timeout_ms)?;
+        cfg.queue_limit = args.get_usize("queue-limit", cfg.queue_limit)?;
+        if let Some(list) = args.get("replicas") {
+            cfg.replicas = list
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(ReplicaSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(p) = args.get("route-policy") {
+            cfg.route_policy = RoutePolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
+        }
         cfg.validate_models()?;
         Ok(cfg)
     }
@@ -307,7 +409,37 @@ impl ServerConfig {
                 spec.name
             );
         }
+        // Replica logical names and member entry names share the registry
+        // namespace with plain models.
+        for r in &self.replicas {
+            anyhow::ensure!(
+                seen.insert(r.name.clone()),
+                "replica set name {:?} collides with a registry entry",
+                r.name
+            );
+            for member in r.member_names() {
+                anyhow::ensure!(
+                    seen.insert(member.clone()),
+                    "replica member name {member:?} collides with a registry entry"
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Registry entries the replica sets add: `count` members per set,
+    /// all on the set's backend with the base model's geometry.
+    pub fn replica_model_specs(&self) -> Vec<ModelSpec> {
+        self.replicas
+            .iter()
+            .flat_map(|r| {
+                r.member_names().into_iter().map(|name| ModelSpec {
+                    name,
+                    backend: r.backend,
+                    model: self.model.clone(),
+                })
+            })
+            .collect()
     }
 
     pub fn apply_file(&mut self, path: &Path) -> Result<()> {
@@ -336,6 +468,40 @@ impl ServerConfig {
         }
         if let Some(s) = v.get("seed").and_then(Value::as_f64) {
             self.seed = s as u64;
+        }
+        if let Some(l) = v.get("listen").and_then(Value::as_str) {
+            self.listen = ListenAddr::parse(l).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(c) = v.get("max_connections").and_then(Value::as_usize) {
+            self.max_connections = c;
+        }
+        if let Some(t) = v.get("idle_timeout_ms").and_then(Value::as_usize) {
+            self.idle_timeout_ms = t as u64;
+        }
+        if let Some(q) = v.get("queue_limit").and_then(Value::as_usize) {
+            self.queue_limit = q;
+        }
+        if let Some(p) = v.get("route_policy").and_then(Value::as_str) {
+            self.route_policy = RoutePolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(reps) = v.get("replicas").and_then(Value::as_array) {
+            let default_backend = self.backend;
+            self.replicas = reps
+                .iter()
+                .map(|entry| -> Result<ReplicaSpec> {
+                    let name = entry
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("replicas[] entry missing \"name\""))?
+                        .to_string();
+                    let backend = match entry.get("backend").and_then(Value::as_str) {
+                        Some(b) => Backend::parse(b)?,
+                        None => default_backend,
+                    };
+                    let count = entry.get("count").and_then(Value::as_usize).unwrap_or(1);
+                    ReplicaSpec::new(&name, backend, count)
+                })
+                .collect::<Result<Vec<_>>>()?;
         }
         self.apply_models_json(&v)?;
         Ok(())
@@ -386,6 +552,15 @@ impl ServerConfig {
             ("apply_threads", json::num(self.apply_threads as f64)),
             ("artifact_dir", json::s(&self.artifact_dir)),
             ("seed", json::num(self.seed as f64)),
+            ("listen", json::s(&self.listen.to_string())),
+            ("max_connections", json::num(self.max_connections as f64)),
+            ("idle_timeout_ms", json::num(self.idle_timeout_ms as f64)),
+            ("queue_limit", json::num(self.queue_limit as f64)),
+            (
+                "replicas",
+                json::arr(self.replicas.iter().map(ReplicaSpec::to_json).collect()),
+            ),
+            ("route_policy", json::s(self.route_policy.name())),
         ])
     }
 }
@@ -514,6 +689,104 @@ mod tests {
         assert_eq!(specs[2].backend, Backend::Exact);
         // Extras inherit the (CLI-overridden) default geometry.
         assert_eq!(specs[1].model.target_n, 48);
+    }
+
+    #[test]
+    fn listen_and_serving_knobs_resolve_from_cli() {
+        let args = Args::parse(
+            &argv(
+                "serve --listen tcp:127.0.0.1:7070 --max-connections 8 \
+                 --idle-timeout-ms 1500 --queue-limit 32 \
+                 --replicas gp=native:3,ref=exact --route-policy round_robin",
+            ),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.listen, ListenAddr::Tcp("127.0.0.1:7070".into()));
+        assert_eq!(cfg.max_connections, 8);
+        assert_eq!(cfg.idle_timeout_ms, 1500);
+        assert_eq!(cfg.queue_limit, 32);
+        assert_eq!(cfg.route_policy, RoutePolicy::RoundRobin);
+        assert_eq!(cfg.replicas.len(), 2);
+        assert_eq!(cfg.replicas[0].name, "gp");
+        assert_eq!(cfg.replicas[0].count, 3);
+        assert_eq!(cfg.replicas[0].member_names(), vec!["gp@0", "gp@1", "gp@2"]);
+        assert_eq!(cfg.replicas[1].backend, Backend::Exact);
+        assert_eq!(cfg.replicas[1].count, 1);
+        let member_specs = cfg.replica_model_specs();
+        assert_eq!(member_specs.len(), 4);
+        assert_eq!(member_specs[0].name, "gp@0");
+        assert_eq!(member_specs[3].backend, Backend::Exact);
+    }
+
+    #[test]
+    fn serving_knobs_default_to_stdio_and_unbounded() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.listen, ListenAddr::Stdio);
+        assert_eq!(cfg.queue_limit, 0);
+        assert!(cfg.replicas.is_empty());
+        assert_eq!(cfg.route_policy, RoutePolicy::SeedAffinity);
+    }
+
+    #[test]
+    fn serving_knobs_from_config_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_net_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"listen": "unix:/tmp/icr-test.sock", "max_connections": 4,
+                "idle_timeout_ms": 250, "queue_limit": 16,
+                "route_policy": "least_outstanding",
+                "replicas": [{"name": "gp", "count": 2}]}"#,
+        )
+        .unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.listen, ListenAddr::Unix("/tmp/icr-test.sock".into()));
+        assert_eq!(cfg.max_connections, 4);
+        assert_eq!(cfg.idle_timeout_ms, 250);
+        assert_eq!(cfg.queue_limit, 16);
+        assert_eq!(cfg.route_policy, RoutePolicy::LeastOutstanding);
+        assert_eq!(cfg.replicas, vec![ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 2 }]);
+        // And the new knobs ride through the config dump.
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("listen").and_then(Value::as_str), Some("unix:/tmp/icr-test.sock"));
+        assert_eq!(v.get("route_policy").and_then(Value::as_str), Some("least_outstanding"));
+        assert_eq!(
+            v.get_path("replicas").and_then(Value::as_array).map(|a| a.len()),
+            Some(1)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replica_names_may_not_collide() {
+        // Logical set name colliding with a model name.
+        let args =
+            Args::parse(&argv("serve --models gp=exact --replicas gp=native:2"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        // Member name colliding with an explicit model name.
+        let args =
+            Args::parse(&argv("serve --models gp@0=exact --replicas gp=native:2"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        // '@' reserved in logical names; zero count rejected — on the
+        // CLI path and the shared constructor the config file uses.
+        assert!(ReplicaSpec::parse("a@b=native:2").is_err());
+        assert!(ReplicaSpec::parse("gp=native:0").is_err());
+        assert!(ReplicaSpec::parse("gp").is_err());
+        assert_eq!(ReplicaSpec::parse("gp=kissgp").unwrap().count, 1);
+        assert!(ReplicaSpec::new("a@b", Backend::Native, 2).is_err());
+        assert!(ReplicaSpec::new("  ", Backend::Native, 2).is_err());
+        // The config-file path funnels through the same validation.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_badrep_{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"replicas": [{"name": "a@b", "count": 2}]}"#).unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! AOT/PJRT, KISS-GP, exact dense), per-seed deterministic sampling,
 //! per-model bucketed batch routing, per-model metrics, and the versioned
 //! JSONL wire codec in [`protocol`] (v1 untagged legacy + v2 tagged
-//! multi-model frames).
+//! multi-model frames). The concurrent socket transports, per-connection
+//! sessions and the replica router that feed this coordinator live in
+//! [`crate::net`] (`DESIGN.md` §8).
 
 pub mod engine;
 pub mod protocol;

@@ -149,6 +149,25 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
     Ok(RequestFrame { version, model, client_id, request })
 }
 
+/// Best-effort `(version, client id)` of a request line that failed to
+/// parse, so the error frame still carries the client's correlation id
+/// (a malformed-but-id-bearing frame must not drop it) and is versioned
+/// like the request would have been. Unparseable lines fall back to a
+/// tag sniff and no id.
+pub fn frame_error_context(line: &str) -> (u64, Option<u64>) {
+    match Value::parse(line) {
+        Ok(v) => {
+            let version = match v.get("v").and_then(Value::as_f64) {
+                Some(x) if x >= 2.0 => 2,
+                _ => 1,
+            };
+            let id = v.get("id").and_then(Value::as_f64).map(|x| x as u64);
+            (version, id)
+        }
+        Err(_) => (if line.contains("\"v\"") { 2 } else { 1 }, None),
+    }
+}
+
 /// Encode a request frame to its wire object (the client side of the
 /// codec; also what the round-trip tests exercise).
 pub fn encode_request(frame: &RequestFrame) -> Value {
@@ -461,6 +480,19 @@ mod tests {
             Response::MultiInference(back) => assert_eq!(back, mi),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn error_context_preserves_client_ids() {
+        // Malformed-but-id-bearing frames keep their correlation id.
+        assert_eq!(frame_error_context(r#"{"op": "transmogrify", "id": 5}"#), (1, Some(5)));
+        assert_eq!(frame_error_context(r#"{"v": 2, "op": "nope", "id": 9}"#), (2, Some(9)));
+        assert_eq!(frame_error_context(r#"{"v": 9, "op": "stats", "id": 3}"#), (2, Some(3)));
+        // A v1 frame mentioning "v" only in a string stays v1.
+        assert_eq!(frame_error_context(r#"{"op": "x", "model": "v"}"#), (1, None));
+        // Unparseable lines: tag sniff, no id to preserve.
+        assert_eq!(frame_error_context("not json"), (1, None));
+        assert_eq!(frame_error_context(r#"{"v": 2, broken"#), (2, None));
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::error::IcrError;
 use crate::json::{self, Value};
 use crate::metrics::Registry;
 use crate::model::{GpModel, ModelBuilder};
+use crate::net::{RoutePolicy, Router, TRANSPORTS};
 use crate::parallel::Exec;
 use crate::rng::Rng;
 
@@ -44,16 +45,43 @@ struct Shared {
     models: BTreeMap<String, ModelEntry>,
     default_model: String,
     metrics: Registry,
+    /// Transport-side counters and gauges (open connections, rejected
+    /// requests, frames) — written by the `net` server, surfaced in the
+    /// `stats` document's `transport` section.
+    transport: Registry,
+    /// Replica-set router (`DESIGN.md` §8); empty when no `--replicas`.
+    router: Router,
+    /// Bound on `queue` (0 = unbounded); a full queue rejects submits
+    /// with a typed `overloaded` error instead of queueing.
+    queue_limit: usize,
+    /// Description of the registry-shared panel executor ("pool(4)").
+    exec_desc: String,
     cfg: ServerConfig,
     next_id: AtomicU64,
 }
 
 impl Shared {
     fn entry(&self, name: &str) -> Result<&ModelEntry, IcrError> {
-        self.models.get(name).ok_or_else(|| IcrError::UnknownModel {
-            name: name.to_string(),
-            available: self.models.keys().cloned().collect(),
+        self.models.get(name).ok_or_else(|| {
+            let mut available: Vec<String> = self.models.keys().cloned().collect();
+            available.extend(self.router.logical_names());
+            IcrError::UnknownModel { name: name.to_string(), available }
         })
+    }
+
+    /// Requests currently in flight on one registry entry (the
+    /// least-outstanding routing signal): submitted − completed − failed.
+    fn outstanding(&self, name: &str) -> u64 {
+        self.models
+            .get(name)
+            .map(|e| {
+                e.metrics
+                    .counter("requests_submitted")
+                    .get()
+                    .saturating_sub(e.metrics.counter("requests_completed").get())
+                    .saturating_sub(e.metrics.counter("requests_failed").get())
+            })
+            .unwrap_or(0)
     }
 }
 
@@ -73,7 +101,12 @@ impl Coordinator {
     pub fn start(cfg: ServerConfig) -> Result<Coordinator> {
         let exec = Exec::pooled(cfg.apply_threads);
         let mut models: Vec<(String, Arc<dyn GpModel>)> = Vec::new();
-        for spec in cfg.model_specs() {
+        // Plain registry entries first, then every replica-set member —
+        // N identical entries per set, all sharing the one pool (each
+        // with its own workspace pool, so replicas don't contend).
+        let mut specs = cfg.model_specs();
+        specs.extend(cfg.replica_model_specs());
+        for spec in specs {
             let model = ModelBuilder::from_spec(&spec)
                 .artifact_dir(&cfg.artifact_dir)
                 .exec(exec.clone())
@@ -81,7 +114,8 @@ impl Coordinator {
                 .map_err(|e| anyhow::anyhow!("building model {:?}: {e}", spec.name))?;
             models.push((spec.name, model));
         }
-        Self::start_with_models(cfg, models)
+        let exec_desc = exec.describe();
+        Self::start_inner(cfg, models, exec_desc)
     }
 
     /// Start with a single explicit engine under the default name (tests
@@ -91,10 +125,19 @@ impl Coordinator {
     }
 
     /// Start with an explicit named registry; the first entry is the
-    /// default model.
+    /// default model. Replica sets in `cfg.replicas` must have their
+    /// member entries present in `models`.
     pub fn start_with_models(
         cfg: ServerConfig,
         models: Vec<(String, Arc<dyn GpModel>)>,
+    ) -> Result<Coordinator> {
+        Self::start_inner(cfg, models, "external".to_string())
+    }
+
+    fn start_inner(
+        cfg: ServerConfig,
+        models: Vec<(String, Arc<dyn GpModel>)>,
+        exec_desc: String,
     ) -> Result<Coordinator> {
         anyhow::ensure!(!models.is_empty(), "coordinator needs at least one model");
         let default_model = models[0].0.clone();
@@ -103,6 +146,23 @@ impl Coordinator {
             let prev = registry.insert(name.clone(), ModelEntry { model, metrics: Registry::new() });
             anyhow::ensure!(prev.is_none(), "duplicate model name {name:?}");
         }
+        let mut router = Router::new(cfg.route_policy);
+        for r in &cfg.replicas {
+            anyhow::ensure!(
+                !registry.contains_key(&r.name),
+                "replica set name {:?} collides with a registry entry",
+                r.name
+            );
+            let members = r.member_names();
+            for m in &members {
+                anyhow::ensure!(
+                    registry.contains_key(m),
+                    "replica set {:?} member {m:?} is not in the registry",
+                    r.name
+                );
+            }
+            router.add_set(&r.name, members);
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -110,6 +170,10 @@ impl Coordinator {
             models: registry,
             default_model,
             metrics: Registry::new(),
+            transport: Registry::new(),
+            router,
+            queue_limit: cfg.queue_limit,
+            exec_desc,
             cfg: cfg.clone(),
             next_id: AtomicU64::new(1),
         });
@@ -151,6 +215,22 @@ impl Coordinator {
         &self.shared.metrics
     }
 
+    /// Transport-side registry (connection gauges, rejected requests,
+    /// frame counters); written by the socket server, zero under stdio.
+    pub fn transport_metrics(&self) -> &Registry {
+        &self.shared.transport
+    }
+
+    /// The replica router (empty when no `--replicas` were configured).
+    pub fn router(&self) -> &Router {
+        &self.shared.router
+    }
+
+    /// In-flight request count for one registry entry.
+    pub fn outstanding(&self, name: &str) -> u64 {
+        self.shared.outstanding(name)
+    }
+
     /// Per-model metrics registry.
     pub fn model_metrics(&self, name: &str) -> Option<&Registry> {
         self.shared.models.get(name).map(|e| &e.metrics)
@@ -162,8 +242,10 @@ impl Coordinator {
     }
 
     /// Enqueue a request for a named model (`None` = default); returns the
-    /// reply receiver immediately. Unknown names answer with a typed
-    /// [`IcrError::UnknownModel`] on the receiver instead of enqueueing.
+    /// reply receiver immediately. A replica-set name resolves to a member
+    /// entry through the configured routing policy. Unknown names answer
+    /// with a typed [`IcrError::UnknownModel`] on the receiver instead of
+    /// enqueueing; a full bounded queue answers [`IcrError::Overloaded`].
     pub fn submit_to(
         &self,
         model: Option<&str>,
@@ -171,7 +253,18 @@ impl Coordinator {
     ) -> (RequestId, mpsc::Receiver<Result<Response, IcrError>>) {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let name = model.unwrap_or(&self.shared.default_model).to_string();
+        let logical = model.unwrap_or(&self.shared.default_model);
+        // Registry entries win; only unhosted names consult the router,
+        // so a member ("gp@1") stays directly addressable.
+        let name = if self.shared.models.contains_key(logical) {
+            logical.to_string()
+        } else {
+            let outstanding = |m: &str| self.shared.outstanding(m);
+            match self.shared.router.route(logical, &request, &outstanding) {
+                Some(member) => member.to_string(),
+                None => logical.to_string(),
+            }
+        };
         self.shared.metrics.counter("requests_submitted").inc();
         match self.shared.entry(&name) {
             Err(e) => {
@@ -180,12 +273,28 @@ impl Coordinator {
             }
             Ok(entry) => {
                 entry.metrics.counter("requests_submitted").inc();
-                {
-                    let mut q = self.shared.queue.lock().unwrap();
+                let mut q = self.shared.queue.lock().unwrap();
+                if self.shared.queue_limit > 0 && q.len() >= self.shared.queue_limit {
+                    // Backpressure: answer immediately with a typed
+                    // overload instead of queueing unboundedly; socket
+                    // sessions forward this as a v2 `overloaded` frame.
+                    let depth = q.len();
+                    drop(q);
+                    self.shared.metrics.counter("requests_rejected").inc();
+                    self.shared.transport.counter("requests_rejected").inc();
+                    entry.metrics.counter("requests_rejected").inc();
+                    self.shared.metrics.counter("requests_failed").inc();
+                    entry.metrics.counter("requests_failed").inc();
+                    let _ = tx.send(Err(IcrError::Overloaded {
+                        in_use: depth,
+                        limit: self.shared.queue_limit,
+                    }));
+                } else {
                     q.push_back(Envelope { id, model: name, request, reply: tx });
                     self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
+                    drop(q);
+                    self.shared.cv.notify_one();
                 }
-                self.shared.cv.notify_one();
             }
         }
         (id, rx)
@@ -228,14 +337,29 @@ fn stats_json(shared: &Shared) -> Value {
         }
         models.insert(name.clone(), section);
     }
+    // Mirror the live queue depth so the transport section carries every
+    // serving-side gauge in one place.
+    shared.transport.gauge("queue_depth").set(shared.metrics.gauge("queue_depth").get());
+    let outstanding = |m: &str| shared.outstanding(m);
     json::obj(vec![
         ("version", json::s(crate::VERSION)),
         (
             "protocol",
             json::arr(SUPPORTED_PROTOCOLS.iter().map(|&v| json::num(v as f64)).collect()),
         ),
+        (
+            "transports",
+            json::arr(TRANSPORTS.iter().map(|t| json::s(t)).collect()),
+        ),
+        (
+            "routing_policies",
+            json::arr(RoutePolicy::ALL.iter().map(|p| json::s(p.name())).collect()),
+        ),
+        ("apply_exec", json::s(&shared.exec_desc)),
         ("default_model", json::s(&shared.default_model)),
         ("global", shared.metrics.to_json()),
+        ("transport", shared.transport.to_json()),
+        ("replica_sets", shared.router.to_json(&outstanding)),
         ("models", Value::Object(models)),
     ])
 }
@@ -845,5 +969,132 @@ mod tests {
         let c = start(3, 4);
         let _ = c.call(Request::Sample { count: 1, seed: 1 }).unwrap();
         c.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_typed_overload() {
+        // One worker pinned on a slow inference; with queue_limit = 2 a
+        // burst of samples must queue two and reject the rest with a
+        // typed Overloaded error (never hang, never drop).
+        let mut cfg = test_config(1, 1);
+        cfg.queue_limit = 2;
+        cfg.max_wait_us = 10;
+        let c = Coordinator::start(cfg).unwrap();
+        let n_obs = c.engine().obs_indices().len();
+        let slow = c.submit(Request::Infer {
+            y_obs: vec![0.1; n_obs],
+            sigma_n: 0.5,
+            steps: 4000,
+            lr: 0.05,
+        });
+        // Wait until the worker picked the inference up (queue drained).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while c.metrics().gauge("queue_depth").get() > 0.0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let burst: Vec<_> =
+            (0..20).map(|i| c.submit(Request::Sample { count: 1, seed: i })).collect();
+        let mut rejected = 0usize;
+        let mut served = 0usize;
+        for (_, rx) in burst {
+            match rx.recv_timeout(Duration::from_secs(20)).unwrap() {
+                Err(IcrError::Overloaded { limit, .. }) => {
+                    assert_eq!(limit, 2);
+                    rejected += 1;
+                }
+                Ok(Response::Samples(_)) => served += 1,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(rejected >= 1, "no overload with a busy worker and queue_limit=2");
+        assert_eq!(rejected + served, 20);
+        assert_eq!(c.metrics().counter("requests_rejected").get(), rejected as u64);
+        assert_eq!(c.transport_metrics().counter("requests_rejected").get(), rejected as u64);
+        // The slow request still completes; the accounting invariant
+        // (submitted == completed + failed) holds at quiescence.
+        slow.1.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        let m = c.metrics();
+        assert_eq!(
+            m.counter("requests_submitted").get(),
+            m.counter("requests_completed").get() + m.counter("requests_failed").get()
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn replica_sets_route_and_serve_identical_bytes() {
+        let mut cfg = test_config(2, 4);
+        cfg.replicas =
+            vec![crate::config::ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 3 }];
+        cfg.route_policy = crate::net::RoutePolicy::SeedAffinity;
+        let c = Coordinator::start(cfg).unwrap();
+        // Members are real registry entries; the logical name is not.
+        for m in ["gp@0", "gp@1", "gp@2"] {
+            assert!(c.model(m).is_some(), "{m} missing from registry");
+        }
+        assert!(c.model("gp").is_none());
+
+        // Identical config ⇒ identical bytes regardless of replica choice.
+        let want = c.engine().sample(1, 77).unwrap();
+        for _ in 0..3 {
+            match c.call_model(Some("gp"), Request::Sample { count: 1, seed: 77 }).unwrap() {
+                Response::Samples(s) => assert_eq!(s, want),
+                other => panic!("{other:?}"),
+            }
+        }
+        // Seed affinity: seed 77 → member 77 % 3 = 2, every time.
+        assert_eq!(c.router().set("gp").unwrap().routed_to(2), 3);
+        assert_eq!(c.model_metrics("gp@2").unwrap().counter("requests_submitted").get(), 3);
+
+        // Members remain directly addressable.
+        match c.call_model(Some("gp@0"), Request::Sample { count: 1, seed: 77 }).unwrap() {
+            Response::Samples(s) => assert_eq!(s, want),
+            other => panic!("{other:?}"),
+        }
+
+        // Unknown names now advertise logical sets too.
+        match c.call_model(Some("nope"), Request::Stats) {
+            Err(IcrError::UnknownModel { available, .. }) => {
+                assert!(available.contains(&"gp".to_string()), "{available:?}");
+                assert!(available.contains(&"gp@1".to_string()));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Stats surface the replica section with routed counters.
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(v) => {
+                assert_eq!(
+                    v.get_path("replica_sets.policy").and_then(Value::as_str),
+                    Some("seed_affinity")
+                );
+                let members = v
+                    .get_path("replica_sets.sets.gp.members")
+                    .and_then(Value::as_array)
+                    .unwrap();
+                assert_eq!(members.len(), 3);
+                assert_eq!(members[2].get("routed").and_then(Value::as_usize), Some(3));
+                assert!(v.get("transports").and_then(Value::as_array).is_some());
+                assert!(v.get_path("transport.counters").is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn round_robin_replicas_spread_load() {
+        let mut cfg = test_config(2, 4);
+        cfg.replicas =
+            vec![crate::config::ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 2 }];
+        cfg.route_policy = crate::net::RoutePolicy::RoundRobin;
+        let c = Coordinator::start(cfg).unwrap();
+        for i in 0..6 {
+            c.call_model(Some("gp"), Request::Sample { count: 1, seed: i }).unwrap();
+        }
+        let set = c.router().set("gp").unwrap();
+        assert_eq!(set.routed_to(0), 3);
+        assert_eq!(set.routed_to(1), 3);
+        c.shutdown();
     }
 }

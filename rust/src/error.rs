@@ -26,6 +26,9 @@ pub enum IcrError {
     InvalidParameter(String),
     /// The model cannot serve this op (e.g. no loss-grad artifact).
     Unsupported(String),
+    /// The server is saturated (bounded request queue full, or the
+    /// connection cap reached); the client should back off and retry.
+    Overloaded { in_use: usize, limit: usize },
     /// The backing engine failed executing the request.
     Backend(String),
     /// Coordinator-internal failure (dropped reply channel, poisoned lock).
@@ -43,6 +46,7 @@ impl IcrError {
             IcrError::ShapeMismatch { .. } => "shape_mismatch",
             IcrError::InvalidParameter(_) => "invalid_parameter",
             IcrError::Unsupported(_) => "unsupported",
+            IcrError::Overloaded { .. } => "overloaded",
             IcrError::Backend(_) => "backend",
             IcrError::Internal(_) => "internal",
         }
@@ -70,6 +74,7 @@ impl IcrError {
             }
             "invalid_parameter" => IcrError::InvalidParameter(message.to_string()),
             "unsupported" => IcrError::Unsupported(message.to_string()),
+            "overloaded" => IcrError::Overloaded { in_use: 0, limit: 0 },
             "backend" => IcrError::Backend(message.to_string()),
             _ => IcrError::Internal(message.to_string()),
         }
@@ -92,6 +97,9 @@ impl fmt::Display for IcrError {
             }
             IcrError::InvalidParameter(m) => write!(f, "invalid parameter: {m}"),
             IcrError::Unsupported(m) => write!(f, "unsupported operation: {m}"),
+            IcrError::Overloaded { in_use, limit } => {
+                write!(f, "server overloaded: {in_use} of {limit} slots in use, retry later")
+            }
             IcrError::Backend(m) => write!(f, "backend failure: {m}"),
             IcrError::Internal(m) => write!(f, "internal error: {m}"),
         }
@@ -120,6 +128,7 @@ mod tests {
             IcrError::ShapeMismatch { what: "xi", expected: 1, got: 2 },
             IcrError::InvalidParameter("x".into()),
             IcrError::Unsupported("x".into()),
+            IcrError::Overloaded { in_use: 8, limit: 8 },
             IcrError::Backend("x".into()),
             IcrError::Internal("x".into()),
         ];

@@ -54,6 +54,7 @@ pub mod kissgp;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod parallel;
 pub mod rng;
@@ -68,7 +69,7 @@ pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 pub mod prelude {
     pub use crate::chart::{Chart, IdentityChart, LogChart};
     pub use crate::config::{
-        Backend, ModelConfig, ModelSpec, ServerConfig, DEFAULT_MODEL_NAME,
+        Backend, ModelConfig, ModelSpec, ReplicaSpec, ServerConfig, DEFAULT_MODEL_NAME,
     };
     pub use crate::coordinator::{
         Coordinator, Request, Response, PROTOCOL_VERSION, SUPPORTED_PROTOCOLS,
@@ -80,6 +81,7 @@ pub mod prelude {
         default_obs_indices, ExactModel, GpModel, KissGpModel, ModelBuilder,
         ModelDescriptor, MultiInference, NativeEngine, PjrtEngine,
     };
+    pub use crate::net::{ListenAddr, NetServer, RoutePolicy, Router};
     pub use crate::optim::Trace;
     pub use crate::parallel::{Exec, WorkerPool};
     pub use crate::rng::Rng;

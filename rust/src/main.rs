@@ -6,6 +6,7 @@
 //! native engine, with no Python on any request path.
 
 use std::io::{BufRead, Write};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -13,6 +14,7 @@ use icr::cli::{render_help, Args, FlagSpec};
 use icr::config::{Backend, ServerConfig};
 use icr::coordinator::{protocol, Coordinator, Request, Response};
 use icr::model::GpModel;
+use icr::net::{self, ListenAddr, NetServer, RoutePolicy};
 use icr::rng::Rng;
 use icr::runtime::PjrtRuntime;
 
@@ -30,7 +32,15 @@ fn main() {
 fn protocol_line() -> String {
     let versions: Vec<String> =
         protocol::SUPPORTED_PROTOCOLS.iter().map(|v| format!("v{v}")).collect();
-    format!("icr {} | protocols {} (current v{})", icr::VERSION, versions.join(", "), protocol::PROTOCOL_VERSION)
+    let policies: Vec<&str> = RoutePolicy::ALL.iter().map(|p| p.name()).collect();
+    format!(
+        "icr {} | protocols {} (current v{}) | transports {} | routing {}",
+        icr::VERSION,
+        versions.join(", "),
+        protocol::PROTOCOL_VERSION,
+        net::TRANSPORTS.join(", "),
+        policies.join(", ")
+    )
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -71,7 +81,7 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_help() {
     let subcommands = [
         ("sample", "draw GP samples via the coordinator"),
-        ("serve", "JSONL request loop on stdin/stdout (the serving mode)"),
+        ("serve", "JSONL server: stdio loop or concurrent tcp:/unix: socket transport"),
         ("infer", "posterior inference on synthetic observations"),
         ("version", "print crate + protocol versions"),
         ("experiment kl-table", "§5.1 refinement-parameter selection table"),
@@ -82,6 +92,12 @@ fn print_help() {
     let flags = [
         FlagSpec { name: "backend", help: "native | pjrt | kissgp | exact", default: Some("native"), is_switch: false },
         FlagSpec { name: "models", help: "extra named models, e.g. kiss=kissgp,ref=exact", default: None, is_switch: false },
+        FlagSpec { name: "listen", help: "serve transport: stdio | tcp:HOST:PORT | unix:PATH", default: Some("stdio"), is_switch: false },
+        FlagSpec { name: "max-connections", help: "concurrent socket connection cap (serve)", default: Some("64"), is_switch: false },
+        FlagSpec { name: "idle-timeout-ms", help: "close idle connections after this (0 = never)", default: Some("300000"), is_switch: false },
+        FlagSpec { name: "queue-limit", help: "bound on the request queue (0 = unbounded; full ⇒ overloaded frames)", default: Some("0"), is_switch: false },
+        FlagSpec { name: "replicas", help: "replica sets, e.g. gp=native:3 (entries gp@0..gp@2)", default: None, is_switch: false },
+        FlagSpec { name: "route-policy", help: "round_robin | least_outstanding | seed_affinity", default: Some("seed_affinity"), is_switch: false },
         FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
         FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
         FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
@@ -109,7 +125,8 @@ fn print_help() {
     print!("{}", render_help("icr", "Iterative Charted Refinement GP engine", &subcommands, &flags));
     println!("PROTOCOL:\n  {}", protocol_line());
     println!("  serve speaks JSONL: v1 untagged frames (default model) and v2 tagged");
-    println!("  frames with model routing — see DESIGN.md §4.");
+    println!("  frames with model routing — see DESIGN.md §4. Over --listen tcp:/unix:");
+    println!("  the same frames travel per connection; SIGINT drains gracefully (§8).");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -170,24 +187,38 @@ fn cmd_sample(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// JSONL serving loop: one request object per stdin line, one response
-/// object per stdout line. Accepts both protocol versions (v1 untagged →
-/// default model; v2 tagged → routed by `model`). EOF drains and shuts
-/// down, printing a structured stats document to stderr.
+/// `icr serve`: the stdio JSONL loop (default, byte-identical legacy
+/// behavior) or the concurrent socket server (`--listen tcp:HOST:PORT` /
+/// `unix:PATH`, DESIGN.md §8).
 fn cmd_serve(args: &Args) -> Result<()> {
     let (cfg, coord) = make_coordinator(args)?;
-    let model_list: Vec<String> = coord
+    match cfg.listen {
+        ListenAddr::Stdio => serve_stdio(&cfg, coord),
+        _ => serve_net(&cfg, coord),
+    }
+}
+
+fn model_banner(coord: &Coordinator) -> String {
+    coord
         .model_names()
         .iter()
         .map(|name| {
             let m = coord.model(name).expect("registered model");
             format!("{name}={}(n={})", m.descriptor().backend, m.n_points())
         })
-        .collect();
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// JSONL serving loop: one request object per stdin line, one response
+/// object per stdout line. Accepts both protocol versions (v1 untagged →
+/// default model; v2 tagged → routed by `model`). EOF drains and shuts
+/// down, printing a structured stats document to stderr.
+fn serve_stdio(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
     eprintln!(
         "{} | serve: models [{}] | workers {} | max_batch {} | apply_threads {} | reading JSONL from stdin",
         protocol_line(),
-        model_list.join(", "),
+        model_banner(&coord),
         cfg.workers,
         cfg.max_batch,
         icr::parallel::resolve_threads(cfg.apply_threads)
@@ -209,13 +240,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             Err(e) => {
                 // Error frames are versioned like the request would have
-                // been (best effort: unparseable lines answer in v2).
-                let version = if line.contains("\"v\"") { 2 } else { 1 };
+                // been and keep the client's correlation id when the line
+                // carried one (unparseable lines answer with id 0).
+                let (version, id) = protocol::frame_error_context(&line);
                 let mut out = stdout.lock();
                 writeln!(
                     out,
                     "{}",
-                    protocol::encode_response(version, 0, None, &Err(e)).to_json()
+                    protocol::encode_response(version, id.unwrap_or(0), None, &Err(e)).to_json()
                 )?;
             }
         }
@@ -233,6 +265,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     eprintln!("{}", coord.stats_json().to_json_pretty());
     coord.shutdown();
+    Ok(())
+}
+
+/// Concurrent socket server: many connections, each a session over the
+/// same JSONL protocol, all feeding the one coordinator batcher. SIGINT
+/// drains in-flight requests, refuses new connections, then exits.
+fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
+    let coord = Arc::new(coord);
+    net::install_sigint_handler();
+    let server = NetServer::bind(cfg, coord.clone())?;
+    eprintln!(
+        "{} | serve: listening on {} | models [{}] | workers {} | max_batch {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {}",
+        protocol_line(),
+        server.local_addr(),
+        model_banner(&coord),
+        cfg.workers,
+        cfg.max_batch,
+        icr::parallel::resolve_threads(cfg.apply_threads),
+        cfg.max_connections,
+        cfg.queue_limit,
+        cfg.route_policy.name(),
+    );
+    server.run()?;
+    eprintln!("{}", coord.stats_json().to_json_pretty());
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
     Ok(())
 }
 

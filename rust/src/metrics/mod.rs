@@ -40,6 +40,23 @@ impl Gauge {
     pub fn get(&self) -> f64 {
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
+
+    /// Atomically add `delta` (CAS loop over the f64 bits) — for up/down
+    /// gauges like open connections, where concurrent sessions adjust the
+    /// same value and last-write-wins `set` would lose updates.
+    pub fn add(&self, delta: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + delta).to_bits())
+        });
+    }
+
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1.0);
+    }
 }
 
 /// Log-scaled latency histogram (nanoseconds → ~2x buckets) plus exact
@@ -231,6 +248,27 @@ mod tests {
         let r = Registry::new();
         r.gauge("batch_occupancy").set(0.75);
         assert!((r.gauge("batch_occupancy").get() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gauge_updown_is_atomic_across_threads() {
+        let r = Registry::new();
+        let g = r.gauge("connections_open");
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.inc();
+                    g.dec();
+                }
+                g.inc();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), 4.0);
     }
 
     #[test]

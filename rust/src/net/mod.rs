@@ -1,0 +1,124 @@
+//! Concurrent network serving subsystem (`DESIGN.md` §8).
+//!
+//! `icr serve` historically spoke JSONL over stdin/stdout — one client,
+//! one request in flight. This module turns the coordinator into a real
+//! server with three layers:
+//!
+//! - **[`transport`]** — `--listen tcp:HOST:PORT | unix:PATH | stdio`
+//!   ([`ListenAddr`]): a [`NetServer`] accept loop hosting many
+//!   concurrent connections, each speaking the existing JSONL protocol
+//!   v1/v2 unchanged over the socket, with a `--max-connections` cap and
+//!   graceful shutdown (SIGINT drains in-flight requests, refuses new
+//!   ones).
+//! - **[`session`]** — one session per connection: a reader thread parses
+//!   frames and submits them into the coordinator's shared batcher (so
+//!   requests from *different* connections coalesce into the same panel
+//!   batches), a writer thread demultiplexes replies back in submission
+//!   order. Queue-full backpressure answers with a typed v2 `overloaded`
+//!   error frame; idle connections time out.
+//! - **[`router`]** — replica sets over the model registry
+//!   (`--replicas gp=native:3` builds N identical entries sharing one
+//!   [`crate::parallel::WorkerPool`]) with pluggable routing policies
+//!   ([`RoutePolicy`]: round-robin, least-outstanding, seed-affinity).
+//!
+//! The wire protocol is byte-identical across transports; `stdio` remains
+//! the default and is served by the inline loop in `main.rs`.
+
+pub mod router;
+pub mod session;
+pub mod transport;
+
+pub use router::{ReplicaSet, RoutePolicy, Router};
+pub use transport::{install_sigint_handler, sigint_requested, NetServer};
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Transports `icr serve --listen` can bind (advertised by
+/// `icr --version` and the `stats` document).
+pub const TRANSPORTS: [&str; 3] = ["stdio", "tcp", "unix"];
+
+/// Where `icr serve` listens for clients.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ListenAddr {
+    /// JSONL over stdin/stdout — the legacy single-client loop, and still
+    /// the default.
+    #[default]
+    Stdio,
+    /// TCP socket, `host:port` (port `0` picks an ephemeral port).
+    Tcp(String),
+    /// Unix domain socket at a filesystem path.
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse `stdio`, `tcp:HOST:PORT` or `unix:PATH`.
+    pub fn parse(s: &str) -> Result<ListenAddr, String> {
+        if s == "stdio" {
+            return Ok(ListenAddr::Stdio);
+        }
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            if rest.is_empty() {
+                return Err(format!("listen address {s:?} is missing HOST:PORT"));
+            }
+            return Ok(ListenAddr::Tcp(rest.to_string()));
+        }
+        if let Some(rest) = s.strip_prefix("unix:") {
+            if rest.is_empty() {
+                return Err(format!("listen address {s:?} is missing a socket path"));
+            }
+            return Ok(ListenAddr::Unix(PathBuf::from(rest)));
+        }
+        Err(format!(
+            "listen address {s:?} must be stdio | tcp:HOST:PORT | unix:PATH"
+        ))
+    }
+
+    /// Transport name (`stdio` | `tcp` | `unix`).
+    pub fn transport(&self) -> &'static str {
+        match self {
+            ListenAddr::Stdio => "stdio",
+            ListenAddr::Tcp(_) => "tcp",
+            ListenAddr::Unix(_) => "unix",
+        }
+    }
+}
+
+impl fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ListenAddr::Stdio => write!(f, "stdio"),
+            ListenAddr::Tcp(hp) => write!(f, "tcp:{hp}"),
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_addr_parse_roundtrip() {
+        for s in ["stdio", "tcp:127.0.0.1:7777", "unix:/tmp/icr.sock"] {
+            let addr = ListenAddr::parse(s).unwrap();
+            assert_eq!(addr.to_string(), s);
+        }
+        assert_eq!(ListenAddr::parse("stdio").unwrap().transport(), "stdio");
+        assert_eq!(ListenAddr::parse("tcp:0.0.0.0:0").unwrap().transport(), "tcp");
+        assert_eq!(ListenAddr::parse("unix:/x").unwrap().transport(), "unix");
+        assert_eq!(ListenAddr::default(), ListenAddr::Stdio);
+    }
+
+    #[test]
+    fn listen_addr_rejects_malformed() {
+        for s in ["tcp:", "unix:", "http:localhost", "7777"] {
+            assert!(ListenAddr::parse(s).is_err(), "{s} should not parse");
+        }
+    }
+
+    #[test]
+    fn transports_are_advertised_in_order() {
+        assert_eq!(TRANSPORTS, ["stdio", "tcp", "unix"]);
+    }
+}

@@ -1,0 +1,272 @@
+//! Shard/replica router over the model registry.
+//!
+//! `DESIGN.md` §5 reserved the hook: a shard is a named
+//! [`crate::model::GpModel`] registry entry. A **replica set** groups N
+//! identical entries (`--replicas gp=native:3` → members `gp@0..gp@2`)
+//! under one logical name; requests addressed to the logical name are
+//! routed to a member by a pluggable [`RoutePolicy`]. Requests may still
+//! address a member (`gp@1`) directly — the router only resolves names
+//! the registry does not already host.
+//!
+//! Determinism: every member of a set is built from the same
+//! [`crate::config::ModelConfig`], so `sample` bytes are identical on
+//! every replica regardless of the policy's choice; `seed_affinity`
+//! additionally pins a given seed to a fixed member, which keeps
+//! per-replica caches warm and makes the routing itself reproducible
+//! (tested in `net_e2e.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::coordinator::request::Request;
+use crate::json::{self, Value};
+
+/// How a replica set picks the member serving the next request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Strict rotation over the members.
+    RoundRobin,
+    /// Member with the fewest requests currently in flight (ties resolve
+    /// to the lowest member index).
+    LeastOutstanding,
+    /// Seeded requests (`sample`, `infer_multi`) map `seed % replicas`,
+    /// so a given seed always lands on the same member; unseeded
+    /// requests fall back to rotation.
+    #[default]
+    SeedAffinity,
+}
+
+impl RoutePolicy {
+    /// Every policy, in the order advertised by `icr --version` and the
+    /// `stats` document.
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::SeedAffinity];
+
+    pub fn parse(s: &str) -> Result<RoutePolicy, String> {
+        match s {
+            "round_robin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            "least_outstanding" | "lo" => Ok(RoutePolicy::LeastOutstanding),
+            "seed_affinity" | "seed" => Ok(RoutePolicy::SeedAffinity),
+            other => Err(format!(
+                "unknown routing policy {other:?} (round_robin|least_outstanding|seed_affinity)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastOutstanding => "least_outstanding",
+            RoutePolicy::SeedAffinity => "seed_affinity",
+        }
+    }
+}
+
+/// One logical replica set: ordered member entry names plus routing
+/// state (rotation cursor, per-member routed counters).
+pub struct ReplicaSet {
+    members: Vec<String>,
+    rr: AtomicUsize,
+    routed: Vec<AtomicU64>,
+}
+
+impl ReplicaSet {
+    fn new(members: Vec<String>) -> ReplicaSet {
+        let routed = members.iter().map(|_| AtomicU64::new(0)).collect();
+        ReplicaSet { members, rr: AtomicUsize::new(0), routed }
+    }
+
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    /// How many requests this set has routed to member `i`.
+    pub fn routed_to(&self, i: usize) -> u64 {
+        self.routed[i].load(Ordering::Relaxed)
+    }
+}
+
+/// The seed a request pins replica affinity on, when it has one.
+fn affinity_seed(request: &Request) -> Option<u64> {
+    match request {
+        Request::Sample { seed, .. } => Some(*seed),
+        Request::InferMulti { seed, .. } => Some(*seed),
+        _ => None,
+    }
+}
+
+/// Maps logical replica-set names to member registry entries.
+pub struct Router {
+    policy: RoutePolicy,
+    sets: BTreeMap<String, ReplicaSet>,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router { policy, sets: BTreeMap::new() }
+    }
+
+    /// Register a logical name over its (non-empty, ordered) members.
+    pub fn add_set(&mut self, logical: &str, members: Vec<String>) {
+        debug_assert!(!members.is_empty(), "replica set {logical:?} has no members");
+        self.sets.insert(logical.to_string(), ReplicaSet::new(members));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Logical names this router resolves (sorted).
+    pub fn logical_names(&self) -> Vec<String> {
+        self.sets.keys().cloned().collect()
+    }
+
+    pub fn set(&self, logical: &str) -> Option<&ReplicaSet> {
+        self.sets.get(logical)
+    }
+
+    /// Resolve a logical name to a member entry name, or `None` if the
+    /// name is not a replica set. `outstanding` reports a member's
+    /// currently in-flight request count (least-outstanding input).
+    pub fn route(
+        &self,
+        logical: &str,
+        request: &Request,
+        outstanding: &dyn Fn(&str) -> u64,
+    ) -> Option<&str> {
+        let set = self.sets.get(logical)?;
+        let n = set.members.len();
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => set.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::LeastOutstanding => {
+                let mut best = 0usize;
+                let mut best_load = u64::MAX;
+                for (i, m) in set.members.iter().enumerate() {
+                    let load = outstanding(m);
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+            RoutePolicy::SeedAffinity => match affinity_seed(request) {
+                Some(seed) => (seed % n as u64) as usize,
+                None => set.rr.fetch_add(1, Ordering::Relaxed) % n,
+            },
+        };
+        set.routed[idx].fetch_add(1, Ordering::Relaxed);
+        Some(&set.members[idx])
+    }
+
+    /// The `replica_sets` section of the `stats` document: policy plus,
+    /// per set, the member list with routed/outstanding counters.
+    pub fn to_json(&self, outstanding: &dyn Fn(&str) -> u64) -> Value {
+        let mut sets: BTreeMap<String, Value> = BTreeMap::new();
+        for (logical, set) in &self.sets {
+            let members: Vec<Value> = set
+                .members
+                .iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    json::obj(vec![
+                        ("name", json::s(m)),
+                        ("routed", json::num(set.routed_to(i) as f64)),
+                        ("outstanding", json::num(outstanding(m) as f64)),
+                    ])
+                })
+                .collect();
+            sets.insert(logical.clone(), json::obj(vec![("members", json::arr(members))]));
+        }
+        json::obj(vec![
+            ("policy", json::s(self.policy.name())),
+            ("sets", Value::Object(sets)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn members(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("gp@{i}")).collect()
+    }
+
+    fn sample(seed: u64) -> Request {
+        Request::Sample { count: 1, seed }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("random").is_err());
+        assert_eq!(RoutePolicy::default(), RoutePolicy::SeedAffinity);
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        r.add_set("gp", members(3));
+        let none = |_: &str| 0u64;
+        let picks: Vec<String> = (0..6)
+            .map(|i| r.route("gp", &sample(i), &none).unwrap().to_string())
+            .collect();
+        assert_eq!(picks, ["gp@0", "gp@1", "gp@2", "gp@0", "gp@1", "gp@2"]);
+        assert!(r.route("other", &sample(0), &none).is_none());
+    }
+
+    #[test]
+    fn least_outstanding_picks_the_idle_member() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        r.add_set("gp", members(3));
+        let load = |m: &str| match m {
+            "gp@0" => 5,
+            "gp@1" => 1,
+            _ => 9,
+        };
+        assert_eq!(r.route("gp", &sample(0), &load).unwrap(), "gp@1");
+        // Ties resolve to the lowest index.
+        let flat = |_: &str| 2u64;
+        assert_eq!(r.route("gp", &sample(0), &flat).unwrap(), "gp@0");
+    }
+
+    #[test]
+    fn seed_affinity_is_stable_per_seed() {
+        let mut r = Router::new(RoutePolicy::SeedAffinity);
+        r.add_set("gp", members(3));
+        let none = |_: &str| 0u64;
+        for seed in 0..12u64 {
+            let first = r.route("gp", &sample(seed), &none).unwrap().to_string();
+            for _ in 0..3 {
+                assert_eq!(r.route("gp", &sample(seed), &none).unwrap(), first);
+            }
+            assert_eq!(first, format!("gp@{}", seed % 3));
+        }
+        // Unseeded requests still route (rotation fallback).
+        assert!(r.route("gp", &Request::Stats, &none).is_some());
+    }
+
+    #[test]
+    fn routed_counters_and_json() {
+        let mut r = Router::new(RoutePolicy::SeedAffinity);
+        r.add_set("gp", members(2));
+        let none = |_: &str| 0u64;
+        for _ in 0..4 {
+            r.route("gp", &sample(1), &none);
+        }
+        assert_eq!(r.set("gp").unwrap().routed_to(1), 4);
+        let v = r.to_json(&none);
+        assert_eq!(v.get("policy").and_then(Value::as_str), Some("seed_affinity"));
+        let m = v.get_path("sets.gp.members").and_then(Value::as_array).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1].get("routed").and_then(Value::as_usize), Some(4));
+        assert_eq!(r.logical_names(), vec!["gp"]);
+    }
+}

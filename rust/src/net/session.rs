@@ -1,0 +1,256 @@
+//! Per-connection session: JSONL framing over a socket, pipelined
+//! request submission, in-order reply demultiplexing.
+//!
+//! Each connection gets two threads. The **reader** frames lines off the
+//! socket (preserving partial lines across read timeouts), parses them
+//! with the same [`protocol`] codec the stdio loop uses, and submits
+//! every request straight into the coordinator's shared queue — which is
+//! what makes requests from *different* connections coalesce into the
+//! same panel batches. The **writer** drains a session-local FIFO of
+//! pending replies, blocking on each in submission order, so every
+//! client sees its responses in the order it sent the requests while
+//! other sessions proceed independently (fair per-session demux, no
+//! cross-session head-of-line blocking).
+//!
+//! Backpressure: a full bounded coordinator queue answers the submit
+//! immediately with a typed [`IcrError::Overloaded`], which flows to the
+//! client as a v2 `overloaded` error frame in-order like any reply.
+//! Lifecycle: EOF, an idle timeout with nothing in flight, a dead peer,
+//! or a server drain all end the reader; the writer then flushes what
+//! was already submitted and the session hangs up.
+
+use std::io::{self, BufWriter, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{protocol, Coordinator, Response};
+use crate::error::IcrError;
+use crate::metrics::Registry;
+
+use super::transport::{sigint_requested, Conn};
+
+/// Reader poll granularity: how often an idle reader re-checks the
+/// drain flag and the idle deadline.
+const READ_POLL: Duration = Duration::from_millis(25);
+
+/// Everything a session needs from the server.
+pub(crate) struct SessionCtx {
+    pub coord: Arc<Coordinator>,
+    pub shutdown: Arc<AtomicBool>,
+    /// Zero disables the idle timeout.
+    pub idle_timeout: Duration,
+    pub transport: Registry,
+    /// Server-wide open-connection count (decremented on session exit).
+    pub open: Arc<AtomicUsize>,
+}
+
+impl SessionCtx {
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || sigint_requested()
+    }
+}
+
+/// One queued reply, emitted by the writer in submission order.
+enum Outgoing {
+    /// Answered at parse time (malformed frame) — no coordinator round
+    /// trip, but still serialized in-order behind earlier replies.
+    Ready { version: u64, id: u64, error: IcrError },
+    /// In flight at the coordinator.
+    Pending {
+        version: u64,
+        id: u64,
+        model: String,
+        rx: mpsc::Receiver<Result<Response, IcrError>>,
+    },
+}
+
+/// Serve one connection to completion. Consumes the connection; returns
+/// after both halves have hung up.
+pub(crate) fn run(conn: Conn, ctx: SessionCtx) {
+    let outstanding = Arc::new(AtomicUsize::new(0));
+    let peer_gone = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<Outgoing>();
+
+    let writer = match conn.try_clone() {
+        Ok(write_half) => {
+            let transport = ctx.transport.clone();
+            let outstanding = outstanding.clone();
+            let peer_gone = peer_gone.clone();
+            std::thread::Builder::new()
+                .name("icr-session-writer".into())
+                .spawn(move || writer_loop(write_half, rx, transport, outstanding, peer_gone))
+                .ok()
+        }
+        Err(_) => None,
+    };
+
+    if writer.is_some() {
+        reader_loop(conn, &ctx, tx, &outstanding, &peer_gone);
+    } else {
+        drop(tx);
+    }
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    ctx.open.fetch_sub(1, Ordering::SeqCst);
+    ctx.transport.gauge("connections_open").dec();
+}
+
+fn reader_loop(
+    conn: Conn,
+    ctx: &SessionCtx,
+    tx: mpsc::Sender<Outgoing>,
+    outstanding: &AtomicUsize,
+    peer_gone: &AtomicBool,
+) {
+    let _ = conn.set_read_timeout(Some(READ_POLL));
+    let mut lines = LineReader::new(conn);
+    let mut last_active = Instant::now();
+    let mut last_buffered = 0usize;
+    loop {
+        if ctx.draining() || peer_gone.load(Ordering::SeqCst) {
+            break;
+        }
+        match lines.next_line() {
+            Ok(Some(line)) => {
+                last_active = Instant::now();
+                last_buffered = lines.buffered();
+                if line.trim().is_empty() {
+                    continue;
+                }
+                ctx.transport.counter("frames_in").inc();
+                let msg = match protocol::parse_request(&line) {
+                    Ok(frame) => {
+                        let (id, reply) =
+                            ctx.coord.submit_to(frame.model.as_deref(), frame.request);
+                        let model = frame
+                            .model
+                            .unwrap_or_else(|| ctx.coord.default_model().to_string());
+                        Outgoing::Pending {
+                            version: frame.version,
+                            id: frame.client_id.unwrap_or(id),
+                            model,
+                            rx: reply,
+                        }
+                    }
+                    Err(e) => {
+                        let (version, id) = protocol::frame_error_context(&line);
+                        Outgoing::Ready { version, id: id.unwrap_or(0), error: e }
+                    }
+                };
+                outstanding.fetch_add(1, Ordering::SeqCst);
+                if tx.send(msg).is_err() {
+                    break;
+                }
+            }
+            Ok(None) => break, // EOF: client finished sending.
+            Err(e) if is_timeout(&e) => {
+                // Partial-frame bytes count as activity: a slow client
+                // mid-upload must never be cut off as idle.
+                if lines.buffered() != last_buffered {
+                    last_buffered = lines.buffered();
+                    last_active = Instant::now();
+                }
+                if !ctx.idle_timeout.is_zero()
+                    && outstanding.load(Ordering::SeqCst) == 0
+                    && last_active.elapsed() >= ctx.idle_timeout
+                {
+                    ctx.transport.counter("connections_idle_closed").inc();
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    // Dropping tx lets the writer drain what was submitted and exit.
+}
+
+fn writer_loop(
+    conn: Conn,
+    rx: mpsc::Receiver<Outgoing>,
+    transport: Registry,
+    outstanding: Arc<AtomicUsize>,
+    peer_gone: Arc<AtomicBool>,
+) {
+    let mut out = BufWriter::new(conn);
+    for msg in rx {
+        let frame = match msg {
+            Outgoing::Ready { version, id, error } => {
+                protocol::encode_response(version, id, None, &Err(error))
+            }
+            Outgoing::Pending { version, id, model, rx } => {
+                let result = rx.recv().unwrap_or_else(|_| {
+                    Err(IcrError::Internal("coordinator dropped the reply channel".into()))
+                });
+                protocol::encode_response(version, id, Some(&model), &result)
+            }
+        };
+        outstanding.fetch_sub(1, Ordering::SeqCst);
+        // Counted before the write so the counter is always current by
+        // the time a client observes the reply.
+        transport.counter("frames_out").inc();
+        if writeln!(out, "{}", frame.to_json()).and_then(|_| out.flush()).is_err() {
+            // Client hung up; tell the reader to stop submitting.
+            peer_gone.store(true, Ordering::SeqCst);
+            break;
+        }
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Newline framing over a read-timeout socket. `BufRead::read_line`
+/// discards partially-read bytes when the underlying read times out;
+/// this reader keeps them buffered so a frame can straddle any number of
+/// poll timeouts without loss.
+struct LineReader {
+    conn: Conn,
+    pending: Vec<u8>,
+    eof: bool,
+}
+
+impl LineReader {
+    fn new(conn: Conn) -> LineReader {
+        LineReader { conn, pending: Vec::new(), eof: false }
+    }
+
+    /// Bytes of a not-yet-complete frame currently buffered (the idle
+    /// check treats growth here as client activity).
+    fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Next complete line without its terminator; `Ok(None)` at EOF. A
+    /// timeout surfaces as `Err(WouldBlock | TimedOut)` with all
+    /// partial-line bytes retained.
+    fn next_line(&mut self) -> io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.pending.iter().position(|&b| b == b'\n') {
+                let rest = self.pending.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.pending, rest);
+                line.pop();
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            if self.eof {
+                if self.pending.is_empty() {
+                    return Ok(None);
+                }
+                let line = std::mem::take(&mut self.pending);
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            let mut buf = [0u8; 4096];
+            match self.conn.read(&mut buf) {
+                Ok(0) => self.eof = true,
+                Ok(n) => self.pending.extend_from_slice(&buf[..n]),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}

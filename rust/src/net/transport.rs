@@ -1,0 +1,299 @@
+//! Transport layer: socket listeners, the accept loop, graceful drain.
+//!
+//! [`NetServer`] owns a TCP or Unix-domain listener and hosts one
+//! [`super::session`] per accepted connection. The accept loop is
+//! non-blocking and polls a shutdown flag (set programmatically through
+//! [`NetServer::shutdown_handle`] or by the SIGINT handler installed via
+//! [`install_sigint_handler`]); once draining, no new connections are
+//! accepted, every live session finishes flushing its in-flight replies,
+//! and `run` returns. Connections beyond `--max-connections` are refused
+//! with a typed `overloaded` error frame before close.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServerConfig;
+use crate::coordinator::{protocol, Coordinator};
+use crate::error::IcrError;
+
+use super::session::{self, SessionCtx};
+use super::ListenAddr;
+
+/// How often the accept loop re-checks the shutdown flag when idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+static SIGINT_HIT: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_sig: i32) {
+    // A store on an AtomicBool is async-signal-safe; everything else
+    // happens on the accept/session threads that poll the flag.
+    SIGINT_HIT.store(true, Ordering::SeqCst);
+}
+
+/// Install a process-wide SIGINT handler that requests a graceful drain:
+/// the accept loop stops taking connections, in-flight requests are
+/// answered, then `run` returns. Only the serving binary installs this;
+/// tests drive the programmatic [`NetServer::shutdown_handle`] instead.
+#[cfg(unix)]
+pub fn install_sigint_handler() {
+    // Declared locally so the crate needs no libc dependency; the libc
+    // prototype is `sighandler_t signal(int, sighandler_t)` with
+    // `sighandler_t = void (*)(int)`, ABI-identical to this declaration.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigint_handler() {}
+
+/// Whether SIGINT requested a drain.
+pub fn sigint_requested() -> bool {
+    SIGINT_HIT.load(Ordering::SeqCst)
+}
+
+/// The two socket listener families behind one accept surface.
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, on: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(on),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(on),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true).ok();
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+}
+
+/// One accepted client connection (either family), readable and
+/// writable; the session clones it into a read half and a write half.
+pub(crate) enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    pub(crate) fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound, not-yet-running server: the socket exists after
+/// [`NetServer::bind`] (so clients can connect as soon as [`NetServer::run`]
+/// starts accepting), and `run` blocks until a drain completes.
+pub struct NetServer {
+    listener: Listener,
+    coord: Arc<Coordinator>,
+    max_connections: usize,
+    idle_timeout: Duration,
+    shutdown: Arc<AtomicBool>,
+    local: String,
+    unix_path: Option<PathBuf>,
+}
+
+impl NetServer {
+    /// Bind the configured listen address. `ListenAddr::Stdio` is served
+    /// by the inline loop in `main.rs`, not by a socket server.
+    pub fn bind(cfg: &ServerConfig, coord: Arc<Coordinator>) -> Result<NetServer> {
+        let (listener, local, unix_path) = match &cfg.listen {
+            ListenAddr::Stdio => {
+                anyhow::bail!("--listen stdio is served inline, not by the socket server")
+            }
+            ListenAddr::Tcp(hp) => {
+                let l = TcpListener::bind(hp).with_context(|| format!("binding tcp:{hp}"))?;
+                let local = l
+                    .local_addr()
+                    .map(|a| format!("tcp:{a}"))
+                    .unwrap_or_else(|_| format!("tcp:{hp}"));
+                (Listener::Tcp(l), local, None)
+            }
+            #[cfg(unix)]
+            ListenAddr::Unix(path) => {
+                // A socket file left by a dead server would fail the
+                // bind, but a live server still answers on it — probe
+                // before removing so binding never hijacks a running
+                // instance's address.
+                if path.exists() {
+                    anyhow::ensure!(
+                        UnixStream::connect(path).is_err(),
+                        "unix:{} is in use by a live server",
+                        path.display()
+                    );
+                    std::fs::remove_file(path).ok();
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix:{}", path.display()))?;
+                (Listener::Unix(l), format!("unix:{}", path.display()), Some(path.clone()))
+            }
+            #[cfg(not(unix))]
+            ListenAddr::Unix(path) => {
+                anyhow::bail!("unix sockets are not supported on this platform: {}", path.display())
+            }
+        };
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        Ok(NetServer {
+            listener,
+            coord,
+            max_connections: cfg.max_connections.max(1),
+            idle_timeout: Duration::from_millis(cfg.idle_timeout_ms),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            local,
+            unix_path,
+        })
+    }
+
+    /// The bound address (`tcp:IP:PORT` with the resolved ephemeral port,
+    /// or `unix:PATH`).
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Flag requesting a graceful drain; sharable with signal handlers,
+    /// watchdogs and tests.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || sigint_requested()
+    }
+
+    /// Accept loop. Returns once a drain was requested (handle or SIGINT)
+    /// and every session has flushed its in-flight replies. The
+    /// coordinator is left running — the caller owns its shutdown.
+    pub fn run(self) -> Result<()> {
+        let transport = self.coord.transport_metrics().clone();
+        let open = Arc::new(AtomicUsize::new(0));
+        let mut sessions: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut next_sid = 0u64;
+        while !self.draining() {
+            // Reap every iteration, not just when idle — sustained
+            // connection churn must not grow the handle list unboundedly.
+            sessions.retain(|h| !h.is_finished());
+            match self.listener.accept() {
+                Ok(conn) => {
+                    transport.counter("connections_total").inc();
+                    if open.load(Ordering::SeqCst) >= self.max_connections {
+                        transport.counter("connections_rejected").inc();
+                        refuse(conn, open.load(Ordering::SeqCst), self.max_connections);
+                        continue;
+                    }
+                    open.fetch_add(1, Ordering::SeqCst);
+                    transport.gauge("connections_open").inc();
+                    next_sid += 1;
+                    let ctx = SessionCtx {
+                        coord: self.coord.clone(),
+                        shutdown: self.shutdown.clone(),
+                        idle_timeout: self.idle_timeout,
+                        transport: transport.clone(),
+                        open: open.clone(),
+                    };
+                    let handle = std::thread::Builder::new()
+                        .name(format!("icr-session-{next_sid}"))
+                        .spawn(move || session::run(conn, ctx))
+                        .context("spawning session thread")?;
+                    sessions.push(handle);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+        }
+        // Drain: new connections are no longer accepted; sessions stop
+        // reading frames and flush replies to everything already
+        // submitted, then hang up.
+        for h in sessions {
+            let _ = h.join();
+        }
+        if let Some(path) = &self.unix_path {
+            std::fs::remove_file(path).ok();
+        }
+        Ok(())
+    }
+}
+
+/// Answer an over-cap connection with one typed `overloaded` frame and
+/// hang up.
+fn refuse(mut conn: Conn, in_use: usize, limit: usize) {
+    let err = IcrError::Overloaded { in_use, limit };
+    let frame = protocol::encode_response(protocol::PROTOCOL_VERSION, 0, None, &Err(err));
+    let _ = writeln!(conn, "{}", frame.to_json());
+    let _ = conn.flush();
+}

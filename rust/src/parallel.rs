@@ -445,6 +445,16 @@ impl Exec {
         }
     }
 
+    /// Short human-readable description for banners and the `stats`
+    /// document: `serial`, `scoped(t)` or `pool(t)`.
+    pub fn describe(&self) -> String {
+        match self {
+            Exec::Serial => "serial".to_string(),
+            Exec::Scoped(t) => format!("scoped({t})"),
+            Exec::Pool(p) => format!("pool({})", p.width()),
+        }
+    }
+
     /// Run one chunked section through this executor with at most
     /// `threads` lanes (callers pass the [`par_threads`]-gated count).
     /// All three variants produce bit-identical results.
@@ -635,6 +645,14 @@ mod tests {
         }
         assert_eq!(Exec::scoped(1).threads(), 1);
         assert!(matches!(Exec::pooled(1), Exec::Serial));
+    }
+
+    #[test]
+    fn exec_describe_names_the_variant() {
+        assert_eq!(Exec::Serial.describe(), "serial");
+        assert_eq!(Exec::scoped(4).describe(), "scoped(4)");
+        assert_eq!(Exec::pooled(4).describe(), "pool(4)");
+        assert_eq!(Exec::pooled(1).describe(), "serial");
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! End-to-end tests for the network serving subsystem (`DESIGN.md` §8):
+//! a Unix-socket server under concurrent clients interleaving v1/v2
+//! frames, bitwise-deterministic sampling independent of connection
+//! interleaving and replica choice, graceful-shutdown drain,
+//! queue-overflow `overloaded` frames, the connection cap, idle
+//! timeouts, the TCP transport, and the stdio loop's exact legacy bytes
+//! (driven through the real binary).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use icr::config::{ModelConfig, ReplicaSpec, ServerConfig};
+use icr::coordinator::{protocol, Coordinator, Response};
+use icr::error::IcrError;
+use icr::json::Value;
+use icr::net::{ListenAddr, NetServer, RoutePolicy};
+
+static SOCK_ID: AtomicUsize = AtomicUsize::new(0);
+
+fn sock_path() -> PathBuf {
+    let id = SOCK_ID.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("icr_e2e_{}_{id}.sock", std::process::id()))
+}
+
+fn small_cfg() -> ServerConfig {
+    ServerConfig {
+        model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() },
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0, // no idle close unless a test opts in
+        ..ServerConfig::default()
+    }
+}
+
+struct TestServer {
+    path: PathBuf,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+fn start_unix(mut cfg: ServerConfig) -> TestServer {
+    let path = sock_path();
+    cfg.listen = ListenAddr::Unix(path.clone());
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    TestServer { path, coord, stop, handle: Some(handle) }
+}
+
+impl TestServer {
+    /// Request a drain and wait for the accept loop to finish.
+    fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.join().expect("server thread").expect("server run");
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+/// A JSONL client over either stream family.
+struct Client {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: Box<dyn Write + Send>,
+}
+
+impl Client {
+    fn unix(path: &std::path::Path) -> Client {
+        let s = UnixStream::connect(path).expect("connect unix");
+        // A generous timeout so a server bug fails the test instead of
+        // hanging the suite.
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let r = s.try_clone().expect("clone");
+        Client { reader: BufReader::new(Box::new(r)), writer: Box::new(s) }
+    }
+
+    fn tcp(addr: &str) -> Client {
+        let s = TcpStream::connect(addr).expect("connect tcp");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let r = s.try_clone().expect("clone");
+        Client { reader: BufReader::new(Box::new(r)), writer: Box::new(s) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+    }
+
+    /// Next response frame; panics at EOF.
+    fn recv(&mut self) -> Value {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "unexpected EOF from server");
+        Value::parse(&line).unwrap_or_else(|e| panic!("bad frame {line:?}: {e}"))
+    }
+
+    /// True once the server hung up.
+    fn at_eof(&mut self) -> bool {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map(|n| n == 0).unwrap_or(true)
+    }
+
+    fn rpc(&mut self, line: &str) -> Value {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn floats(v: &Value) -> Vec<f64> {
+    v.as_array().expect("array").iter().filter_map(Value::as_f64).collect()
+}
+
+fn sample_of(frame: &Value) -> Vec<f64> {
+    // v2 nests under result; v1 is flat.
+    let payload = frame.get("result").unwrap_or(frame);
+    floats(&payload.get("samples").and_then(Value::as_array).expect("samples")[0])
+}
+
+#[test]
+fn concurrent_mixed_clients_get_deterministic_bytes() {
+    // 4 concurrent clients interleave v1/v2 sample / apply_sqrt /
+    // infer_multi; every sample must be bitwise the direct engine draw
+    // for its seed, independent of connection interleaving AND of which
+    // replica serves it (seed-affinity property — `gp` is a 2-member
+    // replica set built from the default model's config).
+    let mut cfg = small_cfg();
+    cfg.replicas = vec![ReplicaSpec {
+        name: "gp".into(),
+        backend: icr::config::Backend::Native,
+        count: 2,
+    }];
+    cfg.route_policy = RoutePolicy::SeedAffinity;
+    let server = start_unix(cfg);
+    let engine = server.coord.engine().clone();
+    let dof = engine.total_dof();
+    let n_obs = engine.obs_indices().len();
+    let xi: Vec<f64> = (0..dof).map(|i| (i as f64 * 0.37).sin()).collect();
+    let want_field = engine.apply_sqrt_batch(std::slice::from_ref(&xi)).unwrap().remove(0);
+    let xi_json =
+        xi.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",");
+    let y_json = vec!["0.25"; n_obs].join(",");
+
+    std::thread::scope(|sc| {
+        for t in 0..4u64 {
+            let path = server.path.clone();
+            let engine = engine.clone();
+            let xi_json = xi_json.clone();
+            let y_json = y_json.clone();
+            let want_field = want_field.clone();
+            sc.spawn(move || {
+                let mut c = Client::unix(&path);
+                for i in 0..6u64 {
+                    let seed = 1000 + t * 100 + i;
+                    let want = engine.sample(1, seed).unwrap().remove(0);
+                    match (t + i) % 4 {
+                        0 => {
+                            // v1 untagged → default model.
+                            let v = c.rpc(&format!(
+                                r#"{{"op": "sample", "count": 1, "seed": {seed}}}"#
+                            ));
+                            assert!(v.get("v").is_none());
+                            assert_eq!(sample_of(&v), want, "v1 seed {seed}");
+                        }
+                        1 => {
+                            // v2 routed to the replica set.
+                            let v = c.rpc(&format!(
+                                r#"{{"v": 2, "op": "sample", "model": "gp", "id": {i}, "count": 1, "seed": {seed}}}"#
+                            ));
+                            assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+                            assert_eq!(v.get("model").and_then(Value::as_str), Some("gp"));
+                            assert_eq!(sample_of(&v), want, "replica seed {seed}");
+                        }
+                        2 => {
+                            let v = c.rpc(&format!(
+                                r#"{{"v": 2, "op": "apply_sqrt", "id": {i}, "xi": [{xi_json}]}}"#
+                            ));
+                            let field = floats(v.get_path("result.field").expect("field"));
+                            assert_eq!(field, want_field, "apply_sqrt diverged");
+                        }
+                        _ => {
+                            let v = c.rpc(&format!(
+                                r#"{{"v": 2, "op": "infer_multi", "id": {i}, "y_obs": [{y_json}], "sigma": 0.5, "steps": 5, "lr": 0.1, "restarts": 2, "seed": {seed}}}"#
+                            ));
+                            assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+                            let fields =
+                                v.get_path("result.fields").and_then(Value::as_array).unwrap();
+                            assert_eq!(fields.len(), 2);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // Seed affinity routed every gp request to a member keyed by seed.
+    let set = server.coord.router().set("gp").expect("replica set");
+    assert!(set.routed_to(0) + set.routed_to(1) > 0, "no request hit the replica set");
+    let mut server = server;
+    server.stop();
+}
+
+#[test]
+fn cross_connection_batching_coalesces_panels() {
+    // The acceptance criterion: 4 concurrent clients issuing batchable
+    // samples to the same model must produce mean batch size > 1 —
+    // requests from different connections coalesce into one panel.
+    let mut cfg = small_cfg();
+    cfg.workers = 1;
+    cfg.max_batch = 16;
+    cfg.max_wait_us = 20_000;
+    let server = start_unix(cfg);
+
+    std::thread::scope(|sc| {
+        for t in 0..4u64 {
+            let path = server.path.clone();
+            sc.spawn(move || {
+                let mut c = Client::unix(&path);
+                // Pipeline 10 requests, then read all replies.
+                for i in 0..10u64 {
+                    c.send(&format!(
+                        r#"{{"v": 2, "op": "sample", "id": {i}, "count": 1, "seed": {}}}"#,
+                        t * 1000 + i
+                    ));
+                }
+                for _ in 0..10 {
+                    let v = c.recv();
+                    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+                }
+            });
+        }
+    });
+
+    let applies = server.coord.metrics().counter("applies_executed").get();
+    let batches = server.coord.metrics().histogram("batch_applies").count();
+    assert_eq!(applies, 40);
+    assert!(
+        batches < applies,
+        "no cross-connection coalescing: {applies} applies in {batches} batches"
+    );
+
+    // The stats document carries live transport gauges.
+    let mut c = Client::unix(&server.path);
+    let v = c.rpc(r#"{"v": 2, "op": "stats"}"#);
+    let stats = v.get_path("result.stats").expect("stats");
+    assert!(
+        stats.get_path("transport.gauges.connections_open").and_then(Value::as_f64).unwrap()
+            >= 1.0
+    );
+    assert!(
+        stats.get_path("transport.counters.frames_in").and_then(Value::as_f64).unwrap() >= 41.0
+    );
+    assert!(
+        stats.get_path("transport.counters.connections_total").and_then(Value::as_f64).unwrap()
+            >= 5.0
+    );
+    let mut server = server;
+    server.stop();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let mut cfg = small_cfg();
+    cfg.workers = 1;
+    let mut server = start_unix(cfg);
+    let n_obs = server.coord.engine().obs_indices().len();
+    let y_json = vec!["0.1"; n_obs].join(",");
+
+    let mut c = Client::unix(&server.path);
+    // One slow inference plus five samples, all pipelined.
+    c.send(&format!(
+        r#"{{"v": 2, "op": "infer", "id": 0, "y_obs": [{y_json}], "sigma": 0.5, "steps": 3000, "lr": 0.05}}"#
+    ));
+    for i in 1..6u64 {
+        c.send(&format!(r#"{{"v": 2, "op": "sample", "id": {i}, "count": 1, "seed": {i}}}"#));
+    }
+    // Wait until every frame was read off the socket and submitted.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while server.coord.metrics().counter("requests_submitted").get() < 6 {
+        assert!(Instant::now() < deadline, "requests never submitted");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Drain: all six in-flight replies must still arrive, then EOF.
+    server.stop.store(true, Ordering::SeqCst);
+    for _ in 0..6 {
+        let v = c.recv();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    }
+    assert!(c.at_eof(), "server must hang up after the drain");
+    server.stop();
+    // And new connections are refused — the socket is gone.
+    assert!(UnixStream::connect(&server.path).is_err(), "drained server still accepting");
+}
+
+#[test]
+fn queue_overflow_answers_typed_overloaded_frames() {
+    let mut cfg = small_cfg();
+    cfg.workers = 1;
+    cfg.queue_limit = 2;
+    cfg.max_wait_us = 10;
+    let mut server = start_unix(cfg);
+    let n_obs = server.coord.engine().obs_indices().len();
+    let y_json = vec!["0.1"; n_obs].join(",");
+
+    // Pin the single worker on a slow inference.
+    let mut a = Client::unix(&server.path);
+    a.send(&format!(
+        r#"{{"v": 2, "op": "infer", "id": 0, "y_obs": [{y_json}], "sigma": 0.5, "steps": 20000, "lr": 0.05}}"#
+    ));
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !(server.coord.metrics().counter("requests_submitted").get() == 1
+        && server.coord.metrics().gauge("queue_depth").get() == 0.0)
+    {
+        assert!(Instant::now() < deadline, "inference never picked up");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Flood from a second connection: the bounded queue must reject the
+    // overflow with typed overloaded frames, in order, without hanging.
+    let mut b = Client::unix(&server.path);
+    for i in 0..20u64 {
+        b.send(&format!(r#"{{"v": 2, "op": "sample", "id": {i}, "count": 1, "seed": {i}}}"#));
+    }
+    let mut overloaded = 0usize;
+    let mut served = 0usize;
+    for i in 0..20u64 {
+        let v = b.recv();
+        assert_eq!(v.get("id").and_then(Value::as_f64), Some(i as f64), "demux out of order");
+        match v.get("ok").and_then(Value::as_bool) {
+            Some(true) => served += 1,
+            Some(false) => {
+                assert_eq!(
+                    v.get_path("error.kind").and_then(Value::as_str),
+                    Some("overloaded"),
+                    "{v:?}"
+                );
+                overloaded += 1;
+            }
+            None => panic!("untagged reply {v:?}"),
+        }
+    }
+    assert!(overloaded >= 1, "queue_limit=2 with a pinned worker never overflowed");
+    assert_eq!(overloaded + served, 20);
+    assert!(server.coord.transport_metrics().counter("requests_rejected").get() >= 1);
+
+    // The slow request itself still completes fine.
+    let v = a.recv();
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    server.stop();
+}
+
+#[test]
+fn connection_cap_refuses_with_typed_frame() {
+    let mut cfg = small_cfg();
+    cfg.max_connections = 1;
+    let mut server = start_unix(cfg);
+
+    let mut a = Client::unix(&server.path);
+    // Prove the first session is registered before connecting the second.
+    let v = a.rpc(r#"{"v": 2, "op": "stats"}"#);
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+
+    let mut b = Client::unix(&server.path);
+    let refusal = b.recv();
+    assert_eq!(refusal.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(
+        refusal.get_path("error.kind").and_then(Value::as_str),
+        Some("overloaded"),
+        "{refusal:?}"
+    );
+    assert!(b.at_eof(), "refused connection must be closed");
+    assert!(server.coord.transport_metrics().counter("connections_rejected").get() >= 1);
+
+    // The capped session keeps working.
+    let v = a.rpc(r#"{"v": 2, "op": "sample", "count": 1, "seed": 3}"#);
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    server.stop();
+}
+
+#[test]
+fn idle_connections_time_out() {
+    let mut cfg = small_cfg();
+    cfg.idle_timeout_ms = 100;
+    let mut server = start_unix(cfg);
+    let mut c = Client::unix(&server.path);
+    let v = c.rpc(r#"{"v": 2, "op": "sample", "count": 1, "seed": 1}"#);
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    // Stay quiet past the idle deadline: the server hangs up.
+    assert!(c.at_eof(), "idle connection was not closed");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.coord.transport_metrics().counter("connections_idle_closed").get() == 0 {
+        assert!(Instant::now() < deadline, "idle close not recorded");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.stop();
+}
+
+#[test]
+fn tcp_transport_serves_the_same_protocol() {
+    let mut cfg = small_cfg();
+    cfg.listen = ListenAddr::Tcp("127.0.0.1:0".into());
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind tcp");
+    let addr = server.local_addr().strip_prefix("tcp:").expect("tcp addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let want = coord.engine().sample(1, 42).unwrap().remove(0);
+    let mut c = Client::tcp(&addr);
+    let v = c.rpc(r#"{"v": 2, "op": "sample", "id": 7, "count": 1, "seed": 42}"#);
+    assert_eq!(v.get("id").and_then(Value::as_usize), Some(7));
+    assert_eq!(sample_of(&v), want, "tcp transport changed served bytes");
+    // v1 frames work over sockets too.
+    let v = c.rpc(r#"{"op": "sample", "count": 1, "seed": 42}"#);
+    assert_eq!(sample_of(&v), want);
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn stdio_serve_is_byte_identical_and_keeps_error_ids() {
+    // Drive the real binary's default stdio loop: the two error lines
+    // must carry the client ids (the satellite fix) and the sample line
+    // must be byte-for-byte the canonical encoding of the engine draw.
+    let cfg = ServerConfig {
+        model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() },
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let reference = Coordinator::start(cfg).expect("reference coordinator");
+    let samples = reference.engine().sample(1, 4).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_icr"))
+        .args(["serve", "--n", "40", "--csz", "3", "--fsz", "2", "--lvl", "3", "--workers", "1"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning icr serve");
+    {
+        let stdin = child.stdin.as_mut().expect("stdin");
+        writeln!(stdin, r#"{{"op": "transmogrify", "id": 5}}"#).unwrap();
+        writeln!(stdin, r#"{{"v": 2, "op": "nope", "id": 9}}"#).unwrap();
+        writeln!(stdin, r#"{{"op": "sample", "count": 1, "seed": 4}}"#).unwrap();
+    }
+    let out = child.wait_with_output().expect("icr serve output");
+    assert!(out.status.success(), "serve exited with {:?}", out.status);
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 3, "stdout: {stdout}");
+
+    let want_err5 = protocol::encode_response(
+        1,
+        5,
+        None,
+        &Err(IcrError::UnknownOp("transmogrify".into())),
+    )
+    .to_json();
+    assert_eq!(lines[0], want_err5, "v1 error frame must keep the client id");
+    let want_err9 =
+        protocol::encode_response(2, 9, None, &Err(IcrError::UnknownOp("nope".into()))).to_json();
+    assert_eq!(lines[1], want_err9, "v2 error frame must keep the client id");
+    // The first submitted request gets server id 1 (inline-answered
+    // error lines never consume ids).
+    let want_sample =
+        protocol::encode_response(1, 1, Some("default"), &Ok(Response::Samples(samples)))
+            .to_json();
+    assert_eq!(lines[2], want_sample, "stdio sample bytes changed");
+    reference.shutdown();
+}

@@ -95,6 +95,7 @@ fn v2_error_frames_carry_typed_kinds() {
         IcrError::ShapeMismatch { what: "xi", expected: 10, got: 3 },
         IcrError::InvalidParameter("sigma".into()),
         IcrError::Unsupported("no artifact".into()),
+        IcrError::Overloaded { in_use: 32, limit: 32 },
         IcrError::Backend("engine exploded".into()),
         IcrError::Internal("oops".into()),
     ];
@@ -231,5 +232,45 @@ fn stats_response_is_structured_json_on_the_wire() {
         Some(2),
         "stats must advertise both protocol versions"
     );
+    // The stats document advertises transports and routing policies
+    // alongside the protocol versions.
+    let transports: Vec<&str> = stats
+        .get("transports")
+        .and_then(Value::as_array)
+        .expect("transports advertised")
+        .iter()
+        .filter_map(Value::as_str)
+        .collect();
+    assert_eq!(transports, ["stdio", "tcp", "unix"]);
+    let policies: Vec<&str> = stats
+        .get("routing_policies")
+        .and_then(Value::as_array)
+        .expect("routing policies advertised")
+        .iter()
+        .filter_map(Value::as_str)
+        .collect();
+    assert_eq!(policies, ["round_robin", "least_outstanding", "seed_affinity"]);
+    assert!(stats.get_path("transport.gauges").is_some(), "transport gauge section");
     coord.shutdown();
+}
+
+#[test]
+fn malformed_frames_keep_their_correlation_id() {
+    // Satellite: a malformed-but-id-bearing line must answer with the
+    // client's id in both protocol versions (previously always id 0).
+    let (version, id) = icr::coordinator::protocol::frame_error_context(
+        r#"{"op": "transmogrify", "id": 5}"#,
+    );
+    let err = parse_request(r#"{"op": "transmogrify", "id": 5}"#).unwrap_err();
+    let v1 = encode_response(version, id.unwrap_or(0), None, &Err(err));
+    assert_eq!(v1.get("id").and_then(Value::as_usize), Some(5));
+    assert!(v1.get("v").is_none(), "v1 error reply must stay untagged");
+
+    let line = r#"{"v": 2, "op": "sample", "model": 7, "id": 11}"#;
+    let (version, id) = icr::coordinator::protocol::frame_error_context(line);
+    let err = parse_request(line).unwrap_err();
+    let v2 = encode_response(version, id.unwrap_or(0), None, &Err(err));
+    assert_eq!(v2.get("v").and_then(Value::as_usize), Some(2));
+    assert_eq!(v2.get("id").and_then(Value::as_usize), Some(11));
+    assert_eq!(v2.get_path("error.kind").and_then(Value::as_str), Some("malformed_request"));
 }
