@@ -61,11 +61,7 @@ fn main() -> anyhow::Result<()> {
     // 3. A two-model coordinator: the default native model plus the
     //    KISS-GP baseline on the SAME modeled points, routed by name.
     let mut cfg = ServerConfig::default();
-    cfg.extra_models = vec![ModelSpec {
-        name: "kiss".into(),
-        backend: Backend::Kissgp,
-        model: cfg.model.clone(),
-    }];
+    cfg.extra_models = vec![ModelSpec::local("kiss", Backend::Kissgp, cfg.model.clone())];
     let coord = Coordinator::start(cfg)?;
     println!("\ncoordinator hosts: {:?}", coord.model_names());
     for name in ["default", "kiss"] {

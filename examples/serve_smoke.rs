@@ -37,7 +37,7 @@ fn main() {
         max_wait_us: 1000,
         idle_timeout_ms: 0,
         listen: ListenAddr::Unix(sock.clone()),
-        replicas: vec![ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 2 }],
+        replicas: vec![ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()],
         route_policy: RoutePolicy::SeedAffinity,
         ..ServerConfig::default()
     };

@@ -1,9 +1,14 @@
 //! Serve-path throughput bench: a real Unix-socket server under
 //! synchronous JSONL clients, swept over connections × batch × model
-//! family. Reports requests/sec plus client-observed p50/p99 latency and
-//! the realized mean batch size (cross-connection coalescing). Run with
-//! `--json` to write `BENCH_serve.json` (overridable as `--json=path`),
-//! embedding the same hardware metadata block as `BENCH_apply.json`:
+//! family — plus a **cluster** case (front door routing a mixed
+//! local+remote replica set across a real tcp backend) and a
+//! **latency-budget** summary comparing client-observed serve p50/p99
+//! against the raw panel-apply floor of the same served model
+//! (ROADMAP serving item; `BENCH_apply.json` carries the deep-geometry
+//! apply trajectory, the floor here is measured inline on the serve
+//! model so the ratio is apples-to-apples). Run with `--json` to write
+//! `BENCH_serve.json` (overridable as `--json=path`), embedding the
+//! same hardware metadata block as `BENCH_apply.json`:
 //!
 //! ```text
 //! cargo bench --bench serve_throughput -- --json
@@ -18,10 +23,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use icr::bench::hardware_json;
-use icr::config::{Backend, ModelConfig, ServerConfig};
+use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
 use icr::coordinator::Coordinator;
 use icr::json::{self, Value};
+use icr::model::{GpModel, ModelBuilder};
 use icr::net::{ListenAddr, NetServer};
+use icr::rng::Rng;
 
 struct CaseResult {
     name: String,
@@ -53,6 +60,74 @@ fn quantile(sorted_us: &[f64], q: f64) -> f64 {
     sorted_us[idx.min(sorted_us.len() - 1)]
 }
 
+/// Drive `conns` synchronous clients × `reqs` sample requests against a
+/// running front socket; returns sorted client-observed latencies (µs).
+fn drive_clients(
+    sock: &std::path::Path,
+    model: Option<&str>,
+    conns: usize,
+    batch: usize,
+    reqs: usize,
+) -> Vec<f64> {
+    let mut all_lat_us: Vec<f64> = Vec::with_capacity(conns * reqs);
+    std::thread::scope(|sc| {
+        let mut threads = Vec::new();
+        for c in 0..conns {
+            threads.push(sc.spawn(move || {
+                let stream = UnixStream::connect(sock).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                let mut writer = stream;
+                let mut lat = Vec::with_capacity(reqs);
+                let mut line = String::new();
+                for i in 0..reqs {
+                    let seed = (c * reqs + i) as u64;
+                    let model_field = match model {
+                        Some(m) => format!(r#""model": "{m}", "#),
+                        None => String::new(),
+                    };
+                    let t = Instant::now();
+                    writeln!(
+                        writer,
+                        r#"{{"v": 2, {model_field}"op": "sample", "id": {i}, "count": {batch}, "seed": {seed}}}"#
+                    )
+                    .expect("send");
+                    writer.flush().expect("flush");
+                    line.clear();
+                    let n = reader.read_line(&mut line).expect("recv");
+                    assert!(n > 0, "server hung up");
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                    assert!(line.contains("\"ok\":true"), "request failed: {line}");
+                }
+                lat
+            }));
+        }
+        for t in threads {
+            all_lat_us.extend(t.join().expect("client thread"));
+        }
+    });
+    all_lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all_lat_us
+}
+
+fn finish_case(
+    name: String,
+    coord: &Coordinator,
+    total: usize,
+    wall: f64,
+    sorted_lat_us: &[f64],
+) -> CaseResult {
+    let applies = coord.metrics().counter("applies_executed").get() as f64;
+    let batches = coord.metrics().histogram("batch_applies").count() as f64;
+    CaseResult {
+        name,
+        requests: total,
+        requests_per_sec: total as f64 / wall,
+        p50_us: quantile(sorted_lat_us, 0.50),
+        p99_us: quantile(sorted_lat_us, 0.99),
+        mean_batch: if batches > 0.0 { applies / batches } else { 0.0 },
+    }
+}
+
 fn run_case(family: &str, backend: Backend, conns: usize, batch: usize, reqs: usize) -> CaseResult {
     let sock = std::env::temp_dir().join(format!(
         "icr_bench_{}_{family}_{conns}_{batch}.sock",
@@ -74,60 +149,130 @@ fn run_case(family: &str, backend: Backend, conns: usize, batch: usize, reqs: us
     let handle = std::thread::spawn(move || server.run());
 
     let t0 = Instant::now();
-    let mut all_lat_us: Vec<f64> = Vec::with_capacity(conns * reqs);
-    std::thread::scope(|sc| {
-        let mut threads = Vec::new();
-        for c in 0..conns {
-            let sock = sock.clone();
-            threads.push(sc.spawn(move || {
-                let stream = UnixStream::connect(&sock).expect("connect");
-                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
-                let mut writer = stream;
-                let mut lat = Vec::with_capacity(reqs);
-                let mut line = String::new();
-                for i in 0..reqs {
-                    let seed = (c * reqs + i) as u64;
-                    let t = Instant::now();
-                    writeln!(
-                        writer,
-                        r#"{{"v": 2, "op": "sample", "id": {i}, "count": {batch}, "seed": {seed}}}"#
-                    )
-                    .expect("send");
-                    writer.flush().expect("flush");
-                    line.clear();
-                    let n = reader.read_line(&mut line).expect("recv");
-                    assert!(n > 0, "server hung up");
-                    lat.push(t.elapsed().as_secs_f64() * 1e6);
-                    assert!(line.contains("\"ok\":true"), "request failed: {line}");
-                }
-                lat
-            }));
-        }
-        for t in threads {
-            all_lat_us.extend(t.join().expect("client thread"));
-        }
-    });
+    let lat = drive_clients(&sock, None, conns, batch, reqs);
     let wall = t0.elapsed().as_secs_f64();
 
-    let applies = coord.metrics().counter("applies_executed").get() as f64;
-    let batches = coord.metrics().histogram("batch_applies").count() as f64;
+    let result = finish_case(format!("serve/{family}/c{conns}/b{batch}"), &coord, conns * reqs, wall, &lat);
     stop.store(true, Ordering::SeqCst);
     handle.join().expect("server thread").expect("server run");
     if let Ok(coord) = Arc::try_unwrap(coord) {
         coord.shutdown();
     }
     std::fs::remove_file(&sock).ok();
+    result
+}
 
-    all_lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let total = conns * reqs;
-    CaseResult {
-        name: format!("serve/{family}/c{conns}/b{batch}"),
-        requests: total,
-        requests_per_sec: total as f64 / wall,
-        p50_us: quantile(&all_lat_us, 0.50),
-        p99_us: quantile(&all_lat_us, 0.99),
-        mean_batch: if batches > 0.0 { applies / batches } else { 0.0 },
+/// Cluster case: a tcp backend node plus a front door whose `gp` set
+/// mixes one local native member with the remote backend; clients
+/// address the logical name, so requests cross the process boundary for
+/// the seeds rendezvous pins to the remote member.
+fn run_cluster_case(conns: usize, batch: usize, reqs: usize) -> CaseResult {
+    let backend_cfg = ServerConfig {
+        model: ModelConfig::default(),
+        workers: 2,
+        max_batch: 16,
+        max_wait_us: 200,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Tcp("127.0.0.1:0".into()),
+        ..ServerConfig::default()
+    };
+    let backend = Arc::new(Coordinator::start(backend_cfg.clone()).expect("backend coordinator"));
+    let backend_server = NetServer::bind(&backend_cfg, backend.clone()).expect("bind backend");
+    let backend_addr = backend_server.local_addr().to_string(); // "tcp:IP:PORT"
+    let backend_stop = backend_server.shutdown_handle();
+    let backend_handle = std::thread::spawn(move || backend_server.run());
+
+    let sock = std::env::temp_dir()
+        .join(format!("icr_bench_cluster_{}_{conns}_{batch}.sock", std::process::id()));
+    let cfg = ServerConfig {
+        model: ModelConfig::default(),
+        workers: 2,
+        max_batch: 16,
+        max_wait_us: 200,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Unix(sock.clone()),
+        replicas: vec![ReplicaSpec::new(
+            "gp",
+            vec![
+                MemberSpec::local(Backend::Native),
+                MemberSpec::remote(&backend_addr).expect("remote member"),
+            ],
+        )
+        .expect("replica spec")],
+        ..ServerConfig::default()
+    };
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let t0 = Instant::now();
+    let lat = drive_clients(&sock, Some("gp"), conns, batch, reqs);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let result =
+        finish_case(format!("serve/cluster/c{conns}/b{batch}"), &front, conns * reqs, wall, &lat);
+    stop.store(true, Ordering::SeqCst);
+    handle.join().expect("front thread").expect("front run");
+    if let Ok(front) = Arc::try_unwrap(front) {
+        front.shutdown();
     }
+    backend_stop.store(true, Ordering::SeqCst);
+    backend_handle.join().expect("backend thread").expect("backend run");
+    if let Ok(backend) = Arc::try_unwrap(backend) {
+        backend.shutdown();
+    }
+    std::fs::remove_file(&sock).ok();
+    result
+}
+
+/// The raw apply floor of the served model: minimum observed single-lane
+/// `√K` panel apply, in µs, on the same N ≈ 200 native engine every
+/// serve case runs — the physical lower bound any serve p50 rides on.
+fn panel_apply_floor_us() -> f64 {
+    let model: Arc<dyn GpModel> =
+        ModelBuilder::from_config(ModelConfig::default()).build().expect("floor model");
+    let dof = model.total_dof();
+    let mut rng = Rng::new(7);
+    let xi = rng.standard_normal_vec(dof);
+    // Warm.
+    let _ = model.apply_sqrt_panel(&xi, 1).expect("floor apply");
+    let mut best = f64::INFINITY;
+    for _ in 0..64 {
+        let t = Instant::now();
+        let _ = model.apply_sqrt_panel(&xi, 1).expect("floor apply");
+        best = best.min(t.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+/// The `latency_budget` summary: serve p50/p99 per case expressed as a
+/// multiple of the panel-apply floor (ROADMAP serving item).
+fn latency_budget_json(floor_us: f64, results: &[CaseResult]) -> Value {
+    let cases: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("name", json::s(&r.name)),
+                ("p50_us", json::num(r.p50_us)),
+                ("p99_us", json::num(r.p99_us)),
+                ("p50_over_floor", json::num(if floor_us > 0.0 { r.p50_us / floor_us } else { 0.0 })),
+                ("p99_over_floor", json::num(if floor_us > 0.0 { r.p99_us / floor_us } else { 0.0 })),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("panel_apply_floor_us", json::num(floor_us)),
+        (
+            "floor_source",
+            json::s(
+                "inline: min single-lane apply on the default NATIVE N≈200 model — exact \
+                 floor for serve/native/* and serve/cluster/* cases; approximate for other \
+                 families",
+            ),
+        ),
+        ("cases", json::arr(cases)),
+    ])
 }
 
 fn main() {
@@ -146,24 +291,45 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(200);
 
-    println!("== serve throughput — connections × batch × model family ==");
+    println!("== serve throughput — connections × batch × model family (+ cluster) ==");
     println!(
         "{:<28} {:>10} {:>14} {:>10} {:>10} {:>10}",
         "case", "requests", "req/s", "p50_us", "p99_us", "mean_batch"
     );
+    let print_row = |r: &CaseResult| {
+        println!(
+            "{:<28} {:>10} {:>14.0} {:>10.1} {:>10.1} {:>10.2}",
+            r.name, r.requests, r.requests_per_sec, r.p50_us, r.p99_us, r.mean_batch
+        );
+    };
     let families = [("native", Backend::Native), ("kissgp", Backend::Kissgp)];
     let mut results: Vec<CaseResult> = Vec::new();
     for (family, backend) in families {
         for conns in [1usize, 4] {
             for batch in [1usize, 8] {
                 let r = run_case(family, backend, conns, batch, reqs);
-                println!(
-                    "{:<28} {:>10} {:>14.0} {:>10.1} {:>10.1} {:>10.2}",
-                    r.name, r.requests, r.requests_per_sec, r.p50_us, r.p99_us, r.mean_batch
-                );
+                print_row(&r);
                 results.push(r);
             }
         }
+    }
+    // Cluster cases: front door + tcp backend, mixed-member routing.
+    for conns in [1usize, 4] {
+        let r = run_cluster_case(conns, 1, reqs);
+        print_row(&r);
+        results.push(r);
+    }
+
+    // Latency budget: serve latency over the raw apply floor.
+    let floor_us = panel_apply_floor_us();
+    println!("panel-apply floor (N≈200 native, single lane): {floor_us:.1} µs");
+    for r in &results {
+        println!(
+            "  {:<26} p50 {:>8.1}x floor   p99 {:>8.1}x floor",
+            r.name,
+            if floor_us > 0.0 { r.p50_us / floor_us } else { 0.0 },
+            if floor_us > 0.0 { r.p99_us / floor_us } else { 0.0 },
+        );
     }
 
     if json_out {
@@ -172,6 +338,7 @@ fn main() {
             ("version", json::s(icr::VERSION)),
             ("requests_per_client", json::num(reqs as f64)),
             ("hardware", hardware_json()),
+            ("latency_budget", latency_budget_json(floor_us, &results)),
             ("results", json::arr(results.iter().map(CaseResult::to_json).collect())),
         ]);
         match std::fs::write(&json_path, format!("{}\n", doc.to_json_pretty())) {

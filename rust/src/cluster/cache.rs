@@ -1,0 +1,222 @@
+//! Bounded LRU response cache for deterministic sample requests.
+//!
+//! `sample` is the one protocol op whose reply is a pure function of its
+//! frame: the model expands `(seed, count)` into a fixed excitation
+//! panel and applies `√K`, so two requests with the same key are
+//! byte-identical by the determinism contract (`DESIGN.md` §4) — which
+//! is exactly what makes them cacheable. Everything else either mutates
+//! observable state (`stats`), depends on request payloads too large to
+//! key on (`apply_sqrt`, `infer*` carry full vectors), or is cheap
+//! metadata (`describe`), so only seeded samples are cached.
+//!
+//! The cache is consulted in `Coordinator::submit_to` *before* replica
+//! routing (a hit never touches a member, local or remote) and keyed on
+//! the **logical** model name, so every member of a replica set shares
+//! one entry. Entries are `Arc`-shared row panels; eviction is
+//! least-recently-used under the `--cache-entries` bound. Hit, miss,
+//! insert and eviction counts feed the `cluster.cache` stats section.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::json::{self, Value};
+
+/// Key of one cacheable request: the client-addressed (pre-routing)
+/// model name, the op, and the full determinism context.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub model: String,
+    pub op: &'static str,
+    pub seed: u64,
+    pub count: usize,
+}
+
+impl CacheKey {
+    /// The key of a `sample` request addressed to `model`.
+    pub fn sample(model: &str, seed: u64, count: usize) -> CacheKey {
+        CacheKey { model: model.to_string(), op: "sample", seed, count }
+    }
+}
+
+struct Entry {
+    rows: Arc<Vec<Vec<f64>>>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    /// Monotone use counter — the LRU clock (no wall time involved, so
+    /// behavior is fully deterministic).
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    inserts: u64,
+    evictions: u64,
+}
+
+/// Bounded LRU over sample responses; `capacity == 0` disables every
+/// operation (the default — cacheless serving is byte-identical to the
+/// pre-cluster coordinator).
+pub struct ResponseCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize) -> ResponseCache {
+        ResponseCache { capacity, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// Cached rows for `key`, bumping its recency; counts a hit or miss.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<Vec<Vec<f64>>>> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let found = inner.map.get_mut(key).map(|entry| {
+            entry.last_used = tick;
+            entry.rows.clone()
+        });
+        if found.is_some() {
+            inner.hits += 1;
+        } else {
+            inner.misses += 1;
+        }
+        found
+    }
+
+    /// Store `rows` under `key`, evicting least-recently-used entries
+    /// down to the capacity bound.
+    pub fn insert(&self, key: CacheKey, rows: Arc<Vec<Vec<f64>>>) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, Entry { rows, last_used: tick });
+        inner.inserts += 1;
+        while inner.map.len() > self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map over capacity");
+            inner.map.remove(&oldest);
+            inner.evictions += 1;
+        }
+    }
+
+    /// The `cluster.cache` stats section.
+    pub fn to_json(&self) -> Value {
+        let inner = self.inner.lock().unwrap();
+        json::obj(vec![
+            ("enabled", Value::Bool(self.capacity > 0)),
+            ("capacity", json::num(self.capacity as f64)),
+            ("entries", json::num(inner.map.len() as f64)),
+            ("hits", json::num(inner.hits as f64)),
+            ("misses", json::num(inner.misses as f64)),
+            ("inserts", json::num(inner.inserts as f64)),
+            ("evictions", json::num(inner.evictions as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(v: f64) -> Arc<Vec<Vec<f64>>> {
+        Arc::new(vec![vec![v]])
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let c = ResponseCache::new(0);
+        assert!(!c.enabled());
+        c.insert(CacheKey::sample("gp", 1, 1), rows(1.0));
+        assert!(c.get(&CacheKey::sample("gp", 1, 1)).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 0);
+    }
+
+    #[test]
+    fn hit_returns_the_stored_rows() {
+        let c = ResponseCache::new(4);
+        let key = CacheKey::sample("gp", 42, 3);
+        assert!(c.get(&key).is_none());
+        c.insert(key.clone(), rows(7.5));
+        let got = c.get(&key).expect("hit");
+        assert_eq!(*got, vec![vec![7.5]]);
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        // Different seed / count / model are distinct keys.
+        assert!(c.get(&CacheKey::sample("gp", 43, 3)).is_none());
+        assert!(c.get(&CacheKey::sample("gp", 42, 2)).is_none());
+        assert!(c.get(&CacheKey::sample("other", 42, 3)).is_none());
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        let c = ResponseCache::new(2);
+        c.insert(CacheKey::sample("gp", 1, 1), rows(1.0));
+        c.insert(CacheKey::sample("gp", 2, 1), rows(2.0));
+        // Touch seed 1 so seed 2 is the LRU victim.
+        assert!(c.get(&CacheKey::sample("gp", 1, 1)).is_some());
+        c.insert(CacheKey::sample("gp", 3, 1), rows(3.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&CacheKey::sample("gp", 1, 1)).is_some(), "recently used entry evicted");
+        assert!(c.get(&CacheKey::sample("gp", 2, 1)).is_none(), "LRU entry survived");
+        assert!(c.get(&CacheKey::sample("gp", 3, 1)).is_some());
+    }
+
+    #[test]
+    fn stats_json_counts_everything() {
+        let c = ResponseCache::new(1);
+        c.insert(CacheKey::sample("gp", 1, 1), rows(1.0));
+        c.insert(CacheKey::sample("gp", 2, 1), rows(2.0));
+        let _ = c.get(&CacheKey::sample("gp", 2, 1));
+        let _ = c.get(&CacheKey::sample("gp", 1, 1));
+        let v = c.to_json();
+        assert_eq!(v.get("enabled"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("capacity").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("entries").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("hits").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("misses").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("inserts").and_then(Value::as_usize), Some(2));
+        assert_eq!(v.get("evictions").and_then(Value::as_usize), Some(1));
+    }
+}

@@ -1,0 +1,496 @@
+//! Pooled, reconnecting, pipelining JSONL client for remote
+//! coordinators — the wire half of the remote model backend.
+//!
+//! A [`RemoteClient`] owns a small pool of TCP connections to one
+//! backend `icr serve --listen tcp:` process. Requests are protocol-v2
+//! frames tagged with a client correlation id; every connection has a
+//! **reader thread demultiplexing replies by id**, so any number of
+//! calls pipeline over one socket without head-of-line blocking on the
+//! client side (the server already pipelines per session, `DESIGN.md`
+//! §8). Error frames decode back into typed [`IcrError`]s via
+//! [`protocol::decode_response`], so a remote `overloaded` or
+//! `shape_mismatch` propagates through the front door exactly like a
+//! local one.
+//!
+//! Reconnection: a connection slot found dead (EOF, write failure,
+//! refused connect) is rebuilt on the next call; one retry per call
+//! covers a backend restart between calls. Health checks ride the same
+//! path — [`RemoteClient::probe`] is a short-timeout `stats` round trip
+//! the coordinator's health monitor uses to eject dead members.
+//!
+//! Per-endpoint counters (connects, requests ok/failed, request_latency
+//! histogram, outstanding) live in a [`Registry`] surfaced by the
+//! `cluster` stats section.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::protocol::{self, RequestFrame};
+use crate::coordinator::request::{Request, Response};
+use crate::error::IcrError;
+use crate::json::Value;
+use crate::metrics::Registry;
+use crate::model::ModelInfo;
+
+/// How long one remote call may take before the client gives up. Wide —
+/// inference sweeps are legitimate wire ops.
+pub const CALL_TIMEOUT: Duration = Duration::from_secs(120);
+/// Health probes answer fast or count as dead.
+pub const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+/// TCP connect budget per address candidate (data wires).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Control-wire connect budget: probes must stay cheap even against a
+/// blackholed host (SYN dropped, not refused), or one dead member's
+/// probe would stall the whole health cycle past the interval.
+const PROBE_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+/// Reader poll granularity (shutdown-flag checks between reads).
+const READ_POLL: Duration = Duration::from_millis(50);
+/// Connections per endpoint. Two sockets keep a slow panel fan-out from
+/// serializing behind a long inference on the same wire.
+pub const DEFAULT_POOL: usize = 2;
+
+/// One live connection: a locked write half plus the reply-demux map its
+/// reader thread serves.
+struct Wire {
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, mpsc::Sender<Result<Response, IcrError>>>>,
+    dead: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+impl Wire {
+    /// Fail every waiting call — the reader exits, the peer is gone.
+    fn fail_pending(&self, endpoint: &str) {
+        let mut pending = self.pending.lock().unwrap();
+        for (_, tx) in pending.drain() {
+            let _ = tx.send(Err(IcrError::Backend(format!(
+                "remote {endpoint} closed the connection"
+            ))));
+        }
+    }
+}
+
+/// One in-flight call returned by [`RemoteClient::submit`]: the reply
+/// receiver plus enough identity to cancel the wire's demux entry if
+/// the caller gives up (see [`RemoteClient::finish`]).
+pub struct PendingReply {
+    rx: mpsc::Receiver<Result<Response, IcrError>>,
+    /// The wire the frame went out on and its correlation id; `None`
+    /// when the request never made it onto a wire (the error is already
+    /// queued on `rx`).
+    sent: Option<(std::sync::Weak<Wire>, u64)>,
+}
+
+/// Pooled pipelining client for one remote endpoint.
+pub struct RemoteClient {
+    /// `HOST:PORT` (what the sockets dial).
+    addr: String,
+    /// `tcp:HOST:PORT` (what stats and errors print).
+    endpoint: String,
+    slots: Vec<Mutex<Option<Arc<Wire>>>>,
+    /// Dedicated control connection for health probes (and `describe`).
+    /// Backend sessions reply in submission order per connection, so a
+    /// probe sharing a data wire would queue behind long inferences and
+    /// time out spuriously — control traffic gets its own socket.
+    control: Mutex<Option<Arc<Wire>>>,
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+    metrics: Registry,
+}
+
+impl RemoteClient {
+    /// Client for `addr` (`tcp:HOST:PORT`, or bare `HOST:PORT`). Lazy —
+    /// no connection is made until the first call.
+    pub fn new(addr: &str, pool: usize) -> Result<RemoteClient, IcrError> {
+        let hostport = addr.strip_prefix("tcp:").unwrap_or(addr).trim().to_string();
+        // One grammar for everyone: the same validator the config
+        // parsers run, so CLI-accepted and client-accepted addresses
+        // can never diverge.
+        let endpoint = crate::config::validate_remote_addr(&format!("tcp:{hostport}"))
+            .map_err(|e| IcrError::InvalidParameter(format!("{e:#}")))?;
+        let slots = (0..pool.max(1)).map(|_| Mutex::new(None)).collect();
+        Ok(RemoteClient {
+            addr: hostport,
+            endpoint,
+            slots,
+            control: Mutex::new(None),
+            rr: AtomicUsize::new(0),
+            next_id: AtomicU64::new(1),
+            metrics: Registry::new(),
+        })
+    }
+
+    /// `tcp:HOST:PORT`.
+    pub fn endpoint(&self) -> &str {
+        &self.endpoint
+    }
+
+    /// Per-endpoint counters: `connects`, `requests_ok`,
+    /// `requests_failed`, `request_latency`, gauge `outstanding`.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Requests currently awaiting a reply across the pool.
+    pub fn outstanding(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|slot| {
+                slot.lock()
+                    .unwrap()
+                    .as_ref()
+                    .map(|w| w.pending.lock().unwrap().len())
+                    .unwrap_or(0)
+            })
+            .sum()
+    }
+
+    fn connect(&self, connect_timeout: Duration) -> Result<Arc<Wire>, IcrError> {
+        let mut last: Option<std::io::Error> = None;
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| IcrError::Backend(format!("resolving {}: {e}", self.endpoint)))?;
+        let mut stream: Option<TcpStream> = None;
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, connect_timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let stream = stream.ok_or_else(|| {
+            IcrError::Backend(format!(
+                "connecting {}: {}",
+                self.endpoint,
+                last.map(|e| e.to_string()).unwrap_or_else(|| "no addresses".into())
+            ))
+        })?;
+        stream.set_nodelay(true).ok();
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| IcrError::Backend(format!("cloning socket to {}: {e}", self.endpoint)))?;
+        let wire = Arc::new(Wire {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+        let reader_wire = wire.clone();
+        let endpoint = self.endpoint.clone();
+        let metrics = self.metrics.clone();
+        std::thread::Builder::new()
+            .name("icr-remote-reader".into())
+            .spawn(move || reader_loop(reader_wire, read_half, endpoint, metrics))
+            .map_err(|e| IcrError::Backend(format!("spawning remote reader: {e}")))?;
+        self.metrics.counter("connects").inc();
+        Ok(wire)
+    }
+
+    /// A live wire in `slot`, rebuilding it when dead.
+    fn wire_in(
+        &self,
+        slot: &Mutex<Option<Arc<Wire>>>,
+        connect_timeout: Duration,
+    ) -> Result<Arc<Wire>, IcrError> {
+        let mut guard = slot.lock().unwrap();
+        if let Some(w) = guard.as_ref() {
+            if !w.dead.load(Ordering::SeqCst) {
+                return Ok(w.clone());
+            }
+            w.shutdown.store(true, Ordering::SeqCst);
+        }
+        let fresh = self.connect(connect_timeout)?;
+        *guard = Some(fresh.clone());
+        Ok(fresh)
+    }
+
+    /// A live data wire from the pool (round-robin), or the control wire.
+    fn wire(&self, control: bool) -> Result<Arc<Wire>, IcrError> {
+        if control {
+            return self.wire_in(&self.control, PROBE_CONNECT_TIMEOUT);
+        }
+        self.wire_in(
+            &self.slots[self.rr.fetch_add(1, Ordering::Relaxed) % self.slots.len()],
+            CONNECT_TIMEOUT,
+        )
+    }
+
+    /// Send one request and return a pending handle immediately — the
+    /// pipelining primitive. Retries once on a freshly dead wire so a
+    /// backend restart between calls is invisible. Every `submit` must
+    /// be paired with one [`Self::finish`] (which settles the
+    /// `outstanding` gauge and outcome counters, and cancels the demux
+    /// entry on timeout).
+    pub fn submit(&self, model: Option<&str>, request: Request) -> PendingReply {
+        self.submit_on(false, model, request)
+    }
+
+    fn submit_on(&self, control: bool, model: Option<&str>, request: Request) -> PendingReply {
+        self.metrics.gauge("outstanding").inc();
+        let mut last_err: Option<IcrError> = None;
+        // Control traffic (probes) gets ONE attempt: a failed probe is
+        // itself the signal, and the health monitor retries next
+        // interval anyway — retrying here would double a dead member's
+        // stall inside the health cycle.
+        let attempts = if control { 1 } else { 2 };
+        for _attempt in 0..attempts {
+            let wire = match self.wire(control) {
+                Ok(w) => w,
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            // Fresh channel per attempt: a reply (or failure) from an
+            // abandoned earlier wire can never shadow the live attempt.
+            let (tx, rx) = mpsc::channel();
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let frame = RequestFrame::v2(model, Some(id), request.clone());
+            let line = protocol::encode_request(&frame).to_json();
+            wire.pending.lock().unwrap().insert(id, tx);
+            let wrote = {
+                let mut w = wire.writer.lock().unwrap();
+                writeln!(w, "{line}").and_then(|_| w.flush())
+            };
+            match wrote {
+                Ok(()) => {
+                    // Close the submit/reader race: the reader stores
+                    // `dead` BEFORE draining the pending map, so if it
+                    // died around our insert (its drain may have run
+                    // first, orphaning the entry) this re-check is
+                    // guaranteed to see it — fail fast and retry instead
+                    // of waiting out the full call timeout.
+                    if wire.dead.load(Ordering::SeqCst) {
+                        wire.pending.lock().unwrap().remove(&id);
+                        last_err = Some(IcrError::Backend(format!(
+                            "remote {} closed during submit",
+                            self.endpoint
+                        )));
+                        continue;
+                    }
+                    return PendingReply { rx, sent: Some((Arc::downgrade(&wire), id)) };
+                }
+                Err(e) => {
+                    wire.pending.lock().unwrap().remove(&id);
+                    wire.dead.store(true, Ordering::SeqCst);
+                    wire.shutdown.store(true, Ordering::SeqCst);
+                    last_err =
+                        Some(IcrError::Backend(format!("writing to {}: {e}", self.endpoint)));
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Err(last_err
+            .unwrap_or_else(|| IcrError::Backend(format!("remote {} unavailable", self.endpoint)))));
+        PendingReply { rx, sent: None }
+    }
+
+    /// Await one submitted reply with the given timeout, recording
+    /// latency and outcome counters. On timeout the correlation-id entry
+    /// is removed from the wire's demux map, so abandoned calls never
+    /// leak map entries or phantom `outstanding()` counts.
+    pub fn finish(
+        &self,
+        pending: &PendingReply,
+        t0: Instant,
+        timeout: Duration,
+    ) -> Result<Response, IcrError> {
+        let result = match pending.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(_) => {
+                if let Some((wire, id)) = &pending.sent {
+                    if let Some(w) = wire.upgrade() {
+                        w.pending.lock().unwrap().remove(id);
+                    }
+                }
+                Err(IcrError::Backend(format!(
+                    "remote {} timed out after {:.1}s",
+                    self.endpoint,
+                    timeout.as_secs_f64()
+                )))
+            }
+        };
+        self.metrics.gauge("outstanding").dec();
+        self.metrics.histogram("request_latency").observe(t0);
+        match &result {
+            Ok(_) => self.metrics.counter("requests_ok").inc(),
+            Err(_) => self.metrics.counter("requests_failed").inc(),
+        }
+        result
+    }
+
+    /// One blocking round trip with the standard timeout.
+    pub fn call(&self, model: Option<&str>, request: Request) -> Result<Response, IcrError> {
+        self.call_with_timeout(model, request, CALL_TIMEOUT)
+    }
+
+    pub fn call_with_timeout(
+        &self,
+        model: Option<&str>,
+        request: Request,
+        timeout: Duration,
+    ) -> Result<Response, IcrError> {
+        let t0 = Instant::now();
+        let pending = self.submit(model, request);
+        self.finish(&pending, t0, timeout)
+    }
+
+    /// Short-timeout liveness check (a `stats` round trip on the control
+    /// connection, so it never queues behind long data requests) — the
+    /// health monitor's probe.
+    pub fn probe(&self) -> Result<(), IcrError> {
+        let t0 = Instant::now();
+        let pending = self.submit_on(true, None, Request::Stats);
+        self.finish(&pending, t0, PROBE_TIMEOUT).map(|_| ())
+    }
+
+    /// Fetch the identity of the remote model (`None` = remote default),
+    /// over the control connection.
+    pub fn describe(&self, model: Option<&str>) -> Result<ModelInfo, IcrError> {
+        let t0 = Instant::now();
+        let pending = self.submit_on(true, model, Request::Describe);
+        match self.finish(&pending, t0, CALL_TIMEOUT)? {
+            Response::Describe(info) => Ok(info),
+            other => Err(IcrError::Backend(format!(
+                "remote {} answered describe with {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
+}
+
+impl Drop for RemoteClient {
+    fn drop(&mut self) {
+        // Readers poll the shutdown flag; without this they would park on
+        // their sockets until the server hangs up.
+        for slot in self.slots.iter().chain(std::iter::once(&self.control)) {
+            if let Some(w) = slot.lock().unwrap().as_ref() {
+                w.shutdown.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Demultiplex reply frames by correlation id until EOF, socket error or
+/// client shutdown. Partial lines survive read-timeout polls (same
+/// framing discipline as `net::session::LineReader`).
+fn reader_loop(wire: Arc<Wire>, mut stream: TcpStream, endpoint: String, metrics: Registry) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let mut pending_bytes: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 8192];
+    'outer: loop {
+        // Dispatch every complete line already buffered.
+        while let Some(pos) = pending_bytes.iter().position(|&b| b == b'\n') {
+            let rest = pending_bytes.split_off(pos + 1);
+            let mut line = std::mem::replace(&mut pending_bytes, rest);
+            line.pop();
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            dispatch(&wire, &line, &metrics);
+        }
+        if wire.shutdown.load(Ordering::SeqCst) {
+            break 'outer;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => break 'outer,
+            Ok(n) => pending_bytes.extend_from_slice(&buf[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => break 'outer,
+        }
+    }
+    wire.dead.store(true, Ordering::SeqCst);
+    wire.fail_pending(&endpoint);
+}
+
+fn dispatch(wire: &Wire, line: &[u8], metrics: &Registry) {
+    let text = String::from_utf8_lossy(line);
+    if text.trim().is_empty() {
+        return;
+    }
+    let frame = Value::parse(&text).ok().and_then(|v| protocol::decode_response(&v).ok());
+    match frame {
+        Some(frame) => {
+            if let Some(tx) = wire.pending.lock().unwrap().remove(&frame.id) {
+                let _ = tx.send(frame.result);
+            } else {
+                metrics.counter("frames_unmatched").inc();
+            }
+        }
+        None => metrics.counter("frames_undecodable").inc(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_validation() {
+        assert!(RemoteClient::new("tcp:127.0.0.1:7777", 2).is_ok());
+        assert!(RemoteClient::new("127.0.0.1:7777", 1).is_ok());
+        assert_eq!(
+            RemoteClient::new("tcp:localhost:1234", 2).unwrap().endpoint(),
+            "tcp:localhost:1234"
+        );
+        for bad in ["", "tcp:", "tcp:host", "tcp::7777", "tcp:host:notaport", "unix:/x"] {
+            assert!(RemoteClient::new(bad, 2).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn timed_out_calls_cancel_their_pending_entries() {
+        // A server that accepts and never answers: the call must time
+        // out typed AND remove its demux entry (no leak, no phantom
+        // outstanding count).
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("tcp:{}", listener.local_addr().unwrap());
+        let silent = std::thread::spawn(move || {
+            listener.set_nonblocking(true).unwrap();
+            let mut conns = Vec::new();
+            let t0 = Instant::now();
+            while t0.elapsed() < Duration::from_secs(3) {
+                if let Ok((s, _)) = listener.accept() {
+                    conns.push(s);
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let c = RemoteClient::new(&addr, 1).unwrap();
+        match c.call_with_timeout(None, Request::Stats, Duration::from_millis(200)) {
+            Err(IcrError::Backend(msg)) => assert!(msg.contains("timed out"), "{msg}"),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        assert_eq!(c.outstanding(), 0, "timed-out call leaked a pending demux entry");
+        assert_eq!(c.metrics().counter("requests_failed").get(), 1);
+        drop(c);
+        let _ = silent.join();
+    }
+
+    #[test]
+    fn unreachable_endpoint_fails_typed_not_hanging() {
+        // Port 1 on localhost refuses immediately; the error must be a
+        // typed backend failure delivered through the receiver.
+        let c = RemoteClient::new("tcp:127.0.0.1:1", 1).unwrap();
+        match c.call_with_timeout(None, Request::Stats, Duration::from_secs(10)) {
+            Err(IcrError::Backend(msg)) => assert!(msg.contains("127.0.0.1:1"), "{msg}"),
+            other => panic!("expected backend error, got {other:?}"),
+        }
+        assert_eq!(c.metrics().counter("requests_failed").get(), 1);
+        assert!(c.probe().is_err());
+        assert_eq!(c.outstanding(), 0);
+    }
+}

@@ -1,0 +1,48 @@
+//! Multi-node cluster subsystem (`DESIGN.md` §9): one logical server
+//! over a fleet of `icr serve` processes.
+//!
+//! PR 4 (`crate::net`) made one coordinator a concurrent network server;
+//! this layer federates many of them behind one front door:
+//!
+//! - **[`client`]** — [`RemoteClient`]: a pooled, reconnecting,
+//!   pipelining protocol-v2 tcp client with correlation-id reply demux,
+//!   typed propagation of remote [`crate::error::IcrError`] frames,
+//!   per-endpoint outstanding/latency counters and short-timeout health
+//!   probes (a `stats` round trip).
+//! - **[`remote`]** — [`RemoteModel`]: the [`crate::model::GpModel`]
+//!   proxy over that client, registered like any other entry
+//!   (`--models gp=remote:tcp:HOST:PORT`, or as replica-set members via
+//!   `--replicas gp=native:2,remote:tcp:h1:7777,remote:tcp:h2:7777`), so
+//!   the session scheduler and replica router treat local and remote
+//!   members uniformly.
+//! - **[`cache`]** — [`ResponseCache`]: a bounded LRU over
+//!   deterministic `sample` replies (`--cache-entries`), consulted in
+//!   `submit_to` before replica routing, with hit/miss/eviction metrics
+//!   in the `cluster.cache` stats section.
+//!
+//! Health-aware routing lives in [`crate::net::router`] (member states,
+//! rendezvous seed affinity); the coordinator's health monitor drives it
+//! by probing every replica-set member each `--health-interval-ms`.
+
+pub mod cache;
+pub mod client;
+pub mod remote;
+
+pub use cache::{CacheKey, ResponseCache};
+pub use client::RemoteClient;
+pub use remote::RemoteModel;
+
+/// Cluster-layer capabilities advertised by `icr --version` and the
+/// `stats` document, mirroring how §8 advertises transports and routing
+/// policies.
+pub const CAPABILITIES: [&str; 3] = ["remote_backend", "response_cache", "health_checks"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capabilities_are_advertised_in_order() {
+        assert_eq!(CAPABILITIES, ["remote_backend", "response_cache", "health_checks"]);
+    }
+}

@@ -1,0 +1,224 @@
+//! [`RemoteModel`]: a [`GpModel`] proxying every operation to a backend
+//! coordinator over the pooled [`RemoteClient`].
+//!
+//! Construction does one `describe` round trip to learn the remote
+//! default model's identity (descriptor, domain points, observation
+//! pattern), after which the front door hosts the proxy as an ordinary
+//! registry entry — the session scheduler and replica router treat local
+//! and remote members uniformly (`DESIGN.md` §9).
+//!
+//! **Determinism.** The JSON codec prints `f64`s in shortest-round-trip
+//! form and parses them back exactly, so excitations shipped to the
+//! backend and fields shipped back are bit-identical to a local apply:
+//! a front door serving `--replicas gp=native:1,remote:tcp:...` returns
+//! the same sample bytes whichever member a seed lands on (asserted in
+//! `cluster_e2e.rs`).
+//!
+//! **Batching.** The coordinator's batcher detects remote entries
+//! (`endpoint() != "local"`) and proxies each request as its own
+//! compact wire op instead of expanding seeds into excitation panels:
+//! a routed `sample` travels as one ~60-byte frame and the backend
+//! expands the seed to the identical panel itself. Direct
+//! [`GpModel::apply_sqrt_panel`] calls on the proxy pipeline one
+//! `apply_sqrt` frame per lane over the pooled client (the backend's
+//! own batcher re-coalesces them with whatever else it is serving) and
+//! reassemble the output panel in lane order.
+
+use std::time::Instant;
+
+use crate::error::IcrError;
+use crate::model::{GpModel, ModelDescriptor, ModelInfo, MultiInference};
+use crate::optim::Trace;
+
+use super::client::{RemoteClient, CALL_TIMEOUT, DEFAULT_POOL};
+use crate::coordinator::request::{Request, Response};
+
+/// A GP model served by a remote coordinator.
+pub struct RemoteModel {
+    client: RemoteClient,
+    /// Remote identity, fetched once at construction.
+    info: ModelInfo,
+}
+
+impl RemoteModel {
+    /// Connect to `addr` (`tcp:HOST:PORT`) and fetch the remote default
+    /// model's identity with one `describe` round trip. Fails typed if
+    /// the backend is unreachable or predates the `describe` op.
+    pub fn connect(addr: &str) -> Result<RemoteModel, IcrError> {
+        let client = RemoteClient::new(addr, DEFAULT_POOL)?;
+        let info = client.describe(None)?;
+        Ok(RemoteModel { client, info })
+    }
+
+    /// The underlying pooled client (endpoint, counters, probes).
+    pub fn client(&self) -> &RemoteClient {
+        &self.client
+    }
+
+    fn expect_field(&self, resp: Response) -> Result<Vec<f64>, IcrError> {
+        match resp {
+            Response::Field(f) => Ok(f),
+            other => Err(IcrError::Backend(format!(
+                "remote {} answered apply_sqrt with {other:?}",
+                self.client.endpoint()
+            ))),
+        }
+    }
+}
+
+impl GpModel for RemoteModel {
+    fn descriptor(&self) -> ModelDescriptor {
+        let d = &self.info.descriptor;
+        ModelDescriptor {
+            name: format!("remote({} -> {})", self.client.endpoint(), d.name),
+            backend: "remote",
+            kernel: d.kernel.clone(),
+            chart: d.chart.clone(),
+            n: d.n,
+            dof: d.dof,
+        }
+    }
+
+    fn n_points(&self) -> usize {
+        self.info.descriptor.n
+    }
+
+    fn total_dof(&self) -> usize {
+        self.info.descriptor.dof
+    }
+
+    fn domain_points(&self) -> Vec<f64> {
+        self.info.domain.clone()
+    }
+
+    fn obs_indices(&self) -> Vec<usize> {
+        self.info.obs.clone()
+    }
+
+    fn endpoint(&self) -> String {
+        self.client.endpoint().to_string()
+    }
+
+    fn health_probe(&self) -> Result<(), IcrError> {
+        self.client.probe()
+    }
+
+    fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+        crate::model::batch_via_panel(self, xi)
+    }
+
+    fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+        let dof = self.total_dof();
+        if panel.len() != batch * dof {
+            return Err(IcrError::ShapeMismatch {
+                what: "panel",
+                expected: batch * dof,
+                got: panel.len(),
+            });
+        }
+        // Pipeline one apply per lane; replies demux by correlation id.
+        let t0 = Instant::now();
+        let lanes: Vec<_> = (0..batch)
+            .map(|b| {
+                self.client.submit(
+                    None,
+                    Request::ApplySqrt { xi: panel[b * dof..(b + 1) * dof].to_vec() },
+                )
+            })
+            .collect();
+        let n = self.n_points();
+        let mut out = Vec::with_capacity(batch * n);
+        let mut first_err: Option<IcrError> = None;
+        for pending in &lanes {
+            // Collect every lane even after a failure so the outstanding
+            // gauge and counters settle for the whole panel.
+            match self.client.finish(pending, t0, CALL_TIMEOUT) {
+                Ok(resp) => match self.expect_field(resp) {
+                    Ok(field) if field.len() == n => out.extend_from_slice(&field),
+                    Ok(field) => {
+                        first_err.get_or_insert(IcrError::ShapeMismatch {
+                            what: "field",
+                            expected: n,
+                            got: field.len(),
+                        });
+                    }
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                },
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn sample(&self, count: usize, seed: u64) -> Result<Vec<Vec<f64>>, IcrError> {
+        // One frame; the backend expands the seed to the identical
+        // excitation panel (DESIGN.md §4 determinism) so bytes match the
+        // default expand-then-apply path without shipping excitations.
+        match self.client.call(None, Request::Sample { count, seed })? {
+            Response::Samples(rows) => Ok(rows),
+            other => Err(IcrError::Backend(format!(
+                "remote {} answered sample with {other:?}",
+                self.client.endpoint()
+            ))),
+        }
+    }
+
+    fn loss_grad(
+        &self,
+        _xi: &[f64],
+        _y_obs: &[f64],
+        _sigma_n: f64,
+    ) -> Result<(f64, Vec<f64>), IcrError> {
+        Err(IcrError::Unsupported(
+            "remote models serve infer/infer_multi over the wire; loss_grad has no wire op"
+                .into(),
+        ))
+    }
+
+    fn infer(
+        &self,
+        y_obs: &[f64],
+        sigma_n: f64,
+        steps: usize,
+        lr: f64,
+    ) -> Result<(Vec<f64>, Trace), IcrError> {
+        match self.client.call(
+            None,
+            Request::Infer { y_obs: y_obs.to_vec(), sigma_n, steps, lr },
+        )? {
+            Response::Inference { field, trace } => Ok((field, trace)),
+            other => Err(IcrError::Backend(format!(
+                "remote {} answered infer with {other:?}",
+                self.client.endpoint()
+            ))),
+        }
+    }
+
+    fn infer_multi(
+        &self,
+        y_obs: &[f64],
+        sigma_n: f64,
+        steps: usize,
+        lr: f64,
+        restarts: usize,
+        seed: u64,
+    ) -> Result<MultiInference, IcrError> {
+        match self.client.call(
+            None,
+            Request::InferMulti { y_obs: y_obs.to_vec(), sigma_n, steps, lr, restarts, seed },
+        )? {
+            Response::MultiInference(mi) => Ok(mi),
+            other => Err(IcrError::Backend(format!(
+                "remote {} answered infer_multi with {other:?}",
+                self.client.endpoint()
+            ))),
+        }
+    }
+}

@@ -20,6 +20,10 @@ use crate::json::{self, Value};
 use crate::kernels::{parse_kernel, Kernel};
 use crate::net::{ListenAddr, RoutePolicy};
 
+/// Engine families a registry entry can run on, advertised by
+/// `icr --version` and the `stats` document (`model_families`).
+pub const MODEL_FAMILIES: [&str; 5] = ["native", "pjrt", "kissgp", "exact", "remote"];
+
 /// Which engine family executes a model's applies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -31,6 +35,10 @@ pub enum Backend {
     Kissgp,
     /// Exact dense reference (Cholesky square root, O(N³) build).
     Exact,
+    /// Remote coordinator reached over the cluster tcp client; the
+    /// address travels separately (`ModelSpec::remote` /
+    /// `MemberSpec::remote`, spelled `remote:tcp:HOST:PORT`).
+    Remote,
 }
 
 impl Backend {
@@ -40,7 +48,8 @@ impl Backend {
             "pjrt" | "xla" => Ok(Backend::Pjrt),
             "kissgp" | "kiss" => Ok(Backend::Kissgp),
             "exact" | "dense" => Ok(Backend::Exact),
-            other => anyhow::bail!("unknown backend {other:?} (native|pjrt|kissgp|exact)"),
+            "remote" => Ok(Backend::Remote),
+            other => anyhow::bail!("unknown backend {other:?} (native|pjrt|kissgp|exact|remote)"),
         }
     }
 
@@ -50,8 +59,36 @@ impl Backend {
             Backend::Pjrt => "pjrt",
             Backend::Kissgp => "kissgp",
             Backend::Exact => "exact",
+            Backend::Remote => "remote",
         }
     }
+}
+
+/// Split a `remote:tcp:HOST:PORT` backend value into the family and the
+/// validated remote address (`tcp:HOST:PORT`); plain family names pass
+/// through with no address.
+fn parse_backend_value(s: &str) -> Result<(Backend, Option<String>)> {
+    let s = s.trim();
+    match s.strip_prefix("remote:") {
+        Some(addr) => Ok((Backend::Remote, Some(validate_remote_addr(addr)?))),
+        None => Ok((Backend::parse(s)?, None)),
+    }
+}
+
+/// Validate a remote member address: `tcp:HOST:PORT`. The single
+/// grammar check shared by the config parsers and the cluster client —
+/// keep CLI-accepted and client-accepted addresses identical.
+pub(crate) fn validate_remote_addr(addr: &str) -> Result<String> {
+    let addr = addr.trim();
+    let hostport = addr
+        .strip_prefix("tcp:")
+        .ok_or_else(|| anyhow::anyhow!("remote address {addr:?} must be tcp:HOST:PORT"))?;
+    anyhow::ensure!(
+        hostport.rsplit_once(':').map(|(h, p)| !h.is_empty() && p.parse::<u16>().is_ok())
+            == Some(true),
+        "remote address {addr:?} must be tcp:HOST:PORT"
+    );
+    Ok(addr.to_string())
 }
 
 /// The GP model: kernel + chart + refinement geometry.
@@ -170,81 +207,175 @@ impl ModelConfig {
 pub const DEFAULT_MODEL_NAME: &str = "default";
 
 /// A named model hosted by the coordinator: registry key + engine family
-/// + model configuration.
+/// + model configuration. Remote entries (`Backend::Remote`) carry the
+/// backend coordinator's address in `remote`.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
     pub name: String,
     pub backend: Backend,
     pub model: ModelConfig,
+    /// `Some("tcp:HOST:PORT")` for `Backend::Remote` entries.
+    pub remote: Option<String>,
 }
 
 impl ModelSpec {
+    /// An in-process entry (every family except `Backend::Remote`).
+    pub fn local(name: &str, backend: Backend, model: ModelConfig) -> ModelSpec {
+        ModelSpec { name: name.to_string(), backend, model, remote: None }
+    }
+
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("name", json::s(&self.name)),
             ("backend", json::s(self.backend.name())),
             ("model", self.model.to_json()),
-        ])
+        ];
+        if let Some(addr) = &self.remote {
+            fields.push(("remote", json::s(addr)));
+        }
+        json::obj(fields)
     }
 }
 
-/// A replica set declaration: `count` identical registry entries named
-/// `{name}@0..{name}@count-1`, all built from the server's base model on
-/// `backend` and sharing the coordinator's one worker pool. Requests
-/// addressed to the logical `name` are routed across the members by the
-/// configured [`RoutePolicy`] (`DESIGN.md` §8).
+/// One member of a replica set: an in-process engine family, or a remote
+/// coordinator reached over the cluster tcp client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberSpec {
+    pub backend: Backend,
+    /// `Some("tcp:HOST:PORT")` when `backend == Backend::Remote`.
+    pub remote: Option<String>,
+}
+
+impl MemberSpec {
+    pub fn local(backend: Backend) -> MemberSpec {
+        MemberSpec { backend, remote: None }
+    }
+
+    pub fn remote(addr: &str) -> Result<MemberSpec> {
+        Ok(MemberSpec { backend: Backend::Remote, remote: Some(validate_remote_addr(addr)?) })
+    }
+
+    /// Parse one member run: `native` / `exact:2` expand to `count`
+    /// identical local members; `remote:tcp:HOST:PORT` is one remote
+    /// member.
+    pub fn parse_run(s: &str) -> Result<Vec<MemberSpec>> {
+        let s = s.trim();
+        if let Some(addr) = s.strip_prefix("remote:") {
+            return Ok(vec![MemberSpec::remote(addr)?]);
+        }
+        let (backend, count) = match s.split_once(':') {
+            Some((b, c)) => {
+                let count: usize = c
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("member spec {s:?}: bad count: {e}"))?;
+                (Backend::parse(b.trim())?, count)
+            }
+            None => (Backend::parse(s)?, 1),
+        };
+        anyhow::ensure!(count >= 1, "member spec {s:?} needs count >= 1");
+        anyhow::ensure!(
+            backend != Backend::Remote,
+            "member spec {s:?}: remote members need an address (remote:tcp:HOST:PORT)"
+        );
+        Ok(vec![MemberSpec::local(backend); count])
+    }
+
+    /// The spec string this member parses back from (`native`,
+    /// `remote:tcp:HOST:PORT`).
+    pub fn spec_string(&self) -> String {
+        match &self.remote {
+            Some(addr) => format!("remote:{addr}"),
+            None => self.backend.name().to_string(),
+        }
+    }
+}
+
+/// A replica set declaration: an ordered member list registered as
+/// `{name}@0..{name}@k-1`, every local member built from the server's
+/// base model and sharing the coordinator's one worker pool, remote
+/// members proxied to their backend coordinator. Requests addressed to
+/// the logical `name` are routed across the members by the configured
+/// [`RoutePolicy`] (`DESIGN.md` §8/§9).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReplicaSpec {
     pub name: String,
-    pub backend: Backend,
-    pub count: usize,
+    pub members: Vec<MemberSpec>,
 }
 
 impl ReplicaSpec {
     /// Validated constructor — the one path every replica declaration
     /// (CLI or config file) goes through, enforcing the `@` reservation
     /// for member names.
-    pub fn new(name: &str, backend: Backend, count: usize) -> Result<ReplicaSpec> {
+    pub fn new(name: &str, members: Vec<MemberSpec>) -> Result<ReplicaSpec> {
         let name = name.trim();
         anyhow::ensure!(!name.is_empty(), "replica set name may not be empty");
         anyhow::ensure!(
             !name.contains('@'),
             "replica set name {name:?} may not contain '@' (reserved for member names)"
         );
-        anyhow::ensure!(count >= 1, "replica set {name:?} needs count >= 1");
-        Ok(ReplicaSpec { name: name.to_string(), backend, count })
+        anyhow::ensure!(!members.is_empty(), "replica set {name:?} needs at least one member");
+        Ok(ReplicaSpec { name: name.to_string(), members })
     }
 
-    /// Parse one `name=backend:count` entry (`gp=native:3`; a missing
-    /// `:count` means one replica).
-    pub fn parse(entry: &str) -> Result<ReplicaSpec> {
-        let (name, rest) = entry
-            .trim()
-            .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("--replicas entry {entry:?} is not name=backend:count"))?;
-        let (backend, count) = match rest.split_once(':') {
-            Some((b, c)) => {
-                let count: usize = c
-                    .trim()
-                    .parse()
-                    .map_err(|e| anyhow::anyhow!("--replicas entry {entry:?}: bad count: {e}"))?;
-                (Backend::parse(b.trim())?, count)
+    /// `count` identical local members on one backend — the pre-cluster
+    /// `gp=native:3` shape.
+    pub fn homogeneous(name: &str, backend: Backend, count: usize) -> Result<ReplicaSpec> {
+        anyhow::ensure!(count >= 1, "replica set {name:?} needs count >= 1");
+        Self::new(name, vec![MemberSpec::local(backend); count])
+    }
+
+    /// Parse the full `--replicas` list. Comma-separated pieces:
+    /// `name=RUN` starts a set, bare `RUN` pieces extend the most recent
+    /// one, so `gp=native:2,remote:tcp:h1:7777,remote:tcp:h2:7777` is one
+    /// four-member† set and `gp=native:3,ref=exact` stays two sets.
+    /// († two local + two remote members.)
+    pub fn parse_list(list: &str) -> Result<Vec<ReplicaSpec>> {
+        let mut sets: Vec<(String, Vec<MemberSpec>)> = Vec::new();
+        for piece in list.split(',').filter(|p| !p.trim().is_empty()) {
+            let piece = piece.trim();
+            match piece.split_once('=') {
+                Some((name, run)) => {
+                    let members = MemberSpec::parse_run(run)
+                        .with_context(|| format!("--replicas entry {piece:?}"))?;
+                    sets.push((name.to_string(), members));
+                }
+                None => match sets.last_mut() {
+                    Some((_, members)) => members.extend(
+                        MemberSpec::parse_run(piece)
+                            .with_context(|| format!("--replicas entry {piece:?}"))?,
+                    ),
+                    None => anyhow::bail!(
+                        "--replicas entry {piece:?} extends no set (start with name=backend[:count])"
+                    ),
+                },
             }
-            None => (Backend::parse(rest.trim())?, 1),
-        };
-        Self::new(name, backend, count).with_context(|| format!("--replicas entry {entry:?}"))
+        }
+        sets.into_iter()
+            .map(|(name, members)| {
+                ReplicaSpec::new(&name, members)
+                    .with_context(|| format!("--replicas set {name:?}"))
+            })
+            .collect()
+    }
+
+    /// Number of members.
+    pub fn count(&self) -> usize {
+        self.members.len()
     }
 
     /// Registry entry names of the members, in routing order.
     pub fn member_names(&self) -> Vec<String> {
-        (0..self.count).map(|i| format!("{}@{i}", self.name)).collect()
+        (0..self.members.len()).map(|i| format!("{}@{i}", self.name)).collect()
     }
 
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("name", json::s(&self.name)),
-            ("backend", json::s(self.backend.name())),
-            ("count", json::num(self.count as f64)),
+            (
+                "members",
+                json::arr(self.members.iter().map(|m| json::s(&m.spec_string())).collect()),
+            ),
         ])
     }
 }
@@ -288,10 +419,19 @@ pub struct ServerConfig {
     /// `overloaded` error instead of queueing — the backpressure signal
     /// socket sessions forward to their clients.
     pub queue_limit: usize,
-    /// Replica sets over the registry (`--replicas gp=native:3`).
+    /// Replica sets over the registry (`--replicas gp=native:3` or mixed
+    /// local+remote: `gp=native:2,remote:tcp:h1:7777,remote:tcp:h2:7777`).
     pub replicas: Vec<ReplicaSpec>,
     /// How replica sets pick members (`--route-policy`).
     pub route_policy: RoutePolicy,
+    /// Bound on the response cache for deterministic sample requests
+    /// (`--cache-entries`, 0 = disabled — the default, so cacheless
+    /// serving is byte-identical to the pre-cluster behavior).
+    pub cache_entries: usize,
+    /// Replica-member health-probe period (`--health-interval-ms`, 0
+    /// disables the monitor). A member failing its probe is ejected from
+    /// routing within one interval and restored when the probe recovers.
+    pub health_interval_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -312,6 +452,8 @@ impl Default for ServerConfig {
             queue_limit: 0,
             replicas: Vec::new(),
             route_policy: RoutePolicy::default(),
+            cache_entries: 0,
+            health_interval_ms: 2000,
         }
     }
 }
@@ -340,9 +482,10 @@ impl ServerConfig {
             }
         }
         if let Some(list) = args.get("models") {
-            // `--models kiss=kissgp,ref=exact`: extra named models sharing
-            // the default model's geometry/kernel but each on its own
-            // engine family (the quick path to a multi-model server; the
+            // `--models kiss=kissgp,ref=exact,gp=remote:tcp:h:7777`: extra
+            // named models sharing the default model's geometry/kernel
+            // but each on its own engine family — or proxied to a remote
+            // coordinator (the quick path to a multi-model server; the
             // config file's `models` array allows full per-model configs).
             cfg.extra_models = list
                 .split(',')
@@ -353,10 +496,13 @@ impl ServerConfig {
                         .split_once('=')
                         .ok_or_else(|| anyhow::anyhow!("--models entry {pair:?} is not name=backend"))?;
                     anyhow::ensure!(!name.trim().is_empty(), "--models entry {pair:?} has empty name");
+                    let (backend, remote) = parse_backend_value(backend)
+                        .with_context(|| format!("--models entry {pair:?}"))?;
                     Ok(ModelSpec {
                         name: name.trim().to_string(),
-                        backend: Backend::parse(backend.trim())?,
+                        backend,
                         model: cfg.model.clone(),
+                        remote,
                     })
                 })
                 .collect::<Result<Vec<_>>>()?;
@@ -376,26 +522,21 @@ impl ServerConfig {
         cfg.idle_timeout_ms = args.get_u64("idle-timeout-ms", cfg.idle_timeout_ms)?;
         cfg.queue_limit = args.get_usize("queue-limit", cfg.queue_limit)?;
         if let Some(list) = args.get("replicas") {
-            cfg.replicas = list
-                .split(',')
-                .filter(|p| !p.trim().is_empty())
-                .map(ReplicaSpec::parse)
-                .collect::<Result<Vec<_>>>()?;
+            cfg.replicas = ReplicaSpec::parse_list(list)?;
         }
         if let Some(p) = args.get("route-policy") {
             cfg.route_policy = RoutePolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
         }
+        cfg.cache_entries = args.get_usize("cache-entries", cfg.cache_entries)?;
+        cfg.health_interval_ms = args.get_u64("health-interval-ms", cfg.health_interval_ms)?;
         cfg.validate_models()?;
         Ok(cfg)
     }
 
     /// The full registry: the default model first, then the extras.
     pub fn model_specs(&self) -> Vec<ModelSpec> {
-        let mut specs = vec![ModelSpec {
-            name: DEFAULT_MODEL_NAME.to_string(),
-            backend: self.backend,
-            model: self.model.clone(),
-        }];
+        let mut specs =
+            vec![ModelSpec::local(DEFAULT_MODEL_NAME, self.backend, self.model.clone())];
         specs.extend(self.extra_models.iter().cloned());
         specs
     }
@@ -406,6 +547,11 @@ impl ServerConfig {
             anyhow::ensure!(
                 seen.insert(spec.name.clone()),
                 "duplicate model name {:?} in registry",
+                spec.name
+            );
+            anyhow::ensure!(
+                spec.backend != Backend::Remote || spec.remote.is_some(),
+                "remote model {:?} needs an address (remote:tcp:HOST:PORT)",
                 spec.name
             );
         }
@@ -427,19 +573,22 @@ impl ServerConfig {
         Ok(())
     }
 
-    /// Registry entries the replica sets add: `count` members per set,
-    /// all on the set's backend with the base model's geometry.
+    /// Registry entries the replica sets add: one per member, local
+    /// members on the member's backend with the base model's geometry,
+    /// remote members proxied to their address.
     pub fn replica_model_specs(&self) -> Vec<ModelSpec> {
-        self.replicas
-            .iter()
-            .flat_map(|r| {
-                r.member_names().into_iter().map(|name| ModelSpec {
+        let mut specs = Vec::new();
+        for r in &self.replicas {
+            for (name, m) in r.member_names().into_iter().zip(&r.members) {
+                specs.push(ModelSpec {
                     name,
-                    backend: r.backend,
+                    backend: m.backend,
                     model: self.model.clone(),
-                })
-            })
-            .collect()
+                    remote: m.remote.clone(),
+                });
+            }
+        }
+        specs
     }
 
     pub fn apply_file(&mut self, path: &Path) -> Result<()> {
@@ -484,6 +633,12 @@ impl ServerConfig {
         if let Some(p) = v.get("route_policy").and_then(Value::as_str) {
             self.route_policy = RoutePolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
         }
+        if let Some(c) = v.get("cache_entries").and_then(Value::as_usize) {
+            self.cache_entries = c;
+        }
+        if let Some(h) = v.get("health_interval_ms").and_then(Value::as_usize) {
+            self.health_interval_ms = h as u64;
+        }
         if let Some(reps) = v.get("replicas").and_then(Value::as_array) {
             let default_backend = self.backend;
             self.replicas = reps
@@ -494,12 +649,25 @@ impl ServerConfig {
                         .and_then(Value::as_str)
                         .ok_or_else(|| anyhow::anyhow!("replicas[] entry missing \"name\""))?
                         .to_string();
+                    // Either an explicit member-spec list ("members":
+                    // ["native:2", "remote:tcp:h:7777"]) or the legacy
+                    // homogeneous backend+count shape.
+                    if let Some(list) = entry.get("members").and_then(Value::as_array) {
+                        let mut members = Vec::new();
+                        for m in list {
+                            let s = m.as_str().ok_or_else(|| {
+                                anyhow::anyhow!("replicas[].members entries must be strings")
+                            })?;
+                            members.extend(MemberSpec::parse_run(s)?);
+                        }
+                        return ReplicaSpec::new(&name, members);
+                    }
                     let backend = match entry.get("backend").and_then(Value::as_str) {
                         Some(b) => Backend::parse(b)?,
                         None => default_backend,
                     };
                     let count = entry.get("count").and_then(Value::as_usize).unwrap_or(1);
-                    ReplicaSpec::new(&name, backend, count)
+                    ReplicaSpec::homogeneous(&name, backend, count)
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
@@ -525,15 +693,22 @@ impl ServerConfig {
                 .and_then(Value::as_str)
                 .ok_or_else(|| anyhow::anyhow!("models[] entry missing \"name\""))?
                 .to_string();
-            let backend = match entry.get("backend").and_then(Value::as_str) {
-                Some(b) => Backend::parse(b)?,
-                None => self.backend,
+            let (backend, remote) = match entry.get("backend").and_then(Value::as_str) {
+                Some(b) => parse_backend_value(b)
+                    .with_context(|| format!("models[] entry {name:?}"))?,
+                None => (self.backend, None),
+            };
+            // A separate "remote" key also carries the address
+            // ({"backend": "remote", "remote": "tcp:h:7777"}).
+            let remote = match entry.get("remote").and_then(Value::as_str) {
+                Some(addr) => Some(validate_remote_addr(addr)?),
+                None => remote,
             };
             let mut model = self.model.clone();
             if let Some(m) = entry.get("model") {
                 model.apply_json(m);
             }
-            self.extra_models.push(ModelSpec { name, backend, model });
+            self.extra_models.push(ModelSpec { name, backend, model, remote });
         }
         Ok(())
     }
@@ -561,6 +736,8 @@ impl ServerConfig {
                 json::arr(self.replicas.iter().map(ReplicaSpec::to_json).collect()),
             ),
             ("route_policy", json::s(self.route_policy.name())),
+            ("cache_entries", json::num(self.cache_entries as f64)),
+            ("health_interval_ms", json::num(self.health_interval_ms as f64)),
         ])
     }
 }
@@ -671,8 +848,11 @@ mod tests {
 
     #[test]
     fn all_backends_roundtrip_names() {
-        for b in [Backend::Native, Backend::Pjrt, Backend::Kissgp, Backend::Exact] {
+        for b in
+            [Backend::Native, Backend::Pjrt, Backend::Kissgp, Backend::Exact, Backend::Remote]
+        {
             assert_eq!(Backend::parse(b.name()).unwrap(), b);
+            assert!(MODEL_FAMILIES.contains(&b.name()));
         }
     }
 
@@ -697,7 +877,8 @@ mod tests {
             &argv(
                 "serve --listen tcp:127.0.0.1:7070 --max-connections 8 \
                  --idle-timeout-ms 1500 --queue-limit 32 \
-                 --replicas gp=native:3,ref=exact --route-policy round_robin",
+                 --replicas gp=native:3,ref=exact --route-policy round_robin \
+                 --cache-entries 64 --health-interval-ms 500",
             ),
             &[],
         )
@@ -708,16 +889,73 @@ mod tests {
         assert_eq!(cfg.idle_timeout_ms, 1500);
         assert_eq!(cfg.queue_limit, 32);
         assert_eq!(cfg.route_policy, RoutePolicy::RoundRobin);
+        assert_eq!(cfg.cache_entries, 64);
+        assert_eq!(cfg.health_interval_ms, 500);
         assert_eq!(cfg.replicas.len(), 2);
         assert_eq!(cfg.replicas[0].name, "gp");
-        assert_eq!(cfg.replicas[0].count, 3);
+        assert_eq!(cfg.replicas[0].count(), 3);
         assert_eq!(cfg.replicas[0].member_names(), vec!["gp@0", "gp@1", "gp@2"]);
-        assert_eq!(cfg.replicas[1].backend, Backend::Exact);
-        assert_eq!(cfg.replicas[1].count, 1);
+        assert_eq!(cfg.replicas[1].members[0].backend, Backend::Exact);
+        assert_eq!(cfg.replicas[1].count(), 1);
         let member_specs = cfg.replica_model_specs();
         assert_eq!(member_specs.len(), 4);
         assert_eq!(member_specs[0].name, "gp@0");
         assert_eq!(member_specs[3].backend, Backend::Exact);
+    }
+
+    #[test]
+    fn mixed_local_remote_replica_sets_parse() {
+        // Bare pieces after a set extend it: one 4-member mixed set.
+        let sets =
+            ReplicaSpec::parse_list("gp=native:2,remote:tcp:h1:7777,remote:tcp:h2:7777").unwrap();
+        assert_eq!(sets.len(), 1);
+        let gp = &sets[0];
+        assert_eq!(gp.count(), 4);
+        assert_eq!(gp.member_names(), vec!["gp@0", "gp@1", "gp@2", "gp@3"]);
+        assert_eq!(gp.members[0], MemberSpec::local(Backend::Native));
+        assert_eq!(gp.members[2].backend, Backend::Remote);
+        assert_eq!(gp.members[2].remote.as_deref(), Some("tcp:h1:7777"));
+        assert_eq!(gp.members[3].remote.as_deref(), Some("tcp:h2:7777"));
+        // Spec strings round-trip.
+        assert_eq!(gp.members[3].spec_string(), "remote:tcp:h2:7777");
+        assert_eq!(MemberSpec::parse_run("remote:tcp:h2:7777").unwrap(), vec![gp.members[3].clone()]);
+        // Member specs materialize with the remote address attached.
+        let cfg = ServerConfig { replicas: sets, ..ServerConfig::default() };
+        let specs = cfg.replica_model_specs();
+        assert_eq!(specs[1].backend, Backend::Native);
+        assert_eq!(specs[1].remote, None);
+        assert_eq!(specs[3].backend, Backend::Remote);
+        assert_eq!(specs[3].remote.as_deref(), Some("tcp:h2:7777"));
+
+        // A leading bare piece has no set to extend; malformed remote
+        // addresses and addressless remote members are rejected.
+        assert!(ReplicaSpec::parse_list("remote:tcp:h1:7777").is_err());
+        assert!(ReplicaSpec::parse_list("gp=remote:unix:/x").is_err());
+        assert!(ReplicaSpec::parse_list("gp=remote:tcp:h1").is_err());
+        assert!(ReplicaSpec::parse_list("gp=remote").is_err());
+    }
+
+    #[test]
+    fn models_flag_accepts_remote_entries() {
+        let args =
+            Args::parse(&argv("serve --models gp=remote:tcp:127.0.0.1:7777,ref=exact"), &[])
+                .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.extra_models[0].backend, Backend::Remote);
+        assert_eq!(cfg.extra_models[0].remote.as_deref(), Some("tcp:127.0.0.1:7777"));
+        assert_eq!(cfg.extra_models[1].backend, Backend::Exact);
+        assert_eq!(cfg.extra_models[1].remote, None);
+        // An addressless remote entry fails validation with a clear error.
+        let args = Args::parse(&argv("serve --models gp=remote"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        // Config dump carries the address.
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(
+            v.get_path("models").and_then(Value::as_array).unwrap()[0]
+                .get("remote")
+                .and_then(Value::as_str),
+            Some("tcp:127.0.0.1:7777")
+        );
     }
 
     #[test]
@@ -727,6 +965,10 @@ mod tests {
         assert_eq!(cfg.queue_limit, 0);
         assert!(cfg.replicas.is_empty());
         assert_eq!(cfg.route_policy, RoutePolicy::SeedAffinity);
+        // The response cache is off by default; the health monitor is on
+        // (it only runs when replica sets exist).
+        assert_eq!(cfg.cache_entries, 0);
+        assert_eq!(cfg.health_interval_ms, 2000);
     }
 
     #[test]
@@ -738,7 +980,9 @@ mod tests {
             r#"{"listen": "unix:/tmp/icr-test.sock", "max_connections": 4,
                 "idle_timeout_ms": 250, "queue_limit": 16,
                 "route_policy": "least_outstanding",
-                "replicas": [{"name": "gp", "count": 2}]}"#,
+                "cache_entries": 32, "health_interval_ms": 750,
+                "replicas": [{"name": "gp", "count": 2},
+                             {"name": "mix", "members": ["exact", "remote:tcp:h1:7070"]}]}"#,
         )
         .unwrap();
         let args =
@@ -749,15 +993,24 @@ mod tests {
         assert_eq!(cfg.idle_timeout_ms, 250);
         assert_eq!(cfg.queue_limit, 16);
         assert_eq!(cfg.route_policy, RoutePolicy::LeastOutstanding);
-        assert_eq!(cfg.replicas, vec![ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 2 }]);
+        assert_eq!(cfg.cache_entries, 32);
+        assert_eq!(cfg.health_interval_ms, 750);
+        assert_eq!(
+            cfg.replicas[0],
+            ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()
+        );
+        assert_eq!(cfg.replicas[1].members[0], MemberSpec::local(Backend::Exact));
+        assert_eq!(cfg.replicas[1].members[1].remote.as_deref(), Some("tcp:h1:7070"));
         // And the new knobs ride through the config dump.
         let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
         assert_eq!(v.get("listen").and_then(Value::as_str), Some("unix:/tmp/icr-test.sock"));
         assert_eq!(v.get("route_policy").and_then(Value::as_str), Some("least_outstanding"));
-        assert_eq!(
-            v.get_path("replicas").and_then(Value::as_array).map(|a| a.len()),
-            Some(1)
-        );
+        assert_eq!(v.get("cache_entries").and_then(Value::as_usize), Some(32));
+        assert_eq!(v.get("health_interval_ms").and_then(Value::as_usize), Some(750));
+        let reps = v.get_path("replicas").and_then(Value::as_array).unwrap();
+        assert_eq!(reps.len(), 2);
+        let mix_members = reps[1].get("members").and_then(Value::as_array).unwrap();
+        assert_eq!(mix_members[1].as_str(), Some("remote:tcp:h1:7070"));
         std::fs::remove_file(&path).ok();
     }
 
@@ -773,12 +1026,12 @@ mod tests {
         assert!(ServerConfig::resolve(&args).is_err());
         // '@' reserved in logical names; zero count rejected — on the
         // CLI path and the shared constructor the config file uses.
-        assert!(ReplicaSpec::parse("a@b=native:2").is_err());
-        assert!(ReplicaSpec::parse("gp=native:0").is_err());
-        assert!(ReplicaSpec::parse("gp").is_err());
-        assert_eq!(ReplicaSpec::parse("gp=kissgp").unwrap().count, 1);
-        assert!(ReplicaSpec::new("a@b", Backend::Native, 2).is_err());
-        assert!(ReplicaSpec::new("  ", Backend::Native, 2).is_err());
+        assert!(ReplicaSpec::parse_list("a@b=native:2").is_err());
+        assert!(ReplicaSpec::parse_list("gp=native:0").is_err());
+        assert!(ReplicaSpec::parse_list("gp").is_err());
+        assert_eq!(ReplicaSpec::parse_list("gp=kissgp").unwrap()[0].count(), 1);
+        assert!(ReplicaSpec::homogeneous("a@b", Backend::Native, 2).is_err());
+        assert!(ReplicaSpec::homogeneous("  ", Backend::Native, 2).is_err());
         // The config-file path funnels through the same validation.
         let dir = std::env::temp_dir();
         let path = dir.join(format!("icr_badrep_{}.json", std::process::id()));

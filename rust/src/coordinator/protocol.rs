@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 
 use crate::error::IcrError;
 use crate::json::{self, Value};
-use crate::model::MultiInference;
+use crate::model::{ModelInfo, MultiInference};
 use crate::optim::Trace;
 
 use super::request::{Request, RequestId, Response};
@@ -144,6 +144,7 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
             }
         }
         "stats" => Request::Stats,
+        "describe" => Request::Describe,
         other => return Err(IcrError::UnknownOp(other.to_string())),
     };
     Ok(RequestFrame { version, model, client_id, request })
@@ -204,7 +205,7 @@ pub fn encode_request(frame: &RequestFrame) -> Value {
             fields.push(("restarts", json::num(*restarts as f64)));
             fields.push(("seed", json::num(*seed as f64)));
         }
-        Request::Stats => {}
+        Request::Stats | Request::Describe => {}
     }
     json::obj(fields)
 }
@@ -251,6 +252,7 @@ fn result_payload(resp: &Response) -> Value {
             ("best", json::num(mi.best as f64)),
         ]),
         Response::Stats(v) => json::obj(vec![("stats", v.clone())]),
+        Response::Describe(info) => json::obj(vec![("describe", info.to_json())]),
     }
 }
 
@@ -367,6 +369,8 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
             traces,
             best: payload.get("best").and_then(Value::as_usize).unwrap_or(0),
         })
+    } else if let Some(info) = payload.get("describe") {
+        Response::Describe(ModelInfo::from_json(info)?)
     } else if let Some(stats) = payload.get("stats") {
         // v1 carries stats as a serialized-JSON string; v2 as an object.
         match stats {
@@ -454,6 +458,7 @@ mod tests {
                 },
             ),
             RequestFrame::v2(Some("ref"), Some(2), Request::Stats),
+            RequestFrame::v2(Some("gp"), Some(8), Request::Describe),
         ];
         for frame in &frames {
             let line = encode_request(frame).to_json();
@@ -479,6 +484,32 @@ mod tests {
         match frame.result.unwrap() {
             Response::MultiInference(back) => assert_eq!(back, mi),
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn describe_response_roundtrips_both_versions() {
+        let info = ModelInfo {
+            descriptor: crate::model::ModelDescriptor {
+                name: "native(n=3)".into(),
+                backend: "native",
+                kernel: "matern32(rho=1.0, amp=1.0)".into(),
+                chart: "identity".into(),
+                n: 3,
+                dof: 5,
+            },
+            domain: vec![0.0, 0.5, 1.0],
+            obs: vec![0, 2],
+        };
+        for version in [1u64, 2] {
+            let encoded =
+                encode_response(version, 4, Some("gp"), &Ok(Response::Describe(info.clone())));
+            let frame = decode_response(&encoded).unwrap();
+            assert_eq!(frame.id, 4);
+            match frame.result.unwrap() {
+                Response::Describe(back) => assert_eq!(back, info, "v{version}"),
+                other => panic!("v{version}: {other:?}"),
+            }
         }
     }
 

@@ -5,7 +5,7 @@ use std::sync::mpsc;
 
 use crate::error::IcrError;
 use crate::json::Value;
-use crate::model::MultiInference;
+use crate::model::{ModelInfo, MultiInference};
 use crate::optim::Trace;
 
 /// Monotonically increasing request identifier.
@@ -37,6 +37,10 @@ pub enum Request {
     },
     /// Metrics snapshot (structured, per-model).
     Stats,
+    /// Full identity of the addressed model (descriptor + domain points
+    /// + observation pattern) — what a cluster front door fetches once
+    /// to host this model as a remote registry member.
+    Describe,
 }
 
 impl Request {
@@ -63,6 +67,7 @@ impl Request {
             Request::Infer { .. } => "infer",
             Request::InferMulti { .. } => "infer_multi",
             Request::Stats => "stats",
+            Request::Describe => "describe",
         }
     }
 }
@@ -79,13 +84,20 @@ pub enum Response {
     /// Structured stats document (see `Registry::to_json` and the
     /// server's per-model assembly).
     Stats(Value),
+    /// Model identity for `describe` requests.
+    Describe(ModelInfo),
 }
 
 /// A queued request with its routing target and reply channel.
 pub struct Envelope {
     pub id: RequestId,
-    /// Registry name of the model serving this request.
+    /// Registry name of the model serving this request (post-routing:
+    /// always a hosted entry, e.g. `gp@1`).
     pub model: String,
+    /// The name the client addressed (pre-routing: a logical replica-set
+    /// name, or `model` itself) — the response-cache key, so every
+    /// member of a set shares one cache entry.
+    pub logical: String,
     pub request: Request,
     pub reply: mpsc::Sender<Result<Response, IcrError>>,
 }
@@ -99,6 +111,7 @@ mod tests {
         assert!(Request::Sample { count: 3, seed: 1 }.batchable());
         assert!(Request::ApplySqrt { xi: vec![] }.batchable());
         assert!(!Request::Stats.batchable());
+        assert!(!Request::Describe.batchable());
         assert!(
             !Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.batchable()
         );
@@ -141,5 +154,6 @@ mod tests {
             "infer_multi"
         );
         assert_eq!(Request::Stats.op(), "stats");
+        assert_eq!(Request::Describe.op(), "describe");
     }
 }

@@ -20,12 +20,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{ServerConfig, DEFAULT_MODEL_NAME};
+use crate::cluster::{CacheKey, ResponseCache, CAPABILITIES};
+use crate::config::{ServerConfig, DEFAULT_MODEL_NAME, MODEL_FAMILIES};
 use crate::error::IcrError;
 use crate::json::{self, Value};
 use crate::metrics::Registry;
 use crate::model::{GpModel, ModelBuilder};
-use crate::net::{RoutePolicy, Router, TRANSPORTS};
+use crate::net::{MemberState, RoutePolicy, Router, TRANSPORTS};
 use crate::parallel::Exec;
 use crate::rng::Rng;
 
@@ -36,6 +37,9 @@ use super::request::{Envelope, Request, RequestId, Response};
 struct ModelEntry {
     model: Arc<dyn GpModel>,
     metrics: Registry,
+    /// Whether the model executes out-of-process (`endpoint() != "local"`),
+    /// cached at registration — the batcher consults this per batch.
+    remote: bool,
 }
 
 struct Shared {
@@ -49,8 +53,11 @@ struct Shared {
     /// requests, frames) — written by the `net` server, surfaced in the
     /// `stats` document's `transport` section.
     transport: Registry,
-    /// Replica-set router (`DESIGN.md` §8); empty when no `--replicas`.
+    /// Replica-set router (`DESIGN.md` §8/§9); empty when no `--replicas`.
     router: Router,
+    /// Bounded LRU over deterministic sample replies (`--cache-entries`,
+    /// disabled at 0); consulted in `submit_to` before routing.
+    cache: ResponseCache,
     /// Bound on `queue` (0 = unbounded); a full queue rejects submits
     /// with a typed `overloaded` error instead of queueing.
     queue_limit: usize,
@@ -89,6 +96,9 @@ impl Shared {
 pub struct Coordinator {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Replica-member health monitor (`DESIGN.md` §9); present when
+    /// replica sets exist and `health_interval_ms > 0`.
+    health: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -143,7 +153,9 @@ impl Coordinator {
         let default_model = models[0].0.clone();
         let mut registry = BTreeMap::new();
         for (name, model) in models {
-            let prev = registry.insert(name.clone(), ModelEntry { model, metrics: Registry::new() });
+            let remote = model.endpoint() != "local";
+            let prev = registry
+                .insert(name.clone(), ModelEntry { model, metrics: Registry::new(), remote });
             anyhow::ensure!(prev.is_none(), "duplicate model name {name:?}");
         }
         let mut router = Router::new(cfg.route_policy);
@@ -172,6 +184,7 @@ impl Coordinator {
             metrics: Registry::new(),
             transport: Registry::new(),
             router,
+            cache: ResponseCache::new(cfg.cache_entries),
             queue_limit: cfg.queue_limit,
             exec_desc,
             cfg: cfg.clone(),
@@ -186,7 +199,22 @@ impl Coordinator {
                     .expect("spawning worker")
             })
             .collect();
-        Ok(Coordinator { shared, workers })
+        // Health monitor: probes every replica-set member each interval,
+        // ejecting members whose probe fails and restoring them on
+        // recovery (trivially healthy for local members; a wire round
+        // trip for remote ones).
+        let health = if cfg.health_interval_ms > 0 && !shared.router.is_empty() {
+            let shared = shared.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("icr-health".into())
+                    .spawn(move || health_loop(&shared))
+                    .expect("spawning health monitor"),
+            )
+        } else {
+            None
+        };
+        Ok(Coordinator { shared, workers, health })
     }
 
     /// The default model (v1 clients' implicit target).
@@ -226,6 +254,25 @@ impl Coordinator {
         &self.shared.router
     }
 
+    /// The response cache (disabled unless `--cache-entries > 0`).
+    pub fn cache(&self) -> &ResponseCache {
+        &self.shared.cache
+    }
+
+    /// Mark one replica member as draining: it finishes its in-flight
+    /// work but the router stops selecting it for new traffic (the §8
+    /// satellite fix — `least_outstanding` used to keep feeding a
+    /// draining member until its session closed). Returns `false` when
+    /// no replica set hosts the member.
+    pub fn drain_member(&self, member: &str) -> bool {
+        self.shared.router.set_member_state(member, MemberState::Draining)
+    }
+
+    /// Return a drained member to service.
+    pub fn restore_member(&self, member: &str) -> bool {
+        self.shared.router.set_member_state(member, MemberState::Healthy)
+    }
+
     /// In-flight request count for one registry entry.
     pub fn outstanding(&self, name: &str) -> u64 {
         self.shared.outstanding(name)
@@ -254,6 +301,20 @@ impl Coordinator {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let logical = model.unwrap_or(&self.shared.default_model);
+        self.shared.metrics.counter("requests_submitted").inc();
+        // Response cache, consulted BEFORE routing: a hit answers from
+        // the front door without touching any member (local or remote).
+        // Only deterministic seeded samples are cacheable (`cluster::cache`).
+        if let Request::Sample { count, seed } = &request {
+            if self.shared.cache.enabled() {
+                let key = CacheKey::sample(logical, *seed, *count);
+                if let Some(rows) = self.shared.cache.get(&key) {
+                    self.shared.metrics.counter("requests_completed").inc();
+                    let _ = tx.send(Ok(Response::Samples(rows.as_ref().clone())));
+                    return (id, rx);
+                }
+            }
+        }
         // Registry entries win; only unhosted names consult the router,
         // so a member ("gp@1") stays directly addressable.
         let name = if self.shared.models.contains_key(logical) {
@@ -265,7 +326,7 @@ impl Coordinator {
                 None => logical.to_string(),
             }
         };
-        self.shared.metrics.counter("requests_submitted").inc();
+        let logical = logical.to_string();
         match self.shared.entry(&name) {
             Err(e) => {
                 self.shared.metrics.counter("requests_failed").inc();
@@ -290,7 +351,7 @@ impl Coordinator {
                         limit: self.shared.queue_limit,
                     }));
                 } else {
-                    q.push_back(Envelope { id, model: name, request, reply: tx });
+                    q.push_back(Envelope { id, model: name, logical, request, reply: tx });
                     self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
                     drop(q);
                     self.shared.cv.notify_one();
@@ -318,12 +379,61 @@ impl Coordinator {
         stats_json(&self.shared)
     }
 
-    /// Drain the queue and stop all workers.
+    /// Drain the queue and stop all workers (and the health monitor).
     pub fn shutdown(self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
         for w in self.workers {
             let _ = w.join();
+        }
+        if let Some(h) = self.health {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Probe every replica-set member each `health_interval_ms`, ejecting
+/// members whose probe fails and restoring them when it recovers. Local
+/// members probe trivially healthy; remote members do a short-timeout
+/// wire round trip — so killing a backend ejects its member within one
+/// interval, seed affinity rehashes deterministically over the
+/// survivors, and surviving traffic completes without error frames
+/// (asserted in `cluster_e2e.rs`).
+fn health_loop(shared: &Shared) {
+    let interval = Duration::from_millis(shared.cfg.health_interval_ms.max(1));
+    loop {
+        for name in shared.router.member_names() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let Some(entry) = shared.models.get(&name) else { continue };
+            shared.metrics.counter("health_probes").inc();
+            match entry.model.health_probe() {
+                Ok(()) => {
+                    if shared.router.member_state(&name) == Some(MemberState::Ejected) {
+                        shared.router.set_member_state(&name, MemberState::Healthy);
+                        shared.metrics.counter("health_restorations").inc();
+                    }
+                }
+                Err(_) => {
+                    // Draining members are left alone — they are already
+                    // out of the selection set.
+                    if shared.router.member_state(&name) == Some(MemberState::Healthy) {
+                        shared.router.set_member_state(&name, MemberState::Ejected);
+                        shared.metrics.counter("health_ejections").inc();
+                    }
+                }
+            }
+        }
+        // Sleep in short steps so shutdown stays responsive.
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let step = Duration::from_millis(20).min(interval - slept);
+            std::thread::sleep(step);
+            slept += step;
         }
     }
 }
@@ -355,12 +465,66 @@ fn stats_json(shared: &Shared) -> Value {
             "routing_policies",
             json::arr(RoutePolicy::ALL.iter().map(|p| json::s(p.name())).collect()),
         ),
+        (
+            "model_families",
+            json::arr(MODEL_FAMILIES.iter().map(|f| json::s(f)).collect()),
+        ),
+        (
+            "capabilities",
+            json::arr(CAPABILITIES.iter().map(|c| json::s(c)).collect()),
+        ),
         ("apply_exec", json::s(&shared.exec_desc)),
         ("default_model", json::s(&shared.default_model)),
         ("global", shared.metrics.to_json()),
         ("transport", shared.transport.to_json()),
         ("replica_sets", shared.router.to_json(&outstanding)),
+        ("cluster", cluster_json(shared)),
         ("models", Value::Object(models)),
+    ])
+}
+
+/// The `cluster` stats section (`DESIGN.md` §9): health/cache config
+/// plus, per replica set, each member's endpoint, health state, routed
+/// and outstanding counts, and served p50/p99 latency.
+fn cluster_json(shared: &Shared) -> Value {
+    let mut sets: BTreeMap<String, Value> = BTreeMap::new();
+    for logical in shared.router.logical_names() {
+        let set = shared.router.set(&logical).expect("listed set");
+        let members: Vec<Value> = set
+            .members()
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let entry = shared.models.get(m);
+                let endpoint =
+                    entry.map(|e| e.model.endpoint()).unwrap_or_else(|| "unknown".into());
+                let (p50, p99) = entry
+                    .map(|e| {
+                        let h = e.metrics.histogram("request_latency");
+                        if h.count() == 0 {
+                            (0.0, 0.0)
+                        } else {
+                            (h.quantile_ns(0.5) / 1e3, h.quantile_ns(0.99) / 1e3)
+                        }
+                    })
+                    .unwrap_or((0.0, 0.0));
+                json::obj(vec![
+                    ("name", json::s(m)),
+                    ("endpoint", json::s(&endpoint)),
+                    ("state", json::s(set.member_state(i).name())),
+                    ("routed", json::num(set.routed_to(i) as f64)),
+                    ("outstanding", json::num(shared.outstanding(m) as f64)),
+                    ("p50_us", json::num(p50)),
+                    ("p99_us", json::num(p99)),
+                ])
+            })
+            .collect();
+        sets.insert(logical, json::obj(vec![("members", json::arr(members))]));
+    }
+    json::obj(vec![
+        ("health_interval_ms", json::num(shared.cfg.health_interval_ms as f64)),
+        ("cache", shared.cache.to_json()),
+        ("sets", Value::Object(sets)),
     ])
 }
 
@@ -473,6 +637,58 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         return;
     }
 
+    // Remote members skip the local seed expansion below: shipping a
+    // count × dof excitation panel as JSON per lane would dwarf the
+    // ~60-byte `sample` frame the backend expands itself — to identical
+    // bytes, by the §4 determinism contract. Each envelope proxies as
+    // its own compact wire op (the backend's batcher re-coalesces them
+    // with whatever else it is serving).
+    if entry.remote {
+        let dof = entry.model.total_dof();
+        for env in batch {
+            let t_req = Instant::now();
+            let result = match &env.request {
+                Request::Sample { count, seed } => {
+                    entry.model.sample(*count, *seed).map(|rows| {
+                        if shared.cache.enabled() {
+                            shared.cache.insert(
+                                CacheKey::sample(&env.logical, *seed, *count),
+                                Arc::new(rows.clone()),
+                            );
+                        }
+                        Response::Samples(rows)
+                    })
+                }
+                Request::ApplySqrt { xi } => {
+                    if xi.len() != dof {
+                        Err(IcrError::ShapeMismatch {
+                            what: "xi",
+                            expected: dof,
+                            got: xi.len(),
+                        })
+                    } else {
+                        entry
+                            .model
+                            .apply_sqrt_batch(std::slice::from_ref(xi))
+                            .map(|mut rows| Response::Field(rows.remove(0)))
+                    }
+                }
+                _ => unreachable!("non-batchable request in batch"),
+            };
+            let applies = env.request.apply_count() as u64;
+            shared.metrics.counter("applies_executed").add(applies);
+            entry.metrics.counter("applies_executed").add(applies);
+            entry.metrics.counter("batches_executed").inc();
+            complete(shared, entry, result.is_err());
+            shared.metrics.histogram("request_latency").observe(t_req);
+            entry.metrics.histogram("request_latency").observe(t_req);
+            let _ = env.reply.send(result);
+        }
+        shared.metrics.histogram("batch_latency").observe(t0);
+        entry.metrics.histogram("batch_latency").observe(t0);
+        return;
+    }
+
     // Expand every batchable request into one flat excitation panel: the
     // whole coalesced batch reaches the model as a single blocked `√K`
     // panel apply, so `batch_occupancy` buys real memory-bandwidth reuse
@@ -535,7 +751,18 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                             .map(|lane| fields[lane * n..(lane + 1) * n].to_vec())
                             .collect();
                         Ok(match &env.request {
-                            Request::Sample { .. } => Response::Samples(rows),
+                            Request::Sample { count, seed } => {
+                                // Deterministic samples populate the
+                                // response cache under the client's
+                                // pre-routing (logical) name.
+                                if shared.cache.enabled() {
+                                    shared.cache.insert(
+                                        CacheKey::sample(&env.logical, *seed, *count),
+                                        Arc::new(rows.clone()),
+                                    );
+                                }
+                                Response::Samples(rows)
+                            }
                             Request::ApplySqrt { .. } => {
                                 Response::Field(rows.into_iter().next().unwrap())
                             }
@@ -579,6 +806,7 @@ fn serve_single(
 ) -> Result<Response, IcrError> {
     match request {
         Request::Stats => Ok(Response::Stats(stats_json(shared))),
+        Request::Describe => Ok(Response::Describe(entry.model.info())),
         Request::Infer { y_obs, sigma_n, steps, lr } => {
             let (field, trace) = entry.model.infer(y_obs, *sigma_n, *steps, *lr)?;
             shared.metrics.counter("inferences_completed").inc();
@@ -821,8 +1049,8 @@ mod tests {
     fn multi_model_routing_and_isolation() {
         let mut cfg = test_config(2, 4);
         cfg.extra_models = vec![
-            ModelSpec { name: "kiss".into(), backend: Backend::Kissgp, model: cfg.model.clone() },
-            ModelSpec { name: "ref".into(), backend: Backend::Exact, model: cfg.model.clone() },
+            ModelSpec::local("kiss", Backend::Kissgp, cfg.model.clone()),
+            ModelSpec::local("ref", Backend::Exact, cfg.model.clone()),
         ];
         let c = Coordinator::start(cfg).unwrap();
         assert_eq!(c.model_names(), vec!["default", "kiss", "ref"]);
@@ -861,11 +1089,7 @@ mod tests {
         // two models must still produce correct per-model outputs.
         let mut cfg = test_config(1, 16);
         cfg.max_wait_us = 2000;
-        cfg.extra_models = vec![ModelSpec {
-            name: "ref".into(),
-            backend: Backend::Exact,
-            model: cfg.model.clone(),
-        }];
+        cfg.extra_models = vec![ModelSpec::local("ref", Backend::Exact, cfg.model.clone())];
         let c = Coordinator::start(cfg).unwrap();
         let n = c.engine().n_points();
         let pending: Vec<_> = (0..20)
@@ -1025,7 +1249,7 @@ mod tests {
     fn replica_sets_route_and_serve_identical_bytes() {
         let mut cfg = test_config(2, 4);
         cfg.replicas =
-            vec![crate::config::ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 3 }];
+            vec![crate::config::ReplicaSpec::homogeneous("gp", Backend::Native, 3).unwrap()];
         cfg.route_policy = crate::net::RoutePolicy::SeedAffinity;
         let c = Coordinator::start(cfg).unwrap();
         // Members are real registry entries; the logical name is not.
@@ -1042,9 +1266,13 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
-        // Seed affinity: seed 77 → member 77 % 3 = 2, every time.
-        assert_eq!(c.router().set("gp").unwrap().routed_to(2), 3);
-        assert_eq!(c.model_metrics("gp@2").unwrap().counter("requests_submitted").get(), 3);
+        // Seed affinity (rendezvous): seed 77 lands on one fixed member,
+        // every time.
+        let set = c.router().set("gp").unwrap();
+        let pinned = (0..3).find(|&i| set.routed_to(i) > 0).expect("some member routed");
+        assert_eq!(set.routed_to(pinned), 3, "seed 77 split across members");
+        let member = format!("gp@{pinned}");
+        assert_eq!(c.model_metrics(&member).unwrap().counter("requests_submitted").get(), 3);
 
         // Members remain directly addressable.
         match c.call_model(Some("gp@0"), Request::Sample { count: 1, seed: 77 }).unwrap() {
@@ -1061,7 +1289,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        // Stats surface the replica section with routed counters.
+        // Stats surface the replica and cluster sections.
         match c.call(Request::Stats).unwrap() {
             Response::Stats(v) => {
                 assert_eq!(
@@ -1073,9 +1301,25 @@ mod tests {
                     .and_then(Value::as_array)
                     .unwrap();
                 assert_eq!(members.len(), 3);
-                assert_eq!(members[2].get("routed").and_then(Value::as_usize), Some(3));
+                assert_eq!(members[pinned].get("routed").and_then(Value::as_usize), Some(3));
+                assert_eq!(members[0].get("state").and_then(Value::as_str), Some("healthy"));
                 assert!(v.get("transports").and_then(Value::as_array).is_some());
                 assert!(v.get_path("transport.counters").is_some());
+                // New in §9: advertised families/capabilities + the
+                // cluster section with per-member endpoint and state.
+                let families = v.get("model_families").and_then(Value::as_array).unwrap();
+                assert!(families.iter().any(|f| f.as_str() == Some("remote")));
+                let caps = v.get("capabilities").and_then(Value::as_array).unwrap();
+                assert!(caps.iter().any(|c| c.as_str() == Some("response_cache")));
+                let cm = v.get_path("cluster.sets.gp.members").and_then(Value::as_array).unwrap();
+                assert_eq!(cm.len(), 3);
+                assert_eq!(cm[0].get("endpoint").and_then(Value::as_str), Some("local"));
+                assert_eq!(cm[pinned].get("routed").and_then(Value::as_usize), Some(3));
+                assert!(cm[pinned].get("p50_us").and_then(Value::as_f64).unwrap() > 0.0);
+                assert_eq!(
+                    v.get_path("cluster.cache.enabled"),
+                    Some(&Value::Bool(false))
+                );
             }
             other => panic!("{other:?}"),
         }
@@ -1083,10 +1327,10 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_replicas_spread_load() {
+    fn round_robin_replicas_spread_load_and_skip_draining_members() {
         let mut cfg = test_config(2, 4);
         cfg.replicas =
-            vec![crate::config::ReplicaSpec { name: "gp".into(), backend: Backend::Native, count: 2 }];
+            vec![crate::config::ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()];
         cfg.route_policy = crate::net::RoutePolicy::RoundRobin;
         let c = Coordinator::start(cfg).unwrap();
         for i in 0..6 {
@@ -1095,6 +1339,202 @@ mod tests {
         let set = c.router().set("gp").unwrap();
         assert_eq!(set.routed_to(0), 3);
         assert_eq!(set.routed_to(1), 3);
+
+        // Draining a member takes it out of selection (the satellite
+        // fix); restoring it brings traffic back.
+        assert!(c.drain_member("gp@1"));
+        for i in 6..10 {
+            c.call_model(Some("gp"), Request::Sample { count: 1, seed: i }).unwrap();
+        }
+        let set = c.router().set("gp").unwrap();
+        assert_eq!(set.routed_to(0), 7, "draining member still took traffic");
+        assert_eq!(set.routed_to(1), 3);
+        assert!(c.restore_member("gp@1"));
+        for i in 10..12 {
+            c.call_model(Some("gp"), Request::Sample { count: 1, seed: i }).unwrap();
+        }
+        let set = c.router().set("gp").unwrap();
+        assert_eq!(set.routed_to(0) + set.routed_to(1), 12);
+        assert!(set.routed_to(1) > 3, "restored member got no traffic");
+        assert!(!c.drain_member("nope"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn describe_serves_model_identity() {
+        let c = start(1, 2);
+        match c.call(Request::Describe).unwrap() {
+            Response::Describe(info) => {
+                assert_eq!(info.descriptor.backend, "native");
+                assert_eq!(info.descriptor.n, c.engine().n_points());
+                assert_eq!(info.descriptor.dof, c.engine().total_dof());
+                assert_eq!(info.domain, c.engine().domain_points());
+                assert_eq!(info.obs, c.engine().obs_indices());
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn response_cache_hits_are_byte_identical_and_bounded() {
+        let mut cfg = test_config(2, 4);
+        cfg.cache_entries = 3;
+        cfg.replicas =
+            vec![crate::config::ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()];
+        let c = Coordinator::start(cfg).unwrap();
+
+        let sample = |c: &Coordinator, model: Option<&str>, seed: u64| -> Vec<Vec<f64>> {
+            match c.call_model(model, Request::Sample { count: 2, seed }).unwrap() {
+                Response::Samples(s) => s,
+                other => panic!("{other:?}"),
+            }
+        };
+
+        // Fresh then cached: byte-identical, hit counter moves, and the
+        // second call never reaches a member.
+        let fresh = sample(&c, Some("gp"), 7);
+        let routed_before: u64 =
+            (0..2).map(|i| c.router().set("gp").unwrap().routed_to(i)).sum();
+        let cached = sample(&c, Some("gp"), 7);
+        assert_eq!(cached, fresh, "cached reply diverged from fresh");
+        assert_eq!(c.cache().hits(), 1);
+        let routed_after: u64 =
+            (0..2).map(|i| c.router().set("gp").unwrap().routed_to(i)).sum();
+        assert_eq!(routed_after, routed_before, "cache hit still routed to a member");
+
+        // Distinct (seed, count, model) keys miss; the bound evicts LRU.
+        for seed in 10..16 {
+            let _ = sample(&c, None, seed);
+        }
+        assert!(c.cache().len() <= 3, "cache exceeded --cache-entries");
+        assert!(c.cache().evictions() > 0, "bound never exercised");
+
+        // The accounting invariant holds with cache hits in the mix.
+        let m = c.metrics();
+        assert_eq!(
+            m.counter("requests_submitted").get(),
+            m.counter("requests_completed").get() + m.counter("requests_failed").get()
+        );
+        // Stats advertise the live cache counters.
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(v) => {
+                assert_eq!(v.get_path("cluster.cache.enabled"), Some(&Value::Bool(true)));
+                assert!(
+                    v.get_path("cluster.cache.hits").and_then(Value::as_f64).unwrap() >= 1.0
+                );
+                assert!(
+                    v.get_path("cluster.cache.evictions").and_then(Value::as_f64).unwrap()
+                        >= 1.0
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    /// A model whose health probe is switchable — the in-process stand-in
+    /// for a remote backend dying and recovering.
+    struct FlakyModel {
+        inner: Arc<dyn GpModel>,
+        healthy: Arc<AtomicBool>,
+    }
+
+    impl GpModel for FlakyModel {
+        fn descriptor(&self) -> crate::model::ModelDescriptor {
+            self.inner.descriptor()
+        }
+        fn n_points(&self) -> usize {
+            self.inner.n_points()
+        }
+        fn total_dof(&self) -> usize {
+            self.inner.total_dof()
+        }
+        fn domain_points(&self) -> Vec<f64> {
+            self.inner.domain_points()
+        }
+        fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+            self.inner.apply_sqrt_batch(xi)
+        }
+        fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+            self.inner.apply_sqrt_panel(panel, batch)
+        }
+        fn loss_grad(
+            &self,
+            xi: &[f64],
+            y_obs: &[f64],
+            sigma_n: f64,
+        ) -> Result<(f64, Vec<f64>), IcrError> {
+            self.inner.loss_grad(xi, y_obs, sigma_n)
+        }
+        fn obs_indices(&self) -> Vec<usize> {
+            self.inner.obs_indices()
+        }
+        fn endpoint(&self) -> String {
+            "tcp:flaky:0".into()
+        }
+        fn health_probe(&self) -> Result<(), IcrError> {
+            if self.healthy.load(Ordering::SeqCst) {
+                Ok(())
+            } else {
+                Err(IcrError::Backend("probe failed".into()))
+            }
+        }
+    }
+
+    #[test]
+    fn health_monitor_ejects_and_restores_members() {
+        let mut cfg = test_config(1, 2);
+        cfg.health_interval_ms = 25;
+        cfg.replicas =
+            vec![crate::config::ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()];
+        cfg.route_policy = crate::net::RoutePolicy::SeedAffinity;
+        let base = ModelBuilder::from_config(cfg.model.clone()).build().unwrap();
+        let healthy = Arc::new(AtomicBool::new(true));
+        let flaky: Arc<dyn GpModel> =
+            Arc::new(FlakyModel { inner: base.clone(), healthy: healthy.clone() });
+        let c = Coordinator::start_with_models(
+            cfg,
+            vec![
+                ("default".to_string(), base.clone()),
+                ("gp@0".to_string(), base.clone()),
+                ("gp@1".to_string(), flaky),
+            ],
+        )
+        .unwrap();
+
+        let wait_for_state = |member: &str, state: crate::net::MemberState| {
+            let deadline = Instant::now() + Duration::from_secs(20);
+            while c.router().member_state(member) != Some(state) {
+                assert!(Instant::now() < deadline, "{member} never became {state:?}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        wait_for_state("gp@1", crate::net::MemberState::Healthy);
+
+        // Kill the member's probe: ejected within an interval or two, and
+        // every seed now routes to the survivor with identical bytes.
+        healthy.store(false, Ordering::SeqCst);
+        wait_for_state("gp@1", crate::net::MemberState::Ejected);
+        let routed_to_flaky = c.router().set("gp").unwrap().routed_to(1);
+        for seed in 0..8u64 {
+            let expect = base.sample(1, seed).unwrap();
+            match c.call_model(Some("gp"), Request::Sample { count: 1, seed }).unwrap() {
+                Response::Samples(s) => assert_eq!(s, expect, "seed {seed}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(
+            c.router().set("gp").unwrap().routed_to(1),
+            routed_to_flaky,
+            "ejected member kept receiving traffic"
+        );
+        assert!(c.metrics().counter("health_ejections").get() >= 1);
+
+        // Recovery restores it.
+        healthy.store(true, Ordering::SeqCst);
+        wait_for_state("gp@1", crate::net::MemberState::Healthy);
+        assert!(c.metrics().counter("health_restorations").get() >= 1);
         c.shutdown();
     }
 }

@@ -41,6 +41,7 @@
 pub mod bench;
 pub mod chart;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -68,8 +69,10 @@ pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 /// One-stop imports for building and serving models.
 pub mod prelude {
     pub use crate::chart::{Chart, IdentityChart, LogChart};
+    pub use crate::cluster::{RemoteClient, RemoteModel, ResponseCache};
     pub use crate::config::{
-        Backend, ModelConfig, ModelSpec, ReplicaSpec, ServerConfig, DEFAULT_MODEL_NAME,
+        Backend, MemberSpec, ModelConfig, ModelSpec, ReplicaSpec, ServerConfig,
+        DEFAULT_MODEL_NAME, MODEL_FAMILIES,
     };
     pub use crate::coordinator::{
         Coordinator, Request, Response, PROTOCOL_VERSION, SUPPORTED_PROTOCOLS,
@@ -79,9 +82,9 @@ pub mod prelude {
     pub use crate::kernels::{Kernel, Matern, Rbf};
     pub use crate::model::{
         default_obs_indices, ExactModel, GpModel, KissGpModel, ModelBuilder,
-        ModelDescriptor, MultiInference, NativeEngine, PjrtEngine,
+        ModelDescriptor, ModelInfo, MultiInference, NativeEngine, PjrtEngine,
     };
-    pub use crate::net::{ListenAddr, NetServer, RoutePolicy, Router};
+    pub use crate::net::{ListenAddr, MemberState, NetServer, RoutePolicy, Router};
     pub use crate::optim::Trace;
     pub use crate::parallel::{Exec, WorkerPool};
     pub use crate::rng::Rng;

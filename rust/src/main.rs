@@ -34,12 +34,14 @@ fn protocol_line() -> String {
         protocol::SUPPORTED_PROTOCOLS.iter().map(|v| format!("v{v}")).collect();
     let policies: Vec<&str> = RoutePolicy::ALL.iter().map(|p| p.name()).collect();
     format!(
-        "icr {} | protocols {} (current v{}) | transports {} | routing {}",
+        "icr {} | protocols {} (current v{}) | transports {} | routing {} | families {} | cluster {}",
         icr::VERSION,
         versions.join(", "),
         protocol::PROTOCOL_VERSION,
         net::TRANSPORTS.join(", "),
-        policies.join(", ")
+        policies.join(", "),
+        icr::config::MODEL_FAMILIES.join(", "),
+        icr::cluster::CAPABILITIES.join(", ")
     )
 }
 
@@ -91,13 +93,15 @@ fn print_help() {
     ];
     let flags = [
         FlagSpec { name: "backend", help: "native | pjrt | kissgp | exact", default: Some("native"), is_switch: false },
-        FlagSpec { name: "models", help: "extra named models, e.g. kiss=kissgp,ref=exact", default: None, is_switch: false },
+        FlagSpec { name: "models", help: "extra named models, e.g. kiss=kissgp,gp=remote:tcp:h:7777", default: None, is_switch: false },
         FlagSpec { name: "listen", help: "serve transport: stdio | tcp:HOST:PORT | unix:PATH", default: Some("stdio"), is_switch: false },
         FlagSpec { name: "max-connections", help: "concurrent socket connection cap (serve)", default: Some("64"), is_switch: false },
         FlagSpec { name: "idle-timeout-ms", help: "close idle connections after this (0 = never)", default: Some("300000"), is_switch: false },
         FlagSpec { name: "queue-limit", help: "bound on the request queue (0 = unbounded; full ⇒ overloaded frames)", default: Some("0"), is_switch: false },
-        FlagSpec { name: "replicas", help: "replica sets, e.g. gp=native:3 (entries gp@0..gp@2)", default: None, is_switch: false },
+        FlagSpec { name: "replicas", help: "replica sets, e.g. gp=native:2,remote:tcp:h1:7777 (entries gp@0..)", default: None, is_switch: false },
         FlagSpec { name: "route-policy", help: "round_robin | least_outstanding | seed_affinity", default: Some("seed_affinity"), is_switch: false },
+        FlagSpec { name: "cache-entries", help: "response-cache bound for (seed, count) samples (0 = off)", default: Some("0"), is_switch: false },
+        FlagSpec { name: "health-interval-ms", help: "replica health-probe period (0 = no monitor)", default: Some("2000"), is_switch: false },
         FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
         FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
         FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
@@ -127,6 +131,9 @@ fn print_help() {
     println!("  serve speaks JSONL: v1 untagged frames (default model) and v2 tagged");
     println!("  frames with model routing — see DESIGN.md §4. Over --listen tcp:/unix:");
     println!("  the same frames travel per connection; SIGINT drains gracefully (§8).");
+    println!("  Remote members (--replicas gp=native:1,remote:tcp:HOST:PORT) federate");
+    println!("  other icr serve processes behind this front door (§9): health probes");
+    println!("  eject dead members, --cache-entries caches deterministic samples.");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -276,7 +283,7 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
     net::install_sigint_handler();
     let server = NetServer::bind(cfg, coord.clone())?;
     eprintln!(
-        "{} | serve: listening on {} | models [{}] | workers {} | max_batch {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {}",
+        "{} | serve: listening on {} | models [{}] | workers {} | max_batch {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {}",
         protocol_line(),
         server.local_addr(),
         model_banner(&coord),
@@ -286,6 +293,8 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
         cfg.max_connections,
         cfg.queue_limit,
         cfg.route_policy.name(),
+        cfg.cache_entries,
+        cfg.health_interval_ms,
     );
     server.run()?;
     eprintln!("{}", coord.stats_json().to_json_pretty());

@@ -32,6 +32,7 @@ pub struct ModelBuilder {
     apply_threads: usize,
     exec: Option<Exec>,
     simd: Option<bool>,
+    remote: Option<String>,
 }
 
 impl Default for ModelBuilder {
@@ -43,6 +44,7 @@ impl Default for ModelBuilder {
             apply_threads: crate::parallel::default_apply_threads(),
             exec: None,
             simd: None,
+            remote: None,
         }
     }
 }
@@ -59,7 +61,12 @@ impl ModelBuilder {
 
     /// Start from a named registry spec.
     pub fn from_spec(spec: &ModelSpec) -> Self {
-        ModelBuilder { model: spec.model.clone(), backend: spec.backend, ..Self::default() }
+        ModelBuilder {
+            model: spec.model.clone(),
+            backend: spec.backend,
+            remote: spec.remote.clone(),
+            ..Self::default()
+        }
     }
 
     /// Kernel spec string, e.g. `matern32(rho=1.0, amp=1.0)`.
@@ -105,6 +112,14 @@ impl ModelBuilder {
         self
     }
 
+    /// Backend coordinator address (`tcp:HOST:PORT`) for
+    /// [`Backend::Remote`]; implies that backend.
+    pub fn remote_addr(mut self, addr: &str) -> Self {
+        self.remote = Some(addr.to_string());
+        self.backend = Backend::Remote;
+        self
+    }
+
     /// Thread count for batched `√K` panel applies (`0` = one per
     /// available core): the model gets its own persistent worker pool of
     /// that width. Applies to the in-process engine families; results
@@ -142,6 +157,17 @@ impl ModelBuilder {
     /// receives the same executor — an explicit [`Self::exec`] if given,
     /// else a fresh persistent pool of [`Self::apply_threads`] lanes.
     pub fn build(self) -> Result<Arc<dyn GpModel>, IcrError> {
+        if self.backend == Backend::Remote {
+            // The proxy executes nothing locally — the executor and
+            // model-geometry knobs stay with the backend process, so no
+            // worker pool is spun up for it.
+            let addr = self.remote.as_deref().ok_or_else(|| {
+                IcrError::InvalidParameter(
+                    "remote backend needs an address (remote:tcp:HOST:PORT)".into(),
+                )
+            })?;
+            return Ok(Arc::new(crate::cluster::RemoteModel::connect(addr)?));
+        }
         let exec = self.exec.clone().unwrap_or_else(|| Exec::pooled(self.apply_threads));
         match self.backend {
             Backend::Native => {
@@ -177,6 +203,7 @@ impl ModelBuilder {
                 }
                 Ok(Arc::new(e))
             }
+            Backend::Remote => unreachable!("handled above"),
         }
     }
 }
@@ -239,6 +266,20 @@ mod tests {
         let want = reference.sample(3, 5).unwrap();
         for m in [&pooled, &scoped, &scalar] {
             assert_eq!(m.sample(3, 5).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn remote_backend_requires_an_address() {
+        match ModelBuilder::new().backend(Backend::Remote).build() {
+            Err(IcrError::InvalidParameter(msg)) => assert!(msg.contains("remote"), "{msg}"),
+            other => panic!("expected invalid-parameter, got {:?}", other.map(|m| m.name())),
+        }
+        // The remote_addr knob implies the backend; an unreachable
+        // endpoint fails typed at connect time.
+        match ModelBuilder::new().remote_addr("tcp:127.0.0.1:1").build() {
+            Err(IcrError::Backend(_)) => {}
+            other => panic!("expected backend error, got {:?}", other.map(|m| m.name())),
         }
     }
 

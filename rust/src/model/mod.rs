@@ -92,6 +92,73 @@ impl ModelDescriptor {
             ("dof", json::num(self.dof as f64)),
         ])
     }
+
+    /// Decode a descriptor from its wire object (the client side of the
+    /// `describe` op). The backend string maps onto the static family
+    /// names advertised in [`crate::config::MODEL_FAMILIES`].
+    pub fn from_json(v: &Value) -> Result<ModelDescriptor, IcrError> {
+        let field = |key: &str| {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| IcrError::MalformedRequest(format!("descriptor needs {key:?}")))
+        };
+        let backend = field("backend")?;
+        let backend: &'static str = crate::config::MODEL_FAMILIES
+            .iter()
+            .copied()
+            .find(|f| *f == backend)
+            .unwrap_or("unknown");
+        Ok(ModelDescriptor {
+            name: field("name")?,
+            backend,
+            kernel: field("kernel")?,
+            chart: field("chart")?,
+            n: v.get("n").and_then(Value::as_usize).unwrap_or(0),
+            dof: v.get("dof").and_then(Value::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+/// Full model identity served to `describe` requests: the descriptor
+/// plus the modeled domain locations and observation pattern — exactly
+/// what a cluster front door needs to host the model as a remote
+/// registry member without sharing its config file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub descriptor: ModelDescriptor,
+    /// Modeled locations in the domain 𝒟 (length N).
+    pub domain: Vec<f64>,
+    /// Indices of observed points for the regression objective.
+    pub obs: Vec<usize>,
+}
+
+impl ModelInfo {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("descriptor", self.descriptor.to_json()),
+            ("domain", json::arr(self.domain.iter().map(|&x| json::num(x)).collect())),
+            ("obs", json::arr(self.obs.iter().map(|&i| json::num(i as f64)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelInfo, IcrError> {
+        let descriptor = ModelDescriptor::from_json(
+            v.get("descriptor")
+                .ok_or_else(|| IcrError::MalformedRequest("describe needs \"descriptor\"".into()))?,
+        )?;
+        let domain = v
+            .get("domain")
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_f64).collect())
+            .unwrap_or_default();
+        let obs = v
+            .get("obs")
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_usize).collect())
+            .unwrap_or_default();
+        Ok(ModelInfo { descriptor, domain, obs })
+    }
 }
 
 /// A backend able to serve the generative GP operations: apply `√K`
@@ -213,6 +280,31 @@ pub trait GpModel: Send + Sync {
     /// Display name; defaults to the descriptor label.
     fn name(&self) -> String {
         self.descriptor().name
+    }
+
+    /// Where this model executes: `"local"` for in-process engines;
+    /// remote backends report their endpoint (`"tcp:HOST:PORT"`). The
+    /// coordinator's `cluster` stats section surfaces this per member.
+    fn endpoint(&self) -> String {
+        "local".into()
+    }
+
+    /// Cheap liveness probe. In-process engines are alive by
+    /// construction; remote backends override this with a wire round
+    /// trip, and the coordinator's health monitor ejects replica-set
+    /// members whose probe fails (`DESIGN.md` §9).
+    fn health_probe(&self) -> Result<(), IcrError> {
+        Ok(())
+    }
+
+    /// Full identity served to `describe` requests (descriptor + domain
+    /// points + observation pattern).
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            descriptor: self.descriptor(),
+            domain: self.domain_points(),
+            obs: self.obs_indices(),
+        }
     }
 
     /// Draw `count` approximate GP samples for a client seed.
@@ -508,6 +600,32 @@ mod tests {
             check_loss_grad_panel_args(3, &[0.0; 6], 2, &[0.0; 2], &[0.0; 7]),
             Err(IcrError::ShapeMismatch { what: "grad_panel", .. })
         ));
+    }
+
+    #[test]
+    fn model_info_roundtrips_through_json() {
+        let info = ModelInfo {
+            descriptor: ModelDescriptor {
+                name: "native(n=4)".into(),
+                backend: "native",
+                kernel: "matern32(rho=1.0, amp=1.0)".into(),
+                chart: "paper_log".into(),
+                n: 4,
+                dof: 7,
+            },
+            domain: vec![0.0, 0.25, 1.5, 3.0],
+            obs: vec![0, 2],
+        };
+        let back = ModelInfo::from_json(&info.to_json()).unwrap();
+        assert_eq!(back, info);
+        // Unknown backend families degrade to "unknown", not an error.
+        let mut v = info.to_json();
+        if let Value::Object(map) = &mut v {
+            if let Some(Value::Object(d)) = map.get_mut("descriptor") {
+                d.insert("backend".into(), json::s("quantum"));
+            }
+        }
+        assert_eq!(ModelInfo::from_json(&v).unwrap().descriptor.backend, "unknown");
     }
 
     #[test]

@@ -2,21 +2,32 @@
 //!
 //! `DESIGN.md` §5 reserved the hook: a shard is a named
 //! [`crate::model::GpModel`] registry entry. A **replica set** groups N
-//! identical entries (`--replicas gp=native:3` → members `gp@0..gp@2`)
-//! under one logical name; requests addressed to the logical name are
-//! routed to a member by a pluggable [`RoutePolicy`]. Requests may still
-//! address a member (`gp@1`) directly — the router only resolves names
-//! the registry does not already host.
+//! member entries (`--replicas gp=native:3` → members `gp@0..gp@2`;
+//! mixed local+remote sets add `remote:tcp:HOST:PORT` members) under one
+//! logical name; requests addressed to the logical name are routed to a
+//! member by a pluggable [`RoutePolicy`]. Requests may still address a
+//! member (`gp@1`) directly — the router only resolves names the
+//! registry does not already host.
 //!
-//! Determinism: every member of a set is built from the same
-//! [`crate::config::ModelConfig`], so `sample` bytes are identical on
-//! every replica regardless of the policy's choice; `seed_affinity`
-//! additionally pins a given seed to a fixed member, which keeps
-//! per-replica caches warm and makes the routing itself reproducible
-//! (tested in `net_e2e.rs`).
+//! **Member health** (`DESIGN.md` §9): every member carries a
+//! [`MemberState`]. Only `Healthy` members receive newly routed traffic;
+//! `Draining` members finish their in-flight work but are skipped by
+//! selection, and `Ejected` members failed their health probe and are
+//! skipped until a probe succeeds again. If no member is available the
+//! router falls back to the full set (availability over purity — a
+//! wholly ejected set keeps answering rather than blackholing).
+//!
+//! Determinism: every member of a set serves the same model, so `sample`
+//! bytes are identical regardless of the policy's choice; `seed_affinity`
+//! additionally pins a given seed to a fixed member via **rendezvous
+//! (highest-random-weight) hashing** — each seed independently ranks all
+//! members, so ejecting a member only moves the seeds it owned and
+//! adding one only claims the seeds it now wins; assignments of
+//! unrelated seeds never change (property-tested below and in
+//! `cluster_e2e.rs`).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 
 use crate::coordinator::request::Request;
 use crate::json::{self, Value};
@@ -24,14 +35,15 @@ use crate::json::{self, Value};
 /// How a replica set picks the member serving the next request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum RoutePolicy {
-    /// Strict rotation over the members.
+    /// Strict rotation over the available members.
     RoundRobin,
-    /// Member with the fewest requests currently in flight (ties resolve
-    /// to the lowest member index).
+    /// Available member with the fewest requests currently in flight
+    /// (ties resolve to the lowest member index).
     LeastOutstanding,
-    /// Seeded requests (`sample`, `infer_multi`) map `seed % replicas`,
-    /// so a given seed always lands on the same member; unseeded
-    /// requests fall back to rotation.
+    /// Seeded requests (`sample`, `infer_multi`) pick the member with
+    /// the highest rendezvous weight for the seed, so a given seed
+    /// always lands on the same member while it stays available;
+    /// unseeded requests fall back to rotation.
     #[default]
     SeedAffinity,
 }
@@ -62,18 +74,60 @@ impl RoutePolicy {
     }
 }
 
+/// Lifecycle of a replica-set member, driven by the coordinator's health
+/// monitor and by graceful drains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    /// Eligible for new traffic.
+    Healthy,
+    /// Finishing in-flight work; selection skips it (satellite fix: a
+    /// draining member used to keep receiving `least_outstanding`
+    /// traffic until its session closed).
+    Draining,
+    /// Failed its health probe; skipped until a probe succeeds again.
+    Ejected,
+}
+
+impl MemberState {
+    fn as_u8(self) -> u8 {
+        match self {
+            MemberState::Healthy => 0,
+            MemberState::Draining => 1,
+            MemberState::Ejected => 2,
+        }
+    }
+
+    fn from_u8(b: u8) -> MemberState {
+        match b {
+            1 => MemberState::Draining,
+            2 => MemberState::Ejected,
+            _ => MemberState::Healthy,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemberState::Healthy => "healthy",
+            MemberState::Draining => "draining",
+            MemberState::Ejected => "ejected",
+        }
+    }
+}
+
 /// One logical replica set: ordered member entry names plus routing
-/// state (rotation cursor, per-member routed counters).
+/// state (rotation cursor, per-member routed counters, member states).
 pub struct ReplicaSet {
     members: Vec<String>,
     rr: AtomicUsize,
     routed: Vec<AtomicU64>,
+    state: Vec<AtomicU8>,
 }
 
 impl ReplicaSet {
     fn new(members: Vec<String>) -> ReplicaSet {
         let routed = members.iter().map(|_| AtomicU64::new(0)).collect();
-        ReplicaSet { members, rr: AtomicUsize::new(0), routed }
+        let state = members.iter().map(|_| AtomicU8::new(0)).collect();
+        ReplicaSet { members, rr: AtomicUsize::new(0), routed, state }
     }
 
     pub fn members(&self) -> &[String] {
@@ -84,6 +138,27 @@ impl ReplicaSet {
     pub fn routed_to(&self, i: usize) -> u64 {
         self.routed[i].load(Ordering::Relaxed)
     }
+
+    pub fn member_state(&self, i: usize) -> MemberState {
+        MemberState::from_u8(self.state[i].load(Ordering::SeqCst))
+    }
+
+    fn set_state(&self, i: usize, s: MemberState) {
+        self.state[i].store(s.as_u8(), Ordering::SeqCst);
+    }
+
+    /// Indices of members eligible for new traffic. Falls back to every
+    /// member when none is healthy, so a fully ejected set still routes.
+    fn available(&self) -> Vec<usize> {
+        let healthy: Vec<usize> = (0..self.members.len())
+            .filter(|&i| self.member_state(i) == MemberState::Healthy)
+            .collect();
+        if healthy.is_empty() {
+            (0..self.members.len()).collect()
+        } else {
+            healthy
+        }
+    }
 }
 
 /// The seed a request pins replica affinity on, when it has one.
@@ -93,6 +168,22 @@ fn affinity_seed(request: &Request) -> Option<u64> {
         Request::InferMulti { seed, .. } => Some(*seed),
         _ => None,
     }
+}
+
+/// Deterministic rendezvous (highest-random-weight) score: FNV-1a over
+/// the member name, mixed with the seed through a splitmix64 finalizer.
+/// Each (seed, member) pair scores independently, which is what makes
+/// assignments of unrelated seeds immune to membership changes.
+fn rendezvous_weight(seed: u64, member: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in member.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = h ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
 }
 
 /// Maps logical replica-set names to member registry entries.
@@ -125,8 +216,41 @@ impl Router {
         self.sets.keys().cloned().collect()
     }
 
+    /// Every member entry name across all sets, in set order.
+    pub fn member_names(&self) -> Vec<String> {
+        self.sets.values().flat_map(|s| s.members.iter().cloned()).collect()
+    }
+
     pub fn set(&self, logical: &str) -> Option<&ReplicaSet> {
         self.sets.get(logical)
+    }
+
+    /// Update one member's state across every set hosting it (atomics —
+    /// callable through the shared `&Router`). Returns whether any set
+    /// hosts the member.
+    pub fn set_member_state(&self, member: &str, state: MemberState) -> bool {
+        let mut found = false;
+        for set in self.sets.values() {
+            for (i, m) in set.members.iter().enumerate() {
+                if m == member {
+                    set.set_state(i, state);
+                    found = true;
+                }
+            }
+        }
+        found
+    }
+
+    /// A member's state (first set hosting it), or `None` if unrouted.
+    pub fn member_state(&self, member: &str) -> Option<MemberState> {
+        for set in self.sets.values() {
+            for (i, m) in set.members.iter().enumerate() {
+                if m == member {
+                    return Some(set.member_state(i));
+                }
+            }
+        }
+        None
     }
 
     /// Resolve a logical name to a member entry name, or `None` if the
@@ -139,24 +263,22 @@ impl Router {
         outstanding: &dyn Fn(&str) -> u64,
     ) -> Option<&str> {
         let set = self.sets.get(logical)?;
-        let n = set.members.len();
+        let avail = set.available();
+        let n = avail.len();
         let idx = match self.policy {
-            RoutePolicy::RoundRobin => set.rr.fetch_add(1, Ordering::Relaxed) % n,
-            RoutePolicy::LeastOutstanding => {
-                let mut best = 0usize;
-                let mut best_load = u64::MAX;
-                for (i, m) in set.members.iter().enumerate() {
-                    let load = outstanding(m);
-                    if load < best_load {
-                        best = i;
-                        best_load = load;
-                    }
-                }
-                best
-            }
+            RoutePolicy::RoundRobin => avail[set.rr.fetch_add(1, Ordering::Relaxed) % n],
+            RoutePolicy::LeastOutstanding => avail
+                .iter()
+                .copied()
+                .min_by_key(|&i| (outstanding(&set.members[i]), i))
+                .expect("available() is never empty"),
             RoutePolicy::SeedAffinity => match affinity_seed(request) {
-                Some(seed) => (seed % n as u64) as usize,
-                None => set.rr.fetch_add(1, Ordering::Relaxed) % n,
+                Some(seed) => avail
+                    .iter()
+                    .copied()
+                    .max_by_key(|&i| (rendezvous_weight(seed, &set.members[i]), std::cmp::Reverse(i)))
+                    .expect("available() is never empty"),
+                None => avail[set.rr.fetch_add(1, Ordering::Relaxed) % n],
             },
         };
         set.routed[idx].fetch_add(1, Ordering::Relaxed);
@@ -164,7 +286,8 @@ impl Router {
     }
 
     /// The `replica_sets` section of the `stats` document: policy plus,
-    /// per set, the member list with routed/outstanding counters.
+    /// per set, the member list with state and routed/outstanding
+    /// counters.
     pub fn to_json(&self, outstanding: &dyn Fn(&str) -> u64) -> Value {
         let mut sets: BTreeMap<String, Value> = BTreeMap::new();
         for (logical, set) in &self.sets {
@@ -175,6 +298,7 @@ impl Router {
                 .map(|(i, m)| {
                     json::obj(vec![
                         ("name", json::s(m)),
+                        ("state", json::s(set.member_state(i).name())),
                         ("routed", json::num(set.routed_to(i) as f64)),
                         ("outstanding", json::num(outstanding(m) as f64)),
                     ])
@@ -201,6 +325,12 @@ mod tests {
         Request::Sample { count: 1, seed }
     }
 
+    fn seed_router(policy: RoutePolicy, n: usize) -> Router {
+        let mut r = Router::new(policy);
+        r.add_set("gp", members(n));
+        r
+    }
+
     #[test]
     fn policy_names_roundtrip() {
         for p in RoutePolicy::ALL {
@@ -212,8 +342,7 @@ mod tests {
 
     #[test]
     fn round_robin_rotates() {
-        let mut r = Router::new(RoutePolicy::RoundRobin);
-        r.add_set("gp", members(3));
+        let r = seed_router(RoutePolicy::RoundRobin, 3);
         let none = |_: &str| 0u64;
         let picks: Vec<String> = (0..6)
             .map(|i| r.route("gp", &sample(i), &none).unwrap().to_string())
@@ -224,8 +353,7 @@ mod tests {
 
     #[test]
     fn least_outstanding_picks_the_idle_member() {
-        let mut r = Router::new(RoutePolicy::LeastOutstanding);
-        r.add_set("gp", members(3));
+        let r = seed_router(RoutePolicy::LeastOutstanding, 3);
         let load = |m: &str| match m {
             "gp@0" => 5,
             "gp@1" => 1,
@@ -238,35 +366,130 @@ mod tests {
     }
 
     #[test]
-    fn seed_affinity_is_stable_per_seed() {
-        let mut r = Router::new(RoutePolicy::SeedAffinity);
-        r.add_set("gp", members(3));
+    fn seed_affinity_is_stable_per_seed_and_covers_members() {
+        let r = seed_router(RoutePolicy::SeedAffinity, 3);
         let none = |_: &str| 0u64;
-        for seed in 0..12u64 {
+        let mut hit = std::collections::BTreeSet::new();
+        for seed in 0..64u64 {
             let first = r.route("gp", &sample(seed), &none).unwrap().to_string();
             for _ in 0..3 {
                 assert_eq!(r.route("gp", &sample(seed), &none).unwrap(), first);
             }
-            assert_eq!(first, format!("gp@{}", seed % 3));
+            hit.insert(first);
         }
+        // Rendezvous hashing spreads 64 seeds over all 3 members.
+        assert_eq!(hit.len(), 3, "members unused: {hit:?}");
         // Unseeded requests still route (rotation fallback).
         assert!(r.route("gp", &Request::Stats, &none).is_some());
+        // And a fresh identically configured router agrees exactly.
+        let r2 = seed_router(RoutePolicy::SeedAffinity, 3);
+        for seed in 0..64u64 {
+            assert_eq!(
+                r.route("gp", &sample(seed), &none).unwrap(),
+                r2.route("gp", &sample(seed), &none).unwrap(),
+            );
+        }
     }
 
     #[test]
-    fn routed_counters_and_json() {
-        let mut r = Router::new(RoutePolicy::SeedAffinity);
-        r.add_set("gp", members(2));
+    fn prop_seed_affinity_unmoved_by_unrelated_member_additions() {
+        // Rendezvous property: growing the set only moves seeds the new
+        // member wins; every other seed keeps its member.
         let none = |_: &str| 0u64;
-        for _ in 0..4 {
-            r.route("gp", &sample(1), &none);
+        let small = seed_router(RoutePolicy::SeedAffinity, 3);
+        let grown = seed_router(RoutePolicy::SeedAffinity, 4);
+        let mut moved = 0usize;
+        for seed in 0..256u64 {
+            let a = small.route("gp", &sample(seed), &none).unwrap().to_string();
+            let b = grown.route("gp", &sample(seed), &none).unwrap().to_string();
+            if b == "gp@3" {
+                moved += 1;
+            } else {
+                assert_eq!(a, b, "seed {seed} moved between surviving members");
+            }
         }
-        assert_eq!(r.set("gp").unwrap().routed_to(1), 4);
+        // The new member claims roughly 1/4 of the seeds — certainly
+        // neither none nor all.
+        assert!(moved > 0 && moved < 256, "moved {moved}");
+    }
+
+    #[test]
+    fn prop_seed_affinity_rehashes_deterministically_on_ejection() {
+        let none = |_: &str| 0u64;
+        let r = seed_router(RoutePolicy::SeedAffinity, 3);
+        let before: Vec<String> = (0..128u64)
+            .map(|s| r.route("gp", &sample(s), &none).unwrap().to_string())
+            .collect();
+        assert!(r.set_member_state("gp@1", MemberState::Ejected));
+        for (s, old) in before.iter().enumerate() {
+            let now = r.route("gp", &sample(s as u64), &none).unwrap().to_string();
+            if old == "gp@1" {
+                // Orphaned seeds redistribute to survivors…
+                assert_ne!(now, "gp@1", "seed {s} routed to the ejected member");
+            } else {
+                // …while every other seed keeps its member.
+                assert_eq!(&now, old, "seed {s} moved although its member survived");
+            }
+        }
+        // Restoring the member restores the original assignment exactly.
+        r.set_member_state("gp@1", MemberState::Healthy);
+        for (s, old) in before.iter().enumerate() {
+            assert_eq!(r.route("gp", &sample(s as u64), &none).unwrap(), old.as_str());
+        }
+    }
+
+    #[test]
+    fn draining_and_ejected_members_receive_no_new_traffic() {
+        for policy in RoutePolicy::ALL {
+            for state in [MemberState::Draining, MemberState::Ejected] {
+                let r = seed_router(policy, 3);
+                r.set_member_state("gp@1", state);
+                let none = |_: &str| 0u64;
+                for seed in 0..32u64 {
+                    let pick = r.route("gp", &sample(seed), &none).unwrap();
+                    assert_ne!(pick, "gp@1", "{policy:?}/{state:?} routed to unavailable member");
+                }
+            }
+        }
+        // least_outstanding must skip a drained member even when it is
+        // the idlest — the satellite fix.
+        let r = seed_router(RoutePolicy::LeastOutstanding, 2);
+        r.set_member_state("gp@0", MemberState::Draining);
+        let load = |m: &str| if m == "gp@0" { 0u64 } else { 100 };
+        assert_eq!(r.route("gp", &sample(0), &load).unwrap(), "gp@1");
+    }
+
+    #[test]
+    fn fully_unavailable_set_falls_back_to_all_members() {
+        let r = seed_router(RoutePolicy::SeedAffinity, 2);
+        r.set_member_state("gp@0", MemberState::Ejected);
+        r.set_member_state("gp@1", MemberState::Ejected);
+        let none = |_: &str| 0u64;
+        assert!(r.route("gp", &sample(7), &none).is_some());
+        assert_eq!(r.member_state("gp@0"), Some(MemberState::Ejected));
+        assert_eq!(r.member_state("nope"), None);
+        assert!(!r.set_member_state("nope", MemberState::Healthy));
+    }
+
+    #[test]
+    fn routed_counters_states_and_json() {
+        let r = seed_router(RoutePolicy::SeedAffinity, 2);
+        let none = |_: &str| 0u64;
+        let member = r.route("gp", &sample(1), &none).unwrap().to_string();
+        for _ in 0..3 {
+            assert_eq!(r.route("gp", &sample(1), &none).unwrap(), member);
+        }
+        let idx: usize = member.strip_prefix("gp@").unwrap().parse().unwrap();
+        assert_eq!(r.set("gp").unwrap().routed_to(idx), 4);
+        r.set_member_state("gp@0", MemberState::Draining);
         let v = r.to_json(&none);
         assert_eq!(v.get("policy").and_then(Value::as_str), Some("seed_affinity"));
         let m = v.get_path("sets.gp.members").and_then(Value::as_array).unwrap();
         assert_eq!(m.len(), 2);
-        assert_eq!(m[1].get("routed").and_then(Value::as_usize), Some(4));
+        assert_eq!(m[idx].get("routed").and_then(Value::as_usize), Some(4));
+        assert_eq!(m[0].get("state").and_then(Value::as_str), Some("draining"));
+        assert_eq!(m[1].get("state").and_then(Value::as_str), Some("healthy"));
         assert_eq!(r.logical_names(), vec!["gp"]);
+        assert_eq!(r.member_names(), vec!["gp@0", "gp@1"]);
     }
 }

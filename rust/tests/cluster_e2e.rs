@@ -1,0 +1,405 @@
+//! End-to-end tests for the multi-node cluster subsystem (`DESIGN.md`
+//! §9): a real tcp backend behind a [`RemoteModel`] proxy, a front-door
+//! coordinator with mixed local+remote replica members serving v1/v2
+//! clients byte-identically to a single-node run, health-probe ejection
+//! of a killed backend with surviving traffic completing cleanly, and
+//! the bounded response cache returning byte-identical replies.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use icr::cluster::RemoteModel;
+use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
+use icr::coordinator::{Coordinator, Request, Response};
+use icr::error::IcrError;
+use icr::json::Value;
+use icr::model::GpModel;
+use icr::net::{ListenAddr, MemberState, NetServer};
+
+static SOCK_ID: AtomicUsize = AtomicUsize::new(0);
+
+fn small_model() -> ModelConfig {
+    ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() }
+}
+
+fn sock_path() -> PathBuf {
+    let id = SOCK_ID.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("icr_cluster_{}_{id}.sock", std::process::id()))
+}
+
+/// One backend `icr serve`-equivalent: a coordinator behind a tcp
+/// NetServer on an ephemeral port.
+struct BackendServer {
+    /// `HOST:PORT` of the listening socket.
+    addr: String,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+fn start_backend() -> BackendServer {
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Tcp("127.0.0.1:0".into()),
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("backend coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind backend");
+    let addr = server.local_addr().strip_prefix("tcp:").expect("tcp addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    BackendServer { addr, coord, stop, handle: Some(handle) }
+}
+
+impl BackendServer {
+    /// `tcp:HOST:PORT`, the remote member address.
+    fn remote_addr(&self) -> String {
+        format!("tcp:{}", self.addr)
+    }
+
+    /// Stop accepting and drain — afterwards connects are refused, so
+    /// health probes fail like against a killed process.
+    fn kill(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BackendServer {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Front-door config: one local native member plus every backend as a
+/// remote member, under the logical name `gp`.
+fn front_cfg(backends: &[&BackendServer]) -> ServerConfig {
+    let mut members = vec![MemberSpec::local(Backend::Native)];
+    for b in backends {
+        members.push(MemberSpec::remote(&b.remote_addr()).expect("remote member"));
+    }
+    ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        replicas: vec![ReplicaSpec::new("gp", members).expect("replica spec")],
+        ..ServerConfig::default()
+    }
+}
+
+/// Minimal JSONL client over a unix socket (mirrors `net_e2e.rs`).
+struct Client {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: Box<dyn Write + Send>,
+}
+
+impl Client {
+    fn unix(path: &std::path::Path) -> Client {
+        let s = UnixStream::connect(path).expect("connect unix");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let r = s.try_clone().expect("clone");
+        Client { reader: BufReader::new(Box::new(r)), writer: Box::new(s) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+    }
+
+    /// Next raw response line (no trailing newline); panics at EOF.
+    fn recv_line(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "unexpected EOF from server");
+        line.truncate(line.trim_end().len());
+        line
+    }
+
+    fn rpc(&mut self, line: &str) -> Value {
+        self.send(line);
+        let reply = self.recv_line();
+        Value::parse(&reply).unwrap_or_else(|e| panic!("bad frame {reply:?}: {e}"))
+    }
+}
+
+fn floats(v: &Value) -> Vec<f64> {
+    v.as_array().expect("array").iter().filter_map(Value::as_f64).collect()
+}
+
+fn sample_of(frame: &Value) -> Vec<f64> {
+    let payload = frame.get("result").unwrap_or(frame);
+    floats(&payload.get("samples").and_then(Value::as_array).expect("samples")[0])
+}
+
+#[test]
+fn remote_model_mirrors_backend_identity_and_bytes() {
+    let backend = start_backend();
+    let engine = backend.coord.engine().clone();
+    let remote = RemoteModel::connect(&backend.remote_addr()).expect("connect remote");
+
+    // Identity comes from the wire `describe`.
+    let d = remote.descriptor();
+    assert_eq!(d.backend, "remote");
+    assert!(d.name.contains(&backend.remote_addr()), "{}", d.name);
+    assert_eq!(remote.n_points(), engine.n_points());
+    assert_eq!(remote.total_dof(), engine.total_dof());
+    assert_eq!(remote.domain_points(), engine.domain_points());
+    assert_eq!(remote.obs_indices(), engine.obs_indices());
+    assert_eq!(remote.endpoint(), backend.remote_addr());
+
+    // Samples and explicit applies are byte-identical to the backend.
+    assert_eq!(remote.sample(3, 42).unwrap(), engine.sample(3, 42).unwrap());
+    let dof = engine.total_dof();
+    let xi: Vec<f64> = (0..dof).map(|i| (i as f64 * 0.37).sin()).collect();
+    assert_eq!(
+        remote.apply_sqrt_batch(std::slice::from_ref(&xi)).unwrap(),
+        engine.apply_sqrt_batch(std::slice::from_ref(&xi)).unwrap(),
+        "apply bytes diverged across the wire"
+    );
+    // Pipelined panel apply reassembles lanes in order.
+    let mut panel = Vec::new();
+    for lane in 0..3 {
+        panel.extend(xi.iter().map(|x| x * (lane as f64 + 1.0)));
+    }
+    assert_eq!(
+        remote.apply_sqrt_panel(&panel, 3).unwrap(),
+        engine.apply_sqrt_panel(&panel, 3).unwrap()
+    );
+
+    // Inference proxies over the wire; loss_grad is typed-unsupported.
+    let n_obs = engine.obs_indices().len();
+    let y = vec![0.25; n_obs];
+    let (field, trace) = remote.infer(&y, 0.5, 5, 0.1).unwrap();
+    let (want_field, want_trace) = engine.infer(&y, 0.5, 5, 0.1).unwrap();
+    assert_eq!(field, want_field);
+    assert_eq!(trace.losses, want_trace.losses);
+    match remote.loss_grad(&xi, &y, 0.5) {
+        Err(IcrError::Unsupported(_)) => {}
+        other => panic!("expected unsupported, got {other:?}"),
+    }
+
+    // Typed remote errors propagate over the wire: a wrong-length y_obs
+    // reaches the backend and its ShapeMismatch error frame decodes back
+    // into the same typed kind, not a string blob. (Local pre-validation
+    // also stays typed: a bad xi shape fails before touching the wire.)
+    match remote.infer(&vec![0.25; n_obs + 1], 0.5, 3, 0.1) {
+        Err(IcrError::ShapeMismatch { .. }) => {}
+        other => panic!("expected wire shape mismatch, got {other:?}"),
+    }
+    match remote.apply_sqrt_batch(&[vec![0.0; dof + 1]]) {
+        Err(IcrError::ShapeMismatch { .. }) => {}
+        other => panic!("expected local shape mismatch, got {other:?}"),
+    }
+
+    // Health: alive now, dead after the backend goes away.
+    assert!(remote.health_probe().is_ok());
+    assert!(remote.client().metrics().counter("requests_ok").get() > 0);
+    let mut backend = backend;
+    backend.kill();
+    assert!(remote.health_probe().is_err(), "probe succeeded against a killed backend");
+}
+
+#[test]
+fn front_door_mixed_replicas_serve_identical_bytes_to_single_node() {
+    let backend = start_backend();
+    let mut cfg = front_cfg(&[&backend]);
+    let sock = sock_path();
+    cfg.listen = ListenAddr::Unix(sock.clone());
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    // The acceptance criterion: mixed v1/v2 clients against the front
+    // door get byte-identical samples to a single-node engine for the
+    // same seeds, regardless of which member (local or remote) serves.
+    let engine = front.engine().clone();
+    std::thread::scope(|sc| {
+        for t in 0..3u64 {
+            let sock = sock.clone();
+            let engine = engine.clone();
+            sc.spawn(move || {
+                let mut c = Client::unix(&sock);
+                for i in 0..8u64 {
+                    let seed = 300 + t * 50 + i;
+                    let want = engine.sample(1, seed).unwrap().remove(0);
+                    let v = if (t + i) % 2 == 0 {
+                        c.rpc(&format!(r#"{{"op": "sample", "count": 1, "seed": {seed}}}"#))
+                    } else {
+                        let v = c.rpc(&format!(
+                            r#"{{"v": 2, "op": "sample", "model": "gp", "id": {i}, "count": 1, "seed": {seed}}}"#
+                        ));
+                        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+                        v
+                    };
+                    assert_eq!(sample_of(&v), want, "seed {seed} diverged from single-node");
+                }
+            });
+        }
+    });
+
+    // Both members carry traffic: drive a wide seed range through the
+    // logical name (64 seeds over 2 members — rendezvous covers both)
+    // and check bytes against the single-node engine throughout.
+    for seed in 500..564u64 {
+        let want = engine.sample(1, seed).unwrap();
+        match front.call_model(Some("gp"), Request::Sample { count: 1, seed }).unwrap() {
+            Response::Samples(s) => assert_eq!(s, want, "seed {seed}"),
+            other => panic!("{other:?}"),
+        }
+    }
+    let set = front.router().set("gp").expect("gp set");
+    assert!(set.routed_to(0) > 0, "local member got no traffic");
+    assert!(set.routed_to(1) > 0, "remote member got no traffic");
+    // Cross-node: the backend actually executed applies for front-door
+    // traffic (applies_executed is traffic-specific — describe frames
+    // and health probes don't move it).
+    assert!(
+        backend.coord.metrics().counter("applies_executed").get() > 0,
+        "backend never executed a routed apply"
+    );
+
+    // The remote member is directly addressable and byte-identical.
+    let want = engine.sample(1, 999).unwrap().remove(0);
+    let mut c = Client::unix(&sock);
+    let v = c.rpc(r#"{"v": 2, "op": "sample", "model": "gp@1", "id": 1, "count": 1, "seed": 999}"#);
+    assert_eq!(sample_of(&v), want, "direct remote-member sample diverged");
+
+    // Stats expose the cluster section with the remote endpoint.
+    let v = c.rpc(r#"{"v": 2, "op": "stats"}"#);
+    let stats = v.get_path("result.stats").expect("stats");
+    let members = stats.get_path("cluster.sets.gp.members").and_then(Value::as_array).unwrap();
+    assert_eq!(members[0].get("endpoint").and_then(Value::as_str), Some("local"));
+    assert_eq!(
+        members[1].get("endpoint").and_then(Value::as_str),
+        Some(backend.remote_addr().as_str())
+    );
+    assert_eq!(members[1].get("state").and_then(Value::as_str), Some("healthy"));
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_file(&sock).ok();
+}
+
+#[test]
+fn killing_backend_ejects_member_and_surviving_traffic_completes() {
+    let backend = start_backend();
+    let mut cfg = front_cfg(&[&backend]);
+    cfg.health_interval_ms = 150;
+    let front = Coordinator::start(cfg).expect("front door");
+    let engine = front.engine().clone();
+
+    // Warm: remote member healthy and serving.
+    assert_eq!(front.router().member_state("gp@1"), Some(MemberState::Healthy));
+
+    // Kill the backend; the health monitor must eject the member within
+    // one interval (plus probe time — give it a generous deadline, CI
+    // boxes stall).
+    let mut backend = backend;
+    backend.kill();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while front.router().member_state("gp@1") != Some(MemberState::Ejected) {
+        assert!(Instant::now() < deadline, "dead backend never ejected");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(front.metrics().counter("health_ejections").get() >= 1);
+
+    // Surviving traffic: every seed (including those previously pinned
+    // to the dead member) completes without error frames, byte-identical
+    // to single-node.
+    for seed in 0..16u64 {
+        let want = engine.sample(1, seed).unwrap();
+        match front.call_model(Some("gp"), Request::Sample { count: 1, seed }) {
+            Ok(Response::Samples(s)) => assert_eq!(s, want, "seed {seed}"),
+            other => panic!("seed {seed}: surviving traffic failed: {other:?}"),
+        }
+    }
+    // All of it went to the surviving local member.
+    let set = front.router().set("gp").expect("gp set");
+    assert_eq!(set.routed_to(0), 16);
+    front.shutdown();
+}
+
+#[test]
+fn response_cache_e2e_byte_identical_and_bounded() {
+    let sock = sock_path();
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Unix(sock.clone()),
+        replicas: vec![ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()],
+        cache_entries: 2,
+        ..ServerConfig::default()
+    };
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut c = Client::unix(&sock);
+    let frame = r#"{"v": 2, "op": "sample", "model": "gp", "id": 9, "count": 2, "seed": 1234}"#;
+    c.send(frame);
+    let fresh = c.recv_line();
+    c.send(frame);
+    let cached = c.recv_line();
+    assert_eq!(cached, fresh, "cached reply is not byte-identical to the fresh one");
+    assert!(front.cache().hits() >= 1, "repeated (seed, count) request missed the cache");
+
+    // The bound is respected and eviction is exercised.
+    for seed in 0..5u64 {
+        let v = c.rpc(&format!(
+            r#"{{"v": 2, "op": "sample", "model": "gp", "id": {seed}, "count": 1, "seed": {seed}}}"#
+        ));
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    }
+    assert!(front.cache().len() <= 2, "cache exceeded --cache-entries");
+    assert!(front.cache().evictions() > 0, "eviction counter never moved");
+
+    // Wire-visible cache metrics.
+    let v = c.rpc(r#"{"v": 2, "op": "stats"}"#);
+    let stats = v.get_path("result.stats").expect("stats");
+    assert_eq!(stats.get_path("cluster.cache.enabled"), Some(&Value::Bool(true)));
+    assert!(stats.get_path("cluster.cache.hits").and_then(Value::as_f64).unwrap() >= 1.0);
+    assert!(stats.get_path("cluster.cache.evictions").and_then(Value::as_f64).unwrap() >= 1.0);
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_file(&sock).ok();
+}
+
+#[test]
+fn describe_op_serves_identity_over_the_wire() {
+    let backend = start_backend();
+    let engine = backend.coord.engine().clone();
+    // Raw JSONL over tcp — what RemoteModel::connect does underneath.
+    let mut s = std::net::TcpStream::connect(&backend.addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+    writeln!(s, r#"{{"v": 2, "op": "describe", "id": 3}}"#).expect("send");
+    s.flush().expect("flush");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("recv");
+    let v = Value::parse(&line).expect("frame");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    let d = v.get_path("result.describe.descriptor").expect("descriptor");
+    assert_eq!(d.get("backend").and_then(Value::as_str), Some("native"));
+    assert_eq!(d.get("n").and_then(Value::as_usize), Some(engine.n_points()));
+    assert_eq!(d.get("dof").and_then(Value::as_usize), Some(engine.total_dof()));
+    let domain = v.get_path("result.describe.domain").and_then(Value::as_array).unwrap();
+    assert_eq!(domain.len(), engine.n_points());
+}

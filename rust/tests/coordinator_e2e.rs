@@ -142,11 +142,7 @@ fn serve_two_named_models_over_both_protocol_versions() {
     // model, and unknown models produce typed v2 error frames — all
     // through the same wire codec `icr serve` uses.
     let mut cfg = small_cfg();
-    cfg.extra_models = vec![ModelSpec {
-        name: "kiss".into(),
-        backend: Backend::Kissgp,
-        model: cfg.model.clone(),
-    }];
+    cfg.extra_models = vec![ModelSpec::local("kiss", Backend::Kissgp, cfg.model.clone())];
     let coord = Coordinator::start(cfg).unwrap();
     assert_eq!(coord.model_names(), vec!["default", "kiss"]);
 

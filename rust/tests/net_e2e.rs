@@ -141,11 +141,8 @@ fn concurrent_mixed_clients_get_deterministic_bytes() {
     // replica serves it (seed-affinity property — `gp` is a 2-member
     // replica set built from the default model's config).
     let mut cfg = small_cfg();
-    cfg.replicas = vec![ReplicaSpec {
-        name: "gp".into(),
-        backend: icr::config::Backend::Native,
-        count: 2,
-    }];
+    cfg.replicas =
+        vec![ReplicaSpec::homogeneous("gp", icr::config::Backend::Native, 2).unwrap()];
     cfg.route_policy = RoutePolicy::SeedAffinity;
     let server = start_unix(cfg);
     let engine = server.coord.engine().clone();

@@ -165,11 +165,11 @@ fn v1_frames_are_served_by_the_default_model_end_to_end() {
     // the default model's result — the back-compat acceptance criterion.
     let model = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() };
     let mut cfg = ServerConfig { model, workers: 2, ..ServerConfig::default() };
-    cfg.extra_models = vec![icr::config::ModelSpec {
-        name: "ref".into(),
-        backend: icr::config::Backend::Exact,
-        model: cfg.model.clone(),
-    }];
+    cfg.extra_models = vec![icr::config::ModelSpec::local(
+        "ref",
+        icr::config::Backend::Exact,
+        cfg.model.clone(),
+    )];
     let coord = Coordinator::start(cfg).unwrap();
 
     let frame = parse_request(r#"{"op": "sample", "count": 1, "seed": 77}"#).unwrap();
@@ -187,11 +187,11 @@ fn v1_frames_are_served_by_the_default_model_end_to_end() {
 fn v2_frames_route_by_model_id_end_to_end() {
     let model = ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() };
     let mut cfg = ServerConfig { model, workers: 2, ..ServerConfig::default() };
-    cfg.extra_models = vec![icr::config::ModelSpec {
-        name: "ref".into(),
-        backend: icr::config::Backend::Exact,
-        model: cfg.model.clone(),
-    }];
+    cfg.extra_models = vec![icr::config::ModelSpec::local(
+        "ref",
+        icr::config::Backend::Exact,
+        cfg.model.clone(),
+    )];
     let coord = Coordinator::start(cfg).unwrap();
 
     let frame =
@@ -251,6 +251,27 @@ fn stats_response_is_structured_json_on_the_wire() {
         .collect();
     assert_eq!(policies, ["round_robin", "least_outstanding", "seed_affinity"]);
     assert!(stats.get_path("transport.gauges").is_some(), "transport gauge section");
+    // §9: the stats document also advertises model families (including
+    // the remote proxy) and cluster capabilities, and carries the
+    // cluster section with the cache counters.
+    let families: Vec<&str> = stats
+        .get("model_families")
+        .and_then(Value::as_array)
+        .expect("model families advertised")
+        .iter()
+        .filter_map(Value::as_str)
+        .collect();
+    assert_eq!(families, ["native", "pjrt", "kissgp", "exact", "remote"]);
+    let caps: Vec<&str> = stats
+        .get("capabilities")
+        .and_then(Value::as_array)
+        .expect("capabilities advertised")
+        .iter()
+        .filter_map(Value::as_str)
+        .collect();
+    assert_eq!(caps, ["remote_backend", "response_cache", "health_checks"]);
+    assert!(stats.get_path("cluster.cache.enabled").is_some(), "cluster cache section");
+    assert!(stats.get_path("cluster.health_interval_ms").is_some(), "health interval");
     coord.shutdown();
 }
 
