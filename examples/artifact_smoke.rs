@@ -1,0 +1,156 @@
+//! Artifact-smoke: the CI leg for the persistence layer (`DESIGN.md`
+//! §10).
+//!
+//! Exercises the full artifact lifecycle in one process:
+//!
+//! - save: a served coordinator optimizes a short MAP posterior,
+//!   installs it, and writes a versioned artifact directory;
+//! - load: the artifact is re-verified (payload sha256s + config
+//!   checksum), the model rebuilt, and its samples byte-checked against
+//!   the saver;
+//! - warm start: a second coordinator restored from the artifact serves
+//!   `infer` byte-identically to the saver's warm path;
+//! - hot reload: a live coordinator swaps its default entry from a
+//!   second artifact with a different geometry via the `reload_model`
+//!   op and serves the new model's bytes;
+//! - corruption: a byte-flipped payload is rejected with the typed
+//!   checksum error and the old model keeps serving.
+//!
+//! The artifact directory is left on disk (`ICR_SMOKE_DIR`, default
+//! `artifact-smoke/`) so CI can upload it. Exits non-zero on any
+//! violation.
+//!
+//! ```text
+//! cargo run --release --example artifact_smoke
+//! ```
+
+use std::path::PathBuf;
+
+use icr::artifact::{self, config_checksum, Snapshot};
+use icr::config::{Backend, ModelConfig, ServerConfig};
+use icr::coordinator::{Coordinator, Request, Response};
+use icr::error::IcrError;
+use icr::model::ModelBuilder;
+use icr::rng::Rng;
+
+fn small_cfg() -> ServerConfig {
+    ServerConfig {
+        model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() },
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        ..ServerConfig::default()
+    }
+}
+
+fn main() {
+    let dir = PathBuf::from(
+        std::env::var("ICR_SMOKE_DIR").unwrap_or_else(|_| "artifact-smoke".into()),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // --- Save: short MAP run, posterior installed, artifact written. ---
+    let saver = Coordinator::start(small_cfg()).expect("saver coordinator");
+    let engine = saver.engine();
+    let dof = engine.total_dof();
+    let mut rng = Rng::new(314);
+    let y: Vec<f64> = rng.standard_normal_vec(engine.obs_indices().len());
+    let (mi, xi) =
+        engine.infer_multi_from(None, &y, 0.3, 60, 0.1, 2, 9).expect("MAP run");
+    saver
+        .install_posterior(None, xi[mi.best * dof..(mi.best + 1) * dof].to_vec())
+        .expect("install posterior");
+    let snap = saver.save_artifact(None, &dir).expect("save artifact");
+    println!(
+        "artifact-smoke: saved {:?} (N = {}, dof = {}, config sha256 {}) -> {}",
+        snap.name,
+        snap.descriptor.n,
+        snap.descriptor.dof,
+        snap.config_sha256(),
+        dir.display()
+    );
+
+    // --- Load: verified rebuild, byte-identical samples. ---
+    let (loaded, back) = artifact::load_model(&dir, None, "artifacts").expect("load artifact");
+    assert_eq!(back.config_sha256(), snap.config_sha256());
+    assert_eq!(
+        loaded.sample(3, 2718).expect("loaded sample"),
+        engine.sample(3, 2718).expect("saver sample"),
+        "loaded model's samples diverged from the saver"
+    );
+    println!("artifact-smoke: load OK — samples byte-identical to the saver");
+
+    // --- Warm start: restored server answers infer like the saver. ---
+    let warm_saver = match saver
+        .call(Request::Infer { y_obs: y.clone(), sigma_n: 0.3, steps: 10, lr: 0.1 })
+        .expect("saver warm infer")
+    {
+        Response::Inference { field, .. } => field,
+        other => panic!("{other:?}"),
+    };
+    let mut cfg = small_cfg();
+    cfg.model = back.config.clone();
+    cfg.backend = back.backend;
+    let loader = Coordinator::start(cfg).expect("loader coordinator");
+    back.verify_model(loader.engine().as_ref()).expect("geometry parity");
+    loader
+        .install_posterior(None, back.posterior.clone().expect("posterior payload"))
+        .expect("install restored posterior");
+    let warm_loader = match loader
+        .call(Request::Infer { y_obs: y, sigma_n: 0.3, steps: 10, lr: 0.1 })
+        .expect("loader warm infer")
+    {
+        Response::Inference { field, .. } => field,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(warm_saver, warm_loader, "warm inference diverged across save/load");
+    println!("artifact-smoke: warm start OK — restored infer byte-identical");
+    saver.shutdown();
+
+    // --- Hot reload: swap the loader's entry to a bigger geometry. ---
+    let deploy_dir = dir.join("next");
+    let next = ModelBuilder::new().windows(3, 2).levels(3).target_n(64);
+    let next_cfg = next.config().clone();
+    let next_model = next.build().expect("next model");
+    let next_snap =
+        Snapshot::capture("default", Backend::Native, &next_cfg, next_model.as_ref(), None, 0)
+            .expect("next snapshot");
+    artifact::save(&deploy_dir, &next_snap).expect("save next artifact");
+    match loader
+        .call(Request::ReloadModel { path: deploy_dir.to_string_lossy().into_owned() })
+        .expect("reload op")
+    {
+        Response::Reloaded { model, config_sha256 } => {
+            assert_eq!(model, "default");
+            assert_eq!(config_sha256, config_checksum(&next_cfg));
+        }
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(loader.engine().n_points(), 64, "reload did not swap the entry");
+    assert_eq!(
+        loader.engine().sample(1, 11).expect("reloaded sample"),
+        next_model.sample(1, 11).expect("next sample"),
+        "reloaded entry serves wrong bytes"
+    );
+    println!("artifact-smoke: hot reload OK — entry swapped to the new geometry");
+
+    // --- Corruption: byte-flip rejected, old model keeps serving. ---
+    let evil_dir = dir.join("corrupt");
+    artifact::save(&evil_dir, &next_snap).expect("save corruptible artifact");
+    let payload = evil_dir.join("domain.bin");
+    let mut bytes = std::fs::read(&payload).expect("read payload");
+    bytes[7] ^= 0x20;
+    std::fs::write(&payload, &bytes).expect("tamper payload");
+    match loader.reload_model_from(None, &evil_dir) {
+        Err(IcrError::ChecksumMismatch { what, .. }) => {
+            assert!(what.contains("domain.bin"), "wrong subject: {what}");
+        }
+        other => panic!("corrupt artifact accepted: {other:?}"),
+    }
+    assert_eq!(loader.engine().n_points(), 64, "failed reload must not swap");
+    let _ = std::fs::remove_dir_all(&evil_dir);
+    println!("artifact-smoke: corruption rejected with typed checksum error");
+
+    loader.shutdown();
+    println!("artifact-smoke: OK");
+}

@@ -1,0 +1,604 @@
+//! Versioned on-disk model artifacts (`DESIGN.md` §10): snapshots a
+//! served model can be saved to, verified against, and rebuilt from.
+//!
+//! The paper's headline model has 122 billion parameters — state you
+//! ship between processes, not something you recompute at every boot.
+//! An artifact is a directory holding one `manifest.json` plus raw
+//! binary payloads, mirroring the AOT manifest+payload split the
+//! [`crate::runtime`] uses for HLO executables:
+//!
+//! - `manifest.json` — schema version, registry name, backend family,
+//!   the full [`ModelConfig`], a SHA-256 **config checksum** over the
+//!   config's canonical JSON, the [`ModelDescriptor`], hardware /
+//!   determinism provenance (crate version, avx2/fma, core count,
+//!   apply_threads), and one `{path, kind, sha256, len}` record per
+//!   payload.
+//! - `domain.bin` — modeled locations (little-endian `f64`).
+//! - `obs.bin` — observation indices (little-endian `u64`).
+//! - `xi.bin` — optional optimized excitations ξ (the posterior state a
+//!   warm-started `infer` resumes from).
+//!
+//! [`load`] re-verifies every payload digest and the config checksum and
+//! rejects mismatches with typed errors
+//! ([`IcrError::ArtifactCorrupt`] / [`IcrError::ChecksumMismatch`]).
+//! Because samples are pure functions of `(seed, config)` (`DESIGN.md`
+//! §4), a model rebuilt from a verified artifact produces byte-identical
+//! samples to the model that saved it; [`Snapshot::verify_model`] pins
+//! that contract by comparing the rebuilt geometry, domain and
+//! observation pattern bitwise against the stored payloads.
+//!
+//! The same checksum function guards the cluster front door: a remote
+//! shard's `describe` reply carries its config checksum, and the health
+//! monitor refuses to route to a member whose checksum mismatches the
+//! declared spec (`DESIGN.md` §9/§10).
+
+pub mod payload;
+pub mod sha256;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::{Backend, ModelConfig};
+use crate::error::IcrError;
+use crate::json::{self, Value};
+use crate::model::{GpModel, ModelDescriptor};
+
+/// Artifact schema version; bumped on incompatible manifest changes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Manifest file name inside an artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// SHA-256 hex checksum of a model configuration's canonical JSON
+/// encoding. Object keys serialize in sorted order, so the encoding —
+/// and therefore the checksum — is deterministic across processes. This
+/// is the single identity function shared by artifact verification and
+/// the remote `describe`-time shard check.
+pub fn config_checksum(cfg: &ModelConfig) -> String {
+    sha256::hex_digest(cfg.to_json().to_json().as_bytes())
+}
+
+/// Hardware/determinism provenance recorded at save time. Samples do
+/// not depend on any of these knobs (`DESIGN.md` §4/§6), so provenance
+/// is diagnostic — it answers "what produced this artifact", it does not
+/// gate loading.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Crate version that wrote the artifact.
+    pub version: String,
+    /// AVX2 available on the saving host.
+    pub avx2: bool,
+    /// FMA available on the saving host.
+    pub fma: bool,
+    /// Core count of the saving host.
+    pub cores: usize,
+    /// Configured `--apply-threads` of the saving process.
+    pub apply_threads: usize,
+}
+
+impl Provenance {
+    /// Capture the current process's provenance.
+    pub fn capture(apply_threads: usize) -> Provenance {
+        let feat = crate::parallel::cpu_features();
+        Provenance {
+            version: crate::VERSION.to_string(),
+            avx2: feat.avx2,
+            fma: feat.fma,
+            cores: feat.cores,
+            apply_threads,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("version", json::s(&self.version)),
+            ("avx2", Value::Bool(self.avx2)),
+            ("fma", Value::Bool(self.fma)),
+            ("cores", json::num(self.cores as f64)),
+            ("apply_threads", json::num(self.apply_threads as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Provenance {
+        Provenance {
+            version: v.get("version").and_then(Value::as_str).unwrap_or("").to_string(),
+            avx2: v.get("avx2").and_then(Value::as_bool).unwrap_or(false),
+            fma: v.get("fma").and_then(Value::as_bool).unwrap_or(false),
+            cores: v.get("cores").and_then(Value::as_usize).unwrap_or(0),
+            apply_threads: v.get("apply_threads").and_then(Value::as_usize).unwrap_or(0),
+        }
+    }
+}
+
+/// One payload record in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+struct Entry {
+    path: String,
+    kind: &'static str,
+    sha256: String,
+    len: usize,
+}
+
+/// In-memory image of an artifact: everything [`save`] writes and
+/// [`load`] verifies.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Registry name the model was saved under.
+    pub name: String,
+    /// Engine family that rebuilds the model.
+    pub backend: Backend,
+    /// Full model configuration (the checksum's input).
+    pub config: ModelConfig,
+    /// Descriptor of the saved model.
+    pub descriptor: ModelDescriptor,
+    /// Modeled domain locations (bitwise parity reference at load).
+    pub domain: Vec<f64>,
+    /// Observation pattern.
+    pub obs: Vec<usize>,
+    /// Optimized excitations ξ from a posterior MAP run, if saved; a
+    /// warm-started `infer` resumes chain 0 from here.
+    pub posterior: Option<Vec<f64>>,
+    /// Hardware/determinism provenance of the saving process.
+    pub provenance: Provenance,
+}
+
+impl Snapshot {
+    /// Capture a snapshot of a live model. Remote proxies cannot be
+    /// snapshotted — the state lives with the backend process.
+    pub fn capture(
+        name: &str,
+        backend: Backend,
+        config: &ModelConfig,
+        model: &dyn GpModel,
+        posterior: Option<Vec<f64>>,
+        apply_threads: usize,
+    ) -> Result<Snapshot, IcrError> {
+        if backend == Backend::Remote {
+            return Err(IcrError::Unsupported(
+                "cannot snapshot a remote proxy; save on the backend process".into(),
+            ));
+        }
+        if let Some(xi) = &posterior {
+            let dof = model.total_dof();
+            if xi.len() != dof {
+                return Err(IcrError::ShapeMismatch {
+                    what: "posterior",
+                    expected: dof,
+                    got: xi.len(),
+                });
+            }
+        }
+        Ok(Snapshot {
+            name: name.to_string(),
+            backend,
+            config: config.clone(),
+            descriptor: model.descriptor(),
+            domain: model.domain_points(),
+            obs: model.obs_indices(),
+            posterior,
+            provenance: Provenance::capture(apply_threads),
+        })
+    }
+
+    /// Config checksum of this snapshot.
+    pub fn config_sha256(&self) -> String {
+        config_checksum(&self.config)
+    }
+
+    /// A [`crate::model::ModelBuilder`] configured to rebuild this
+    /// snapshot's model (config + backend); the caller layers on
+    /// process-local knobs (executor, AOT artifact dir) before `build()`.
+    pub fn builder(&self) -> crate::model::ModelBuilder {
+        crate::model::ModelBuilder::from_config(self.config.clone()).backend(self.backend)
+    }
+
+    /// Pin the byte-identity contract: a model rebuilt from this
+    /// snapshot's config must reproduce the stored geometry, domain
+    /// points (bitwise) and observation pattern. A mismatch means the
+    /// refinement/chart/kernel code drifted since the artifact was saved
+    /// — loading it would silently produce different samples, so this
+    /// rejects with a typed error instead.
+    pub fn verify_model(&self, model: &dyn GpModel) -> Result<(), IcrError> {
+        let d = model.descriptor();
+        if (d.n, d.dof) != (self.descriptor.n, self.descriptor.dof) {
+            return Err(IcrError::ChecksumMismatch {
+                what: "model geometry".into(),
+                expected: format!("n={} dof={}", self.descriptor.n, self.descriptor.dof),
+                got: format!("n={} dof={}", d.n, d.dof),
+            });
+        }
+        let domain = model.domain_points();
+        if domain.len() != self.domain.len()
+            || domain.iter().zip(&self.domain).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(IcrError::ChecksumMismatch {
+                what: "domain points".into(),
+                expected: format!("{} stored values", self.domain.len()),
+                got: "rebuilt domain differs bitwise".into(),
+            });
+        }
+        if model.obs_indices() != self.obs {
+            return Err(IcrError::ChecksumMismatch {
+                what: "observation pattern".into(),
+                expected: format!("{} stored indices", self.obs.len()),
+                got: "rebuilt pattern differs".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Write a snapshot to `dir` (created if missing): payloads first, then
+/// the manifest naming their digests, so a torn save is detectable (a
+/// manifest only ever references fully written payloads).
+pub fn save(dir: &Path, snap: &Snapshot) -> Result<(), IcrError> {
+    fs::create_dir_all(dir)
+        .map_err(|e| IcrError::ArtifactCorrupt(format!("create {}: {e}", dir.display())))?;
+    let mut entries = Vec::new();
+    let mut write = |file: &str, kind: &'static str, bytes: Vec<u8>| -> Result<(), IcrError> {
+        let path = dir.join(file);
+        fs::write(&path, &bytes)
+            .map_err(|e| IcrError::ArtifactCorrupt(format!("write {}: {e}", path.display())))?;
+        entries.push(Entry {
+            path: file.to_string(),
+            kind,
+            sha256: sha256::hex_digest(&bytes),
+            len: bytes.len(),
+        });
+        Ok(())
+    };
+    write("domain.bin", "domain_f64", payload::encode_f64s(&snap.domain))?;
+    write("obs.bin", "obs_u64", payload::encode_u64s(&snap.obs))?;
+    if let Some(xi) = &snap.posterior {
+        write("xi.bin", "posterior_f64", payload::encode_f64s(xi))?;
+    }
+    let manifest = json::obj(vec![
+        ("schema_version", json::num(SCHEMA_VERSION as f64)),
+        ("name", json::s(&snap.name)),
+        ("backend", json::s(snap.backend.name())),
+        ("config", snap.config.to_json()),
+        ("config_sha256", json::s(&snap.config_sha256())),
+        ("descriptor", snap.descriptor.to_json()),
+        ("provenance", snap.provenance.to_json()),
+        (
+            "entries",
+            json::arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        json::obj(vec![
+                            ("path", json::s(&e.path)),
+                            ("kind", json::s(e.kind)),
+                            ("sha256", json::s(&e.sha256)),
+                            ("len", json::num(e.len as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = dir.join(MANIFEST_FILE);
+    fs::write(&path, manifest.to_json_pretty())
+        .map_err(|e| IcrError::ArtifactCorrupt(format!("write {}: {e}", path.display())))?;
+    Ok(())
+}
+
+fn manifest_str<'a>(v: &'a Value, key: &str) -> Result<&'a str, IcrError> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| IcrError::ArtifactCorrupt(format!("manifest missing {key:?}")))
+}
+
+/// Read and fully verify an artifact directory: manifest shape, schema
+/// version, per-payload lengths and SHA-256 digests, and the config
+/// checksum. Every failure is a typed [`IcrError`] so the `reload_model`
+/// op can surface it as a protocol-v2 error frame.
+pub fn load(dir: &Path) -> Result<Snapshot, IcrError> {
+    let manifest_path = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&manifest_path).map_err(|e| {
+        IcrError::ArtifactCorrupt(format!("read {}: {e}", manifest_path.display()))
+    })?;
+    let v = Value::parse(&text)
+        .map_err(|e| IcrError::ArtifactCorrupt(format!("manifest is not valid JSON: {e}")))?;
+    let schema = v
+        .get("schema_version")
+        .and_then(Value::as_usize)
+        .ok_or_else(|| IcrError::ArtifactCorrupt("manifest missing \"schema_version\"".into()))?;
+    if schema as u64 > SCHEMA_VERSION {
+        return Err(IcrError::Unsupported(format!(
+            "artifact schema_version {schema} is newer than supported {SCHEMA_VERSION}"
+        )));
+    }
+    let name = manifest_str(&v, "name")?.to_string();
+    let backend = Backend::parse(manifest_str(&v, "backend")?)
+        .map_err(|e| IcrError::ArtifactCorrupt(format!("{e:#}")))?;
+    let config_v = v
+        .get("config")
+        .ok_or_else(|| IcrError::ArtifactCorrupt("manifest missing \"config\"".into()))?;
+    let config = ModelConfig::from_json(config_v);
+    let declared = manifest_str(&v, "config_sha256")?.to_string();
+    let actual = config_checksum(&config);
+    if declared != actual {
+        return Err(IcrError::ChecksumMismatch {
+            what: "config checksum".into(),
+            expected: declared,
+            got: actual,
+        });
+    }
+    let descriptor = ModelDescriptor::from_json(
+        v.get("descriptor")
+            .ok_or_else(|| IcrError::ArtifactCorrupt("manifest missing \"descriptor\"".into()))?,
+    )
+    .map_err(|e| IcrError::ArtifactCorrupt(format!("bad descriptor: {e}")))?;
+    let provenance =
+        Provenance::from_json(v.get("provenance").unwrap_or(&Value::Null));
+
+    let entries = v
+        .get("entries")
+        .and_then(Value::as_array)
+        .ok_or_else(|| IcrError::ArtifactCorrupt("manifest missing \"entries\"".into()))?;
+    let mut domain = None;
+    let mut obs = None;
+    let mut posterior = None;
+    for e in entries {
+        let rel = manifest_str(e, "path")?;
+        if rel.contains("..") || rel.contains('/') || rel.contains('\\') {
+            return Err(IcrError::ArtifactCorrupt(format!(
+                "entry path {rel:?} escapes the artifact directory"
+            )));
+        }
+        let kind = manifest_str(e, "kind")?;
+        let want_sha = manifest_str(e, "sha256")?;
+        let want_len = e
+            .get("len")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| IcrError::ArtifactCorrupt(format!("entry {rel:?} missing \"len\"")))?;
+        let path = dir.join(rel);
+        let bytes = fs::read(&path)
+            .map_err(|e| IcrError::ArtifactCorrupt(format!("read {}: {e}", path.display())))?;
+        if bytes.len() != want_len {
+            return Err(IcrError::ArtifactCorrupt(format!(
+                "payload {rel:?} truncated: manifest says {want_len} bytes, file has {}",
+                bytes.len()
+            )));
+        }
+        let got_sha = sha256::hex_digest(&bytes);
+        if got_sha != want_sha {
+            return Err(IcrError::ChecksumMismatch {
+                what: format!("payload {rel:?}"),
+                expected: want_sha.to_string(),
+                got: got_sha,
+            });
+        }
+        let as_f64 = |bytes: &[u8]| {
+            payload::decode_f64s(bytes)
+                .map_err(|m| IcrError::ArtifactCorrupt(format!("payload {rel:?}: {m}")))
+        };
+        match kind {
+            "domain_f64" => domain = Some(as_f64(&bytes)?),
+            "obs_u64" => {
+                obs = Some(payload::decode_u64s(&bytes).map_err(|m| {
+                    IcrError::ArtifactCorrupt(format!("payload {rel:?}: {m}"))
+                })?)
+            }
+            "posterior_f64" => posterior = Some(as_f64(&bytes)?),
+            // Unknown payload kinds from newer writers are tolerated —
+            // their digests verified above, their contents ignored.
+            _ => {}
+        }
+    }
+    let domain = domain
+        .ok_or_else(|| IcrError::ArtifactCorrupt("artifact has no domain payload".into()))?;
+    let obs =
+        obs.ok_or_else(|| IcrError::ArtifactCorrupt("artifact has no obs payload".into()))?;
+    if domain.len() != descriptor.n {
+        return Err(IcrError::ArtifactCorrupt(format!(
+            "domain payload has {} points, descriptor says n={}",
+            domain.len(),
+            descriptor.n
+        )));
+    }
+    if let Some(xi) = &posterior {
+        if xi.len() != descriptor.dof {
+            return Err(IcrError::ArtifactCorrupt(format!(
+                "posterior payload has {} values, descriptor says dof={}",
+                xi.len(),
+                descriptor.dof
+            )));
+        }
+    }
+    if let Some(&bad) = obs.iter().find(|&&i| i >= descriptor.n) {
+        return Err(IcrError::ArtifactCorrupt(format!(
+            "obs index {bad} out of range for n={}",
+            descriptor.n
+        )));
+    }
+    Ok(Snapshot { name, backend, config, descriptor, domain, obs, posterior, provenance })
+}
+
+/// One-stop load-and-rebuild: verify the artifact on disk, rebuild the
+/// model from its config through [`crate::model::ModelBuilder`], and
+/// assert bitwise geometry parity via [`Snapshot::verify_model`].
+/// `aot_dir` is the AOT HLO artifact directory the PJRT family needs;
+/// `exec` optionally shares a worker pool.
+pub fn load_model(
+    dir: &Path,
+    exec: Option<crate::parallel::Exec>,
+    aot_dir: &str,
+) -> Result<(Arc<dyn GpModel>, Snapshot), IcrError> {
+    let snap = load(dir)?;
+    let mut b = snap.builder().artifact_dir(aot_dir);
+    if let Some(exec) = exec {
+        b = b.exec(exec);
+    }
+    let model = b.build()?;
+    snap.verify_model(model.as_ref())?;
+    Ok((model, snap))
+}
+
+/// Resolve the manifest path for display purposes.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join(MANIFEST_FILE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelBuilder;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "icr-artifact-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_model() -> (Arc<dyn GpModel>, ModelConfig) {
+        let b = ModelBuilder::new().windows(3, 2).levels(3).target_n(40);
+        let cfg = b.config().clone();
+        (b.build().unwrap(), cfg)
+    }
+
+    #[test]
+    fn config_checksum_is_deterministic_and_config_sensitive() {
+        let a = ModelConfig::default();
+        let mut b = ModelConfig::default();
+        assert_eq!(config_checksum(&a), config_checksum(&b));
+        b.target_n = a.target_n + 1;
+        assert_ne!(config_checksum(&a), config_checksum(&b));
+    }
+
+    #[test]
+    fn save_load_round_trip_preserves_everything() {
+        let dir = tmp_dir("roundtrip");
+        let (model, cfg) = small_model();
+        let posterior = Some(vec![0.25; model.total_dof()]);
+        let snap = Snapshot::capture("default", Backend::Native, &cfg, model.as_ref(), posterior, 2)
+            .unwrap();
+        save(&dir, &snap).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.name, "default");
+        assert_eq!(back.backend, Backend::Native);
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.descriptor, snap.descriptor);
+        assert_eq!(back.domain, snap.domain);
+        assert_eq!(back.obs, snap.obs);
+        assert_eq!(back.posterior, snap.posterior);
+        assert_eq!(back.provenance.version, crate::VERSION);
+        assert_eq!(back.provenance.apply_threads, 2);
+        back.verify_model(model.as_ref()).unwrap();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn remote_proxies_cannot_be_snapshotted() {
+        let (model, cfg) = small_model();
+        match Snapshot::capture("d", Backend::Remote, &cfg, model.as_ref(), None, 0) {
+            Err(IcrError::Unsupported(m)) => assert!(m.contains("remote"), "{m}"),
+            other => panic!("expected unsupported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_byte_flip_is_rejected_with_checksum_mismatch() {
+        let dir = tmp_dir("byteflip");
+        let (model, cfg) = small_model();
+        let snap =
+            Snapshot::capture("default", Backend::Native, &cfg, model.as_ref(), None, 0).unwrap();
+        save(&dir, &snap).unwrap();
+        let path = dir.join("domain.bin");
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[3] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        match load(&dir) {
+            Err(IcrError::ChecksumMismatch { what, .. }) => {
+                assert!(what.contains("domain.bin"), "{what}")
+            }
+            other => panic!("expected checksum mismatch, got {:?}", other.map(|s| s.name)),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected_as_corrupt() {
+        let dir = tmp_dir("truncate");
+        let (model, cfg) = small_model();
+        let snap =
+            Snapshot::capture("default", Backend::Native, &cfg, model.as_ref(), None, 0).unwrap();
+        save(&dir, &snap).unwrap();
+        let path = dir.join("obs.bin");
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        match load(&dir) {
+            Err(IcrError::ArtifactCorrupt(m)) => assert!(m.contains("truncated"), "{m}"),
+            other => panic!("expected corrupt, got {:?}", other.map(|s| s.name)),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_config_is_rejected_by_the_config_checksum() {
+        let dir = tmp_dir("tamper");
+        let (model, cfg) = small_model();
+        let snap =
+            Snapshot::capture("default", Backend::Native, &cfg, model.as_ref(), None, 0).unwrap();
+        save(&dir, &snap).unwrap();
+        let path = manifest_path(&dir);
+        let text = fs::read_to_string(&path).unwrap();
+        // Change the config without refreshing config_sha256.
+        let tampered = text.replace("\"target_n\": 40", "\"target_n\": 41");
+        assert_ne!(tampered, text, "tamper target not found");
+        fs::write(&path, tampered).unwrap();
+        match load(&dir) {
+            Err(IcrError::ChecksumMismatch { what, .. }) => {
+                assert!(what.contains("config"), "{what}")
+            }
+            other => panic!("expected checksum mismatch, got {:?}", other.map(|s| s.name)),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_manifest_is_rejected_as_corrupt() {
+        let dir = tmp_dir("garbage");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(manifest_path(&dir), b"{not json").unwrap();
+        assert!(matches!(load(&dir), Err(IcrError::ArtifactCorrupt(_))));
+        fs::write(manifest_path(&dir), b"{\"schema_version\": 99}").unwrap();
+        assert!(matches!(load(&dir), Err(IcrError::Unsupported(_))));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn entry_paths_cannot_escape_the_directory() {
+        let dir = tmp_dir("escape");
+        let (model, cfg) = small_model();
+        let snap =
+            Snapshot::capture("default", Backend::Native, &cfg, model.as_ref(), None, 0).unwrap();
+        save(&dir, &snap).unwrap();
+        let path = manifest_path(&dir);
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace("domain.bin", "../domain.bin")).unwrap();
+        match load(&dir) {
+            Err(IcrError::ArtifactCorrupt(m)) => assert!(m.contains("escapes"), "{m}"),
+            other => panic!("expected corrupt, got {:?}", other.map(|s| s.name)),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_model_rebuilds_with_bitwise_sample_parity() {
+        let dir = tmp_dir("rebuild");
+        let (model, cfg) = small_model();
+        let snap =
+            Snapshot::capture("default", Backend::Native, &cfg, model.as_ref(), None, 0).unwrap();
+        save(&dir, &snap).unwrap();
+        let (loaded, back) = load_model(&dir, None, "artifacts").unwrap();
+        assert_eq!(back.descriptor, model.descriptor());
+        assert_eq!(loaded.sample(3, 77).unwrap(), model.sample(3, 77).unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

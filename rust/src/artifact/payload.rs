@@ -1,0 +1,78 @@
+//! Little-endian binary payload codec for artifact entries.
+//!
+//! Payloads are raw fixed-width arrays — `f64` for domain points and
+//! excitations, `u64` for observation indices — with no framing of their
+//! own: lengths and integrity live in `manifest.json` (`len`, `sha256`
+//! per entry), mirroring the AOT manifest+payload split the runtime uses
+//! for HLO artifacts.
+
+/// Encode a slice of `f64` as little-endian bytes (8 per value).
+pub fn encode_f64s(values: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 8);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian `f64` bytes; rejects lengths that are not a
+/// multiple of 8.
+pub fn decode_f64s(bytes: &[u8]) -> Result<Vec<f64>, String> {
+    if bytes.len() % 8 != 0 {
+        return Err(format!("payload length {} is not a multiple of 8", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// Encode a slice of `usize` as little-endian `u64` bytes.
+pub fn encode_u64s(values: &[usize]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 8);
+    for v in values {
+        out.extend_from_slice(&(*v as u64).to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian `u64` bytes into `usize` indices.
+pub fn decode_u64s(bytes: &[u8]) -> Result<Vec<usize>, String> {
+    if bytes.len() % 8 != 0 {
+        return Err(format!("payload length {} is not a multiple of 8", bytes.len()));
+    }
+    bytes
+        .chunks_exact(8)
+        .map(|c| {
+            let v = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+            usize::try_from(v).map_err(|_| format!("index {v} exceeds usize"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_round_trip_is_bitwise() {
+        let vals = [0.0, -0.0, 1.5, f64::MIN_POSITIVE, 1e308, -3.25, f64::INFINITY];
+        let back = decode_f64s(&encode_f64s(&vals)).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn u64_round_trip() {
+        let vals = [0usize, 1, 2, 1 << 40, usize::MAX];
+        assert_eq!(decode_u64s(&encode_u64s(&vals)).unwrap(), vals);
+    }
+
+    #[test]
+    fn truncated_payloads_are_rejected() {
+        assert!(decode_f64s(&[0u8; 7]).is_err());
+        assert!(decode_u64s(&[0u8; 9]).is_err());
+    }
+}

@@ -53,6 +53,7 @@ struct Inner {
     misses: u64,
     inserts: u64,
     evictions: u64,
+    invalidations: u64,
 }
 
 /// Bounded LRU over sample responses; `capacity == 0` disables every
@@ -139,6 +140,27 @@ impl ResponseCache {
         }
     }
 
+    /// Drop every entry keyed on any of `names` (logical and registry
+    /// names of a reloading model), returning the number removed. The
+    /// mutable-op invalidation hook: `reload_model` calls this *before*
+    /// its registry swap lands, so a cached reply can never outlive the
+    /// model version that produced it.
+    pub fn invalidate_models(&self, names: &[&str]) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.map.len();
+        inner.map.retain(|k, _| !names.contains(&k.model.as_str()));
+        let removed = before - inner.map.len();
+        inner.invalidations += removed as u64;
+        removed
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.inner.lock().unwrap().invalidations
+    }
+
     /// The `cluster.cache` stats section.
     pub fn to_json(&self) -> Value {
         let inner = self.inner.lock().unwrap();
@@ -150,6 +172,7 @@ impl ResponseCache {
             ("misses", json::num(inner.misses as f64)),
             ("inserts", json::num(inner.inserts as f64)),
             ("evictions", json::num(inner.evictions as f64)),
+            ("invalidations", json::num(inner.invalidations as f64)),
         ])
     }
 }
@@ -218,5 +241,25 @@ mod tests {
         assert_eq!(v.get("misses").and_then(Value::as_usize), Some(1));
         assert_eq!(v.get("inserts").and_then(Value::as_usize), Some(2));
         assert_eq!(v.get("evictions").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("invalidations").and_then(Value::as_usize), Some(0));
+    }
+
+    #[test]
+    fn invalidation_removes_exactly_the_named_models() {
+        let c = ResponseCache::new(8);
+        c.insert(CacheKey::sample("gp", 1, 1), rows(1.0));
+        c.insert(CacheKey::sample("gp", 2, 1), rows(2.0));
+        c.insert(CacheKey::sample("gp@0", 1, 1), rows(3.0));
+        c.insert(CacheKey::sample("other", 1, 1), rows(4.0));
+        assert_eq!(c.invalidate_models(&["gp", "gp@0"]), 3);
+        assert_eq!(c.invalidations(), 3);
+        assert!(c.get(&CacheKey::sample("gp", 1, 1)).is_none());
+        assert!(c.get(&CacheKey::sample("gp", 2, 1)).is_none());
+        assert!(c.get(&CacheKey::sample("gp@0", 1, 1)).is_none());
+        assert!(c.get(&CacheKey::sample("other", 1, 1)).is_some());
+        // Repeat invalidation is a no-op.
+        assert_eq!(c.invalidate_models(&["gp"]), 0);
+        // Disabled caches report zero work.
+        assert_eq!(ResponseCache::new(0).invalidate_models(&["gp"]), 0);
     }
 }

@@ -35,7 +35,8 @@ pub use remote::RemoteModel;
 /// Cluster-layer capabilities advertised by `icr --version` and the
 /// `stats` document, mirroring how §8 advertises transports and routing
 /// policies.
-pub const CAPABILITIES: [&str; 3] = ["remote_backend", "response_cache", "health_checks"];
+pub const CAPABILITIES: [&str; 5] =
+    ["remote_backend", "response_cache", "health_checks", "artifacts", "hot_reload"];
 
 #[cfg(test)]
 mod tests {
@@ -43,6 +44,9 @@ mod tests {
 
     #[test]
     fn capabilities_are_advertised_in_order() {
-        assert_eq!(CAPABILITIES, ["remote_backend", "response_cache", "health_checks"]);
+        assert_eq!(
+            CAPABILITIES,
+            ["remote_backend", "response_cache", "health_checks", "artifacts", "hot_reload"]
+        );
     }
 }

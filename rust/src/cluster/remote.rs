@@ -1,11 +1,19 @@
 //! [`RemoteModel`]: a [`GpModel`] proxying every operation to a backend
 //! coordinator over the pooled [`RemoteClient`].
 //!
-//! Construction does one `describe` round trip to learn the remote
-//! default model's identity (descriptor, domain points, observation
-//! pattern), after which the front door hosts the proxy as an ordinary
-//! registry entry — the session scheduler and replica router treat local
-//! and remote members uniformly (`DESIGN.md` §9).
+//! [`RemoteModel::connect`] does one `describe` round trip to learn the
+//! remote default model's identity (descriptor, domain points,
+//! observation pattern), after which the front door hosts the proxy as
+//! an ordinary registry entry — the session scheduler and replica
+//! router treat local and remote members uniformly (`DESIGN.md` §9).
+//!
+//! [`RemoteModel::deferred`] skips the fetch so a coordinator can boot
+//! while a declared shard is still down: the member starts Ejected and
+//! the health monitor calls [`GpModel::revalidate`] on recovery, which
+//! fetches `describe` and — when the spec declared a config — rejects a
+//! shard whose config checksum mismatches the declared one
+//! ([`crate::artifact::config_checksum`]), keeping a wrong-version
+//! backend out of the routing pool.
 //!
 //! **Determinism.** The JSON codec prints `f64`s in shortest-round-trip
 //! form and parses them back exactly, so excitations shipped to the
@@ -24,6 +32,7 @@
 //! own batcher re-coalesces them with whatever else it is serving) and
 //! reassemble the output panel in lane order.
 
+use std::sync::RwLock;
 use std::time::Instant;
 
 use crate::error::IcrError;
@@ -36,8 +45,14 @@ use crate::coordinator::request::{Request, Response};
 /// A GP model served by a remote coordinator.
 pub struct RemoteModel {
     client: RemoteClient,
-    /// Remote identity, fetched once at construction.
-    info: ModelInfo,
+    /// Remote identity: fetched at construction by [`RemoteModel::connect`],
+    /// deferred until first use / health recovery by
+    /// [`RemoteModel::deferred`]. Refreshed on every [`GpModel::revalidate`]
+    /// so a redeployed backend's new identity is picked up on restore.
+    info: RwLock<Option<ModelInfo>>,
+    /// Config checksum the declared spec expects the shard to serve;
+    /// identity fetches reject a reporting shard that mismatches.
+    expected_config_sha256: Option<String>,
 }
 
 impl RemoteModel {
@@ -45,14 +60,67 @@ impl RemoteModel {
     /// model's identity with one `describe` round trip. Fails typed if
     /// the backend is unreachable or predates the `describe` op.
     pub fn connect(addr: &str) -> Result<RemoteModel, IcrError> {
+        let model = RemoteModel::deferred(addr, None)?;
+        model.refresh_identity()?;
+        Ok(model)
+    }
+
+    /// Build the proxy without contacting the backend: identity is
+    /// fetched lazily on first use or by the health monitor's
+    /// [`GpModel::revalidate`] on recovery. `expected_config_sha256`
+    /// (from [`crate::artifact::config_checksum`] of the declared spec)
+    /// makes every identity fetch reject a shard reporting a different
+    /// config checksum.
+    pub fn deferred(
+        addr: &str,
+        expected_config_sha256: Option<String>,
+    ) -> Result<RemoteModel, IcrError> {
         let client = RemoteClient::new(addr, DEFAULT_POOL)?;
-        let info = client.describe(None)?;
-        Ok(RemoteModel { client, info })
+        Ok(RemoteModel { client, info: RwLock::new(None), expected_config_sha256 })
     }
 
     /// The underlying pooled client (endpoint, counters, probes).
     pub fn client(&self) -> &RemoteClient {
         &self.client
+    }
+
+    /// Whether the remote identity has been fetched yet.
+    pub fn has_identity(&self) -> bool {
+        self.info.read().unwrap().is_some()
+    }
+
+    /// Fetch `describe` from the backend, validate it against the
+    /// declared config checksum (when one was declared and the shard
+    /// reports one), and store it as the current identity.
+    pub fn refresh_identity(&self) -> Result<(), IcrError> {
+        let info = self.client.describe(None)?;
+        if let (Some(expected), Some(got)) =
+            (&self.expected_config_sha256, &info.config_sha256)
+        {
+            if expected != got {
+                return Err(IcrError::ChecksumMismatch {
+                    what: format!("remote shard {} config", self.client.endpoint()),
+                    expected: expected.clone(),
+                    got: got.clone(),
+                });
+            }
+        }
+        *self.info.write().unwrap() = Some(info);
+        Ok(())
+    }
+
+    /// Current identity, fetching it on demand if still deferred.
+    fn require_info(&self) -> Result<ModelInfo, IcrError> {
+        if let Some(info) = self.info.read().unwrap().as_ref() {
+            return Ok(info.clone());
+        }
+        self.refresh_identity()?;
+        Ok(self.info.read().unwrap().clone().expect("identity just stored"))
+    }
+
+    /// Identity snapshot without any wire traffic (None while deferred).
+    fn cached_info(&self) -> Option<ModelInfo> {
+        self.info.read().unwrap().clone()
     }
 
     fn expect_field(&self, resp: Response) -> Result<Vec<f64>, IcrError> {
@@ -68,31 +136,63 @@ impl RemoteModel {
 
 impl GpModel for RemoteModel {
     fn descriptor(&self) -> ModelDescriptor {
-        let d = &self.info.descriptor;
-        ModelDescriptor {
-            name: format!("remote({} -> {})", self.client.endpoint(), d.name),
-            backend: "remote",
-            kernel: d.kernel.clone(),
-            chart: d.chart.clone(),
-            n: d.n,
-            dof: d.dof,
+        // Geometry accessors are infallible by trait contract, so a
+        // still-deferred proxy reports a placeholder identity (n = dof =
+        // 0) rather than blocking on the wire; the coordinator keeps
+        // such members Ejected until `revalidate` succeeds, so nothing
+        // routes to a placeholder.
+        match self.cached_info() {
+            Some(info) => {
+                let d = &info.descriptor;
+                ModelDescriptor {
+                    name: format!("remote({} -> {})", self.client.endpoint(), d.name),
+                    backend: "remote",
+                    kernel: d.kernel.clone(),
+                    chart: d.chart.clone(),
+                    n: d.n,
+                    dof: d.dof,
+                }
+            }
+            None => ModelDescriptor {
+                name: format!("remote({} -> ?)", self.client.endpoint()),
+                backend: "remote",
+                kernel: String::new(),
+                chart: String::new(),
+                n: 0,
+                dof: 0,
+            },
         }
     }
 
     fn n_points(&self) -> usize {
-        self.info.descriptor.n
+        self.cached_info().map_or(0, |i| i.descriptor.n)
     }
 
     fn total_dof(&self) -> usize {
-        self.info.descriptor.dof
+        self.cached_info().map_or(0, |i| i.descriptor.dof)
     }
 
     fn domain_points(&self) -> Vec<f64> {
-        self.info.domain.clone()
+        self.cached_info().map_or_else(Vec::new, |i| i.domain)
     }
 
     fn obs_indices(&self) -> Vec<usize> {
-        self.info.obs.clone()
+        self.cached_info().map_or_else(Vec::new, |i| i.obs)
+    }
+
+    fn info(&self) -> ModelInfo {
+        // Pass the backend's identity through verbatim (including its
+        // config checksum) instead of re-deriving it from the renamed
+        // descriptor; falls back to the placeholder while deferred.
+        match self.cached_info() {
+            Some(info) => info,
+            None => ModelInfo {
+                descriptor: self.descriptor(),
+                domain: Vec::new(),
+                obs: Vec::new(),
+                config_sha256: None,
+            },
+        }
     }
 
     fn endpoint(&self) -> String {
@@ -103,12 +203,17 @@ impl GpModel for RemoteModel {
         self.client.probe()
     }
 
+    fn revalidate(&self) -> Result<(), IcrError> {
+        self.refresh_identity()
+    }
+
     fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
         crate::model::batch_via_panel(self, xi)
     }
 
     fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
-        let dof = self.total_dof();
+        let info = self.require_info()?;
+        let dof = info.descriptor.dof;
         if panel.len() != batch * dof {
             return Err(IcrError::ShapeMismatch {
                 what: "panel",
@@ -126,7 +231,7 @@ impl GpModel for RemoteModel {
                 )
             })
             .collect();
-        let n = self.n_points();
+        let n = info.descriptor.n;
         let mut out = Vec::with_capacity(batch * n);
         let mut first_err: Option<IcrError> = None;
         for pending in &lanes {

@@ -145,6 +145,15 @@ impl ModelConfig {
         parse_chart(&self.chart_spec).map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Decode a config from its canonical JSON object (the inverse of
+    /// [`Self::to_json`]); absent keys keep their defaults. Artifact
+    /// manifests round-trip model configs through this pair.
+    pub fn from_json(v: &Value) -> ModelConfig {
+        let mut cfg = ModelConfig::default();
+        cfg.apply_json(v);
+        cfg
+    }
+
     fn apply_json(&mut self, v: &Value) {
         if let Some(s) = v.get("kernel").and_then(Value::as_str) {
             self.kernel_spec = s.to_string();

@@ -145,6 +145,19 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
         }
         "stats" => Request::Stats,
         "describe" => Request::Describe,
+        "reload_model" => {
+            if version < 2 {
+                return Err(IcrError::MalformedRequest(
+                    "reload_model requires a v2 frame ({\"v\": 2, ...})".into(),
+                ));
+            }
+            let path = v
+                .get("path")
+                .and_then(Value::as_str)
+                .ok_or_else(|| IcrError::MalformedRequest("reload_model needs \"path\"".into()))?
+                .to_string();
+            Request::ReloadModel { path }
+        }
         other => return Err(IcrError::UnknownOp(other.to_string())),
     };
     Ok(RequestFrame { version, model, client_id, request })
@@ -205,6 +218,9 @@ pub fn encode_request(frame: &RequestFrame) -> Value {
             fields.push(("restarts", json::num(*restarts as f64)));
             fields.push(("seed", json::num(*seed as f64)));
         }
+        Request::ReloadModel { path } => {
+            fields.push(("path", json::s(path)));
+        }
         Request::Stats | Request::Describe => {}
     }
     json::obj(fields)
@@ -253,6 +269,13 @@ fn result_payload(resp: &Response) -> Value {
         ]),
         Response::Stats(v) => json::obj(vec![("stats", v.clone())]),
         Response::Describe(info) => json::obj(vec![("describe", info.to_json())]),
+        Response::Reloaded { model, config_sha256 } => json::obj(vec![(
+            "reloaded",
+            json::obj(vec![
+                ("model", json::s(model)),
+                ("config_sha256", json::s(config_sha256)),
+            ]),
+        )]),
     }
 }
 
@@ -371,6 +394,15 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
         })
     } else if let Some(info) = payload.get("describe") {
         Response::Describe(ModelInfo::from_json(info)?)
+    } else if let Some(r) = payload.get("reloaded") {
+        Response::Reloaded {
+            model: r.get("model").and_then(Value::as_str).unwrap_or("").to_string(),
+            config_sha256: r
+                .get("config_sha256")
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string(),
+        }
     } else if let Some(stats) = payload.get("stats") {
         // v1 carries stats as a serialized-JSON string; v2 as an object.
         match stats {
@@ -459,6 +491,11 @@ mod tests {
             ),
             RequestFrame::v2(Some("ref"), Some(2), Request::Stats),
             RequestFrame::v2(Some("gp"), Some(8), Request::Describe),
+            RequestFrame::v2(
+                Some("gp@0"),
+                Some(9),
+                Request::ReloadModel { path: "/var/icr/model-v2".into() },
+            ),
         ];
         for frame in &frames {
             let line = encode_request(frame).to_json();
@@ -500,6 +537,7 @@ mod tests {
             },
             domain: vec![0.0, 0.5, 1.0],
             obs: vec![0, 2],
+            config_sha256: Some("00".repeat(32)),
         };
         for version in [1u64, 2] {
             let encoded =
@@ -511,6 +549,28 @@ mod tests {
                 other => panic!("v{version}: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn reload_model_is_v2_only_and_needs_a_path() {
+        let err = parse_request(r#"{"op": "reload_model", "path": "/tmp/a"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let err = parse_request(r#"{"v": 2, "op": "reload_model"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let f = parse_request(r#"{"v": 2, "op": "reload_model", "path": "/tmp/a"}"#).unwrap();
+        assert_eq!(f.request, Request::ReloadModel { path: "/tmp/a".into() });
+    }
+
+    #[test]
+    fn reloaded_response_roundtrips_v2() {
+        let resp = Response::Reloaded {
+            model: "gp@0".into(),
+            config_sha256: "ff".repeat(32),
+        };
+        let encoded = encode_response(2, 11, Some("gp@0"), &Ok(resp.clone()));
+        let frame = decode_response(&encoded).unwrap();
+        assert_eq!(frame.id, 11);
+        assert_eq!(frame.result.unwrap(), resp);
     }
 
     #[test]

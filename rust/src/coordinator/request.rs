@@ -41,6 +41,12 @@ pub enum Request {
     /// + observation pattern) — what a cluster front door fetches once
     /// to host this model as a remote registry member.
     Describe,
+    /// Hot-reload the addressed registry entry from a model artifact
+    /// directory on the server's filesystem (`DESIGN.md` §10): the
+    /// artifact is verified and rebuilt, matching response-cache entries
+    /// are invalidated, and the registry slot is swapped under its lock
+    /// — in-flight requests finish on the old model. v2-only.
+    ReloadModel { path: String },
 }
 
 impl Request {
@@ -68,6 +74,7 @@ impl Request {
             Request::InferMulti { .. } => "infer_multi",
             Request::Stats => "stats",
             Request::Describe => "describe",
+            Request::ReloadModel { .. } => "reload_model",
         }
     }
 }
@@ -86,6 +93,9 @@ pub enum Response {
     Stats(Value),
     /// Model identity for `describe` requests.
     Describe(ModelInfo),
+    /// Acknowledgement of a completed `reload_model` swap: the entry
+    /// that was swapped and the new model version's config checksum.
+    Reloaded { model: String, config_sha256: String },
 }
 
 /// A queued request with its routing target and reply channel.
@@ -112,6 +122,7 @@ mod tests {
         assert!(Request::ApplySqrt { xi: vec![] }.batchable());
         assert!(!Request::Stats.batchable());
         assert!(!Request::Describe.batchable());
+        assert!(!Request::ReloadModel { path: "a".into() }.batchable());
         assert!(
             !Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.batchable()
         );
@@ -131,6 +142,7 @@ mod tests {
         assert_eq!(Request::Sample { count: 5, seed: 0 }.apply_count(), 5);
         assert_eq!(Request::ApplySqrt { xi: vec![1.0] }.apply_count(), 1);
         assert_eq!(Request::Stats.apply_count(), 0);
+        assert_eq!(Request::ReloadModel { path: "a".into() }.apply_count(), 0);
     }
 
     #[test]
@@ -155,5 +167,6 @@ mod tests {
         );
         assert_eq!(Request::Stats.op(), "stats");
         assert_eq!(Request::Describe.op(), "describe");
+        assert_eq!(Request::ReloadModel { path: "a".into() }.op(), "reload_model");
     }
 }

@@ -15,13 +15,13 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::cluster::{CacheKey, ResponseCache, CAPABILITIES};
-use crate::config::{ServerConfig, DEFAULT_MODEL_NAME, MODEL_FAMILIES};
+use crate::config::{Backend, ModelConfig, ServerConfig, DEFAULT_MODEL_NAME, MODEL_FAMILIES};
 use crate::error::IcrError;
 use crate::json::{self, Value};
 use crate::metrics::Registry;
@@ -33,13 +33,47 @@ use crate::rng::Rng;
 use super::protocol::SUPPORTED_PROTOCOLS;
 use super::request::{Envelope, Request, RequestId, Response};
 
-/// One hosted model: the engine plus its private metrics.
+/// One hosted model: the (hot-swappable) engine plus its private
+/// metrics and persistence state (`DESIGN.md` §10).
 struct ModelEntry {
-    model: Arc<dyn GpModel>,
+    /// The serving engine. `reload_model` swaps the `Arc` under this
+    /// lock; in-flight requests hold their own clone and finish on the
+    /// old model.
+    model: RwLock<Arc<dyn GpModel>>,
     metrics: Registry,
     /// Whether the model executes out-of-process (`endpoint() != "local"`),
-    /// cached at registration — the batcher consults this per batch.
-    remote: bool,
+    /// refreshed on reload — the batcher consults this per batch.
+    remote: AtomicBool,
+    /// Posterior ξ panel restored from an artifact: chain 0 of
+    /// `infer`/`infer_multi` warm-starts here instead of ξ = 0.
+    posterior: RwLock<Option<Arc<Vec<f64>>>>,
+    /// Config this entry was built from (`None` for engines injected via
+    /// `start_with_models`); `describe` derives its config checksum and
+    /// `snapshot` its manifest from it.
+    config: RwLock<Option<ModelConfig>>,
+}
+
+impl ModelEntry {
+    fn new(model: Arc<dyn GpModel>, config: Option<ModelConfig>) -> ModelEntry {
+        let remote = AtomicBool::new(model.endpoint() != "local");
+        ModelEntry {
+            model: RwLock::new(model),
+            metrics: Registry::new(),
+            remote,
+            posterior: RwLock::new(None),
+            config: RwLock::new(config),
+        }
+    }
+
+    /// The current engine, as an owned handle: a concurrent reload
+    /// never invalidates it mid-request.
+    fn model(&self) -> Arc<dyn GpModel> {
+        self.model.read().unwrap().clone()
+    }
+
+    fn is_remote(&self) -> bool {
+        self.remote.load(Ordering::Relaxed)
+    }
 }
 
 struct Shared {
@@ -61,6 +95,10 @@ struct Shared {
     /// Bound on `queue` (0 = unbounded); a full queue rejects submits
     /// with a typed `overloaded` error instead of queueing.
     queue_limit: usize,
+    /// The registry-shared panel executor, kept for `reload_model`
+    /// rebuilds (`None` for injected registries — reloads then build a
+    /// fresh pool of `cfg.apply_threads` lanes).
+    exec: Option<Exec>,
     /// Description of the registry-shared panel executor ("pool(4)").
     exec_desc: String,
     cfg: ServerConfig,
@@ -110,22 +148,40 @@ impl Coordinator {
     /// for the whole registry instead of per-request thread spawns.
     pub fn start(cfg: ServerConfig) -> Result<Coordinator> {
         let exec = Exec::pooled(cfg.apply_threads);
-        let mut models: Vec<(String, Arc<dyn GpModel>)> = Vec::new();
+        let mut models: Vec<(String, Arc<dyn GpModel>, Option<ModelConfig>)> = Vec::new();
         // Plain registry entries first, then every replica-set member —
         // N identical entries per set, all sharing the one pool (each
         // with its own workspace pool, so replicas don't contend).
         let mut specs = cfg.model_specs();
         specs.extend(cfg.replica_model_specs());
         for spec in specs {
-            let model = ModelBuilder::from_spec(&spec)
-                .artifact_dir(&cfg.artifact_dir)
-                .exec(exec.clone())
-                .build()
-                .map_err(|e| anyhow::anyhow!("building model {:?}: {e}", spec.name))?;
-            models.push((spec.name, model));
+            let model: Arc<dyn GpModel> = if spec.backend == Backend::Remote {
+                // Deferred identity (`DESIGN.md` §10): a declared-but-
+                // down shard must not fail boot. Its identity is fetched
+                // right after start below; on failure the member starts
+                // Ejected and the health monitor restores it — with a
+                // fresh checksum-validated `describe` — on recovery.
+                let addr = spec.remote.as_deref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "remote model {:?} needs an address (remote:tcp:HOST:PORT)",
+                        spec.name
+                    )
+                })?;
+                let expected = crate::artifact::config_checksum(&spec.model);
+                Arc::new(crate::cluster::RemoteModel::deferred(addr, Some(expected))?)
+            } else {
+                ModelBuilder::from_spec(&spec)
+                    .artifact_dir(&cfg.artifact_dir)
+                    .exec(exec.clone())
+                    .build()
+                    .map_err(|e| anyhow::anyhow!("building model {:?}: {e}", spec.name))?
+            };
+            models.push((spec.name, model, Some(spec.model)));
         }
         let exec_desc = exec.describe();
-        Self::start_inner(cfg, models, exec_desc)
+        let coord = Self::start_inner(cfg, models, exec_desc, Some(exec))?;
+        coord.fetch_remote_identities();
+        Ok(coord)
     }
 
     /// Start with a single explicit engine under the default name (tests
@@ -141,21 +197,21 @@ impl Coordinator {
         cfg: ServerConfig,
         models: Vec<(String, Arc<dyn GpModel>)>,
     ) -> Result<Coordinator> {
-        Self::start_inner(cfg, models, "external".to_string())
+        let models = models.into_iter().map(|(name, model)| (name, model, None)).collect();
+        Self::start_inner(cfg, models, "external".to_string(), None)
     }
 
     fn start_inner(
         cfg: ServerConfig,
-        models: Vec<(String, Arc<dyn GpModel>)>,
+        models: Vec<(String, Arc<dyn GpModel>, Option<ModelConfig>)>,
         exec_desc: String,
+        exec: Option<Exec>,
     ) -> Result<Coordinator> {
         anyhow::ensure!(!models.is_empty(), "coordinator needs at least one model");
         let default_model = models[0].0.clone();
         let mut registry = BTreeMap::new();
-        for (name, model) in models {
-            let remote = model.endpoint() != "local";
-            let prev = registry
-                .insert(name.clone(), ModelEntry { model, metrics: Registry::new(), remote });
+        for (name, model, config) in models {
+            let prev = registry.insert(name.clone(), ModelEntry::new(model, config));
             anyhow::ensure!(prev.is_none(), "duplicate model name {name:?}");
         }
         let mut router = Router::new(cfg.route_policy);
@@ -186,6 +242,7 @@ impl Coordinator {
             router,
             cache: ResponseCache::new(cfg.cache_entries),
             queue_limit: cfg.queue_limit,
+            exec,
             exec_desc,
             cfg: cfg.clone(),
             next_id: AtomicU64::new(1),
@@ -217,14 +274,34 @@ impl Coordinator {
         Ok(Coordinator { shared, workers, health })
     }
 
-    /// The default model (v1 clients' implicit target).
-    pub fn engine(&self) -> &Arc<dyn GpModel> {
-        &self.shared.models[&self.shared.default_model].model
+    /// Fetch the identity of every deferred remote entry. A shard that
+    /// is down — or that reports a mismatched config checksum — does
+    /// not fail boot: its replica-set member starts Ejected (the health
+    /// monitor restores it once `revalidate` passes) and the failure is
+    /// counted under `identity_rejections`.
+    fn fetch_remote_identities(&self) {
+        for (name, entry) in &self.shared.models {
+            if !entry.is_remote() {
+                continue;
+            }
+            if entry.model().revalidate().is_err() {
+                self.shared.metrics.counter("identity_rejections").inc();
+                if self.shared.router.set_member_state(name, MemberState::Ejected) {
+                    self.shared.metrics.counter("health_ejections").inc();
+                }
+            }
+        }
     }
 
-    /// A named model from the registry.
-    pub fn model(&self, name: &str) -> Option<&Arc<dyn GpModel>> {
-        self.shared.models.get(name).map(|e| &e.model)
+    /// The default model (v1 clients' implicit target). Owned handle:
+    /// a later `reload_model` swap does not invalidate it.
+    pub fn engine(&self) -> Arc<dyn GpModel> {
+        self.shared.models[&self.shared.default_model].model()
+    }
+
+    /// A named model from the registry (owned handle, as [`Self::engine`]).
+    pub fn model(&self, name: &str) -> Option<Arc<dyn GpModel>> {
+        self.shared.models.get(name).map(|e| e.model())
     }
 
     /// Registry names, default model first.
@@ -281,6 +358,75 @@ impl Coordinator {
     /// Per-model metrics registry.
     pub fn model_metrics(&self, name: &str) -> Option<&Registry> {
         self.shared.models.get(name).map(|e| &e.metrics)
+    }
+
+    /// Capture a save-ready artifact snapshot of one hosted model
+    /// (`None` = default), including any restored or installed
+    /// posterior. Fails typed for remote proxies (their state lives
+    /// with the backend) and for injected engines without a config.
+    pub fn snapshot(&self, name: Option<&str>) -> Result<crate::artifact::Snapshot, IcrError> {
+        let name = name.unwrap_or(&self.shared.default_model);
+        let entry = self.shared.entry(name)?;
+        let config = entry.config.read().unwrap().clone().ok_or_else(|| {
+            IcrError::Unsupported(format!(
+                "model {name:?} was injected without a config; snapshots need one"
+            ))
+        })?;
+        let model = entry.model();
+        let backend = Backend::parse(model.descriptor().backend)
+            .map_err(|e| IcrError::Unsupported(format!("model {name:?}: {e}")))?;
+        let posterior = entry.posterior.read().unwrap().as_ref().map(|p| p.as_ref().clone());
+        crate::artifact::Snapshot::capture(
+            name,
+            backend,
+            &config,
+            model.as_ref(),
+            posterior,
+            self.shared.cfg.apply_threads,
+        )
+    }
+
+    /// Save one hosted model (`None` = default) as a versioned artifact
+    /// directory — what `icr save` calls. Returns the saved snapshot.
+    pub fn save_artifact(
+        &self,
+        name: Option<&str>,
+        dir: &std::path::Path,
+    ) -> Result<crate::artifact::Snapshot, IcrError> {
+        let snap = self.snapshot(name)?;
+        crate::artifact::save(dir, &snap)?;
+        self.shared.metrics.counter("artifacts_saved").inc();
+        Ok(snap)
+    }
+
+    /// Install a posterior ξ panel on a hosted entry (`None` = default)
+    /// — what `icr load` does after restoring an artifact. Chain 0 of
+    /// subsequent `infer`/`infer_multi` requests warm-starts from it.
+    pub fn install_posterior(&self, name: Option<&str>, xi: Vec<f64>) -> Result<(), IcrError> {
+        let name = name.unwrap_or(&self.shared.default_model);
+        let entry = self.shared.entry(name)?;
+        let dof = entry.model().total_dof();
+        if xi.len() != dof {
+            return Err(IcrError::ShapeMismatch {
+                what: "posterior",
+                expected: dof,
+                got: xi.len(),
+            });
+        }
+        *entry.posterior.write().unwrap() = Some(Arc::new(xi));
+        Ok(())
+    }
+
+    /// Hot-reload one hosted entry (`None` = default) from an artifact
+    /// directory — the in-process form of the `reload_model` wire op.
+    pub fn reload_model_from(
+        &self,
+        name: Option<&str>,
+        dir: &std::path::Path,
+    ) -> Result<Response, IcrError> {
+        let name = name.unwrap_or(&self.shared.default_model);
+        let entry = self.shared.entry(name)?;
+        reload_entry(&self.shared, entry, name, dir)
     }
 
     /// Enqueue a request for the default model.
@@ -408,11 +554,21 @@ fn health_loop(shared: &Shared) {
             }
             let Some(entry) = shared.models.get(&name) else { continue };
             shared.metrics.counter("health_probes").inc();
-            match entry.model.health_probe() {
+            let model = entry.model();
+            match model.health_probe() {
                 Ok(()) => {
                     if shared.router.member_state(&name) == Some(MemberState::Ejected) {
-                        shared.router.set_member_state(&name, MemberState::Healthy);
-                        shared.metrics.counter("health_restorations").inc();
+                        // Identity gate (`DESIGN.md` §10): a recovered
+                        // shard must re-serve a matching config checksum
+                        // before rejoining the routing pool — trivially
+                        // true for local members, a fresh validated
+                        // `describe` for remote ones.
+                        if model.revalidate().is_ok() {
+                            shared.router.set_member_state(&name, MemberState::Healthy);
+                            shared.metrics.counter("health_restorations").inc();
+                        } else {
+                            shared.metrics.counter("identity_rejections").inc();
+                        }
                     }
                 }
                 Err(_) => {
@@ -443,7 +599,7 @@ fn stats_json(shared: &Shared) -> Value {
     for (name, entry) in &shared.models {
         let mut section = entry.metrics.to_json();
         if let Value::Object(map) = &mut section {
-            map.insert("descriptor".to_string(), entry.model.descriptor().to_json());
+            map.insert("descriptor".to_string(), entry.model().descriptor().to_json());
         }
         models.insert(name.clone(), section);
     }
@@ -497,7 +653,7 @@ fn cluster_json(shared: &Shared) -> Value {
             .map(|(i, m)| {
                 let entry = shared.models.get(m);
                 let endpoint =
-                    entry.map(|e| e.model.endpoint()).unwrap_or_else(|| "unknown".into());
+                    entry.map(|e| e.model().endpoint()).unwrap_or_else(|| "unknown".into());
                 let (p50, p99) = entry
                     .map(|e| {
                         let h = e.metrics.histogram("request_latency");
@@ -629,7 +785,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     // Fast path: a single non-batchable request.
     if batch.len() == 1 && !batch[0].request.batchable() {
         let env = batch.into_iter().next().unwrap();
-        let result = serve_single(shared, entry, &env.request);
+        let result = serve_single(shared, entry, &env.model, &env.request);
         complete(shared, entry, result.is_err());
         shared.metrics.histogram("request_latency").observe(t0);
         entry.metrics.histogram("request_latency").observe(t0);
@@ -643,13 +799,16 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     // bytes, by the §4 determinism contract. Each envelope proxies as
     // its own compact wire op (the backend's batcher re-coalesces them
     // with whatever else it is serving).
-    if entry.remote {
-        let dof = entry.model.total_dof();
+    // One owned engine handle for the whole batch: a concurrent reload
+    // swaps the registry slot without invalidating it.
+    let model = entry.model();
+    if entry.is_remote() {
+        let dof = model.total_dof();
         for env in batch {
             let t_req = Instant::now();
             let result = match &env.request {
                 Request::Sample { count, seed } => {
-                    entry.model.sample(*count, *seed).map(|rows| {
+                    model.sample(*count, *seed).map(|rows| {
                         if shared.cache.enabled() {
                             shared.cache.insert(
                                 CacheKey::sample(&env.logical, *seed, *count),
@@ -667,8 +826,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                             got: xi.len(),
                         })
                     } else {
-                        entry
-                            .model
+                        model
                             .apply_sqrt_batch(std::slice::from_ref(xi))
                             .map(|mut rows| Response::Field(rows.remove(0)))
                     }
@@ -695,7 +853,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     // instead of a serial loop over lanes (`DESIGN.md` §6). Envelopes with
     // malformed excitations are answered individually up front and never
     // poison the rest of the batch.
-    let dof = entry.model.total_dof();
+    let dof = model.total_dof();
     let mut panel: Vec<f64> = Vec::new();
     // Per-envelope (start lane, lane count), or None if rejected early.
     let mut spans: Vec<Option<(usize, usize)>> = Vec::with_capacity(batch.len());
@@ -726,14 +884,14 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         }
     }
 
-    let outputs = entry.model.apply_sqrt_panel(&panel, applies);
+    let outputs = model.apply_sqrt_panel(&panel, applies);
     shared.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("batches_executed").inc();
     shared.metrics.histogram("batch_latency").observe(t0);
     entry.metrics.histogram("batch_latency").observe(t0);
 
-    let n = entry.model.n_points();
+    let n = model.n_points();
     match outputs {
         Ok(fields) => {
             for (env, span) in batch.into_iter().zip(spans) {
@@ -802,27 +960,116 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
 fn serve_single(
     shared: &Shared,
     entry: &ModelEntry,
+    name: &str,
     request: &Request,
 ) -> Result<Response, IcrError> {
     match request {
         Request::Stats => Ok(Response::Stats(stats_json(shared))),
-        Request::Describe => Ok(Response::Describe(entry.model.info())),
+        Request::Describe => {
+            // Remote proxies pass the backend's checksum through; local
+            // entries derive theirs from the config they were built
+            // from, so a front door can validate this shard's identity
+            // against its declared spec (`DESIGN.md` §10).
+            let mut info = entry.model().info();
+            if info.config_sha256.is_none() {
+                if let Some(cfg) = entry.config.read().unwrap().as_ref() {
+                    info.config_sha256 = Some(crate::artifact::config_checksum(cfg));
+                }
+            }
+            Ok(Response::Describe(info))
+        }
         Request::Infer { y_obs, sigma_n, steps, lr } => {
-            let (field, trace) = entry.model.infer(y_obs, *sigma_n, *steps, *lr)?;
+            let model = entry.model();
+            let warm = entry.posterior.read().unwrap().clone();
+            let (field, trace) = match warm {
+                // Warm start (`DESIGN.md` §10): one chain seeded at the
+                // restored posterior instead of ξ = 0. With no warm
+                // state the classic path serves byte-identical output.
+                Some(xi0) => {
+                    let (mi, _) =
+                        model.infer_multi_from(Some(&xi0), y_obs, *sigma_n, *steps, *lr, 1, 0)?;
+                    let field = mi.fields.into_iter().next().expect("one chain");
+                    let trace = mi.traces.into_iter().next().expect("one chain");
+                    (field, trace)
+                }
+                None => model.infer(y_obs, *sigma_n, *steps, *lr)?,
+            };
             shared.metrics.counter("inferences_completed").inc();
             entry.metrics.counter("inferences_completed").inc();
             Ok(Response::Inference { field, trace })
         }
         Request::InferMulti { y_obs, sigma_n, steps, lr, restarts, seed } => {
-            let mi = entry.model.infer_multi(y_obs, *sigma_n, *steps, *lr, *restarts, *seed)?;
+            let model = entry.model();
+            let warm = entry.posterior.read().unwrap().clone();
+            let mi = match warm {
+                Some(xi0) => {
+                    model
+                        .infer_multi_from(
+                            Some(&xi0),
+                            y_obs,
+                            *sigma_n,
+                            *steps,
+                            *lr,
+                            *restarts,
+                            *seed,
+                        )?
+                        .0
+                }
+                None => model.infer_multi(y_obs, *sigma_n, *steps, *lr, *restarts, *seed)?,
+            };
             shared.metrics.counter("inferences_completed").inc();
             entry.metrics.counter("inferences_completed").inc();
             shared.metrics.counter("inference_chains").add(*restarts as u64);
             entry.metrics.counter("inference_chains").add(*restarts as u64);
             Ok(Response::MultiInference(mi))
         }
+        Request::ReloadModel { path } => {
+            reload_entry(shared, entry, name, std::path::Path::new(path))
+        }
         _ => unreachable!("batchable request routed to serve_single"),
     }
+}
+
+/// Verify–rebuild–swap of one registry entry from an artifact directory
+/// (`DESIGN.md` §10). The artifact is loaded and byte-verified outside
+/// any lock; matching response-cache entries are invalidated before the
+/// swap lands (and once more after it, catching a stale insert racing
+/// the swap); the registry slot is then swapped under its lock, so
+/// in-flight requests holding the old `Arc` finish on the old model.
+fn reload_entry(
+    shared: &Shared,
+    entry: &ModelEntry,
+    name: &str,
+    dir: &std::path::Path,
+) -> Result<Response, IcrError> {
+    let (model, snap) =
+        crate::artifact::load_model(dir, shared.exec.clone(), &shared.cfg.artifact_dir)?;
+    let config_sha256 = snap.config_sha256();
+    // Cache keys are logical (pre-routing) names: the entry itself plus
+    // every replica set hosting it as a member.
+    let mut names: Vec<String> = vec![name.to_string()];
+    for logical in shared.router.logical_names() {
+        let hosts = shared
+            .router
+            .set(&logical)
+            .map(|s| s.members().iter().any(|m| m.as_str() == name))
+            .unwrap_or(false);
+        if hosts {
+            names.push(logical);
+        }
+    }
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    shared.cache.invalidate_models(&name_refs);
+    *entry.posterior.write().unwrap() = snap.posterior.clone().map(Arc::new);
+    *entry.config.write().unwrap() = Some(snap.config.clone());
+    entry.remote.store(model.endpoint() != "local", Ordering::SeqCst);
+    *entry.model.write().unwrap() = model;
+    // A reply computed by the old model may have been inserted between
+    // the invalidation above and the swap; purge it too.
+    shared.cache.invalidate_models(&name_refs);
+    shared.metrics.counter("model_reloads").inc();
+    entry.metrics.counter("model_reloads").inc();
+    Ok(Response::Reloaded { model: name.to_string(), config_sha256 })
 }
 
 #[cfg(test)]

@@ -31,6 +31,13 @@ pub enum IcrError {
     Overloaded { in_use: usize, limit: usize },
     /// The backing engine failed executing the request.
     Backend(String),
+    /// A model artifact on disk is structurally unreadable: missing or
+    /// malformed manifest, truncated payload, inconsistent geometry.
+    ArtifactCorrupt(String),
+    /// A content digest did not match its declared value — an artifact
+    /// payload SHA-256, a config checksum, or a remote shard whose
+    /// `describe` identity mismatches the declared spec.
+    ChecksumMismatch { what: String, expected: String, got: String },
     /// Coordinator-internal failure (dropped reply channel, poisoned lock).
     Internal(String),
 }
@@ -48,6 +55,8 @@ impl IcrError {
             IcrError::Unsupported(_) => "unsupported",
             IcrError::Overloaded { .. } => "overloaded",
             IcrError::Backend(_) => "backend",
+            IcrError::ArtifactCorrupt(_) => "artifact_corrupt",
+            IcrError::ChecksumMismatch { .. } => "checksum_mismatch",
             IcrError::Internal(_) => "internal",
         }
     }
@@ -76,6 +85,12 @@ impl IcrError {
             "unsupported" => IcrError::Unsupported(message.to_string()),
             "overloaded" => IcrError::Overloaded { in_use: 0, limit: 0 },
             "backend" => IcrError::Backend(message.to_string()),
+            "artifact_corrupt" => IcrError::ArtifactCorrupt(message.to_string()),
+            "checksum_mismatch" => IcrError::ChecksumMismatch {
+                what: message.to_string(),
+                expected: String::new(),
+                got: String::new(),
+            },
             _ => IcrError::Internal(message.to_string()),
         }
     }
@@ -101,6 +116,10 @@ impl fmt::Display for IcrError {
                 write!(f, "server overloaded: {in_use} of {limit} slots in use, retry later")
             }
             IcrError::Backend(m) => write!(f, "backend failure: {m}"),
+            IcrError::ArtifactCorrupt(m) => write!(f, "artifact corrupt: {m}"),
+            IcrError::ChecksumMismatch { what, expected, got } => {
+                write!(f, "{what} checksum mismatch: expected {expected}, got {got}")
+            }
             IcrError::Internal(m) => write!(f, "internal error: {m}"),
         }
     }
@@ -130,6 +149,12 @@ mod tests {
             IcrError::Unsupported("x".into()),
             IcrError::Overloaded { in_use: 8, limit: 8 },
             IcrError::Backend("x".into()),
+            IcrError::ArtifactCorrupt("x".into()),
+            IcrError::ChecksumMismatch {
+                what: "payload".into(),
+                expected: "aa".into(),
+                got: "bb".into(),
+            },
             IcrError::Internal("x".into()),
         ];
         let kinds: std::collections::BTreeSet<&str> = errs.iter().map(|e| e.kind()).collect();

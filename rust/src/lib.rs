@@ -38,6 +38,7 @@
 //! let samples = model.sample(3, 42)?;
 //! ```
 
+pub mod artifact;
 pub mod bench;
 pub mod chart;
 pub mod cli;
@@ -68,6 +69,7 @@ pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 
 /// One-stop imports for building and serving models.
 pub mod prelude {
+    pub use crate::artifact::{self, Provenance, Snapshot};
     pub use crate::chart::{Chart, IdentityChart, LogChart};
     pub use crate::cluster::{RemoteClient, RemoteModel, ResponseCache};
     pub use crate::config::{

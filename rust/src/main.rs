@@ -64,6 +64,8 @@ fn run(argv: &[String]) -> Result<()> {
         ["sample"] => cmd_sample(&args),
         ["serve"] => cmd_serve(&args),
         ["infer"] => cmd_infer(&args),
+        ["save", path] => cmd_save(&args, path),
+        ["load", path] => cmd_load(&args, path),
         ["artifacts-check"] => cmd_artifacts_check(&args),
         ["experiment", "kl-table"] => {
             let n = args.get_usize("n", icr::experiments::paper::TARGET_N)?;
@@ -85,6 +87,8 @@ fn print_help() {
         ("sample", "draw GP samples via the coordinator"),
         ("serve", "JSONL server: stdio loop or concurrent tcp:/unix: socket transport"),
         ("infer", "posterior inference on synthetic observations"),
+        ("save PATH", "save the model (optionally with a MAP posterior) as a versioned artifact"),
+        ("load PATH", "restore an artifact, verify it bitwise, and serve it"),
         ("version", "print crate + protocol versions"),
         ("experiment kl-table", "§5.1 refinement-parameter selection table"),
         ("experiment fig3", "Fig. 3 covariance accuracy + §5.2 rank probe"),
@@ -134,6 +138,8 @@ fn print_help() {
     println!("  Remote members (--replicas gp=native:1,remote:tcp:HOST:PORT) federate");
     println!("  other icr serve processes behind this front door (§9): health probes");
     println!("  eject dead members, --cache-entries caches deterministic samples.");
+    println!("  icr save/load persist versioned model artifacts (§10); a live server");
+    println!("  hot-swaps an entry from one via the v2 reload_model op.");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -366,6 +372,80 @@ fn cmd_infer(args: &Args) -> Result<()> {
     }
     coord.shutdown();
     Ok(())
+}
+
+/// `icr save PATH`: build the model from the usual flags, optionally
+/// optimize a MAP posterior into it (`--steps N` with the `infer`
+/// observation recipe), and write a versioned artifact directory
+/// (`DESIGN.md` §10) that `icr load` — or a live server's `reload_model`
+/// op — restores to byte-identical serving state.
+fn cmd_save(args: &Args, path: &str) -> Result<()> {
+    let (cfg, coord) = make_coordinator(args)?;
+    let steps = args.get_usize("steps", 0)?;
+    if steps > 0 {
+        let restarts = args.get_usize("restarts", 1)?;
+        let lr = args.get_f64("lr", 0.1)?;
+        let sigma = args.get_f64("sigma", 0.05)?;
+        // Same synthetic ground truth as `icr infer`, so the embedded
+        // posterior is reproducible from (seed, config) alone.
+        let engine = coord.engine();
+        let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+        let xi_true = rng.standard_normal_vec(engine.total_dof());
+        let truth = engine.apply_sqrt_batch(std::slice::from_ref(&xi_true))?.remove(0);
+        let y_obs: Vec<f64> = engine
+            .obs_indices()
+            .iter()
+            .map(|&i| truth[i] + sigma * rng.standard_normal())
+            .collect();
+        let (mi, xi) =
+            engine.infer_multi_from(None, &y_obs, sigma, steps, lr, restarts, cfg.seed)?;
+        let dof = engine.total_dof();
+        coord.install_posterior(None, xi[mi.best * dof..(mi.best + 1) * dof].to_vec())?;
+        eprintln!("optimized posterior: {steps} steps x {restarts} chain(s), best chain {}", mi.best);
+    }
+    let snap = coord.save_artifact(None, std::path::Path::new(path))?;
+    eprintln!(
+        "saved model {:?} (backend {}, N = {}, dof = {}, posterior: {}) -> {path}",
+        snap.name,
+        snap.backend.name(),
+        snap.descriptor.n,
+        snap.descriptor.dof,
+        if snap.posterior.is_some() { "yes" } else { "no" },
+    );
+    eprintln!("config sha256 {}", snap.config_sha256());
+    coord.shutdown();
+    Ok(())
+}
+
+/// `icr load PATH`: restore a saved artifact (sha256 + config checksum
+/// verified), rebuild the model, assert bitwise geometry parity with the
+/// saver, install the snapshot posterior for warm-started inference, and
+/// serve — the restored server answers byte-identically to the one that
+/// saved (`DESIGN.md` §10).
+fn cmd_load(args: &Args, path: &str) -> Result<()> {
+    let snap = icr::artifact::load(std::path::Path::new(path))?;
+    let mut cfg = ServerConfig::resolve(args)?;
+    cfg.model = snap.config.clone();
+    cfg.backend = snap.backend;
+    if args.has_switch("dump-config") {
+        println!("{}", cfg.to_json().to_json_pretty());
+        return Ok(());
+    }
+    let coord = Coordinator::start(cfg.clone())?;
+    snap.verify_model(coord.engine().as_ref())?;
+    if let Some(xi) = snap.posterior.clone() {
+        coord.install_posterior(None, xi)?;
+    }
+    eprintln!(
+        "restored model {:?} from {path} (config sha256 {}, posterior: {})",
+        snap.name,
+        snap.config_sha256(),
+        if snap.posterior.is_some() { "warm" } else { "none" },
+    );
+    match cfg.listen {
+        ListenAddr::Stdio => serve_stdio(&cfg, coord),
+        _ => serve_net(&cfg, coord),
+    }
 }
 
 fn cmd_artifacts_check(args: &Args) -> Result<()> {

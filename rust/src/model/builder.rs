@@ -69,6 +69,17 @@ impl ModelBuilder {
         }
     }
 
+    /// Start from a saved model artifact (`DESIGN.md` §10): reads and
+    /// fully verifies `dir`'s manifest and payloads, then configures the
+    /// builder with the snapshot's config and backend family. Build-time
+    /// knobs (executor, AOT artifact dir, SIMD) still apply on top. Use
+    /// [`crate::artifact::load_model`] to additionally assert bitwise
+    /// geometry parity of the rebuilt model, or [`crate::artifact::load`]
+    /// when the posterior payload is needed for a warm start.
+    pub fn from_artifact(dir: &std::path::Path) -> Result<Self, IcrError> {
+        Ok(crate::artifact::load(dir)?.builder())
+    }
+
     /// Kernel spec string, e.g. `matern32(rho=1.0, amp=1.0)`.
     pub fn kernel(mut self, spec: &str) -> Self {
         self.model.kernel_spec = spec.to_string();
@@ -281,6 +292,30 @@ mod tests {
             Err(IcrError::Backend(_)) => {}
             other => panic!("expected backend error, got {:?}", other.map(|m| m.name())),
         }
+    }
+
+    #[test]
+    fn from_artifact_rebuilds_the_saved_family_and_geometry() {
+        let dir = std::env::temp_dir()
+            .join(format!("icr-builder-artifact-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let b = ModelBuilder::new().windows(3, 2).levels(2).target_n(16).backend(Backend::Exact);
+        let cfg = b.config().clone();
+        let model = b.build().unwrap();
+        let snap = crate::artifact::Snapshot::capture(
+            "default",
+            Backend::Exact,
+            &cfg,
+            model.as_ref(),
+            None,
+            0,
+        )
+        .unwrap();
+        crate::artifact::save(&dir, &snap).unwrap();
+        let rebuilt = ModelBuilder::from_artifact(&dir).unwrap().build().unwrap();
+        assert_eq!(rebuilt.descriptor(), model.descriptor());
+        assert_eq!(rebuilt.sample(2, 9).unwrap(), model.sample(2, 9).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -131,15 +131,25 @@ pub struct ModelInfo {
     pub domain: Vec<f64>,
     /// Indices of observed points for the regression objective.
     pub obs: Vec<usize>,
+    /// SHA-256 checksum of the model's canonical config JSON
+    /// ([`crate::artifact::config_checksum`]), when the serving process
+    /// knows the config. A cluster front door compares this against the
+    /// checksum of its declared spec before routing to a remote shard;
+    /// `None` (older servers, config-less registries) skips the check.
+    pub config_sha256: Option<String>,
 }
 
 impl ModelInfo {
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut pairs = vec![
             ("descriptor", self.descriptor.to_json()),
             ("domain", json::arr(self.domain.iter().map(|&x| json::num(x)).collect())),
             ("obs", json::arr(self.obs.iter().map(|&i| json::num(i as f64)).collect())),
-        ])
+        ];
+        if let Some(sum) = &self.config_sha256 {
+            pairs.push(("config_sha256", json::s(sum)));
+        }
+        json::obj(pairs)
     }
 
     pub fn from_json(v: &Value) -> Result<ModelInfo, IcrError> {
@@ -157,7 +167,9 @@ impl ModelInfo {
             .and_then(Value::as_array)
             .map(|a| a.iter().filter_map(Value::as_usize).collect())
             .unwrap_or_default();
-        Ok(ModelInfo { descriptor, domain, obs })
+        let config_sha256 =
+            v.get("config_sha256").and_then(Value::as_str).map(str::to_string);
+        Ok(ModelInfo { descriptor, domain, obs, config_sha256 })
     }
 }
 
@@ -297,6 +309,17 @@ pub trait GpModel: Send + Sync {
         Ok(())
     }
 
+    /// Re-fetch and re-validate any deferred identity this model
+    /// carries. In-process engines are valid by construction; remote
+    /// proxies override this to fetch `describe` from the backend and
+    /// check the reported config checksum against the declared spec
+    /// (`DESIGN.md` §10). The coordinator's health monitor calls this
+    /// before restoring an ejected replica-set member, so a recovered
+    /// shard serving the wrong model version stays out of the pool.
+    fn revalidate(&self) -> Result<(), IcrError> {
+        Ok(())
+    }
+
     /// Full identity served to `describe` requests (descriptor + domain
     /// points + observation pattern).
     fn info(&self) -> ModelInfo {
@@ -304,6 +327,7 @@ pub trait GpModel: Send + Sync {
             descriptor: self.descriptor(),
             domain: self.domain_points(),
             obs: self.obs_indices(),
+            config_sha256: None,
         }
     }
 
@@ -358,6 +382,34 @@ pub trait GpModel: Send + Sync {
         restarts: usize,
         seed: u64,
     ) -> Result<MultiInference, IcrError> {
+        self.infer_multi_from(None, y_obs, sigma_n, steps, lr, restarts, seed).map(|(mi, _)| mi)
+    }
+
+    /// Warm-startable core of [`Self::infer_multi`], also returning the
+    /// optimized flat `restarts × dof` excitation panel (the posterior
+    /// state a model artifact persists).
+    ///
+    /// `xi0` seeds chain 0: `None` keeps the cold start at ξ = 0, while
+    /// `Some` resumes from a snapshot posterior
+    /// ([`crate::artifact::Snapshot::posterior`]) — two processes
+    /// warm-starting from the same snapshot with the same arguments
+    /// produce byte-identical results. Chains 1.. are seeded
+    /// standard-normal either way, so a warm start changes nothing about
+    /// basin diversity.
+    ///
+    /// This runs the optimizer locally; remote proxies serve warm starts
+    /// on their own backend and report typed `unsupported` here.
+    #[allow(clippy::too_many_arguments)]
+    fn infer_multi_from(
+        &self,
+        xi0: Option<&[f64]>,
+        y_obs: &[f64],
+        sigma_n: f64,
+        steps: usize,
+        lr: f64,
+        restarts: usize,
+        seed: u64,
+    ) -> Result<(MultiInference, Vec<f64>), IcrError> {
         if steps == 0 {
             return Err(IcrError::InvalidParameter("steps must be ≥ 1".into()));
         }
@@ -372,6 +424,16 @@ pub trait GpModel: Send + Sync {
         let dof = self.total_dof();
         let b = restarts;
         let mut xi = vec![0.0; b * dof];
+        if let Some(x0) = xi0 {
+            if x0.len() != dof {
+                return Err(IcrError::ShapeMismatch {
+                    what: "xi0",
+                    expected: dof,
+                    got: x0.len(),
+                });
+            }
+            xi[..dof].copy_from_slice(x0);
+        }
         if b > 1 {
             let mut rng = Rng::new(seed);
             rng.fill_standard_normal(&mut xi[dof..]);
@@ -403,7 +465,7 @@ pub trait GpModel: Send + Sync {
             .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
             .map(|(i, _)| i)
             .unwrap_or(0);
-        Ok(MultiInference { fields, traces, best })
+        Ok((MultiInference { fields, traces, best }, xi))
     }
 }
 
@@ -615,9 +677,13 @@ mod tests {
             },
             domain: vec![0.0, 0.25, 1.5, 3.0],
             obs: vec![0, 2],
+            config_sha256: Some("ab".repeat(32)),
         };
         let back = ModelInfo::from_json(&info.to_json()).unwrap();
         assert_eq!(back, info);
+        // Older servers omit the checksum; the field decodes as None.
+        let legacy = ModelInfo { config_sha256: None, ..info.clone() };
+        assert_eq!(ModelInfo::from_json(&legacy.to_json()).unwrap().config_sha256, None);
         // Unknown backend families degrade to "unknown", not an error.
         let mut v = info.to_json();
         if let Value::Object(map) = &mut v {

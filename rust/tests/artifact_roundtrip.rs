@@ -1,0 +1,236 @@
+//! Artifact persistence end-to-end (`DESIGN.md` §10): save → load →
+//! byte-identical samples across every model family, warm-started
+//! inference parity between the saving and the loading process,
+//! coordinator-level save/reload (hot swap), and typed rejection of
+//! corrupted artifacts — with the old model still serving afterwards.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use icr::artifact::{self, config_checksum, Snapshot};
+use icr::config::{Backend, ModelConfig, ServerConfig};
+use icr::coordinator::{Coordinator, Request, Response};
+use icr::error::IcrError;
+use icr::model::{GpModel, ModelBuilder};
+use icr::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("icr-rt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The shared small geometry: every family models the same 40-ish points.
+fn builder(backend: Backend) -> ModelBuilder {
+    ModelBuilder::new().windows(3, 2).levels(3).target_n(40).backend(backend)
+}
+
+fn small_cfg() -> ServerConfig {
+    ServerConfig {
+        model: ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 40, ..ModelConfig::default() },
+        workers: 2,
+        ..ServerConfig::default()
+    }
+}
+
+/// All families constructible in this environment, with their configs.
+fn families() -> Vec<(Backend, Arc<dyn GpModel>, ModelConfig)> {
+    let mut out = Vec::new();
+    for backend in [Backend::Native, Backend::Kissgp, Backend::Exact] {
+        let b = builder(backend);
+        let cfg = b.config().clone();
+        out.push((backend, b.build().unwrap(), cfg));
+    }
+    if Path::new("artifacts/manifest.json").exists() {
+        // The AOT artifact set is built for the paper-default geometry.
+        let b = ModelBuilder::new().backend(Backend::Pjrt);
+        let cfg = b.config().clone();
+        match ModelBuilder::new().backend(Backend::Pjrt).build() {
+            Ok(m) => out.push((Backend::Pjrt, m, cfg)),
+            Err(e) => eprintln!("SKIP pjrt artifact round trip: {e}"),
+        }
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — pjrt family not covered");
+    }
+    out
+}
+
+#[test]
+fn every_family_round_trips_with_bitwise_sample_parity() {
+    for (backend, model, cfg) in families() {
+        let dir = tmp_dir(&format!("family-{}", backend.name()));
+        let snap =
+            Snapshot::capture("default", backend, &cfg, model.as_ref(), None, 0).unwrap();
+        artifact::save(&dir, &snap).unwrap();
+        let (loaded, back) = artifact::load_model(&dir, None, "artifacts").unwrap();
+        assert_eq!(back.backend, backend);
+        assert_eq!(back.descriptor, model.descriptor(), "{}", backend.name());
+        assert_eq!(back.config_sha256(), config_checksum(&cfg));
+        // Samples are pure functions of (seed, config): the rebuilt model
+        // must reproduce the saver's bytes exactly, not approximately.
+        let (a, b) = (model.sample(3, 991).unwrap(), loaded.sample(3, 991).unwrap());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.len(), rb.len(), "{}", backend.name());
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} sample drift", backend.name());
+            }
+        }
+        // And the builder convenience path rebuilds the same family.
+        let again = ModelBuilder::from_artifact(&dir).unwrap().build().unwrap();
+        assert_eq!(again.descriptor(), model.descriptor());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn warm_started_inference_matches_across_save_load() {
+    // The posterior payload contract: a process that loads an artifact
+    // with ξ and serves `infer` must produce the exact bytes the saving
+    // process would have served from its own in-memory posterior.
+    let dir = tmp_dir("warm");
+    let saver = Coordinator::start(small_cfg()).unwrap();
+    let engine = saver.engine();
+    let dof = engine.total_dof();
+    let n_obs = engine.obs_indices().len();
+    let mut rng = Rng::new(4242);
+    let y: Vec<f64> = rng.standard_normal_vec(n_obs);
+
+    // Optimize a short MAP run and install its best chain as the posterior.
+    let (mi, xi) = engine.infer_multi_from(None, &y, 0.3, 40, 0.1, 2, 7).unwrap();
+    let xi0 = xi[mi.best * dof..(mi.best + 1) * dof].to_vec();
+    saver.install_posterior(None, xi0.clone()).unwrap();
+    saver.save_artifact(None, &dir).unwrap();
+
+    // Served warm inference on the saver.
+    let warm_a = match saver
+        .call(Request::Infer { y_obs: y.clone(), sigma_n: 0.3, steps: 15, lr: 0.1 })
+        .unwrap()
+    {
+        Response::Inference { field, .. } => field,
+        other => panic!("{other:?}"),
+    };
+    // Warm serving is exactly "resume chain 0 from ξ₀".
+    let (direct, _) =
+        engine.infer_multi_from(Some(&xi0), &y, 0.3, 15, 0.1, 1, 0).unwrap();
+    assert_eq!(warm_a, direct.fields[0]);
+    saver.shutdown();
+
+    // A fresh process loads the artifact the way `icr load` does:
+    // rebuild from the stored config, verify, install the posterior.
+    let snap = artifact::load(&dir).unwrap();
+    assert_eq!(snap.posterior.as_deref(), Some(xi0.as_slice()));
+    let mut cfg = small_cfg();
+    cfg.model = snap.config.clone();
+    cfg.backend = snap.backend;
+    let loader = Coordinator::start(cfg).unwrap();
+    snap.verify_model(loader.engine().as_ref()).unwrap();
+    loader.install_posterior(None, snap.posterior.clone().unwrap()).unwrap();
+    let warm_b = match loader
+        .call(Request::Infer { y_obs: y, sigma_n: 0.3, steps: 15, lr: 0.1 })
+        .unwrap()
+    {
+        Response::Inference { field, .. } => field,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(warm_a, warm_b, "warm inference diverged across save/load");
+    loader.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coordinator_reload_swaps_the_model_in_place() {
+    // Rolling-deploy primitive: save an artifact with a *different*
+    // geometry, hot-swap the live entry from it over the wire op, and
+    // the entry serves the new model's bytes with the new identity.
+    let dir = tmp_dir("reload");
+    let next = ModelBuilder::new().windows(3, 2).levels(3).target_n(48);
+    let next_cfg = next.config().clone();
+    let next_model = next.build().unwrap();
+    let snap =
+        Snapshot::capture("default", Backend::Native, &next_cfg, next_model.as_ref(), None, 0)
+            .unwrap();
+    artifact::save(&dir, &snap).unwrap();
+
+    let coord = Coordinator::start(small_cfg()).unwrap();
+    let before = coord.engine().sample(1, 5).unwrap().remove(0);
+    assert_eq!(coord.engine().n_points(), 40);
+
+    let resp = coord
+        .call(Request::ReloadModel { path: dir.to_string_lossy().into_owned() })
+        .unwrap();
+    match resp {
+        Response::Reloaded { model, config_sha256 } => {
+            assert_eq!(model, "default");
+            assert_eq!(config_sha256, config_checksum(&next_cfg));
+        }
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(coord.engine().n_points(), 48, "identity did not swap");
+    let after = coord.engine().sample(1, 5).unwrap().remove(0);
+    assert_eq!(after, next_model.sample(1, 5).unwrap().remove(0));
+    assert_ne!(before, after);
+    // Served requests go through the swapped handle too.
+    match coord.call(Request::Sample { count: 1, seed: 5 }).unwrap() {
+        Response::Samples(rows) => assert_eq!(rows[0], after),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(coord.metrics().counter("model_reloads").get(), 1);
+    // Re-saving the swapped entry reflects the new config.
+    let dir2 = tmp_dir("reload-resave");
+    let resaved = coord.save_artifact(None, &dir2).unwrap();
+    assert_eq!(resaved.config_sha256(), config_checksum(&next_cfg));
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+#[test]
+fn failed_reload_is_typed_and_leaves_the_old_model_serving() {
+    let dir = tmp_dir("reload-corrupt");
+    let coord = Coordinator::start(small_cfg()).unwrap();
+    coord.save_artifact(None, &dir).unwrap();
+    let before = coord.engine().sample(2, 33).unwrap();
+
+    // Flip one payload byte: reload must reject with the typed checksum
+    // error and must NOT have swapped anything.
+    let path = dir.join("domain.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[9] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    match coord.reload_model_from(None, &dir) {
+        Err(IcrError::ChecksumMismatch { what, .. }) => {
+            assert!(what.contains("domain.bin"), "{what}")
+        }
+        other => panic!("expected checksum mismatch, got {other:?}"),
+    }
+    // Missing directory → corrupt, same non-destructive outcome.
+    match coord.reload_model_from(None, Path::new("/nonexistent/icr-artifact")) {
+        Err(IcrError::ArtifactCorrupt(_)) => {}
+        other => panic!("expected corrupt, got {other:?}"),
+    }
+    assert_eq!(coord.metrics().counter("model_reloads").get(), 0);
+    assert_eq!(coord.engine().sample(2, 33).unwrap(), before);
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_of_default_coordinator_round_trips_through_save_artifact() {
+    let dir = tmp_dir("coord-save");
+    let coord = Coordinator::start(small_cfg()).unwrap();
+    let snap = coord.save_artifact(None, &dir).unwrap();
+    assert_eq!(snap.name, "default");
+    assert_eq!(snap.backend, Backend::Native);
+    assert!(snap.posterior.is_none());
+    assert_eq!(coord.metrics().counter("artifacts_saved").get(), 1);
+
+    let (loaded, back) = artifact::load_model(&dir, None, "artifacts").unwrap();
+    back.verify_model(coord.engine().as_ref()).unwrap();
+    assert_eq!(
+        loaded.sample(2, 17).unwrap(),
+        coord.engine().sample(2, 17).unwrap(),
+        "loaded model drifted from the serving one"
+    );
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

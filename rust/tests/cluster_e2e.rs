@@ -12,12 +12,13 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use icr::artifact::{self, Snapshot};
 use icr::cluster::RemoteModel;
 use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
 use icr::coordinator::{Coordinator, Request, Response};
 use icr::error::IcrError;
 use icr::json::Value;
-use icr::model::GpModel;
+use icr::model::{GpModel, ModelBuilder};
 use icr::net::{ListenAddr, MemberState, NetServer};
 
 static SOCK_ID: AtomicUsize = AtomicUsize::new(0);
@@ -42,13 +43,19 @@ struct BackendServer {
 }
 
 fn start_backend() -> BackendServer {
+    start_backend_on("127.0.0.1:0", small_model())
+}
+
+/// Backend on a specific listen address with a specific model config —
+/// the general form the deploy/identity tests need.
+fn start_backend_on(listen: &str, model: ModelConfig) -> BackendServer {
     let cfg = ServerConfig {
-        model: small_model(),
+        model,
         workers: 2,
         max_batch: 8,
         max_wait_us: 500,
         idle_timeout_ms: 0,
-        listen: ListenAddr::Tcp("127.0.0.1:0".into()),
+        listen: ListenAddr::Tcp(listen.into()),
         ..ServerConfig::default()
     };
     let coord = Arc::new(Coordinator::start(cfg.clone()).expect("backend coordinator"));
@@ -380,6 +387,203 @@ fn response_cache_e2e_byte_identical_and_bounded() {
     stop.store(true, Ordering::SeqCst);
     handle.join().unwrap().unwrap();
     std::fs::remove_file(&sock).ok();
+}
+
+#[test]
+fn rolling_deploy_swaps_replica_members_without_dropping_requests() {
+    // The deploy payload: an artifact of a *larger* geometry on disk.
+    let dir = std::env::temp_dir().join(format!("icr_deploy_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let next = ModelBuilder::new().windows(3, 2).levels(3).target_n(48);
+    let next_cfg = next.config().clone();
+    let next_model = next.build().unwrap();
+    let snap =
+        Snapshot::capture("default", Backend::Native, &next_cfg, next_model.as_ref(), None, 0)
+            .unwrap();
+    artifact::save(&dir, &snap).unwrap();
+
+    // A 2-member local replica set with the response cache enabled —
+    // the stale-reply hazard the reload invalidation must close.
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        replicas: vec![ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()],
+        cache_entries: 64,
+        ..ServerConfig::default()
+    };
+    let front = Arc::new(Coordinator::start(cfg).expect("front door"));
+    let old = front.engine().sample(1, 77).unwrap();
+    // Prime the cache with the OLD model's bytes for seed 77.
+    match front.call_model(Some("gp"), Request::Sample { count: 1, seed: 77 }).unwrap() {
+        Response::Samples(s) => assert_eq!(s, old),
+        other => panic!("{other:?}"),
+    }
+
+    // Continuous client traffic across the whole deploy window.
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors = Arc::new(AtomicUsize::new(0));
+    let served = Arc::new(AtomicUsize::new(0));
+    let traffic = {
+        let (front, stop) = (front.clone(), stop.clone());
+        let (errors, served) = (errors.clone(), served.clone());
+        std::thread::spawn(move || {
+            let mut seed = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                seed = (seed + 1) % 32;
+                match front.call_model(Some("gp"), Request::Sample { count: 1, seed: 1000 + seed })
+                {
+                    Ok(Response::Samples(rows)) if rows.len() == 1 && !rows[0].is_empty() => {
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                    _ => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        })
+    };
+
+    // Rolling deploy: drain → let in-flight work land → swap from the
+    // artifact → restore, one member at a time.
+    for member in ["gp@0", "gp@1"] {
+        assert!(front.router().set_member_state(member, MemberState::Draining));
+        std::thread::sleep(Duration::from_millis(100));
+        match front.reload_model_from(Some(member), &dir).unwrap() {
+            Response::Reloaded { model, config_sha256 } => {
+                assert_eq!(model, member);
+                assert_eq!(config_sha256, artifact::config_checksum(&next_cfg));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(front.router().set_member_state(member, MemberState::Healthy));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    traffic.join().unwrap();
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "requests dropped during rolling deploy");
+    assert!(served.load(Ordering::Relaxed) > 0, "no traffic flowed during the deploy");
+
+    // Both members now serve the new identity and stay routable.
+    for member in ["gp@0", "gp@1"] {
+        assert_eq!(front.model(member).unwrap().n_points(), 48, "{member} did not swap");
+        assert_eq!(front.router().member_state(member), Some(MemberState::Healthy));
+    }
+    assert_eq!(front.metrics().counter("model_reloads").get(), 2);
+
+    // No stale cached replies: the seed primed on the old model now
+    // serves the NEW model's bytes, and a never-seen seed matches too.
+    let want = next_model.sample(1, 77).unwrap();
+    match front.call_model(Some("gp"), Request::Sample { count: 1, seed: 77 }).unwrap() {
+        Response::Samples(s) => assert_eq!(s, want, "stale cached reply after reload"),
+        other => panic!("{other:?}"),
+    }
+    let want = next_model.sample(1, 2000).unwrap();
+    match front.call_model(Some("gp"), Request::Sample { count: 1, seed: 2000 }).unwrap() {
+        Response::Samples(s) => assert_eq!(s, want),
+        other => panic!("{other:?}"),
+    }
+    Arc::try_unwrap(front).ok().map(Coordinator::shutdown);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_remote_shard_is_rejected_at_the_front_door() {
+    // Backend serving a *different* geometry than the front door's
+    // declared spec: the config checksums disagree.
+    let backend = start_backend_on(
+        "127.0.0.1:0",
+        ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() },
+    );
+    let mut cfg = front_cfg(&[&backend]);
+    cfg.health_interval_ms = 100;
+    // Boot succeeds — the mismatch costs the member, not the process.
+    let front = Coordinator::start(cfg).expect("front door boots despite the mismatch");
+    assert_eq!(front.router().member_state("gp@1"), Some(MemberState::Ejected));
+    assert!(front.metrics().counter("identity_rejections").get() >= 1);
+
+    // The shard answers health probes, but the identity gate keeps it
+    // out of the pool across several monitor cycles.
+    let until = Instant::now() + Duration::from_millis(600);
+    while Instant::now() < until {
+        assert_eq!(
+            front.router().member_state("gp@1"),
+            Some(MemberState::Ejected),
+            "mismatched shard rejoined the routing pool"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert_eq!(front.metrics().counter("health_restorations").get(), 0);
+
+    // Traffic completes on the healthy local member, byte-identical.
+    let engine = front.engine();
+    for seed in 0..8u64 {
+        let want = engine.sample(1, seed).unwrap();
+        match front.call_model(Some("gp"), Request::Sample { count: 1, seed }) {
+            Ok(Response::Samples(s)) => assert_eq!(s, want, "seed {seed}"),
+            other => panic!("{other:?}"),
+        }
+    }
+    front.shutdown();
+}
+
+#[test]
+fn front_door_boots_with_dead_remote_and_restores_on_recovery() {
+    // Reserve a port, then free it: the declared member address is
+    // valid but nothing listens there yet.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port");
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let members = vec![
+        MemberSpec::local(Backend::Native),
+        MemberSpec::remote(&format!("tcp:{addr}")).expect("remote member"),
+    ];
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        replicas: vec![ReplicaSpec::new("gp", members).expect("replica spec")],
+        health_interval_ms: 100,
+        ..ServerConfig::default()
+    };
+    // The lazy-identity satellite: boot must not require the shard.
+    let front = Coordinator::start(cfg).expect("boot with the declared shard down");
+    assert_eq!(front.router().member_state("gp@1"), Some(MemberState::Ejected));
+    assert!(front.metrics().counter("identity_rejections").get() >= 1);
+    // Identity is still deferred: placeholder geometry, no wire traffic.
+    assert_eq!(front.model("gp@1").unwrap().n_points(), 0);
+
+    // Traffic completes on the local member meanwhile.
+    let engine = front.engine();
+    let want = engine.sample(1, 3).unwrap();
+    match front.call_model(Some("gp"), Request::Sample { count: 1, seed: 3 }) {
+        Ok(Response::Samples(s)) => assert_eq!(s, want),
+        other => panic!("{other:?}"),
+    }
+
+    // The shard comes up on the declared address: the monitor probes it
+    // alive, fetches + validates its identity, and restores the member.
+    let backend = start_backend_on(&addr, small_model());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while front.router().member_state("gp@1") != Some(MemberState::Healthy) {
+        assert!(Instant::now() < deadline, "recovered shard never restored");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(front.metrics().counter("health_restorations").get() >= 1);
+    // The deferred identity is now the real one.
+    assert_eq!(front.model("gp@1").unwrap().n_points(), engine.n_points());
+    for seed in 20..36u64 {
+        let want = engine.sample(1, seed).unwrap();
+        match front.call_model(Some("gp"), Request::Sample { count: 1, seed }) {
+            Ok(Response::Samples(s)) => assert_eq!(s, want, "seed {seed}"),
+            other => panic!("{other:?}"),
+        }
+    }
+    drop(backend);
+    front.shutdown();
 }
 
 #[test]
