@@ -14,20 +14,25 @@
 //! cargo bench --bench serve_throughput -- --json
 //! ```
 //!
-//! Knobs: `ICR_BENCH_SERVE_REQS` (requests per client, default 200).
+//! Knobs: `ICR_BENCH_SERVE_REQS` (requests per client, default 200),
+//! `ICR_BENCH_SERVE_SCALE_CONNS` / `ICR_BENCH_SERVE_SCALE_REQS` (ceiling
+//! and per-driver requests of the `connections_scaling` sweep, defaults
+//! 2048 / 50) — the sweep pits the legacy threads-per-session host
+//! against the event loop at identical driver load and pushes the event
+//! loop to a connection count no thread-pair host reasonably reaches.
 
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use icr::bench::hardware_json;
 use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
 use icr::coordinator::Coordinator;
 use icr::json::{self, Value};
 use icr::model::{GpModel, ModelBuilder};
-use icr::net::{ListenAddr, NetServer};
+use icr::net::{IoMode, ListenAddr, NetServer};
 use icr::rng::Rng;
 
 struct CaseResult {
@@ -153,6 +158,74 @@ fn run_case(family: &str, backend: Backend, conns: usize, batch: usize, reqs: us
     let wall = t0.elapsed().as_secs_f64();
 
     let result = finish_case(format!("serve/{family}/c{conns}/b{batch}"), &coord, conns * reqs, wall, &lat);
+    stop.store(true, Ordering::SeqCst);
+    handle.join().expect("server thread").expect("server run");
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+    std::fs::remove_file(&sock).ok();
+    result
+}
+
+/// Connections-scaling case: `conns` live sockets against one server in
+/// the given `--io-mode`, with at most 64 of them actively driven (the
+/// scaling axis is how many live connections the host sustains, not how
+/// many the driver saturates at once — the rest sit connected and idle,
+/// which is exactly what costs a thread pair per socket in threads mode
+/// and nothing but an fd in event mode).
+fn run_scaling_case(mode: IoMode, conns: usize, reqs: usize) -> CaseResult {
+    let sock = std::env::temp_dir().join(format!(
+        "icr_bench_scale_{}_{}_{conns}.sock",
+        std::process::id(),
+        mode.name()
+    ));
+    let cfg = ServerConfig {
+        model: ModelConfig::default(),
+        workers: 2,
+        max_batch: 16,
+        max_wait_us: 200,
+        idle_timeout_ms: 0,
+        max_connections: conns + 8,
+        io_mode: mode,
+        listen: ListenAddr::Unix(sock.clone()),
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let active = conns.min(64);
+    let mut idle = Vec::with_capacity(conns - active);
+    for _ in 0..conns - active {
+        // A full accept backlog surfaces as a transient connect error on
+        // unix sockets; back off and retry instead of failing the case.
+        let mut tries = 0u32;
+        let s = loop {
+            match UnixStream::connect(&sock) {
+                Ok(s) => break s,
+                Err(e) if tries < 2000 => {
+                    let _ = e;
+                    tries += 1;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("idle connect: {e}"),
+            }
+        };
+        idle.push(s);
+    }
+    let t0 = Instant::now();
+    let lat = drive_clients(&sock, None, active, 1, reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    drop(idle);
+
+    let result = finish_case(
+        format!("serve/scaling/{}/c{conns}", mode.name()),
+        &coord,
+        active * reqs,
+        wall,
+        &lat,
+    );
     stop.store(true, Ordering::SeqCst);
     handle.join().expect("server thread").expect("server run");
     if let Ok(coord) = Arc::try_unwrap(coord) {
@@ -320,6 +393,78 @@ fn main() {
         results.push(r);
     }
 
+    // Connections scaling: threads-per-session vs the event loop at the
+    // same driver load, plus an event-only high-water case.
+    let scale_conns: usize = std::env::var("ICR_BENCH_SERVE_SCALE_CONNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048);
+    let scale_reqs: usize = std::env::var("ICR_BENCH_SERVE_SCALE_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let mid = 512.min(scale_conns);
+    let mut plan: Vec<(IoMode, usize)> = vec![
+        (IoMode::Threads, 64.min(scale_conns)),
+        (IoMode::Threads, mid),
+        (IoMode::Event, 64.min(scale_conns)),
+        (IoMode::Event, mid),
+    ];
+    if scale_conns > mid {
+        plan.push((IoMode::Event, scale_conns));
+    }
+    // (mode, conns, index into `results`) for the summary block.
+    let mut scaling: Vec<(IoMode, usize, usize)> = Vec::new();
+    for (mode, conns) in plan {
+        let r = run_scaling_case(mode, conns, scale_reqs);
+        print_row(&r);
+        scaling.push((mode, conns, results.len()));
+        results.push(r);
+    }
+    let rps_at = |mode: IoMode, conns: usize| {
+        scaling
+            .iter()
+            .find(|(m, c, _)| *m == mode && *c == conns)
+            .map(|(_, _, i)| results[*i].requests_per_sec)
+    };
+    let speedup_512 = match (rps_at(IoMode::Threads, mid), rps_at(IoMode::Event, mid)) {
+        (Some(t), Some(e)) if t > 0.0 => e / t,
+        _ => 0.0,
+    };
+    let max_event_connections = scaling
+        .iter()
+        .filter(|(m, _, _)| *m == IoMode::Event)
+        .map(|(_, c, _)| *c)
+        .max()
+        .unwrap_or(0);
+    println!(
+        "connections_scaling: event/threads speedup at c{mid}: {speedup_512:.2}x | \
+         max event connections: {max_event_connections}"
+    );
+    let connections_scaling = json::obj(vec![
+        (
+            "cases",
+            json::arr(
+                scaling
+                    .iter()
+                    .map(|(mode, conns, i)| {
+                        let r = &results[*i];
+                        json::obj(vec![
+                            ("mode", json::s(mode.name())),
+                            ("connections", json::num(*conns as f64)),
+                            ("requests_per_sec", json::num(r.requests_per_sec)),
+                            ("p50_us", json::num(r.p50_us)),
+                            ("p99_us", json::num(r.p99_us)),
+                            ("mean_batch", json::num(r.mean_batch)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_512", json::num(speedup_512)),
+        ("max_event_connections", json::num(max_event_connections as f64)),
+    ]);
+
     // Latency budget: serve latency over the raw apply floor.
     let floor_us = panel_apply_floor_us();
     println!("panel-apply floor (N≈200 native, single lane): {floor_us:.1} µs");
@@ -339,6 +484,7 @@ fn main() {
             ("requests_per_client", json::num(reqs as f64)),
             ("hardware", hardware_json()),
             ("latency_budget", latency_budget_json(floor_us, &results)),
+            ("connections_scaling", connections_scaling),
             ("results", json::arr(results.iter().map(CaseResult::to_json).collect())),
         ]);
         match std::fs::write(&json_path, format!("{}\n", doc.to_json_pretty())) {

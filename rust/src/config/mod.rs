@@ -18,7 +18,7 @@ use crate::cli::Args;
 use crate::icr::RefinementParams;
 use crate::json::{self, Value};
 use crate::kernels::{parse_kernel, Kernel};
-use crate::net::{ListenAddr, RoutePolicy};
+use crate::net::{IoMode, ListenAddr, RoutePolicy};
 
 /// Engine families a registry entry can run on, advertised by
 /// `icr --version` and the `stats` document (`model_families`).
@@ -401,9 +401,14 @@ pub struct ServerConfig {
     /// v2 requests route by the `model` field of the frame.
     pub extra_models: Vec<ModelSpec>,
     pub workers: usize,
-    /// Maximum requests coalesced into one batched apply.
+    /// Maximum applies coalesced into one micro-batch (`--batch-max`;
+    /// `--max-batch` is the legacy spelling): the size flush threshold
+    /// of the batching window (`DESIGN.md` §11).
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch before dispatching.
+    /// Micro-batch window in µs (`--batch-window-us`; `--max-wait-us`
+    /// is the legacy spelling): how long past the *first* request's
+    /// enqueue the batcher holds a partial batch open for stragglers
+    /// before the deadline flush.
     pub max_wait_us: u64,
     /// Worker-pool lanes per batched `√K` panel apply (`--apply-threads`;
     /// `0` = one per available core). The coordinator builds one
@@ -441,6 +446,17 @@ pub struct ServerConfig {
     /// disables the monitor). A member failing its probe is ejected from
     /// routing within one interval and restored when the probe recovers.
     pub health_interval_ms: u64,
+    /// How socket connections are hosted (`--io-mode event|threads`,
+    /// `DESIGN.md` §11): `event` (default) runs every connection on one
+    /// epoll/poll readiness loop; `threads` keeps the legacy
+    /// reader+writer thread pair per connection — the §8 baseline the
+    /// `connections_scaling` bench compares against.
+    pub io_mode: IoMode,
+    /// Blocking-reader poll granularity in ms (`--io-poll-ms`): how
+    /// often a threads-mode session reader wakes to re-check the drain
+    /// flag and idle deadline. Only the blocking paths (threads mode,
+    /// stdio) poll; the event loop sleeps on readiness instead.
+    pub io_poll_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -463,6 +479,8 @@ impl Default for ServerConfig {
             route_policy: RoutePolicy::default(),
             cache_entries: 0,
             health_interval_ms: 2000,
+            io_mode: IoMode::default(),
+            io_poll_ms: 25,
         }
     }
 }
@@ -519,6 +537,11 @@ impl ServerConfig {
         cfg.workers = args.get_usize("workers", cfg.workers)?.max(1);
         cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?.max(1);
         cfg.max_wait_us = args.get_u64("max-wait-us", cfg.max_wait_us)?;
+        // Micro-batch spellings (`DESIGN.md` §11); they win over the
+        // legacy --max-batch/--max-wait-us aliases above when both are
+        // given.
+        cfg.max_batch = args.get_usize("batch-max", cfg.max_batch)?.max(1);
+        cfg.max_wait_us = args.get_u64("batch-window-us", cfg.max_wait_us)?;
         cfg.apply_threads = args.get_usize("apply-threads", cfg.apply_threads)?;
         if let Some(d) = args.get("artifacts") {
             cfg.artifact_dir = d.to_string();
@@ -530,6 +553,10 @@ impl ServerConfig {
         cfg.max_connections = args.get_usize("max-connections", cfg.max_connections)?.max(1);
         cfg.idle_timeout_ms = args.get_u64("idle-timeout-ms", cfg.idle_timeout_ms)?;
         cfg.queue_limit = args.get_usize("queue-limit", cfg.queue_limit)?;
+        if let Some(m) = args.get("io-mode") {
+            cfg.io_mode = IoMode::parse(m).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        cfg.io_poll_ms = args.get_u64("io-poll-ms", cfg.io_poll_ms)?.max(1);
         if let Some(list) = args.get("replicas") {
             cfg.replicas = ReplicaSpec::parse_list(list)?;
         }
@@ -648,6 +675,18 @@ impl ServerConfig {
         if let Some(h) = v.get("health_interval_ms").and_then(Value::as_usize) {
             self.health_interval_ms = h as u64;
         }
+        if let Some(m) = v.get("io_mode").and_then(Value::as_str) {
+            self.io_mode = IoMode::parse(m).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(p) = v.get("io_poll_ms").and_then(Value::as_usize) {
+            self.io_poll_ms = (p as u64).max(1);
+        }
+        if let Some(b) = v.get("batch_max").and_then(Value::as_usize) {
+            self.max_batch = b.max(1);
+        }
+        if let Some(w) = v.get("batch_window_us").and_then(Value::as_usize) {
+            self.max_wait_us = w as u64;
+        }
         if let Some(reps) = v.get("replicas").and_then(Value::as_array) {
             let default_backend = self.backend;
             self.replicas = reps
@@ -747,6 +786,8 @@ impl ServerConfig {
             ("route_policy", json::s(self.route_policy.name())),
             ("cache_entries", json::num(self.cache_entries as f64)),
             ("health_interval_ms", json::num(self.health_interval_ms as f64)),
+            ("io_mode", json::s(self.io_mode.name())),
+            ("io_poll_ms", json::num(self.io_poll_ms as f64)),
         ])
     }
 }
@@ -910,6 +951,64 @@ mod tests {
         assert_eq!(member_specs.len(), 4);
         assert_eq!(member_specs[0].name, "gp@0");
         assert_eq!(member_specs[3].backend, Backend::Exact);
+    }
+
+    #[test]
+    fn io_and_batching_knobs_resolve_from_cli() {
+        // Defaults: event loop, 25 ms blocking poll.
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.io_mode, IoMode::default());
+        assert_eq!(cfg.io_poll_ms, 25);
+        let args = Args::parse(
+            &argv(
+                "serve --io-mode threads --io-poll-ms 5 --batch-max 12 --batch-window-us 400",
+            ),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.io_mode, IoMode::Threads);
+        assert_eq!(cfg.io_poll_ms, 5);
+        assert_eq!(cfg.max_batch, 12);
+        assert_eq!(cfg.max_wait_us, 400);
+        // The preferred spellings win over the legacy aliases.
+        let args = Args::parse(
+            &argv("serve --max-batch 3 --batch-max 9 --max-wait-us 10 --batch-window-us 20"),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.max_batch, 9);
+        assert_eq!(cfg.max_wait_us, 20);
+        // io_poll_ms is clamped to at least 1 ms; bad modes are rejected.
+        let args = Args::parse(&argv("serve --io-poll-ms 0"), &[]).unwrap();
+        assert_eq!(ServerConfig::resolve(&args).unwrap().io_poll_ms, 1);
+        let args = Args::parse(&argv("serve --io-mode fibers"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+    }
+
+    #[test]
+    fn io_and_batching_knobs_from_config_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_io_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"io_mode": "threads", "io_poll_ms": 10,
+                "batch_max": 6, "batch_window_us": 150}"#,
+        )
+        .unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.io_mode, IoMode::Threads);
+        assert_eq!(cfg.io_poll_ms, 10);
+        assert_eq!(cfg.max_batch, 6);
+        assert_eq!(cfg.max_wait_us, 150);
+        // Both knobs ride through the config dump.
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("io_mode").and_then(Value::as_str), Some("threads"));
+        assert_eq!(v.get("io_poll_ms").and_then(Value::as_usize), Some(10));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! JSONL wire codec lives in [`super::protocol`]).
 
 use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::error::IcrError;
 use crate::json::Value;
@@ -98,7 +99,72 @@ pub enum Response {
     Reloaded { model: String, config_sha256: String },
 }
 
-/// A queued request with its routing target and reply channel.
+/// Where a finished request's result is delivered, exactly once.
+///
+/// Channel-backed slots serve the blocking `submit_to` API (a thread
+/// parks on the receiver); sink-backed slots let the event-driven
+/// serving core (`DESIGN.md` §11) route completions onto its own
+/// wake-up queue without dedicating a thread per in-flight request. A
+/// sink slot dropped without a result fires a typed internal error, so
+/// a loop counting completions can never hang on a leaked envelope —
+/// the analogue of a channel receiver observing sender hang-up.
+pub struct ReplySlot(Inner);
+
+enum Inner {
+    Channel(mpsc::Sender<Result<Response, IcrError>>),
+    Sink(Option<Box<dyn FnOnce(Result<Response, IcrError>) + Send>>),
+}
+
+impl ReplySlot {
+    /// A channel-backed slot plus the receiver to wait on.
+    pub fn channel() -> (ReplySlot, mpsc::Receiver<Result<Response, IcrError>>) {
+        let (tx, rx) = mpsc::channel();
+        (ReplySlot(Inner::Channel(tx)), rx)
+    }
+
+    /// A sink-backed slot: `f` runs on whichever coordinator thread
+    /// completes the request, so it must be cheap and non-blocking.
+    pub fn sink(f: impl FnOnce(Result<Response, IcrError>) + Send + 'static) -> ReplySlot {
+        ReplySlot(Inner::Sink(Some(Box::new(f))))
+    }
+
+    /// Deliver the result, consuming the slot. A hung-up channel
+    /// receiver is ignored — a client that disconnected mid-flight
+    /// simply never sees its reply, as before.
+    pub fn send(mut self, result: Result<Response, IcrError>) {
+        match &mut self.0 {
+            Inner::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            Inner::Sink(f) => {
+                if let Some(f) = f.take() {
+                    f(result);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ReplySlot {
+    fn drop(&mut self) {
+        if let Inner::Sink(f) = &mut self.0 {
+            if let Some(f) = f.take() {
+                f(Err(IcrError::Internal("reply slot dropped without a result".into())));
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplySlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            Inner::Channel(_) => f.write_str("ReplySlot::Channel"),
+            Inner::Sink(_) => f.write_str("ReplySlot::Sink"),
+        }
+    }
+}
+
+/// A queued request with its routing target and reply slot.
 pub struct Envelope {
     pub id: RequestId,
     /// Registry name of the model serving this request (post-routing:
@@ -109,12 +175,50 @@ pub struct Envelope {
     /// member of a set shares one cache entry.
     pub logical: String,
     pub request: Request,
-    pub reply: mpsc::Sender<Result<Response, IcrError>>,
+    pub reply: ReplySlot,
+    /// When the request entered the queue. The micro-batch window
+    /// (`DESIGN.md` §11) anchors its flush deadline here, so time a
+    /// request already spent queued counts against the window instead
+    /// of extending it.
+    pub enqueued_at: Instant,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn reply_slot_channel_delivers() {
+        let (slot, rx) = ReplySlot::channel();
+        slot.send(Ok(Response::Field(vec![1.0, 2.0])));
+        assert_eq!(rx.recv().unwrap(), Ok(Response::Field(vec![1.0, 2.0])));
+    }
+
+    #[test]
+    fn reply_slot_sink_fires_exactly_once() {
+        let got: Arc<Mutex<Vec<Result<Response, IcrError>>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_got = got.clone();
+        let slot = ReplySlot::sink(move |r| sink_got.lock().unwrap().push(r));
+        slot.send(Ok(Response::Field(vec![3.0])));
+        let seen = got.lock().unwrap();
+        assert_eq!(seen.len(), 1, "send consumed the slot, drop must not re-fire");
+        assert_eq!(seen[0], Ok(Response::Field(vec![3.0])));
+    }
+
+    #[test]
+    fn reply_slot_dropped_sink_reports_internal_error() {
+        let got: Arc<Mutex<Vec<Result<Response, IcrError>>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_got = got.clone();
+        drop(ReplySlot::sink(move |r| sink_got.lock().unwrap().push(r)));
+        let seen = got.lock().unwrap();
+        assert_eq!(seen.len(), 1);
+        assert!(
+            matches!(&seen[0], Err(IcrError::Internal(_))),
+            "leaked slot must surface a typed internal error: {:?}",
+            seen[0]
+        );
+    }
 
     #[test]
     fn batchability_classification() {

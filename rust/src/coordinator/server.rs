@@ -31,7 +31,7 @@ use crate::parallel::Exec;
 use crate::rng::Rng;
 
 use super::protocol::SUPPORTED_PROTOCOLS;
-use super::request::{Envelope, Request, RequestId, Response};
+use super::request::{Envelope, ReplySlot, Request, RequestId, Response};
 
 /// One hosted model: the (hot-swappable) engine plus its private
 /// metrics and persistence state (`DESIGN.md` §10).
@@ -444,8 +444,24 @@ impl Coordinator {
         model: Option<&str>,
         request: Request,
     ) -> (RequestId, mpsc::Receiver<Result<Response, IcrError>>) {
+        let (slot, rx) = ReplySlot::channel();
+        let id = self.submit_sink(model, request, slot);
+        (id, rx)
+    }
+
+    /// Enqueue a request whose result goes to an arbitrary [`ReplySlot`]
+    /// — the event-driven serving core (`DESIGN.md` §11) passes a sink
+    /// that forwards `(connection, sequence, result)` onto its wake-up
+    /// queue. Fast-path outcomes (cache hit, unknown model, queue
+    /// overload) deliver into the slot *inline on the calling thread*
+    /// before this returns; callers must tolerate that re-entrancy.
+    pub fn submit_sink(
+        &self,
+        model: Option<&str>,
+        request: Request,
+        reply: ReplySlot,
+    ) -> RequestId {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
         let logical = model.unwrap_or(&self.shared.default_model);
         self.shared.metrics.counter("requests_submitted").inc();
         // Response cache, consulted BEFORE routing: a hit answers from
@@ -456,8 +472,8 @@ impl Coordinator {
                 let key = CacheKey::sample(logical, *seed, *count);
                 if let Some(rows) = self.shared.cache.get(&key) {
                     self.shared.metrics.counter("requests_completed").inc();
-                    let _ = tx.send(Ok(Response::Samples(rows.as_ref().clone())));
-                    return (id, rx);
+                    reply.send(Ok(Response::Samples(rows.as_ref().clone())));
+                    return id;
                 }
             }
         }
@@ -476,7 +492,7 @@ impl Coordinator {
         match self.shared.entry(&name) {
             Err(e) => {
                 self.shared.metrics.counter("requests_failed").inc();
-                let _ = tx.send(Err(e));
+                reply.send(Err(e));
             }
             Ok(entry) => {
                 entry.metrics.counter("requests_submitted").inc();
@@ -492,19 +508,26 @@ impl Coordinator {
                     entry.metrics.counter("requests_rejected").inc();
                     self.shared.metrics.counter("requests_failed").inc();
                     entry.metrics.counter("requests_failed").inc();
-                    let _ = tx.send(Err(IcrError::Overloaded {
+                    reply.send(Err(IcrError::Overloaded {
                         in_use: depth,
                         limit: self.shared.queue_limit,
                     }));
                 } else {
-                    q.push_back(Envelope { id, model: name, logical, request, reply: tx });
+                    q.push_back(Envelope {
+                        id,
+                        model: name,
+                        logical,
+                        request,
+                        reply,
+                        enqueued_at: Instant::now(),
+                    });
                     self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
                     drop(q);
                     self.shared.cv.notify_one();
                 }
             }
         }
-        (id, rx)
+        id
     }
 
     /// Submit to the default model and block for the reply.
@@ -606,6 +629,15 @@ fn stats_json(shared: &Shared) -> Value {
     // Mirror the live queue depth so the transport section carries every
     // serving-side gauge in one place.
     shared.transport.gauge("queue_depth").set(shared.metrics.gauge("queue_depth").get());
+    // Derive the mean micro-batch fill ratio from the flush accounting
+    // (`pop_batch`): flushes partition into size- vs deadline-triggered,
+    // and the permille sum over all flushes normalizes to a 0..=1 mean.
+    let flushes = shared.transport.counter("batch_flush_size").get()
+        + shared.transport.counter("batch_flush_deadline").get();
+    if flushes > 0 {
+        let sum = shared.transport.counter("batch_fill_permille_sum").get() as f64;
+        shared.transport.gauge("batch_fill_mean").set(sum / flushes as f64 / 1000.0);
+    }
     let outstanding = |m: &str| shared.outstanding(m);
     json::obj(vec![
         ("version", json::s(crate::VERSION)),
@@ -684,10 +716,23 @@ fn cluster_json(shared: &Shared) -> Value {
     ])
 }
 
-/// Pop a batch: the first envelope plus, within the batching window, more
-/// batchable envelopes *for the same model* until `max_batch` applies are
-/// collected.
+/// Pop a micro-batch (`DESIGN.md` §11): the oldest envelope plus, until
+/// `max_batch` applies are collected (size flush) or the batch window
+/// expires (deadline flush), every batchable envelope *for the same
+/// model* anywhere in the scan region of the queue — skipping, without
+/// reordering, envelopes that are non-batchable or co-routed elsewhere,
+/// so one interleaved `infer` or cross-model request no longer collapses
+/// the batch behind it to singletons.
+///
+/// The window anchors at the first envelope's *enqueue* time
+/// (`--batch-window-us`): a backlogged queue flushes immediately because
+/// the head already waited out its window, while a fresh burst holds the
+/// batch open for stragglers. Flush-reason counters and fill-ratio
+/// gauges land in the shared `transport` registry (stats §`transport`).
 fn pop_batch(shared: &Shared) -> Option<Vec<Envelope>> {
+    /// How deep the coalescing scan looks past non-coalescable envelopes;
+    /// bounds the time the queue lock is held per sweep.
+    const SCAN_LIMIT: usize = 128;
     let mut q = shared.queue.lock().unwrap();
     loop {
         if let Some(first) = q.pop_front() {
@@ -696,47 +741,54 @@ fn pop_batch(shared: &Shared) -> Option<Vec<Envelope>> {
                 return Some(vec![first]);
             }
             let model = first.model.clone();
+            let deadline = first.enqueued_at + Duration::from_micros(shared.cfg.max_wait_us);
+            let mut applies: usize = first.request.apply_count();
             let mut batch = vec![first];
-            let mut applies: usize = batch[0].request.apply_count();
-            let deadline = Instant::now() + Duration::from_micros(shared.cfg.max_wait_us);
-            let coalescable = |e: &Envelope, applies: usize, max: usize| {
-                e.request.batchable()
-                    && e.model == model
-                    && applies + e.request.apply_count() <= max
-            };
             loop {
-                // Take whatever is already queued, batchable and co-routed.
-                while applies < shared.cfg.max_batch {
-                    match q.front() {
-                        Some(e) if coalescable(e, applies, shared.cfg.max_batch) => {
-                            let e = q.pop_front().unwrap();
-                            applies += e.request.apply_count();
-                            batch.push(e);
-                        }
-                        _ => break,
+                // Extract whatever is queued, batchable and co-routed,
+                // from anywhere in the scan region.
+                let mut i = 0usize;
+                let mut scanned = 0usize;
+                while i < q.len() && applies < shared.cfg.max_batch && scanned < SCAN_LIMIT {
+                    scanned += 1;
+                    let take = {
+                        let e = &q[i];
+                        e.request.batchable()
+                            && e.model == model
+                            && applies + e.request.apply_count() <= shared.cfg.max_batch
+                    };
+                    if take {
+                        let e = q.remove(i).expect("scanned index in bounds");
+                        applies += e.request.apply_count();
+                        batch.push(e);
+                    } else {
+                        i += 1;
                     }
                 }
-                if applies >= shared.cfg.max_batch || Instant::now() >= deadline {
+                if applies >= shared.cfg.max_batch {
+                    shared.transport.counter("batch_flush_size").inc();
                     break;
                 }
-                // Wait briefly for stragglers to fill the batch.
-                let wait = deadline.saturating_duration_since(Instant::now());
-                let (guard, timeout) = shared.cv.wait_timeout(q, wait).unwrap();
+                let now = Instant::now();
+                if now >= deadline {
+                    shared.transport.counter("batch_flush_deadline").inc();
+                    break;
+                }
+                // Hold the window open for stragglers. Every submit
+                // notifies the condvar, so new arrivals rescan at once;
+                // spurious wakes just re-check the deadline.
+                let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
                 q = guard;
-                if timeout.timed_out()
-                    && q.front()
-                        .map(|e| !coalescable(e, applies, shared.cfg.max_batch))
-                        .unwrap_or(true)
-                {
-                    break;
-                }
             }
             shared.metrics.gauge("queue_depth").set(q.len() as f64);
-            shared
-                .metrics
-                .gauge("batch_occupancy")
-                .set(applies as f64 / shared.cfg.max_batch as f64);
+            let fill = applies as f64 / shared.cfg.max_batch as f64;
+            shared.metrics.gauge("batch_occupancy").set(fill);
             shared.metrics.histogram("batch_applies").observe_ns(applies as u64);
+            shared
+                .transport
+                .counter("batch_fill_permille_sum")
+                .add((fill * 1000.0).round() as u64);
+            shared.transport.gauge("batch_fill_max").set_max(fill);
             return Some(batch);
         }
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -776,7 +828,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
             // Defensive: submit_to validates names, so this only triggers
             // if a test enqueues raw envelopes.
             for env in batch {
-                let _ = env.reply.send(Err(e.clone()));
+                env.reply.send(Err(e.clone()));
             }
             return;
         }
@@ -789,7 +841,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         complete(shared, entry, result.is_err());
         shared.metrics.histogram("request_latency").observe(t0);
         entry.metrics.histogram("request_latency").observe(t0);
-        let _ = env.reply.send(result);
+        env.reply.send(result);
         return;
     }
 
@@ -840,7 +892,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
             complete(shared, entry, result.is_err());
             shared.metrics.histogram("request_latency").observe(t_req);
             entry.metrics.histogram("request_latency").observe(t_req);
-            let _ = env.reply.send(result);
+            env.reply.send(result);
         }
         shared.metrics.histogram("batch_latency").observe(t0);
         entry.metrics.histogram("batch_latency").observe(t0);
@@ -929,7 +981,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                     }
                 };
                 complete(shared, entry, result.is_err());
-                let _ = env.reply.send(result);
+                env.reply.send(result);
             }
         }
         Err(e) => {
@@ -949,7 +1001,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                     Some(_) => e.clone(),
                 };
                 complete(shared, entry, true);
-                let _ = env.reply.send(Err(err));
+                env.reply.send(Err(err));
             }
         }
     }

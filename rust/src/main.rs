@@ -114,7 +114,10 @@ fn print_help() {
         FlagSpec { name: "chart", help: "paper_log | identity | log(...) | power(...)", default: None, is_switch: false },
         FlagSpec { name: "config", help: "JSON config file", default: None, is_switch: false },
         FlagSpec { name: "workers", help: "coordinator worker threads", default: Some("2"), is_switch: false },
-        FlagSpec { name: "max-batch", help: "max applies per batch", default: Some("8"), is_switch: false },
+        FlagSpec { name: "batch-max", help: "micro-batch size flush threshold (alias: --max-batch)", default: Some("8"), is_switch: false },
+        FlagSpec { name: "batch-window-us", help: "micro-batch window past first arrival, µs (alias: --max-wait-us)", default: Some("200"), is_switch: false },
+        FlagSpec { name: "io-mode", help: "socket host: event (epoll readiness loop) | threads (legacy pair)", default: Some("event"), is_switch: false },
+        FlagSpec { name: "io-poll-ms", help: "blocking-reader poll granularity (threads mode + stdio)", default: Some("25"), is_switch: false },
         FlagSpec { name: "apply-threads", help: "threads per batched √K apply (0 = all cores)", default: Some("1"), is_switch: false },
         FlagSpec { name: "seed", help: "RNG seed", default: None, is_switch: false },
         FlagSpec { name: "count", help: "samples to draw", default: Some("1"), is_switch: false },
@@ -289,12 +292,14 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
     net::install_sigint_handler();
     let server = NetServer::bind(cfg, coord.clone())?;
     eprintln!(
-        "{} | serve: listening on {} | models [{}] | workers {} | max_batch {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {}",
+        "{} | serve: listening on {} | io_mode {} | models [{}] | workers {} | batch_max {} | batch_window_us {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {}",
         protocol_line(),
         server.local_addr(),
+        cfg.io_mode.name(),
         model_banner(&coord),
         cfg.workers,
         cfg.max_batch,
+        cfg.max_wait_us,
         icr::parallel::resolve_threads(cfg.apply_threads),
         cfg.max_connections,
         cfg.queue_limit,

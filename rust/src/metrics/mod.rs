@@ -57,6 +57,20 @@ impl Gauge {
     pub fn dec(&self) {
         self.add(-1.0);
     }
+
+    /// Atomically raise the gauge to `v` if `v` exceeds the current
+    /// value (CAS loop over the f64 bits) — for high-water marks like
+    /// buffer peaks, where concurrent observers race to record maxima
+    /// and last-write-wins `set` would regress the mark.
+    pub fn set_max(&self, v: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            if v > f64::from_bits(bits) {
+                Some(v.to_bits())
+            } else {
+                None
+            }
+        });
+    }
 }
 
 /// Log-scaled latency histogram (nanoseconds → ~2x buckets) plus exact
@@ -269,6 +283,30 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(g.get(), 4.0);
+    }
+
+    #[test]
+    fn gauge_set_max_keeps_high_water_mark() {
+        let r = Registry::new();
+        let g = r.gauge("write_buf_hwm_bytes");
+        g.set_max(8.0);
+        g.set_max(3.0);
+        assert_eq!(g.get(), 8.0);
+        g.set_max(21.0);
+        assert_eq!(g.get(), 21.0);
+        let mut handles = Vec::new();
+        for base in 0..4u32 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u32 {
+                    g.set_max(f64::from(base * 1000 + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), 3999.0);
     }
 
     #[test]

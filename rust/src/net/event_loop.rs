@@ -1,0 +1,556 @@
+//! Event-driven serving core (`DESIGN.md` §11): one thread owns every
+//! connection socket behind an epoll/poll readiness loop.
+//!
+//! Where the legacy [`super::session`] host spends two OS threads per
+//! connection (reader + writer, each waking every `--io-poll-ms` even
+//! when idle), this loop registers every accepted socket non-blocking
+//! with the [`super::poller`] and sleeps until something is actually
+//! ready — so thousands of idle connections cost zero wakeups and two
+//! `ConnState` buffers each, not two stacks.
+//!
+//! Per readiness cycle the loop: accepts pending connections (refusing
+//! over-cap ones with the same typed `overloaded` frame as the threaded
+//! host), frames complete JSONL lines out of per-connection read
+//! buffers and submits them to the coordinator with a [`ReplySlot`]
+//! sink, drains the completion queue those sinks feed (each completion
+//! wakes the loop through the self-pipe [`super::poller::Waker`]), and
+//! flushes per-connection write buffers as sockets accept bytes.
+//!
+//! The wire contracts are identical to the threaded host, asserted by
+//! `net_e2e.rs` running both modes:
+//!
+//! - **In-order demux.** Every parsed frame takes the connection's next
+//!   sequence number; replies are encoded strictly from the front of
+//!   the per-connection pending queue, so a client sees responses in
+//!   submission order no matter how the batcher reorders execution.
+//!   Parse-time errors occupy a sequence slot with a pre-set result —
+//!   serialized behind earlier replies exactly like `Outgoing::Ready`.
+//! - **Backpressure.** Coordinator queue overflow completes inline with
+//!   a typed `overloaded` error (via the sink, in order). A peer that
+//!   stops draining its replies grows its write buffer to a high-water
+//!   mark, after which the loop pauses *reading* that connection —
+//!   bounded memory per slow client, with TCP pushing back upstream.
+//! - **Idle timeout.** A timeout wheel (deadline-ordered map) arms one
+//!   deadline per connection; firing closes quiet connections with
+//!   nothing in flight and lazily re-arms busy ones. No per-connection
+//!   poll loops.
+//! - **Graceful drain.** On shutdown/SIGINT the loop stops accepting
+//!   and reading, answers everything already submitted, flushes every
+//!   write buffer, then hangs up and returns.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{protocol, Coordinator, ReplySlot, Response};
+use crate::error::IcrError;
+use crate::metrics::Registry;
+
+use super::poller::{PollEvent, Poller, Waker};
+use super::transport::{refuse, sigint_requested, NetServer};
+
+/// Token of the listening socket.
+const LISTENER: u64 = 0;
+/// Token of the waker pipe's read end.
+const WAKER: u64 = 1;
+/// First connection token; monotonically increasing, never reused, so
+/// a stale completion can never be delivered to a recycled connection.
+const FIRST_CONN: u64 = 2;
+
+/// Per-readiness-visit read budget. Level-triggered polling re-arms
+/// immediately, so capping the bytes taken per visit bounds how long
+/// one firehose connection can starve the rest of the loop.
+const READ_BUDGET: usize = 256 * 1024;
+
+/// Buffered-reply bytes above which a connection's reads are paused
+/// (the peer is not draining); reads resume below the low-water mark.
+const WRITE_HIGH_WATER: usize = 1 << 20;
+const WRITE_LOW_WATER: usize = WRITE_HIGH_WATER / 2;
+
+/// Upper bound on the poll timeout so the drain flag is observed
+/// promptly even with no traffic and no idle deadlines due.
+const POLL_CAP: Duration = Duration::from_millis(25);
+
+/// What a [`ReplySlot`] sink delivers back to the loop: connection
+/// token, per-connection sequence number, and the result.
+type Completion = (u64, u64, Result<Response, IcrError>);
+
+/// One submitted frame awaiting its reply, in submission order.
+struct PendingReply {
+    version: u64,
+    id: u64,
+    /// `None` for parse-time error frames (encoded without a model
+    /// tag, like the threaded host's `Outgoing::Ready`).
+    model: Option<String>,
+    /// Filled by a completion; the front of the queue flushes once set.
+    result: Option<Result<Response, IcrError>>,
+}
+
+/// Per-connection state: the non-blocking socket plus its framing and
+/// demux buffers.
+struct ConnState {
+    conn: super::transport::Conn,
+    /// Partial-frame bytes awaiting a newline.
+    rbuf: Vec<u8>,
+    /// Encoded reply bytes the socket has not accepted yet.
+    wbuf: Vec<u8>,
+    /// Consumed prefix of `wbuf` (compacted once fully written).
+    wpos: usize,
+    /// Submitted frames in order; sequence numbers are contiguous, so
+    /// a completion for `seq` lives at index `seq - front_seq`.
+    pending: VecDeque<PendingReply>,
+    /// Sequence number the next submitted frame will take.
+    next_seq: u64,
+    /// Sequence number of `pending.front()`.
+    front_seq: u64,
+    /// Last client activity (bytes received count, like the threaded
+    /// reader's partial-frame rule).
+    last_active: Instant,
+    /// Armed idle-wheel deadline, if any (the wheel key is
+    /// `(deadline, token)`).
+    idle_at: Option<Instant>,
+    /// EOF seen, peer dead, or server draining: stop reading; the
+    /// connection closes once `pending` and `wbuf` are empty.
+    closing: bool,
+    /// Reads paused by write-buffer high water.
+    read_paused: bool,
+    /// Current poller interest (cached to skip redundant syscalls).
+    want_read: bool,
+    want_write: bool,
+}
+
+impl ConnState {
+    fn buffered_out(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    fn finished(&self) -> bool {
+        self.closing && self.pending.is_empty() && self.buffered_out() == 0
+    }
+}
+
+/// Run the readiness loop until a drain completes. Consumes the server;
+/// the coordinator is left running (the caller owns its shutdown).
+pub(crate) fn run(server: NetServer) -> Result<()> {
+    let transport = server.coord.transport_metrics().clone();
+    let coord = server.coord.clone();
+    let mut poller = Poller::new().context("creating readiness poller")?;
+    let waker = Arc::new(Waker::new().context("creating event-loop waker")?);
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+    poller
+        .register(server.listener.as_raw_fd(), LISTENER, true, false)
+        .context("registering listener")?;
+    poller
+        .register(waker.read_fd(), WAKER, true, false)
+        .context("registering waker")?;
+    transport.gauge("event_loop").set(1.0);
+    transport.gauge("fds_registered").set(2.0);
+
+    let mut conns: HashMap<u64, ConnState> = HashMap::new();
+    let mut idle: BTreeMap<(Instant, u64), ()> = BTreeMap::new();
+    let mut next_token: u64 = FIRST_CONN;
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut dirty: Vec<u64> = Vec::new();
+    let mut draining = false;
+
+    loop {
+        // Enter drain mode once: stop reading everywhere; what was
+        // already submitted still completes and flushes below.
+        if !draining && (server.shutdown.load(Ordering::SeqCst) || sigint_requested()) {
+            draining = true;
+            for (&token, c) in conns.iter_mut() {
+                c.closing = true;
+                dirty.push(token);
+            }
+        }
+        if draining && conns.is_empty() {
+            break;
+        }
+
+        // Sleep until readiness, the next idle deadline, or the cap.
+        let mut timeout = POLL_CAP;
+        if let Some((&(deadline, _), _)) = idle.iter().next() {
+            let now = Instant::now();
+            timeout = timeout.min(deadline.saturating_duration_since(now));
+        }
+        poller.wait(Some(timeout), &mut events).context("polling readiness")?;
+        transport.counter("event_wakeups").inc();
+
+        for ev in &events {
+            match ev.token {
+                LISTENER => {
+                    accept_ready(
+                        &server,
+                        &mut poller,
+                        &mut conns,
+                        &mut idle,
+                        &mut next_token,
+                        &transport,
+                        draining,
+                    )?;
+                }
+                WAKER => waker.drain(),
+                token => {
+                    if let Some(c) = conns.get_mut(&token) {
+                        if ev.readable {
+                            read_ready(c, token, &coord, &transport, &done_tx, &waker);
+                        }
+                        dirty.push(token);
+                    }
+                }
+            }
+        }
+
+        // Deliver completed results into their demux slots. Sequence
+        // numbers are contiguous per connection, so the slot index is a
+        // subtraction; completions for already-dropped connections (or
+        // already-cleared queues) fall through harmlessly.
+        while let Ok((token, seq, result)) = done_rx.try_recv() {
+            if let Some(c) = conns.get_mut(&token) {
+                if let Some(slot) = seq
+                    .checked_sub(c.front_seq)
+                    .and_then(|i| c.pending.get_mut(i as usize))
+                {
+                    if slot.result.is_none() {
+                        slot.result = Some(result);
+                    }
+                }
+                dirty.push(token);
+            }
+        }
+
+        // Flush every connection something happened to this cycle.
+        dirty.sort_unstable();
+        dirty.dedup();
+        for token in dirty.drain(..) {
+            let mut done = false;
+            if let Some(c) = conns.get_mut(&token) {
+                flush_conn(c, &transport);
+                done = c.finished();
+                if !done {
+                    let buffered = c.buffered_out();
+                    if c.read_paused && buffered <= WRITE_LOW_WATER {
+                        c.read_paused = false;
+                    } else if !c.read_paused && buffered >= WRITE_HIGH_WATER {
+                        c.read_paused = true;
+                    }
+                    update_interest(&mut poller, c, token);
+                }
+            }
+            if done {
+                close_conn(&mut poller, &mut conns, &mut idle, &transport, token);
+            }
+        }
+
+        // Fire due idle deadlines: close quiet connections, lazily
+        // re-arm active or busy ones from their last activity.
+        if !server.idle_timeout.is_zero() {
+            let now = Instant::now();
+            while let Some((&(deadline, token), _)) = idle.iter().next() {
+                if deadline > now {
+                    break;
+                }
+                idle.remove(&(deadline, token));
+                let mut close_idle = false;
+                if let Some(c) = conns.get_mut(&token) {
+                    c.idle_at = None;
+                    let quiet = !c.closing
+                        && c.pending.is_empty()
+                        && c.buffered_out() == 0
+                        && c.rbuf.is_empty();
+                    if quiet && now.duration_since(c.last_active) >= server.idle_timeout {
+                        transport.counter("connections_idle_closed").inc();
+                        close_idle = true;
+                    } else {
+                        arm_idle(&mut idle, c, token, server.idle_timeout);
+                    }
+                }
+                if close_idle {
+                    close_conn(&mut poller, &mut conns, &mut idle, &transport, token);
+                }
+            }
+        }
+    }
+
+    transport.gauge("event_loop").set(0.0);
+    if let Some(path) = &server.unix_path {
+        std::fs::remove_file(path).ok();
+    }
+    Ok(())
+}
+
+/// Accept until the listener would block. Over-cap (or draining)
+/// connections are refused with the typed `overloaded` frame and
+/// closed, mirroring the threaded accept loop.
+fn accept_ready(
+    server: &NetServer,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, ConnState>,
+    idle: &mut BTreeMap<(Instant, u64), ()>,
+    next_token: &mut u64,
+    transport: &Registry,
+    draining: bool,
+) -> Result<()> {
+    loop {
+        match server.listener.accept(false) {
+            Ok(conn) => {
+                transport.counter("connections_total").inc();
+                if draining || conns.len() >= server.max_connections {
+                    transport.counter("connections_rejected").inc();
+                    refuse(conn, conns.len(), server.max_connections);
+                    continue;
+                }
+                let token = *next_token;
+                *next_token += 1;
+                let fd = conn.as_raw_fd();
+                let mut c = ConnState {
+                    conn,
+                    rbuf: Vec::new(),
+                    wbuf: Vec::new(),
+                    wpos: 0,
+                    pending: VecDeque::new(),
+                    next_seq: 0,
+                    front_seq: 0,
+                    last_active: Instant::now(),
+                    idle_at: None,
+                    closing: false,
+                    read_paused: false,
+                    want_read: true,
+                    want_write: false,
+                };
+                poller.register(fd, token, true, false).context("registering connection")?;
+                if !server.idle_timeout.is_zero() {
+                    arm_idle(idle, &mut c, token, server.idle_timeout);
+                }
+                conns.insert(token, c);
+                transport.gauge("connections_open").inc();
+                transport.gauge("fds_registered").inc();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("accepting connection"),
+        }
+    }
+    Ok(())
+}
+
+/// Arm (or re-arm) a connection's idle deadline. Deadlines in the past
+/// — a connection that has been busy past its window — re-arm a full
+/// window out; the firing check against `last_active` still closes it
+/// as soon as a fired deadline finds it quiet.
+fn arm_idle(
+    idle: &mut BTreeMap<(Instant, u64), ()>,
+    c: &mut ConnState,
+    token: u64,
+    timeout: Duration,
+) {
+    if let Some(at) = c.idle_at.take() {
+        idle.remove(&(at, token));
+    }
+    let now = Instant::now();
+    let mut deadline = c.last_active + timeout;
+    if deadline <= now {
+        deadline = now + timeout;
+    }
+    idle.insert((deadline, token), ());
+    c.idle_at = Some(deadline);
+}
+
+/// Read until the socket would block (or the per-visit budget is
+/// spent), then frame and submit every complete line. EOF and read
+/// errors mark the connection closing; buffered replies still flush.
+fn read_ready(
+    c: &mut ConnState,
+    token: u64,
+    coord: &Arc<Coordinator>,
+    transport: &Registry,
+    done_tx: &mpsc::Sender<Completion>,
+    waker: &Arc<Waker>,
+) {
+    if c.closing || c.read_paused {
+        return;
+    }
+    let mut buf = [0u8; 8192];
+    let mut total = 0usize;
+    let mut eof = false;
+    loop {
+        match c.conn.read(&mut buf) {
+            Ok(0) => {
+                eof = true;
+                break;
+            }
+            Ok(n) => {
+                c.last_active = Instant::now();
+                c.rbuf.extend_from_slice(&buf[..n]);
+                total += n;
+                if total >= READ_BUDGET {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                eof = true;
+                break;
+            }
+        }
+    }
+    transport.gauge("read_buf_hwm_bytes").set_max(c.rbuf.len() as f64);
+    // Frame complete lines; on EOF a trailing unterminated line still
+    // counts as a frame (same as the threaded `LineReader`).
+    while let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') {
+        let rest = c.rbuf.split_off(pos + 1);
+        let mut line = std::mem::replace(&mut c.rbuf, rest);
+        line.pop();
+        submit_line(c, line, token, coord, transport, done_tx, waker);
+    }
+    if eof {
+        if !c.rbuf.is_empty() {
+            let line = std::mem::take(&mut c.rbuf);
+            submit_line(c, line, token, coord, transport, done_tx, waker);
+        }
+        c.closing = true;
+    }
+}
+
+/// Parse one framed line and submit it, appending its demux slot to the
+/// connection's pending queue. Empty lines are skipped without taking a
+/// sequence number; malformed lines take one with a pre-set error.
+fn submit_line(
+    c: &mut ConnState,
+    mut line: Vec<u8>,
+    token: u64,
+    coord: &Arc<Coordinator>,
+    transport: &Registry,
+    done_tx: &mpsc::Sender<Completion>,
+    waker: &Arc<Waker>,
+) {
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    let line = String::from_utf8_lossy(&line).into_owned();
+    if line.trim().is_empty() {
+        return;
+    }
+    transport.counter("frames_in").inc();
+    match protocol::parse_request(&line) {
+        Ok(frame) => {
+            let seq = c.next_seq;
+            c.next_seq += 1;
+            let model = frame.model.clone().unwrap_or_else(|| coord.default_model().to_string());
+            let tx = done_tx.clone();
+            let wk = waker.clone();
+            let slot = ReplySlot::sink(move |result| {
+                // A dropped receiver means the loop already exited (the
+                // connection's replies can no longer be delivered).
+                let _ = tx.send((token, seq, result));
+                wk.wake();
+            });
+            // Inline fast paths (cache hit, unknown model, overload)
+            // complete through the sink before this returns; the demux
+            // entry is pushed first so the completion finds its slot.
+            c.pending.push_back(PendingReply {
+                version: frame.version,
+                id: 0, // patched below once the request id is known
+                model: Some(model),
+                result: None,
+            });
+            let id = coord.submit_sink(frame.model.as_deref(), frame.request, slot);
+            let entry = c.pending.back_mut().expect("just pushed");
+            entry.id = frame.client_id.unwrap_or(id);
+        }
+        Err(e) => {
+            c.next_seq += 1;
+            let (version, id) = protocol::frame_error_context(&line);
+            c.pending.push_back(PendingReply {
+                version,
+                id: id.unwrap_or(0),
+                model: None,
+                result: Some(Err(e)),
+            });
+        }
+    }
+}
+
+/// Encode completed head-of-line replies into the write buffer and push
+/// bytes until the socket would block. A dead peer drops the
+/// connection's undelivered replies, like the threaded writer hanging
+/// up on a write error.
+fn flush_conn(c: &mut ConnState, transport: &Registry) {
+    while c.pending.front().is_some_and(|p| p.result.is_some()) {
+        let p = c.pending.pop_front().expect("front checked");
+        c.front_seq = c.front_seq.wrapping_add(1);
+        let PendingReply { version, id, model, result } = p;
+        let result = result.expect("front checked complete");
+        let frame = protocol::encode_response(version, id, model.as_deref(), &result);
+        // Counted before the write so the counter is current by the
+        // time a client observes the reply (same as the threaded host).
+        transport.counter("frames_out").inc();
+        c.wbuf.extend_from_slice(frame.to_json().as_bytes());
+        c.wbuf.push(b'\n');
+    }
+    transport.gauge("write_buf_hwm_bytes").set_max(c.buffered_out() as f64);
+    while c.wpos < c.wbuf.len() {
+        match c.conn.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.closing = true;
+                c.pending.clear();
+                c.wbuf.clear();
+                c.wpos = 0;
+                return;
+            }
+            Ok(n) => c.wpos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                c.closing = true;
+                c.pending.clear();
+                c.wbuf.clear();
+                c.wpos = 0;
+                return;
+            }
+        }
+    }
+    if c.wpos == c.wbuf.len() && c.wpos > 0 {
+        c.wbuf.clear();
+        c.wpos = 0;
+    }
+}
+
+/// Reconcile the poller's interest set with what the connection needs
+/// now: readable unless closing/paused, writable only while reply bytes
+/// are buffered.
+fn update_interest(poller: &mut Poller, c: &mut ConnState, token: u64) {
+    let want_read = !c.closing && !c.read_paused;
+    let want_write = c.buffered_out() > 0;
+    if want_read != c.want_read || want_write != c.want_write {
+        c.want_read = want_read;
+        c.want_write = want_write;
+        let _ = poller.modify(c.conn.as_raw_fd(), token, want_read, want_write);
+    }
+}
+
+/// Remove a connection: poller deregistration, idle-wheel entry, open
+/// gauges. Dropping the socket closes it (flushing nothing further).
+fn close_conn(
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, ConnState>,
+    idle: &mut BTreeMap<(Instant, u64), ()>,
+    transport: &Registry,
+    token: u64,
+) {
+    if let Some(c) = conns.remove(&token) {
+        poller.deregister(c.conn.as_raw_fd());
+        if let Some(at) = c.idle_at {
+            idle.remove(&(at, token));
+        }
+        transport.gauge("connections_open").dec();
+        transport.gauge("fds_registered").dec();
+    }
+}

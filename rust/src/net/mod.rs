@@ -10,20 +10,34 @@
 //!   v1/v2 unchanged over the socket, with a `--max-connections` cap and
 //!   graceful shutdown (SIGINT drains in-flight requests, refuses new
 //!   ones).
-//! - **[`session`]** — one session per connection: a reader thread parses
-//!   frames and submits them into the coordinator's shared batcher (so
-//!   requests from *different* connections coalesce into the same panel
-//!   batches), a writer thread demultiplexes replies back in submission
-//!   order. Queue-full backpressure answers with a typed v2 `overloaded`
-//!   error frame; idle connections time out.
+//! - **[`event_loop`]** — the default connection host (`--io-mode event`,
+//!   `DESIGN.md` §11): ONE thread owns every accepted socket behind an
+//!   epoll/poll readiness loop ([`poller`]), framing JSONL lines from
+//!   per-connection read buffers, submitting into the coordinator's
+//!   shared batcher, and draining per-connection write buffers on
+//!   writability — so `icr serve` holds thousands of mostly-idle
+//!   connections without per-connection threads or poll wakeups.
+//! - **[`session`]** — the legacy `--io-mode threads` host kept for A/B
+//!   benchmarking: one reader + one writer thread per connection, the
+//!   reader submitting frames into the same shared batcher (so requests
+//!   from *different* connections coalesce into the same panel batches),
+//!   the writer demultiplexing replies back in submission order. Both
+//!   hosts share the contracts: queue-full backpressure answers with a
+//!   typed v2 `overloaded` error frame in submission order, and idle
+//!   connections time out.
 //! - **[`router`]** — replica sets over the model registry
 //!   (`--replicas gp=native:3` builds N identical entries sharing one
 //!   [`crate::parallel::WorkerPool`]) with pluggable routing policies
 //!   ([`RoutePolicy`]: round-robin, least-outstanding, seed-affinity).
 //!
-//! The wire protocol is byte-identical across transports; `stdio` remains
-//! the default and is served by the inline loop in `main.rs`.
+//! The wire protocol is byte-identical across transports *and* io modes;
+//! `stdio` remains the default and is served by the inline loop in
+//! `main.rs`.
 
+#[cfg(unix)]
+pub mod event_loop;
+#[cfg(unix)]
+pub(crate) mod poller;
 pub mod router;
 pub mod session;
 pub mod transport;
@@ -37,6 +51,39 @@ use std::path::PathBuf;
 /// Transports `icr serve --listen` can bind (advertised by
 /// `icr --version` and the `stats` document).
 pub const TRANSPORTS: [&str; 3] = ["stdio", "tcp", "unix"];
+
+/// How `icr serve` hosts socket connections (`--io-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoMode {
+    /// One epoll/poll readiness loop owns every connection
+    /// (`DESIGN.md` §11) — the default on unix.
+    #[default]
+    Event,
+    /// Legacy two-threads-per-connection sessions (`DESIGN.md` §8),
+    /// kept as the `connections_scaling` bench baseline and as the
+    /// fallback where no poller exists. Stdio always serves blocking,
+    /// regardless of this mode.
+    Threads,
+}
+
+impl IoMode {
+    /// Parse `event` | `threads`.
+    pub fn parse(s: &str) -> Result<IoMode, String> {
+        match s {
+            "event" => Ok(IoMode::Event),
+            "threads" => Ok(IoMode::Threads),
+            _ => Err(format!("io mode {s:?} must be event | threads")),
+        }
+    }
+
+    /// Canonical flag spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::Event => "event",
+            IoMode::Threads => "threads",
+        }
+    }
+}
 
 /// Where `icr serve` listens for clients.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -120,5 +167,16 @@ mod tests {
     #[test]
     fn transports_are_advertised_in_order() {
         assert_eq!(TRANSPORTS, ["stdio", "tcp", "unix"]);
+    }
+
+    #[test]
+    fn io_mode_parse_roundtrip() {
+        assert_eq!(IoMode::parse("event").unwrap(), IoMode::Event);
+        assert_eq!(IoMode::parse("threads").unwrap(), IoMode::Threads);
+        for mode in [IoMode::Event, IoMode::Threads] {
+            assert_eq!(IoMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert_eq!(IoMode::default(), IoMode::Event);
+        assert!(IoMode::parse("fibers").is_err());
     }
 }

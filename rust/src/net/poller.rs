@@ -1,0 +1,437 @@
+//! Readiness polling substrate for the event-driven serving core
+//! (`DESIGN.md` §11): a thin wrapper over `epoll(7)` on Linux with a
+//! portable `poll(2)` fallback on other unix platforms, plus a
+//! self-pipe [`Waker`] so coordinator worker threads can interrupt a
+//! blocked wait the instant a reply completes.
+//!
+//! The libc symbols are declared locally — the same technique as the
+//! SIGINT handler in `net/transport.rs` — so the crate keeps its
+//! zero-dependency footprint. Both backends are level-triggered: an
+//! event repeats every wait until the socket is drained, which lets the
+//! event loop cap per-wakeup work (read budgets) without losing data.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// One readiness report: the token the fd was registered under plus
+/// which directions are ready. Error/hangup conditions surface as
+/// readable-and-writable so the owner discovers them on its next
+/// read/write attempt, keeping one error path.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Clamp a wait timeout to whole milliseconds for the syscall, rounding
+/// sub-millisecond waits *up* so a short batching window never spins.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis().min(i32::MAX as u128) as i32;
+            if ms == 0 && !d.is_zero() {
+                1
+            } else {
+                ms
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::*;
+
+    // Mirrors the kernel's `struct epoll_event`; x86_64 declares it
+    // packed (a 32-bit mask followed by an unaligned 64-bit payload).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// Level-triggered `epoll` instance. Registration state lives in the
+    /// kernel, so `wait` stays O(ready), not O(registered) — the property
+    /// that lets one thread hold thousands of mostly-idle connections.
+    pub(crate) struct Poller {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub(crate) fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn ctl(
+            &mut self,
+            op: i32,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: if read { EPOLLIN } else { 0 } | if write { EPOLLOUT } else { 0 },
+                data: token,
+            };
+            if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub(crate) fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+        }
+
+        pub(crate) fn modify(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+        }
+
+        pub(crate) fn deregister(&mut self, fd: RawFd) {
+            // Best effort; a closed fd is already gone from the set.
+            let _ = self.ctl(EPOLL_CTL_DEL, fd, 0, false, false);
+        }
+
+        pub(crate) fn wait(
+            &mut self,
+            timeout: Option<Duration>,
+            out: &mut Vec<PollEvent>,
+        ) -> io::Result<()> {
+            out.clear();
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as i32,
+                    timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in self.buf.iter().take(n as usize) {
+                // Copy out of the (possibly packed) kernel buffer before
+                // touching fields — no references into packed storage.
+                let ev = *ev;
+                let mask = ev.events;
+                let err = mask & (EPOLLERR | EPOLLHUP) != 0;
+                out.push(PollEvent {
+                    token: ev.data,
+                    readable: mask & EPOLLIN != 0 || err,
+                    writable: mask & EPOLLOUT != 0 || err,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::*;
+
+    // Mirrors `struct pollfd`; the constants below are the POSIX values
+    // shared by the BSDs and macOS.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    extern "C" {
+        // `nfds_t` is `c_ulong`, which matches `usize` on every unix
+        // target this crate builds for (LP64 and ILP32 alike).
+        fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
+    }
+
+    /// Portable `poll(2)` fallback: interest is kept in user space and
+    /// re-submitted each wait. O(registered) per wakeup, but correct on
+    /// every unix — Linux builds use the epoll backend above.
+    pub(crate) struct Poller {
+        fds: Vec<PollFd>,
+        tokens: Vec<u64>,
+    }
+
+    impl Poller {
+        pub(crate) fn new() -> io::Result<Poller> {
+            Ok(Poller { fds: Vec::new(), tokens: Vec::new() })
+        }
+
+        fn events_mask(read: bool, write: bool) -> i16 {
+            (if read { POLLIN } else { 0 }) | (if write { POLLOUT } else { 0 })
+        }
+
+        pub(crate) fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.fds.push(PollFd { fd, events: Self::events_mask(read, write), revents: 0 });
+            self.tokens.push(token);
+            Ok(())
+        }
+
+        pub(crate) fn modify(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            match self.fds.iter().position(|p| p.fd == fd) {
+                Some(i) => {
+                    self.fds[i].events = Self::events_mask(read, write);
+                    self.tokens[i] = token;
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub(crate) fn deregister(&mut self, fd: RawFd) {
+            if let Some(i) = self.fds.iter().position(|p| p.fd == fd) {
+                self.fds.swap_remove(i);
+                self.tokens.swap_remove(i);
+            }
+        }
+
+        pub(crate) fn wait(
+            &mut self,
+            timeout: Option<Duration>,
+            out: &mut Vec<PollEvent>,
+        ) -> io::Result<()> {
+            out.clear();
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len(), timeout_ms(timeout)) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (i, p) in self.fds.iter().enumerate() {
+                let mask = p.revents;
+                if mask == 0 {
+                    continue;
+                }
+                let err = mask & (POLLERR | POLLHUP) != 0;
+                out.push(PollEvent {
+                    token: self.tokens[i],
+                    readable: mask & POLLIN != 0 || err,
+                    writable: mask & POLLOUT != 0 || err,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+pub(crate) use sys::Poller;
+
+extern "C" {
+    fn pipe(fds: *mut i32) -> i32;
+    fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+const F_SETFL: i32 = 4;
+#[cfg(target_os = "linux")]
+const O_NONBLOCK: i32 = 0o4000;
+#[cfg(not(target_os = "linux"))]
+const O_NONBLOCK: i32 = 0x4;
+
+/// Self-pipe waker: the event loop registers [`Waker::read_fd`] for
+/// readability; any thread calls [`Waker::wake`] to make a blocked
+/// `Poller::wait` return. Writes beyond the pipe buffer hit `EAGAIN`
+/// and are dropped — one pending byte is already a wake-up.
+pub(crate) struct Waker {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl Waker {
+    pub(crate) fn new() -> io::Result<Waker> {
+        let mut fds = [0i32; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        for fd in fds {
+            // Fresh pipe fds carry no other status flags, so a plain
+            // F_SETFL to O_NONBLOCK is lossless.
+            if unsafe { fcntl(fd, F_SETFL, O_NONBLOCK) } < 0 {
+                let e = io::Error::last_os_error();
+                unsafe {
+                    close(fds[0]);
+                    close(fds[1]);
+                }
+                return Err(e);
+            }
+        }
+        Ok(Waker { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    pub(crate) fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Interrupt a blocked `wait` (callable from any thread).
+    pub(crate) fn wake(&self) {
+        let buf = [1u8];
+        unsafe {
+            write(self.write_fd, buf.as_ptr(), 1);
+        }
+    }
+
+    /// Swallow accumulated wake bytes once the loop is awake.
+    pub(crate) fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn waker_wakes_a_blocked_wait() {
+        let mut poller = Poller::new().expect("poller");
+        let waker = Waker::new().expect("waker");
+        poller.register(waker.read_fd(), 7, true, false).expect("register");
+        let mut events = Vec::new();
+
+        // Nothing pending: a short wait times out with no events.
+        poller.wait(Some(Duration::from_millis(5)), &mut events).expect("wait");
+        assert!(events.is_empty());
+
+        waker.wake();
+        poller.wait(Some(Duration::from_millis(1000)), &mut events).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        // Drained, the pipe goes quiet again (level-triggered check).
+        waker.drain();
+        poller.wait(Some(Duration::from_millis(5)), &mut events).expect("wait");
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_changes() {
+        let (mut a, b) = UnixStream::pair().expect("socketpair");
+        b.set_nonblocking(true).expect("nonblocking");
+        let mut poller = Poller::new().expect("poller");
+        poller.register(b.as_raw_fd(), 42, true, false).expect("register");
+        let mut events = Vec::new();
+
+        a.write_all(b"hello\n").expect("write");
+        poller.wait(Some(Duration::from_millis(1000)), &mut events).expect("wait");
+        assert!(events.iter().any(|e| e.token == 42 && e.readable));
+
+        // Read interest off, write interest on: an idle healthy socket
+        // reports writable immediately and stops reporting the unread
+        // bytes.
+        poller.modify(b.as_raw_fd(), 42, false, true).expect("modify");
+        poller.wait(Some(Duration::from_millis(1000)), &mut events).expect("wait");
+        assert!(events.iter().any(|e| e.token == 42 && e.writable));
+        assert!(events.iter().all(|e| e.token != 42 || !e.readable));
+
+        // Deregistered fds never fire.
+        poller.deregister(b.as_raw_fd());
+        poller.wait(Some(Duration::from_millis(5)), &mut events).expect("wait");
+        assert!(events.is_empty());
+
+        // Peer hangup surfaces as readiness on a registered fd, so the
+        // owner's next read observes EOF.
+        let (mut c, d) = UnixStream::pair().expect("socketpair");
+        d.set_nonblocking(true).expect("nonblocking");
+        poller.register(d.as_raw_fd(), 43, true, false).expect("register");
+        c.write_all(b"x").expect("write");
+        drop(c);
+        poller.wait(Some(Duration::from_millis(1000)), &mut events).expect("wait");
+        assert!(events.iter().any(|e| e.token == 43 && e.readable));
+        let mut d = d;
+        let mut buf = [0u8; 8];
+        assert_eq!(d.read(&mut buf).expect("read"), 1);
+        assert_eq!(d.read(&mut buf).expect("read eof"), 0);
+    }
+}

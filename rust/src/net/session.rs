@@ -1,5 +1,8 @@
 //! Per-connection session: JSONL framing over a socket, pipelined
-//! request submission, in-order reply demultiplexing.
+//! request submission, in-order reply demultiplexing. This is the
+//! legacy `--io-mode threads` host (the default is the event loop in
+//! [`super::event_loop`], `DESIGN.md` §11, which serves the identical
+//! wire contract without per-connection threads).
 //!
 //! Each connection gets two threads. The **reader** frames lines off the
 //! socket (preserving partial lines across read timeouts), parses them
@@ -30,16 +33,17 @@ use crate::metrics::Registry;
 
 use super::transport::{sigint_requested, Conn};
 
-/// Reader poll granularity: how often an idle reader re-checks the
-/// drain flag and the idle deadline.
-const READ_POLL: Duration = Duration::from_millis(25);
-
 /// Everything a session needs from the server.
 pub(crate) struct SessionCtx {
     pub coord: Arc<Coordinator>,
     pub shutdown: Arc<AtomicBool>,
     /// Zero disables the idle timeout.
     pub idle_timeout: Duration,
+    /// Reader poll granularity (`--io-poll-ms`): how often an idle
+    /// blocking reader re-checks the drain flag and the idle deadline.
+    /// Only the blocking paths poll — the event loop (`DESIGN.md` §11)
+    /// sleeps on readiness instead.
+    pub io_poll: Duration,
     pub transport: Registry,
     /// Server-wide open-connection count (decremented on session exit).
     pub open: Arc<AtomicUsize>,
@@ -104,7 +108,7 @@ fn reader_loop(
     outstanding: &AtomicUsize,
     peer_gone: &AtomicBool,
 ) {
-    let _ = conn.set_read_timeout(Some(READ_POLL));
+    let _ = conn.set_read_timeout(Some(ctx.io_poll));
     let mut lines = LineReader::new(conn);
     let mut last_active = Instant::now();
     let mut last_buffered = 0usize;

@@ -1,16 +1,22 @@
-//! Transport layer: socket listeners, the accept loop, graceful drain.
+//! Transport layer: socket listeners, connection hosting, graceful drain.
 //!
-//! [`NetServer`] owns a TCP or Unix-domain listener and hosts one
-//! [`super::session`] per accepted connection. The accept loop is
-//! non-blocking and polls a shutdown flag (set programmatically through
-//! [`NetServer::shutdown_handle`] or by the SIGINT handler installed via
-//! [`install_sigint_handler`]); once draining, no new connections are
-//! accepted, every live session finishes flushing its in-flight replies,
-//! and `run` returns. Connections beyond `--max-connections` are refused
-//! with a typed `overloaded` error frame before close.
+//! [`NetServer`] owns a TCP or Unix-domain listener and hosts accepted
+//! connections in one of two io modes ([`super::IoMode`]): the default
+//! event-driven readiness loop ([`super::event_loop`], `DESIGN.md` §11)
+//! where a single thread owns every socket, or the legacy
+//! thread-per-session accept loop here (`--io-mode threads`) spawning
+//! one [`super::session`] per connection. Both paths poll a shutdown
+//! flag (set programmatically through [`NetServer::shutdown_handle`] or
+//! by the SIGINT handler installed via [`install_sigint_handler`]); once
+//! draining, no new connections are accepted, every live connection
+//! finishes flushing its in-flight replies, and `run` returns.
+//! Connections beyond `--max-connections` are refused with a typed
+//! `overloaded` error frame before close.
 
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::io::{AsRawFd, RawFd};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
@@ -25,7 +31,7 @@ use crate::coordinator::{protocol, Coordinator};
 use crate::error::IcrError;
 
 use super::session::{self, SessionCtx};
-use super::ListenAddr;
+use super::{IoMode, ListenAddr};
 
 /// How often the accept loop re-checks the shutdown flag when idle.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
@@ -66,7 +72,7 @@ pub fn sigint_requested() -> bool {
 }
 
 /// The two socket listener families behind one accept surface.
-enum Listener {
+pub(crate) enum Listener {
     Tcp(TcpListener),
     #[cfg(unix)]
     Unix(UnixListener),
@@ -81,20 +87,34 @@ impl Listener {
         }
     }
 
-    fn accept(&self) -> io::Result<Conn> {
+    /// Accept one connection. Accepted sockets inherit the listener's
+    /// non-blocking flag on some platforms and not others, so the mode
+    /// the host needs is set explicitly: sessions block on reads
+    /// (`blocking`), the event loop never blocks (`!blocking`).
+    pub(crate) fn accept(&self, blocking: bool) -> io::Result<Conn> {
         match self {
             Listener::Tcp(l) => {
                 let (s, _) = l.accept()?;
-                s.set_nonblocking(false)?;
+                s.set_nonblocking(!blocking)?;
                 s.set_nodelay(true).ok();
                 Ok(Conn::Tcp(s))
             }
             #[cfg(unix)]
             Listener::Unix(l) => {
                 let (s, _) = l.accept()?;
-                s.set_nonblocking(false)?;
+                s.set_nonblocking(!blocking)?;
                 Ok(Conn::Unix(s))
             }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl AsRawFd for Listener {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            Listener::Unix(l) => l.as_raw_fd(),
         }
     }
 }
@@ -121,6 +141,16 @@ impl Conn {
             Conn::Tcp(s) => s.set_read_timeout(d),
             #[cfg(unix)]
             Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl AsRawFd for Conn {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Conn::Tcp(s) => s.as_raw_fd(),
+            Conn::Unix(s) => s.as_raw_fd(),
         }
     }
 }
@@ -157,13 +187,16 @@ impl Write for Conn {
 /// [`NetServer::bind`] (so clients can connect as soon as [`NetServer::run`]
 /// starts accepting), and `run` blocks until a drain completes.
 pub struct NetServer {
-    listener: Listener,
-    coord: Arc<Coordinator>,
-    max_connections: usize,
-    idle_timeout: Duration,
-    shutdown: Arc<AtomicBool>,
+    pub(crate) listener: Listener,
+    pub(crate) coord: Arc<Coordinator>,
+    pub(crate) max_connections: usize,
+    pub(crate) idle_timeout: Duration,
+    pub(crate) shutdown: Arc<AtomicBool>,
     local: String,
-    unix_path: Option<PathBuf>,
+    pub(crate) unix_path: Option<PathBuf>,
+    io_mode: IoMode,
+    /// Threads-mode reader poll granularity (`--io-poll-ms`).
+    io_poll: Duration,
 }
 
 impl NetServer {
@@ -214,6 +247,8 @@ impl NetServer {
             shutdown: Arc::new(AtomicBool::new(false)),
             local,
             unix_path,
+            io_mode: cfg.io_mode,
+            io_poll: Duration::from_millis(cfg.io_poll_ms.max(1)),
         })
     }
 
@@ -233,10 +268,21 @@ impl NetServer {
         self.shutdown.load(Ordering::SeqCst) || sigint_requested()
     }
 
-    /// Accept loop. Returns once a drain was requested (handle or SIGINT)
-    /// and every session has flushed its in-flight replies. The
-    /// coordinator is left running — the caller owns its shutdown.
+    /// Host connections until a drain is requested (handle or SIGINT)
+    /// and every connection has flushed its in-flight replies; then
+    /// return. The coordinator is left running — the caller owns its
+    /// shutdown. Dispatches on `--io-mode`: the event-driven readiness
+    /// loop (default) or the legacy thread-per-session accept loop.
     pub fn run(self) -> Result<()> {
+        #[cfg(unix)]
+        if self.io_mode == IoMode::Event {
+            return super::event_loop::run(self);
+        }
+        self.run_threads()
+    }
+
+    /// The legacy accept loop: two threads per connection.
+    fn run_threads(self) -> Result<()> {
         let transport = self.coord.transport_metrics().clone();
         let open = Arc::new(AtomicUsize::new(0));
         let mut sessions: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -245,7 +291,7 @@ impl NetServer {
             // Reap every iteration, not just when idle — sustained
             // connection churn must not grow the handle list unboundedly.
             sessions.retain(|h| !h.is_finished());
-            match self.listener.accept() {
+            match self.listener.accept(true) {
                 Ok(conn) => {
                     transport.counter("connections_total").inc();
                     if open.load(Ordering::SeqCst) >= self.max_connections {
@@ -260,6 +306,7 @@ impl NetServer {
                         coord: self.coord.clone(),
                         shutdown: self.shutdown.clone(),
                         idle_timeout: self.idle_timeout,
+                        io_poll: self.io_poll,
                         transport: transport.clone(),
                         open: open.clone(),
                     };
@@ -290,8 +337,10 @@ impl NetServer {
 }
 
 /// Answer an over-cap connection with one typed `overloaded` frame and
-/// hang up.
-fn refuse(mut conn: Conn, in_use: usize, limit: usize) {
+/// hang up. Best-effort on a non-blocking socket: the ~120-byte frame
+/// fits any fresh socket send buffer, and a peer that already vanished
+/// simply misses its refusal.
+pub(crate) fn refuse(mut conn: Conn, in_use: usize, limit: usize) {
     let err = IcrError::Overloaded { in_use, limit };
     let frame = protocol::encode_response(protocol::PROTOCOL_VERSION, 0, None, &Err(err));
     let _ = writeln!(conn, "{}", frame.to_json());

@@ -18,7 +18,7 @@ use icr::config::{ModelConfig, ReplicaSpec, ServerConfig};
 use icr::coordinator::{protocol, Coordinator, Response};
 use icr::error::IcrError;
 use icr::json::Value;
-use icr::net::{ListenAddr, NetServer, RoutePolicy};
+use icr::net::{IoMode, ListenAddr, NetServer, RoutePolicy};
 
 static SOCK_ID: AtomicUsize = AtomicUsize::new(0);
 
@@ -117,9 +117,47 @@ impl Client {
         self.reader.read_line(&mut line).map(|n| n == 0).unwrap_or(true)
     }
 
+    /// Next raw reply line without its terminator — for byte-identity
+    /// assertions across io modes and connection counts.
+    fn recv_line(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "unexpected EOF from server");
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        line
+    }
+
     fn rpc(&mut self, line: &str) -> Value {
         self.send(line);
         self.recv()
+    }
+}
+
+/// Raise the soft fd limit towards `want` (capped at the hard limit) so
+/// the high-connection smoke tests do not depend on the environment's
+/// default `ulimit -n`.
+fn raise_nofile_limit(want: u64) {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur < want {
+            let raised = RLimit { cur: want.min(r.max), max: r.max };
+            let _ = setrlimit(RLIMIT_NOFILE, &raised);
+        }
     }
 }
 
@@ -481,4 +519,176 @@ fn stdio_serve_is_byte_identical_and_keeps_error_ids() {
             .to_json();
     assert_eq!(lines[2], want_sample, "stdio sample bytes changed");
     reference.shutdown();
+}
+
+#[test]
+fn slow_loris_frame_is_served_then_idle_timed_out() {
+    // A client dripping a frame a few bytes at a time across several
+    // idle windows must be served (partial-frame bytes count as
+    // activity), and only a genuinely quiet connection is closed.
+    let mut cfg = small_cfg();
+    cfg.idle_timeout_ms = 200;
+    let mut server = start_unix(cfg);
+    let want = server.coord.engine().sample(1, 11).unwrap().remove(0);
+
+    let s = UnixStream::connect(&server.path).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+    let mut writer = s;
+    let frame = "{\"v\": 2, \"op\": \"sample\", \"id\": 3, \"count\": 1, \"seed\": 11}\n";
+    let mut dripped = Duration::ZERO;
+    for chunk in frame.as_bytes().chunks(8) {
+        writer.write_all(chunk).expect("drip");
+        writer.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(50));
+        dripped += Duration::from_millis(50);
+    }
+    assert!(dripped.as_millis() > 200, "drip must outlast the idle window");
+
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reply");
+    let v = Value::parse(&line).expect("frame");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    assert_eq!(v.get("id").and_then(Value::as_usize), Some(3));
+    assert_eq!(sample_of(&v), want, "slow-loris frame served wrong bytes");
+
+    // Now actually go quiet: the server hangs up and counts the close.
+    line.clear();
+    let n = reader.read_line(&mut line).expect("close");
+    assert_eq!(n, 0, "idle connection was not closed");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.coord.transport_metrics().counter("connections_idle_closed").get() == 0 {
+        assert!(Instant::now() < deadline, "idle close not recorded");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.stop();
+}
+
+#[test]
+fn a_thousand_connections_serve_bytes_identical_to_serial() {
+    // 1000 live connections, one request each, answered byte-identically
+    // to the same requests issued serially over a single connection.
+    raise_nofile_limit(8192);
+    const CONNS: usize = 1000;
+    let mut cfg = small_cfg();
+    cfg.max_connections = CONNS + 8;
+    let mut server = start_unix(cfg);
+
+    let req = |i: usize| {
+        format!(r#"{{"v": 2, "op": "sample", "id": {i}, "count": 1, "seed": {i}}}"#)
+    };
+    let mut reference = Vec::with_capacity(CONNS);
+    {
+        let mut serial = Client::unix(&server.path);
+        for i in 0..CONNS {
+            serial.send(&req(i));
+            reference.push(serial.recv_line());
+        }
+    }
+
+    let mut clients: Vec<Client> =
+        (0..CONNS).map(|_| Client::unix(&server.path)).collect();
+    for (i, c) in clients.iter_mut().enumerate() {
+        c.send(&req(i));
+    }
+    for (i, c) in clients.iter_mut().enumerate() {
+        assert_eq!(c.recv_line(), reference[i], "connection {i} diverged from serial bytes");
+    }
+    drop(clients);
+
+    let open = server.coord.transport_metrics().gauge("connections_open").get();
+    assert!(open <= (CONNS + 8) as f64, "gauge overran the cap: {open}");
+    assert!(
+        server.coord.transport_metrics().counter("connections_total").get()
+            >= (CONNS + 1) as u64
+    );
+    server.stop();
+}
+
+#[test]
+fn nondraining_reader_backpressure_buffers_and_keeps_order() {
+    // A client pipelining hundreds of chunky requests without reading a
+    // single reply: replies pile into the server-side write buffer (past
+    // the read-pause high-water mark) and still come back complete and
+    // in submission order once the client finally drains.
+    const REQS: usize = 400;
+    let mut cfg = small_cfg();
+    cfg.max_wait_us = 100;
+    let mut server = start_unix(cfg);
+    let want = server.coord.engine().sample(8, 7).unwrap();
+
+    let mut c = Client::unix(&server.path);
+    for i in 0..REQS {
+        c.send(&format!(
+            r#"{{"v": 2, "op": "sample", "id": {i}, "count": 8, "seed": {}}}"#,
+            if i == 7 { 7 } else { i }
+        ));
+    }
+    // Wait (without reading) until every reply has been encoded into the
+    // connection's buffers — the kernel sockets can only hold a fraction
+    // of the ~MBs of replies, so the server's write buffer absorbs the
+    // rest.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while server.coord.transport_metrics().counter("frames_out").get() < REQS as u64 {
+        assert!(Instant::now() < deadline, "replies never finished buffering");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let hwm = server.coord.transport_metrics().gauge("write_buf_hwm_bytes").get();
+    assert!(
+        hwm > 0.0,
+        "a non-draining reader must leave a write-buffer high-water mark"
+    );
+
+    for i in 0..REQS {
+        let v = c.recv();
+        assert_eq!(v.get("id").and_then(Value::as_usize), Some(i), "demux out of order");
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+        if i == 7 {
+            let payload = v.get("result").unwrap_or(&v);
+            let got: Vec<Vec<f64>> = payload
+                .get("samples")
+                .and_then(Value::as_array)
+                .expect("samples")
+                .iter()
+                .map(floats)
+                .collect();
+            assert_eq!(got, want, "buffered reply changed served bytes");
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn io_modes_serve_identical_bytes() {
+    // The identical request script — good frames, a protocol error, a
+    // malformed line, interleaved v1/v2 — must come back byte-for-byte
+    // the same from the event loop and the legacy threads host.
+    let script = [
+        r#"{"op": "sample", "count": 1, "seed": 42}"#,
+        r#"{"v": 2, "op": "sample", "id": 9, "count": 2, "seed": 5}"#,
+        r#"{"v": 2, "op": "transmogrify", "id": 4}"#,
+        "this is not json",
+        r#"{"v": 2, "op": "apply_sqrt", "id": 6, "xi": [0.5, -1.25]}"#,
+        r#"{"op": "stats"}"#,
+    ];
+    let serve = |mode: IoMode| -> Vec<String> {
+        let mut cfg = small_cfg();
+        cfg.io_mode = mode;
+        let mut server = start_unix(cfg);
+        let mut c = Client::unix(&server.path);
+        c.send(""); // blank lines are ignored by both hosts
+        for line in script {
+            c.send(line);
+        }
+        let mut replies: Vec<String> = (0..script.len()).map(|_| c.recv_line()).collect();
+        server.stop();
+        // The stats document embeds live gauge values that legitimately
+        // differ across hosts; compare its shape, not its bytes.
+        let stats = replies.pop().expect("stats reply");
+        let v = Value::parse(&stats).expect("stats frame");
+        assert!(v.get("samples").is_none());
+        assert!(v.get("stats").is_some(), "{v:?}");
+        replies
+    };
+    assert_eq!(serve(IoMode::Event), serve(IoMode::Threads), "io modes diverged on the wire");
 }
