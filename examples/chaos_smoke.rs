@@ -1,0 +1,220 @@
+//! Chaos-smoke: the CI leg for the cluster resilience layer
+//! (`DESIGN.md` §12).
+//!
+//! Spawns TWO backend `icr serve`-equivalents on ephemeral tcp ports,
+//! then one front-door coordinator whose `gp` replica set mixes a local
+//! native member with both remote backends — and arms the front door's
+//! deterministic fault injector so EVERY remote data call fails
+//! (`remote:error=1,delay_ms=1`) while control traffic (probes,
+//! identity) stays green. Drives v2 traffic over the front door's unix
+//! socket and asserts:
+//!
+//! - zero client-visible failures: every reply under chaos is `ok` and
+//!   byte-identical to the single-node engine for the same seed;
+//! - the failover path actually ran (`failovers` >= 1) and every retry
+//!   stayed inside its deadline budget (no `retry_budget_exhausted`);
+//! - both remote members tripped their request-level circuit breakers
+//!   (>= 1 trip each) while staying probe-healthy (no ejections);
+//! - recovery: once the injector is disarmed mid-run, half-open trials
+//!   on live traffic close both breakers again within the deadline.
+//!
+//! The final stats document is written to `ICR_CHAOS_DIR` (default
+//! `chaos-smoke/`) as `stats.json` so CI can upload it. Exits non-zero
+//! on any violation.
+//!
+//! ```text
+//! cargo run --release --example chaos_smoke
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
+use icr::coordinator::Coordinator;
+use icr::json::Value;
+use icr::model::GpModel;
+use icr::net::{BreakerState, ListenAddr, NetServer};
+
+fn small_model() -> ModelConfig {
+    ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() }
+}
+
+struct Node {
+    addr: String,
+    #[allow(dead_code)]
+    coord: Arc<Coordinator>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn start_backend() -> Node {
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Tcp("127.0.0.1:0".into()),
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("backend coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind backend");
+    let addr = server.local_addr().strip_prefix("tcp:").expect("tcp addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    Node { addr, coord, stop, handle }
+}
+
+fn rpc(reader: &mut BufReader<UnixStream>, writer: &mut UnixStream, line: &str) -> Value {
+    writeln!(writer, "{line}").expect("send");
+    writer.flush().expect("flush");
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp).expect("recv");
+    assert!(n > 0, "server hung up mid-request");
+    Value::parse(resp.trim()).unwrap_or_else(|e| panic!("bad frame {resp:?}: {e}"))
+}
+
+fn sample_row(v: &Value) -> Vec<f64> {
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "client-visible failure: {v:?}");
+    v.get_path("result.samples")
+        .and_then(Value::as_array)
+        .expect("samples")[0]
+        .as_array()
+        .expect("row")
+        .iter()
+        .filter_map(Value::as_f64)
+        .collect()
+}
+
+fn main() {
+    let b1 = start_backend();
+    let b2 = start_backend();
+    println!("chaos-smoke: shards on tcp:{} and tcp:{}", b1.addr, b2.addr);
+
+    // Front door: local + both shards, chaos armed from boot. Control
+    // traffic bypasses the injector, so both remote members come up
+    // healthy and STAY probe-healthy while every request to them fails
+    // — exactly the failure mode only request-level breakers catch.
+    let members = vec![
+        MemberSpec::local(Backend::Native),
+        MemberSpec::remote(&format!("tcp:{}", b1.addr)).expect("member b1"),
+        MemberSpec::remote(&format!("tcp:{}", b2.addr)).expect("member b2"),
+    ];
+    let sock = std::env::temp_dir().join(format!("icr_chaos_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        health_interval_ms: 100,
+        breaker_window: 4,
+        breaker_trip_ratio: 0.5,
+        breaker_cooldown_ms: 100,
+        retry_max: 3,
+        retry_budget_ms: 10_000,
+        fault_inject: Some("remote:error=1,delay_ms=1".into()),
+        replicas: vec![ReplicaSpec::new("gp", members).expect("replica spec")],
+        listen: ListenAddr::Unix(sock.clone()),
+        ..ServerConfig::default()
+    };
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    let engine = front.engine().clone();
+
+    let s = UnixStream::connect(&sock).expect("connect front");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+    let mut writer = s;
+
+    // Phase 1 — chaos on: every remote attempt fails, failover lands on
+    // the local member, and the client never sees any of it.
+    for seed in 0..48u64 {
+        let frame = format!(
+            r#"{{"v": 2, "op": "sample", "model": "gp", "id": {seed}, "count": 1, "seed": {seed}}}"#
+        );
+        let got = sample_row(&rpc(&mut reader, &mut writer, &frame));
+        let want = engine.sample(1, seed).expect("engine sample").remove(0);
+        assert_eq!(got, want, "seed {seed} diverged from single-node bytes under chaos");
+    }
+    let trips1 = front.router().breaker_trips("gp@1").expect("gp@1 breaker");
+    let trips2 = front.router().breaker_trips("gp@2").expect("gp@2 breaker");
+    let failovers = front.metrics().counter("failovers").get();
+    println!(
+        "chaos-smoke: under chaos — trips gp@1={trips1} gp@2={trips2} failovers={failovers}"
+    );
+    assert!(trips1 >= 1, "gp@1 never tripped under full-error chaos");
+    assert!(trips2 >= 1, "gp@2 never tripped under full-error chaos");
+    assert!(failovers >= 1, "no successful failover recorded");
+    assert_eq!(
+        front.metrics().counter("retry_budget_exhausted").get(),
+        0,
+        "a request ran out of retry budget — should never happen with a clean local member"
+    );
+    assert_eq!(
+        front.metrics().counter("health_ejections").get(),
+        0,
+        "request chaos must stay invisible to health probes"
+    );
+
+    // Phase 2 — chaos off: half-open trials on live traffic succeed and
+    // both breakers close again, still byte-identical throughout.
+    front.fault_injector().expect("front injector").set_armed(false);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut seed = 1000u64;
+    loop {
+        let closed = |m: &str| front.router().breaker_state(m) == Some(BreakerState::Closed);
+        if closed("gp@1") && closed("gp@2") {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "breakers never closed after chaos cleared: gp@1={:?} gp@2={:?}",
+            front.router().breaker_state("gp@1"),
+            front.router().breaker_state("gp@2"),
+        );
+        let frame = format!(
+            r#"{{"v": 2, "op": "sample", "model": "gp", "id": {seed}, "count": 1, "seed": {seed}}}"#
+        );
+        let got = sample_row(&rpc(&mut reader, &mut writer, &frame));
+        let want = engine.sample(1, seed).expect("engine sample").remove(0);
+        assert_eq!(got, want, "seed {seed} diverged during recovery");
+        seed += 1;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("chaos-smoke: both breakers closed after disarm ({} recovery probes)", seed - 1000);
+
+    // Dump the stats document for the CI artifact.
+    let stats = rpc(&mut reader, &mut writer, r#"{"v": 2, "op": "stats", "id": 1}"#);
+    let doc = stats.get_path("result.stats").expect("stats document");
+    let fault = doc.get_path("cluster.fault").expect("fault section");
+    assert_eq!(fault.get("armed").and_then(Value::as_bool), Some(false), "{fault:?}");
+    assert!(
+        fault.get_path("injected.errors").and_then(Value::as_f64).unwrap_or(0.0) >= 1.0,
+        "injector never fired: {fault:?}"
+    );
+    let dir =
+        PathBuf::from(std::env::var("ICR_CHAOS_DIR").unwrap_or_else(|_| "chaos-smoke".into()));
+    std::fs::create_dir_all(&dir).expect("create dump dir");
+    let path = dir.join("stats.json");
+    std::fs::write(&path, doc.to_json_pretty()).expect("write stats dump");
+    println!("chaos-smoke: stats dumped to {}", path.display());
+
+    drop(reader);
+    drop(writer);
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_file(&sock).ok();
+    b1.stop.store(true, Ordering::SeqCst);
+    b2.stop.store(true, Ordering::SeqCst);
+    let _ = b1.handle.join();
+    let _ = b2.handle.join();
+    println!("chaos-smoke: OK");
+}

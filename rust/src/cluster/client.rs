@@ -21,14 +21,25 @@
 //! Per-endpoint counters (connects, requests ok/failed, request_latency
 //! histogram, outstanding) live in a [`Registry`] surfaced by the
 //! `cluster` stats section.
+//!
+//! Resilience hooks (`DESIGN.md` §12): every timeout is configurable via
+//! [`RemoteTimeouts`] (`--remote-call-timeout-ms` and friends, defaults
+//! unchanged); data wires accept an optional [`FaultInjector`] that
+//! schedules deterministic injected errors/drops/delays *before* frames
+//! reach the socket (control probes are never faulted, so a
+//! request-flapping member stays probe-healthy — the circuit breaker's
+//! case); and replies that arrive after their call already timed out are
+//! classified by a bounded cancelled-id set as the `late_replies`
+//! counter instead of being mistaken for unmatched protocol frames.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::fault::{FaultInjector, FaultScope};
 use crate::coordinator::protocol::{self, RequestFrame};
 use crate::coordinator::request::{Request, Response};
 use crate::error::IcrError;
@@ -52,12 +63,74 @@ const READ_POLL: Duration = Duration::from_millis(50);
 /// Connections per endpoint. Two sockets keep a slow panel fan-out from
 /// serializing behind a long inference on the same wire.
 pub const DEFAULT_POOL: usize = 2;
+/// Abandoned correlation ids remembered per wire for `late_replies`
+/// classification. Bounded: a pathological flood of timeouts evicts the
+/// oldest ids rather than growing without bound.
+const CANCELLED_CAP: usize = 1024;
+
+/// Wire timeouts for one remote endpoint, resolved from
+/// `--remote-call-timeout-ms` / `--remote-probe-timeout-ms` /
+/// `--remote-connect-timeout-ms` by [`crate::config::ServerConfig::
+/// remote_timeouts`]. Defaults match the historical constants, so the
+/// knobs change nothing unless set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RemoteTimeouts {
+    /// Budget for one data round trip ([`CALL_TIMEOUT`]).
+    pub call: Duration,
+    /// Budget for a health-probe round trip ([`PROBE_TIMEOUT`]).
+    pub probe: Duration,
+    /// TCP connect budget per address candidate on data wires.
+    pub connect: Duration,
+}
+
+impl Default for RemoteTimeouts {
+    fn default() -> Self {
+        RemoteTimeouts { call: CALL_TIMEOUT, probe: PROBE_TIMEOUT, connect: CONNECT_TIMEOUT }
+    }
+}
+
+/// Bounded memory of correlation ids whose callers gave up (timeout in
+/// [`RemoteClient::finish`]). Insertion-ordered ring for eviction, set
+/// for membership; a late reply matching an entry is hygiene
+/// (`late_replies`), anything else is a protocol bug
+/// (`frames_unmatched`).
+struct CancelledIds {
+    order: VecDeque<u64>,
+    set: HashSet<u64>,
+}
+
+impl CancelledIds {
+    fn new() -> CancelledIds {
+        CancelledIds { order: VecDeque::new(), set: HashSet::new() }
+    }
+
+    fn insert(&mut self, id: u64) {
+        if self.set.insert(id) {
+            self.order.push_back(id);
+            while self.order.len() > CANCELLED_CAP {
+                if let Some(old) = self.order.pop_front() {
+                    self.set.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Membership test that consumes the entry. The ring keeps the id
+    /// until it ages out by cap; stale ring slots are harmless because
+    /// the set is the membership authority.
+    fn take(&mut self, id: u64) -> bool {
+        self.set.remove(&id)
+    }
+}
 
 /// One live connection: a locked write half plus the reply-demux map its
 /// reader thread serves.
 struct Wire {
     writer: Mutex<TcpStream>,
     pending: Mutex<HashMap<u64, mpsc::Sender<Result<Response, IcrError>>>>,
+    /// Ids [`RemoteClient::finish`] abandoned on timeout; their replies,
+    /// if they ever land, count as `late_replies` (see [`CancelledIds`]).
+    cancelled: Mutex<CancelledIds>,
     dead: AtomicBool,
     shutdown: AtomicBool,
 }
@@ -100,12 +173,28 @@ pub struct RemoteClient {
     rr: AtomicUsize,
     next_id: AtomicU64,
     metrics: Registry,
+    timeouts: RemoteTimeouts,
+    /// Chaos seam: when armed, data-wire submits consult the injector
+    /// before touching the socket. Control traffic never does.
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl RemoteClient {
     /// Client for `addr` (`tcp:HOST:PORT`, or bare `HOST:PORT`). Lazy —
-    /// no connection is made until the first call.
+    /// no connection is made until the first call. Default timeouts, no
+    /// fault injection.
     pub fn new(addr: &str, pool: usize) -> Result<RemoteClient, IcrError> {
+        RemoteClient::with_options(addr, pool, RemoteTimeouts::default(), None)
+    }
+
+    /// [`RemoteClient::new`] with explicit timeouts and an optional
+    /// fault injector — the path `ServerConfig` resolves through.
+    pub fn with_options(
+        addr: &str,
+        pool: usize,
+        timeouts: RemoteTimeouts,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> Result<RemoteClient, IcrError> {
         let hostport = addr.strip_prefix("tcp:").unwrap_or(addr).trim().to_string();
         // One grammar for everyone: the same validator the config
         // parsers run, so CLI-accepted and client-accepted addresses
@@ -121,12 +210,19 @@ impl RemoteClient {
             rr: AtomicUsize::new(0),
             next_id: AtomicU64::new(1),
             metrics: Registry::new(),
+            timeouts,
+            fault,
         })
     }
 
     /// `tcp:HOST:PORT`.
     pub fn endpoint(&self) -> &str {
         &self.endpoint
+    }
+
+    /// The wire timeouts this client was built with.
+    pub fn timeouts(&self) -> RemoteTimeouts {
+        self.timeouts
     }
 
     /// Per-endpoint counters: `connects`, `requests_ok`,
@@ -179,6 +275,7 @@ impl RemoteClient {
         let wire = Arc::new(Wire {
             writer: Mutex::new(stream),
             pending: Mutex::new(HashMap::new()),
+            cancelled: Mutex::new(CancelledIds::new()),
             dead: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
         });
@@ -218,7 +315,7 @@ impl RemoteClient {
         }
         self.wire_in(
             &self.slots[self.rr.fetch_add(1, Ordering::Relaxed) % self.slots.len()],
-            CONNECT_TIMEOUT,
+            self.timeouts.connect,
         )
     }
 
@@ -234,6 +331,19 @@ impl RemoteClient {
 
     fn submit_on(&self, control: bool, model: Option<&str>, request: Request) -> PendingReply {
         self.metrics.gauge("outstanding").inc();
+        // Chaos seam: an armed injector may fail the call before it
+        // reaches the socket (probes never pass through here with
+        // `control=false`, so a request-faulted member stays
+        // probe-healthy). Delays are applied inline and fall through.
+        if !control {
+            if let Some(fault) = &self.fault {
+                if let Some(err) = fault.apply(FaultScope::Remote) {
+                    let (tx, rx) = mpsc::channel();
+                    let _ = tx.send(Err(err));
+                    return PendingReply { rx, sent: None };
+                }
+            }
+        }
         let mut last_err: Option<IcrError> = None;
         // Control traffic (probes) gets ONE attempt: a failed probe is
         // itself the signal, and the health monitor retries next
@@ -307,7 +417,13 @@ impl RemoteClient {
             Err(_) => {
                 if let Some((wire, id)) = &pending.sent {
                     if let Some(w) = wire.upgrade() {
-                        w.pending.lock().unwrap().remove(id);
+                        // Remember the abandoned id (only if the reply
+                        // has not already been dispatched) so a
+                        // straggler reply counts as `late_replies`,
+                        // not `frames_unmatched`.
+                        if w.pending.lock().unwrap().remove(id).is_some() {
+                            w.cancelled.lock().unwrap().insert(*id);
+                        }
                     }
                 }
                 Err(IcrError::Backend(format!(
@@ -326,9 +442,9 @@ impl RemoteClient {
         result
     }
 
-    /// One blocking round trip with the standard timeout.
+    /// One blocking round trip with the configured call timeout.
     pub fn call(&self, model: Option<&str>, request: Request) -> Result<Response, IcrError> {
-        self.call_with_timeout(model, request, CALL_TIMEOUT)
+        self.call_with_timeout(model, request, self.timeouts.call)
     }
 
     pub fn call_with_timeout(
@@ -348,7 +464,7 @@ impl RemoteClient {
     pub fn probe(&self) -> Result<(), IcrError> {
         let t0 = Instant::now();
         let pending = self.submit_on(true, None, Request::Stats);
-        self.finish(&pending, t0, PROBE_TIMEOUT).map(|_| ())
+        self.finish(&pending, t0, self.timeouts.probe).map(|_| ())
     }
 
     /// Fetch the identity of the remote model (`None` = remote default),
@@ -356,7 +472,7 @@ impl RemoteClient {
     pub fn describe(&self, model: Option<&str>) -> Result<ModelInfo, IcrError> {
         let t0 = Instant::now();
         let pending = self.submit_on(true, model, Request::Describe);
-        match self.finish(&pending, t0, CALL_TIMEOUT)? {
+        match self.finish(&pending, t0, self.timeouts.call)? {
             Response::Describe(info) => Ok(info),
             other => Err(IcrError::Backend(format!(
                 "remote {} answered describe with {other:?}",
@@ -424,10 +540,20 @@ fn dispatch(wire: &Wire, line: &[u8], metrics: &Registry) {
     let frame = Value::parse(&text).ok().and_then(|v| protocol::decode_response(&v).ok());
     match frame {
         Some(frame) => {
-            if let Some(tx) = wire.pending.lock().unwrap().remove(&frame.id) {
-                let _ = tx.send(frame.result);
-            } else {
-                metrics.counter("frames_unmatched").inc();
+            let tx = wire.pending.lock().unwrap().remove(&frame.id);
+            match tx {
+                Some(tx) => {
+                    let _ = tx.send(frame.result);
+                }
+                // No waiter: either the caller timed out and cancelled
+                // (hygiene — count, never deliver) or the server sent
+                // an id we never issued (a protocol bug).
+                None if wire.cancelled.lock().unwrap().take(frame.id) => {
+                    metrics.counter("late_replies").inc();
+                }
+                None => {
+                    metrics.counter("frames_unmatched").inc();
+                }
             }
         }
         None => metrics.counter("frames_undecodable").inc(),
@@ -478,6 +604,102 @@ mod tests {
         assert_eq!(c.metrics().counter("requests_failed").get(), 1);
         drop(c);
         let _ = silent.join();
+    }
+
+    #[test]
+    fn default_timeouts_match_historical_constants() {
+        let t = RemoteTimeouts::default();
+        assert_eq!(t.call, CALL_TIMEOUT);
+        assert_eq!(t.probe, PROBE_TIMEOUT);
+        assert_eq!(t.connect, Duration::from_secs(5));
+        assert_eq!(RemoteClient::new("tcp:127.0.0.1:7777", 1).unwrap().timeouts(), t);
+    }
+
+    #[test]
+    fn injected_remote_faults_fire_before_the_socket_and_spare_probes() {
+        // error=1.0 on the remote scope: every data call fails with the
+        // injected typed error without a single connect; control probes
+        // bypass the injector entirely (the probe fails here only
+        // because nothing listens on the port).
+        let inj = Arc::new(FaultInjector::from_spec("remote:error=1", 7).unwrap());
+        let c = RemoteClient::with_options(
+            "tcp:127.0.0.1:9",
+            1,
+            RemoteTimeouts::default(),
+            Some(inj.clone()),
+        )
+        .unwrap();
+        match c.call_with_timeout(None, Request::Stats, Duration::from_secs(1)) {
+            Err(e) => {
+                assert!(e.is_member_fault(), "{e}");
+                assert!(e.to_string().contains("injected fault"), "{e}");
+            }
+            Ok(other) => panic!("expected injected fault, got {other:?}"),
+        }
+        assert_eq!(inj.injected_errors(), 1);
+        assert_eq!(c.metrics().counter("connects").get(), 0, "fault fired before the socket");
+        assert_eq!(c.outstanding(), 0);
+        assert!(c.probe().is_err());
+        assert_eq!(inj.injected_errors(), 1, "probes are never faulted");
+    }
+
+    #[test]
+    fn late_replies_count_as_hygiene_not_unmatched_frames() {
+        // Demux-entry hygiene under abandonment stress: a server that
+        // withholds every reply until after the client has timed out
+        // and cancelled. The straggler frames must be classified as
+        // `late_replies` (counted, never delivered), `frames_unmatched`
+        // must stay zero, and `outstanding` must settle at zero.
+        use std::io::{BufRead, BufReader};
+        const CALLS: usize = 8;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("tcp:{}", listener.local_addr().unwrap());
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut ids = Vec::new();
+            let mut line = String::new();
+            while ids.len() < CALLS {
+                line.clear();
+                if reader.read_line(&mut line).unwrap() == 0 {
+                    break;
+                }
+                let (_, id) = protocol::frame_error_context(&line);
+                ids.push(id.expect("v2 frames carry correlation ids"));
+            }
+            // Wait until every finish() below has timed out.
+            std::thread::sleep(Duration::from_millis(800));
+            let mut w = stream;
+            for id in ids {
+                let reply =
+                    protocol::encode_response(2, id, None, &Err(IcrError::Backend("slow".into())));
+                writeln!(w, "{}", reply.to_json()).unwrap();
+            }
+            w.flush().unwrap();
+            // Keep the socket open while the client reader drains the
+            // stragglers.
+            std::thread::sleep(Duration::from_millis(700));
+        });
+        let c = RemoteClient::new(&addr, 1).unwrap();
+        let t0 = Instant::now();
+        let pendings: Vec<PendingReply> =
+            (0..CALLS).map(|_| c.submit(None, Request::Stats)).collect();
+        for p in &pendings {
+            match c.finish(p, t0, Duration::from_millis(50)) {
+                Err(IcrError::Backend(msg)) => assert!(msg.contains("timed out"), "{msg}"),
+                other => panic!("expected timeout, got {other:?}"),
+            }
+        }
+        assert_eq!(c.outstanding(), 0, "cancelled calls left phantom demux entries");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.metrics().counter("late_replies").get() < CALLS as u64 {
+            assert!(Instant::now() < deadline, "late replies never classified");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(c.metrics().counter("late_replies").get(), CALLS as u64);
+        assert_eq!(c.metrics().counter("frames_unmatched").get(), 0);
+        drop(c);
+        let _ = server.join();
     }
 
     #[test]

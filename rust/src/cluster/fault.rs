@@ -1,0 +1,387 @@
+//! Deterministic fault-injection harness (`DESIGN.md` §12).
+//!
+//! Resilience code is only trustworthy if its failure paths run in CI,
+//! and failure paths only run reliably when faults are *scheduled*, not
+//! hoped for. This module arms the serving stack with reproducible
+//! faults:
+//!
+//! ```text
+//! --fault-inject "remote:error=0.1,delay_ms=50,drop=0.02"
+//! --fault-inject "remote:error=0.3;local:error=0.05,delay_ms=5"
+//! ```
+//!
+//! Grammar: semicolon-separated scope groups, each `scope:key=value`
+//! pairs joined by commas. Scopes are `remote` (the [`super::client::
+//! RemoteClient`] data wires — control probes stay clean so a flapping
+//! member stays *probe-healthy*, exactly the case circuit breakers
+//! exist for) and `local` (in-process model calls on the coordinator's
+//! serving paths). Keys:
+//!
+//! - `error=P` — probability of answering with an injected typed
+//!   `internal` error (error bursts, member flaps);
+//! - `drop=P` — probability of the reply being torn away, surfaced as a
+//!   typed `backend` failure (dropped/torn frames);
+//! - `delay_ms=N` — fixed extra latency on every non-faulted call in
+//!   the scope (slow replies).
+//!
+//! Determinism: one seeded [`Rng`] drives every decision, and each
+//! [`FaultInjector::decide`] consumes exactly two draws regardless of
+//! the outcome — so the injected schedule is a pure function of (seed,
+//! call order), and the same seed replays the same chaos. The env var
+//! `ICR_FAULT_INJECT` arms the harness when the CLI flag is absent.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::IcrError;
+use crate::json::{self, Value};
+use crate::rng::Rng;
+
+/// Where an injected fault applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultScope {
+    /// The pooled tcp data wires of [`super::client::RemoteClient`]
+    /// (health probes on the control wire are never faulted).
+    Remote,
+    /// In-process model calls on the coordinator's serving paths.
+    Local,
+}
+
+impl FaultScope {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultScope::Remote => "remote",
+            FaultScope::Local => "local",
+        }
+    }
+}
+
+/// Fault probabilities for one scope. All-zero means "no faults".
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Probability of an injected typed `internal` error.
+    pub error: f64,
+    /// Probability of the reply being dropped (torn frame → typed
+    /// `backend` failure).
+    pub drop: f64,
+    /// Fixed delay in ms added to every non-faulted call.
+    pub delay_ms: u64,
+}
+
+impl FaultSpec {
+    fn is_quiet(&self) -> bool {
+        self.error == 0.0 && self.drop == 0.0 && self.delay_ms == 0
+    }
+}
+
+/// A parsed `--fault-inject` spec: per-scope probabilities plus the
+/// seed the schedule derives from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub remote: FaultSpec,
+    pub local: FaultSpec,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-inject` grammar (see module docs). Errors are
+    /// human-readable strings for the CLI layer.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut plan =
+            FaultPlan { remote: FaultSpec::default(), local: FaultSpec::default(), seed };
+        let mut any = false;
+        for group in spec.split(';').filter(|g| !g.trim().is_empty()) {
+            let group = group.trim();
+            let (scope, body) = group
+                .split_once(':')
+                .ok_or_else(|| format!("fault group {group:?} needs scope:key=value[,...]"))?;
+            let target = match scope.trim() {
+                "remote" => &mut plan.remote,
+                "local" => &mut plan.local,
+                other => return Err(format!("unknown fault scope {other:?} (remote|local)")),
+            };
+            for pair in body.split(',').filter(|p| !p.trim().is_empty()) {
+                let pair = pair.trim();
+                let (key, value) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault entry {pair:?} is not key=value"))?;
+                let value = value.trim();
+                match key.trim() {
+                    "error" => target.error = parse_probability("error", value)?,
+                    "drop" => target.drop = parse_probability("drop", value)?,
+                    "delay_ms" => {
+                        target.delay_ms = value
+                            .parse::<u64>()
+                            .map_err(|e| format!("delay_ms={value:?}: {e}"))?;
+                    }
+                    other => {
+                        return Err(format!(
+                            "unknown fault key {other:?} (error|drop|delay_ms)"
+                        ))
+                    }
+                }
+            }
+            any = true;
+        }
+        if !any {
+            return Err("empty fault spec".to_string());
+        }
+        Ok(plan)
+    }
+
+    fn spec_for(&self, scope: FaultScope) -> &FaultSpec {
+        match scope {
+            FaultScope::Remote => &self.remote,
+            FaultScope::Local => &self.local,
+        }
+    }
+}
+
+fn parse_probability(key: &str, value: &str) -> Result<f64, String> {
+    let p: f64 = value.parse().map_err(|e| format!("{key}={value:?}: {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("{key}={value} out of range [0, 1]"));
+    }
+    Ok(p)
+}
+
+/// The fault scheduled for one call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Proceed untouched.
+    None,
+    /// Answer with an injected typed `internal` error.
+    Error,
+    /// Tear the reply away: a typed `backend` failure.
+    Drop,
+    /// Slow the call down, then proceed.
+    Delay(Duration),
+}
+
+/// Seeded, armable fault scheduler shared by the remote client wires
+/// and the coordinator's local call seam.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    armed: AtomicBool,
+    rng: Mutex<Rng>,
+    injected_errors: AtomicU64,
+    injected_drops: AtomicU64,
+    injected_delays: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            armed: AtomicBool::new(true),
+            rng: Mutex::new(Rng::new(plan.seed)),
+            injected_errors: AtomicU64::new(0),
+            injected_drops: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse-and-build convenience (the `ServerConfig` path).
+    pub fn from_spec(spec: &str, seed: u64) -> Result<FaultInjector, String> {
+        FaultPlan::parse(spec, seed).map(FaultInjector::new)
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Arm or disarm at runtime ("faults clear" in chaos tests).
+    /// Disarmed decisions consume no PRNG draws, so re-arming resumes
+    /// the schedule where it left off.
+    pub fn set_armed(&self, armed: bool) {
+        self.armed.store(armed, Ordering::SeqCst);
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::SeqCst)
+    }
+
+    /// Schedule the next call in `scope`. Consumes exactly two PRNG
+    /// draws per armed call with a non-quiet scope spec — the schedule
+    /// is a pure function of (seed, call order). No side effects beyond
+    /// the PRNG advance; use [`FaultInjector::apply`] on serving paths.
+    pub fn decide(&self, scope: FaultScope) -> FaultAction {
+        let spec = self.plan.spec_for(scope);
+        if !self.armed() || spec.is_quiet() {
+            return FaultAction::None;
+        }
+        let (u_error, u_drop) = {
+            let mut rng = self.rng.lock().unwrap();
+            (rng.uniform(), rng.uniform())
+        };
+        if u_error < spec.error {
+            FaultAction::Error
+        } else if u_drop < spec.drop {
+            FaultAction::Drop
+        } else if spec.delay_ms > 0 {
+            FaultAction::Delay(Duration::from_millis(spec.delay_ms))
+        } else {
+            FaultAction::None
+        }
+    }
+
+    /// Serving-path hook: schedule the next call, perform the delay
+    /// side effect inline, and return the injected failure, if any.
+    pub fn apply(&self, scope: FaultScope) -> Option<IcrError> {
+        match self.decide(scope) {
+            FaultAction::None => None,
+            FaultAction::Error => {
+                self.injected_errors.fetch_add(1, Ordering::Relaxed);
+                Some(IcrError::Internal(format!(
+                    "injected fault ({}: error)",
+                    scope.name()
+                )))
+            }
+            FaultAction::Drop => {
+                self.injected_drops.fetch_add(1, Ordering::Relaxed);
+                Some(IcrError::Backend(format!(
+                    "injected fault ({}: reply dropped)",
+                    scope.name()
+                )))
+            }
+            FaultAction::Delay(d) => {
+                self.injected_delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(d);
+                None
+            }
+        }
+    }
+
+    pub fn injected_errors(&self) -> u64 {
+        self.injected_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn injected_drops(&self) -> u64 {
+        self.injected_drops.load(Ordering::Relaxed)
+    }
+
+    pub fn injected_delays(&self) -> u64 {
+        self.injected_delays.load(Ordering::Relaxed)
+    }
+
+    /// The `cluster.fault` section of the stats document.
+    pub fn to_json(&self) -> Value {
+        let spec_json = |s: &FaultSpec| {
+            json::obj(vec![
+                ("error", json::num(s.error)),
+                ("drop", json::num(s.drop)),
+                ("delay_ms", json::num(s.delay_ms as f64)),
+            ])
+        };
+        json::obj(vec![
+            ("armed", Value::Bool(self.armed())),
+            ("seed", json::num(self.plan.seed as f64)),
+            ("remote", spec_json(&self.plan.remote)),
+            ("local", spec_json(&self.plan.local)),
+            (
+                "injected",
+                json::obj(vec![
+                    ("errors", json::num(self.injected_errors() as f64)),
+                    ("drops", json::num(self.injected_drops() as f64)),
+                    ("delays", json::num(self.injected_delays() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_scopes_keys_and_rejects_junk() {
+        let plan = FaultPlan::parse("remote:error=0.1,delay_ms=50,drop=0.02", 7).unwrap();
+        assert_eq!(plan.remote, FaultSpec { error: 0.1, drop: 0.02, delay_ms: 50 });
+        assert_eq!(plan.local, FaultSpec::default());
+        assert_eq!(plan.seed, 7);
+
+        let plan = FaultPlan::parse("remote:error=1.0;local:drop=0.5,delay_ms=5", 0).unwrap();
+        assert_eq!(plan.remote.error, 1.0);
+        assert_eq!(plan.local, FaultSpec { error: 0.0, drop: 0.5, delay_ms: 5 });
+
+        for bad in [
+            "",
+            "error=0.1",              // missing scope
+            "martian:error=0.1",      // unknown scope
+            "remote:oops=1",          // unknown key
+            "remote:error",           // not key=value
+            "remote:error=1.5",       // probability out of range
+            "remote:error=-0.1",
+            "remote:delay_ms=fast",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule_different_seed_different() {
+        let spec = "remote:error=0.3,drop=0.2,delay_ms=1";
+        let a = FaultInjector::from_spec(spec, 42).unwrap();
+        let b = FaultInjector::from_spec(spec, 42).unwrap();
+        let sched_a: Vec<FaultAction> = (0..256).map(|_| a.decide(FaultScope::Remote)).collect();
+        let sched_b: Vec<FaultAction> = (0..256).map(|_| b.decide(FaultScope::Remote)).collect();
+        assert_eq!(sched_a, sched_b, "same seed must replay the same schedule");
+        // The schedule actually mixes all three actions at these rates.
+        assert!(sched_a.contains(&FaultAction::Error));
+        assert!(sched_a.contains(&FaultAction::Drop));
+        assert!(sched_a.iter().any(|x| matches!(x, FaultAction::Delay(_))));
+
+        let c = FaultInjector::from_spec(spec, 43).unwrap();
+        let sched_c: Vec<FaultAction> = (0..256).map(|_| c.decide(FaultScope::Remote)).collect();
+        assert_ne!(sched_a, sched_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn disarming_silences_without_consuming_the_schedule() {
+        let spec = "remote:error=0.5";
+        let a = FaultInjector::from_spec(spec, 9).unwrap();
+        let b = FaultInjector::from_spec(spec, 9).unwrap();
+        // a: 8 armed decisions. b: 8 armed decisions with disarmed
+        // no-ops interleaved — identical schedule.
+        let sched_a: Vec<FaultAction> = (0..8).map(|_| a.decide(FaultScope::Remote)).collect();
+        let mut sched_b = Vec::new();
+        for _ in 0..8 {
+            b.set_armed(false);
+            assert_eq!(b.decide(FaultScope::Remote), FaultAction::None);
+            b.set_armed(true);
+            sched_b.push(b.decide(FaultScope::Remote));
+        }
+        assert_eq!(sched_a, sched_b);
+        // Quiet scopes consume no draws either: local decisions do not
+        // perturb the remote schedule.
+        let c = FaultInjector::from_spec(spec, 9).unwrap();
+        let sched_c: Vec<FaultAction> = (0..8)
+            .map(|_| {
+                assert_eq!(c.decide(FaultScope::Local), FaultAction::None);
+                c.decide(FaultScope::Remote)
+            })
+            .collect();
+        assert_eq!(sched_a, sched_c);
+    }
+
+    #[test]
+    fn apply_counts_and_types_injected_faults() {
+        let inj = FaultInjector::from_spec("local:error=1.0", 1).unwrap();
+        let err = inj.apply(FaultScope::Local).expect("error=1.0 always injects");
+        assert_eq!(err.kind(), "internal");
+        assert_eq!(inj.injected_errors(), 1);
+        assert_eq!(inj.apply(FaultScope::Remote), None, "quiet scope");
+
+        let inj = FaultInjector::from_spec("remote:drop=1.0", 1).unwrap();
+        let err = inj.apply(FaultScope::Remote).unwrap();
+        assert_eq!(err.kind(), "backend");
+        assert_eq!(inj.injected_drops(), 1);
+
+        let v = inj.to_json();
+        assert_eq!(v.get("armed"), Some(&Value::Bool(true)));
+        assert_eq!(v.get_path("injected.drops").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get_path("remote.drop").and_then(Value::as_f64), Some(1.0));
+    }
+}

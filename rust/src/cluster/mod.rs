@@ -19,6 +19,12 @@
 //!   deterministic `sample` replies (`--cache-entries`), consulted in
 //!   `submit_to` before replica routing, with hit/miss/eviction metrics
 //!   in the `cluster.cache` stats section.
+//! - **[`fault`]** — [`FaultInjector`]: the deterministic fault-injection
+//!   harness (`--fault-inject "remote:error=0.1,delay_ms=50,drop=0.02"`,
+//!   `DESIGN.md` §12): a seeded PRNG schedules injected errors, dropped
+//!   (torn) replies and delays at the `RemoteClient` wires and the local
+//!   model-call seam, so chaos tests reproduce member flaps and error
+//!   bursts exactly instead of sleeping and hoping.
 //!
 //! Health-aware routing lives in [`crate::net::router`] (member states,
 //! rendezvous seed affinity); the coordinator's health monitor drives it
@@ -26,17 +32,27 @@
 
 pub mod cache;
 pub mod client;
+pub mod fault;
 pub mod remote;
 
 pub use cache::{CacheKey, ResponseCache};
-pub use client::RemoteClient;
+pub use client::{RemoteClient, RemoteTimeouts};
+pub use fault::{FaultAction, FaultInjector, FaultPlan, FaultScope};
 pub use remote::RemoteModel;
 
 /// Cluster-layer capabilities advertised by `icr --version` and the
 /// `stats` document, mirroring how §8 advertises transports and routing
 /// policies.
-pub const CAPABILITIES: [&str; 5] =
-    ["remote_backend", "response_cache", "health_checks", "artifacts", "hot_reload"];
+pub const CAPABILITIES: [&str; 8] = [
+    "remote_backend",
+    "response_cache",
+    "health_checks",
+    "artifacts",
+    "hot_reload",
+    "circuit_breakers",
+    "retry_failover",
+    "fault_injection",
+];
 
 #[cfg(test)]
 mod tests {
@@ -46,7 +62,16 @@ mod tests {
     fn capabilities_are_advertised_in_order() {
         assert_eq!(
             CAPABILITIES,
-            ["remote_backend", "response_cache", "health_checks", "artifacts", "hot_reload"]
+            [
+                "remote_backend",
+                "response_cache",
+                "health_checks",
+                "artifacts",
+                "hot_reload",
+                "circuit_breakers",
+                "retry_failover",
+                "fault_injection",
+            ]
         );
     }
 }

@@ -30,16 +30,21 @@
 //! [`GpModel::apply_sqrt_panel`] calls on the proxy pipeline one
 //! `apply_sqrt` frame per lane over the pooled client (the backend's
 //! own batcher re-coalesces them with whatever else it is serving) and
-//! reassemble the output panel in lane order.
+//! reassemble the output panel in lane order. The coordinator's remote
+//! fast path does the same for whole coalesced batches via
+//! [`RemoteModel::proxy_submit`] / [`RemoteModel::proxy_finish`]: every
+//! envelope's frame hits the wire before any reply is awaited, so a
+//! micro-batch of K requests costs one round trip, not K.
 
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::error::IcrError;
 use crate::model::{GpModel, ModelDescriptor, ModelInfo, MultiInference};
 use crate::optim::Trace;
 
-use super::client::{RemoteClient, CALL_TIMEOUT, DEFAULT_POOL};
+use super::client::{PendingReply, RemoteClient, RemoteTimeouts, DEFAULT_POOL};
+use super::fault::FaultInjector;
 use crate::coordinator::request::{Request, Response};
 
 /// A GP model served by a remote coordinator.
@@ -75,7 +80,19 @@ impl RemoteModel {
         addr: &str,
         expected_config_sha256: Option<String>,
     ) -> Result<RemoteModel, IcrError> {
-        let client = RemoteClient::new(addr, DEFAULT_POOL)?;
+        RemoteModel::deferred_with(addr, expected_config_sha256, RemoteTimeouts::default(), None)
+    }
+
+    /// [`RemoteModel::deferred`] with explicit wire timeouts and an
+    /// optional fault injector — how the coordinator builds declared
+    /// shards once `ServerConfig` has resolved the resilience knobs.
+    pub fn deferred_with(
+        addr: &str,
+        expected_config_sha256: Option<String>,
+        timeouts: RemoteTimeouts,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> Result<RemoteModel, IcrError> {
+        let client = RemoteClient::with_options(addr, DEFAULT_POOL, timeouts, fault)?;
         Ok(RemoteModel { client, info: RwLock::new(None), expected_config_sha256 })
     }
 
@@ -121,6 +138,22 @@ impl RemoteModel {
     /// Identity snapshot without any wire traffic (None while deferred).
     fn cached_info(&self) -> Option<ModelInfo> {
         self.info.read().unwrap().clone()
+    }
+
+    /// Put one proxied request on the wire and return immediately — the
+    /// coordinator's pipelined remote fast path. Pair every submit with
+    /// one [`RemoteModel::proxy_finish`].
+    pub fn proxy_submit(&self, model: Option<&str>, request: Request) -> PendingReply {
+        self.client.submit(model, request)
+    }
+
+    /// Await one pipelined reply with the configured call timeout.
+    pub fn proxy_finish(
+        &self,
+        pending: &PendingReply,
+        t0: Instant,
+    ) -> Result<Response, IcrError> {
+        self.client.finish(pending, t0, self.client.timeouts().call)
     }
 
     fn expect_field(&self, resp: Response) -> Result<Vec<f64>, IcrError> {
@@ -199,6 +232,10 @@ impl GpModel for RemoteModel {
         self.client.endpoint().to_string()
     }
 
+    fn as_remote(&self) -> Option<&RemoteModel> {
+        Some(self)
+    }
+
     fn health_probe(&self) -> Result<(), IcrError> {
         self.client.probe()
     }
@@ -237,7 +274,7 @@ impl GpModel for RemoteModel {
         for pending in &lanes {
             // Collect every lane even after a failure so the outstanding
             // gauge and counters settle for the whole panel.
-            match self.client.finish(pending, t0, CALL_TIMEOUT) {
+            match self.client.finish(pending, t0, self.client.timeouts().call) {
                 Ok(resp) => match self.expect_field(resp) {
                     Ok(field) if field.len() == n => out.extend_from_slice(&field),
                     Ok(field) => {

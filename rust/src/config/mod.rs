@@ -457,6 +457,34 @@ pub struct ServerConfig {
     /// flag and idle deadline. Only the blocking paths (threads mode,
     /// stdio) poll; the event loop sleeps on readiness instead.
     pub io_poll_ms: u64,
+    /// Request-level circuit breaker (`DESIGN.md` §12): sliding window
+    /// of recent request outcomes per replica member
+    /// (`--breaker-window`, 0 disables breakers).
+    pub breaker_window: usize,
+    /// Failure ratio within a full window that trips a member's breaker
+    /// Closed → Open (`--breaker-trip-ratio`).
+    pub breaker_trip_ratio: f64,
+    /// How long a tripped member stays Open before Half-Open trial
+    /// requests are admitted (`--breaker-cooldown-ms`).
+    pub breaker_cooldown_ms: u64,
+    /// Failover attempts after the first failure of an idempotent
+    /// routed request (`--retry-max`, 0 disables retry/failover).
+    pub retry_max: usize,
+    /// Deadline budget per routed request in ms, anchored at enqueue
+    /// (`--retry-budget-ms`): retries stop once the budget is spent and
+    /// the client receives a typed `retry_exhausted` error.
+    pub retry_budget_ms: u64,
+    /// Remote data-call timeout in ms (`--remote-call-timeout-ms`).
+    pub remote_call_timeout_ms: u64,
+    /// Remote health-probe timeout in ms (`--remote-probe-timeout-ms`).
+    pub remote_probe_timeout_ms: u64,
+    /// Remote connect timeout in ms (`--remote-connect-timeout-ms`).
+    pub remote_connect_timeout_ms: u64,
+    /// Deterministic fault injection spec (`--fault-inject
+    /// "remote:error=0.1,delay_ms=50,drop=0.02"`, `DESIGN.md` §12), or
+    /// the `ICR_FAULT_INJECT` env var when the flag is absent. `None`
+    /// (default) disarms the harness entirely.
+    pub fault_inject: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -481,6 +509,15 @@ impl Default for ServerConfig {
             health_interval_ms: 2000,
             io_mode: IoMode::default(),
             io_poll_ms: 25,
+            breaker_window: 16,
+            breaker_trip_ratio: 0.5,
+            breaker_cooldown_ms: 1000,
+            retry_max: 2,
+            retry_budget_ms: 10_000,
+            remote_call_timeout_ms: 120_000,
+            remote_probe_timeout_ms: 2_000,
+            remote_connect_timeout_ms: 5_000,
+            fault_inject: None,
         }
     }
 }
@@ -565,6 +602,37 @@ impl ServerConfig {
         }
         cfg.cache_entries = args.get_usize("cache-entries", cfg.cache_entries)?;
         cfg.health_interval_ms = args.get_u64("health-interval-ms", cfg.health_interval_ms)?;
+        cfg.breaker_window = args.get_usize("breaker-window", cfg.breaker_window)?;
+        cfg.breaker_trip_ratio = args.get_f64("breaker-trip-ratio", cfg.breaker_trip_ratio)?;
+        anyhow::ensure!(
+            cfg.breaker_trip_ratio > 0.0 && cfg.breaker_trip_ratio <= 1.0,
+            "--breaker-trip-ratio must be in (0, 1], got {}",
+            cfg.breaker_trip_ratio
+        );
+        cfg.breaker_cooldown_ms = args.get_u64("breaker-cooldown-ms", cfg.breaker_cooldown_ms)?;
+        cfg.retry_max = args.get_usize("retry-max", cfg.retry_max)?;
+        cfg.retry_budget_ms = args.get_u64("retry-budget-ms", cfg.retry_budget_ms)?;
+        cfg.remote_call_timeout_ms =
+            args.get_u64("remote-call-timeout-ms", cfg.remote_call_timeout_ms)?.max(1);
+        cfg.remote_probe_timeout_ms =
+            args.get_u64("remote-probe-timeout-ms", cfg.remote_probe_timeout_ms)?.max(1);
+        cfg.remote_connect_timeout_ms =
+            args.get_u64("remote-connect-timeout-ms", cfg.remote_connect_timeout_ms)?.max(1);
+        if let Some(spec) = args.get("fault-inject") {
+            cfg.fault_inject = Some(spec.to_string());
+        } else if cfg.fault_inject.is_none() {
+            if let Ok(spec) = std::env::var("ICR_FAULT_INJECT") {
+                if !spec.trim().is_empty() {
+                    cfg.fault_inject = Some(spec);
+                }
+            }
+        }
+        if let Some(spec) = &cfg.fault_inject {
+            // Fail at startup, not mid-traffic: the grammar check is
+            // shared with the cluster harness itself.
+            crate::cluster::FaultPlan::parse(spec, cfg.seed)
+                .map_err(|e| anyhow::anyhow!("--fault-inject: {e}"))?;
+        }
         cfg.validate_models()?;
         Ok(cfg)
     }
@@ -681,6 +749,33 @@ impl ServerConfig {
         if let Some(p) = v.get("io_poll_ms").and_then(Value::as_usize) {
             self.io_poll_ms = (p as u64).max(1);
         }
+        if let Some(w) = v.get("breaker_window").and_then(Value::as_usize) {
+            self.breaker_window = w;
+        }
+        if let Some(r) = v.get("breaker_trip_ratio").and_then(Value::as_f64) {
+            self.breaker_trip_ratio = r;
+        }
+        if let Some(c) = v.get("breaker_cooldown_ms").and_then(Value::as_usize) {
+            self.breaker_cooldown_ms = c as u64;
+        }
+        if let Some(r) = v.get("retry_max").and_then(Value::as_usize) {
+            self.retry_max = r;
+        }
+        if let Some(b) = v.get("retry_budget_ms").and_then(Value::as_usize) {
+            self.retry_budget_ms = b as u64;
+        }
+        if let Some(t) = v.get("remote_call_timeout_ms").and_then(Value::as_usize) {
+            self.remote_call_timeout_ms = (t as u64).max(1);
+        }
+        if let Some(t) = v.get("remote_probe_timeout_ms").and_then(Value::as_usize) {
+            self.remote_probe_timeout_ms = (t as u64).max(1);
+        }
+        if let Some(t) = v.get("remote_connect_timeout_ms").and_then(Value::as_usize) {
+            self.remote_connect_timeout_ms = (t as u64).max(1);
+        }
+        if let Some(s) = v.get("fault_inject").and_then(Value::as_str) {
+            self.fault_inject = if s.trim().is_empty() { None } else { Some(s.to_string()) };
+        }
         if let Some(b) = v.get("batch_max").and_then(Value::as_usize) {
             self.max_batch = b.max(1);
         }
@@ -788,7 +883,43 @@ impl ServerConfig {
             ("health_interval_ms", json::num(self.health_interval_ms as f64)),
             ("io_mode", json::s(self.io_mode.name())),
             ("io_poll_ms", json::num(self.io_poll_ms as f64)),
+            ("breaker_window", json::num(self.breaker_window as f64)),
+            ("breaker_trip_ratio", json::num(self.breaker_trip_ratio)),
+            ("breaker_cooldown_ms", json::num(self.breaker_cooldown_ms as f64)),
+            ("retry_max", json::num(self.retry_max as f64)),
+            ("retry_budget_ms", json::num(self.retry_budget_ms as f64)),
+            ("remote_call_timeout_ms", json::num(self.remote_call_timeout_ms as f64)),
+            ("remote_probe_timeout_ms", json::num(self.remote_probe_timeout_ms as f64)),
+            ("remote_connect_timeout_ms", json::num(self.remote_connect_timeout_ms as f64)),
+            (
+                "fault_inject",
+                match &self.fault_inject {
+                    Some(s) => json::s(s),
+                    None => Value::Null,
+                },
+            ),
         ])
+    }
+
+    /// The router's breaker tuning derived from these knobs.
+    pub fn breaker_config(&self) -> crate::net::BreakerConfig {
+        crate::net::BreakerConfig {
+            window: self.breaker_window,
+            trip_ratio: self.breaker_trip_ratio,
+            cooldown: std::time::Duration::from_millis(self.breaker_cooldown_ms),
+            // Bounded Half-Open trials; fixed — enough to tolerate one
+            // unlucky trial without flooding a recovering member.
+            trials: 2,
+        }
+    }
+
+    /// Remote-client timeouts derived from these knobs.
+    pub fn remote_timeouts(&self) -> crate::cluster::RemoteTimeouts {
+        crate::cluster::RemoteTimeouts {
+            call: std::time::Duration::from_millis(self.remote_call_timeout_ms),
+            probe: std::time::Duration::from_millis(self.remote_probe_timeout_ms),
+            connect: std::time::Duration::from_millis(self.remote_connect_timeout_ms),
+        }
     }
 }
 
@@ -1008,6 +1139,97 @@ mod tests {
         let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
         assert_eq!(v.get("io_mode").and_then(Value::as_str), Some("threads"));
         assert_eq!(v.get("io_poll_ms").and_then(Value::as_usize), Some(10));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resilience_knobs_resolve_from_cli() {
+        // Defaults leave historical behavior untouched.
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.breaker_window, 16);
+        assert_eq!(cfg.breaker_trip_ratio, 0.5);
+        assert_eq!(cfg.breaker_cooldown_ms, 1000);
+        assert_eq!(cfg.retry_max, 2);
+        assert_eq!(cfg.retry_budget_ms, 10_000);
+        assert_eq!(cfg.remote_call_timeout_ms, 120_000);
+        assert_eq!(cfg.remote_probe_timeout_ms, 2_000);
+        assert_eq!(cfg.remote_connect_timeout_ms, 5_000);
+        assert_eq!(cfg.fault_inject, None);
+
+        let args = Args::parse(
+            &argv(
+                "serve --breaker-window 8 --breaker-trip-ratio 0.25 --breaker-cooldown-ms 200 \
+                 --retry-max 4 --retry-budget-ms 2500 --remote-call-timeout-ms 9000 \
+                 --remote-probe-timeout-ms 700 --remote-connect-timeout-ms 1500 \
+                 --fault-inject remote:error=0.1,delay_ms=5",
+            ),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.breaker_window, 8);
+        assert_eq!(cfg.breaker_trip_ratio, 0.25);
+        assert_eq!(cfg.breaker_cooldown_ms, 200);
+        assert_eq!(cfg.retry_max, 4);
+        assert_eq!(cfg.retry_budget_ms, 2500);
+        assert_eq!(cfg.remote_call_timeout_ms, 9000);
+        assert_eq!(cfg.remote_probe_timeout_ms, 700);
+        assert_eq!(cfg.remote_connect_timeout_ms, 1500);
+        assert_eq!(cfg.fault_inject.as_deref(), Some("remote:error=0.1,delay_ms=5"));
+        // Derived tunings mirror the knobs.
+        let b = cfg.breaker_config();
+        assert_eq!(b.window, 8);
+        assert_eq!(b.trip_ratio, 0.25);
+        assert_eq!(b.cooldown, std::time::Duration::from_millis(200));
+        let t = cfg.remote_timeouts();
+        assert_eq!(t.call, std::time::Duration::from_millis(9000));
+        assert_eq!(t.probe, std::time::Duration::from_millis(700));
+        assert_eq!(t.connect, std::time::Duration::from_millis(1500));
+
+        // Out-of-range ratios and malformed chaos specs are startup errors.
+        let args = Args::parse(&argv("serve --breaker-trip-ratio 0"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        let args = Args::parse(&argv("serve --breaker-trip-ratio 1.5"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        let args = Args::parse(&argv("serve --fault-inject remote:error=2"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+        let args = Args::parse(&argv("serve --fault-inject bogus"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_from_config_file_and_dump() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_resilience_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"breaker_window": 6, "breaker_trip_ratio": 0.75,
+                "breaker_cooldown_ms": 300, "retry_max": 1, "retry_budget_ms": 800,
+                "remote_call_timeout_ms": 4000, "remote_probe_timeout_ms": 900,
+                "remote_connect_timeout_ms": 1100,
+                "fault_inject": "local:error=0.5"}"#,
+        )
+        .unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.breaker_window, 6);
+        assert_eq!(cfg.breaker_trip_ratio, 0.75);
+        assert_eq!(cfg.breaker_cooldown_ms, 300);
+        assert_eq!(cfg.retry_max, 1);
+        assert_eq!(cfg.retry_budget_ms, 800);
+        assert_eq!(cfg.remote_call_timeout_ms, 4000);
+        assert_eq!(cfg.remote_probe_timeout_ms, 900);
+        assert_eq!(cfg.remote_connect_timeout_ms, 1100);
+        assert_eq!(cfg.fault_inject.as_deref(), Some("local:error=0.5"));
+        // Every knob rides through the config dump and back.
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("breaker_window").and_then(Value::as_usize), Some(6));
+        assert_eq!(v.get("breaker_trip_ratio").and_then(Value::as_f64), Some(0.75));
+        assert_eq!(v.get("retry_max").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("retry_budget_ms").and_then(Value::as_usize), Some(800));
+        assert_eq!(v.get("remote_call_timeout_ms").and_then(Value::as_usize), Some(4000));
+        assert_eq!(v.get("fault_inject").and_then(Value::as_str), Some("local:error=0.5"));
         std::fs::remove_file(&path).ok();
     }
 

@@ -66,6 +66,18 @@ impl Request {
         }
     }
 
+    /// Whether re-executing this request on another member after an
+    /// ambiguous failure is safe — the retry/failover gate
+    /// (`DESIGN.md` §12). Every read/compute op is a pure function of
+    /// its arguments (`sample` and `infer_multi` are seeded, `stats`
+    /// and `describe` are snapshots), so a duplicate execution is
+    /// indistinguishable from a single one. `reload_model` mutates the
+    /// registry: a timeout may mean the swap already happened, so the
+    /// coordinator never retries it.
+    pub fn idempotent(&self) -> bool {
+        !matches!(self, Request::ReloadModel { .. })
+    }
+
     /// Protocol `op` tag of this request.
     pub fn op(&self) -> &'static str {
         match self {
@@ -247,6 +259,25 @@ mod tests {
         assert_eq!(Request::ApplySqrt { xi: vec![1.0] }.apply_count(), 1);
         assert_eq!(Request::Stats.apply_count(), 0);
         assert_eq!(Request::ReloadModel { path: "a".into() }.apply_count(), 0);
+    }
+
+    #[test]
+    fn only_reload_model_is_non_idempotent() {
+        assert!(Request::Sample { count: 1, seed: 0 }.idempotent());
+        assert!(Request::ApplySqrt { xi: vec![1.0] }.idempotent());
+        assert!(Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.idempotent());
+        assert!(Request::InferMulti {
+            y_obs: vec![],
+            sigma_n: 0.1,
+            steps: 1,
+            lr: 0.1,
+            restarts: 2,
+            seed: 9
+        }
+        .idempotent());
+        assert!(Request::Stats.idempotent());
+        assert!(Request::Describe.idempotent());
+        assert!(!Request::ReloadModel { path: "a".into() }.idempotent());
     }
 
     #[test]

@@ -20,7 +20,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::cluster::{CacheKey, ResponseCache, CAPABILITIES};
+use crate::cluster::client::PendingReply;
+use crate::cluster::{CacheKey, FaultInjector, FaultScope, ResponseCache, CAPABILITIES};
 use crate::config::{Backend, ModelConfig, ServerConfig, DEFAULT_MODEL_NAME, MODEL_FAMILIES};
 use crate::error::IcrError;
 use crate::json::{self, Value};
@@ -101,6 +102,13 @@ struct Shared {
     exec: Option<Exec>,
     /// Description of the registry-shared panel executor ("pool(4)").
     exec_desc: String,
+    /// Deterministic fault injector (`--fault-inject`, `DESIGN.md` §12);
+    /// the same instance rides inside every remote client wire, so
+    /// disarming it here silences chaos everywhere at once.
+    fault: Option<Arc<FaultInjector>>,
+    /// Seeded jitter source for failover backoff (full jitter). Retries
+    /// are rare, so one mutex-guarded stream is contention-free.
+    retry_rng: Mutex<Rng>,
     cfg: ServerConfig,
     next_id: AtomicU64,
 }
@@ -147,6 +155,7 @@ impl Coordinator {
     /// hosted model, so panel parallelism costs one set of parked threads
     /// for the whole registry instead of per-request thread spawns.
     pub fn start(cfg: ServerConfig) -> Result<Coordinator> {
+        let fault = fault_injector_from(&cfg)?;
         let exec = Exec::pooled(cfg.apply_threads);
         let mut models: Vec<(String, Arc<dyn GpModel>, Option<ModelConfig>)> = Vec::new();
         // Plain registry entries first, then every replica-set member —
@@ -168,7 +177,12 @@ impl Coordinator {
                     )
                 })?;
                 let expected = crate::artifact::config_checksum(&spec.model);
-                Arc::new(crate::cluster::RemoteModel::deferred(addr, Some(expected))?)
+                Arc::new(crate::cluster::RemoteModel::deferred_with(
+                    addr,
+                    Some(expected),
+                    cfg.remote_timeouts(),
+                    fault.clone(),
+                )?)
             } else {
                 ModelBuilder::from_spec(&spec)
                     .artifact_dir(&cfg.artifact_dir)
@@ -179,7 +193,7 @@ impl Coordinator {
             models.push((spec.name, model, Some(spec.model)));
         }
         let exec_desc = exec.describe();
-        let coord = Self::start_inner(cfg, models, exec_desc, Some(exec))?;
+        let coord = Self::start_inner(cfg, models, exec_desc, Some(exec), fault)?;
         coord.fetch_remote_identities();
         Ok(coord)
     }
@@ -197,8 +211,9 @@ impl Coordinator {
         cfg: ServerConfig,
         models: Vec<(String, Arc<dyn GpModel>)>,
     ) -> Result<Coordinator> {
+        let fault = fault_injector_from(&cfg)?;
         let models = models.into_iter().map(|(name, model)| (name, model, None)).collect();
-        Self::start_inner(cfg, models, "external".to_string(), None)
+        Self::start_inner(cfg, models, "external".to_string(), None, fault)
     }
 
     fn start_inner(
@@ -206,6 +221,7 @@ impl Coordinator {
         models: Vec<(String, Arc<dyn GpModel>, Option<ModelConfig>)>,
         exec_desc: String,
         exec: Option<Exec>,
+        fault: Option<Arc<FaultInjector>>,
     ) -> Result<Coordinator> {
         anyhow::ensure!(!models.is_empty(), "coordinator needs at least one model");
         let default_model = models[0].0.clone();
@@ -215,6 +231,7 @@ impl Coordinator {
             anyhow::ensure!(prev.is_none(), "duplicate model name {name:?}");
         }
         let mut router = Router::new(cfg.route_policy);
+        router.set_breaker_config(cfg.breaker_config());
         for r in &cfg.replicas {
             anyhow::ensure!(
                 !registry.contains_key(&r.name),
@@ -244,6 +261,8 @@ impl Coordinator {
             queue_limit: cfg.queue_limit,
             exec,
             exec_desc,
+            fault,
+            retry_rng: Mutex::new(Rng::new(cfg.seed ^ 0xBAC0FF)),
             cfg: cfg.clone(),
             next_id: AtomicU64::new(1),
         });
@@ -334,6 +353,13 @@ impl Coordinator {
     /// The response cache (disabled unless `--cache-entries > 0`).
     pub fn cache(&self) -> &ResponseCache {
         &self.shared.cache
+    }
+
+    /// The deterministic fault injector, when `--fault-inject` armed one
+    /// (chaos drivers disarm it to let the cluster recover, and read its
+    /// injected-fault counters).
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.shared.fault.as_ref()
     }
 
     /// Mark one replica member as draining: it finishes its in-flight
@@ -671,9 +697,11 @@ fn stats_json(shared: &Shared) -> Value {
     ])
 }
 
-/// The `cluster` stats section (`DESIGN.md` §9): health/cache config
-/// plus, per replica set, each member's endpoint, health state, routed
-/// and outstanding counts, and served p50/p99 latency.
+/// The `cluster` stats section (`DESIGN.md` §9/§12): health, resilience
+/// and cache config plus, per replica set, each member's endpoint,
+/// health state, breaker state and trip count, routed and outstanding
+/// counts, and served p50/p99 latency; the `fault` section mirrors the
+/// live injector when `--fault-inject` armed one.
 fn cluster_json(shared: &Shared) -> Value {
     let mut sets: BTreeMap<String, Value> = BTreeMap::new();
     for logical in shared.router.logical_names() {
@@ -696,21 +724,55 @@ fn cluster_json(shared: &Shared) -> Value {
                         }
                     })
                     .unwrap_or((0.0, 0.0));
-                json::obj(vec![
+                let mut fields = vec![
                     ("name", json::s(m)),
                     ("endpoint", json::s(&endpoint)),
                     ("state", json::s(set.member_state(i).name())),
+                    ("breaker", json::s(set.breaker_state(i).name())),
+                    ("breaker_trips", json::num(set.breaker_trips(i) as f64)),
                     ("routed", json::num(set.routed_to(i) as f64)),
                     ("outstanding", json::num(shared.outstanding(m) as f64)),
                     ("p50_us", json::num(p50)),
                     ("p99_us", json::num(p99)),
-                ])
+                ];
+                // Remote members surface their wire hygiene counters
+                // (`late_replies`, `frames_unmatched`, reconnects).
+                if let Some(e) = entry {
+                    let model = e.model();
+                    if let Some(remote) = model.as_remote() {
+                        fields.push(("wire", remote.client().metrics().to_json()));
+                    }
+                }
+                json::obj(fields)
             })
             .collect();
         sets.insert(logical, json::obj(vec![("members", json::arr(members))]));
     }
     json::obj(vec![
         ("health_interval_ms", json::num(shared.cfg.health_interval_ms as f64)),
+        (
+            "resilience",
+            json::obj(vec![
+                ("breaker_window", json::num(shared.cfg.breaker_window as f64)),
+                ("breaker_trip_ratio", json::num(shared.cfg.breaker_trip_ratio)),
+                ("breaker_cooldown_ms", json::num(shared.cfg.breaker_cooldown_ms as f64)),
+                ("retry_max", json::num(shared.cfg.retry_max as f64)),
+                ("retry_budget_ms", json::num(shared.cfg.retry_budget_ms as f64)),
+                ("retries", json::num(shared.metrics.counter("retries").get() as f64)),
+                ("failovers", json::num(shared.metrics.counter("failovers").get() as f64)),
+                (
+                    "retry_budget_exhausted",
+                    json::num(shared.metrics.counter("retry_budget_exhausted").get() as f64),
+                ),
+            ]),
+        ),
+        (
+            "fault",
+            match &shared.fault {
+                Some(f) => f.to_json(),
+                None => Value::Null,
+            },
+        ),
         ("cache", shared.cache.to_json()),
         ("sets", Value::Object(sets)),
     ])
@@ -818,6 +880,302 @@ fn complete(shared: &Shared, entry: &ModelEntry, failed: bool) {
     }
 }
 
+/// Build the shared fault injector from `--fault-inject` (`None` = no
+/// chaos). Specs are validated at config resolution, so a parse failure
+/// here only reaches hand-assembled configs.
+fn fault_injector_from(cfg: &ServerConfig) -> Result<Option<Arc<FaultInjector>>> {
+    match cfg.fault_inject.as_deref() {
+        None => Ok(None),
+        Some(spec) => {
+            let injector = FaultInjector::from_spec(spec, cfg.seed)
+                .map_err(|e| anyhow::anyhow!("--fault-inject: {e}"))?;
+            Ok(Some(Arc::new(injector)))
+        }
+    }
+}
+
+/// Chaos seam for in-process engines (the `local` fault scope): remote
+/// proxies carry the injector inside their client wires instead, and
+/// only model-compute ops are eligible — stats/describe/reload are
+/// control traffic.
+fn local_fault(shared: &Shared, entry: &ModelEntry, request: &Request) -> Option<IcrError> {
+    if entry.is_remote() {
+        return None;
+    }
+    if !matches!(
+        request,
+        Request::Sample { .. }
+            | Request::ApplySqrt { .. }
+            | Request::Infer { .. }
+            | Request::InferMulti { .. }
+    ) {
+        return None;
+    }
+    shared.fault.as_ref()?.apply(FaultScope::Local)
+}
+
+/// Feed one served outcome into the member's circuit breaker window:
+/// only member faults (backend/internal failures, which wire errors map
+/// to) count against it — a typed client error proves the member
+/// answered. Names outside every replica set no-op inside the router.
+fn record_member_outcome(shared: &Shared, member: &str, result: &Result<Response, IcrError>) {
+    let ok = match result {
+        Ok(_) => true,
+        Err(e) => !e.is_member_fault(),
+    };
+    shared.router.record_outcome(member, ok);
+}
+
+/// Populate the response cache for a completed seeded sample, under the
+/// client's pre-routing (logical) name so every member of a set shares
+/// one entry.
+fn cache_sample(shared: &Shared, env: &Envelope, rows: &[Vec<f64>]) {
+    if let Request::Sample { count, seed } = &env.request {
+        if shared.cache.enabled() {
+            shared
+                .cache
+                .insert(CacheKey::sample(&env.logical, *seed, *count), Arc::new(rows.to_vec()));
+        }
+    }
+}
+
+/// Execute one request directly on `member` — the failover re-dispatch
+/// path. Batchable ops run as a direct engine call (byte-identical to
+/// the batched path by the §4 determinism contract); everything else
+/// reuses `serve_single`. Terminal accounting stays on the ORIGINAL
+/// envelope's entry — only the router's `routed` counter and the
+/// breaker window see the retry member.
+fn execute_on_member(shared: &Shared, member: &str, env: &Envelope) -> Result<Response, IcrError> {
+    let entry = shared.entry(member)?;
+    if let Some(err) = local_fault(shared, entry, &env.request) {
+        return Err(err);
+    }
+    let model = entry.model();
+    match &env.request {
+        Request::Sample { count, seed } => model.sample(*count, *seed).map(|rows| {
+            cache_sample(shared, env, &rows);
+            Response::Samples(rows)
+        }),
+        Request::ApplySqrt { xi } => {
+            let dof = model.total_dof();
+            if xi.len() != dof {
+                return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: xi.len() });
+            }
+            model
+                .apply_sqrt_batch(std::slice::from_ref(xi))
+                .map(|mut rows| Response::Field(rows.remove(0)))
+        }
+        _ => serve_single(shared, entry, member, &env.request),
+    }
+}
+
+/// Deadline-budgeted retry/failover (`DESIGN.md` §12). After a member
+/// fault on an idempotent routed request, re-dispatch the SAME request
+/// to the next available member — full-jitter backoff between attempts
+/// — until one answers, `--retry-max` re-executions are spent, or the
+/// deadline budget anchored at *enqueue* time expires. Members answer
+/// byte-identically by the §4 determinism contract, so a failover is
+/// invisible to the client; exhaustion answers a typed
+/// [`IcrError::RetryExhausted`] carrying the freshest member failure.
+fn with_failover(
+    shared: &Shared,
+    env: &Envelope,
+    first: Result<Response, IcrError>,
+) -> Result<Response, IcrError> {
+    let err = match first {
+        Ok(resp) => return Ok(resp),
+        Err(e) => e,
+    };
+    // Gates: retries enabled, the failure implicates the member (a
+    // client error is the request's own answer), the op is safe to
+    // duplicate, and the request was actually routed — a
+    // directly-addressed member has nowhere to fail over to.
+    if shared.cfg.retry_max == 0
+        || !err.is_member_fault()
+        || !env.request.idempotent()
+        || shared.router.set(&env.logical).is_none()
+    {
+        return Err(err);
+    }
+    let deadline = env.enqueued_at + Duration::from_millis(shared.cfg.retry_budget_ms);
+    let outstanding = |m: &str| shared.outstanding(m);
+    // Members that already failed this request, freshest last.
+    let mut tried: Vec<String> = vec![env.model.clone()];
+    let mut attempts = 1usize; // executions, counting the original
+    let mut last = err;
+    while attempts <= shared.cfg.retry_max && Instant::now() < deadline {
+        // Prefer untried members; once every member has failed once,
+        // keep only the freshest failure excluded so bounded retries
+        // can revisit earlier members (with a two-member set, strict
+        // exclusion would allow exactly one failover, ever).
+        let member = match shared.router.route_excluding(
+            &env.logical,
+            &env.request,
+            &outstanding,
+            &tried,
+        ) {
+            Some(m) => m.to_string(),
+            None => {
+                let freshest = tried.last().cloned().expect("tried starts non-empty");
+                tried = vec![freshest];
+                match shared.router.route_excluding(
+                    &env.logical,
+                    &env.request,
+                    &outstanding,
+                    &tried,
+                ) {
+                    Some(m) => m.to_string(),
+                    // Single-member set: retry the same member.
+                    None => tried[0].clone(),
+                }
+            }
+        };
+        // Full-jitter backoff: uniform in [0, 5ms · 2^k), clipped to
+        // the remaining budget.
+        let base = 5u64.saturating_mul(1u64 << ((attempts - 1).min(6) as u32));
+        let jitter =
+            Duration::from_millis(base).mul_f64(shared.retry_rng.lock().unwrap().uniform());
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        std::thread::sleep(jitter.min(remaining));
+        if Instant::now() >= deadline {
+            break;
+        }
+        shared.metrics.counter("retries").inc();
+        attempts += 1;
+        let result = execute_on_member(shared, &member, env);
+        record_member_outcome(shared, &member, &result);
+        match result {
+            Ok(resp) => {
+                shared.metrics.counter("failovers").inc();
+                return Ok(resp);
+            }
+            Err(e) if e.is_member_fault() => {
+                tried.retain(|t| t != &member);
+                tried.push(member);
+                last = e;
+            }
+            // A client-class error from the retry member is the real
+            // answer to the request itself; stop retrying.
+            Err(e) => return Err(e),
+        }
+    }
+    shared.metrics.counter("retry_budget_exhausted").inc();
+    Err(IcrError::RetryExhausted {
+        attempts,
+        budget_ms: shared.cfg.retry_budget_ms,
+        last: last.to_string(),
+    })
+}
+
+/// Check a proxied reply's variant against the request and populate the
+/// sample cache — the shared tail of both remote serving paths.
+fn accept_remote_reply(
+    shared: &Shared,
+    env: &Envelope,
+    resp: Response,
+) -> Result<Response, IcrError> {
+    match (&env.request, resp) {
+        (Request::Sample { .. }, Response::Samples(rows)) => {
+            cache_sample(shared, env, &rows);
+            Ok(Response::Samples(rows))
+        }
+        (Request::ApplySqrt { .. }, Response::Field(f)) => Ok(Response::Field(f)),
+        (req, _other) => Err(IcrError::Backend(format!(
+            "remote answered {} with a mismatched response variant",
+            req.op()
+        ))),
+    }
+}
+
+/// Per-envelope terminal accounting shared by the remote serving paths.
+fn finish_envelope(
+    shared: &Shared,
+    entry: &ModelEntry,
+    env: Envelope,
+    result: Result<Response, IcrError>,
+    t_req: Instant,
+) {
+    let applies = env.request.apply_count() as u64;
+    shared.metrics.counter("applies_executed").add(applies);
+    entry.metrics.counter("applies_executed").add(applies);
+    entry.metrics.counter("batches_executed").inc();
+    complete(shared, entry, result.is_err());
+    shared.metrics.histogram("request_latency").observe(t_req);
+    entry.metrics.histogram("request_latency").observe(t_req);
+    env.reply.send(result);
+}
+
+/// Serve one coalesced micro-batch against a remote member.
+///
+/// With the typed proxy ([`GpModel::as_remote`]) every envelope's frame
+/// is submitted onto the pooled wires BEFORE any reply is awaited, so a
+/// micro-batch of K proxied requests costs one backend round trip
+/// instead of K serial ones — the backend's own batcher re-coalesces
+/// the compact frames into a panel. Engines that merely report a remote
+/// endpoint without the proxy type (test doubles) keep serial
+/// per-envelope calls. Either way, member faults feed the circuit
+/// breaker and the deadline-budgeted failover path per envelope, and
+/// shape rejects are answered locally without touching the wire.
+fn process_remote_batch(
+    shared: &Shared,
+    entry: &ModelEntry,
+    model: &Arc<dyn GpModel>,
+    batch: Vec<Envelope>,
+    t0: Instant,
+) {
+    let dof = model.total_dof();
+    let shape_check = |req: &Request| -> Result<(), IcrError> {
+        if let Request::ApplySqrt { xi } = req {
+            if xi.len() != dof {
+                return Err(IcrError::ShapeMismatch { what: "xi", expected: dof, got: xi.len() });
+            }
+        }
+        Ok(())
+    };
+    match model.as_remote() {
+        Some(remote) => {
+            let t_submit = Instant::now();
+            let pendings: Vec<Result<PendingReply, IcrError>> = batch
+                .iter()
+                .map(|env| {
+                    shape_check(&env.request)?;
+                    Ok(remote.proxy_submit(None, env.request.clone()))
+                })
+                .collect();
+            for (env, pending) in batch.into_iter().zip(pendings) {
+                let result = pending.and_then(|p| {
+                    remote
+                        .proxy_finish(&p, t_submit)
+                        .and_then(|resp| accept_remote_reply(shared, &env, resp))
+                });
+                record_member_outcome(shared, &env.model, &result);
+                let result = with_failover(shared, &env, result);
+                finish_envelope(shared, entry, env, result, t_submit);
+            }
+        }
+        None => {
+            for env in batch {
+                let t_req = Instant::now();
+                let result = shape_check(&env.request).and_then(|()| match &env.request {
+                    Request::Sample { count, seed } => model.sample(*count, *seed).map(|rows| {
+                        cache_sample(shared, &env, &rows);
+                        Response::Samples(rows)
+                    }),
+                    Request::ApplySqrt { xi } => model
+                        .apply_sqrt_batch(std::slice::from_ref(xi))
+                        .map(|mut rows| Response::Field(rows.remove(0))),
+                    _ => unreachable!("non-batchable request in batch"),
+                });
+                record_member_outcome(shared, &env.model, &result);
+                let result = with_failover(shared, &env, result);
+                finish_envelope(shared, entry, env, result, t_req);
+            }
+        }
+    }
+    shared.metrics.histogram("batch_latency").observe(t0);
+    entry.metrics.histogram("batch_latency").observe(t0);
+}
+
 fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     let t0 = Instant::now();
     // Every envelope in a batch routes to the same model (pop_batch only
@@ -837,7 +1195,12 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     // Fast path: a single non-batchable request.
     if batch.len() == 1 && !batch[0].request.batchable() {
         let env = batch.into_iter().next().unwrap();
-        let result = serve_single(shared, entry, &env.model, &env.request);
+        let result = match local_fault(shared, entry, &env.request) {
+            Some(err) => Err(err),
+            None => serve_single(shared, entry, &env.model, &env.request),
+        };
+        record_member_outcome(shared, &env.model, &result);
+        let result = with_failover(shared, &env, result);
         complete(shared, entry, result.is_err());
         shared.metrics.histogram("request_latency").observe(t0);
         entry.metrics.histogram("request_latency").observe(t0);
@@ -855,47 +1218,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     // swaps the registry slot without invalidating it.
     let model = entry.model();
     if entry.is_remote() {
-        let dof = model.total_dof();
-        for env in batch {
-            let t_req = Instant::now();
-            let result = match &env.request {
-                Request::Sample { count, seed } => {
-                    model.sample(*count, *seed).map(|rows| {
-                        if shared.cache.enabled() {
-                            shared.cache.insert(
-                                CacheKey::sample(&env.logical, *seed, *count),
-                                Arc::new(rows.clone()),
-                            );
-                        }
-                        Response::Samples(rows)
-                    })
-                }
-                Request::ApplySqrt { xi } => {
-                    if xi.len() != dof {
-                        Err(IcrError::ShapeMismatch {
-                            what: "xi",
-                            expected: dof,
-                            got: xi.len(),
-                        })
-                    } else {
-                        model
-                            .apply_sqrt_batch(std::slice::from_ref(xi))
-                            .map(|mut rows| Response::Field(rows.remove(0)))
-                    }
-                }
-                _ => unreachable!("non-batchable request in batch"),
-            };
-            let applies = env.request.apply_count() as u64;
-            shared.metrics.counter("applies_executed").add(applies);
-            entry.metrics.counter("applies_executed").add(applies);
-            entry.metrics.counter("batches_executed").inc();
-            complete(shared, entry, result.is_err());
-            shared.metrics.histogram("request_latency").observe(t_req);
-            entry.metrics.histogram("request_latency").observe(t_req);
-            env.reply.send(result);
-        }
-        shared.metrics.histogram("batch_latency").observe(t0);
-        entry.metrics.histogram("batch_latency").observe(t0);
+        process_remote_batch(shared, entry, &model, batch, t0);
         return;
     }
 
@@ -936,7 +1259,12 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         }
     }
 
-    let outputs = model.apply_sqrt_panel(&panel, applies);
+    let outputs = match local_fault(shared, entry, &batch[0].request) {
+        // One draw per panel call, mirroring "one fault per model call"
+        // on the remote scope: an injected fault fails the whole panel.
+        Some(err) => Err(err),
+        None => model.apply_sqrt_panel(&panel, applies),
+    };
     shared.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("batches_executed").inc();
@@ -980,6 +1308,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                         })
                     }
                 };
+                record_member_outcome(shared, &env.model, &result);
                 complete(shared, entry, result.is_err());
                 env.reply.send(result);
             }
@@ -987,21 +1316,25 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         Err(e) => {
             // Envelopes rejected before the panel was built still answer
             // with their own typed shape error, not the backend failure
-            // they never participated in.
+            // they never participated in. Panel participants record the
+            // member fault against the breaker and get a failover pass —
+            // a surviving member recomputes byte-identical output.
             for (env, span) in batch.into_iter().zip(spans) {
-                let err = match span {
-                    None => IcrError::ShapeMismatch {
+                let result = match span {
+                    None => Err(IcrError::ShapeMismatch {
                         what: "xi",
                         expected: dof,
                         got: match &env.request {
                             Request::ApplySqrt { xi } => xi.len(),
                             _ => 0,
                         },
-                    },
-                    Some(_) => e.clone(),
+                    }),
+                    Some(_) => Err(e.clone()),
                 };
-                complete(shared, entry, true);
-                env.reply.send(Err(err));
+                record_member_outcome(shared, &env.model, &result);
+                let result = with_failover(shared, &env, result);
+                complete(shared, entry, result.is_err());
+                env.reply.send(result);
             }
         }
     }
@@ -1834,6 +2167,215 @@ mod tests {
         healthy.store(true, Ordering::SeqCst);
         wait_for_state("gp@1", crate::net::MemberState::Healthy);
         assert!(c.metrics().counter("health_restorations").get() >= 1);
+        c.shutdown();
+    }
+
+    /// A probe-healthy model whose *request* path fails on demand — the
+    /// stand-in for a member that answers health checks but errors under
+    /// load, which only a request-level breaker can take out of rotation.
+    struct RequestFlakyModel {
+        inner: Arc<dyn GpModel>,
+        failing: Arc<AtomicBool>,
+    }
+
+    impl RequestFlakyModel {
+        fn gate(&self) -> Result<(), IcrError> {
+            if self.failing.load(Ordering::SeqCst) {
+                Err(IcrError::Backend("synthetic request failure".into()))
+            } else {
+                Ok(())
+            }
+        }
+    }
+
+    impl GpModel for RequestFlakyModel {
+        fn descriptor(&self) -> crate::model::ModelDescriptor {
+            self.inner.descriptor()
+        }
+        fn n_points(&self) -> usize {
+            self.inner.n_points()
+        }
+        fn total_dof(&self) -> usize {
+            self.inner.total_dof()
+        }
+        fn domain_points(&self) -> Vec<f64> {
+            self.inner.domain_points()
+        }
+        fn apply_sqrt_batch(&self, xi: &[Vec<f64>]) -> Result<Vec<Vec<f64>>, IcrError> {
+            self.gate()?;
+            self.inner.apply_sqrt_batch(xi)
+        }
+        fn apply_sqrt_panel(&self, panel: &[f64], batch: usize) -> Result<Vec<f64>, IcrError> {
+            self.gate()?;
+            self.inner.apply_sqrt_panel(panel, batch)
+        }
+        fn loss_grad(
+            &self,
+            xi: &[f64],
+            y_obs: &[f64],
+            sigma_n: f64,
+        ) -> Result<(f64, Vec<f64>), IcrError> {
+            self.gate()?;
+            self.inner.loss_grad(xi, y_obs, sigma_n)
+        }
+        fn obs_indices(&self) -> Vec<usize> {
+            self.inner.obs_indices()
+        }
+    }
+
+    #[test]
+    fn breaker_trips_failover_stays_byte_identical_and_recovers() {
+        let mut cfg = test_config(1, 4);
+        cfg.replicas =
+            vec![crate::config::ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()];
+        cfg.route_policy = crate::net::RoutePolicy::SeedAffinity;
+        cfg.health_interval_ms = 0; // isolate the breaker from the probe monitor
+        cfg.breaker_window = 4;
+        cfg.breaker_trip_ratio = 0.5;
+        cfg.breaker_cooldown_ms = 50;
+        cfg.retry_max = 3;
+        cfg.retry_budget_ms = 10_000;
+        let base = ModelBuilder::from_config(cfg.model.clone()).build().unwrap();
+        let failing = Arc::new(AtomicBool::new(true));
+        let flaky: Arc<dyn GpModel> =
+            Arc::new(RequestFlakyModel { inner: base.clone(), failing: failing.clone() });
+        let c = Coordinator::start_with_models(
+            cfg,
+            vec![
+                ("default".to_string(), base.clone()),
+                ("gp@0".to_string(), base.clone()),
+                ("gp@1".to_string(), flaky),
+            ],
+        )
+        .unwrap();
+
+        // Mid-fault traffic: failover re-routes every gp@1-affine seed to
+        // gp@0 with byte-identical output, and the persistent request
+        // failures trip gp@1's breaker.
+        for seed in 0..32u64 {
+            let want = base.sample(1, seed).unwrap();
+            match c.call_model(Some("gp"), Request::Sample { count: 1, seed }).unwrap() {
+                Response::Samples(s) => assert_eq!(s, want, "seed {seed} diverged"),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(c.metrics().counter("failovers").get() >= 1, "no failover happened");
+        assert!(c.router().breaker_trips("gp@1").unwrap() >= 1, "breaker never tripped");
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(v) => {
+                let members =
+                    v.get_path("cluster.sets.gp.members").and_then(Value::as_array).unwrap();
+                assert_eq!(members[1].get("name").and_then(Value::as_str), Some("gp@1"));
+                let breaker = members[1].get("breaker").and_then(Value::as_str).unwrap();
+                assert_ne!(breaker, "closed", "tripped member still advertises closed");
+                assert!(
+                    members[1].get("breaker_trips").and_then(Value::as_f64).unwrap() >= 1.0
+                );
+                assert!(
+                    v.get_path("cluster.resilience.failovers").and_then(Value::as_f64).unwrap()
+                        >= 1.0
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Faults clear: after the cooldown a half-open trial succeeds on
+        // live traffic and the breaker closes again, still byte-identical.
+        failing.store(false, Ordering::SeqCst);
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut seed = 1000u64;
+        while c.router().breaker_state("gp@1") != Some(crate::net::BreakerState::Closed) {
+            assert!(Instant::now() < deadline, "breaker never recovered to closed");
+            let want = base.sample(1, seed).unwrap();
+            match c.call_model(Some("gp"), Request::Sample { count: 1, seed }).unwrap() {
+                Response::Samples(s) => assert_eq!(s, want, "seed {seed} diverged"),
+                other => panic!("{other:?}"),
+            }
+            seed += 1;
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn exhausted_retries_answer_a_typed_retry_exhausted_error() {
+        let mut cfg = test_config(1, 4);
+        cfg.replicas =
+            vec![crate::config::ReplicaSpec::homogeneous("gp", Backend::Native, 2).unwrap()];
+        cfg.route_policy = crate::net::RoutePolicy::SeedAffinity;
+        cfg.health_interval_ms = 0;
+        cfg.retry_max = 2;
+        cfg.retry_budget_ms = 10_000;
+        let base = ModelBuilder::from_config(cfg.model.clone()).build().unwrap();
+        let failing = Arc::new(AtomicBool::new(true));
+        let flaky0: Arc<dyn GpModel> =
+            Arc::new(RequestFlakyModel { inner: base.clone(), failing: failing.clone() });
+        let flaky1: Arc<dyn GpModel> =
+            Arc::new(RequestFlakyModel { inner: base.clone(), failing: failing.clone() });
+        let c = Coordinator::start_with_models(
+            cfg,
+            vec![
+                ("default".to_string(), base.clone()),
+                ("gp@0".to_string(), flaky0),
+                ("gp@1".to_string(), flaky1),
+            ],
+        )
+        .unwrap();
+
+        // Every member fails, so bounded retries exhaust and the client
+        // sees the typed terminal error naming the budget and the last
+        // member failure.
+        match c.call_model(Some("gp"), Request::Sample { count: 1, seed: 7 }) {
+            Err(IcrError::RetryExhausted { attempts, budget_ms, last }) => {
+                assert_eq!(attempts, 3, "1 original + retry_max re-executions");
+                assert_eq!(budget_ms, 10_000);
+                assert!(last.contains("synthetic request failure"), "last: {last}");
+            }
+            other => panic!("expected retry exhaustion, got {other:?}"),
+        }
+        assert!(c.metrics().counter("retry_budget_exhausted").get() >= 1);
+        assert!(c.metrics().counter("retries").get() >= 2);
+
+        // A directly-addressed member skips failover and keeps its own
+        // typed backend error.
+        match c.call_model(Some("gp@1"), Request::Sample { count: 1, seed: 7 }) {
+            Err(IcrError::Backend(msg)) => assert!(msg.contains("synthetic"), "{msg}"),
+            other => panic!("expected the member's own error, got {other:?}"),
+        }
+        // Terminal accounting survived the retry storm.
+        let m = c.metrics();
+        assert_eq!(
+            m.counter("requests_submitted").get(),
+            m.counter("requests_completed").get() + m.counter("requests_failed").get()
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn local_fault_injection_arms_and_disarms_without_restart() {
+        let mut cfg = test_config(1, 2);
+        cfg.fault_inject = Some("local:error=1".to_string());
+        let c = Coordinator::start(cfg).unwrap();
+        let err = c.call(Request::Sample { count: 1, seed: 1 }).unwrap_err();
+        assert!(err.is_member_fault());
+        assert!(err.to_string().contains("injected fault"), "got: {err}");
+        // Disarming stops the chaos without restarting the server.
+        c.fault_injector().expect("armed injector").set_armed(false);
+        c.call(Request::Sample { count: 1, seed: 1 }).unwrap();
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(v) => {
+                assert_eq!(v.get_path("cluster.fault.armed"), Some(&Value::Bool(false)));
+                assert!(
+                    v.get_path("cluster.fault.injected.errors").and_then(Value::as_f64).unwrap()
+                        >= 1.0
+                );
+                assert_eq!(
+                    v.get_path("cluster.resilience.retry_max").and_then(Value::as_f64),
+                    Some(2.0)
+                );
+            }
+            other => panic!("{other:?}"),
+        }
         c.shutdown();
     }
 }

@@ -40,6 +40,11 @@ pub enum IcrError {
     ChecksumMismatch { what: String, expected: String, got: String },
     /// Coordinator-internal failure (dropped reply channel, poisoned lock).
     Internal(String),
+    /// A routed request failed retryably, and the failover machinery
+    /// ran out of attempts or deadline budget before any member
+    /// answered (`DESIGN.md` §12). Carries the attempt count, the
+    /// configured budget, and the last member failure.
+    RetryExhausted { attempts: usize, budget_ms: u64, last: String },
 }
 
 impl IcrError {
@@ -58,7 +63,19 @@ impl IcrError {
             IcrError::ArtifactCorrupt(_) => "artifact_corrupt",
             IcrError::ChecksumMismatch { .. } => "checksum_mismatch",
             IcrError::Internal(_) => "internal",
+            IcrError::RetryExhausted { .. } => "retry_exhausted",
         }
+    }
+
+    /// Whether this failure says something about the *member's* health
+    /// (connect refused, call timeout, remote/internal failure) rather
+    /// than about the request itself — the classification shared by
+    /// circuit-breaker accounting and retry/failover gating
+    /// (`DESIGN.md` §12). Client errors (bad shapes, unknown ops,
+    /// unsupported params) are the caller's fault on any member and
+    /// are neither counted against breakers nor retried.
+    pub fn is_member_fault(&self) -> bool {
+        matches!(self, IcrError::Backend(_) | IcrError::Internal(_))
     }
 
     /// Wrap an engine/backend failure, keeping the full anyhow chain.
@@ -91,6 +108,11 @@ impl IcrError {
                 expected: String::new(),
                 got: String::new(),
             },
+            "retry_exhausted" => IcrError::RetryExhausted {
+                attempts: 0,
+                budget_ms: 0,
+                last: message.to_string(),
+            },
             _ => IcrError::Internal(message.to_string()),
         }
     }
@@ -121,6 +143,11 @@ impl fmt::Display for IcrError {
                 write!(f, "{what} checksum mismatch: expected {expected}, got {got}")
             }
             IcrError::Internal(m) => write!(f, "internal error: {m}"),
+            IcrError::RetryExhausted { attempts, budget_ms, last } => write!(
+                f,
+                "retry budget exhausted after {attempts} attempt(s) within {budget_ms} ms; \
+                 last failure: {last}"
+            ),
         }
     }
 }
@@ -156,6 +183,7 @@ mod tests {
                 got: "bb".into(),
             },
             IcrError::Internal("x".into()),
+            IcrError::RetryExhausted { attempts: 3, budget_ms: 100, last: "x".into() },
         ];
         let kinds: std::collections::BTreeSet<&str> = errs.iter().map(|e| e.kind()).collect();
         assert_eq!(kinds.len(), errs.len());

@@ -106,6 +106,15 @@ fn print_help() {
         FlagSpec { name: "route-policy", help: "round_robin | least_outstanding | seed_affinity", default: Some("seed_affinity"), is_switch: false },
         FlagSpec { name: "cache-entries", help: "response-cache bound for (seed, count) samples (0 = off)", default: Some("0"), is_switch: false },
         FlagSpec { name: "health-interval-ms", help: "replica health-probe period (0 = no monitor)", default: Some("2000"), is_switch: false },
+        FlagSpec { name: "breaker-window", help: "circuit-breaker sliding window of per-member outcomes (0 = off)", default: Some("16"), is_switch: false },
+        FlagSpec { name: "breaker-trip-ratio", help: "failure ratio over a full window that opens the breaker", default: Some("0.5"), is_switch: false },
+        FlagSpec { name: "breaker-cooldown-ms", help: "open → half-open cooldown before bounded trial requests", default: Some("1000"), is_switch: false },
+        FlagSpec { name: "retry-max", help: "failover re-executions per routed idempotent request (0 = off)", default: Some("2"), is_switch: false },
+        FlagSpec { name: "retry-budget-ms", help: "deadline budget per request, anchored at enqueue", default: Some("10000"), is_switch: false },
+        FlagSpec { name: "remote-call-timeout-ms", help: "remote member data-call timeout", default: Some("120000"), is_switch: false },
+        FlagSpec { name: "remote-probe-timeout-ms", help: "remote member health-probe timeout", default: Some("2000"), is_switch: false },
+        FlagSpec { name: "remote-connect-timeout-ms", help: "remote member data-wire connect timeout", default: Some("5000"), is_switch: false },
+        FlagSpec { name: "fault-inject", help: "chaos spec, e.g. remote:error=0.1,delay_ms=50;local:drop=0.02", default: None, is_switch: false },
         FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
         FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
         FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
@@ -143,6 +152,10 @@ fn print_help() {
     println!("  eject dead members, --cache-entries caches deterministic samples.");
     println!("  icr save/load persist versioned model artifacts (§10); a live server");
     println!("  hot-swaps an entry from one via the v2 reload_model op.");
+    println!("  Request-level circuit breakers (--breaker-*) trip members that error");
+    println!("  under load, deadline-budgeted failover (--retry-max, --retry-budget-ms)");
+    println!("  re-routes idempotent requests byte-identically, and --fault-inject");
+    println!("  arms the deterministic chaos harness (§12).");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -292,7 +305,7 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
     net::install_sigint_handler();
     let server = NetServer::bind(cfg, coord.clone())?;
     eprintln!(
-        "{} | serve: listening on {} | io_mode {} | models [{}] | workers {} | batch_max {} | batch_window_us {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {}",
+        "{} | serve: listening on {} | io_mode {} | models [{}] | workers {} | batch_max {} | batch_window_us {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {} | breaker {}/{:.2}/{}ms | retry {}x/{}ms{}",
         protocol_line(),
         server.local_addr(),
         cfg.io_mode.name(),
@@ -306,6 +319,15 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
         cfg.route_policy.name(),
         cfg.cache_entries,
         cfg.health_interval_ms,
+        cfg.breaker_window,
+        cfg.breaker_trip_ratio,
+        cfg.breaker_cooldown_ms,
+        cfg.retry_max,
+        cfg.retry_budget_ms,
+        match &cfg.fault_inject {
+            Some(spec) => format!(" | fault_inject {spec}"),
+            None => String::new(),
+        },
     );
     server.run()?;
     eprintln!("{}", coord.stats_json().to_json_pretty());

@@ -301,6 +301,15 @@ pub trait GpModel: Send + Sync {
         "local".into()
     }
 
+    /// Downcast to the remote proxy, when this model is one. The
+    /// coordinator's batcher uses this to reach the pipelined
+    /// submit/finish pair ([`crate::cluster::RemoteModel::proxy_submit`])
+    /// so a coalesced batch of K proxied requests costs one round trip
+    /// instead of K serial ones. In-process engines return `None`.
+    fn as_remote(&self) -> Option<&crate::cluster::RemoteModel> {
+        None
+    }
+
     /// Cheap liveness probe. In-process engines are alive by
     /// construction; remote backends override this with a wire round
     /// trip, and the coordinator's health monitor ejects replica-set

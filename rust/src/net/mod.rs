@@ -42,7 +42,7 @@ pub mod router;
 pub mod session;
 pub mod transport;
 
-pub use router::{MemberState, ReplicaSet, RoutePolicy, Router};
+pub use router::{BreakerConfig, BreakerState, MemberState, ReplicaSet, RoutePolicy, Router};
 pub use transport::{install_sigint_handler, sigint_requested, NetServer};
 
 use std::fmt;

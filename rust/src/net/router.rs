@@ -17,6 +17,15 @@
 //! router falls back to the full set (availability over purity — a
 //! wholly ejected set keeps answering rather than blackholing).
 //!
+//! **Circuit breakers** (`DESIGN.md` §12): orthogonally to probe-driven
+//! health, every member carries a request-level breaker fed by
+//! [`Router::record_outcome`] — sliding-window failure accounting with a
+//! Closed → Open → Half-Open state machine, so a member that answers
+//! probes but errors or times out on real requests stops receiving
+//! traffic (typed `member_tripped` reason in stats) until bounded
+//! Half-Open trials prove it recovered. A tripped member's seeds remap
+//! under rendezvous hashing exactly like an ejected one's.
+//!
 //! Determinism: every member of a set serves the same model, so `sample`
 //! bytes are identical regardless of the policy's choice; `seed_affinity`
 //! additionally pins a given seed to a fixed member via **rendezvous
@@ -26,8 +35,10 @@
 //! unrelated seeds never change (property-tested below and in
 //! `cluster_e2e.rs`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Request;
 use crate::json::{self, Value};
@@ -114,20 +125,172 @@ impl MemberState {
     }
 }
 
+/// Request-level circuit-breaker tuning, shared by every member
+/// (`DESIGN.md` §12). Health probes catch dead processes; the breaker
+/// catches members that answer probes but fail *requests*.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakerConfig {
+    /// Sliding window of recent request outcomes per member. A member
+    /// trips only once the window is full, so a single early failure
+    /// cannot open the circuit. `0` disables breakers entirely.
+    pub window: usize,
+    /// Failure ratio within a full window that trips Closed → Open.
+    pub trip_ratio: f64,
+    /// How long a tripped member stays Open before Half-Open trials.
+    pub cooldown: Duration,
+    /// Bounded trial requests admitted while Half-Open.
+    pub trials: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            window: 16,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_millis(1000),
+            trials: 2,
+        }
+    }
+}
+
+/// Circuit-breaker state of one member. Composes with [`MemberState`]:
+/// a member receives new traffic only when Healthy *and* its breaker
+/// admits it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal operation; outcomes accumulate in the sliding window.
+    Closed,
+    /// Tripped: no new traffic until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: a bounded number of trial requests probe the
+    /// member; one success re-closes, one failure re-opens.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Per-member sliding-window failure accounting (`true` = failure).
+struct Breaker {
+    outcomes: VecDeque<bool>,
+    failures: usize,
+    state: BreakerState,
+    opened_at: Option<Instant>,
+    trials_issued: usize,
+    trips: u64,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            outcomes: VecDeque::new(),
+            failures: 0,
+            state: BreakerState::Closed,
+            opened_at: None,
+            trials_issued: 0,
+            trips: 0,
+        }
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.opened_at = Some(Instant::now());
+        self.trips += 1;
+        self.outcomes.clear();
+        self.failures = 0;
+        self.trials_issued = 0;
+    }
+
+    fn reset(&mut self) {
+        self.state = BreakerState::Closed;
+        self.opened_at = None;
+        self.outcomes.clear();
+        self.failures = 0;
+        self.trials_issued = 0;
+    }
+
+    /// Whether the member may receive new traffic right now. Lazily
+    /// advances Open → Half-Open once the cooldown has elapsed.
+    fn admits(&mut self, cfg: &BreakerConfig) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                let elapsed = self.opened_at.map(|t| t.elapsed()).unwrap_or(cfg.cooldown);
+                if elapsed >= cfg.cooldown {
+                    self.state = BreakerState::HalfOpen;
+                    self.trials_issued = 0;
+                    cfg.trials > 0
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => self.trials_issued < cfg.trials,
+        }
+    }
+
+    /// Called when the member is actually selected for a request.
+    fn note_routed(&mut self) {
+        if self.state == BreakerState::HalfOpen {
+            self.trials_issued += 1;
+        }
+    }
+
+    /// Record one request outcome for this member.
+    fn record(&mut self, cfg: &BreakerConfig, ok: bool) {
+        match self.state {
+            BreakerState::Closed => {
+                if self.outcomes.len() == cfg.window {
+                    if self.outcomes.pop_front() == Some(true) {
+                        self.failures -= 1;
+                    }
+                }
+                self.outcomes.push_back(!ok);
+                if !ok {
+                    self.failures += 1;
+                }
+                let full = self.outcomes.len() >= cfg.window;
+                if full && self.failures as f64 >= cfg.trip_ratio * cfg.window as f64 {
+                    self.trip();
+                }
+            }
+            BreakerState::HalfOpen => {
+                if ok {
+                    self.reset();
+                } else {
+                    self.trip();
+                }
+            }
+            // Straggler outcomes from requests issued before the trip:
+            // the window restarts from scratch at Half-Open.
+            BreakerState::Open => {}
+        }
+    }
+}
+
 /// One logical replica set: ordered member entry names plus routing
-/// state (rotation cursor, per-member routed counters, member states).
+/// state (rotation cursor, per-member routed counters, member states,
+/// circuit breakers).
 pub struct ReplicaSet {
     members: Vec<String>,
     rr: AtomicUsize,
     routed: Vec<AtomicU64>,
     state: Vec<AtomicU8>,
+    breaker: Vec<Mutex<Breaker>>,
 }
 
 impl ReplicaSet {
     fn new(members: Vec<String>) -> ReplicaSet {
         let routed = members.iter().map(|_| AtomicU64::new(0)).collect();
         let state = members.iter().map(|_| AtomicU8::new(0)).collect();
-        ReplicaSet { members, rr: AtomicUsize::new(0), routed, state }
+        let breaker = members.iter().map(|_| Mutex::new(Breaker::new())).collect();
+        ReplicaSet { members, rr: AtomicUsize::new(0), routed, state, breaker }
     }
 
     pub fn members(&self) -> &[String] {
@@ -147,16 +310,41 @@ impl ReplicaSet {
         self.state[i].store(s.as_u8(), Ordering::SeqCst);
     }
 
-    /// Indices of members eligible for new traffic. Falls back to every
-    /// member when none is healthy, so a fully ejected set still routes.
-    fn available(&self) -> Vec<usize> {
+    /// This member's breaker state (read-only; does not advance
+    /// Open → Half-Open).
+    pub fn breaker_state(&self, i: usize) -> BreakerState {
+        self.breaker[i].lock().unwrap().state
+    }
+
+    /// How many times this member's breaker has tripped to Open.
+    pub fn breaker_trips(&self, i: usize) -> u64 {
+        self.breaker[i].lock().unwrap().trips
+    }
+
+    /// Indices of members eligible for new traffic: Healthy *and*
+    /// admitted by their circuit breaker. Availability over purity, in
+    /// two stages: if every healthy member is tripped, breakers are
+    /// ignored (a wholly tripped set keeps answering); if no member is
+    /// healthy at all, the full set is used.
+    fn available(&self, cfg: &BreakerConfig) -> Vec<usize> {
         let healthy: Vec<usize> = (0..self.members.len())
             .filter(|&i| self.member_state(i) == MemberState::Healthy)
             .collect();
         if healthy.is_empty() {
-            (0..self.members.len()).collect()
-        } else {
+            return (0..self.members.len()).collect();
+        }
+        if cfg.window == 0 {
+            return healthy;
+        }
+        let admitted: Vec<usize> = healthy
+            .iter()
+            .copied()
+            .filter(|&i| self.breaker[i].lock().unwrap().admits(cfg))
+            .collect();
+        if admitted.is_empty() {
             healthy
+        } else {
+            admitted
         }
     }
 }
@@ -189,12 +377,22 @@ fn rendezvous_weight(seed: u64, member: &str) -> u64 {
 /// Maps logical replica-set names to member registry entries.
 pub struct Router {
     policy: RoutePolicy,
+    breaker_cfg: BreakerConfig,
     sets: BTreeMap<String, ReplicaSet>,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Router {
-        Router { policy, sets: BTreeMap::new() }
+        Router { policy, breaker_cfg: BreakerConfig::default(), sets: BTreeMap::new() }
+    }
+
+    /// Replace the circuit-breaker tuning (before serving starts).
+    pub fn set_breaker_config(&mut self, cfg: BreakerConfig) {
+        self.breaker_cfg = cfg;
+    }
+
+    pub fn breaker_config(&self) -> &BreakerConfig {
+        &self.breaker_cfg
     }
 
     /// Register a logical name over its (non-empty, ordered) members.
@@ -253,6 +451,85 @@ impl Router {
         None
     }
 
+    /// Record one request outcome into the member's circuit breaker,
+    /// across every set hosting it. No-op for unrouted names and when
+    /// breakers are disabled (`window == 0`). Only *member-attributable*
+    /// failures should be fed here (see [`crate::error::IcrError::
+    /// is_member_fault`]) — a client's shape mismatch says nothing about
+    /// the member's health.
+    pub fn record_outcome(&self, member: &str, ok: bool) {
+        if self.breaker_cfg.window == 0 {
+            return;
+        }
+        for set in self.sets.values() {
+            for (i, m) in set.members.iter().enumerate() {
+                if m == member {
+                    set.breaker[i].lock().unwrap().record(&self.breaker_cfg, ok);
+                }
+            }
+        }
+    }
+
+    /// A member's breaker state (first set hosting it).
+    pub fn breaker_state(&self, member: &str) -> Option<BreakerState> {
+        for set in self.sets.values() {
+            for (i, m) in set.members.iter().enumerate() {
+                if m == member {
+                    return Some(set.breaker_state(i));
+                }
+            }
+        }
+        None
+    }
+
+    /// Total breaker trips of a member (first set hosting it).
+    pub fn breaker_trips(&self, member: &str) -> Option<u64> {
+        for set in self.sets.values() {
+            for (i, m) in set.members.iter().enumerate() {
+                if m == member {
+                    return Some(set.breaker_trips(i));
+                }
+            }
+        }
+        None
+    }
+
+    /// Apply the routing policy to a non-empty candidate index list.
+    fn pick(
+        &self,
+        set: &ReplicaSet,
+        avail: &[usize],
+        request: &Request,
+        outstanding: &dyn Fn(&str) -> u64,
+    ) -> usize {
+        let n = avail.len();
+        match self.policy {
+            RoutePolicy::RoundRobin => avail[set.rr.fetch_add(1, Ordering::Relaxed) % n],
+            RoutePolicy::LeastOutstanding => avail
+                .iter()
+                .copied()
+                .min_by_key(|&i| (outstanding(&set.members[i]), i))
+                .expect("candidate list is never empty"),
+            RoutePolicy::SeedAffinity => match affinity_seed(request) {
+                Some(seed) => avail
+                    .iter()
+                    .copied()
+                    .max_by_key(|&i| (rendezvous_weight(seed, &set.members[i]), std::cmp::Reverse(i)))
+                    .expect("candidate list is never empty"),
+                None => avail[set.rr.fetch_add(1, Ordering::Relaxed) % n],
+            },
+        }
+    }
+
+    /// Bookkeeping for a routed selection: routed counter plus the
+    /// breaker's Half-Open trial budget.
+    fn note_routed(&self, set: &ReplicaSet, idx: usize) {
+        set.routed[idx].fetch_add(1, Ordering::Relaxed);
+        if self.breaker_cfg.window != 0 {
+            set.breaker[idx].lock().unwrap().note_routed();
+        }
+    }
+
     /// Resolve a logical name to a member entry name, or `None` if the
     /// name is not a replica set. `outstanding` reports a member's
     /// currently in-flight request count (least-outstanding input).
@@ -263,25 +540,35 @@ impl Router {
         outstanding: &dyn Fn(&str) -> u64,
     ) -> Option<&str> {
         let set = self.sets.get(logical)?;
-        let avail = set.available();
-        let n = avail.len();
-        let idx = match self.policy {
-            RoutePolicy::RoundRobin => avail[set.rr.fetch_add(1, Ordering::Relaxed) % n],
-            RoutePolicy::LeastOutstanding => avail
-                .iter()
-                .copied()
-                .min_by_key(|&i| (outstanding(&set.members[i]), i))
-                .expect("available() is never empty"),
-            RoutePolicy::SeedAffinity => match affinity_seed(request) {
-                Some(seed) => avail
-                    .iter()
-                    .copied()
-                    .max_by_key(|&i| (rendezvous_weight(seed, &set.members[i]), std::cmp::Reverse(i)))
-                    .expect("available() is never empty"),
-                None => avail[set.rr.fetch_add(1, Ordering::Relaxed) % n],
-            },
-        };
-        set.routed[idx].fetch_add(1, Ordering::Relaxed);
+        let avail = set.available(&self.breaker_cfg);
+        let idx = self.pick(set, &avail, request, outstanding);
+        self.note_routed(set, idx);
+        Some(&set.members[idx])
+    }
+
+    /// Failover routing: like [`Router::route`], but skips the members
+    /// in `exclude` (already-tried members) and returns `None` instead
+    /// of falling back when no other member is available. The policy
+    /// still applies among the survivors, so seed affinity re-ranks
+    /// deterministically exactly as it would after an ejection.
+    pub fn route_excluding(
+        &self,
+        logical: &str,
+        request: &Request,
+        outstanding: &dyn Fn(&str) -> u64,
+        exclude: &[String],
+    ) -> Option<&str> {
+        let set = self.sets.get(logical)?;
+        let avail: Vec<usize> = set
+            .available(&self.breaker_cfg)
+            .into_iter()
+            .filter(|&i| !exclude.iter().any(|e| e == &set.members[i]))
+            .collect();
+        if avail.is_empty() {
+            return None;
+        }
+        let idx = self.pick(set, &avail, request, outstanding);
+        self.note_routed(set, idx);
         Some(&set.members[idx])
     }
 
@@ -296,12 +583,21 @@ impl Router {
                 .iter()
                 .enumerate()
                 .map(|(i, m)| {
-                    json::obj(vec![
+                    let breaker = set.breaker_state(i);
+                    let mut fields = vec![
                         ("name", json::s(m)),
                         ("state", json::s(set.member_state(i).name())),
+                        ("breaker", json::s(breaker.name())),
+                        ("breaker_trips", json::num(set.breaker_trips(i) as f64)),
                         ("routed", json::num(set.routed_to(i) as f64)),
                         ("outstanding", json::num(outstanding(m) as f64)),
-                    ])
+                    ];
+                    if breaker != BreakerState::Closed {
+                        // Typed reason: why selection is skipping (or
+                        // only trialing) a probe-healthy member.
+                        fields.insert(3, ("breaker_reason", json::s("member_tripped")));
+                    }
+                    json::obj(fields)
                 })
                 .collect();
             sets.insert(logical.clone(), json::obj(vec![("members", json::arr(members))]));
@@ -469,6 +765,161 @@ mod tests {
         assert_eq!(r.member_state("gp@0"), Some(MemberState::Ejected));
         assert_eq!(r.member_state("nope"), None);
         assert!(!r.set_member_state("nope", MemberState::Healthy));
+    }
+
+    /// A router with a fast-reacting breaker: window `w`, 50% trip
+    /// ratio, zero cooldown (Half-Open on the next selection pass),
+    /// one trial.
+    fn breaker_router(n: usize, window: usize) -> Router {
+        let mut r = Router::new(RoutePolicy::SeedAffinity);
+        r.set_breaker_config(BreakerConfig {
+            window,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_millis(0),
+            trials: 1,
+        });
+        r.add_set("gp", members(n));
+        r
+    }
+
+    #[test]
+    fn breaker_trips_after_a_full_window_of_failures() {
+        let r = breaker_router(2, 4);
+        let none = |_: &str| 0u64;
+        // Three failures: window not yet full, still Closed and routable.
+        for _ in 0..3 {
+            r.record_outcome("gp@1", false);
+        }
+        assert_eq!(r.breaker_state("gp@1"), Some(BreakerState::Closed));
+        r.record_outcome("gp@1", false);
+        assert_eq!(r.breaker_state("gp@1"), Some(BreakerState::Open));
+        assert_eq!(r.breaker_trips("gp@1"), Some(1));
+        // Unrouted members have no breaker.
+        assert_eq!(r.breaker_state("nope"), None);
+        let _ = r.route("gp", &sample(0), &none);
+        // JSON carries the typed reason (cooldown is 0, so by now the
+        // routing pass above advanced the breaker to half_open).
+        let v = r.to_json(&none);
+        let m = v.get_path("sets.gp.members").and_then(Value::as_array).unwrap();
+        assert_eq!(m[1].get("breaker_reason").and_then(Value::as_str), Some("member_tripped"));
+        assert!(m[0].get("breaker_reason").is_none());
+        assert_eq!(m[0].get("breaker").and_then(Value::as_str), Some("closed"));
+    }
+
+    #[test]
+    fn breaker_mixed_outcomes_below_ratio_stay_closed() {
+        let r = breaker_router(2, 4);
+        // 1 failure in 4 (25% < 50%): stays Closed; the window slides.
+        for ok in [false, true, true, true, true, false, true] {
+            r.record_outcome("gp@0", ok);
+        }
+        assert_eq!(r.breaker_state("gp@0"), Some(BreakerState::Closed));
+        assert_eq!(r.breaker_trips("gp@0"), Some(0));
+    }
+
+    #[test]
+    fn tripped_member_seeds_remap_exactly_like_ejection() {
+        let none = |_: &str| 0u64;
+        let mut tripped = breaker_router(3, 4);
+        let ejected = breaker_router(3, 4);
+        let before: Vec<String> = (0..128u64)
+            .map(|s| tripped.route("gp", &sample(s), &none).unwrap().to_string())
+            .collect();
+        for _ in 0..4 {
+            tripped.record_outcome("gp@1", false);
+        }
+        // Pin the breaker Open for the comparison (cooldown 0 would
+        // otherwise admit Half-Open trials mid-loop).
+        tripped.set_breaker_config(BreakerConfig {
+            cooldown: Duration::from_secs(3600),
+            ..*tripped.breaker_config()
+        });
+        ejected.set_member_state("gp@1", MemberState::Ejected);
+        for (s, old) in before.iter().enumerate() {
+            let a = tripped.route("gp", &sample(s as u64), &none).unwrap().to_string();
+            let b = ejected.route("gp", &sample(s as u64), &none).unwrap().to_string();
+            assert_eq!(a, b, "seed {s} (was {old}) diverged between trip and ejection");
+            assert_ne!(a, "gp@1", "seed {s} routed to the tripped member");
+        }
+    }
+
+    #[test]
+    fn half_open_admits_bounded_trials_and_recovers_or_retrips() {
+        let r = breaker_router(2, 2);
+        let none = |_: &str| 0u64;
+        // Work out which member seed 0 pins to, then trip it.
+        let pinned = r.route("gp", &sample(0), &none).unwrap().to_string();
+        r.record_outcome(&pinned, false);
+        r.record_outcome(&pinned, false);
+        assert_eq!(r.breaker_state(&pinned), Some(BreakerState::Open));
+        // Cooldown 0: the next pass admits it as a Half-Open trial and
+        // seed affinity sends its pinned seed straight back.
+        assert_eq!(r.route("gp", &sample(0), &none).unwrap(), pinned);
+        assert_eq!(r.breaker_state(&pinned), Some(BreakerState::HalfOpen));
+        // Trial budget (1) spent: the next selection skips it.
+        assert_ne!(r.route("gp", &sample(0), &none).unwrap(), pinned);
+        // Trial failure re-opens (counts as a second trip) …
+        r.record_outcome(&pinned, false);
+        assert_eq!(r.breaker_state(&pinned), Some(BreakerState::Open));
+        assert_eq!(r.breaker_trips(&pinned), Some(2));
+        // … and a successful trial after the next admission re-closes.
+        assert_eq!(r.route("gp", &sample(0), &none).unwrap(), pinned);
+        r.record_outcome(&pinned, true);
+        assert_eq!(r.breaker_state(&pinned), Some(BreakerState::Closed));
+        // Fully recovered: selection and a fresh window behave normally.
+        assert_eq!(r.route("gp", &sample(0), &none).unwrap(), pinned);
+    }
+
+    #[test]
+    fn wholly_tripped_set_still_routes() {
+        // Long cooldown pins tripped breakers Open.
+        let mut r = breaker_router(2, 2);
+        r.set_breaker_config(BreakerConfig {
+            window: 2,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_secs(3600),
+            trials: 1,
+        });
+        for m in ["gp@0", "gp@1"] {
+            r.record_outcome(m, false);
+            r.record_outcome(m, false);
+            assert_eq!(r.breaker_state(m), Some(BreakerState::Open));
+        }
+        let none = |_: &str| 0u64;
+        // Availability over purity: breakers are ignored when they
+        // would blackhole the whole set.
+        assert!(r.route("gp", &sample(7), &none).is_some());
+    }
+
+    #[test]
+    fn disabled_breaker_never_trips_and_route_excluding_fails_over() {
+        let mut r = Router::new(RoutePolicy::SeedAffinity);
+        r.set_breaker_config(BreakerConfig { window: 0, ..BreakerConfig::default() });
+        r.add_set("gp", members(3));
+        for _ in 0..64 {
+            r.record_outcome("gp@0", false);
+        }
+        assert_eq!(r.breaker_state("gp@0"), Some(BreakerState::Closed));
+
+        // route_excluding skips the excluded members deterministically
+        // and returns None (no fallback) once every member is excluded.
+        let none = |_: &str| 0u64;
+        let first = r.route("gp", &sample(3), &none).unwrap().to_string();
+        let mut tried = vec![first.clone()];
+        let second = r
+            .route_excluding("gp", &sample(3), &none, &tried)
+            .unwrap()
+            .to_string();
+        assert_ne!(second, first);
+        tried.push(second.clone());
+        let third = r
+            .route_excluding("gp", &sample(3), &none, &tried)
+            .unwrap()
+            .to_string();
+        assert!(third != first && third != second);
+        tried.push(third);
+        assert!(r.route_excluding("gp", &sample(3), &none, &tried).is_none());
+        assert!(r.route_excluding("nope", &sample(3), &none, &[]).is_none());
     }
 
     #[test]

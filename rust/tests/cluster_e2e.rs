@@ -13,13 +13,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use icr::artifact::{self, Snapshot};
-use icr::cluster::RemoteModel;
+use icr::cluster::{RemoteModel, RemoteTimeouts};
 use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
-use icr::coordinator::{Coordinator, Request, Response};
+use icr::coordinator::{protocol, Coordinator, Request, Response};
 use icr::error::IcrError;
 use icr::json::Value;
 use icr::model::{GpModel, ModelBuilder};
-use icr::net::{ListenAddr, MemberState, NetServer};
+use icr::net::{BreakerState, ListenAddr, MemberState, NetServer};
 
 static SOCK_ID: AtomicUsize = AtomicUsize::new(0);
 
@@ -606,4 +606,305 @@ fn describe_op_serves_identity_over_the_wire() {
     assert_eq!(d.get("dof").and_then(Value::as_usize), Some(engine.total_dof()));
     let domain = v.get_path("result.describe.domain").and_then(Value::as_array).unwrap();
     assert_eq!(domain.len(), engine.n_points());
+}
+
+/// Backend whose chaos harness fails every model call while control
+/// traffic (stats probes, describe identity) stays green — the
+/// request-level failure mode health checks cannot see (`DESIGN.md`
+/// §12).
+fn start_faulty_backend(fault: &str) -> BackendServer {
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Tcp("127.0.0.1:0".into()),
+        fault_inject: Some(fault.to_string()),
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("faulty backend coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind faulty backend");
+    let addr = server.local_addr().strip_prefix("tcp:").expect("tcp addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    BackendServer { addr, coord, stop, handle: Some(handle) }
+}
+
+#[test]
+fn request_level_breaker_trips_fails_over_and_recovers_e2e() {
+    let backend = start_faulty_backend("local:error=1");
+    let mut cfg = front_cfg(&[&backend]);
+    cfg.health_interval_ms = 100;
+    cfg.breaker_window = 4;
+    cfg.breaker_trip_ratio = 0.5;
+    cfg.breaker_cooldown_ms = 100;
+    cfg.retry_max = 2;
+    cfg.retry_budget_ms = 10_000;
+    let front = Coordinator::start(cfg).expect("front door");
+    let engine = front.engine().clone();
+    assert_eq!(front.router().member_state("gp@1"), Some(MemberState::Healthy));
+
+    // Mid-fault traffic: every reply stays byte-identical to a
+    // single-node engine (failover re-executes on the local member),
+    // the erroring member's breaker trips, and the health monitor never
+    // ejects it — its probes keep succeeding.
+    for seed in 0..32u64 {
+        let want = engine.sample(1, seed).unwrap();
+        match front.call_model(Some("gp"), Request::Sample { count: 1, seed }) {
+            Ok(Response::Samples(s)) => assert_eq!(s, want, "seed {seed}"),
+            other => panic!("seed {seed}: {other:?}"),
+        }
+    }
+    assert!(
+        front.router().breaker_trips("gp@1").expect("gp@1 breaker") >= 1,
+        "request-erroring member never tripped its breaker"
+    );
+    assert!(front.metrics().counter("failovers").get() >= 1, "no failover recorded");
+    assert_eq!(
+        front.metrics().counter("health_ejections").get(),
+        0,
+        "probes must stay green while requests error"
+    );
+    assert_eq!(front.router().member_state("gp@1"), Some(MemberState::Healthy));
+
+    // Chaos off: a half-open trial succeeds on live traffic and the
+    // breaker closes again, with byte-identity throughout.
+    backend.coord.fault_injector().expect("backend injector").set_armed(false);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut seed = 500u64;
+    while front.router().breaker_state("gp@1") != Some(BreakerState::Closed) {
+        assert!(Instant::now() < deadline, "breaker never closed after chaos cleared");
+        let want = engine.sample(1, seed).unwrap();
+        match front.call_model(Some("gp"), Request::Sample { count: 1, seed }) {
+            Ok(Response::Samples(s)) => assert_eq!(s, want, "seed {seed}"),
+            other => panic!("seed {seed}: {other:?}"),
+        }
+        seed += 1;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    front.shutdown();
+}
+
+#[test]
+fn retry_exhaustion_answers_typed_error_with_original_correlation_id() {
+    // Every member of the set fails: the local member through the front
+    // door's own armed injector, the remote one through the backend's.
+    // Bounded retries exhaust and the wire client gets a typed
+    // `retry_exhausted` frame carrying its own correlation id.
+    let backend = start_faulty_backend("local:error=1");
+    let mut cfg = front_cfg(&[&backend]);
+    cfg.fault_inject = Some("local:error=1".into());
+    cfg.retry_max = 2;
+    cfg.retry_budget_ms = 10_000;
+    let sock = sock_path();
+    cfg.listen = ListenAddr::Unix(sock.clone());
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut client = Client::unix(&sock);
+    let v = client
+        .rpc(r#"{"v": 2, "op": "sample", "model": "gp", "id": 4242, "count": 1, "seed": 9}"#);
+    assert_eq!(v.get("id").and_then(Value::as_f64), Some(4242.0), "correlation id lost: {v:?}");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{v:?}");
+    assert_eq!(
+        v.get_path("error.kind").and_then(Value::as_str),
+        Some("retry_exhausted"),
+        "{v:?}"
+    );
+    let msg = v.get_path("error.message").and_then(Value::as_str).expect("message");
+    assert!(msg.contains("retry budget exhausted"), "unexpected message: {msg}");
+
+    // The stats document accounts for the exhaustion and the retries
+    // that led to it.
+    let stats = client.rpc(r#"{"v": 2, "op": "stats", "id": 7}"#);
+    let resilience = stats.get_path("result.stats.cluster.resilience").expect("resilience");
+    assert!(
+        resilience.get("retry_budget_exhausted").and_then(Value::as_f64).unwrap_or(0.0) >= 1.0,
+        "{resilience:?}"
+    );
+    assert!(
+        resilience.get("retries").and_then(Value::as_f64).unwrap_or(0.0) >= 2.0,
+        "{resilience:?}"
+    );
+
+    drop(client);
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_file(&sock).ok();
+}
+
+#[test]
+fn seeded_fault_injection_is_reproducible_and_seed_sensitive() {
+    // One worker and strictly serial calls make the injector's draw
+    // order deterministic: the same server seed must reproduce the
+    // exact per-request fault schedule, and a different seed must not.
+    let run = |seed: u64| -> (Vec<bool>, u64) {
+        let cfg = ServerConfig {
+            model: small_model(),
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 100,
+            idle_timeout_ms: 0,
+            health_interval_ms: 0,
+            seed,
+            fault_inject: Some("local:error=0.4".into()),
+            retry_max: 0,
+            ..ServerConfig::default()
+        };
+        let c = Coordinator::start(cfg).expect("coordinator");
+        let pattern: Vec<bool> =
+            (0..64u64).map(|s| c.call(Request::Sample { count: 1, seed: s }).is_ok()).collect();
+        let injected = c.fault_injector().expect("injector").injected_errors();
+        c.shutdown();
+        (pattern, injected)
+    };
+    let (a1, e1) = run(1234);
+    let (a2, e2) = run(1234);
+    assert_eq!(a1, a2, "same seed must reproduce the exact fault schedule");
+    assert_eq!(e1, e2);
+    assert!(e1 > 0, "p=0.4 over 64 requests never fired");
+    assert!(a1.iter().any(|ok| *ok), "p=0.4 failed every request");
+    let (b1, _) = run(99);
+    assert_ne!(a1, b1, "changing the seed must change the fault schedule");
+}
+
+/// One fake-shard connection: buffer every incoming frame, and only
+/// once `batch` frames have arrived across ALL connections answer the
+/// ones buffered here — each with a marker row holding that frame's
+/// seed, so correlation survives the pipelining.
+fn fake_shard_conn(
+    stream: std::net::TcpStream,
+    total: Arc<AtomicUsize>,
+    gate: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    batch: usize,
+) {
+    stream.set_read_timeout(Some(Duration::from_millis(25))).ok();
+    let mut writer = stream.try_clone().expect("clone fake shard conn");
+    let mut reader = BufReader::new(stream);
+    let mut pending: Vec<(u64, f64)> = Vec::new();
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line.ends_with('\n') => {
+                let v = Value::parse(line.trim()).expect("request frame");
+                let id = v.get("id").and_then(Value::as_f64).expect("wire id") as u64;
+                let seed = v.get("seed").and_then(Value::as_f64).expect("seed");
+                pending.push((id, seed));
+                total.fetch_add(1, Ordering::SeqCst);
+                line.clear();
+            }
+            Ok(_) => {} // partial line: keep accumulating
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let seen = total.load(Ordering::SeqCst);
+                if seen >= batch && !pending.is_empty() {
+                    let _ = gate.compare_exchange(0, seen, Ordering::SeqCst, Ordering::SeqCst);
+                    for (id, seed) in pending.drain(..) {
+                        let frame = protocol::encode_response(
+                            2,
+                            id,
+                            None,
+                            &Ok(Response::Samples(vec![vec![seed]])),
+                        );
+                        writeln!(writer, "{}", frame.to_json()).expect("fake shard reply");
+                    }
+                    writer.flush().ok();
+                }
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+#[test]
+fn coalesced_remote_batch_pipelines_all_frames_before_any_reply() {
+    // A shard that withholds every reply until ALL frames of the batch
+    // are on the wire: a coordinator that awaited each proxied reply
+    // before submitting the next would starve against it (each finish
+    // would wait on a reply gated on frames not yet sent), so four
+    // correct answers prove the submit-all-then-await pipelining.
+    const BATCH: usize = 4;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind fake shard");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let total = Arc::new(AtomicUsize::new(0));
+    let gate = Arc::new(AtomicUsize::new(0)); // frames seen when the first reply went out
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let (total, gate, stop) = (total.clone(), gate.clone(), stop.clone());
+        std::thread::spawn(move || {
+            listener.set_nonblocking(true).expect("nonblocking");
+            let mut conns = Vec::new();
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        let (total, gate, stop) = (total.clone(), gate.clone(), stop.clone());
+                        conns.push(std::thread::spawn(move || {
+                            fake_shard_conn(s, total, gate, stop, BATCH)
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })
+    };
+
+    // A deferred proxy needs no identity handshake, so the fake shard
+    // only ever sees the pipelined sample frames. Short call timeout:
+    // a serial regression fails the test fast instead of hanging.
+    let timeouts = RemoteTimeouts {
+        call: Duration::from_secs(10),
+        probe: Duration::from_secs(2),
+        connect: Duration::from_secs(5),
+    };
+    let remote: Arc<dyn GpModel> = Arc::new(
+        RemoteModel::deferred_with(&format!("tcp:{addr}"), None, timeouts, None)
+            .expect("deferred proxy"),
+    );
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 1,
+        max_batch: 8,
+        max_wait_us: 200_000, // hold the window open while all frames queue
+        idle_timeout_ms: 0,
+        health_interval_ms: 0,
+        ..ServerConfig::default()
+    };
+    let c = Coordinator::start_with_models(cfg, vec![("default".into(), remote)])
+        .expect("front coordinator");
+
+    let receivers: Vec<_> = (0..BATCH as u64)
+        .map(|i| c.submit(Request::Sample { count: 1, seed: 40 + i }).1)
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("reply").expect("sample served") {
+            Response::Samples(rows) => {
+                assert_eq!(rows, vec![vec![40.0 + i as f64]], "frame {i} mis-correlated");
+            }
+            other => panic!("frame {i}: {other:?}"),
+        }
+    }
+    assert_eq!(
+        gate.load(Ordering::SeqCst),
+        BATCH,
+        "replies began before the whole batch was submitted"
+    );
+    stop.store(true, Ordering::SeqCst);
+    accept.join().expect("fake shard accept loop");
+    c.shutdown();
 }
