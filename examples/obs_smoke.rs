@@ -1,0 +1,237 @@
+//! Obs-smoke: the CI leg for the observability layer (`DESIGN.md` §13).
+//!
+//! Spawns one backend `icr serve`-equivalent on an ephemeral tcp port
+//! (with a fixed 10 ms injected model-call delay so the remote wire
+//! span has a measurable floor), then a front-door coordinator whose
+//! `gp` replica set mixes a local native member with that backend —
+//! tracing sampled at 100% and a real `--metrics-listen` endpoint on an
+//! ephemeral port. Drives v2 traffic over the front door's unix socket
+//! and asserts:
+//!
+//! - byte parity: untraced replies carry no `trace` field and match the
+//!   single-node engine byte-for-byte;
+//! - `"trace": true` echoes a span tree whose `remote_wire` span covers
+//!   at least the injected backend delay and nests the backend's joined
+//!   `remote:request` span;
+//! - the v2 `traces` op returns committed span trees from the ring;
+//! - a real HTTP scrape of the metrics endpoint answers 200 with
+//!   Prometheus text format 0.0.4 (`icr_` families, `_total` counters,
+//!   `icr_build_info`, cumulative histogram buckets).
+//!
+//! The scrape body and the echoed span tree are written to
+//! `ICR_OBS_DIR` (default `obs-smoke/`) as `metrics.txt` and
+//! `trace.json` so CI can upload them. Exits non-zero on any violation.
+//!
+//! ```text
+//! cargo run --release --example obs_smoke
+//! ```
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use icr::config::{Backend, MemberSpec, ModelConfig, ReplicaSpec, ServerConfig};
+use icr::coordinator::Coordinator;
+use icr::json::Value;
+use icr::net::{ListenAddr, NetServer};
+
+fn small_model() -> ModelConfig {
+    ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() }
+}
+
+struct Node {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn start_backend() -> Node {
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Tcp("127.0.0.1:0".into()),
+        // Fixed delay on every model call: the floor under the front
+        // door's remote_wire span duration.
+        fault_inject: Some("local:delay_ms=10".into()),
+        ..ServerConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("backend coordinator"));
+    let server = NetServer::bind(&cfg, coord).expect("bind backend");
+    let addr = server.local_addr().strip_prefix("tcp:").expect("tcp addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    Node { addr, stop, handle }
+}
+
+struct Client {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl Client {
+    fn connect(path: &std::path::Path) -> Client {
+        let s = UnixStream::connect(path).expect("connect front door");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let r = s.try_clone().expect("clone");
+        Client { reader: BufReader::new(r), writer: s }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+    }
+
+    fn recv_line(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "unexpected EOF from front door");
+        line.truncate(line.trim_end().len());
+        line
+    }
+
+    fn rpc(&mut self, line: &str) -> Value {
+        self.send(line);
+        let reply = self.recv_line();
+        Value::parse(&reply).unwrap_or_else(|e| panic!("bad frame {reply:?}: {e}"))
+    }
+}
+
+/// One blocking HTTP/1.1 GET against the metrics endpoint; returns
+/// (status line, body).
+fn scrape(addr: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect metrics endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+        .expect("send scrape");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read scrape");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("http header/body split");
+    let status = head.lines().next().unwrap_or_default().to_string();
+    (status, body.to_string())
+}
+
+fn main() {
+    let backend = start_backend();
+    let sock = std::env::temp_dir().join(format!("icr_obs_smoke_{}.sock", std::process::id()));
+    std::fs::remove_file(&sock).ok();
+
+    let cfg = ServerConfig {
+        model: small_model(),
+        workers: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        idle_timeout_ms: 0,
+        listen: ListenAddr::Unix(sock.clone()),
+        replicas: vec![ReplicaSpec::new(
+            "gp",
+            vec![
+                MemberSpec::local(Backend::Native),
+                MemberSpec::remote(&format!("tcp:{}", backend.addr)).expect("remote member"),
+            ],
+        )
+        .expect("replica spec")],
+        trace_sample_rate: 1.0,
+        metrics_listen: Some("tcp:127.0.0.1:0".into()),
+        ..ServerConfig::default()
+    };
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let engine = front.engine().clone();
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let metrics_addr = server
+        .metrics_addr()
+        .expect("metrics endpoint bound")
+        .strip_prefix("tcp:")
+        .expect("tcp metrics addr")
+        .to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut c = Client::connect(&sock);
+
+    // Byte parity: untraced replies never carry a trace field, and the
+    // samples match the single-node engine bit-for-bit.
+    for seed in 0..16u64 {
+        let frame =
+            format!(r#"{{"v": 2, "op": "sample", "model": "gp", "id": {seed}, "count": 1, "seed": {seed}}}"#);
+        c.send(&frame);
+        let line = c.recv_line();
+        assert!(!line.contains("\"trace\""), "untraced reply leaked a trace field: {line}");
+        let v = Value::parse(&line).expect("frame");
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+        let got: Vec<f64> = v
+            .get_path("result.samples")
+            .and_then(Value::as_array)
+            .expect("samples")[0]
+            .as_array()
+            .expect("row")
+            .iter()
+            .filter_map(Value::as_f64)
+            .collect();
+        assert_eq!(got, engine.sample(1, seed).unwrap().remove(0), "seed {seed} diverged");
+    }
+    println!("PASS byte parity: 16 untraced replies byte-identical, no trace field");
+
+    // Explicit trace on a request pinned to the remote member: the
+    // reply echoes the joined span tree.
+    let v = c.rpc(
+        r#"{"v": 2, "op": "sample", "model": "gp@1", "id": 99, "count": 1, "seed": 424, "trace": true}"#,
+    );
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    let trace = v.get("trace").expect("traced reply echoes its span tree").clone();
+    let spans = trace.get("spans").and_then(Value::as_array).expect("spans");
+    let names: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("name").and_then(Value::as_str)).collect();
+    for want in ["request", "remote_wire", "remote:request", "serialize_reply"] {
+        assert!(names.contains(&want), "span {want:?} missing from {names:?}");
+    }
+    let wire_us = spans
+        .iter()
+        .find(|s| s.get("name").and_then(Value::as_str) == Some("remote_wire"))
+        .and_then(|s| s.get("dur_us").and_then(Value::as_usize))
+        .expect("remote_wire dur_us");
+    assert!(wire_us >= 10_000, "remote_wire {wire_us}us < injected 10ms backend delay");
+    println!("PASS trace echo: spans {names:?}, remote_wire {wire_us}us >= 10ms");
+
+    // The ring committed the sampled traces and serves them over v2.
+    let v = c.rpc(r#"{"v": 2, "op": "traces", "id": 100, "limit": 5}"#);
+    let traces = v.get_path("result.traces").and_then(Value::as_array).expect("traces");
+    assert!(!traces.is_empty(), "trace ring empty after 17 sampled requests");
+    println!("PASS traces op: {} committed span trees returned", traces.len());
+
+    // A real HTTP scrape answers Prometheus text format 0.0.4.
+    let (status, body) = scrape(&metrics_addr);
+    assert!(status.contains("200"), "scrape status: {status}");
+    for want in [
+        "# TYPE icr_uptime_seconds gauge",
+        "icr_build_info{version=",
+        "icr_requests_submitted_total{scope=\"global\"}",
+        "scope=\"model\"",
+        "_bucket{",
+    ] {
+        assert!(body.contains(want), "scrape missing {want:?}:\n{body}");
+    }
+    assert!(!body.contains("NaN"), "scrape leaked a NaN sample:\n{body}");
+    println!("PASS metrics scrape: {} bytes of Prometheus text from {metrics_addr}", body.len());
+
+    // Artifacts for CI upload.
+    let dir = PathBuf::from(std::env::var("ICR_OBS_DIR").unwrap_or_else(|_| "obs-smoke".into()));
+    std::fs::create_dir_all(&dir).expect("artifact dir");
+    std::fs::write(dir.join("metrics.txt"), &body).expect("write metrics.txt");
+    std::fs::write(dir.join("trace.json"), trace.to_json()).expect("write trace.json");
+    println!("PASS artifacts: {}/metrics.txt + trace.json", dir.display());
+
+    drop(c);
+    stop.store(true, Ordering::SeqCst);
+    handle.join().expect("front join").expect("front run");
+    backend.stop.store(true, Ordering::SeqCst);
+    backend.handle.join().expect("backend join").expect("backend run");
+    std::fs::remove_file(&sock).ok();
+    println!("obs_smoke: all checks passed");
+}

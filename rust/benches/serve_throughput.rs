@@ -57,6 +57,14 @@ impl CaseResult {
     }
 }
 
+/// Exact sample quantile over the raw client-observed latencies. Note
+/// the asymmetry with the server's own telemetry: the `p50_us`/`p99_us`
+/// a live server reports (`stats` document, and what Prometheus derives
+/// from the `_bucket` series behind `--metrics-listen`) come from log₂
+/// histogram buckets and are geometric-midpoint *estimates*, accurate
+/// only to within a factor of √2 ≈ 1.41 either way. Comparing
+/// `BENCH_serve.json` quantiles against server-reported ones must
+/// budget for that bound; agreement tighter than √2 is coincidence.
 fn quantile(sorted_us: &[f64], q: f64) -> f64 {
     if sorted_us.is_empty() {
         return 0.0;

@@ -123,11 +123,16 @@ impl CancelledIds {
     }
 }
 
+/// What a wire reader delivers per reply: the decoded result plus the
+/// shard's echoed trace document, when the request carried a context
+/// (`DESIGN.md` §13).
+type ReplyPayload = (Result<Response, IcrError>, Option<Value>);
+
 /// One live connection: a locked write half plus the reply-demux map its
 /// reader thread serves.
 struct Wire {
     writer: Mutex<TcpStream>,
-    pending: Mutex<HashMap<u64, mpsc::Sender<Result<Response, IcrError>>>>,
+    pending: Mutex<HashMap<u64, mpsc::Sender<ReplyPayload>>>,
     /// Ids [`RemoteClient::finish`] abandoned on timeout; their replies,
     /// if they ever land, count as `late_replies` (see [`CancelledIds`]).
     cancelled: Mutex<CancelledIds>,
@@ -140,9 +145,10 @@ impl Wire {
     fn fail_pending(&self, endpoint: &str) {
         let mut pending = self.pending.lock().unwrap();
         for (_, tx) in pending.drain() {
-            let _ = tx.send(Err(IcrError::Backend(format!(
-                "remote {endpoint} closed the connection"
-            ))));
+            let _ = tx.send((
+                Err(IcrError::Backend(format!("remote {endpoint} closed the connection"))),
+                None,
+            ));
         }
     }
 }
@@ -151,7 +157,7 @@ impl Wire {
 /// receiver plus enough identity to cancel the wire's demux entry if
 /// the caller gives up (see [`RemoteClient::finish`]).
 pub struct PendingReply {
-    rx: mpsc::Receiver<Result<Response, IcrError>>,
+    rx: mpsc::Receiver<ReplyPayload>,
     /// The wire the frame went out on and its correlation id; `None`
     /// when the request never made it onto a wire (the error is already
     /// queued on `rx`).
@@ -326,10 +332,28 @@ impl RemoteClient {
     /// `outstanding` gauge and outcome counters, and cancels the demux
     /// entry on timeout).
     pub fn submit(&self, model: Option<&str>, request: Request) -> PendingReply {
-        self.submit_on(false, model, request)
+        self.submit_on(false, model, request, None)
     }
 
-    fn submit_on(&self, control: bool, model: Option<&str>, request: Request) -> PendingReply {
+    /// [`Self::submit`] with a protocol trace context to propagate
+    /// (`DESIGN.md` §13). `None` keeps the frame byte-identical to an
+    /// untraced one.
+    pub fn submit_traced(
+        &self,
+        model: Option<&str>,
+        request: Request,
+        trace: Option<Value>,
+    ) -> PendingReply {
+        self.submit_on(false, model, request, trace)
+    }
+
+    fn submit_on(
+        &self,
+        control: bool,
+        model: Option<&str>,
+        request: Request,
+        trace: Option<Value>,
+    ) -> PendingReply {
         self.metrics.gauge("outstanding").inc();
         // Chaos seam: an armed injector may fail the call before it
         // reaches the socket (probes never pass through here with
@@ -339,7 +363,7 @@ impl RemoteClient {
             if let Some(fault) = &self.fault {
                 if let Some(err) = fault.apply(FaultScope::Remote) {
                     let (tx, rx) = mpsc::channel();
-                    let _ = tx.send(Err(err));
+                    let _ = tx.send((Err(err), None));
                     return PendingReply { rx, sent: None };
                 }
             }
@@ -362,7 +386,10 @@ impl RemoteClient {
             // abandoned earlier wire can never shadow the live attempt.
             let (tx, rx) = mpsc::channel();
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            let frame = RequestFrame::v2(model, Some(id), request.clone());
+            let frame = match &trace {
+                Some(t) => RequestFrame::v2(model, Some(id), request.clone()).with_trace(t.clone()),
+                None => RequestFrame::v2(model, Some(id), request.clone()),
+            };
             let line = protocol::encode_request(&frame).to_json();
             wire.pending.lock().unwrap().insert(id, tx);
             let wrote = {
@@ -397,8 +424,12 @@ impl RemoteClient {
             }
         }
         let (tx, rx) = mpsc::channel();
-        let _ = tx.send(Err(last_err
-            .unwrap_or_else(|| IcrError::Backend(format!("remote {} unavailable", self.endpoint)))));
+        let _ = tx.send((
+            Err(last_err.unwrap_or_else(|| {
+                IcrError::Backend(format!("remote {} unavailable", self.endpoint))
+            })),
+            None,
+        ));
         PendingReply { rx, sent: None }
     }
 
@@ -412,8 +443,19 @@ impl RemoteClient {
         t0: Instant,
         timeout: Duration,
     ) -> Result<Response, IcrError> {
-        let result = match pending.rx.recv_timeout(timeout) {
-            Ok(r) => r,
+        self.finish_traced(pending, t0, timeout).0
+    }
+
+    /// [`Self::finish`], also returning the shard's echoed trace
+    /// document when the reply frame carried one (`DESIGN.md` §13).
+    pub fn finish_traced(
+        &self,
+        pending: &PendingReply,
+        t0: Instant,
+        timeout: Duration,
+    ) -> (Result<Response, IcrError>, Option<Value>) {
+        let (result, trace) = match pending.rx.recv_timeout(timeout) {
+            Ok(payload) => payload,
             Err(_) => {
                 if let Some((wire, id)) = &pending.sent {
                     if let Some(w) = wire.upgrade() {
@@ -426,11 +468,14 @@ impl RemoteClient {
                         }
                     }
                 }
-                Err(IcrError::Backend(format!(
-                    "remote {} timed out after {:.1}s",
-                    self.endpoint,
-                    timeout.as_secs_f64()
-                )))
+                (
+                    Err(IcrError::Backend(format!(
+                        "remote {} timed out after {:.1}s",
+                        self.endpoint,
+                        timeout.as_secs_f64()
+                    ))),
+                    None,
+                )
             }
         };
         self.metrics.gauge("outstanding").dec();
@@ -439,7 +484,7 @@ impl RemoteClient {
             Ok(_) => self.metrics.counter("requests_ok").inc(),
             Err(_) => self.metrics.counter("requests_failed").inc(),
         }
-        result
+        (result, trace)
     }
 
     /// One blocking round trip with the configured call timeout.
@@ -463,7 +508,7 @@ impl RemoteClient {
     /// health monitor's probe.
     pub fn probe(&self) -> Result<(), IcrError> {
         let t0 = Instant::now();
-        let pending = self.submit_on(true, None, Request::Stats);
+        let pending = self.submit_on(true, None, Request::Stats, None);
         self.finish(&pending, t0, self.timeouts.probe).map(|_| ())
     }
 
@@ -471,7 +516,7 @@ impl RemoteClient {
     /// over the control connection.
     pub fn describe(&self, model: Option<&str>) -> Result<ModelInfo, IcrError> {
         let t0 = Instant::now();
-        let pending = self.submit_on(true, model, Request::Describe);
+        let pending = self.submit_on(true, model, Request::Describe, None);
         match self.finish(&pending, t0, self.timeouts.call)? {
             Response::Describe(info) => Ok(info),
             other => Err(IcrError::Backend(format!(
@@ -543,7 +588,7 @@ fn dispatch(wire: &Wire, line: &[u8], metrics: &Registry) {
             let tx = wire.pending.lock().unwrap().remove(&frame.id);
             match tx {
                 Some(tx) => {
-                    let _ = tx.send(frame.result);
+                    let _ = tx.send((frame.result, frame.trace));
                 }
                 // No waiter: either the caller timed out and cancelled
                 // (hygiene — count, never deliver) or the server sent
@@ -672,7 +717,7 @@ mod tests {
             let mut w = stream;
             for id in ids {
                 let reply =
-                    protocol::encode_response(2, id, None, &Err(IcrError::Backend("slow".into())));
+                    protocol::encode_response(2, id, None, &Err(IcrError::Backend("slow".into())), None);
                 writeln!(w, "{}", reply.to_json()).unwrap();
             }
             w.flush().unwrap();

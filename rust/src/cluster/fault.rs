@@ -31,7 +31,7 @@
 //! `ICR_FAULT_INJECT` arms the harness when the CLI flag is absent.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::IcrError;
@@ -159,6 +159,12 @@ pub enum FaultAction {
     Delay(Duration),
 }
 
+/// Callback fired whenever [`FaultInjector::apply`] actually injects a
+/// fault; `(scope, kind)` where kind is `"error" | "drop" | "delay"`.
+/// The coordinator installs one that emits a structured
+/// `fault_injected` event (`DESIGN.md` §13).
+pub type FaultObserver = Arc<dyn Fn(FaultScope, &str) + Send + Sync>;
+
 /// Seeded, armable fault scheduler shared by the remote client wires
 /// and the coordinator's local call seam.
 pub struct FaultInjector {
@@ -168,6 +174,7 @@ pub struct FaultInjector {
     injected_errors: AtomicU64,
     injected_drops: AtomicU64,
     injected_delays: AtomicU64,
+    observer: Mutex<Option<FaultObserver>>,
 }
 
 impl FaultInjector {
@@ -179,6 +186,19 @@ impl FaultInjector {
             injected_errors: AtomicU64::new(0),
             injected_drops: AtomicU64::new(0),
             injected_delays: AtomicU64::new(0),
+            observer: Mutex::new(None),
+        }
+    }
+
+    /// Install the fired-fault observer (replacing any previous one).
+    /// Observation is telemetry only — it never perturbs the schedule.
+    pub fn set_observer(&self, observer: FaultObserver) {
+        *self.observer.lock().unwrap() = Some(observer);
+    }
+
+    fn observe(&self, scope: FaultScope, kind: &str) {
+        if let Some(obs) = self.observer.lock().unwrap().as_ref() {
+            obs(scope, kind);
         }
     }
 
@@ -233,6 +253,7 @@ impl FaultInjector {
             FaultAction::None => None,
             FaultAction::Error => {
                 self.injected_errors.fetch_add(1, Ordering::Relaxed);
+                self.observe(scope, "error");
                 Some(IcrError::Internal(format!(
                     "injected fault ({}: error)",
                     scope.name()
@@ -240,6 +261,7 @@ impl FaultInjector {
             }
             FaultAction::Drop => {
                 self.injected_drops.fetch_add(1, Ordering::Relaxed);
+                self.observe(scope, "drop");
                 Some(IcrError::Backend(format!(
                     "injected fault ({}: reply dropped)",
                     scope.name()
@@ -247,6 +269,7 @@ impl FaultInjector {
             }
             FaultAction::Delay(d) => {
                 self.injected_delays.fetch_add(1, Ordering::Relaxed);
+                self.observe(scope, "delay");
                 std::thread::sleep(d);
                 None
             }
@@ -383,5 +406,27 @@ mod tests {
         assert_eq!(v.get("armed"), Some(&Value::Bool(true)));
         assert_eq!(v.get_path("injected.drops").and_then(Value::as_usize), Some(1));
         assert_eq!(v.get_path("remote.drop").and_then(Value::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn observer_sees_fired_faults_without_perturbing_the_schedule() {
+        let spec = "remote:error=0.4,drop=0.3";
+        let plain = FaultInjector::from_spec(spec, 5).unwrap();
+        let watched = FaultInjector::from_spec(spec, 5).unwrap();
+        let fired = Arc::new(Mutex::new(Vec::<(FaultScope, String)>::new()));
+        let sink = fired.clone();
+        watched.set_observer(Arc::new(move |scope, kind| {
+            sink.lock().unwrap().push((scope, kind.to_string()));
+        }));
+        let a: Vec<Option<String>> =
+            (0..64).map(|_| plain.apply(FaultScope::Remote).map(|e| e.kind().to_string())).collect();
+        let b: Vec<Option<String>> =
+            (0..64).map(|_| watched.apply(FaultScope::Remote).map(|e| e.kind().to_string())).collect();
+        assert_eq!(a, b, "observation must not perturb the schedule");
+        let fired = fired.lock().unwrap();
+        let injected = (watched.injected_errors() + watched.injected_drops()) as usize;
+        assert_eq!(fired.len(), injected, "one observation per fired fault");
+        assert!(fired.iter().all(|(s, _)| *s == FaultScope::Remote));
+        assert!(fired.iter().any(|(_, k)| k == "error"));
     }
 }

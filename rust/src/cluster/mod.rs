@@ -43,7 +43,7 @@ pub use remote::RemoteModel;
 /// Cluster-layer capabilities advertised by `icr --version` and the
 /// `stats` document, mirroring how §8 advertises transports and routing
 /// policies.
-pub const CAPABILITIES: [&str; 8] = [
+pub const CAPABILITIES: [&str; 9] = [
     "remote_backend",
     "response_cache",
     "health_checks",
@@ -52,6 +52,7 @@ pub const CAPABILITIES: [&str; 8] = [
     "circuit_breakers",
     "retry_failover",
     "fault_injection",
+    "observability",
 ];
 
 #[cfg(test)]
@@ -71,6 +72,7 @@ mod tests {
                 "circuit_breakers",
                 "retry_failover",
                 "fault_injection",
+                "observability",
             ]
         );
     }

@@ -156,6 +156,28 @@ impl RemoteModel {
         self.client.finish(pending, t0, self.client.timeouts().call)
     }
 
+    /// [`RemoteModel::proxy_submit`] with a protocol trace context to
+    /// propagate to the shard (`DESIGN.md` §13); `None` keeps the
+    /// frame byte-identical to an untraced one.
+    pub fn proxy_submit_traced(
+        &self,
+        model: Option<&str>,
+        request: Request,
+        trace: Option<crate::json::Value>,
+    ) -> PendingReply {
+        self.client.submit_traced(model, request, trace)
+    }
+
+    /// [`RemoteModel::proxy_finish`], also returning the shard's
+    /// echoed trace document when the reply carried one.
+    pub fn proxy_finish_traced(
+        &self,
+        pending: &PendingReply,
+        t0: Instant,
+    ) -> (Result<Response, IcrError>, Option<crate::json::Value>) {
+        self.client.finish_traced(pending, t0, self.client.timeouts().call)
+    }
+
     fn expect_field(&self, resp: Response) -> Result<Vec<f64>, IcrError> {
         match resp {
             Response::Field(f) => Ok(f),

@@ -485,6 +485,24 @@ pub struct ServerConfig {
     /// the `ICR_FAULT_INJECT` env var when the flag is absent. `None`
     /// (default) disarms the harness entirely.
     pub fault_inject: Option<String>,
+    /// Head-sampling probability for request traces
+    /// (`--trace-sample-rate`, in [0, 1]; 0 disables background
+    /// sampling — explicit `"trace": true` requests are still traced).
+    pub trace_sample_rate: f64,
+    /// Requests slower than this always commit a trace and emit a
+    /// structured `slow_request` event (`--trace-slow-ms`, 0 disables
+    /// slow detection).
+    pub trace_slow_ms: u64,
+    /// Structured-log severity floor (`--log-level
+    /// error|warn|info|debug`, also `off`).
+    pub log_level: String,
+    /// Structured-log rendering (`--log-format json|text`).
+    pub log_format: String,
+    /// Structured-log destination (`--log-dest stderr|file:PATH`).
+    pub log_dest: String,
+    /// Prometheus scrape endpoint (`--metrics-listen tcp:HOST:PORT`,
+    /// DESIGN.md §13); `None` (default) serves no endpoint.
+    pub metrics_listen: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -518,6 +536,12 @@ impl Default for ServerConfig {
             remote_probe_timeout_ms: 2_000,
             remote_connect_timeout_ms: 5_000,
             fault_inject: None,
+            trace_sample_rate: 0.0,
+            trace_slow_ms: 0,
+            log_level: "info".into(),
+            log_format: "json".into(),
+            log_dest: "stderr".into(),
+            metrics_listen: None,
         }
     }
 }
@@ -632,6 +656,48 @@ impl ServerConfig {
             // shared with the cluster harness itself.
             crate::cluster::FaultPlan::parse(spec, cfg.seed)
                 .map_err(|e| anyhow::anyhow!("--fault-inject: {e}"))?;
+        }
+        cfg.trace_sample_rate = args.get_f64("trace-sample-rate", cfg.trace_sample_rate)?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.trace_sample_rate),
+            "--trace-sample-rate must be in [0, 1], got {}",
+            cfg.trace_sample_rate
+        );
+        cfg.trace_slow_ms = args.get_u64("trace-slow-ms", cfg.trace_slow_ms)?;
+        if let Some(l) = args.get("log-level") {
+            cfg.log_level = l.to_string();
+        }
+        anyhow::ensure!(
+            crate::obs::Level::parse(&cfg.log_level).is_some(),
+            "--log-level must be off|error|warn|info|debug, got {:?}",
+            cfg.log_level
+        );
+        if let Some(f) = args.get("log-format") {
+            cfg.log_format = f.to_string();
+        }
+        anyhow::ensure!(
+            crate::obs::LogFormat::parse(&cfg.log_format).is_some(),
+            "--log-format must be json|text, got {:?}",
+            cfg.log_format
+        );
+        if let Some(d) = args.get("log-dest") {
+            cfg.log_dest = d.to_string();
+        }
+        anyhow::ensure!(
+            crate::obs::LogDest::parse(&cfg.log_dest).is_some(),
+            "--log-dest must be stderr|file:PATH, got {:?}",
+            cfg.log_dest
+        );
+        if let Some(m) = args.get("metrics-listen") {
+            cfg.metrics_listen = Some(m.to_string());
+        }
+        if let Some(m) = &cfg.metrics_listen {
+            // Scrape endpoints are TCP sockets, never stdio/unix.
+            match ListenAddr::parse(m) {
+                Ok(ListenAddr::Tcp(_)) => {}
+                Ok(_) => anyhow::bail!("--metrics-listen must be tcp:HOST:PORT, got {m:?}"),
+                Err(e) => anyhow::bail!("--metrics-listen: {e}"),
+            }
         }
         cfg.validate_models()?;
         Ok(cfg)
@@ -776,6 +842,25 @@ impl ServerConfig {
         if let Some(s) = v.get("fault_inject").and_then(Value::as_str) {
             self.fault_inject = if s.trim().is_empty() { None } else { Some(s.to_string()) };
         }
+        if let Some(r) = v.get("trace_sample_rate").and_then(Value::as_f64) {
+            self.trace_sample_rate = r;
+        }
+        if let Some(m) = v.get("trace_slow_ms").and_then(Value::as_usize) {
+            self.trace_slow_ms = m as u64;
+        }
+        if let Some(l) = v.get("log_level").and_then(Value::as_str) {
+            self.log_level = l.to_string();
+        }
+        if let Some(f) = v.get("log_format").and_then(Value::as_str) {
+            self.log_format = f.to_string();
+        }
+        if let Some(d) = v.get("log_dest").and_then(Value::as_str) {
+            self.log_dest = d.to_string();
+        }
+        if let Some(m) = v.get("metrics_listen").and_then(Value::as_str) {
+            self.metrics_listen =
+                if m.trim().is_empty() { None } else { Some(m.to_string()) };
+        }
         if let Some(b) = v.get("batch_max").and_then(Value::as_usize) {
             self.max_batch = b.max(1);
         }
@@ -894,6 +979,18 @@ impl ServerConfig {
             (
                 "fault_inject",
                 match &self.fault_inject {
+                    Some(s) => json::s(s),
+                    None => Value::Null,
+                },
+            ),
+            ("trace_sample_rate", json::num(self.trace_sample_rate)),
+            ("trace_slow_ms", json::num(self.trace_slow_ms as f64)),
+            ("log_level", json::s(&self.log_level)),
+            ("log_format", json::s(&self.log_format)),
+            ("log_dest", json::s(&self.log_dest)),
+            (
+                "metrics_listen",
+                match &self.metrics_listen {
                     Some(s) => json::s(s),
                     None => Value::Null,
                 },
@@ -1230,6 +1327,87 @@ mod tests {
         assert_eq!(v.get("retry_budget_ms").and_then(Value::as_usize), Some(800));
         assert_eq!(v.get("remote_call_timeout_ms").and_then(Value::as_usize), Some(4000));
         assert_eq!(v.get("fault_inject").and_then(Value::as_str), Some("local:error=0.5"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn obs_knobs_resolve_from_cli() {
+        // Defaults: tracing off, info-level JSON logging to stderr,
+        // no scrape endpoint — historical behavior untouched.
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.trace_sample_rate, 0.0);
+        assert_eq!(cfg.trace_slow_ms, 0);
+        assert_eq!(cfg.log_level, "info");
+        assert_eq!(cfg.log_format, "json");
+        assert_eq!(cfg.log_dest, "stderr");
+        assert_eq!(cfg.metrics_listen, None);
+
+        let args = Args::parse(
+            &argv(
+                "serve --trace-sample-rate 0.25 --trace-slow-ms 50 --log-level debug \
+                 --log-format text --log-dest file:/tmp/icr-obs.log \
+                 --metrics-listen tcp:127.0.0.1:9100",
+            ),
+            &[],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.trace_sample_rate, 0.25);
+        assert_eq!(cfg.trace_slow_ms, 50);
+        assert_eq!(cfg.log_level, "debug");
+        assert_eq!(cfg.log_format, "text");
+        assert_eq!(cfg.log_dest, "file:/tmp/icr-obs.log");
+        assert_eq!(cfg.metrics_listen.as_deref(), Some("tcp:127.0.0.1:9100"));
+
+        // Invalid knob values are startup errors, not silent defaults.
+        for bad in [
+            "serve --trace-sample-rate 1.5",
+            "serve --trace-sample-rate -0.1",
+            "serve --log-level loud",
+            "serve --log-format xml",
+            "serve --log-dest syslog",
+            "serve --metrics-listen stdio",
+            "serve --metrics-listen unix:/tmp/m.sock",
+            "serve --metrics-listen 127.0.0.1:9100",
+        ] {
+            let args = Args::parse(&argv(bad), &[]).unwrap();
+            assert!(ServerConfig::resolve(&args).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn obs_knobs_from_config_file_and_dump() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_obs_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"trace_sample_rate": 0.5, "trace_slow_ms": 20,
+                "log_level": "warn", "log_format": "text",
+                "log_dest": "stderr", "metrics_listen": "tcp:0.0.0.0:9100"}"#,
+        )
+        .unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.trace_sample_rate, 0.5);
+        assert_eq!(cfg.trace_slow_ms, 20);
+        assert_eq!(cfg.log_level, "warn");
+        assert_eq!(cfg.log_format, "text");
+        assert_eq!(cfg.metrics_listen.as_deref(), Some("tcp:0.0.0.0:9100"));
+        // Every knob rides through the config dump and back.
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("trace_sample_rate").and_then(Value::as_f64), Some(0.5));
+        assert_eq!(v.get("trace_slow_ms").and_then(Value::as_usize), Some(20));
+        assert_eq!(v.get("log_level").and_then(Value::as_str), Some("warn"));
+        assert_eq!(v.get("log_format").and_then(Value::as_str), Some("text"));
+        assert_eq!(v.get("log_dest").and_then(Value::as_str), Some("stderr"));
+        assert_eq!(
+            v.get("metrics_listen").and_then(Value::as_str),
+            Some("tcp:0.0.0.0:9100")
+        );
+        // Defaults dump metrics_listen as null.
+        let v = Value::parse(&ServerConfig::default().to_json().to_json()).unwrap();
+        assert_eq!(v.get("metrics_listen"), Some(&Value::Null));
         std::fs::remove_file(&path).ok();
     }
 

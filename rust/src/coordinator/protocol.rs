@@ -45,6 +45,12 @@ pub struct RequestFrame {
     /// Client-chosen correlation id echoed in the response.
     pub client_id: Option<u64>,
     pub request: Request,
+    /// Observability context (`DESIGN.md` §13, v2-only). `Bool(true)`
+    /// opts this request into a span-tree echo in its reply;
+    /// `{"id": "t-..."}` propagates a front-door trace to a shard
+    /// (implies the echo). `None` — the default — leaves the frame
+    /// byte-identical to pre-observability builds.
+    pub trace: Option<Value>,
 }
 
 impl RequestFrame {
@@ -55,12 +61,34 @@ impl RequestFrame {
             model: model.map(str::to_string),
             client_id,
             request,
+            trace: None,
         }
     }
 
     /// A legacy v1 frame (default model, no correlation id).
     pub fn v1(request: Request) -> Self {
-        RequestFrame { version: 1, model: None, client_id: None, request }
+        RequestFrame { version: 1, model: None, client_id: None, request, trace: None }
+    }
+
+    /// The same frame carrying a trace context.
+    pub fn with_trace(mut self, trace: Value) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// The propagated trace id, if the context carries one.
+    pub fn trace_id(&self) -> Option<&str> {
+        self.trace.as_ref().and_then(|t| t.get("id")).and_then(Value::as_str)
+    }
+
+    /// Whether this frame asks for tracing at all (explicit opt-in or
+    /// a propagated context).
+    pub fn wants_trace(&self) -> bool {
+        match &self.trace {
+            Some(Value::Bool(b)) => *b,
+            Some(Value::Object(_)) => true,
+            _ => false,
+        }
     }
 }
 
@@ -145,6 +173,16 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
         }
         "stats" => Request::Stats,
         "describe" => Request::Describe,
+        "traces" => {
+            if version < 2 {
+                return Err(IcrError::MalformedRequest(
+                    "traces requires a v2 frame ({\"v\": 2, ...})".into(),
+                ));
+            }
+            Request::Traces {
+                limit: v.get("limit").and_then(Value::as_usize).unwrap_or(20),
+            }
+        }
         "reload_model" => {
             if version < 2 {
                 return Err(IcrError::MalformedRequest(
@@ -160,7 +198,23 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
         }
         other => return Err(IcrError::UnknownOp(other.to_string())),
     };
-    Ok(RequestFrame { version, model, client_id, request })
+    let trace = match v.get("trace") {
+        None | Some(Value::Bool(false)) | Some(Value::Null) => None,
+        Some(t @ (Value::Bool(true) | Value::Object(_))) => {
+            if version < 2 {
+                return Err(IcrError::MalformedRequest(
+                    "trace requires a v2 frame ({\"v\": 2, ...})".into(),
+                ));
+            }
+            Some(t.clone())
+        }
+        Some(_) => {
+            return Err(IcrError::MalformedRequest(
+                "\"trace\" must be true or a context object".into(),
+            ))
+        }
+    };
+    Ok(RequestFrame { version, model, client_id, request, trace })
 }
 
 /// Best-effort `(version, client id)` of a request line that failed to
@@ -194,6 +248,11 @@ pub fn encode_request(frame: &RequestFrame) -> Value {
         if let Some(id) = frame.client_id {
             fields.push(("id", json::num(id as f64)));
         }
+        // Emitted only when tracing is active — absent, the frame is
+        // byte-identical to pre-observability encodings.
+        if let Some(t) = &frame.trace {
+            fields.push(("trace", t.clone()));
+        }
     }
     fields.push(("op", json::s(frame.request.op())));
     match &frame.request {
@@ -220,6 +279,9 @@ pub fn encode_request(frame: &RequestFrame) -> Value {
         }
         Request::ReloadModel { path } => {
             fields.push(("path", json::s(path)));
+        }
+        Request::Traces { limit } => {
+            fields.push(("limit", json::num(*limit as f64)));
         }
         Request::Stats | Request::Describe => {}
     }
@@ -276,6 +338,7 @@ fn result_payload(resp: &Response) -> Value {
                 ("config_sha256", json::s(config_sha256)),
             ]),
         )]),
+        Response::Traces(v) => json::obj(vec![("traces", v.clone())]),
     }
 }
 
@@ -285,11 +348,16 @@ fn result_payload(resp: &Response) -> Value {
 /// "error"}`; v1 flattens the payload next to the id, stringifies the
 /// error, and keeps `stats` a *string* (serialized JSON now, rendered
 /// text before) so legacy clients parsing it as text keep working.
+///
+/// `trace` is the finished span tree echoed to a `"trace": true`
+/// request (v2-only; v1 frames never carry one). `None` keeps the
+/// frame byte-identical to pre-observability encodings.
 pub fn encode_response(
     version: u64,
     id: RequestId,
     model: Option<&str>,
     result: &Result<Response, IcrError>,
+    trace: Option<&Value>,
 ) -> Value {
     if version <= 1 {
         let mut fields = vec![("id", json::num(id as f64))];
@@ -314,6 +382,9 @@ pub fn encode_response(
     if let Some(m) = model {
         fields.push(("model", json::s(m)));
     }
+    if let Some(t) = trace {
+        fields.push(("trace", t.clone()));
+    }
     match result {
         Ok(resp) => {
             fields.push(("ok", Value::Bool(true)));
@@ -333,6 +404,34 @@ pub fn encode_response(
     json::obj(fields)
 }
 
+/// Encode a response frame, attaching the echoed span tree of an
+/// explicitly-traced request (`DESIGN.md` §13). The payload is encoded
+/// once without the trace to *measure* serialization, a
+/// `serialize_reply` span is appended to the document, and the final
+/// frame is encoded with the annotated trace — so the echoed tree
+/// accounts for reply-serialization time the ring copy (frozen at
+/// request completion) intentionally omits. Only explicitly-traced
+/// replies pay the probe encode; `None` is exactly [`encode_response`].
+pub fn encode_response_traced(
+    version: u64,
+    id: RequestId,
+    model: Option<&str>,
+    result: &Result<Response, IcrError>,
+    trace_doc: Option<Value>,
+) -> Value {
+    match trace_doc {
+        None => encode_response(version, id, model, result, None),
+        Some(mut doc) => {
+            let t0 = std::time::Instant::now();
+            let probe = encode_response(version, id, model, result, None).to_json();
+            let ser_us = t0.elapsed().as_micros() as u64;
+            drop(probe);
+            crate::obs::append_span(&mut doc, "serialize_reply", ser_us);
+            encode_response(version, id, model, result, Some(&doc))
+        }
+    }
+}
+
 /// A decoded response frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResponseFrame {
@@ -340,6 +439,10 @@ pub struct ResponseFrame {
     pub id: RequestId,
     pub model: Option<String>,
     pub result: Result<Response, IcrError>,
+    /// Echoed span tree, when the request carried a trace context
+    /// (`DESIGN.md` §13). The front door joins a shard's document
+    /// into its own trace via `obs::ActiveTrace::attach_remote`.
+    pub trace: Option<Value>,
 }
 
 /// Decode a response object (either version) back into a [`ResponseFrame`]
@@ -352,6 +455,7 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
         .map(|x| x as u64)
         .ok_or_else(|| IcrError::MalformedRequest("response needs \"id\"".into()))?;
     let model = v.get("model").and_then(Value::as_str).map(str::to_string);
+    let trace = v.get("trace").filter(|t| t.as_object().is_some()).cloned();
 
     // Error frames.
     if let Some(err) = v.get("error") {
@@ -363,7 +467,7 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
                 IcrError::from_wire(kind, message)
             }
         };
-        return Ok(ResponseFrame { version, id, model, result: Err(decoded) });
+        return Ok(ResponseFrame { version, id, model, result: Err(decoded), trace });
     }
 
     // Success: v2 nests the payload under "result", v1 flattens it.
@@ -403,6 +507,8 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
                 .unwrap_or("")
                 .to_string(),
         }
+    } else if let Some(traces) = payload.get("traces") {
+        Response::Traces(traces.clone())
     } else if let Some(stats) = payload.get("stats") {
         // v1 carries stats as a serialized-JSON string; v2 as an object.
         match stats {
@@ -424,7 +530,7 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
     } else {
         return Err(IcrError::MalformedRequest("unrecognized response payload".into()));
     };
-    Ok(ResponseFrame { version, id, model, result: Ok(response) })
+    Ok(ResponseFrame { version, id, model, result: Ok(response), trace })
 }
 
 #[cfg(test)]
@@ -515,7 +621,7 @@ mod tests {
             best: 0,
         };
         let encoded =
-            encode_response(2, 7, Some("default"), &Ok(Response::MultiInference(mi.clone())));
+            encode_response(2, 7, Some("default"), &Ok(Response::MultiInference(mi.clone())), None);
         let frame = decode_response(&encoded).unwrap();
         assert_eq!(frame.id, 7);
         match frame.result.unwrap() {
@@ -541,7 +647,7 @@ mod tests {
         };
         for version in [1u64, 2] {
             let encoded =
-                encode_response(version, 4, Some("gp"), &Ok(Response::Describe(info.clone())));
+                encode_response(version, 4, Some("gp"), &Ok(Response::Describe(info.clone())), None);
             let frame = decode_response(&encoded).unwrap();
             assert_eq!(frame.id, 4);
             match frame.result.unwrap() {
@@ -567,7 +673,7 @@ mod tests {
             model: "gp@0".into(),
             config_sha256: "ff".repeat(32),
         };
-        let encoded = encode_response(2, 11, Some("gp@0"), &Ok(resp.clone()));
+        let encoded = encode_response(2, 11, Some("gp@0"), &Ok(resp.clone()), None);
         let frame = decode_response(&encoded).unwrap();
         assert_eq!(frame.id, 11);
         assert_eq!(frame.result.unwrap(), resp);
@@ -592,5 +698,86 @@ mod tests {
         let line = encode_request(&frame).to_json();
         assert!(!line.contains("\"v\""), "v1 must stay untagged: {line}");
         assert_eq!(parse_request(&line).unwrap(), frame);
+    }
+
+    #[test]
+    fn trace_context_roundtrips_and_absent_field_stays_byte_identical() {
+        // Explicit opt-in: `"trace": true`.
+        let f = parse_request(r#"{"v": 2, "op": "stats", "trace": true}"#).unwrap();
+        assert!(f.wants_trace());
+        assert_eq!(f.trace_id(), None);
+        // Propagated context: `{"id": "..."}` (implies the echo).
+        let frame = RequestFrame::v2(Some("gp"), Some(3), Request::Stats)
+            .with_trace(json::obj(vec![("id", json::s("t-00ab"))]));
+        let line = encode_request(&frame).to_json();
+        let back = parse_request(&line).unwrap();
+        assert_eq!(back, frame, "line: {line}");
+        assert!(back.wants_trace());
+        assert_eq!(back.trace_id(), Some("t-00ab"));
+        // `false`/`null` degrade to no trace, not an error.
+        for quiet in [r#""trace": false, "#, r#""trace": null, "#, ""] {
+            let f = parse_request(&format!(r#"{{"v": 2, {quiet}"op": "stats"}}"#)).unwrap();
+            assert_eq!(f.trace, None);
+            assert!(!f.wants_trace());
+        }
+        // Tracing off ⇒ the encoded wire bytes carry no trace key at
+        // all — the bitwise-parity guarantee every e2e test rides on.
+        let untraced = RequestFrame::v2(Some("gp"), Some(3), Request::Stats);
+        assert!(!encode_request(&untraced).to_json().contains("trace"));
+        let reply = encode_response(2, 3, Some("gp"), &Ok(Response::Field(vec![1.0])), None);
+        assert!(!reply.to_json().contains("trace"));
+    }
+
+    #[test]
+    fn trace_requires_v2_and_a_well_typed_context() {
+        let err =
+            parse_request(r#"{"op": "sample", "count": 1, "seed": 1, "trace": true}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let err = parse_request(r#"{"v": 2, "op": "stats", "trace": 5}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let err = parse_request(r#"{"v": 2, "op": "stats", "trace": "yes"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+    }
+
+    #[test]
+    fn traces_op_is_v2_only_with_a_default_limit() {
+        let err = parse_request(r#"{"op": "traces"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let f = parse_request(r#"{"v": 2, "op": "traces"}"#).unwrap();
+        assert_eq!(f.request, Request::Traces { limit: 20 });
+        let f = parse_request(r#"{"v": 2, "op": "traces", "limit": 5}"#).unwrap();
+        assert_eq!(f.request, Request::Traces { limit: 5 });
+    }
+
+    #[test]
+    fn traced_response_appends_serialize_span_and_decodes() {
+        let mut doc = json::obj(vec![
+            ("trace_id", json::s("t-ff")),
+            (
+                "spans",
+                json::arr(vec![json::obj(vec![
+                    ("id", json::num(0.0)),
+                    ("name", json::s("request")),
+                    ("start_us", json::num(0.0)),
+                    ("dur_us", json::num(42.0)),
+                ])]),
+            ),
+        ]);
+        crate::obs::append_span(&mut doc, "noop_probe", 1);
+        let encoded =
+            encode_response_traced(2, 9, Some("gp"), &Ok(Response::Field(vec![0.5])), Some(doc));
+        let text = encoded.to_json();
+        assert!(text.contains("serialize_reply"), "{text}");
+        let frame = decode_response(&encoded).unwrap();
+        assert_eq!(frame.id, 9);
+        let trace = frame.trace.expect("echoed trace");
+        assert_eq!(trace.get("trace_id").and_then(Value::as_str), Some("t-ff"));
+        let spans = trace.get("spans").and_then(Value::as_array).unwrap();
+        assert!(spans.len() >= 3, "root + probe + serialize_reply");
+        // And with no trace document the traced encoder is bitwise the
+        // plain encoder.
+        let a = encode_response_traced(2, 9, Some("gp"), &Ok(Response::Field(vec![0.5])), None);
+        let b = encode_response(2, 9, Some("gp"), &Ok(Response::Field(vec![0.5])), None);
+        assert_eq!(a.to_json(), b.to_json());
     }
 }

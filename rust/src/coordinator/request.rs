@@ -48,6 +48,9 @@ pub enum Request {
     /// are invalidated, and the registry slot is swapped under its lock
     /// — in-flight requests finish on the old model. v2-only.
     ReloadModel { path: String },
+    /// Recent committed request traces from the observability ring
+    /// (`DESIGN.md` §13), newest first, at most `limit`. v2-only.
+    Traces { limit: usize },
 }
 
 impl Request {
@@ -88,6 +91,7 @@ impl Request {
             Request::Stats => "stats",
             Request::Describe => "describe",
             Request::ReloadModel { .. } => "reload_model",
+            Request::Traces { .. } => "traces",
         }
     }
 }
@@ -109,6 +113,9 @@ pub enum Response {
     /// Acknowledgement of a completed `reload_model` swap: the entry
     /// that was swapped and the new model version's config checksum.
     Reloaded { model: String, config_sha256: String },
+    /// Recent committed traces for `traces` requests (a JSON array,
+    /// newest first — see `obs::Tracer::recent`).
+    Traces(Value),
 }
 
 /// Where a finished request's result is delivered, exactly once.
@@ -193,6 +200,10 @@ pub struct Envelope {
     /// request already spent queued counts against the window instead
     /// of extending it.
     pub enqueued_at: Instant,
+    /// Observability handle (`DESIGN.md` §13): present when this
+    /// request is being traced (explicit opt-in, head-sampled, or slow
+    /// detection armed). `None` is the zero-cost path.
+    pub trace: Option<std::sync::Arc<crate::obs::ActiveTrace>>,
 }
 
 #[cfg(test)]
@@ -239,6 +250,7 @@ mod tests {
         assert!(!Request::Stats.batchable());
         assert!(!Request::Describe.batchable());
         assert!(!Request::ReloadModel { path: "a".into() }.batchable());
+        assert!(!Request::Traces { limit: 10 }.batchable());
         assert!(
             !Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.batchable()
         );
@@ -259,6 +271,7 @@ mod tests {
         assert_eq!(Request::ApplySqrt { xi: vec![1.0] }.apply_count(), 1);
         assert_eq!(Request::Stats.apply_count(), 0);
         assert_eq!(Request::ReloadModel { path: "a".into() }.apply_count(), 0);
+        assert_eq!(Request::Traces { limit: 10 }.apply_count(), 0);
     }
 
     #[test]
@@ -277,6 +290,7 @@ mod tests {
         .idempotent());
         assert!(Request::Stats.idempotent());
         assert!(Request::Describe.idempotent());
+        assert!(Request::Traces { limit: 10 }.idempotent());
         assert!(!Request::ReloadModel { path: "a".into() }.idempotent());
     }
 
@@ -303,5 +317,6 @@ mod tests {
         assert_eq!(Request::Stats.op(), "stats");
         assert_eq!(Request::Describe.op(), "describe");
         assert_eq!(Request::ReloadModel { path: "a".into() }.op(), "reload_model");
+        assert_eq!(Request::Traces { limit: 10 }.op(), "traces");
     }
 }

@@ -27,7 +27,8 @@ use crate::error::IcrError;
 use crate::json::{self, Value};
 use crate::metrics::Registry;
 use crate::model::{GpModel, ModelBuilder};
-use crate::net::{MemberState, RoutePolicy, Router, TRANSPORTS};
+use crate::net::{BreakerState, MemberState, RoutePolicy, Router, TRANSPORTS};
+use crate::obs::{self, Obs};
 use crate::parallel::Exec;
 use crate::rng::Rng;
 
@@ -106,6 +107,10 @@ struct Shared {
     /// the same instance rides inside every remote client wire, so
     /// disarming it here silences chaos everywhere at once.
     fault: Option<Arc<FaultInjector>>,
+    /// Observability bundle (`DESIGN.md` §13): request tracer, leveled
+    /// event log, and process start times. Shared with the serving
+    /// layers (reply-echo pickup, metrics exposition).
+    obs: Arc<Obs>,
     /// Seeded jitter source for failover backoff (full jitter). Retries
     /// are rare, so one mutex-guarded stream is contention-free.
     retry_rng: Mutex<Rng>,
@@ -248,6 +253,8 @@ impl Coordinator {
             }
             router.add_set(&r.name, members);
         }
+        let obs =
+            Arc::new(Obs::from_config(&cfg).map_err(|e| anyhow::anyhow!("--log-dest: {e}"))?);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -262,10 +269,26 @@ impl Coordinator {
             exec,
             exec_desc,
             fault,
+            obs: obs.clone(),
             retry_rng: Mutex::new(Rng::new(cfg.seed ^ 0xBAC0FF)),
             cfg: cfg.clone(),
             next_id: AtomicU64::new(1),
         });
+        // Fired faults are telemetry-visible: the injector reports each
+        // injection to the event log without perturbing its
+        // deterministic schedule (delays are routine under chaos, so
+        // they log at debug; errors and drops at info).
+        if let Some(f) = &shared.fault {
+            let log_obs = obs;
+            f.set_observer(Arc::new(move |scope, kind| {
+                let level = if kind == "delay" { obs::Level::Debug } else { obs::Level::Info };
+                log_obs.log.event(
+                    level,
+                    "fault_injected",
+                    vec![("scope", json::s(scope.name())), ("kind", json::s(kind))],
+                );
+            }));
+        }
         let workers = (0..cfg.workers)
             .map(|w| {
                 let shared = shared.clone();
@@ -305,6 +328,10 @@ impl Coordinator {
             }
             if entry.model().revalidate().is_err() {
                 self.shared.metrics.counter("identity_rejections").inc();
+                self.shared
+                    .obs
+                    .log
+                    .warn("member_identity_rejected", vec![("member", json::s(name))]);
                 if self.shared.router.set_member_state(name, MemberState::Ejected) {
                     self.shared.metrics.counter("health_ejections").inc();
                 }
@@ -343,6 +370,41 @@ impl Coordinator {
     /// frame counters); written by the socket server, zero under stdio.
     pub fn transport_metrics(&self) -> &Registry {
         &self.shared.transport
+    }
+
+    /// The observability bundle (tracer + event log + start times,
+    /// `DESIGN.md` §13).
+    pub fn obs(&self) -> &Obs {
+        &self.shared.obs
+    }
+
+    /// Claim the span-tree echo stashed for an explicitly traced
+    /// request — serving layers attach it to the outgoing reply at
+    /// encode time (`encode_response_traced`).
+    pub fn take_trace_echo(&self, id: RequestId) -> Option<Value> {
+        self.shared.obs.tracer.take_echo(id)
+    }
+
+    /// Render every metrics registry in Prometheus text format 0.0.4
+    /// (`DESIGN.md` §13) — the document `--metrics-listen` scrapes
+    /// serve. Scopes: global counters, transport counters, and one
+    /// scope per hosted model.
+    pub fn render_prometheus(&self) -> String {
+        let shared = &self.shared;
+        let mut scopes: Vec<obs::Scope> = vec![
+            (vec![("scope".to_string(), "global".to_string())], &shared.metrics),
+            (vec![("scope".to_string(), "transport".to_string())], &shared.transport),
+        ];
+        for (name, entry) in &shared.models {
+            scopes.push((
+                vec![
+                    ("scope".to_string(), "model".to_string()),
+                    ("model".to_string(), name.clone()),
+                ],
+                &entry.metrics,
+            ));
+        }
+        obs::render_prometheus(&scopes, shared.obs.uptime_s(), crate::VERSION)
     }
 
     /// The replica router (empty when no `--replicas` were configured).
@@ -487,57 +549,109 @@ impl Coordinator {
         request: Request,
         reply: ReplySlot,
     ) -> RequestId {
-        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        let logical = model.unwrap_or(&self.shared.default_model);
-        self.shared.metrics.counter("requests_submitted").inc();
+        self.submit_sink_traced(model, request, reply, None)
+    }
+
+    /// [`Self::submit_sink`] with an optional protocol trace context
+    /// (`DESIGN.md` §13): `Bool(true)` is an explicit client opt-in,
+    /// an object with an `"id"` is a context propagated by a cluster
+    /// front door, anything else falls through to head sampling / slow
+    /// detection. The finished span tree of an explicitly traced
+    /// request is stashed for the serving layer to echo in the reply
+    /// (see [`Self::take_trace_echo`]).
+    pub fn submit_sink_traced(
+        &self,
+        model: Option<&str>,
+        request: Request,
+        reply: ReplySlot,
+        trace_ctx: Option<&Value>,
+    ) -> RequestId {
+        let shared: &Shared = &self.shared;
+        let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let logical = model.unwrap_or(&shared.default_model);
+        shared.metrics.counter("requests_submitted").inc();
+        let trace = admit_trace(shared, trace_ctx);
         // Response cache, consulted BEFORE routing: a hit answers from
         // the front door without touching any member (local or remote).
         // Only deterministic seeded samples are cacheable (`cluster::cache`).
         if let Request::Sample { count, seed } = &request {
-            if self.shared.cache.enabled() {
+            if shared.cache.enabled() {
                 let key = CacheKey::sample(logical, *seed, *count);
-                if let Some(rows) = self.shared.cache.get(&key) {
-                    self.shared.metrics.counter("requests_completed").inc();
-                    reply.send(Ok(Response::Samples(rows.as_ref().clone())));
+                let t_lookup = trace.as_ref().map(|t| t.now_us());
+                let hit = shared.cache.get(&key);
+                if let Some(t) = &trace {
+                    let start = t_lookup.unwrap_or(0);
+                    t.record_tagged(
+                        "cache_lookup",
+                        obs::ROOT_SPAN,
+                        start,
+                        t.now_us().saturating_sub(start),
+                        vec![(
+                            "outcome".to_string(),
+                            if hit.is_some() { "hit" } else { "miss" }.to_string(),
+                        )],
+                    );
+                }
+                if let Some(rows) = hit {
+                    shared.metrics.counter("requests_completed").inc();
+                    let result = Ok(Response::Samples(rows.as_ref().clone()));
+                    finish_trace(shared, &trace, id, request.op(), logical, &result);
+                    reply.send(result);
                     return id;
                 }
             }
         }
         // Registry entries win; only unhosted names consult the router,
         // so a member ("gp@1") stays directly addressable.
-        let name = if self.shared.models.contains_key(logical) {
+        let name = if shared.models.contains_key(logical) {
             logical.to_string()
         } else {
-            let outstanding = |m: &str| self.shared.outstanding(m);
-            match self.shared.router.route(logical, &request, &outstanding) {
+            let t_route = trace.as_ref().map(|t| t.now_us());
+            let outstanding = |m: &str| shared.outstanding(m);
+            let name = match shared.router.route(logical, &request, &outstanding) {
                 Some(member) => member.to_string(),
                 None => logical.to_string(),
+            };
+            if let Some(t) = &trace {
+                let start = t_route.unwrap_or(0);
+                t.record_tagged(
+                    "route",
+                    obs::ROOT_SPAN,
+                    start,
+                    t.now_us().saturating_sub(start),
+                    vec![("member".to_string(), name.clone())],
+                );
             }
+            name
         };
         let logical = logical.to_string();
-        match self.shared.entry(&name) {
+        match shared.entry(&name) {
             Err(e) => {
-                self.shared.metrics.counter("requests_failed").inc();
-                reply.send(Err(e));
+                shared.metrics.counter("requests_failed").inc();
+                let result = Err(e);
+                finish_trace(shared, &trace, id, request.op(), &logical, &result);
+                reply.send(result);
             }
             Ok(entry) => {
                 entry.metrics.counter("requests_submitted").inc();
-                let mut q = self.shared.queue.lock().unwrap();
-                if self.shared.queue_limit > 0 && q.len() >= self.shared.queue_limit {
+                let mut q = shared.queue.lock().unwrap();
+                if shared.queue_limit > 0 && q.len() >= shared.queue_limit {
                     // Backpressure: answer immediately with a typed
                     // overload instead of queueing unboundedly; socket
                     // sessions forward this as a v2 `overloaded` frame.
                     let depth = q.len();
                     drop(q);
-                    self.shared.metrics.counter("requests_rejected").inc();
-                    self.shared.transport.counter("requests_rejected").inc();
+                    shared.metrics.counter("requests_rejected").inc();
+                    shared.transport.counter("requests_rejected").inc();
                     entry.metrics.counter("requests_rejected").inc();
-                    self.shared.metrics.counter("requests_failed").inc();
+                    shared.metrics.counter("requests_failed").inc();
                     entry.metrics.counter("requests_failed").inc();
-                    reply.send(Err(IcrError::Overloaded {
+                    let result = Err(IcrError::Overloaded {
                         in_use: depth,
-                        limit: self.shared.queue_limit,
-                    }));
+                        limit: shared.queue_limit,
+                    });
+                    finish_trace(shared, &trace, id, request.op(), &logical, &result);
+                    reply.send(result);
                 } else {
                     q.push_back(Envelope {
                         id,
@@ -546,10 +660,11 @@ impl Coordinator {
                         request,
                         reply,
                         enqueued_at: Instant::now(),
+                        trace,
                     });
-                    self.shared.metrics.gauge("queue_depth").set(q.len() as f64);
+                    shared.metrics.gauge("queue_depth").set(q.len() as f64);
                     drop(q);
-                    self.shared.cv.notify_one();
+                    shared.cv.notify_one();
                 }
             }
         }
@@ -615,8 +730,16 @@ fn health_loop(shared: &Shared) {
                         if model.revalidate().is_ok() {
                             shared.router.set_member_state(&name, MemberState::Healthy);
                             shared.metrics.counter("health_restorations").inc();
+                            shared
+                                .obs
+                                .log
+                                .info("member_restored", vec![("member", json::s(&name))]);
                         } else {
                             shared.metrics.counter("identity_rejections").inc();
+                            shared
+                                .obs
+                                .log
+                                .warn("member_identity_rejected", vec![("member", json::s(&name))]);
                         }
                     }
                 }
@@ -626,6 +749,7 @@ fn health_loop(shared: &Shared) {
                     if shared.router.member_state(&name) == Some(MemberState::Healthy) {
                         shared.router.set_member_state(&name, MemberState::Ejected);
                         shared.metrics.counter("health_ejections").inc();
+                        shared.obs.log.warn("member_ejected", vec![("member", json::s(&name))]);
                     }
                 }
             }
@@ -667,6 +791,9 @@ fn stats_json(shared: &Shared) -> Value {
     let outstanding = |m: &str| shared.outstanding(m);
     json::obj(vec![
         ("version", json::s(crate::VERSION)),
+        ("version_line", json::s(&crate::version_line())),
+        ("started_at_unix_ms", json::num(shared.obs.started_unix_ms as f64)),
+        ("uptime_s", json::num(shared.obs.uptime_s())),
         (
             "protocol",
             json::arr(SUPPORTED_PROTOCOLS.iter().map(|&v| json::num(v as f64)).collect()),
@@ -693,7 +820,22 @@ fn stats_json(shared: &Shared) -> Value {
         ("transport", shared.transport.to_json()),
         ("replica_sets", shared.router.to_json(&outstanding)),
         ("cluster", cluster_json(shared)),
+        ("observability", observability_json(shared)),
         ("models", Value::Object(models)),
+    ])
+}
+
+/// The `observability` stats section (`DESIGN.md` §13): tracer and
+/// event-log health counters plus the knobs they run under.
+fn observability_json(shared: &Shared) -> Value {
+    json::obj(vec![
+        ("trace_sample_rate", json::num(shared.obs.tracer.sample_rate())),
+        ("trace_slow_us", json::num(shared.obs.tracer.slow_us() as f64)),
+        ("traces_committed", json::num(shared.obs.tracer.committed_count() as f64)),
+        ("traces_dropped", json::num(shared.obs.tracer.dropped_count() as f64)),
+        ("log_level", json::s(shared.obs.log.level().as_str())),
+        ("log_emitted", json::num(shared.obs.log.emitted_count() as f64)),
+        ("log_suppressed", json::num(shared.obs.log.suppressed_count() as f64)),
     ])
 }
 
@@ -914,6 +1056,67 @@ fn local_fault(shared: &Shared, entry: &ModelEntry, request: &Request) -> Option
     shared.fault.as_ref()?.apply(FaultScope::Local)
 }
 
+/// Trace admission (`DESIGN.md` §13): a propagated context keeps the
+/// caller's trace id (shard side of a cluster hop, always explicit),
+/// `Bool(true)` is an explicit client opt-in, everything else falls
+/// through to head sampling / slow detection. `None` is the zero-cost
+/// path — no allocation, no clock reads downstream.
+fn admit_trace(shared: &Shared, ctx: Option<&Value>) -> Option<Arc<obs::ActiveTrace>> {
+    match ctx {
+        Some(Value::Object(_)) => match ctx.and_then(|c| c.get("id")).and_then(Value::as_str) {
+            Some(tid) => Some(shared.obs.tracer.admit_propagated(tid)),
+            None => shared.obs.tracer.admit(true),
+        },
+        Some(Value::Bool(true)) => shared.obs.tracer.admit(true),
+        _ => shared.obs.tracer.admit(false),
+    }
+}
+
+/// Close a request's trace: commit it to the ring, log it when slow,
+/// and stash the span-tree echo (keyed by request id) for explicitly
+/// traced requests. Must run BEFORE the reply is delivered, so a
+/// serving layer encoding the reply always finds the stash populated.
+fn finish_trace(
+    shared: &Shared,
+    trace: &Option<Arc<obs::ActiveTrace>>,
+    id: RequestId,
+    op: &str,
+    model: &str,
+    result: &Result<Response, IcrError>,
+) {
+    let Some(t) = trace else { return };
+    let err = result.as_ref().err().map(|e| e.to_string());
+    let (fin, doc) = shared.obs.tracer.finish(t, op, model, err.as_deref());
+    if fin.slow {
+        shared.obs.log.warn(
+            "slow_request",
+            vec![
+                ("trace_id", json::s(&fin.trace_id)),
+                ("op", json::s(op)),
+                ("model", json::s(model)),
+                ("total_us", json::num(fin.total_us as f64)),
+            ],
+        );
+    }
+    if t.explicit {
+        if let Some(doc) = doc {
+            shared.obs.tracer.stash_echo(id, doc);
+        }
+    }
+}
+
+/// The protocol trace context to propagate to a shard for one
+/// envelope, or `None`. Only explicit and head-sampled traces cross
+/// the wire — a slow-only handle cannot know in advance that it will
+/// be slow, and an absent field keeps the remote frame byte-identical
+/// to a legacy one.
+fn wire_trace_ctx(env: &Envelope) -> Option<Value> {
+    env.trace
+        .as_ref()
+        .filter(|t| t.explicit || t.sampled)
+        .map(|t| json::obj(vec![("id", json::s(&t.trace_id))]))
+}
+
 /// Feed one served outcome into the member's circuit breaker window:
 /// only member faults (backend/internal failures, which wire errors map
 /// to) count against it — a typed client error proves the member
@@ -923,7 +1126,21 @@ fn record_member_outcome(shared: &Shared, member: &str, result: &Result<Response
         Ok(_) => true,
         Err(e) => !e.is_member_fault(),
     };
-    shared.router.record_outcome(member, ok);
+    if let Some((from, to)) = shared.router.record_outcome_observed(member, ok) {
+        // A breaker closing is recovery; a trip or re-open is
+        // degradation. (Open→HalfOpen happens lazily during routing
+        // and is intentionally not reported here.)
+        let level = if to == BreakerState::Closed { obs::Level::Info } else { obs::Level::Warn };
+        shared.obs.log.event(
+            level,
+            "breaker_transition",
+            vec![
+                ("member", json::s(member)),
+                ("from", json::s(from.name())),
+                ("to", json::s(to.name())),
+            ],
+        );
+    }
 }
 
 /// Populate the response cache for a completed seeded sample, under the
@@ -1036,13 +1253,37 @@ fn with_failover(
         let jitter =
             Duration::from_millis(base).mul_f64(shared.retry_rng.lock().unwrap().uniform());
         let remaining = deadline.saturating_duration_since(Instant::now());
+        let backoff_start = env.trace.as_ref().map(|t| t.now_us());
         std::thread::sleep(jitter.min(remaining));
+        if let Some(t) = &env.trace {
+            let start = backoff_start.unwrap_or(0);
+            t.record("retry_backoff", obs::ROOT_SPAN, start, t.now_us().saturating_sub(start));
+        }
         if Instant::now() >= deadline {
             break;
         }
         shared.metrics.counter("retries").inc();
         attempts += 1;
+        shared.obs.log.info(
+            "failover_attempt",
+            vec![
+                ("logical", json::s(&env.logical)),
+                ("member", json::s(&member)),
+                ("attempt", json::num(attempts as f64)),
+            ],
+        );
+        let attempt_start = env.trace.as_ref().map(|t| t.now_us());
         let result = execute_on_member(shared, &member, env);
+        if let Some(t) = &env.trace {
+            let start = attempt_start.unwrap_or(0);
+            t.record_tagged(
+                "retry_attempt",
+                obs::ROOT_SPAN,
+                start,
+                t.now_us().saturating_sub(start),
+                vec![("member".to_string(), member.clone())],
+            );
+        }
         record_member_outcome(shared, &member, &result);
         match result {
             Ok(resp) => {
@@ -1060,6 +1301,14 @@ fn with_failover(
         }
     }
     shared.metrics.counter("retry_budget_exhausted").inc();
+    shared.obs.log.warn(
+        "retry_exhausted",
+        vec![
+            ("logical", json::s(&env.logical)),
+            ("attempts", json::num(attempts as f64)),
+            ("budget_ms", json::num(shared.cfg.retry_budget_ms as f64)),
+        ],
+    );
     Err(IcrError::RetryExhausted {
         attempts,
         budget_ms: shared.cfg.retry_budget_ms,
@@ -1102,6 +1351,7 @@ fn finish_envelope(
     complete(shared, entry, result.is_err());
     shared.metrics.histogram("request_latency").observe(t_req);
     entry.metrics.histogram("request_latency").observe(t_req);
+    finish_trace(shared, &env.trace, env.id, env.request.op(), &env.model, &result);
     env.reply.send(result);
 }
 
@@ -1135,19 +1385,41 @@ fn process_remote_batch(
     match model.as_remote() {
         Some(remote) => {
             let t_submit = Instant::now();
+            // Wire span starts captured BEFORE the frames go out, so
+            // each envelope's `remote_wire` span covers its full round
+            // trip (including the pipelined submit).
+            let wire_starts: Vec<Option<u64>> =
+                batch.iter().map(|env| env.trace.as_ref().map(|t| t.now_us())).collect();
             let pendings: Vec<Result<PendingReply, IcrError>> = batch
                 .iter()
                 .map(|env| {
                     shape_check(&env.request)?;
-                    Ok(remote.proxy_submit(None, env.request.clone()))
+                    Ok(remote.proxy_submit_traced(None, env.request.clone(), wire_trace_ctx(env)))
                 })
                 .collect();
-            for (env, pending) in batch.into_iter().zip(pendings) {
-                let result = pending.and_then(|p| {
-                    remote
-                        .proxy_finish(&p, t_submit)
-                        .and_then(|resp| accept_remote_reply(shared, &env, resp))
-                });
+            for (i, (env, pending)) in batch.into_iter().zip(pendings).enumerate() {
+                let (raw, remote_doc) = match pending {
+                    Err(e) => (Err(e), None),
+                    Ok(p) => remote.proxy_finish_traced(&p, t_submit),
+                };
+                if let Some(t) = &env.trace {
+                    let start = wire_starts[i].unwrap_or(0);
+                    let span = t.record_tagged(
+                        "remote_wire",
+                        obs::ROOT_SPAN,
+                        start,
+                        t.now_us().saturating_sub(start),
+                        vec![("member".to_string(), env.model.clone())],
+                    );
+                    // Join the shard's echoed span tree under the wire
+                    // span, so a front-door trace shows where the time
+                    // went on the far side.
+                    if let Some(doc) = &remote_doc {
+                        t.attach_remote(span, doc);
+                    }
+                }
+                let result =
+                    raw.and_then(|resp| accept_remote_reply(shared, &env, resp));
                 record_member_outcome(shared, &env.model, &result);
                 let result = with_failover(shared, &env, result);
                 finish_envelope(shared, entry, env, result, t_submit);
@@ -1156,6 +1428,7 @@ fn process_remote_batch(
         None => {
             for env in batch {
                 let t_req = Instant::now();
+                let wire_start = env.trace.as_ref().map(|t| t.now_us());
                 let result = shape_check(&env.request).and_then(|()| match &env.request {
                     Request::Sample { count, seed } => model.sample(*count, *seed).map(|rows| {
                         cache_sample(shared, &env, &rows);
@@ -1166,6 +1439,16 @@ fn process_remote_batch(
                         .map(|mut rows| Response::Field(rows.remove(0))),
                     _ => unreachable!("non-batchable request in batch"),
                 });
+                if let Some(t) = &env.trace {
+                    let start = wire_start.unwrap_or(0);
+                    t.record_tagged(
+                        "remote_wire",
+                        obs::ROOT_SPAN,
+                        start,
+                        t.now_us().saturating_sub(start),
+                        vec![("member".to_string(), env.model.clone())],
+                    );
+                }
                 record_member_outcome(shared, &env.model, &result);
                 let result = with_failover(shared, &env, result);
                 finish_envelope(shared, entry, env, result, t_req);
@@ -1178,6 +1461,14 @@ fn process_remote_batch(
 
 fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     let t0 = Instant::now();
+    // Queue-wait phase span for every traced envelope: the span ends
+    // at dequeue (now) and starts when the envelope was enqueued.
+    for env in &batch {
+        if let Some(t) = &env.trace {
+            let wait_us = env.enqueued_at.elapsed().as_micros() as u64;
+            t.record("queue_wait", obs::ROOT_SPAN, t.now_us().saturating_sub(wait_us), wait_us);
+        }
+    }
     // Every envelope in a batch routes to the same model (pop_batch only
     // coalesces co-routed requests), so resolve the entry once.
     let entry = match shared.entry(&batch[0].model) {
@@ -1204,6 +1495,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         complete(shared, entry, result.is_err());
         shared.metrics.histogram("request_latency").observe(t0);
         entry.metrics.histogram("request_latency").observe(t0);
+        finish_trace(shared, &env.trace, env.id, env.request.op(), &env.model, &result);
         env.reply.send(result);
         return;
     }
@@ -1259,12 +1551,21 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         }
     }
 
+    let t_apply = Instant::now();
     let outputs = match local_fault(shared, entry, &batch[0].request) {
         // One draw per panel call, mirroring "one fault per model call"
         // on the remote scope: an injected fault fails the whole panel.
         Some(err) => Err(err),
         None => model.apply_sqrt_panel(&panel, applies),
     };
+    // The shared panel apply is one wall-clock interval; every traced
+    // envelope in the batch carries the same phase span.
+    let apply_us = t_apply.elapsed().as_micros() as u64;
+    for env in &batch {
+        if let Some(t) = &env.trace {
+            t.record("panel_apply", obs::ROOT_SPAN, t.now_us().saturating_sub(apply_us), apply_us);
+        }
+    }
     shared.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("applies_executed").add(applies as u64);
     entry.metrics.counter("batches_executed").inc();
@@ -1310,6 +1611,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                 };
                 record_member_outcome(shared, &env.model, &result);
                 complete(shared, entry, result.is_err());
+                finish_trace(shared, &env.trace, env.id, env.request.op(), &env.model, &result);
                 env.reply.send(result);
             }
         }
@@ -1334,6 +1636,7 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
                 record_member_outcome(shared, &env.model, &result);
                 let result = with_failover(shared, &env, result);
                 complete(shared, entry, result.is_err());
+                finish_trace(shared, &env.trace, env.id, env.request.op(), &env.model, &result);
                 env.reply.send(result);
             }
         }
@@ -1411,6 +1714,7 @@ fn serve_single(
         Request::ReloadModel { path } => {
             reload_entry(shared, entry, name, std::path::Path::new(path))
         }
+        Request::Traces { limit } => Ok(Response::Traces(shared.obs.tracer.recent(*limit))),
         _ => unreachable!("batchable request routed to serve_single"),
     }
 }
@@ -1454,6 +1758,10 @@ fn reload_entry(
     shared.cache.invalidate_models(&name_refs);
     shared.metrics.counter("model_reloads").inc();
     entry.metrics.counter("model_reloads").inc();
+    shared.obs.log.info(
+        "model_reloaded",
+        vec![("model", json::s(name)), ("config_sha256", json::s(&config_sha256))],
+    );
     Ok(Response::Reloaded { model: name.to_string(), config_sha256 })
 }
 
@@ -2376,6 +2684,111 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn explicit_traces_echo_span_trees_and_commit_to_the_ring() {
+        let c = start(1, 4);
+        let (slot, rx) = ReplySlot::channel();
+        let opt_in = Value::Bool(true);
+        let id =
+            c.submit_sink_traced(None, Request::Sample { count: 1, seed: 3 }, slot, Some(&opt_in));
+        rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        let doc = c.take_trace_echo(id).expect("echo stashed before the reply was sent");
+        let spans = doc.get("spans").and_then(Value::as_array).expect("span tree");
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Value::as_str)).collect();
+        assert!(names.contains(&"request"), "{names:?}");
+        assert!(names.contains(&"queue_wait"), "{names:?}");
+        assert!(names.contains(&"panel_apply"), "{names:?}");
+        // The stash is claim-once: whichever serving layer encodes the
+        // reply consumes it.
+        assert!(c.take_trace_echo(id).is_none());
+
+        // A propagated context keeps the caller's trace id, so a
+        // shard's document joins the front door's trace.
+        let (slot, rx) = ReplySlot::channel();
+        let ctx = json::obj(vec![("id", json::s("t-front-7"))]);
+        let id =
+            c.submit_sink_traced(None, Request::Sample { count: 1, seed: 4 }, slot, Some(&ctx));
+        rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        let doc = c.take_trace_echo(id).expect("propagated traces echo too");
+        assert_eq!(doc.get("trace_id").and_then(Value::as_str), Some("t-front-7"));
+
+        // Both traces committed to the ring, served by the v2 traces op.
+        match c.call(Request::Traces { limit: 10 }).unwrap() {
+            Response::Traces(v) => {
+                assert!(v.as_array().map(|a| a.len()).unwrap_or(0) >= 2, "{}", v.to_json());
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Untraced requests leave no echo and no ring growth — the
+        // sampling-off data path stays observability-free.
+        let before = c.obs().tracer.committed_count();
+        let (slot, rx) = ReplySlot::channel();
+        let id = c.submit_sink_traced(None, Request::Sample { count: 1, seed: 5 }, slot, None);
+        rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        assert!(c.take_trace_echo(id).is_none());
+        assert_eq!(c.obs().tracer.committed_count(), before);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_reports_observability_uptime_and_version_line() {
+        let c = start(1, 2);
+        let _ = c.call(Request::Sample { count: 1, seed: 1 }).unwrap();
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(v) => {
+                assert!(
+                    v.get("started_at_unix_ms").and_then(Value::as_f64).unwrap() > 0.0,
+                    "{}",
+                    v.to_json()
+                );
+                assert!(v.get("uptime_s").and_then(Value::as_f64).unwrap() >= 0.0);
+                assert_eq!(
+                    v.get("version_line").and_then(Value::as_str),
+                    Some(crate::version_line().as_str())
+                );
+                assert_eq!(
+                    v.get_path("observability.log_level").and_then(Value::as_str),
+                    Some("info")
+                );
+                assert_eq!(
+                    v.get_path("observability.trace_sample_rate").and_then(Value::as_f64),
+                    Some(0.0)
+                );
+                assert_eq!(
+                    v.get_path("observability.traces_committed").and_then(Value::as_f64),
+                    Some(0.0)
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_global_transport_and_model_scopes() {
+        let c = start(1, 2);
+        let _ = c.call(Request::Sample { count: 1, seed: 1 }).unwrap();
+        // The transport registry fills when a socket host runs; touch
+        // one counter so this scope renders here too.
+        c.transport_metrics().counter("frames_in").inc();
+        let text = c.render_prometheus();
+        assert!(text.contains("# TYPE icr_uptime_seconds gauge"), "{text}");
+        assert!(text.contains("icr_build_info{version=\""), "{text}");
+        assert!(
+            text.contains("icr_requests_submitted_total{scope=\"global\"}"),
+            "{text}"
+        );
+        assert!(text.contains("icr_frames_in_total{scope=\"transport\"} 1"), "{text}");
+        assert!(
+            text.contains("scope=\"model\",model=\"default\""),
+            "{text}"
+        );
+        assert!(!text.contains("NaN"), "{text}");
         c.shutdown();
     }
 }

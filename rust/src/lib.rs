@@ -57,6 +57,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod rng;
@@ -66,6 +67,28 @@ pub mod testutil;
 /// Crate version (from `Cargo.toml`), reported by `icr --version`, the
 /// serve banner, and `stats` responses.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The full `icr --version` line: crate version plus the protocol,
+/// transport, routing, model-family, and cluster capability summary.
+/// Also embedded in `stats` documents so scraped snapshots and CI
+/// artifacts are attributable to a build.
+pub fn version_line() -> String {
+    let versions: Vec<String> = coordinator::protocol::SUPPORTED_PROTOCOLS
+        .iter()
+        .map(|v| format!("v{v}"))
+        .collect();
+    let policies: Vec<&str> = net::RoutePolicy::ALL.iter().map(|p| p.name()).collect();
+    format!(
+        "icr {} | protocols {} (current v{}) | transports {} | routing {} | families {} | cluster {}",
+        VERSION,
+        versions.join(", "),
+        coordinator::protocol::PROTOCOL_VERSION,
+        net::TRANSPORTS.join(", "),
+        policies.join(", "),
+        config::MODEL_FAMILIES.join(", "),
+        cluster::CAPABILITIES.join(", ")
+    )
+}
 
 /// One-stop imports for building and serving models.
 pub mod prelude {

@@ -14,7 +14,7 @@ use icr::cli::{render_help, Args, FlagSpec};
 use icr::config::{Backend, ServerConfig};
 use icr::coordinator::{protocol, Coordinator, Request, Response};
 use icr::model::GpModel;
-use icr::net::{self, ListenAddr, NetServer, RoutePolicy};
+use icr::net::{self, ListenAddr, NetServer};
 use icr::rng::Rng;
 use icr::runtime::PjrtRuntime;
 
@@ -30,19 +30,7 @@ fn main() {
 }
 
 fn protocol_line() -> String {
-    let versions: Vec<String> =
-        protocol::SUPPORTED_PROTOCOLS.iter().map(|v| format!("v{v}")).collect();
-    let policies: Vec<&str> = RoutePolicy::ALL.iter().map(|p| p.name()).collect();
-    format!(
-        "icr {} | protocols {} (current v{}) | transports {} | routing {} | families {} | cluster {}",
-        icr::VERSION,
-        versions.join(", "),
-        protocol::PROTOCOL_VERSION,
-        net::TRANSPORTS.join(", "),
-        policies.join(", "),
-        icr::config::MODEL_FAMILIES.join(", "),
-        icr::cluster::CAPABILITIES.join(", ")
-    )
+    icr::version_line()
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -115,6 +103,12 @@ fn print_help() {
         FlagSpec { name: "remote-probe-timeout-ms", help: "remote member health-probe timeout", default: Some("2000"), is_switch: false },
         FlagSpec { name: "remote-connect-timeout-ms", help: "remote member data-wire connect timeout", default: Some("5000"), is_switch: false },
         FlagSpec { name: "fault-inject", help: "chaos spec, e.g. remote:error=0.1,delay_ms=50;local:drop=0.02", default: None, is_switch: false },
+        FlagSpec { name: "trace-sample-rate", help: "head-sampling probability for request traces, 0..1", default: Some("0"), is_switch: false },
+        FlagSpec { name: "trace-slow-ms", help: "always trace + log requests slower than this (0 = off)", default: Some("0"), is_switch: false },
+        FlagSpec { name: "log-level", help: "structured-log floor: error | warn | info | debug", default: Some("info"), is_switch: false },
+        FlagSpec { name: "log-format", help: "structured-log rendering: json | text", default: Some("json"), is_switch: false },
+        FlagSpec { name: "log-dest", help: "structured-log sink: stderr | file:PATH", default: Some("stderr"), is_switch: false },
+        FlagSpec { name: "metrics-listen", help: "Prometheus scrape endpoint: tcp:HOST:PORT (off by default)", default: None, is_switch: false },
         FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
         FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
         FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
@@ -156,6 +150,10 @@ fn print_help() {
     println!("  under load, deadline-budgeted failover (--retry-max, --retry-budget-ms)");
     println!("  re-routes idempotent requests byte-identically, and --fault-inject");
     println!("  arms the deterministic chaos harness (§12).");
+    println!("  Observability (§13): --trace-sample-rate/--trace-slow-ms collect");
+    println!("  per-request phase spans (query via the v2 traces op or \"trace\": true");
+    println!("  on any v2 request), --log-* emits structured JSONL events, and");
+    println!("  --metrics-listen serves Prometheus text format at /metrics.");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -244,13 +242,33 @@ fn model_banner(coord: &Coordinator) -> String {
 /// default model; v2 tagged → routed by `model`). EOF drains and shuts
 /// down, printing a structured stats document to stderr.
 fn serve_stdio(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
+    let coord = Arc::new(coord);
+    // Stdio serving has no socket server to host the scrape endpoint;
+    // the blocking accept thread serves the identical document.
+    let (metrics_listener, metrics_local) = net::bind_metrics(cfg)?;
+    let metrics_shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let metrics_thread = match metrics_listener {
+        Some(l) => {
+            let render_coord = coord.clone();
+            Some(icr::obs::spawn_metrics_listener(
+                l,
+                metrics_shutdown.clone(),
+                Arc::new(move || render_coord.render_prometheus()),
+            )?)
+        }
+        None => None,
+    };
     eprintln!(
-        "{} | serve: models [{}] | workers {} | max_batch {} | apply_threads {} | reading JSONL from stdin",
+        "{} | serve: models [{}] | workers {} | max_batch {} | apply_threads {}{} | reading JSONL from stdin",
         protocol_line(),
         model_banner(&coord),
         cfg.workers,
         cfg.max_batch,
-        icr::parallel::resolve_threads(cfg.apply_threads)
+        icr::parallel::resolve_threads(cfg.apply_threads),
+        match &metrics_local {
+            Some(addr) => format!(" | metrics {addr}"),
+            None => String::new(),
+        },
     );
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -262,10 +280,24 @@ fn serve_stdio(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
         }
         match protocol::parse_request(&line) {
             Ok(frame) => {
-                let (id, rx) = coord.submit_to(frame.model.as_deref(), frame.request);
+                let want_trace = frame.wants_trace();
+                let (slot, rx) = icr::coordinator::ReplySlot::channel();
+                let id = coord.submit_sink_traced(
+                    frame.model.as_deref(),
+                    frame.request,
+                    slot,
+                    frame.trace.as_ref(),
+                );
                 let model =
                     frame.model.unwrap_or_else(|| coord.default_model().to_string());
-                pending.push((frame.version, frame.client_id.unwrap_or(id), model, rx));
+                pending.push((
+                    frame.version,
+                    frame.client_id.unwrap_or(id),
+                    id,
+                    want_trace,
+                    model,
+                    rx,
+                ));
             }
             Err(e) => {
                 // Error frames are versioned like the request would have
@@ -276,24 +308,33 @@ fn serve_stdio(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
                 writeln!(
                     out,
                     "{}",
-                    protocol::encode_response(version, id.unwrap_or(0), None, &Err(e)).to_json()
+                    protocol::encode_response(version, id.unwrap_or(0), None, &Err(e), None).to_json()
                 )?;
             }
         }
     }
-    for (version, id, model, rx) in pending {
+    for (version, id, req_id, want_trace, model, rx) in pending {
         let result = rx
             .recv()
             .map_err(|_| anyhow::anyhow!("reply channel closed"))?;
+        // The coordinator stashes the span-tree echo before delivering
+        // the reply, so the pop after `recv` always observes it.
+        let trace = if want_trace { coord.take_trace_echo(req_id) } else { None };
         let mut out = stdout.lock();
         writeln!(
             out,
             "{}",
-            protocol::encode_response(version, id, Some(&model), &result).to_json()
+            protocol::encode_response_traced(version, id, Some(&model), &result, trace).to_json()
         )?;
     }
+    if let Some(h) = metrics_thread {
+        metrics_shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = h.join();
+    }
     eprintln!("{}", coord.stats_json().to_json_pretty());
-    coord.shutdown();
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
     Ok(())
 }
 
@@ -305,7 +346,7 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
     net::install_sigint_handler();
     let server = NetServer::bind(cfg, coord.clone())?;
     eprintln!(
-        "{} | serve: listening on {} | io_mode {} | models [{}] | workers {} | batch_max {} | batch_window_us {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {} | breaker {}/{:.2}/{}ms | retry {}x/{}ms{}",
+        "{} | serve: listening on {} | io_mode {} | models [{}] | workers {} | batch_max {} | batch_window_us {} | apply_threads {} | max_connections {} | queue_limit {} | route_policy {} | cache_entries {} | health_interval_ms {} | breaker {}/{:.2}/{}ms | retry {}x/{}ms{}{}",
         protocol_line(),
         server.local_addr(),
         cfg.io_mode.name(),
@@ -326,6 +367,10 @@ fn serve_net(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
         cfg.retry_budget_ms,
         match &cfg.fault_inject {
             Some(spec) => format!(" | fault_inject {spec}"),
+            None => String::new(),
+        },
+        match server.metrics_addr() {
+            Some(addr) => format!(" | metrics {addr}"),
             None => String::new(),
         },
     );

@@ -118,7 +118,12 @@ impl Histogram {
         self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile from the log buckets, reported as the
+    /// geometric mean of the containing bucket's edges (`2^i · √2`).
+    /// The edges themselves bound the error: the true quantile lies in
+    /// `[2^i, 2^(i+1))`, so the midpoint is within a factor of √2 ≈ 1.41
+    /// of it either way — the upper edge (the previous behavior) was
+    /// biased up to 2× high and never low.
     pub fn quantile_ns(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -129,10 +134,33 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return (1u64 << (i + 1)) as f64;
+                return (1u64 << i) as f64 * std::f64::consts::SQRT_2;
             }
         }
         f64::INFINITY
+    }
+
+    /// Exact sum of all observations, in the observed unit (ns for
+    /// latency histograms).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts, index `i` covering
+    /// `[2^i, 2^(i+1))` — the Prometheus exposition renders these as
+    /// cumulative `_bucket` series.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Exclusive upper edge of bucket `i`.
+    pub fn bucket_upper_edge(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
+    /// Number of log buckets.
+    pub fn n_buckets() -> usize {
+        N_BUCKETS
     }
 }
 
@@ -230,15 +258,44 @@ impl Registry {
             out.push_str(&format!("gauge {name} {}\n", g.get()));
         }
         for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            // Empty histograms render 0.0, matching `to_json` — a NaN
+            // here used to leak `mean_us=NaN p50_us=NaN` into the text
+            // exposition.
+            let (mean, p50, p99) = if h.count() == 0 {
+                (0.0, 0.0, 0.0)
+            } else {
+                (h.mean_ns(), h.quantile_ns(0.5), h.quantile_ns(0.99))
+            };
             out.push_str(&format!(
                 "histogram {name} count={} mean_us={:.1} p50_us={:.1} p99_us={:.1}\n",
                 h.count(),
-                h.mean_ns() / 1e3,
-                h.quantile_ns(0.5) / 1e3,
-                h.quantile_ns(0.99) / 1e3,
+                mean / 1e3,
+                p50 / 1e3,
+                p99 / 1e3,
             ));
         }
         out
+    }
+
+    /// Snapshot of every counter, sorted by name.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.inner.counters.lock().unwrap().iter().map(|(n, c)| (n.clone(), c.get())).collect()
+    }
+
+    /// Snapshot of every gauge, sorted by name.
+    pub fn gauges_snapshot(&self) -> Vec<(String, f64)> {
+        self.inner.gauges.lock().unwrap().iter().map(|(n, g)| (n.clone(), g.get())).collect()
+    }
+
+    /// Handles to every histogram, sorted by name.
+    pub fn histograms_snapshot(&self) -> Vec<(String, Arc<Histogram>)> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| (n.clone(), h.clone()))
+            .collect()
     }
 }
 
@@ -367,5 +424,65 @@ mod tests {
         assert!(text.contains("counter a 1"));
         assert!(text.contains("gauge b 1.5"));
         assert!(text.contains("histogram c count=1"));
+    }
+
+    #[test]
+    fn render_empty_histogram_prints_zero_not_nan() {
+        // Registering a histogram without observations used to render
+        // `mean_us=NaN p50_us=NaN p99_us=NaN` (to_json was guarded,
+        // render was not).
+        let r = Registry::new();
+        let _ = r.histogram("request_latency");
+        let text = r.render();
+        assert!(
+            text.contains("histogram request_latency count=0 mean_us=0.0 p50_us=0.0 p99_us=0.0"),
+            "{text}"
+        );
+        assert!(!text.contains("NaN"), "{text}");
+    }
+
+    #[test]
+    fn quantiles_report_bucket_midpoints_within_sqrt2() {
+        // All mass in bucket [1024, 2048): every quantile must report
+        // the geometric midpoint 1024·√2, which is within √2 of any
+        // true value in the bucket — the old upper-edge answer (2048)
+        // was biased up to 2× high.
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.observe_ns(1500);
+        }
+        let mid = 1024.0 * std::f64::consts::SQRT_2;
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            let got = h.quantile_ns(q);
+            assert!((got - mid).abs() < 1e-9, "q={q}: {got} != {mid}");
+            // Error bound: within √2 of the true observation either way.
+            assert!(got / 1500.0 <= std::f64::consts::SQRT_2 + 1e-9);
+            assert!(1500.0 / got <= std::f64::consts::SQRT_2 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn histogram_snapshot_accessors_expose_buckets() {
+        let h = Histogram::default();
+        h.observe_ns(100); // bucket 6: [64, 128)
+        h.observe_ns(5000); // bucket 12: [4096, 8192)
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), Histogram::n_buckets());
+        assert_eq!(counts[6], 1);
+        assert_eq!(counts[12], 1);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_ns(), 5100);
+        assert_eq!(Histogram::bucket_upper_edge(6), 128);
+
+        let r = Registry::new();
+        r.counter("a").add(2);
+        r.gauge("b").set(0.5);
+        r.histogram("c").observe_ns(1);
+        assert_eq!(r.counters_snapshot(), vec![("a".to_string(), 2)]);
+        assert_eq!(r.gauges_snapshot(), vec![("b".to_string(), 0.5)]);
+        let hs = r.histograms_snapshot();
+        assert_eq!(hs.len(), 1);
+        assert_eq!(hs[0].0, "c");
+        assert_eq!(hs[0].1.count(), 1);
     }
 }

@@ -58,9 +58,15 @@ use super::transport::{refuse, sigint_requested, NetServer};
 const LISTENER: u64 = 0;
 /// Token of the waker pipe's read end.
 const WAKER: u64 = 1;
+/// Token of the optional `--metrics-listen` scrape listener
+/// (`DESIGN.md` §13): accept readiness rides the same epoll set, so an
+/// idle endpoint costs zero wakeups; each accepted scrape is answered
+/// on a short-lived thread so a slow scraper can never stall the
+/// serving loop.
+const METRICS: u64 = 2;
 /// First connection token; monotonically increasing, never reused, so
 /// a stale completion can never be delivered to a recycled connection.
-const FIRST_CONN: u64 = 2;
+const FIRST_CONN: u64 = 3;
 
 /// Per-readiness-visit read budget. Level-triggered polling re-arms
 /// immediately, so capping the bytes taken per visit bounds how long
@@ -84,6 +90,14 @@ type Completion = (u64, u64, Result<Response, IcrError>);
 struct PendingReply {
     version: u64,
     id: u64,
+    /// Raw coordinator request id — the key under which a finished
+    /// span tree is stashed for echo (distinct from `id`, which echoes
+    /// the client's correlation id when one was supplied).
+    req_id: u64,
+    /// Frame carried a trace context: pop the span-tree echo at encode
+    /// time. Stays `false` for untraced frames so their replies are
+    /// byte-identical to pre-observability builds.
+    want_trace: bool,
     /// `None` for parse-time error frames (encoded without a model
     /// tag, like the threaded host's `Outgoing::Ready`).
     model: Option<String>,
@@ -151,6 +165,12 @@ pub(crate) fn run(server: NetServer) -> Result<()> {
         .context("registering waker")?;
     transport.gauge("event_loop").set(1.0);
     transport.gauge("fds_registered").set(2.0);
+    if let Some(m) = &server.metrics_listener {
+        poller
+            .register(m.as_raw_fd(), METRICS, true, false)
+            .context("registering metrics listener")?;
+        transport.gauge("fds_registered").inc();
+    }
 
     let mut conns: HashMap<u64, ConnState> = HashMap::new();
     let mut idle: BTreeMap<(Instant, u64), ()> = BTreeMap::new();
@@ -196,6 +216,7 @@ pub(crate) fn run(server: NetServer) -> Result<()> {
                     )?;
                 }
                 WAKER => waker.drain(),
+                METRICS => metrics_ready(&server, &coord, &transport),
                 token => {
                     if let Some(c) = conns.get_mut(&token) {
                         if ev.readable {
@@ -231,7 +252,7 @@ pub(crate) fn run(server: NetServer) -> Result<()> {
         for token in dirty.drain(..) {
             let mut done = false;
             if let Some(c) = conns.get_mut(&token) {
-                flush_conn(c, &transport);
+                flush_conn(c, &coord, &transport);
                 done = c.finished();
                 if !done {
                     let buffered = c.buffered_out();
@@ -338,6 +359,32 @@ fn accept_ready(
         }
     }
     Ok(())
+}
+
+/// Accept pending scrape connections off the `--metrics-listen`
+/// socket and answer each on a short-lived thread. Serving a scrape
+/// does blocking reads (bounded by a 2 s timeout), which must never
+/// stall the readiness loop; scrapes are rare (typically one every
+/// 15–60 s), so a throwaway thread per exchange is the cheap option
+/// that keeps the loop wait-free.
+fn metrics_ready(server: &NetServer, coord: &Arc<Coordinator>, transport: &Registry) {
+    let Some(listener) = &server.metrics_listener else { return };
+    loop {
+        match listener.accept() {
+            Ok((mut conn, _)) => {
+                transport.counter("metrics_scrapes").inc();
+                let coord = coord.clone();
+                let _ = std::thread::Builder::new().name("icr-metrics-scrape".into()).spawn(
+                    move || {
+                        let _ = crate::obs::serve_scrape(&mut conn, &|| coord.render_prometheus());
+                    },
+                );
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
 }
 
 /// Arm (or re-arm) a connection's idle deadline. Deadlines in the past
@@ -455,15 +502,24 @@ fn submit_line(
             // Inline fast paths (cache hit, unknown model, overload)
             // complete through the sink before this returns; the demux
             // entry is pushed first so the completion finds its slot.
+            let want_trace = frame.wants_trace();
             c.pending.push_back(PendingReply {
                 version: frame.version,
                 id: 0, // patched below once the request id is known
+                req_id: 0,
+                want_trace,
                 model: Some(model),
                 result: None,
             });
-            let id = coord.submit_sink(frame.model.as_deref(), frame.request, slot);
+            let id = coord.submit_sink_traced(
+                frame.model.as_deref(),
+                frame.request,
+                slot,
+                frame.trace.as_ref(),
+            );
             let entry = c.pending.back_mut().expect("just pushed");
             entry.id = frame.client_id.unwrap_or(id);
+            entry.req_id = id;
         }
         Err(e) => {
             c.next_seq += 1;
@@ -471,6 +527,8 @@ fn submit_line(
             c.pending.push_back(PendingReply {
                 version,
                 id: id.unwrap_or(0),
+                req_id: 0,
+                want_trace: false,
                 model: None,
                 result: Some(Err(e)),
             });
@@ -482,13 +540,18 @@ fn submit_line(
 /// bytes until the socket would block. A dead peer drops the
 /// connection's undelivered replies, like the threaded writer hanging
 /// up on a write error.
-fn flush_conn(c: &mut ConnState, transport: &Registry) {
+fn flush_conn(c: &mut ConnState, coord: &Arc<Coordinator>, transport: &Registry) {
     while c.pending.front().is_some_and(|p| p.result.is_some()) {
         let p = c.pending.pop_front().expect("front checked");
         c.front_seq = c.front_seq.wrapping_add(1);
-        let PendingReply { version, id, model, result } = p;
+        let PendingReply { version, id, req_id, want_trace, model, result } = p;
         let result = result.expect("front checked complete");
-        let frame = protocol::encode_response(version, id, model.as_deref(), &result);
+        // The span-tree echo was stashed (keyed by the raw coordinator
+        // id) before the completion was delivered, so the pop here
+        // always observes it for explicitly traced requests.
+        let trace = if want_trace { coord.take_trace_echo(req_id) } else { None };
+        let frame =
+            protocol::encode_response_traced(version, id, model.as_deref(), &result, trace);
         // Counted before the write so the counter is current by the
         // time a client observes the reply (same as the threaded host).
         transport.counter("frames_out").inc();

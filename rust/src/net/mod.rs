@@ -43,7 +43,7 @@ pub mod session;
 pub mod transport;
 
 pub use router::{BreakerConfig, BreakerState, MemberState, ReplicaSet, RoutePolicy, Router};
-pub use transport::{install_sigint_handler, sigint_requested, NetServer};
+pub use transport::{bind_metrics, install_sigint_handler, sigint_requested, NetServer};
 
 use std::fmt;
 use std::path::PathBuf;

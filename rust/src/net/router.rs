@@ -458,16 +458,35 @@ impl Router {
     /// is_member_fault`]) — a client's shape mismatch says nothing about
     /// the member's health.
     pub fn record_outcome(&self, member: &str, ok: bool) {
+        let _ = self.record_outcome_observed(member, ok);
+    }
+
+    /// As [`Router::record_outcome`], additionally reporting the first
+    /// breaker transition `(from, to)` this outcome caused, so the
+    /// serving layer can emit a structured `breaker_transition` event
+    /// (`DESIGN.md` §13) without polling breaker states.
+    pub fn record_outcome_observed(
+        &self,
+        member: &str,
+        ok: bool,
+    ) -> Option<(BreakerState, BreakerState)> {
         if self.breaker_cfg.window == 0 {
-            return;
+            return None;
         }
+        let mut transition = None;
         for set in self.sets.values() {
             for (i, m) in set.members.iter().enumerate() {
                 if m == member {
-                    set.breaker[i].lock().unwrap().record(&self.breaker_cfg, ok);
+                    let mut b = set.breaker[i].lock().unwrap();
+                    let from = b.state;
+                    b.record(&self.breaker_cfg, ok);
+                    if transition.is_none() && b.state != from {
+                        transition = Some((from, b.state));
+                    }
                 }
             }
         }
+        transition
     }
 
     /// A member's breaker state (first set hosting it).

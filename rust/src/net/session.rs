@@ -27,7 +27,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{protocol, Coordinator, Response};
+use crate::coordinator::{protocol, Coordinator, ReplySlot, Response};
 use crate::error::IcrError;
 use crate::metrics::Registry;
 
@@ -64,6 +64,11 @@ enum Outgoing {
     Pending {
         version: u64,
         id: u64,
+        /// Raw coordinator request id — the span-tree echo stash key
+        /// (`id` echoes the client's correlation id when supplied).
+        req_id: u64,
+        /// Frame carried a trace context: pop the echo at encode time.
+        want_trace: bool,
         model: String,
         rx: mpsc::Receiver<Result<Response, IcrError>>,
     },
@@ -78,12 +83,15 @@ pub(crate) fn run(conn: Conn, ctx: SessionCtx) {
 
     let writer = match conn.try_clone() {
         Ok(write_half) => {
+            let coord = ctx.coord.clone();
             let transport = ctx.transport.clone();
             let outstanding = outstanding.clone();
             let peer_gone = peer_gone.clone();
             std::thread::Builder::new()
                 .name("icr-session-writer".into())
-                .spawn(move || writer_loop(write_half, rx, transport, outstanding, peer_gone))
+                .spawn(move || {
+                    writer_loop(write_half, rx, coord, transport, outstanding, peer_gone)
+                })
                 .ok()
         }
         Err(_) => None,
@@ -126,14 +134,22 @@ fn reader_loop(
                 ctx.transport.counter("frames_in").inc();
                 let msg = match protocol::parse_request(&line) {
                     Ok(frame) => {
-                        let (id, reply) =
-                            ctx.coord.submit_to(frame.model.as_deref(), frame.request);
+                        let want_trace = frame.wants_trace();
+                        let (slot, reply) = ReplySlot::channel();
+                        let id = ctx.coord.submit_sink_traced(
+                            frame.model.as_deref(),
+                            frame.request,
+                            slot,
+                            frame.trace.as_ref(),
+                        );
                         let model = frame
                             .model
                             .unwrap_or_else(|| ctx.coord.default_model().to_string());
                         Outgoing::Pending {
                             version: frame.version,
                             id: frame.client_id.unwrap_or(id),
+                            req_id: id,
+                            want_trace,
                             model,
                             rx: reply,
                         }
@@ -174,6 +190,7 @@ fn reader_loop(
 fn writer_loop(
     conn: Conn,
     rx: mpsc::Receiver<Outgoing>,
+    coord: Arc<Coordinator>,
     transport: Registry,
     outstanding: Arc<AtomicUsize>,
     peer_gone: Arc<AtomicBool>,
@@ -182,13 +199,17 @@ fn writer_loop(
     for msg in rx {
         let frame = match msg {
             Outgoing::Ready { version, id, error } => {
-                protocol::encode_response(version, id, None, &Err(error))
+                protocol::encode_response(version, id, None, &Err(error), None)
             }
-            Outgoing::Pending { version, id, model, rx } => {
+            Outgoing::Pending { version, id, req_id, want_trace, model, rx } => {
                 let result = rx.recv().unwrap_or_else(|_| {
                     Err(IcrError::Internal("coordinator dropped the reply channel".into()))
                 });
-                protocol::encode_response(version, id, Some(&model), &result)
+                // The coordinator stashes the span-tree echo before it
+                // sends the reply, so the pop after `recv` always
+                // observes it for explicitly traced requests.
+                let trace = if want_trace { coord.take_trace_echo(req_id) } else { None };
+                protocol::encode_response_traced(version, id, Some(&model), &result, trace)
             }
         };
         outstanding.fetch_sub(1, Ordering::SeqCst);

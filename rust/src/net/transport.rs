@@ -197,6 +197,11 @@ pub struct NetServer {
     io_mode: IoMode,
     /// Threads-mode reader poll granularity (`--io-poll-ms`).
     io_poll: Duration,
+    /// Bound `--metrics-listen` scrape socket (DESIGN.md §13), if
+    /// configured. The event loop hosts it on its own poller; threads
+    /// mode hands it to the blocking [`crate::obs::spawn_metrics_listener`].
+    pub(crate) metrics_listener: Option<TcpListener>,
+    metrics_local: Option<String>,
 }
 
 impl NetServer {
@@ -239,6 +244,7 @@ impl NetServer {
             }
         };
         listener.set_nonblocking(true).context("non-blocking listener")?;
+        let (metrics_listener, metrics_local) = bind_metrics(cfg)?;
         Ok(NetServer {
             listener,
             coord,
@@ -249,6 +255,8 @@ impl NetServer {
             unix_path,
             io_mode: cfg.io_mode,
             io_poll: Duration::from_millis(cfg.io_poll_ms.max(1)),
+            metrics_listener,
+            metrics_local,
         })
     }
 
@@ -256,6 +264,12 @@ impl NetServer {
     /// or `unix:PATH`).
     pub fn local_addr(&self) -> &str {
         &self.local
+    }
+
+    /// The bound `--metrics-listen` address (`tcp:IP:PORT` with the
+    /// resolved ephemeral port), if a scrape endpoint is configured.
+    pub fn metrics_addr(&self) -> Option<&str> {
+        self.metrics_local.as_deref()
     }
 
     /// Flag requesting a graceful drain; sharable with signal handlers,
@@ -282,8 +296,25 @@ impl NetServer {
     }
 
     /// The legacy accept loop: two threads per connection.
-    fn run_threads(self) -> Result<()> {
+    fn run_threads(mut self) -> Result<()> {
         let transport = self.coord.transport_metrics().clone();
+        // Threads mode has no readiness loop to host the scrape
+        // endpoint on; hand the bound socket to the blocking accept
+        // thread instead (identical exposition document either way).
+        let metrics_thread = match self.metrics_listener.take() {
+            Some(l) => {
+                let coord = self.coord.clone();
+                Some(
+                    crate::obs::spawn_metrics_listener(
+                        l,
+                        self.shutdown.clone(),
+                        Arc::new(move || coord.render_prometheus()),
+                    )
+                    .context("spawning metrics listener")?,
+                )
+            }
+            None => None,
+        };
         let open = Arc::new(AtomicUsize::new(0));
         let mut sessions: Vec<std::thread::JoinHandle<()>> = Vec::new();
         let mut next_sid = 0u64;
@@ -329,11 +360,35 @@ impl NetServer {
         for h in sessions {
             let _ = h.join();
         }
+        if let Some(h) = metrics_thread {
+            // A SIGINT drain never stored the programmatic flag; set it
+            // so the scrape thread observes the shutdown and exits.
+            self.shutdown.store(true, Ordering::SeqCst);
+            let _ = h.join();
+        }
         if let Some(path) = &self.unix_path {
             std::fs::remove_file(path).ok();
         }
         Ok(())
     }
+}
+
+/// Bind the configured `--metrics-listen` scrape socket, returning the
+/// listener plus its resolved `tcp:IP:PORT` address. Shared by the
+/// socket server and the stdio serving loop in `main.rs`.
+pub fn bind_metrics(
+    cfg: &ServerConfig,
+) -> Result<(Option<TcpListener>, Option<String>)> {
+    let Some(spec) = &cfg.metrics_listen else { return Ok((None, None)) };
+    let hp = match super::ListenAddr::parse(spec) {
+        Ok(super::ListenAddr::Tcp(hp)) => hp,
+        // The config layer already rejected non-TCP specs at startup.
+        _ => anyhow::bail!("--metrics-listen must be tcp:HOST:PORT, got {spec:?}"),
+    };
+    let l = TcpListener::bind(&hp).with_context(|| format!("binding metrics tcp:{hp}"))?;
+    l.set_nonblocking(true).context("non-blocking metrics listener")?;
+    let local = l.local_addr().map(|a| format!("tcp:{a}")).unwrap_or_else(|_| format!("tcp:{hp}"));
+    Ok((Some(l), Some(local)))
 }
 
 /// Answer an over-cap connection with one typed `overloaded` frame and
@@ -342,7 +397,7 @@ impl NetServer {
 /// simply misses its refusal.
 pub(crate) fn refuse(mut conn: Conn, in_use: usize, limit: usize) {
     let err = IcrError::Overloaded { in_use, limit };
-    let frame = protocol::encode_response(protocol::PROTOCOL_VERSION, 0, None, &Err(err));
+    let frame = protocol::encode_response(protocol::PROTOCOL_VERSION, 0, None, &Err(err), None);
     let _ = writeln!(conn, "{}", frame.to_json());
     let _ = conn.flush();
 }

@@ -1,0 +1,318 @@
+//! Leveled structured event log (DESIGN.md §13).
+//!
+//! One event = one line. The default format is JSONL so chaos-smoke
+//! and CI output is machine-checkable: every line parses as a JSON
+//! object with at least `ts_unix_ms`, `level`, and `event` keys, plus
+//! event-specific fields. `--log-format text` renders the same events
+//! human-first. Events below `--log-level` are counted but not
+//! written; `--log-dest file:PATH` appends to a file instead of
+//! stderr.
+//!
+//! This replaces ad-hoc `eprintln!` diagnostics for runtime state
+//! changes (member ejected/restored, breaker transitions, failover
+//! attempts, reload swaps, fault injections, slow requests). The
+//! human startup banner stays on plain stderr — it is presentation,
+//! not telemetry.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::{self, Value};
+
+/// Severity, ordered most- to least-severe so `event_level <= max`
+/// is the emission test. `Off` silences everything (used by unit
+/// tests and library embedders; not below `error` in the CLI docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off,
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "off" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogFormat {
+    Json,
+    Text,
+}
+
+impl LogFormat {
+    pub fn parse(s: &str) -> Option<LogFormat> {
+        match s {
+            "json" => Some(LogFormat::Json),
+            "text" => Some(LogFormat::Text),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LogDest {
+    Stderr,
+    File(PathBuf),
+}
+
+impl LogDest {
+    /// `stderr` or `file:PATH`.
+    pub fn parse(s: &str) -> Option<LogDest> {
+        if s == "stderr" {
+            return Some(LogDest::Stderr);
+        }
+        match s.strip_prefix("file:") {
+            Some(p) if !p.is_empty() => Some(LogDest::File(PathBuf::from(p))),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Sink {
+    Stderr,
+    File(Mutex<File>),
+}
+
+/// Thread-safe leveled logger. Cheap to call on the suppressed path:
+/// one atomic increment, no formatting.
+#[derive(Debug)]
+pub struct Logger {
+    max: Level,
+    format: LogFormat,
+    sink: Sink,
+    emitted: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl Logger {
+    pub fn new(max: Level, format: LogFormat, dest: &LogDest) -> io::Result<Logger> {
+        let sink = match dest {
+            LogDest::Stderr => Sink::Stderr,
+            LogDest::File(p) => {
+                Sink::File(Mutex::new(OpenOptions::new().create(true).append(true).open(p)?))
+            }
+        };
+        Ok(Logger {
+            max,
+            format,
+            sink,
+            emitted: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+        })
+    }
+
+    /// Logger that writes nothing (level `off`).
+    pub fn disabled() -> Logger {
+        Logger::new(Level::Off, LogFormat::Json, &LogDest::Stderr).unwrap()
+    }
+
+    pub fn level(&self) -> Level {
+        self.max
+    }
+
+    pub fn enabled(&self, level: Level) -> bool {
+        level != Level::Off && level <= self.max
+    }
+
+    /// Emit one typed event. `fields` are event-specific; the logger
+    /// adds `ts_unix_ms`, `level`, and `event`.
+    pub fn event(&self, level: Level, kind: &str, fields: Vec<(&str, Value)>) {
+        if !self.enabled(level) {
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let ts = super::unix_ms();
+        let line = match self.format {
+            LogFormat::Json => {
+                let mut obj = match json::obj(fields) {
+                    Value::Object(o) => o,
+                    _ => unreachable!(),
+                };
+                obj.insert("ts_unix_ms".to_string(), json::num(ts as f64));
+                obj.insert("level".to_string(), json::s(level.as_str()));
+                obj.insert("event".to_string(), json::s(kind));
+                Value::Object(obj).to_json()
+            }
+            LogFormat::Text => {
+                use std::fmt::Write as _;
+                let mut line =
+                    format!("[{ts}] {} {kind}", level.as_str().to_uppercase());
+                for (k, v) in &fields {
+                    match v {
+                        Value::String(s) => {
+                            let _ = write!(line, " {k}={s}");
+                        }
+                        other => {
+                            let _ = write!(line, " {k}={}", other.to_json());
+                        }
+                    }
+                }
+                line
+            }
+        };
+        match &self.sink {
+            Sink::Stderr => {
+                let _ = writeln!(io::stderr().lock(), "{line}");
+            }
+            Sink::File(f) => {
+                let mut g = f.lock().unwrap();
+                let _ = writeln!(g, "{line}");
+                let _ = g.flush();
+            }
+        }
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn error(&self, kind: &str, fields: Vec<(&str, Value)>) {
+        self.event(Level::Error, kind, fields);
+    }
+
+    pub fn warn(&self, kind: &str, fields: Vec<(&str, Value)>) {
+        self.event(Level::Warn, kind, fields);
+    }
+
+    pub fn info(&self, kind: &str, fields: Vec<(&str, Value)>) {
+        self.event(Level::Info, kind, fields);
+    }
+
+    pub fn debug(&self, kind: &str, fields: Vec<(&str, Value)>) {
+        self.event(Level::Debug, kind, fields);
+    }
+
+    pub fn emitted_count(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    pub fn suppressed_count(&self) -> u64 {
+        self.suppressed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::sync::atomic::AtomicU32;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        static N: AtomicU32 = AtomicU32::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "icr-obs-log-{}-{tag}-{n}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("loud"), None);
+        assert!(Level::Error < Level::Debug);
+        assert_eq!(LogFormat::parse("json"), Some(LogFormat::Json));
+        assert_eq!(LogFormat::parse("xml"), None);
+        assert_eq!(LogDest::parse("stderr"), Some(LogDest::Stderr));
+        assert_eq!(
+            LogDest::parse("file:/tmp/x.log"),
+            Some(LogDest::File(PathBuf::from("/tmp/x.log")))
+        );
+        assert_eq!(LogDest::parse("file:"), None);
+        assert_eq!(LogDest::parse("syslog"), None);
+    }
+
+    #[test]
+    fn level_filtering_counts_suppressed() {
+        let p = temp_path("filter");
+        let log = Logger::new(Level::Warn, LogFormat::Json, &LogDest::File(p.clone())).unwrap();
+        log.info("ignored", vec![]);
+        log.debug("ignored", vec![]);
+        log.warn("kept", vec![]);
+        log.error("kept", vec![]);
+        assert_eq!(log.emitted_count(), 2);
+        assert_eq!(log.suppressed_count(), 2);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn disabled_logger_emits_nothing() {
+        let log = Logger::disabled();
+        log.error("boom", vec![]);
+        assert_eq!(log.emitted_count(), 0);
+        assert!(!log.enabled(Level::Error));
+    }
+
+    #[test]
+    fn jsonl_lines_parse_with_schema_keys() {
+        let p = temp_path("jsonl");
+        let log = Logger::new(Level::Info, LogFormat::Json, &LogDest::File(p.clone())).unwrap();
+        log.info(
+            "member_ejected",
+            vec![("member", json::s("shard-0")), ("failures", json::num(3.0))],
+        );
+        log.warn(
+            "slow_request",
+            vec![("trace_id", json::s("t-abc")), ("total_us", json::num(9000.0))],
+        );
+        let mut text = String::new();
+        File::open(&p).unwrap().read_to_string(&mut text).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = Value::parse(line).expect("every line is valid JSON");
+            assert!(v.get("ts_unix_ms").and_then(Value::as_f64).unwrap() > 0.0);
+            assert!(v.get("level").and_then(Value::as_str).is_some());
+            assert!(v.get("event").and_then(Value::as_str).is_some());
+        }
+        let first = Value::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").and_then(Value::as_str), Some("member_ejected"));
+        assert_eq!(first.get("member").and_then(Value::as_str), Some("shard-0"));
+        assert_eq!(first.get("failures").and_then(Value::as_usize), Some(3));
+        let second = Value::parse(lines[1]).unwrap();
+        assert_eq!(second.get("level").and_then(Value::as_str), Some("warn"));
+        assert_eq!(second.get("trace_id").and_then(Value::as_str), Some("t-abc"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn text_format_is_single_line_key_value() {
+        let p = temp_path("text");
+        let log = Logger::new(Level::Info, LogFormat::Text, &LogDest::File(p.clone())).unwrap();
+        log.info(
+            "breaker_transition",
+            vec![("member", json::s("m1")), ("to", json::s("open"))],
+        );
+        let mut text = String::new();
+        File::open(&p).unwrap().read_to_string(&mut text).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("INFO breaker_transition"), "{}", lines[0]);
+        assert!(lines[0].contains("member=m1"), "{}", lines[0]);
+        assert!(lines[0].contains("to=open"), "{}", lines[0]);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,99 @@
+//! Observability layer: request tracing, structured event log, and
+//! Prometheus metrics exposition (DESIGN.md §13).
+//!
+//! Three composing pieces, all dependency-free:
+//! - [`trace`] — per-request phase spans with cluster propagation,
+//!   head sampling, slow/error capture, and a bounded ring queried
+//!   via the protocol-v2 `traces` op or echoed with `"trace": true`.
+//! - [`log`] — leveled JSONL/text event log for runtime state
+//!   changes (ejections, breaker transitions, failovers, reloads,
+//!   fault injections, slow requests).
+//! - [`prom`] — Prometheus text-format rendering of the metrics
+//!   registries plus the minimal HTTP responder behind
+//!   `--metrics-listen`.
+//!
+//! One [`Obs`] instance is owned by the coordinator's shared state
+//! and threaded to every subsystem that needs it.
+
+pub mod log;
+pub mod prom;
+pub mod trace;
+
+pub use self::log::{Level, LogDest, LogFormat, Logger};
+pub use self::prom::{handle_http, render_prometheus, spawn_metrics_listener, Scope};
+pub(crate) use self::prom::serve_scrape;
+pub use self::trace::{
+    append_span, ActiveTrace, Span, TraceFinish, Tracer, DEFAULT_RING_CAP, ROOT_SPAN,
+};
+
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::config::ServerConfig;
+
+/// Wall-clock milliseconds since the Unix epoch (event timestamps,
+/// `started_at_unix_ms` in stats).
+pub fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// The process's observability bundle: tracer + logger + start times.
+#[derive(Debug)]
+pub struct Obs {
+    pub tracer: Tracer,
+    pub log: Logger,
+    pub started_at: Instant,
+    pub started_unix_ms: u64,
+}
+
+impl Obs {
+    pub fn new(tracer: Tracer, log: Logger) -> Obs {
+        Obs { tracer, log, started_at: Instant::now(), started_unix_ms: unix_ms() }
+    }
+
+    /// Build from the resolved server config. The config layer has
+    /// already validated the knobs, so parse failures here fall back
+    /// to defaults rather than erroring twice; an unwritable
+    /// `--log-dest file:` path is the one genuine I/O error.
+    pub fn from_config(cfg: &ServerConfig) -> std::io::Result<Obs> {
+        let tracer = Tracer::new(cfg.trace_sample_rate, cfg.trace_slow_ms);
+        let level = Level::parse(&cfg.log_level).unwrap_or(Level::Info);
+        let format = LogFormat::parse(&cfg.log_format).unwrap_or(LogFormat::Json);
+        let dest = LogDest::parse(&cfg.log_dest).unwrap_or(LogDest::Stderr);
+        Ok(Obs::new(tracer, Logger::new(level, format, &dest)?))
+    }
+
+    /// Inert bundle: tracing off, logging off. Used by tests and
+    /// embedders that only want the serving data path.
+    pub fn disabled() -> Obs {
+        Obs::new(Tracer::new(0.0, 0), Logger::disabled())
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started_at.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unix_ms_is_sane() {
+        let t = unix_ms();
+        // after 2020-01-01 and before 2100
+        assert!(t > 1_577_836_800_000);
+        assert!(t < 4_102_444_800_000);
+    }
+
+    #[test]
+    fn disabled_bundle_is_inert() {
+        let obs = Obs::disabled();
+        assert!(!obs.tracer.enabled());
+        assert_eq!(obs.log.level(), Level::Off);
+        assert!(obs.started_unix_ms > 0);
+        assert!(obs.uptime_s() >= 0.0);
+    }
+}

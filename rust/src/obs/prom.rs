@@ -1,0 +1,342 @@
+//! Prometheus text exposition (DESIGN.md §13).
+//!
+//! Renders the process's [`Registry`] instances into the Prometheus
+//! text format, version 0.0.4: `# HELP` / `# TYPE` headers, counters
+//! suffixed `_total`, and cumulative `le`-labeled `_bucket` series
+//! with `_sum` / `_count` derived from the log-bucket [`Histogram`].
+//! Output invariants (covered by tests): stable alphabetical metric
+//! ordering across scrapes, never `NaN`/`inf`, and monotone
+//! non-decreasing bucket counts.
+//!
+//! Histogram samples keep their recorded units — latency histograms
+//! observe nanoseconds, size histograms (e.g. `batch_applies`)
+//! observe plain counts — so no unit suffix is appended; `le` edges
+//! are the histogram's native power-of-two upper bounds.
+//!
+//! The HTTP side is deliberately tiny: a request-head-in /
+//! response-bytes-out function ([`handle_http`]) hosted either on the
+//! §11 event loop (`--io-mode event`) or on a blocking accept thread
+//! ([`spawn_metrics_listener`]) for the other io modes. Only
+//! `GET /metrics` exists; connections are closed after one exchange.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::metrics::{Histogram, Registry};
+
+/// A registry plus the label set its samples carry, e.g.
+/// `[("scope", "global")]` or `[("model", "default")]`.
+pub type Scope<'a> = (Vec<(String, String)>, &'a Registry);
+
+/// Render all scopes into one exposition document. Metrics with the
+/// same name across scopes share a single `# HELP`/`# TYPE` header
+/// and differ only in labels.
+pub fn render_prometheus(scopes: &[Scope<'_>], uptime_s: f64, version: &str) -> String {
+    let mut counters: BTreeMap<String, Vec<(String, u64)>> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, Vec<(String, f64)>> = BTreeMap::new();
+    let mut hists: BTreeMap<String, Vec<(Vec<(String, String)>, Arc<Histogram>)>> =
+        BTreeMap::new();
+    for (labels, reg) in scopes {
+        let lbl = fmt_labels(labels, None);
+        for (name, v) in reg.counters_snapshot() {
+            counters.entry(sanitize(&name)).or_default().push((lbl.clone(), v));
+        }
+        for (name, v) in reg.gauges_snapshot() {
+            gauges.entry(sanitize(&name)).or_default().push((lbl.clone(), v));
+        }
+        for (name, h) in reg.histograms_snapshot() {
+            hists.entry(sanitize(&name)).or_default().push((labels.clone(), h));
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "# HELP icr_uptime_seconds Seconds since server start.");
+    let _ = writeln!(out, "# TYPE icr_uptime_seconds gauge");
+    let _ = writeln!(out, "icr_uptime_seconds {}", fin(uptime_s));
+    let _ = writeln!(out, "# HELP icr_build_info Constant 1, labeled with build metadata.");
+    let _ = writeln!(out, "# TYPE icr_build_info gauge");
+    let _ = writeln!(out, "icr_build_info{{version=\"{version}\"}} 1");
+
+    for (name, series) in &counters {
+        let full = format!("icr_{name}_total");
+        let _ = writeln!(out, "# HELP {full} Cumulative counter `{name}`.");
+        let _ = writeln!(out, "# TYPE {full} counter");
+        for (lbl, v) in series {
+            let _ = writeln!(out, "{full}{lbl} {v}");
+        }
+    }
+    for (name, series) in &gauges {
+        let full = format!("icr_{name}");
+        let _ = writeln!(out, "# HELP {full} Gauge `{name}`.");
+        let _ = writeln!(out, "# TYPE {full} gauge");
+        for (lbl, v) in series {
+            let _ = writeln!(out, "{full}{lbl} {}", fin(*v));
+        }
+    }
+    for (name, series) in &hists {
+        let full = format!("icr_{name}");
+        let _ = writeln!(
+            out,
+            "# HELP {full} Log2-bucket histogram `{name}` (native units; latencies in ns)."
+        );
+        let _ = writeln!(out, "# TYPE {full} histogram");
+        for (labels, h) in series {
+            // One consistent pass over the bucket snapshot: `+Inf`
+            // and `_count` both use the cumulative sum so the series
+            // is self-consistent even while observations race.
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (i, c) in counts.iter().enumerate() {
+                cum += c;
+                let le = Histogram::bucket_upper_edge(i);
+                let _ = writeln!(
+                    out,
+                    "{full}_bucket{} {cum}",
+                    fmt_labels(labels, Some(&le.to_string()))
+                );
+            }
+            let _ = writeln!(out, "{full}_bucket{} {cum}", fmt_labels(labels, Some("+Inf")));
+            let plain = fmt_labels(labels, None);
+            let _ = writeln!(out, "{full}_sum{plain} {}", h.sum_ns());
+            let _ = writeln!(out, "{full}_count{plain} {cum}");
+        }
+    }
+    out
+}
+
+/// Non-finite values must never reach the wire; clamp to 0.
+fn fin(v: f64) -> String {
+    let v = if v.is_finite() { v } else { 0.0 };
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize(k), escape_label(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Build the full HTTP/1.1 response for one request head. Routing is
+/// minimal: `GET /metrics` renders; anything else is 404/405. The
+/// `render` closure runs only when the path matches.
+pub fn handle_http(head: &str, render: impl FnOnce() -> String) -> Vec<u8> {
+    let req_line = head.lines().next().unwrap_or("");
+    let mut parts = req_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else if path == "/metrics" || path.starts_with("/metrics?") {
+        ("200 OK", "text/plain; version=0.0.4; charset=utf-8", render())
+    } else {
+        ("404 Not Found", "text/plain; charset=utf-8", "not found; try /metrics\n".to_string())
+    };
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Blocking metrics listener for io modes that don't run the event
+/// loop (`threads`, stdio serving). Non-blocking accept + short sleep
+/// so `shutdown` is honored within ~25 ms without a wake socket.
+pub fn spawn_metrics_listener(
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    render: Arc<dyn Fn() -> String + Send + Sync>,
+) -> io::Result<thread::JoinHandle<()>> {
+    listener.set_nonblocking(true)?;
+    thread::Builder::new().name("icr-metrics".into()).spawn(move || {
+        while !shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((mut conn, _)) => {
+                    let _ = serve_scrape(&mut conn, &*render);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(25));
+                }
+                Err(_) => thread::sleep(Duration::from_millis(25)),
+            }
+        }
+    })
+}
+
+/// Answer one scrape exchange on an accepted connection: read the
+/// request head (2 s cap), write the routed response, close. Exposed
+/// crate-wide so the §11 event loop can host the endpoint on its own
+/// accept readiness instead of the blocking thread.
+pub(crate) fn serve_scrape(conn: &mut TcpStream, render: &dyn Fn() -> String) -> io::Result<()> {
+    conn.set_nonblocking(false)?;
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let _ = conn.set_nodelay(true);
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < 16 * 1024 {
+        let n = conn.read(&mut tmp)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let head = String::from_utf8_lossy(&buf);
+    conn.write_all(&handle_http(&head, render))?;
+    conn.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_scopes() -> Vec<(Vec<(String, String)>, Registry)> {
+        let global = Registry::new();
+        global.counter("requests_ok").add(7);
+        global.gauge("queue_depth").set(2.0);
+        global.histogram("request_latency").observe_ns(1500);
+        global.histogram("request_latency").observe_ns(700_000);
+        let model = Registry::new();
+        model.counter("requests_ok").add(3);
+        let _ = model.histogram("empty_latency"); // registered, no samples
+        vec![
+            (vec![("scope".to_string(), "global".to_string())], global),
+            (vec![("model".to_string(), "default".to_string())], model),
+        ]
+    }
+
+    fn render(scopes: &[(Vec<(String, String)>, Registry)]) -> String {
+        let refs: Vec<Scope<'_>> =
+            scopes.iter().map(|(l, r)| (l.clone(), r)).collect();
+        render_prometheus(&refs, 12.5, "0.1.0-test")
+    }
+
+    #[test]
+    fn exposition_has_headers_uptime_and_build_info() {
+        let scopes = sample_scopes();
+        let text = render(&scopes);
+        assert!(text.contains("# TYPE icr_uptime_seconds gauge"));
+        assert!(text.contains("icr_uptime_seconds 12.5"));
+        assert!(text.contains("icr_build_info{version=\"0.1.0-test\"} 1"));
+        assert!(text.contains("# TYPE icr_requests_ok_total counter"));
+        assert!(text.contains("icr_requests_ok_total{scope=\"global\"} 7"));
+        assert!(text.contains("icr_requests_ok_total{model=\"default\"} 3"));
+        assert!(text.contains("icr_queue_depth{scope=\"global\"} 2"));
+        assert!(text.contains("# TYPE icr_request_latency histogram"));
+    }
+
+    #[test]
+    fn exposition_is_stable_across_scrapes_and_shares_headers() {
+        let scopes = sample_scopes();
+        let a = render(&scopes);
+        let b = render(&scopes);
+        assert_eq!(a, b, "identical state must render identically");
+        // one TYPE header per metric name even across scopes
+        assert_eq!(a.matches("# TYPE icr_requests_ok_total counter").count(), 1);
+        // HELP/TYPE precede the first sample of their metric
+        let type_at = a.find("# TYPE icr_requests_ok_total").unwrap();
+        let sample_at = a.find("icr_requests_ok_total{").unwrap();
+        assert!(type_at < sample_at);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_monotone_and_finite() {
+        let scopes = sample_scopes();
+        let text = render(&scopes);
+        assert!(!text.contains("NaN") && !text.to_lowercase().contains("inf "), "{text}");
+        let mut prev = 0u64;
+        let mut bucket_lines = 0;
+        let mut last_cum = 0u64;
+        for line in text.lines() {
+            if line.starts_with("icr_request_latency_bucket{scope=\"global\"") {
+                bucket_lines += 1;
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= prev, "bucket counts must be non-decreasing: {line}");
+                prev = v;
+                last_cum = v;
+            }
+        }
+        assert_eq!(bucket_lines, Histogram::n_buckets() + 1, "all edges plus +Inf");
+        assert_eq!(last_cum, 2, "+Inf bucket equals total observations");
+        assert!(text.contains("icr_request_latency_sum{scope=\"global\"} 701500"));
+        assert!(text.contains("icr_request_latency_count{scope=\"global\"} 2"));
+        // empty histogram renders all-zero series, no NaN
+        assert!(text.contains("icr_empty_latency_count{model=\"default\"} 0"));
+    }
+
+    #[test]
+    fn non_finite_gauges_are_clamped() {
+        let r = Registry::new();
+        r.gauge("weird").set(f64::NAN);
+        let scopes = vec![(Vec::new(), r)];
+        let text = render(&scopes);
+        assert!(text.contains("icr_weird 0"));
+        assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn http_routing() {
+        let ok = handle_http("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n", || "m 1\n".to_string());
+        let ok = String::from_utf8(ok).unwrap();
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(ok.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(ok.contains("Content-Length: 4\r\n"));
+        assert!(ok.ends_with("\r\n\r\nm 1\n"));
+
+        let nf = String::from_utf8(handle_http("GET / HTTP/1.1\r\n\r\n", || unreachable!()))
+            .unwrap();
+        assert!(nf.starts_with("HTTP/1.1 404"));
+        let mna =
+            String::from_utf8(handle_http("POST /metrics HTTP/1.1\r\n\r\n", || unreachable!()))
+                .unwrap();
+        assert!(mna.starts_with("HTTP/1.1 405"));
+    }
+
+    #[test]
+    fn blocking_listener_serves_scrapes_and_shuts_down() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = spawn_metrics_listener(
+            listener,
+            shutdown.clone(),
+            Arc::new(|| "icr_up 1\n".to_string()),
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.ends_with("icr_up 1\n"), "{resp}");
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+}

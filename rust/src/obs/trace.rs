@@ -1,0 +1,524 @@
+//! Dependency-free request tracer (DESIGN.md §13).
+//!
+//! Every admitted request may carry an [`ActiveTrace`] handle on its
+//! envelope. Instrumentation points record *phase spans* (queue wait,
+//! route decision, cache lookup, panel apply, remote wire RTT, retry
+//! backoff, reply serialization) against the handle with monotonic
+//! timestamps relative to the trace's start. At completion the tracer
+//! decides whether the finished trace *commits* to a bounded ring
+//! buffer: explicitly requested traces, head-sampled traces, errored
+//! requests, and slow requests (≥ `--trace-slow-ms`) always commit;
+//! everything else is dropped without allocation of a JSON document.
+//!
+//! Trace context crosses the cluster boundary as an optional `trace`
+//! field on protocol-v2 frames. When absent, frames are byte-identical
+//! to pre-observability builds — the §4 determinism contract and every
+//! bitwise-parity test are preserved. A shard that receives a context
+//! treats the request as explicitly traced and echoes its span tree in
+//! the reply; the front door joins those remote child spans under its
+//! own `remote_wire` span via [`ActiveTrace::attach_remote`].
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::json::{self, Value};
+
+/// Default capacity of the finished-trace ring buffer.
+pub const DEFAULT_RING_CAP: usize = 256;
+
+/// Reserved span id of the synthetic root (`request`) span. The root
+/// is its own parent; all other spans have `parent != id`.
+pub const ROOT_SPAN: u32 = 0;
+
+/// Max stashed reply echoes awaiting pickup by a serving layer.
+const ECHO_CAP: usize = 1024;
+
+/// One recorded phase of a request. `start_us` is microseconds since
+/// the trace began (monotonic clock); remote spans joined from a shard
+/// keep the shard's own timebase, offset to the local wire span start.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u32,
+    pub parent: u32,
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tags: Vec<(String, String)>,
+}
+
+#[derive(Debug)]
+struct SpanList {
+    spans: Vec<Span>,
+    next: u32,
+}
+
+/// Live per-request trace handle, shared between the admitting thread,
+/// workers, and the serving layer via `Arc`.
+#[derive(Debug)]
+pub struct ActiveTrace {
+    pub trace_id: String,
+    start: Instant,
+    inner: Mutex<SpanList>,
+    /// Requested via `"trace": true` or a propagated context — the
+    /// span tree is echoed in the reply regardless of sampling.
+    pub explicit: bool,
+    /// Chosen by head sampling at admission.
+    pub sampled: bool,
+}
+
+impl ActiveTrace {
+    fn new(trace_id: String, explicit: bool, sampled: bool) -> Self {
+        ActiveTrace {
+            trace_id,
+            start: Instant::now(),
+            inner: Mutex::new(SpanList { spans: Vec::new(), next: ROOT_SPAN + 1 }),
+            explicit,
+            sampled,
+        }
+    }
+
+    /// Microseconds elapsed since trace start; use as a span's
+    /// `start_us` before timing the phase.
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Record a completed phase span; returns its id (usable as a
+    /// `parent` for nested spans).
+    pub fn record(&self, name: &str, parent: u32, start_us: u64, dur_us: u64) -> u32 {
+        self.record_tagged(name, parent, start_us, dur_us, Vec::new())
+    }
+
+    pub fn record_tagged(
+        &self,
+        name: &str,
+        parent: u32,
+        start_us: u64,
+        dur_us: u64,
+        tags: Vec<(String, String)>,
+    ) -> u32 {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next;
+        g.next += 1;
+        g.spans.push(Span { id, parent, name: name.to_string(), start_us, dur_us, tags });
+        id
+    }
+
+    /// Join a remote shard's finished-trace document (the `trace`
+    /// field of its reply frame) under the local span `parent` —
+    /// normally the `remote_wire` span. Remote span ids are offset
+    /// past the local id range; the remote root becomes a direct
+    /// child of `parent`, renamed `remote:<name>` and tagged with the
+    /// shard's own trace id so the two logs can be correlated.
+    pub fn attach_remote(&self, parent: u32, remote: &Value) {
+        let Some(spans) = remote.get("spans").and_then(Value::as_array) else { return };
+        let remote_id = remote.get("trace_id").and_then(Value::as_str).unwrap_or("");
+        let mut g = self.inner.lock().unwrap();
+        let base = g.next;
+        let wire_start =
+            g.spans.iter().find(|s| s.id == parent).map(|s| s.start_us).unwrap_or(0);
+        let mut max_old = 0u32;
+        for s in spans {
+            let old_id = s.get("id").and_then(Value::as_usize).unwrap_or(0) as u32;
+            let old_parent = s.get("parent").and_then(Value::as_usize).unwrap_or(0) as u32;
+            max_old = max_old.max(old_id);
+            let name = s.get("name").and_then(Value::as_str).unwrap_or("span");
+            let (name, parent_id, tags) = if old_id == ROOT_SPAN {
+                let mut tags = Vec::new();
+                if !remote_id.is_empty() {
+                    tags.push(("remote_trace_id".to_string(), remote_id.to_string()));
+                }
+                (format!("remote:{name}"), parent, tags)
+            } else {
+                (name.to_string(), base + old_parent, Vec::new())
+            };
+            g.spans.push(Span {
+                id: base + old_id,
+                parent: parent_id,
+                name,
+                start_us: wire_start
+                    + s.get("start_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+                dur_us: s.get("dur_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+                tags,
+            });
+        }
+        g.next = base + max_old + 1;
+    }
+
+    #[cfg(test)]
+    fn span_count(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+}
+
+/// Outcome summary returned by [`Tracer::finish`].
+#[derive(Debug, Clone)]
+pub struct TraceFinish {
+    pub trace_id: String,
+    pub total_us: u64,
+    pub slow: bool,
+    pub committed: bool,
+}
+
+/// Process-wide tracer: admission (head sampling), the finished-trace
+/// ring, and the reply-echo stash for `"trace": true` requests.
+#[derive(Debug)]
+pub struct Tracer {
+    sample_rate: f64,
+    slow_us: u64,
+    ring_cap: usize,
+    ring: Mutex<VecDeque<Arc<Value>>>,
+    /// Finished span trees awaiting pickup at reply-encode time,
+    /// keyed by coordinator request id. Bounded: if a serving layer
+    /// never drains (cannot happen on wired paths), the stash is
+    /// cleared rather than growing without bound.
+    echo: Mutex<HashMap<u64, Value>>,
+    seed: u64,
+    next: AtomicU64,
+    committed: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(sample_rate: f64, slow_ms: u64) -> Tracer {
+        Tracer::with_capacity(sample_rate, slow_ms, DEFAULT_RING_CAP)
+    }
+
+    pub fn with_capacity(sample_rate: f64, slow_ms: u64, ring_cap: usize) -> Tracer {
+        let seed = super::unix_ms().wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ ((std::process::id() as u64) << 32);
+        Tracer {
+            sample_rate: sample_rate.clamp(0.0, 1.0),
+            slow_us: slow_ms.saturating_mul(1000),
+            ring_cap: ring_cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            echo: Mutex::new(HashMap::new()),
+            seed,
+            next: AtomicU64::new(1),
+            committed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us
+    }
+
+    /// Whether any background collection (sampling or slow detection)
+    /// is on. Explicit `"trace": true` requests are traced even when
+    /// this is false.
+    pub fn enabled(&self) -> bool {
+        self.sample_rate > 0.0 || self.slow_us > 0
+    }
+
+    /// Admission: create a trace handle if the request opted in, head
+    /// sampling selected it, or slow detection needs a timebase.
+    /// Returns `None` when tracing is entirely off for this request —
+    /// the zero-cost path.
+    pub fn admit(&self, explicit: bool) -> Option<Arc<ActiveTrace>> {
+        if !explicit && !self.enabled() {
+            return None;
+        }
+        let raw = splitmix64(
+            self.seed ^ self.next.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x2545_F491_4F6C_DD1D),
+        );
+        // Head sampling is a deterministic function of the trace id.
+        let sampled = ((raw >> 11) as f64 / (1u64 << 53) as f64) < self.sample_rate;
+        if !explicit && !sampled && self.slow_us == 0 {
+            return None;
+        }
+        Some(Arc::new(ActiveTrace::new(format!("t-{raw:016x}"), explicit, sampled)))
+    }
+
+    /// Admission with a propagated context (shard side): the front
+    /// door already decided to trace, so the handle is explicit and
+    /// keeps the caller's trace id for correlation.
+    pub fn admit_propagated(&self, trace_id: &str) -> Arc<ActiveTrace> {
+        Arc::new(ActiveTrace::new(trace_id.to_string(), true, false))
+    }
+
+    /// Finish a trace: decide commitment, build the JSON document
+    /// (only when it will be used), and push it into the ring. The
+    /// returned document, if any, is the caller's to stash for reply
+    /// echo via [`Tracer::stash_echo`].
+    pub fn finish(
+        &self,
+        t: &ActiveTrace,
+        op: &str,
+        model: &str,
+        error: Option<&str>,
+    ) -> (TraceFinish, Option<Value>) {
+        let total_us = t.now_us();
+        let slow = self.slow_us > 0 && total_us >= self.slow_us;
+        let commit = t.explicit || t.sampled || slow || error.is_some();
+        let fin = TraceFinish { trace_id: t.trace_id.clone(), total_us, slow, committed: commit };
+        if !commit {
+            return (fin, None);
+        }
+        let mut spans_json = vec![span_json(ROOT_SPAN, ROOT_SPAN, "request", 0, total_us, &[])];
+        {
+            let g = t.inner.lock().unwrap();
+            for s in &g.spans {
+                spans_json.push(span_json(s.id, s.parent, &s.name, s.start_us, s.dur_us, &s.tags));
+            }
+        }
+        let doc = json::obj(vec![
+            ("trace_id", json::s(&t.trace_id)),
+            ("op", json::s(op)),
+            ("model", json::s(model)),
+            ("total_us", json::num(total_us as f64)),
+            ("error", error.map(json::s).unwrap_or(Value::Null)),
+            ("slow", Value::Bool(slow)),
+            ("sampled", Value::Bool(t.sampled)),
+            ("spans", json::arr(spans_json)),
+        ]);
+        {
+            let mut ring = self.ring.lock().unwrap();
+            if ring.len() >= self.ring_cap {
+                ring.pop_front();
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.push_back(Arc::new(doc.clone()));
+        }
+        self.committed.fetch_add(1, Ordering::Relaxed);
+        (fin, Some(doc))
+    }
+
+    /// Park a finished span tree for the serving layer to attach to
+    /// the outgoing reply (keyed by coordinator request id).
+    pub fn stash_echo(&self, req_id: u64, doc: Value) {
+        let mut g = self.echo.lock().unwrap();
+        if g.len() >= ECHO_CAP {
+            g.clear();
+        }
+        g.insert(req_id, doc);
+    }
+
+    /// Claim the parked span tree for a request, if any.
+    pub fn take_echo(&self, req_id: u64) -> Option<Value> {
+        self.echo.lock().unwrap().remove(&req_id)
+    }
+
+    /// Most recent committed traces, newest first.
+    pub fn recent(&self, limit: usize) -> Value {
+        let ring = self.ring.lock().unwrap();
+        json::arr(ring.iter().rev().take(limit).map(|a| (**a).clone()).collect())
+    }
+
+    pub fn committed_count(&self) -> u64 {
+        self.committed.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped_count(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Append a post-finish span (e.g. `serialize_reply`, measured by the
+/// serving layer after the ring copy was committed) to an echoed
+/// trace document. Ring-buffer copies intentionally end at request
+/// completion; only the reply echo carries serialization time.
+pub fn append_span(doc: &mut Value, name: &str, dur_us: u64) {
+    let total = doc.get("total_us").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+    if let Value::Object(o) = doc {
+        if let Some(Value::Array(spans)) = o.get_mut("spans") {
+            let max_id = spans
+                .iter()
+                .filter_map(|s| s.get("id").and_then(Value::as_usize))
+                .max()
+                .unwrap_or(0) as u32;
+            spans.push(span_json(max_id + 1, ROOT_SPAN, name, total, dur_us, &[]));
+        }
+    }
+}
+
+fn span_json(
+    id: u32,
+    parent: u32,
+    name: &str,
+    start_us: u64,
+    dur_us: u64,
+    tags: &[(String, String)],
+) -> Value {
+    let mut fields = vec![
+        ("id", json::num(id as f64)),
+        ("parent", json::num(parent as f64)),
+        ("name", json::s(name)),
+        ("start_us", json::num(start_us as f64)),
+        ("dur_us", json::num(dur_us as f64)),
+    ];
+    if !tags.is_empty() {
+        fields.push((
+            "tags",
+            Value::Object(tags.iter().map(|(k, v)| (k.clone(), json::s(v))).collect()),
+        ));
+    }
+    json::obj(fields)
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_admits_only_explicit() {
+        let t = Tracer::new(0.0, 0);
+        assert!(!t.enabled());
+        assert!(t.admit(false).is_none());
+        let h = t.admit(true).expect("explicit always admitted");
+        assert!(h.explicit);
+        assert!(!h.sampled);
+    }
+
+    #[test]
+    fn sample_rate_one_samples_everything() {
+        let t = Tracer::new(1.0, 0);
+        for _ in 0..50 {
+            let h = t.admit(false).expect("rate 1.0 admits all");
+            assert!(h.sampled);
+        }
+    }
+
+    #[test]
+    fn sampled_and_error_traces_commit_clean_unsampled_do_not() {
+        let t = Tracer::new(0.0, 1_000_000); // slow threshold unreachably high
+        let h = t.admit(false).expect("slow detection needs a handle");
+        assert!(!h.explicit && !h.sampled);
+        let (fin, doc) = t.finish(&h, "sample", "default", None);
+        assert!(!fin.committed && doc.is_none());
+        assert_eq!(t.committed_count(), 0);
+
+        let h = t.admit(false).unwrap();
+        let (fin, doc) = t.finish(&h, "sample", "default", Some("boom"));
+        assert!(fin.committed && doc.is_some());
+        assert_eq!(t.committed_count(), 1);
+        let doc = doc.unwrap();
+        assert_eq!(doc.get("error").and_then(Value::as_str), Some("boom"));
+    }
+
+    #[test]
+    fn finished_doc_has_root_span_and_recorded_phases() {
+        let t = Tracer::new(0.0, 0);
+        let h = t.admit(true).unwrap();
+        let s0 = h.now_us();
+        let q = h.record("queue_wait", ROOT_SPAN, s0, 5);
+        h.record_tagged("route", q, s0, 2, vec![("member".into(), "m0".into())]);
+        let (_, doc) = t.finish(&h, "sample", "default", None);
+        let doc = doc.unwrap();
+        let spans = doc.get("spans").and_then(Value::as_array).unwrap();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].get("name").and_then(Value::as_str), Some("request"));
+        assert_eq!(spans[0].get("id").and_then(Value::as_usize), Some(0));
+        assert_eq!(spans[1].get("name").and_then(Value::as_str), Some("queue_wait"));
+        let route = &spans[2];
+        assert_eq!(route.get("parent").and_then(Value::as_usize), Some(q as usize));
+        assert_eq!(
+            route.get_path("tags.member").and_then(Value::as_str),
+            Some("m0")
+        );
+    }
+
+    #[test]
+    fn echo_stash_roundtrip() {
+        let t = Tracer::new(0.0, 0);
+        let h = t.admit(true).unwrap();
+        let (_, doc) = t.finish(&h, "sample", "default", None);
+        t.stash_echo(42, doc.unwrap());
+        let mut got = t.take_echo(42).expect("stashed");
+        assert!(t.take_echo(42).is_none(), "single-shot");
+        append_span(&mut got, "serialize_reply", 7);
+        let spans = got.get("spans").and_then(Value::as_array).unwrap();
+        let last = spans.last().unwrap();
+        assert_eq!(last.get("name").and_then(Value::as_str), Some("serialize_reply"));
+        assert_eq!(last.get("dur_us").and_then(Value::as_usize), Some(7));
+        assert_eq!(last.get("parent").and_then(Value::as_usize), Some(0));
+    }
+
+    #[test]
+    fn attach_remote_nests_under_wire_span_with_offset_ids() {
+        let t = Tracer::new(0.0, 0);
+        let h = t.admit(true).unwrap();
+        let wire = h.record("remote_wire", ROOT_SPAN, 100, 900);
+        let remote = Value::parse(
+            r#"{"trace_id":"t-shard","total_us":800,"spans":[
+                {"id":0,"parent":0,"name":"request","start_us":0,"dur_us":800},
+                {"id":1,"parent":0,"name":"queue_wait","start_us":1,"dur_us":3},
+                {"id":2,"parent":1,"name":"panel_apply","start_us":10,"dur_us":700}
+            ]}"#,
+        )
+        .unwrap();
+        h.attach_remote(wire, &remote);
+        assert_eq!(h.span_count(), 4);
+        let (_, doc) = t.finish(&h, "sample", "default", None);
+        let doc = doc.unwrap();
+        let spans = doc.get("spans").and_then(Value::as_array).unwrap();
+        // spans: request(0), remote_wire(1), remote:request(2), queue_wait(3), panel_apply(4)
+        let remote_root = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Value::as_str) == Some("remote:request"))
+            .expect("joined remote root");
+        assert_eq!(remote_root.get("parent").and_then(Value::as_usize), Some(wire as usize));
+        assert_eq!(
+            remote_root.get_path("tags.remote_trace_id").and_then(Value::as_str),
+            Some("t-shard")
+        );
+        // remote child keeps its tree shape, offset into the local id space
+        let rid = remote_root.get("id").and_then(Value::as_usize).unwrap();
+        let qw = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Value::as_str) == Some("queue_wait"))
+            .unwrap();
+        assert_eq!(qw.get("parent").and_then(Value::as_usize), Some(rid));
+        let pa = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Value::as_str) == Some("panel_apply"))
+            .unwrap();
+        assert_eq!(
+            pa.get("parent").and_then(Value::as_usize),
+            qw.get("id").and_then(Value::as_usize)
+        );
+        // remote times are offset to the wire span start
+        assert_eq!(remote_root.get("start_us").and_then(Value::as_usize), Some(100));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let t = Tracer::with_capacity(1.0, 0, 4);
+        for _ in 0..10 {
+            let h = t.admit(false).unwrap();
+            t.finish(&h, "sample", "default", None);
+        }
+        assert_eq!(t.committed_count(), 10);
+        assert_eq!(t.dropped_count(), 6);
+        let recent = t.recent(100);
+        let arr = recent.as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        let limited = t.recent(2);
+        assert_eq!(limited.as_array().unwrap().len(), 2);
+        // newest-first: recent(1)'s head equals the last committed id
+        assert_eq!(limited.as_array().unwrap()[0], arr[0]);
+    }
+
+    #[test]
+    fn trace_ids_are_unique() {
+        let t = Tracer::new(1.0, 0);
+        let a = t.admit(false).unwrap();
+        let b = t.admit(false).unwrap();
+        assert_ne!(a.trace_id, b.trace_id);
+        assert!(a.trace_id.starts_with("t-"));
+    }
+}

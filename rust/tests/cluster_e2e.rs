@@ -812,6 +812,7 @@ fn fake_shard_conn(
                             id,
                             None,
                             &Ok(Response::Samples(vec![vec![seed]])),
+                            None,
                         );
                         writeln!(writer, "{}", frame.to_json()).expect("fake shard reply");
                     }
@@ -907,4 +908,87 @@ fn coalesced_remote_batch_pipelines_all_frames_before_any_reply() {
     stop.store(true, Ordering::SeqCst);
     accept.join().expect("fake shard accept loop");
     c.shutdown();
+}
+
+#[test]
+fn explicit_trace_joins_remote_spans_and_off_replies_stay_byte_identical() {
+    // Backend whose every model call carries a fixed 30 ms injected
+    // delay: the front door's `remote_wire` span must cover at least
+    // that much, proving the span measures the real round trip.
+    let backend = start_faulty_backend("local:delay_ms=30");
+    let mut cfg = front_cfg(&[&backend]);
+    let sock = sock_path();
+    cfg.listen = ListenAddr::Unix(sock.clone());
+    let front = Arc::new(Coordinator::start(cfg.clone()).expect("front door"));
+    let server = NetServer::bind(&cfg, front.clone()).expect("bind front");
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    let engine = front.engine().clone();
+    let mut c = Client::unix(&sock);
+
+    // Tracing off: identical requests answer with identical bytes and
+    // no `trace` key — the pre-observability wire contract, untouched.
+    let plain = r#"{"v": 2, "op": "sample", "model": "gp@1", "id": 7, "count": 1, "seed": 81}"#;
+    c.send(plain);
+    let a = c.recv_line();
+    c.send(plain);
+    let b = c.recv_line();
+    assert_eq!(a, b, "untraced replies must be byte-identical");
+    assert!(!a.contains("\"trace\""), "untraced reply leaked a trace field: {a}");
+    let v = Value::parse(&a).expect("frame");
+    assert_eq!(sample_of(&v), engine.sample(1, 81).unwrap().remove(0));
+
+    // `"trace": true` on a request addressed to the remote member: the
+    // reply echoes a span tree whose remote_wire span nests the
+    // backend's own joined spans under the front door's root.
+    let v = c.rpc(
+        r#"{"v": 2, "op": "sample", "model": "gp@1", "id": 8, "count": 1, "seed": 82, "trace": true}"#,
+    );
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    assert_eq!(sample_of(&v), engine.sample(1, 82).unwrap().remove(0));
+    let trace = v.get("trace").expect("traced reply must echo its span tree");
+    assert!(trace.get("trace_id").and_then(Value::as_str).is_some(), "{trace:?}");
+    let spans = trace.get("spans").and_then(Value::as_array).expect("spans");
+    let find = |name: &str| {
+        spans.iter().find(|s| s.get("name").and_then(Value::as_str) == Some(name))
+    };
+    let span_id = |s: &Value| s.get("id").and_then(Value::as_usize).expect("span id");
+    let root = find("request").expect("root request span");
+    let wire = find("remote_wire").expect("remote_wire span");
+    let joined = find("remote:request").expect("joined remote root span");
+    assert!(find("serialize_reply").is_some(), "missing serialize_reply span: {spans:?}");
+
+    // The injected 30 ms backend delay sits inside the measured RTT.
+    let wire_us = wire.get("dur_us").and_then(Value::as_usize).expect("dur_us");
+    assert!(wire_us >= 30_000, "remote_wire {wire_us}us < injected 30ms delay");
+
+    // Nesting: remote:request is a child of remote_wire, and the wire
+    // span's parent chain reaches the front door's root request span.
+    assert_eq!(joined.get("parent").and_then(Value::as_usize), Some(span_id(wire)), "{spans:?}");
+    let parent_of = |id: usize| -> Option<usize> {
+        spans
+            .iter()
+            .find(|s| span_id(s) == id)
+            .and_then(|s| s.get("parent").and_then(Value::as_usize))
+    };
+    let mut cursor = span_id(wire);
+    for _ in 0..spans.len() {
+        if cursor == span_id(root) {
+            break;
+        }
+        cursor = parent_of(cursor).unwrap_or_else(|| panic!("broken parent chain: {spans:?}"));
+    }
+    assert_eq!(cursor, span_id(root), "remote_wire does not chain to the root span");
+
+    // The backend committed its half of the trace too: its ring holds a
+    // propagated (explicitly traced) entry.
+    assert!(
+        backend.coord.obs().tracer.committed_count() >= 1,
+        "backend never committed its propagated trace"
+    );
+
+    drop(c);
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_file(&sock).ok();
 }

@@ -159,9 +159,10 @@ fn serve_two_named_models_over_both_protocol_versions() {
                     frame.client_id.unwrap_or(0),
                     Some(&model),
                     &result,
+                    None,
                 )
             }
-            Err(e) => protocol::encode_response(2, 0, None, &Err(e)),
+            Err(e) => protocol::encode_response(2, 0, None, &Err(e), None),
         }
     };
 

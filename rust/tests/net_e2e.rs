@@ -506,16 +506,17 @@ fn stdio_serve_is_byte_identical_and_keeps_error_ids() {
         5,
         None,
         &Err(IcrError::UnknownOp("transmogrify".into())),
+        None,
     )
     .to_json();
     assert_eq!(lines[0], want_err5, "v1 error frame must keep the client id");
     let want_err9 =
-        protocol::encode_response(2, 9, None, &Err(IcrError::UnknownOp("nope".into()))).to_json();
+        protocol::encode_response(2, 9, None, &Err(IcrError::UnknownOp("nope".into())), None).to_json();
     assert_eq!(lines[1], want_err9, "v2 error frame must keep the client id");
     // The first submitted request gets server id 1 (inline-answered
     // error lines never consume ids).
     let want_sample =
-        protocol::encode_response(1, 1, Some("default"), &Ok(Response::Samples(samples)))
+        protocol::encode_response(1, 1, Some("default"), &Ok(Response::Samples(samples)), None)
             .to_json();
     assert_eq!(lines[2], want_sample, "stdio sample bytes changed");
     reference.shutdown();

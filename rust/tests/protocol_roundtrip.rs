@@ -74,7 +74,7 @@ fn every_v2_request_frame_roundtrips() {
 fn every_v2_response_frame_roundtrips() {
     for (i, response) in all_responses().into_iter().enumerate() {
         let model = if i % 2 == 0 { Some("default") } else { Some("kiss") };
-        let encoded = encode_response(2, 40 + i as u64, model, &Ok(response.clone()));
+        let encoded = encode_response(2, 40 + i as u64, model, &Ok(response.clone()), None);
         // Through actual text, as on the wire.
         let reparsed = Value::parse(&encoded.to_json()).unwrap();
         let frame = decode_response(&reparsed).unwrap();
@@ -100,7 +100,7 @@ fn v2_error_frames_carry_typed_kinds() {
         IcrError::Internal("oops".into()),
     ];
     for err in errors {
-        let encoded = encode_response(2, 7, None, &Err(err.clone()));
+        let encoded = encode_response(2, 7, None, &Err(err.clone()), None);
         let text = encoded.to_json();
         let reparsed = Value::parse(&text).unwrap();
         assert_eq!(reparsed.get("ok").and_then(Value::as_bool), Some(false), "{text}");
@@ -127,7 +127,7 @@ fn v1_request_lines_stay_untagged_and_roundtrip() {
 
 #[test]
 fn v1_response_rendering_matches_legacy_shape() {
-    let v = encode_response(1, 3, None, &Ok(Response::Field(vec![1.0, 2.0])));
+    let v = encode_response(1, 3, None, &Ok(Response::Field(vec![1.0, 2.0])), None);
     // Legacy flat shape: {"id": 3, "field": [...]} — no "v"/"ok"/"result".
     assert_eq!(v.get("id").and_then(Value::as_usize), Some(3));
     assert!(v.get("field").is_some());
@@ -136,7 +136,7 @@ fn v1_response_rendering_matches_legacy_shape() {
     assert_eq!(frame.version, 1);
     assert_eq!(frame.result.unwrap(), Response::Field(vec![1.0, 2.0]));
 
-    let err = encode_response(1, 4, None, &Err(IcrError::UnknownOp("x".into())));
+    let err = encode_response(1, 4, None, &Err(IcrError::UnknownOp("x".into())), None);
     assert!(err.get("error").and_then(Value::as_str).is_some(), "v1 errors are strings");
 }
 
@@ -146,13 +146,13 @@ fn v1_stats_stay_a_string_on_the_wire() {
     // document must be serialized into that string for v1, while v2 gets
     // the object. decode_response recovers the structure from both.
     let stats = json::obj(vec![("default_model", json::s("default"))]);
-    let v1 = encode_response(1, 9, None, &Ok(Response::Stats(stats.clone())));
+    let v1 = encode_response(1, 9, None, &Ok(Response::Stats(stats.clone())), None);
     let text = v1.get("stats").and_then(Value::as_str).expect("v1 stats must be a string");
     assert!(Value::parse(text).is_ok(), "v1 stats string should hold serialized JSON");
     let decoded = decode_response(&Value::parse(&v1.to_json()).unwrap()).unwrap();
     assert_eq!(decoded.result.unwrap(), Response::Stats(stats.clone()));
 
-    let v2 = encode_response(2, 9, None, &Ok(Response::Stats(stats.clone())));
+    let v2 = encode_response(2, 9, None, &Ok(Response::Stats(stats.clone())), None);
     assert!(
         v2.get_path("result.stats").unwrap().as_object().is_some(),
         "v2 stats must be a structured object"
@@ -206,7 +206,7 @@ fn v2_frames_route_by_model_id_end_to_end() {
 
     // And the response encodes as a tagged v2 frame echoing the client id.
     let encoded =
-        encode_response(frame.version, frame.client_id.unwrap(), frame.model.as_deref(), &Ok(resp));
+        encode_response(frame.version, frame.client_id.unwrap(), frame.model.as_deref(), &Ok(resp), None);
     let reparsed = Value::parse(&encoded.to_json()).unwrap();
     assert_eq!(reparsed.get("v").and_then(Value::as_usize), Some(2));
     assert_eq!(reparsed.get("id").and_then(Value::as_usize), Some(5));
@@ -222,7 +222,7 @@ fn stats_response_is_structured_json_on_the_wire() {
     let coord = Coordinator::start(cfg).unwrap();
     let _ = coord.call(Request::Sample { count: 1, seed: 0 }).unwrap();
     let resp = coord.call(Request::Stats).unwrap();
-    let encoded = encode_response(2, 1, Some("default"), &Ok(resp));
+    let encoded = encode_response(2, 1, Some("default"), &Ok(resp), None);
     let reparsed = Value::parse(&encoded.to_json()).unwrap();
     let stats = reparsed.get_path("result.stats").expect("stats payload");
     assert!(stats.get_path("global.counters.requests_submitted").is_some());
@@ -283,14 +283,14 @@ fn malformed_frames_keep_their_correlation_id() {
         r#"{"op": "transmogrify", "id": 5}"#,
     );
     let err = parse_request(r#"{"op": "transmogrify", "id": 5}"#).unwrap_err();
-    let v1 = encode_response(version, id.unwrap_or(0), None, &Err(err));
+    let v1 = encode_response(version, id.unwrap_or(0), None, &Err(err), None);
     assert_eq!(v1.get("id").and_then(Value::as_usize), Some(5));
     assert!(v1.get("v").is_none(), "v1 error reply must stay untagged");
 
     let line = r#"{"v": 2, "op": "sample", "model": 7, "id": 11}"#;
     let (version, id) = icr::coordinator::protocol::frame_error_context(line);
     let err = parse_request(line).unwrap_err();
-    let v2 = encode_response(version, id.unwrap_or(0), None, &Err(err));
+    let v2 = encode_response(version, id.unwrap_or(0), None, &Err(err), None);
     assert_eq!(v2.get("v").and_then(Value::as_usize), Some(2));
     assert_eq!(v2.get("id").and_then(Value::as_usize), Some(11));
     assert_eq!(v2.get_path("error.kind").and_then(Value::as_str), Some("malformed_request"));
