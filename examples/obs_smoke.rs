@@ -16,11 +16,17 @@
 //! - the v2 `traces` op returns committed span trees from the ring;
 //! - a real HTTP scrape of the metrics endpoint answers 200 with
 //!   Prometheus text format 0.0.4 (`icr_` families, `_total` counters,
-//!   `icr_build_info`, cumulative histogram buckets).
+//!   `icr_build_info`, cumulative histogram buckets);
+//! - profiling (`DESIGN.md` §14): after a burst of pooled panel-apply
+//!   load under a running phase profiler, the `profile` op dumps a
+//!   folded collapsed-stack document containing `request;panel_apply`,
+//!   and a second scrape shows nonzero worker-pool busy-seconds plus
+//!   the `icr_pool_saturation` gauge.
 //!
-//! The scrape body and the echoed span tree are written to
-//! `ICR_OBS_DIR` (default `obs-smoke/`) as `metrics.txt` and
-//! `trace.json` so CI can upload them. Exits non-zero on any violation.
+//! The scrape body, the echoed span tree and the folded profile are
+//! written to `ICR_OBS_DIR` (default `obs-smoke/`) as `metrics.txt`,
+//! `trace.json` and `profile.folded` so CI can upload them. Exits
+//! non-zero on any violation.
 //!
 //! ```text
 //! cargo run --release --example obs_smoke
@@ -39,8 +45,13 @@ use icr::coordinator::Coordinator;
 use icr::json::Value;
 use icr::net::{ListenAddr, NetServer};
 
-fn small_model() -> ModelConfig {
-    ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 3, target_n: 48, ..ModelConfig::default() }
+/// Shared by the backend and the front door (replica-set members must
+/// serve identical bytes). Sized so the deepest refinement levels clear
+/// the pool's inline-fallback gate: with `count: 8` applies the worker
+/// pool actually engages, giving the §14 profiling leg real
+/// busy-seconds to reconcile against.
+fn smoke_model() -> ModelConfig {
+    ModelConfig { n_csz: 3, n_fsz: 2, n_lvl: 10, target_n: 16_384, ..ModelConfig::default() }
 }
 
 struct Node {
@@ -51,7 +62,7 @@ struct Node {
 
 fn start_backend() -> Node {
     let cfg = ServerConfig {
-        model: small_model(),
+        model: smoke_model(),
         workers: 2,
         max_batch: 8,
         max_wait_us: 500,
@@ -123,10 +134,11 @@ fn main() {
     std::fs::remove_file(&sock).ok();
 
     let cfg = ServerConfig {
-        model: small_model(),
+        model: smoke_model(),
         workers: 2,
         max_batch: 8,
         max_wait_us: 500,
+        apply_threads: 4,
         idle_timeout_ms: 0,
         listen: ListenAddr::Unix(sock.clone()),
         replicas: vec![ReplicaSpec::new(
@@ -220,12 +232,77 @@ fn main() {
     assert!(!body.contains("NaN"), "scrape leaked a NaN sample:\n{body}");
     println!("PASS metrics scrape: {} bytes of Prometheus text from {metrics_addr}", body.len());
 
+    // §14: profile a burst of pooled panel-apply load on the default
+    // (local) model, then dump the folded collapsed-stack document.
+    let v = c.rpc(
+        r#"{"v": 2, "op": "profile", "id": 200, "action": "start", "duration_ms": 60000}"#,
+    );
+    assert_eq!(
+        v.get_path("result.profile.running").and_then(Value::as_bool),
+        Some(true),
+        "profiler did not start: {v:?}"
+    );
+    for i in 0..24u64 {
+        c.send(&format!(
+            r#"{{"v": 2, "op": "sample", "id": {}, "count": 8, "seed": {}}}"#,
+            300 + i,
+            7_000 + i,
+        ));
+    }
+    for _ in 0..24 {
+        let line = c.recv_line();
+        let v = Value::parse(&line).expect("frame");
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    }
+    let v = c.rpc(r#"{"v": 2, "op": "profile", "id": 330, "action": "stop"}"#);
+    assert_eq!(
+        v.get_path("result.profile.running").and_then(Value::as_bool),
+        Some(false),
+        "profiler did not stop: {v:?}"
+    );
+    let v = c.rpc(r#"{"v": 2, "op": "profile", "id": 331, "action": "dump"}"#);
+    let folded = v
+        .get_path("result.profile.folded")
+        .and_then(Value::as_str)
+        .expect("folded dump")
+        .to_string();
+    assert!(
+        folded.contains("request;panel_apply "),
+        "folded profile missing panel_apply:\n{folded}"
+    );
+    assert!(
+        folded.contains("request;serialize_reply "),
+        "folded profile missing serialize_reply:\n{folded}"
+    );
+    println!("PASS profile op: folded dump with {} phase line(s)", folded.lines().count());
+
+    // The pooled load left nonzero worker busy-seconds and a saturation
+    // gauge in the exposition.
+    let (status, body2) = scrape(&metrics_addr);
+    assert!(status.contains("200"), "second scrape status: {status}");
+    let busy: f64 = body2
+        .lines()
+        .filter(|l| l.starts_with("icr_pool_worker_busy_seconds_total{"))
+        .filter_map(|l| l.rsplit(' ').next().and_then(|v| v.parse::<f64>().ok()))
+        .sum();
+    assert!(busy > 0.0, "pool busy-seconds still zero after pooled load:\n{body2}");
+    assert!(
+        body2.contains("icr_pool_saturation"),
+        "scrape missing the pool saturation gauge:\n{body2}"
+    );
+    assert!(
+        body2.contains("icr_process_resident_memory_bytes"),
+        "scrape missing process self-stats:\n{body2}"
+    );
+    println!("PASS pool telemetry: {busy:.6} busy-seconds across lanes + saturation gauge");
+
     // Artifacts for CI upload.
     let dir = PathBuf::from(std::env::var("ICR_OBS_DIR").unwrap_or_else(|_| "obs-smoke".into()));
     std::fs::create_dir_all(&dir).expect("artifact dir");
-    std::fs::write(dir.join("metrics.txt"), &body).expect("write metrics.txt");
+    std::fs::write(dir.join("metrics.txt"), &body2).expect("write metrics.txt");
     std::fs::write(dir.join("trace.json"), trace.to_json()).expect("write trace.json");
-    println!("PASS artifacts: {}/metrics.txt + trace.json", dir.display());
+    std::fs::write(dir.join("profile.folded"), &folded).expect("write profile.folded");
+    println!("PASS artifacts: {}/metrics.txt + trace.json + profile.folded", dir.display());
 
     drop(c);
     stop.store(true, Ordering::SeqCst);

@@ -111,6 +111,21 @@ impl Runner {
         // `cargo bench -- <filter>` passes the filter as a bare argument;
         // `--json[=path]` switches on the structured JSON dump.
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Self::from_args(filter)
+    }
+
+    /// Construct a runner with an explicit filter and JSON path, for
+    /// hosts that own their argument parsing (`icr bench`): `new()`
+    /// scans `std::env::args`, which would misread the subcommand word
+    /// itself as a filter.
+    pub fn configured(filter: Option<String>, json_path: Option<String>) -> Self {
+        let mut r = Self::from_args(filter);
+        r.json = json_path.is_some();
+        r.json_path = json_path;
+        r
+    }
+
+    fn from_args(filter: Option<String>) -> Self {
         let mut json = false;
         let mut json_path = None;
         for a in std::env::args().skip(1) {
@@ -245,6 +260,141 @@ impl Runner {
     }
 }
 
+/// Default regression tolerance for [`compare`], in percent.
+/// `ICR_BENCH_TOLERANCE_PCT` overrides the built-in 25; an explicit
+/// `--tolerance-pct` flag wins over both.
+pub fn default_tolerance_pct() -> f64 {
+    std::env::var("ICR_BENCH_TOLERANCE_PCT").ok().and_then(|v| v.parse().ok()).unwrap_or(25.0)
+}
+
+/// One baseline-vs-current comparison row (`DESIGN.md` §14).
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub name: String,
+    pub baseline_median_ns: f64,
+    pub current_median_ns: f64,
+    /// Median delta in percent; positive = slower than the baseline.
+    pub delta_pct: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of checking a run against a recorded baseline.
+#[derive(Debug)]
+pub struct CompareReport {
+    pub tolerance_pct: f64,
+    pub rows: Vec<CompareRow>,
+    /// Benchmarks in this run with no baseline entry (new cases) —
+    /// informational, never a failure, so adding a benchmark does not
+    /// break CI until a fresh baseline is recorded.
+    pub unmatched: Vec<String>,
+}
+
+impl CompareReport {
+    /// Rows slower than the baseline beyond the tolerance band.
+    pub fn regressions(&self) -> Vec<&CompareRow> {
+        self.rows.iter().filter(|r| r.regressed).collect()
+    }
+
+    /// True when no benchmark regressed beyond tolerance.
+    pub fn ok(&self) -> bool {
+        self.rows.iter().all(|r| !r.regressed)
+    }
+
+    /// Human-readable diff table.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<44} {:>12} {:>12} {:>9}  {}",
+            "benchmark", "baseline", "current", "delta", "verdict"
+        );
+        for r in &self.rows {
+            let verdict = if r.regressed {
+                "REGRESSED"
+            } else if r.delta_pct < -self.tolerance_pct {
+                "improved"
+            } else {
+                "ok"
+            };
+            let _ = writeln!(
+                out,
+                "{:<44} {:>12} {:>12} {:>+8.1}%  {}",
+                r.name,
+                fmt_ns(r.baseline_median_ns),
+                fmt_ns(r.current_median_ns),
+                r.delta_pct,
+                verdict,
+            );
+        }
+        for name in &self.unmatched {
+            let _ = writeln!(out, "{name:<44} {:>12} (no baseline entry — new)", "-");
+        }
+        let n = self.regressions().len();
+        let _ = writeln!(
+            out,
+            "{} of {} benchmark(s) regressed beyond the ±{:.0}% tolerance band",
+            n,
+            self.rows.len(),
+            self.tolerance_pct,
+        );
+        out
+    }
+}
+
+/// Load a baseline written by [`Runner::dump_json`]: `(name, median_ns)`
+/// per recorded benchmark. Accepts any document with a `results` array
+/// of `{name, median_ns}` objects, so hand-trimmed baselines work too.
+pub fn load_baseline(path: &std::path::Path) -> Result<Vec<(String, f64)>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading baseline {}: {e}", path.display()))?;
+    let doc = crate::json::Value::parse(&text)
+        .map_err(|e| format!("parsing baseline {}: {e}", path.display()))?;
+    let results = doc
+        .get("results")
+        .and_then(crate::json::Value::as_array)
+        .ok_or_else(|| format!("baseline {} has no results array", path.display()))?;
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        let name = r.get("name").and_then(crate::json::Value::as_str);
+        let median = r.get("median_ns").and_then(crate::json::Value::as_f64);
+        match (name, median) {
+            (Some(n), Some(m)) if m > 0.0 => out.push((n.to_string(), m)),
+            _ => return Err(format!("baseline {} has a malformed result entry", path.display())),
+        }
+    }
+    Ok(out)
+}
+
+/// Check `results` against a baseline: a benchmark regresses when its
+/// median exceeds the baseline median by more than `tolerance_pct`
+/// percent. Baseline entries with no current counterpart are skipped
+/// (a filtered run must not fail on what it did not measure).
+pub fn compare(
+    results: &[BenchResult],
+    baseline: &[(String, f64)],
+    tolerance_pct: f64,
+) -> CompareReport {
+    let mut rows = Vec::new();
+    let mut unmatched = Vec::new();
+    for r in results {
+        match baseline.iter().find(|(n, _)| *n == r.name) {
+            Some((_, base)) => {
+                let delta_pct = (r.median_ns / base - 1.0) * 100.0;
+                rows.push(CompareRow {
+                    name: r.name.clone(),
+                    baseline_median_ns: *base,
+                    current_median_ns: r.median_ns,
+                    delta_pct,
+                    regressed: delta_pct > tolerance_pct,
+                });
+            }
+            None => unmatched.push(r.name.clone()),
+        }
+    }
+    CompareReport { tolerance_pct, rows, unmatched }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,5 +473,84 @@ mod tests {
         let v = crate::json::Value::parse(&r.to_json().to_json()).unwrap();
         assert_eq!(v.get("name").unwrap().as_str(), Some("x"));
         assert_eq!(v.get("median_ns").unwrap().as_f64(), Some(2.0));
+    }
+
+    fn result(name: &str, median_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters_per_sample: 1,
+            samples: 1,
+            min_ns: median_ns,
+            median_ns,
+            mean_ns: median_ns,
+            max_ns: median_ns,
+        }
+    }
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_the_tolerance_band() {
+        let baseline = vec![
+            ("steady".to_string(), 100.0),
+            ("slower".to_string(), 100.0),
+            ("faster".to_string(), 100.0),
+        ];
+        let results =
+            [result("steady", 120.0), result("slower", 130.0), result("faster", 50.0)];
+        let report = compare(&results, &baseline, 25.0);
+        assert!(!report.ok());
+        let regressed: Vec<&str> =
+            report.regressions().iter().map(|r| r.name.as_str()).collect();
+        // +20% sits inside the band; +30% is out; -50% is an improvement.
+        assert_eq!(regressed, vec!["slower"]);
+        let row = report.rows.iter().find(|r| r.name == "slower").unwrap();
+        assert!((row.delta_pct - 30.0).abs() < 1e-9);
+        let text = report.render();
+        assert!(text.contains("REGRESSED"), "render marks regressions: {text}");
+        assert!(text.contains("improved"), "render marks improvements: {text}");
+        assert!(text.contains("1 of 3"), "render counts regressions: {text}");
+    }
+
+    #[test]
+    fn compare_skips_baseline_gaps_and_reports_new_benchmarks() {
+        let baseline = vec![("only-in-baseline".to_string(), 100.0)];
+        let results = [result("brand-new", 500.0)];
+        let report = compare(&results, &baseline, 25.0);
+        // A new benchmark with no baseline entry is informational, not a
+        // failure; a baseline entry not measured this run is skipped.
+        assert!(report.ok());
+        assert!(report.rows.is_empty());
+        assert_eq!(report.unmatched, vec!["brand-new".to_string()]);
+        assert!(report.render().contains("no baseline entry"));
+    }
+
+    #[test]
+    fn load_baseline_roundtrips_a_dump_json_document() {
+        let mut r = Runner::configured(None, None);
+        r.results.push(result("apply/b8", 42.0));
+        r.results.push(result("rng/fill", 7.0));
+        let path =
+            std::env::temp_dir().join(format!("icr_baseline_{}.json", std::process::id()));
+        let written = r.dump_json(path.to_str().unwrap(), "icr_bench", vec![]).unwrap();
+        let baseline = load_baseline(&written).unwrap();
+        assert_eq!(
+            baseline,
+            vec![("apply/b8".to_string(), 42.0), ("rng/fill".to_string(), 7.0)]
+        );
+        // Same run against its own dump: zero delta, nothing regresses.
+        let report = compare(&r.results, &baseline, 25.0);
+        assert!(report.ok());
+        assert_eq!(report.rows.len(), 2);
+        assert!(report.rows.iter().all(|row| row.delta_pct.abs() < 1e-9));
+        std::fs::remove_file(&written).ok();
+    }
+
+    #[test]
+    fn load_baseline_rejects_documents_without_results() {
+        let path =
+            std::env::temp_dir().join(format!("icr_badbase_{}.json", std::process::id()));
+        std::fs::write(&path, "{\"suite\": \"x\"}").unwrap();
+        let err = load_baseline(&path).unwrap_err();
+        assert!(err.contains("no results array"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 }

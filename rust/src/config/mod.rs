@@ -503,6 +503,16 @@ pub struct ServerConfig {
     /// Prometheus scrape endpoint (`--metrics-listen tcp:HOST:PORT`,
     /// DESIGN.md §13); `None` (default) serves no endpoint.
     pub metrics_listen: Option<String>,
+    /// Rotate a `file:` log destination once it exceeds this many bytes
+    /// (`--log-rotate-bytes`, 0 = never rotate, the default).
+    pub log_rotate_bytes: u64,
+    /// Rotated generations to keep (`--log-rotate-keep`, ≥ 1):
+    /// `PATH.1` (newest) through `PATH.{keep}` (oldest).
+    pub log_rotate_keep: usize,
+    /// Arm the sampling phase profiler at boot (`--profile`,
+    /// DESIGN.md §14): an unbounded collection run controllable (and
+    /// dumpable) via the protocol-v2 `profile` op.
+    pub profile: bool,
 }
 
 impl Default for ServerConfig {
@@ -542,6 +552,9 @@ impl Default for ServerConfig {
             log_format: "json".into(),
             log_dest: "stderr".into(),
             metrics_listen: None,
+            log_rotate_bytes: 0,
+            log_rotate_keep: crate::obs::log::DEFAULT_LOG_ROTATE_KEEP,
+            profile: false,
         }
     }
 }
@@ -698,6 +711,16 @@ impl ServerConfig {
                 Ok(_) => anyhow::bail!("--metrics-listen must be tcp:HOST:PORT, got {m:?}"),
                 Err(e) => anyhow::bail!("--metrics-listen: {e}"),
             }
+        }
+        cfg.log_rotate_bytes = args.get_u64("log-rotate-bytes", cfg.log_rotate_bytes)?;
+        cfg.log_rotate_keep = args.get_usize("log-rotate-keep", cfg.log_rotate_keep)?;
+        anyhow::ensure!(
+            cfg.log_rotate_keep >= 1,
+            "--log-rotate-keep must be >= 1, got {}",
+            cfg.log_rotate_keep
+        );
+        if args.has_switch("profile") {
+            cfg.profile = true;
         }
         cfg.validate_models()?;
         Ok(cfg)
@@ -861,6 +884,15 @@ impl ServerConfig {
             self.metrics_listen =
                 if m.trim().is_empty() { None } else { Some(m.to_string()) };
         }
+        if let Some(b) = v.get("log_rotate_bytes").and_then(Value::as_usize) {
+            self.log_rotate_bytes = b as u64;
+        }
+        if let Some(k) = v.get("log_rotate_keep").and_then(Value::as_usize) {
+            self.log_rotate_keep = k.max(1);
+        }
+        if let Some(Value::Bool(p)) = v.get("profile") {
+            self.profile = *p;
+        }
         if let Some(b) = v.get("batch_max").and_then(Value::as_usize) {
             self.max_batch = b.max(1);
         }
@@ -995,6 +1027,9 @@ impl ServerConfig {
                     None => Value::Null,
                 },
             ),
+            ("log_rotate_bytes", json::num(self.log_rotate_bytes as f64)),
+            ("log_rotate_keep", json::num(self.log_rotate_keep as f64)),
+            ("profile", Value::Bool(self.profile)),
         ])
     }
 
@@ -1409,6 +1444,48 @@ mod tests {
         let v = Value::parse(&ServerConfig::default().to_json().to_json()).unwrap();
         assert_eq!(v.get("metrics_listen"), Some(&Value::Null));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn profiling_and_rotation_knobs_resolve_and_roundtrip() {
+        // Defaults: profiler off, rotation off, keep 3.
+        let cfg = ServerConfig::default();
+        assert!(!cfg.profile);
+        assert_eq!(cfg.log_rotate_bytes, 0);
+        assert_eq!(cfg.log_rotate_keep, 3);
+
+        let args = Args::parse(
+            &argv("serve --profile --log-rotate-bytes 4096 --log-rotate-keep 5"),
+            &["profile"],
+        )
+        .unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert!(cfg.profile);
+        assert_eq!(cfg.log_rotate_bytes, 4096);
+        assert_eq!(cfg.log_rotate_keep, 5);
+        let v = Value::parse(&cfg.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("profile"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("log_rotate_bytes").and_then(Value::as_usize), Some(4096));
+        assert_eq!(v.get("log_rotate_keep").and_then(Value::as_usize), Some(5));
+
+        // File config carries the same keys; keep must stay >= 1.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("icr_prof_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"profile": true, "log_rotate_bytes": 1024, "log_rotate_keep": 2}"#,
+        )
+        .unwrap();
+        let args =
+            Args::parse(&argv(&format!("serve --config {}", path.display())), &[]).unwrap();
+        let cfg = ServerConfig::resolve(&args).unwrap();
+        assert!(cfg.profile);
+        assert_eq!(cfg.log_rotate_bytes, 1024);
+        assert_eq!(cfg.log_rotate_keep, 2);
+        std::fs::remove_file(&path).ok();
+
+        let args = Args::parse(&argv("serve --log-rotate-keep 0"), &[]).unwrap();
+        assert!(ServerConfig::resolve(&args).is_err(), "keep 0 must be rejected");
     }
 
     #[test]

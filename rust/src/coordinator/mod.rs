@@ -18,5 +18,5 @@ pub mod server;
 
 pub use engine::{default_obs_indices, FieldEngine, NativeEngine, PjrtEngine};
 pub use protocol::{RequestFrame, ResponseFrame, PROTOCOL_VERSION, SUPPORTED_PROTOCOLS};
-pub use request::{Envelope, ReplySlot, Request, RequestId, Response};
+pub use request::{Envelope, ProfileAction, ReplySlot, Request, RequestId, Response};
 pub use server::Coordinator;

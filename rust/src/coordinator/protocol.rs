@@ -26,7 +26,7 @@ use crate::json::{self, Value};
 use crate::model::{ModelInfo, MultiInference};
 use crate::optim::Trace;
 
-use super::request::{Request, RequestId, Response};
+use super::request::{ProfileAction, Request, RequestId, Response};
 
 /// Protocol versions this server speaks, oldest first.
 pub const SUPPORTED_PROTOCOLS: [u64; 2] = [1, 2];
@@ -183,6 +183,30 @@ pub fn parse_request(line: &str) -> Result<RequestFrame, IcrError> {
                 limit: v.get("limit").and_then(Value::as_usize).unwrap_or(20),
             }
         }
+        "profile" => {
+            if version < 2 {
+                return Err(IcrError::MalformedRequest(
+                    "profile requires a v2 frame ({\"v\": 2, ...})".into(),
+                ));
+            }
+            let action = match v.get("action").and_then(Value::as_str) {
+                Some("start") => ProfileAction::Start {
+                    duration_ms: v
+                        .get("duration_ms")
+                        .and_then(Value::as_f64)
+                        .map(|x| x as u64)
+                        .unwrap_or(crate::obs::profile::PROFILE_DEFAULT_DURATION_MS),
+                },
+                Some("stop") => ProfileAction::Stop,
+                Some("dump") => ProfileAction::Dump,
+                _ => {
+                    return Err(IcrError::MalformedRequest(
+                        "profile needs \"action\": \"start\" | \"stop\" | \"dump\"".into(),
+                    ))
+                }
+            };
+            Request::Profile { action }
+        }
         "reload_model" => {
             if version < 2 {
                 return Err(IcrError::MalformedRequest(
@@ -283,6 +307,14 @@ pub fn encode_request(frame: &RequestFrame) -> Value {
         Request::Traces { limit } => {
             fields.push(("limit", json::num(*limit as f64)));
         }
+        Request::Profile { action } => match action {
+            ProfileAction::Start { duration_ms } => {
+                fields.push(("action", json::s("start")));
+                fields.push(("duration_ms", json::num(*duration_ms as f64)));
+            }
+            ProfileAction::Stop => fields.push(("action", json::s("stop"))),
+            ProfileAction::Dump => fields.push(("action", json::s("dump"))),
+        },
         Request::Stats | Request::Describe => {}
     }
     json::obj(fields)
@@ -339,6 +371,7 @@ fn result_payload(resp: &Response) -> Value {
             ]),
         )]),
         Response::Traces(v) => json::obj(vec![("traces", v.clone())]),
+        Response::Profile(v) => json::obj(vec![("profile", v.clone())]),
     }
 }
 
@@ -509,6 +542,8 @@ pub fn decode_response(v: &Value) -> Result<ResponseFrame, IcrError> {
         }
     } else if let Some(traces) = payload.get("traces") {
         Response::Traces(traces.clone())
+    } else if let Some(profile) = payload.get("profile") {
+        Response::Profile(profile.clone())
     } else if let Some(stats) = payload.get("stats") {
         // v1 carries stats as a serialized-JSON string; v2 as an object.
         match stats {
@@ -602,6 +637,13 @@ mod tests {
                 Some(9),
                 Request::ReloadModel { path: "/var/icr/model-v2".into() },
             ),
+            RequestFrame::v2(
+                None,
+                Some(10),
+                Request::Profile { action: ProfileAction::Start { duration_ms: 5000 } },
+            ),
+            RequestFrame::v2(None, Some(11), Request::Profile { action: ProfileAction::Stop }),
+            RequestFrame::v2(None, Some(12), Request::Profile { action: ProfileAction::Dump }),
         ];
         for frame in &frames {
             let line = encode_request(frame).to_json();
@@ -747,6 +789,38 @@ mod tests {
         assert_eq!(f.request, Request::Traces { limit: 20 });
         let f = parse_request(r#"{"v": 2, "op": "traces", "limit": 5}"#).unwrap();
         assert_eq!(f.request, Request::Traces { limit: 5 });
+    }
+
+    #[test]
+    fn profile_op_is_v2_only_and_validates_action() {
+        let err = parse_request(r#"{"op": "profile", "action": "dump"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let err = parse_request(r#"{"v": 2, "op": "profile"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        let err = parse_request(r#"{"v": 2, "op": "profile", "action": "pause"}"#).unwrap_err();
+        assert_eq!(err.kind(), "malformed_request");
+        // Start without a duration picks the bounded default.
+        let f = parse_request(r#"{"v": 2, "op": "profile", "action": "start"}"#).unwrap();
+        let want = crate::obs::profile::PROFILE_DEFAULT_DURATION_MS;
+        assert_eq!(
+            f.request,
+            Request::Profile { action: ProfileAction::Start { duration_ms: want } }
+        );
+        let f = parse_request(r#"{"v": 2, "op": "profile", "action": "dump"}"#).unwrap();
+        assert_eq!(f.request, Request::Profile { action: ProfileAction::Dump });
+    }
+
+    #[test]
+    fn profile_response_roundtrips_v2() {
+        let doc = json::obj(vec![
+            ("running", Value::Bool(true)),
+            ("folded", json::s("request;panel_apply 1234\n")),
+        ]);
+        let resp = Response::Profile(doc.clone());
+        let encoded = encode_response(2, 13, None, &Ok(resp.clone()), None);
+        let frame = decode_response(&encoded).unwrap();
+        assert_eq!(frame.id, 13);
+        assert_eq!(frame.result.unwrap(), resp);
     }
 
     #[test]

@@ -51,6 +51,23 @@ pub enum Request {
     /// Recent committed request traces from the observability ring
     /// (`DESIGN.md` §13), newest first, at most `limit`. v2-only.
     Traces { limit: usize },
+    /// Control the sampling phase profiler (`DESIGN.md` §14):
+    /// start/stop a bounded collection run or dump the aggregated
+    /// folded stacks. v2-only.
+    Profile { action: ProfileAction },
+}
+
+/// What a `profile` request does to the phase profiler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProfileAction {
+    /// Begin (or restart) collection for at most `duration_ms`
+    /// milliseconds (0 = unbounded, the boot `--profile` mode).
+    Start { duration_ms: u64 },
+    /// End collection, keeping the aggregate for a later dump.
+    Stop,
+    /// Snapshot the aggregate (including the folded-stack text)
+    /// without disturbing a running collection.
+    Dump,
 }
 
 impl Request {
@@ -92,6 +109,7 @@ impl Request {
             Request::Describe => "describe",
             Request::ReloadModel { .. } => "reload_model",
             Request::Traces { .. } => "traces",
+            Request::Profile { .. } => "profile",
         }
     }
 }
@@ -116,6 +134,10 @@ pub enum Response {
     /// Recent committed traces for `traces` requests (a JSON array,
     /// newest first — see `obs::Tracer::recent`).
     Traces(Value),
+    /// Profiler state document for `profile` requests: start/stop
+    /// acknowledgements and dumps (which carry the folded-stack text —
+    /// see `obs::PhaseProfiler`).
+    Profile(Value),
 }
 
 /// Where a finished request's result is delivered, exactly once.
@@ -251,6 +273,7 @@ mod tests {
         assert!(!Request::Describe.batchable());
         assert!(!Request::ReloadModel { path: "a".into() }.batchable());
         assert!(!Request::Traces { limit: 10 }.batchable());
+        assert!(!Request::Profile { action: ProfileAction::Dump }.batchable());
         assert!(
             !Request::Infer { y_obs: vec![], sigma_n: 0.1, steps: 1, lr: 0.1 }.batchable()
         );
@@ -272,6 +295,8 @@ mod tests {
         assert_eq!(Request::Stats.apply_count(), 0);
         assert_eq!(Request::ReloadModel { path: "a".into() }.apply_count(), 0);
         assert_eq!(Request::Traces { limit: 10 }.apply_count(), 0);
+        let start = Request::Profile { action: ProfileAction::Start { duration_ms: 100 } };
+        assert_eq!(start.apply_count(), 0);
     }
 
     #[test]
@@ -291,6 +316,7 @@ mod tests {
         assert!(Request::Stats.idempotent());
         assert!(Request::Describe.idempotent());
         assert!(Request::Traces { limit: 10 }.idempotent());
+        assert!(Request::Profile { action: ProfileAction::Stop }.idempotent());
         assert!(!Request::ReloadModel { path: "a".into() }.idempotent());
     }
 
@@ -318,5 +344,6 @@ mod tests {
         assert_eq!(Request::Describe.op(), "describe");
         assert_eq!(Request::ReloadModel { path: "a".into() }.op(), "reload_model");
         assert_eq!(Request::Traces { limit: 10 }.op(), "traces");
+        assert_eq!(Request::Profile { action: ProfileAction::Dump }.op(), "profile");
     }
 }

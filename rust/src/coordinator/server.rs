@@ -33,7 +33,7 @@ use crate::parallel::Exec;
 use crate::rng::Rng;
 
 use super::protocol::SUPPORTED_PROTOCOLS;
-use super::request::{Envelope, ReplySlot, Request, RequestId, Response};
+use super::request::{Envelope, ProfileAction, ReplySlot, Request, RequestId, Response};
 
 /// One hosted model: the (hot-swappable) engine plus its private
 /// metrics and persistence state (`DESIGN.md` §10).
@@ -150,6 +150,9 @@ pub struct Coordinator {
     /// Replica-member health monitor (`DESIGN.md` §9); present when
     /// replica sets exist and `health_interval_ms > 0`.
     health: Option<std::thread::JoinHandle<()>>,
+    /// Resource-monitor ticker (`DESIGN.md` §14): folds RSS into the
+    /// peak once a second so the peak stays honest between scrapes.
+    monitor: std::thread::JoinHandle<()>,
 }
 
 impl Coordinator {
@@ -313,7 +316,14 @@ impl Coordinator {
         } else {
             None
         };
-        Ok(Coordinator { shared, workers, health })
+        let monitor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("icr-monitor".into())
+                .spawn(move || monitor_loop(&shared))
+                .expect("spawning resource monitor")
+        };
+        Ok(Coordinator { shared, workers, health, monitor })
     }
 
     /// Fetch the identity of every deferred remote entry. A shard that
@@ -378,6 +388,24 @@ impl Coordinator {
         &self.shared.obs
     }
 
+    /// Run `f` as a named profiler phase (`DESIGN.md` §14): while a
+    /// profiling run is active its wall and CPU occupancy are recorded
+    /// under `stack` (a folded frame path like
+    /// `request;serialize_reply`); otherwise the only cost is one
+    /// relaxed atomic load.
+    pub fn with_phase<T>(&self, stack: &str, f: impl FnOnce() -> T) -> T {
+        let prof = &self.shared.obs.profiler;
+        if !prof.running() {
+            return f();
+        }
+        let cpu0 = obs::thread_cpu_ns();
+        let t0 = Instant::now();
+        let out = f();
+        let wall_us = t0.elapsed().as_micros() as u64;
+        prof.record(stack, wall_us, obs::cpu_delta_us(cpu0, obs::thread_cpu_ns()));
+        out
+    }
+
     /// Claim the span-tree echo stashed for an explicitly traced
     /// request — serving layers attach it to the outgoing reply at
     /// encode time (`encode_response_traced`).
@@ -404,7 +432,26 @@ impl Coordinator {
                 &entry.metrics,
             ));
         }
-        obs::render_prometheus(&scopes, shared.obs.uptime_s(), crate::VERSION)
+        let mut text = obs::render_prometheus(&scopes, shared.obs.uptime_s(), crate::VERSION);
+        // §14: worker-pool telemetry (when the registry shares a pooled
+        // executor) and process self-stats ride on every scrape.
+        if let Some(pool) = shared.exec.as_ref().and_then(|e| e.pool_handle()) {
+            obs::profile::render_pool_prometheus(
+                &mut text,
+                &pool.busy_ns_per_lane(),
+                pool.dispatches(),
+                pool.saturation(),
+                pool.imbalance_last_permille() as f64 / 1000.0,
+                pool.imbalance_mean_permille() as f64 / 1000.0,
+            );
+        }
+        let snap = shared.obs.resource.tick();
+        obs::resource::render_process_prometheus(
+            &mut text,
+            &snap,
+            shared.obs.resource.peak_rss_bytes(),
+        );
+        text
     }
 
     /// The replica router (empty when no `--replicas` were configured).
@@ -699,6 +746,26 @@ impl Coordinator {
         if let Some(h) = self.health {
             let _ = h.join();
         }
+        let _ = self.monitor.join();
+    }
+}
+
+/// Tick the resource monitor about once a second so peak RSS stays
+/// honest even when nobody scrapes (`DESIGN.md` §14). Sleeps in short
+/// steps so shutdown stays responsive.
+fn monitor_loop(shared: &Shared) {
+    const INTERVAL: Duration = Duration::from_millis(1000);
+    loop {
+        shared.obs.resource.tick();
+        let mut slept = Duration::ZERO;
+        while slept < INTERVAL {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let step = Duration::from_millis(20).min(INTERVAL - slept);
+            std::thread::sleep(step);
+            slept += step;
+        }
     }
 }
 
@@ -825,10 +892,11 @@ fn stats_json(shared: &Shared) -> Value {
     ])
 }
 
-/// The `observability` stats section (`DESIGN.md` §13): tracer and
-/// event-log health counters plus the knobs they run under.
+/// The `observability` stats section (`DESIGN.md` §13/§14): tracer and
+/// event-log health counters plus the knobs they run under, the shared
+/// pool's telemetry, process self-stats, and the profiler run status.
 fn observability_json(shared: &Shared) -> Value {
-    json::obj(vec![
+    let mut fields = vec![
         ("trace_sample_rate", json::num(shared.obs.tracer.sample_rate())),
         ("trace_slow_us", json::num(shared.obs.tracer.slow_us() as f64)),
         ("traces_committed", json::num(shared.obs.tracer.committed_count() as f64)),
@@ -836,7 +904,15 @@ fn observability_json(shared: &Shared) -> Value {
         ("log_level", json::s(shared.obs.log.level().as_str())),
         ("log_emitted", json::num(shared.obs.log.emitted_count() as f64)),
         ("log_suppressed", json::num(shared.obs.log.suppressed_count() as f64)),
-    ])
+    ];
+    // Injected registries (and --apply-threads 1) have no pool to report.
+    if let Some(pool) = shared.exec.as_ref().and_then(|e| e.pool_handle()) {
+        fields.push(("pool", pool.telemetry_json()));
+    }
+    let snap = shared.obs.resource.tick();
+    fields.push(("process", snap.to_json(shared.obs.resource.peak_rss_bytes())));
+    fields.push(("profile", shared.obs.profiler.status_json()));
+    json::obj(fields)
 }
 
 /// The `cluster` stats section (`DESIGN.md` §9/§12): health, resilience
@@ -1373,6 +1449,7 @@ fn process_remote_batch(
     batch: Vec<Envelope>,
     t0: Instant,
 ) {
+    let profiling = shared.obs.profiler.running();
     let dof = model.total_dof();
     let shape_check = |req: &Request| -> Result<(), IcrError> {
         if let Request::ApplySqrt { xi } = req {
@@ -1398,17 +1475,32 @@ fn process_remote_batch(
                 })
                 .collect();
             for (i, (env, pending)) in batch.into_iter().zip(pendings).enumerate() {
+                // Wire CPU (§14) covers only the reply await on this
+                // thread — the phase is I/O-dominated, so the folded
+                // dump shows its wall occupancy with near-zero CPU.
+                let measure = profiling || env.trace.is_some();
+                let cpu0 = if measure { obs::thread_cpu_ns() } else { 0 };
                 let (raw, remote_doc) = match pending {
                     Err(e) => (Err(e), None),
                     Ok(p) => remote.proxy_finish_traced(&p, t_submit),
                 };
+                let wire_cpu_us = if measure {
+                    obs::cpu_delta_us(cpu0, obs::thread_cpu_ns())
+                } else {
+                    0
+                };
+                if profiling {
+                    let wire_us = t_submit.elapsed().as_micros() as u64;
+                    shared.obs.profiler.record("request;remote_wire", wire_us, wire_cpu_us);
+                }
                 if let Some(t) = &env.trace {
                     let start = wire_starts[i].unwrap_or(0);
-                    let span = t.record_tagged(
+                    let span = t.record_cpu_tagged(
                         "remote_wire",
                         obs::ROOT_SPAN,
                         start,
                         t.now_us().saturating_sub(start),
+                        wire_cpu_us,
                         vec![("member".to_string(), env.model.clone())],
                     );
                     // Join the shard's echoed span tree under the wire
@@ -1428,6 +1520,8 @@ fn process_remote_batch(
         None => {
             for env in batch {
                 let t_req = Instant::now();
+                let measure = profiling || env.trace.is_some();
+                let cpu0 = if measure { obs::thread_cpu_ns() } else { 0 };
                 let wire_start = env.trace.as_ref().map(|t| t.now_us());
                 let result = shape_check(&env.request).and_then(|()| match &env.request {
                     Request::Sample { count, seed } => model.sample(*count, *seed).map(|rows| {
@@ -1439,13 +1533,23 @@ fn process_remote_batch(
                         .map(|mut rows| Response::Field(rows.remove(0))),
                     _ => unreachable!("non-batchable request in batch"),
                 });
+                let wire_cpu_us = if measure {
+                    obs::cpu_delta_us(cpu0, obs::thread_cpu_ns())
+                } else {
+                    0
+                };
+                if profiling {
+                    let wire_us = t_req.elapsed().as_micros() as u64;
+                    shared.obs.profiler.record("request;remote_wire", wire_us, wire_cpu_us);
+                }
                 if let Some(t) = &env.trace {
                     let start = wire_start.unwrap_or(0);
-                    t.record_tagged(
+                    t.record_cpu_tagged(
                         "remote_wire",
                         obs::ROOT_SPAN,
                         start,
                         t.now_us().saturating_sub(start),
+                        wire_cpu_us,
                         vec![("member".to_string(), env.model.clone())],
                     );
                 }
@@ -1461,11 +1565,17 @@ fn process_remote_batch(
 
 fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
     let t0 = Instant::now();
+    let profiling = shared.obs.profiler.running();
     // Queue-wait phase span for every traced envelope: the span ends
     // at dequeue (now) and starts when the envelope was enqueued.
     for env in &batch {
+        let wait_us = env.enqueued_at.elapsed().as_micros() as u64;
+        if profiling {
+            // Queue wait burns no CPU; the profiler still aggregates
+            // the occupancy so a saturated queue shows in the dump.
+            shared.obs.profiler.record("request;queue_wait", wait_us, 0);
+        }
         if let Some(t) = &env.trace {
-            let wait_us = env.enqueued_at.elapsed().as_micros() as u64;
             t.record("queue_wait", obs::ROOT_SPAN, t.now_us().saturating_sub(wait_us), wait_us);
         }
     }
@@ -1551,6 +1661,18 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         }
     }
 
+    // CPU attribution for the apply (`DESIGN.md` §14), measured only
+    // when a trace or a profiling run will consume it: pool-dispatched
+    // sections credit their exact all-lane busy time to this
+    // (submitting) thread, and below-threshold inline applies fall
+    // back to the submitter's own thread CPU delta.
+    let measure = profiling || batch.iter().any(|e| e.trace.is_some());
+    let cpu0 = if measure {
+        let _ = crate::parallel::take_section_busy_ns();
+        obs::thread_cpu_ns()
+    } else {
+        0
+    };
     let t_apply = Instant::now();
     let outputs = match local_fault(shared, entry, &batch[0].request) {
         // One draw per panel call, mirroring "one fault per model call"
@@ -1558,12 +1680,29 @@ fn process_batch(shared: &Shared, batch: Vec<Envelope>) {
         Some(err) => Err(err),
         None => model.apply_sqrt_panel(&panel, applies),
     };
-    // The shared panel apply is one wall-clock interval; every traced
-    // envelope in the batch carries the same phase span.
     let apply_us = t_apply.elapsed().as_micros() as u64;
+    let apply_cpu_us = if measure {
+        let section_us = crate::parallel::take_section_busy_ns() / 1_000;
+        section_us.max(obs::cpu_delta_us(cpu0, obs::thread_cpu_ns()))
+    } else {
+        0
+    };
+    if profiling {
+        shared.obs.profiler.record("request;panel_apply", apply_us, apply_cpu_us);
+    }
+    // The shared panel apply is one wall-clock interval; every traced
+    // envelope in the batch carries the same phase span (and the same
+    // whole-panel CPU attribution).
     for env in &batch {
         if let Some(t) = &env.trace {
-            t.record("panel_apply", obs::ROOT_SPAN, t.now_us().saturating_sub(apply_us), apply_us);
+            t.record_cpu_tagged(
+                "panel_apply",
+                obs::ROOT_SPAN,
+                t.now_us().saturating_sub(apply_us),
+                apply_us,
+                apply_cpu_us,
+                Vec::new(),
+            );
         }
     }
     shared.metrics.counter("applies_executed").add(applies as u64);
@@ -1715,6 +1854,26 @@ fn serve_single(
             reload_entry(shared, entry, name, std::path::Path::new(path))
         }
         Request::Traces { limit } => Ok(Response::Traces(shared.obs.tracer.recent(*limit))),
+        Request::Profile { action } => {
+            // Local control op (`DESIGN.md` §14): never routed or
+            // failed over, always answered by this process's profiler.
+            let prof = &shared.obs.profiler;
+            let doc = match action {
+                ProfileAction::Start { duration_ms } => {
+                    shared.obs.log.info(
+                        "profile_started",
+                        vec![("duration_ms", json::num(*duration_ms as f64))],
+                    );
+                    prof.start(*duration_ms)
+                }
+                ProfileAction::Stop => {
+                    shared.obs.log.info("profile_stopped", vec![]);
+                    prof.stop()
+                }
+                ProfileAction::Dump => prof.dump(),
+            };
+            Ok(Response::Profile(doc))
+        }
         _ => unreachable!("batchable request routed to serve_single"),
     }
 }
@@ -2789,6 +2948,187 @@ mod tests {
             "{text}"
         );
         assert!(!text.contains("NaN"), "{text}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn traces_op_on_a_fresh_server_returns_an_empty_array() {
+        let c = start(1, 2);
+        match c.call(Request::Traces { limit: 10 }).unwrap() {
+            Response::Traces(v) => {
+                assert_eq!(v.as_array().map(Vec::len), Some(0), "{}", v.to_json())
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn observability_stats_surface_pool_process_and_profile_sections() {
+        let mut cfg = test_config(1, 4);
+        cfg.apply_threads = 2;
+        let c = Coordinator::start(cfg).unwrap();
+        let _ = c.call(Request::Sample { count: 1, seed: 1 }).unwrap();
+        match c.call(Request::Stats).unwrap() {
+            Response::Stats(v) => {
+                assert_eq!(
+                    v.get_path("observability.pool.width").and_then(Value::as_usize),
+                    Some(2),
+                    "{}",
+                    v.to_json()
+                );
+                assert!(
+                    v.get_path("observability.pool.saturation").and_then(Value::as_f64).is_some()
+                );
+                assert_eq!(
+                    v.get_path("observability.profile.running"),
+                    Some(&Value::Bool(false))
+                );
+                if cfg!(target_os = "linux") {
+                    let rss = v
+                        .get_path("observability.process.rss_bytes")
+                        .and_then(Value::as_f64)
+                        .unwrap();
+                    assert!(rss > 0.0, "rss not read from /proc");
+                    let peak = v
+                        .get_path("observability.process.peak_rss_bytes")
+                        .and_then(Value::as_f64)
+                        .unwrap();
+                    assert!(peak >= rss, "peak {peak} below the snapshot {rss}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn prometheus_scrape_includes_pool_and_process_families() {
+        let mut cfg = test_config(1, 4);
+        cfg.apply_threads = 2;
+        let c = Coordinator::start(cfg).unwrap();
+        let text = c.render_prometheus();
+        assert!(text.contains("icr_pool_worker_busy_seconds_total{worker=\"0\"}"), "{text}");
+        assert!(text.contains("icr_pool_worker_busy_seconds_total{worker=\"1\"}"), "{text}");
+        assert!(text.contains("icr_pool_dispatches_total"), "{text}");
+        assert!(text.contains("icr_pool_saturation"), "{text}");
+        assert!(text.contains("icr_process_resident_memory_bytes"), "{text}");
+        assert!(text.contains("icr_process_cpu_seconds_total"), "{text}");
+        assert!(!text.contains("NaN"), "{text}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn profile_op_folds_panel_apply_cpu_that_reconciles_with_pool_busy() {
+        // §14 acceptance: under concurrent panel-apply load the folded
+        // profile's panel_apply CPU-µs must reconcile with the pool's
+        // Prometheus busy-seconds delta over the same window. Both
+        // sides share the per-task busy accounting, so they may only
+        // differ by the submitter-CPU fallback of sub-threshold inline
+        // sections. The model is sized so its top refinement levels
+        // clear PAR_MIN_ELEMS with 8-lane blocks.
+        let mut cfg = test_config(2, 64);
+        cfg.model = ModelConfig {
+            n_csz: 3,
+            n_fsz: 2,
+            n_lvl: 10,
+            target_n: 16_384,
+            ..ModelConfig::default()
+        };
+        cfg.apply_threads = 4;
+        cfg.max_wait_us = 500;
+        let c = Coordinator::start(cfg).unwrap();
+
+        let busy_us = |c: &Coordinator| -> f64 {
+            c.render_prometheus()
+                .lines()
+                .filter(|l| l.starts_with("icr_pool_worker_busy_seconds_total{"))
+                .filter_map(|l| l.rsplit(' ').next())
+                .filter_map(|v| v.parse::<f64>().ok())
+                .sum::<f64>()
+                * 1e6
+        };
+
+        let busy0 = busy_us(&c);
+        let start = Request::Profile { action: ProfileAction::Start { duration_ms: 60_000 } };
+        match c.call(start).unwrap() {
+            Response::Profile(v) => assert_eq!(v.get("running"), Some(&Value::Bool(true))),
+            other => panic!("{other:?}"),
+        }
+        let pending: Vec<_> =
+            (0..24).map(|i| c.submit(Request::Sample { count: 8, seed: 9_000 + i })).collect();
+        for (_, rx) in pending {
+            rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        }
+        match c.call(Request::Profile { action: ProfileAction::Stop }).unwrap() {
+            Response::Profile(v) => assert_eq!(v.get("running"), Some(&Value::Bool(false))),
+            other => panic!("{other:?}"),
+        }
+        let busy1 = busy_us(&c);
+        let dump = match c.call(Request::Profile { action: ProfileAction::Dump }).unwrap() {
+            Response::Profile(v) => v,
+            other => panic!("{other:?}"),
+        };
+        let folded = dump.get("folded").and_then(Value::as_str).unwrap().to_string();
+        assert!(folded.contains("request;queue_wait"), "{folded}");
+        let apply_cpu_us: f64 = folded
+            .lines()
+            .find(|l| l.starts_with("request;panel_apply "))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("no panel_apply line in folded dump:\n{folded}"));
+        let delta = busy1 - busy0;
+        assert!(delta > 0.0, "pool never engaged: busy {busy0} -> {busy1}\n{folded}");
+        assert!(
+            apply_cpu_us >= delta * 0.9 - 5_000.0 && apply_cpu_us <= delta * 1.1 + 5_000.0,
+            "folded panel_apply {apply_cpu_us}us vs pool busy delta {delta}us\n{folded}"
+        );
+        // Dumps survive the stop; a restart clears the aggregate.
+        let restart = Request::Profile { action: ProfileAction::Start { duration_ms: 1_000 } };
+        c.call(restart).unwrap();
+        match c.call(Request::Profile { action: ProfileAction::Dump }).unwrap() {
+            Response::Profile(v) => {
+                assert_eq!(v.get("folded").and_then(Value::as_str), Some(""))
+            }
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn with_phase_records_only_while_a_run_is_active() {
+        let c = start(1, 2);
+        let untouched = c.with_phase("request;serialize_reply", || 41 + 1);
+        assert_eq!(untouched, 42);
+        c.call(Request::Profile { action: ProfileAction::Start { duration_ms: 60_000 } })
+            .unwrap();
+        let out = c.with_phase("request;serialize_reply", || {
+            // Burn a little CPU so the recorded phase is visible.
+            let mut acc = 0u64;
+            for i in 0..100_000u64 {
+                acc = acc.wrapping_add(i).rotate_left(3);
+            }
+            acc
+        });
+        std::hint::black_box(out);
+        c.call(Request::Profile { action: ProfileAction::Stop }).unwrap();
+        match c.call(Request::Profile { action: ProfileAction::Dump }).unwrap() {
+            Response::Profile(v) => {
+                let folded = v.get("folded").and_then(Value::as_str).unwrap();
+                assert!(folded.contains("request;serialize_reply"), "{folded}");
+                // The pre-run phase was not recorded: exactly 1 sample.
+                let phases = v.get("phases").and_then(Value::as_array).unwrap();
+                let ser = phases
+                    .iter()
+                    .find(|p| {
+                        p.get("stack").and_then(Value::as_str)
+                            == Some("request;serialize_reply")
+                    })
+                    .unwrap();
+                assert_eq!(ser.get("samples").and_then(Value::as_usize), Some(1));
+            }
+            other => panic!("{other:?}"),
+        }
         c.shutdown();
     }
 }

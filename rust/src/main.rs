@@ -19,7 +19,7 @@ use icr::rng::Rng;
 use icr::runtime::PjrtRuntime;
 
 const SWITCHES: &[&str] =
-    &["help", "version", "dump-config", "dump-matrices", "rank-probe", "verbose"];
+    &["help", "version", "dump-config", "dump-matrices", "rank-probe", "verbose", "profile"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -52,6 +52,7 @@ fn run(argv: &[String]) -> Result<()> {
         ["sample"] => cmd_sample(&args),
         ["serve"] => cmd_serve(&args),
         ["infer"] => cmd_infer(&args),
+        ["bench"] => cmd_bench(&args),
         ["save", path] => cmd_save(&args, path),
         ["load", path] => cmd_load(&args, path),
         ["artifacts-check"] => cmd_artifacts_check(&args),
@@ -75,6 +76,7 @@ fn print_help() {
         ("sample", "draw GP samples via the coordinator"),
         ("serve", "JSONL server: stdio loop or concurrent tcp:/unix: socket transport"),
         ("infer", "posterior inference on synthetic observations"),
+        ("bench", "calibrated micro-bench suite; --out writes a baseline, --compare guards it"),
         ("save PATH", "save the model (optionally with a MAP posterior) as a versioned artifact"),
         ("load PATH", "restore an artifact, verify it bitwise, and serve it"),
         ("version", "print crate + protocol versions"),
@@ -108,7 +110,13 @@ fn print_help() {
         FlagSpec { name: "log-level", help: "structured-log floor: error | warn | info | debug", default: Some("info"), is_switch: false },
         FlagSpec { name: "log-format", help: "structured-log rendering: json | text", default: Some("json"), is_switch: false },
         FlagSpec { name: "log-dest", help: "structured-log sink: stderr | file:PATH", default: Some("stderr"), is_switch: false },
+        FlagSpec { name: "log-rotate-bytes", help: "rotate a file: log sink past this size (0 = never)", default: Some("0"), is_switch: false },
+        FlagSpec { name: "log-rotate-keep", help: "rotated log generations to keep (.1 newest)", default: Some("3"), is_switch: false },
         FlagSpec { name: "metrics-listen", help: "Prometheus scrape endpoint: tcp:HOST:PORT (off by default)", default: None, is_switch: false },
+        FlagSpec { name: "profile", help: "start the sampling phase profiler at boot (v2 profile op dumps it)", default: None, is_switch: true },
+        FlagSpec { name: "compare", help: "bench: baseline JSON to guard against (fails on regression)", default: None, is_switch: false },
+        FlagSpec { name: "tolerance-pct", help: "bench: allowed median slowdown vs baseline, percent", default: Some("25"), is_switch: false },
+        FlagSpec { name: "filter", help: "bench: only run benchmarks whose name contains this", default: None, is_switch: false },
         FlagSpec { name: "n", help: "target number of modeled points", default: Some("200"), is_switch: false },
         FlagSpec { name: "csz", help: "coarse pixels per window (odd ≥3)", default: Some("5"), is_switch: false },
         FlagSpec { name: "fsz", help: "fine pixels per window (even ≥2)", default: Some("4"), is_switch: false },
@@ -154,6 +162,11 @@ fn print_help() {
     println!("  per-request phase spans (query via the v2 traces op or \"trace\": true");
     println!("  on any v2 request), --log-* emits structured JSONL events, and");
     println!("  --metrics-listen serves Prometheus text format at /metrics.");
+    println!("  Profiling (§14): --profile (or the v2 profile op: start/stop/dump)");
+    println!("  samples coordinator phase occupancy into a folded collapsed-stack");
+    println!("  dump with per-phase CPU time; worker-pool busy-seconds, saturation");
+    println!("  and /proc self-stats ride along in stats + /metrics. `icr bench`");
+    println!("  records a perf baseline (--out) and guards it (--compare).");
 }
 
 fn make_coordinator(args: &Args) -> Result<(ServerConfig, Coordinator)> {
@@ -320,12 +333,11 @@ fn serve_stdio(cfg: &ServerConfig, coord: Coordinator) -> Result<()> {
         // The coordinator stashes the span-tree echo before delivering
         // the reply, so the pop after `recv` always observes it.
         let trace = if want_trace { coord.take_trace_echo(req_id) } else { None };
+        let frame = coord.with_phase("request;serialize_reply", || {
+            protocol::encode_response_traced(version, id, Some(&model), &result, trace)
+        });
         let mut out = stdout.lock();
-        writeln!(
-            out,
-            "{}",
-            protocol::encode_response_traced(version, id, Some(&model), &result, trace).to_json()
-        )?;
+        writeln!(out, "{}", frame.to_json())?;
     }
     if let Some(h) = metrics_thread {
         metrics_shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
@@ -440,6 +452,69 @@ fn cmd_infer(args: &Args) -> Result<()> {
         match resp {
             Response::Inference { field, trace } => report("", &field, &trace),
             other => bail!("unexpected response {other:?}"),
+        }
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// `icr bench`: the calibrated micro-benchmark suite behind the perf
+/// regression guard (`DESIGN.md` §14). `--out PATH` writes a
+/// machine-readable baseline; `--compare PATH` checks this run against
+/// a recorded baseline and fails when any benchmark's median is slower
+/// beyond `--tolerance-pct` (default `ICR_BENCH_TOLERANCE_PCT` or 25).
+/// Budget knobs: `ICR_BENCH_TIME_MS`, `ICR_BENCH_SAMPLES`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let (cfg, coord) = make_coordinator(args)?;
+    let mut runner = icr::bench::Runner::configured(
+        args.get("filter").map(str::to_string),
+        args.get("out").map(str::to_string),
+    );
+    let engine = coord.engine();
+    let dof = engine.total_dof();
+    eprintln!(
+        "bench: engine {} (N = {}, dof = {}) | apply_threads {}",
+        engine.name(),
+        engine.n_points(),
+        dof,
+        icr::parallel::resolve_threads(cfg.apply_threads),
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let xi1: Vec<Vec<f64>> = vec![rng.standard_normal_vec(dof)];
+    let xi8: Vec<Vec<f64>> = (0..8).map(|_| rng.standard_normal_vec(dof)).collect();
+    runner.header("icr bench");
+    runner.bench("sample/apply_sqrt/b1", || {
+        std::hint::black_box(engine.apply_sqrt_batch(&xi1).expect("apply"));
+    });
+    runner.bench("sample/apply_sqrt/b8", || {
+        std::hint::black_box(engine.apply_sqrt_batch(&xi8).expect("apply"));
+    });
+    runner.bench("rng/standard_normal_vec", || {
+        std::hint::black_box(Rng::new(cfg.seed).standard_normal_vec(dof));
+    });
+    let reply = Ok(Response::Samples(engine.apply_sqrt_batch(&xi1)?));
+    runner.bench("protocol/encode_samples", || {
+        let frame =
+            protocol::encode_response(protocol::PROTOCOL_VERSION, 1, None, &reply, None);
+        std::hint::black_box(frame.to_json());
+    });
+    if let Some(out) = args.get("out") {
+        let path = runner.dump_json(out, "icr_bench", vec![])?;
+        eprintln!("wrote baseline -> {}", path.display());
+    }
+    if let Some(base) = args.get("compare") {
+        let tolerance = args.get_f64("tolerance-pct", icr::bench::default_tolerance_pct())?;
+        let baseline = icr::bench::load_baseline(std::path::Path::new(base))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let report = icr::bench::compare(&runner.results, &baseline, tolerance);
+        print!("{}", report.render());
+        let regressed = report.regressions().len();
+        if regressed > 0 {
+            coord.shutdown();
+            bail!(
+                "{regressed} benchmark(s) regressed beyond the ±{tolerance:.0}% tolerance band \
+                 vs {base}"
+            );
         }
     }
     coord.shutdown();

@@ -550,8 +550,9 @@ fn flush_conn(c: &mut ConnState, coord: &Arc<Coordinator>, transport: &Registry)
         // id) before the completion was delivered, so the pop here
         // always observes it for explicitly traced requests.
         let trace = if want_trace { coord.take_trace_echo(req_id) } else { None };
-        let frame =
-            protocol::encode_response_traced(version, id, model.as_deref(), &result, trace);
+        let frame = coord.with_phase("request;serialize_reply", || {
+            protocol::encode_response_traced(version, id, model.as_deref(), &result, trace)
+        });
         // Counted before the write so the counter is current by the
         // time a client observes the reply (same as the threaded host).
         transport.counter("frames_out").inc();

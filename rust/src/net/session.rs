@@ -209,7 +209,9 @@ fn writer_loop(
                 // sends the reply, so the pop after `recv` always
                 // observes it for explicitly traced requests.
                 let trace = if want_trace { coord.take_trace_echo(req_id) } else { None };
-                protocol::encode_response_traced(version, id, Some(&model), &result, trace)
+                coord.with_phase("request;serialize_reply", || {
+                    protocol::encode_response_traced(version, id, Some(&model), &result, trace)
+                })
             }
         };
         outstanding.fetch_sub(1, Ordering::SeqCst);

@@ -301,13 +301,19 @@ impl NetServer {
         // Threads mode has no readiness loop to host the scrape
         // endpoint on; hand the bound socket to the blocking accept
         // thread instead (identical exposition document either way).
+        // The scrape thread gets its own stop flag, NOT the server's
+        // drain flag: scrapes must keep answering through the whole
+        // drain window (`DESIGN.md` §14) so an operator can watch
+        // in-flight work flush; it stops only after every session
+        // joined.
+        let metrics_stop = Arc::new(AtomicBool::new(false));
         let metrics_thread = match self.metrics_listener.take() {
             Some(l) => {
                 let coord = self.coord.clone();
                 Some(
                     crate::obs::spawn_metrics_listener(
                         l,
-                        self.shutdown.clone(),
+                        metrics_stop.clone(),
                         Arc::new(move || coord.render_prometheus()),
                     )
                     .context("spawning metrics listener")?,
@@ -361,9 +367,9 @@ impl NetServer {
             let _ = h.join();
         }
         if let Some(h) = metrics_thread {
-            // A SIGINT drain never stored the programmatic flag; set it
-            // so the scrape thread observes the shutdown and exits.
-            self.shutdown.store(true, Ordering::SeqCst);
+            // Every session has flushed — only now stop the scrape
+            // thread, so metrics stayed observable for the entire drain.
+            metrics_stop.store(true, Ordering::SeqCst);
             let _ = h.join();
         }
         if let Some(path) = &self.unix_path {

@@ -6,7 +6,9 @@
 //! event-specific fields. `--log-format text` renders the same events
 //! human-first. Events below `--log-level` are counted but not
 //! written; `--log-dest file:PATH` appends to a file instead of
-//! stderr.
+//! stderr, with optional size-based rotation (`--log-rotate-bytes`
+//! plus `--log-rotate-keep` generations) so long-running serve
+//! processes don't grow an unbounded event log.
 //!
 //! This replaces ad-hoc `eprintln!` diagnostics for runtime state
 //! changes (member ejected/restored, breaker transitions, failover
@@ -92,10 +94,64 @@ impl LogDest {
     }
 }
 
+/// Default rotated generations kept alongside the live file
+/// (`PATH.1` newest … `PATH.N` oldest).
+pub const DEFAULT_LOG_ROTATE_KEEP: usize = 3;
+
+/// A file sink with optional size-based rotation. `rotate_bytes == 0`
+/// disables rotation (the pre-rotation behavior: unbounded append).
+#[derive(Debug)]
+struct FileSink {
+    file: File,
+    path: PathBuf,
+    size: u64,
+    rotate_bytes: u64,
+    keep: usize,
+}
+
+impl FileSink {
+    fn open(path: &PathBuf, rotate_bytes: u64, keep: usize) -> io::Result<FileSink> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        let size = file.metadata().map(|m| m.len()).unwrap_or(0);
+        Ok(FileSink { file, path: path.clone(), size, rotate_bytes, keep: keep.max(1) })
+    }
+
+    /// Shift `PATH.{keep-1}` → `PATH.keep` … `PATH` → `PATH.1` and
+    /// reopen a fresh live file. Best-effort: a failed rename keeps
+    /// logging to the current file rather than losing events.
+    fn rotate(&mut self) {
+        let _ = self.file.flush();
+        let numbered = |i: usize| {
+            let mut os = self.path.clone().into_os_string();
+            os.push(format!(".{i}"));
+            PathBuf::from(os)
+        };
+        let _ = std::fs::remove_file(numbered(self.keep));
+        for i in (1..self.keep).rev() {
+            let _ = std::fs::rename(numbered(i), numbered(i + 1));
+        }
+        let _ = std::fs::rename(&self.path, numbered(1));
+        if let Ok(f) = OpenOptions::new().create(true).append(true).open(&self.path) {
+            self.file = f;
+            self.size = 0;
+        }
+    }
+
+    fn write_line(&mut self, line: &str) {
+        let len = line.len() as u64 + 1;
+        if self.rotate_bytes > 0 && self.size + len > self.rotate_bytes && self.size > 0 {
+            self.rotate();
+        }
+        let _ = writeln!(self.file, "{line}");
+        let _ = self.file.flush();
+        self.size += len;
+    }
+}
+
 #[derive(Debug)]
 enum Sink {
     Stderr,
-    File(Mutex<File>),
+    File(Mutex<FileSink>),
 }
 
 /// Thread-safe leveled logger. Cheap to call on the suppressed path:
@@ -111,11 +167,22 @@ pub struct Logger {
 
 impl Logger {
     pub fn new(max: Level, format: LogFormat, dest: &LogDest) -> io::Result<Logger> {
+        Logger::with_rotation(max, format, dest, 0, DEFAULT_LOG_ROTATE_KEEP)
+    }
+
+    /// Like [`Logger::new`] with size-based rotation for file sinks:
+    /// once the live file would exceed `rotate_bytes` (0 = never), it
+    /// is rotated to `PATH.1` … `PATH.keep` before the write.
+    pub fn with_rotation(
+        max: Level,
+        format: LogFormat,
+        dest: &LogDest,
+        rotate_bytes: u64,
+        keep: usize,
+    ) -> io::Result<Logger> {
         let sink = match dest {
             LogDest::Stderr => Sink::Stderr,
-            LogDest::File(p) => {
-                Sink::File(Mutex::new(OpenOptions::new().create(true).append(true).open(p)?))
-            }
+            LogDest::File(p) => Sink::File(Mutex::new(FileSink::open(p, rotate_bytes, keep)?)),
         };
         Ok(Logger {
             max,
@@ -179,11 +246,7 @@ impl Logger {
             Sink::Stderr => {
                 let _ = writeln!(io::stderr().lock(), "{line}");
             }
-            Sink::File(f) => {
-                let mut g = f.lock().unwrap();
-                let _ = writeln!(g, "{line}");
-                let _ = g.flush();
-            }
+            Sink::File(f) => f.lock().unwrap().write_line(&line),
         }
         self.emitted.fetch_add(1, Ordering::Relaxed);
     }
@@ -295,6 +358,72 @@ mod tests {
         let second = Value::parse(lines[1]).unwrap();
         assert_eq!(second.get("level").and_then(Value::as_str), Some("warn"));
         assert_eq!(second.get("trace_id").and_then(Value::as_str), Some("t-abc"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn rotation_caps_live_file_and_keeps_n_generations() {
+        let p = temp_path("rotate");
+        let numbered = |i: usize| PathBuf::from(format!("{}.{i}", p.display()));
+        // ~120-byte lines against a 300-byte cap: every third-ish write
+        // rotates. keep=2 generations.
+        let log = Logger::with_rotation(
+            Level::Info,
+            LogFormat::Json,
+            &LogDest::File(p.clone()),
+            300,
+            2,
+        )
+        .unwrap();
+        for i in 0..20 {
+            log.info("fill", vec![("i", json::num(i as f64)), ("pad", json::s(&"x".repeat(60)))]);
+        }
+        assert_eq!(log.emitted_count(), 20, "rotation must not drop events");
+        let live = std::fs::metadata(&p).expect("live file").len();
+        assert!(live <= 300, "live file exceeded the rotation cap: {live}");
+        assert!(numbered(1).exists(), "first rotated generation missing");
+        assert!(numbered(2).exists(), "second rotated generation missing");
+        assert!(!numbered(3).exists(), "keep=2 must not leave a third generation");
+        // Rotated generations hold complete JSONL lines.
+        let gen1 = std::fs::read_to_string(numbered(1)).unwrap();
+        assert!(!gen1.is_empty());
+        for line in gen1.lines() {
+            Value::parse(line).expect("rotated line parses");
+        }
+        for path in [p, numbered(1), numbered(2)] {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn rotation_disabled_appends_unbounded() {
+        let p = temp_path("norotate");
+        let log = Logger::new(Level::Info, LogFormat::Json, &LogDest::File(p.clone())).unwrap();
+        for _ in 0..50 {
+            log.info("fill", vec![("pad", json::s(&"y".repeat(40)))]);
+        }
+        assert!(std::fs::metadata(&p).unwrap().len() > 1000, "all lines in one file");
+        assert!(!PathBuf::from(format!("{}.1", p.display())).exists());
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn rotation_resumes_size_accounting_across_reopen() {
+        let p = temp_path("resume");
+        fn rotating(p: &PathBuf) -> Logger {
+            Logger::with_rotation(Level::Info, LogFormat::Json, &LogDest::File(p.clone()), 200, 2)
+                .unwrap()
+        }
+        {
+            let log = rotating(&p);
+            log.info("first", vec![("pad", json::s(&"z".repeat(100)))]);
+        }
+        // A new logger on the same path must see the existing size and
+        // rotate rather than blowing past the cap.
+        let log = rotating(&p);
+        log.info("second", vec![("pad", json::s(&"z".repeat(100)))]);
+        assert!(PathBuf::from(format!("{}.1", p.display())).exists(), "reopen lost the size");
+        let _ = std::fs::remove_file(PathBuf::from(format!("{}.1", p.display())));
         let _ = std::fs::remove_file(p);
     }
 

@@ -1,29 +1,40 @@
-//! Observability layer: request tracing, structured event log, and
-//! Prometheus metrics exposition (DESIGN.md §13).
+//! Observability layer: request tracing, structured event log,
+//! Prometheus metrics exposition (DESIGN.md §13), and the continuous
+//! profiling / resource accounting layer on top (DESIGN.md §14).
 //!
-//! Three composing pieces, all dependency-free:
+//! Five composing pieces, all dependency-free:
 //! - [`trace`] — per-request phase spans with cluster propagation,
 //!   head sampling, slow/error capture, and a bounded ring queried
 //!   via the protocol-v2 `traces` op or echoed with `"trace": true`.
 //! - [`log`] — leveled JSONL/text event log for runtime state
 //!   changes (ejections, breaker transitions, failovers, reloads,
-//!   fault injections, slow requests).
+//!   fault injections, slow requests), with size-based rotation for
+//!   file destinations.
 //! - [`prom`] — Prometheus text-format rendering of the metrics
 //!   registries plus the minimal HTTP responder behind
 //!   `--metrics-listen`.
+//! - [`profile`] — thread CPU-time attribution for phase spans and
+//!   the sampling phase profiler behind the v2 `profile` op.
+//! - [`resource`] — `/proc/self` process self-stats (RSS, threads,
+//!   fds, context switches) with peak tracking.
 //!
 //! One [`Obs`] instance is owned by the coordinator's shared state
 //! and threaded to every subsystem that needs it.
 
 pub mod log;
+pub mod profile;
 pub mod prom;
+pub mod resource;
 pub mod trace;
 
 pub use self::log::{Level, LogDest, LogFormat, Logger};
+pub use self::profile::{cpu_delta_us, thread_cpu_ns, PhaseProfiler};
 pub use self::prom::{handle_http, render_prometheus, spawn_metrics_listener, Scope};
 pub(crate) use self::prom::serve_scrape;
+pub use self::resource::{ResourceMonitor, SelfStats};
 pub use self::trace::{
-    append_span, ActiveTrace, Span, TraceFinish, Tracer, DEFAULT_RING_CAP, ROOT_SPAN,
+    append_span, append_span_cpu, ActiveTrace, Span, TraceFinish, Tracer, DEFAULT_RING_CAP,
+    ROOT_SPAN,
 };
 
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
@@ -39,18 +50,28 @@ pub fn unix_ms() -> u64 {
         .unwrap_or(0)
 }
 
-/// The process's observability bundle: tracer + logger + start times.
+/// The process's observability bundle: tracer + logger + profiler +
+/// resource monitor + start times.
 #[derive(Debug)]
 pub struct Obs {
     pub tracer: Tracer,
     pub log: Logger,
+    pub profiler: PhaseProfiler,
+    pub resource: ResourceMonitor,
     pub started_at: Instant,
     pub started_unix_ms: u64,
 }
 
 impl Obs {
     pub fn new(tracer: Tracer, log: Logger) -> Obs {
-        Obs { tracer, log, started_at: Instant::now(), started_unix_ms: unix_ms() }
+        Obs {
+            tracer,
+            log,
+            profiler: PhaseProfiler::new(),
+            resource: ResourceMonitor::new(),
+            started_at: Instant::now(),
+            started_unix_ms: unix_ms(),
+        }
     }
 
     /// Build from the resolved server config. The config layer has
@@ -62,7 +83,15 @@ impl Obs {
         let level = Level::parse(&cfg.log_level).unwrap_or(Level::Info);
         let format = LogFormat::parse(&cfg.log_format).unwrap_or(LogFormat::Json);
         let dest = LogDest::parse(&cfg.log_dest).unwrap_or(LogDest::Stderr);
-        Ok(Obs::new(tracer, Logger::new(level, format, &dest)?))
+        let log =
+            Logger::with_rotation(level, format, &dest, cfg.log_rotate_bytes, cfg.log_rotate_keep)?;
+        let obs = Obs::new(tracer, log);
+        if cfg.profile {
+            // Boot-armed continuous profiling: unbounded run, stopped
+            // (or restarted) via the v2 `profile` op.
+            obs.profiler.start(0);
+        }
+        Ok(obs)
     }
 
     /// Inert bundle: tracing off, logging off. Used by tests and

@@ -1,0 +1,424 @@
+//! Continuous profiling: thread CPU-time attribution and the sampling
+//! phase profiler behind the protocol-v2 `profile` op (DESIGN.md §14).
+//!
+//! Two composing pieces, both dependency-free:
+//!
+//! - **CPU clocks** — [`thread_cpu_ns`] / [`process_cpu_ns`] read
+//!   `CLOCK_THREAD_CPUTIME_ID` / `CLOCK_PROCESS_CPUTIME_ID` through a
+//!   locally declared `clock_gettime` (no libc crate). On platforms
+//!   without thread cputime the readers return `0`, and every consumer
+//!   goes through saturating deltas ([`cpu_delta_us`]) so attributed
+//!   CPU time is *zero, never negative* — a trace on such a platform
+//!   simply shows wall time only.
+//! - **[`PhaseProfiler`]** — an opt-in aggregator of coordinator phase
+//!   occupancy (`request;panel_apply`, `request;remote_wire`, …). Each
+//!   completed phase contributes one sample with its wall and CPU
+//!   microseconds; `dump` renders the aggregate as collapsed-stack
+//!   ("folded") text where the count is **CPU microseconds**, directly
+//!   consumable by flamegraph tooling. Recording is one relaxed atomic
+//!   load when the profiler is off; runs are bounded in duration and
+//!   in distinct stacks.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::{self, Value};
+
+// ---------------------------------------------------------------------------
+// Thread/process CPU clocks.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod clock {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+
+    // Declared locally so the crate needs no libc dependency.
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+
+    const CLOCK_PROCESS_CPUTIME_ID: i32 = 2;
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+    fn read_ns(clockid: i32) -> u64 {
+        let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+        // SAFETY: `ts` is a valid, live timespec; the kernel writes it
+        // on success and we ignore the value on failure.
+        let rc = unsafe { clock_gettime(clockid, &mut ts) };
+        if rc != 0 {
+            return 0;
+        }
+        (ts.tv_sec.max(0) as u64)
+            .saturating_mul(1_000_000_000)
+            .saturating_add(ts.tv_nsec.max(0) as u64)
+    }
+
+    /// CPU nanoseconds consumed by the calling thread (0 on error).
+    pub fn thread_cpu_ns() -> u64 {
+        read_ns(CLOCK_THREAD_CPUTIME_ID)
+    }
+
+    /// CPU nanoseconds consumed by the whole process (0 on error).
+    pub fn process_cpu_ns() -> u64 {
+        read_ns(CLOCK_PROCESS_CPUTIME_ID)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod clock {
+    /// Portable fallback: no thread cputime clock — report zero so CPU
+    /// attribution degrades to "unknown", never to a negative value.
+    pub fn thread_cpu_ns() -> u64 {
+        0
+    }
+
+    /// Portable fallback (see [`thread_cpu_ns`]).
+    pub fn process_cpu_ns() -> u64 {
+        0
+    }
+}
+
+pub use clock::{process_cpu_ns, thread_cpu_ns};
+
+/// Saturating CPU delta in microseconds between two clock readings.
+/// Returns 0 when either reading is unavailable or the clock stepped
+/// backwards — attributed CPU time is never negative.
+pub fn cpu_delta_us(start_ns: u64, end_ns: u64) -> u64 {
+    if start_ns == 0 || end_ns == 0 {
+        return 0;
+    }
+    end_ns.saturating_sub(start_ns) / 1_000
+}
+
+// ---------------------------------------------------------------------------
+// The sampling phase profiler.
+// ---------------------------------------------------------------------------
+
+/// Distinct stacks a run may accumulate; later stacks are dropped (and
+/// counted) so a pathological caller cannot grow the map unboundedly.
+pub const PROFILE_MAX_STACKS: usize = 64;
+
+/// `profile start` duration when the client names none.
+pub const PROFILE_DEFAULT_DURATION_MS: u64 = 60_000;
+
+/// Hard cap on a client-requested run duration (10 minutes).
+pub const PROFILE_MAX_DURATION_MS: u64 = 600_000;
+
+#[derive(Debug, Default)]
+struct PhaseAgg {
+    samples: u64,
+    wall_us: u64,
+    cpu_us: u64,
+}
+
+#[derive(Debug, Default)]
+struct ProfInner {
+    started_unix_ms: u64,
+    duration_ms: u64,
+    stacks: BTreeMap<String, PhaseAgg>,
+}
+
+/// Aggregates coordinator phase occupancy into folded stacks. One
+/// instance lives in [`super::Obs`]; the serving hot paths call
+/// [`PhaseProfiler::record`] after each phase, which is a single
+/// relaxed load while no run is active.
+#[derive(Debug, Default)]
+pub struct PhaseProfiler {
+    running: AtomicBool,
+    /// Wall-clock deadline (unix ms) after which the run self-stops;
+    /// 0 = unbounded (the `--profile` boot mode).
+    deadline_unix_ms: AtomicU64,
+    dropped: AtomicU64,
+    inner: Mutex<ProfInner>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> PhaseProfiler {
+        PhaseProfiler::default()
+    }
+
+    /// Whether a run is active — the cheap gate call sites check before
+    /// paying for CPU-clock reads.
+    pub fn running(&self) -> bool {
+        self.running.load(Ordering::Relaxed)
+    }
+
+    /// Start (or restart) a run, clearing any previous aggregate.
+    /// `duration_ms == 0` means unbounded (boot `--profile`); client
+    /// runs are clamped to [`PROFILE_MAX_DURATION_MS`].
+    pub fn start(&self, duration_ms: u64) -> Value {
+        let duration_ms = if duration_ms == 0 {
+            0
+        } else {
+            duration_ms.min(PROFILE_MAX_DURATION_MS)
+        };
+        let now = super::unix_ms();
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.started_unix_ms = now;
+            g.duration_ms = duration_ms;
+            g.stacks.clear();
+        }
+        self.dropped.store(0, Ordering::Relaxed);
+        let deadline = if duration_ms == 0 { 0 } else { now.saturating_add(duration_ms) };
+        self.deadline_unix_ms.store(deadline, Ordering::Relaxed);
+        self.running.store(true, Ordering::Relaxed);
+        self.status_json()
+    }
+
+    /// Stop the current run (the aggregate stays dumpable).
+    pub fn stop(&self) -> Value {
+        self.running.store(false, Ordering::Relaxed);
+        self.status_json()
+    }
+
+    /// Record one completed phase occupancy sample. `stack` is a
+    /// `;`-separated folded frame path (e.g. `request;panel_apply`).
+    pub fn record(&self, stack: &str, wall_us: u64, cpu_us: u64) {
+        if !self.running.load(Ordering::Relaxed) {
+            return;
+        }
+        let deadline = self.deadline_unix_ms.load(Ordering::Relaxed);
+        if deadline != 0 && super::unix_ms() > deadline {
+            // Bounded run expired: self-stop, drop the sample.
+            self.running.store(false, Ordering::Relaxed);
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if let Some(agg) = g.stacks.get_mut(stack) {
+            agg.samples += 1;
+            agg.wall_us = agg.wall_us.saturating_add(wall_us);
+            agg.cpu_us = agg.cpu_us.saturating_add(cpu_us);
+        } else if g.stacks.len() < PROFILE_MAX_STACKS {
+            g.stacks.insert(stack.to_string(), PhaseAgg { samples: 1, wall_us, cpu_us });
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Render the current aggregate as collapsed-stack text: one
+    /// `stack count` line per phase where the count is CPU µs (stacks
+    /// are iterated in sorted order, so the dump is deterministic for
+    /// a fixed aggregate).
+    pub fn folded(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (stack, agg) in &g.stacks {
+            out.push_str(stack);
+            out.push(' ');
+            out.push_str(&agg.cpu_us.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The full dump document served by the `profile` op: run status,
+    /// the folded text, and a structured per-phase breakdown.
+    pub fn dump(&self) -> Value {
+        let folded = self.folded();
+        let g = self.inner.lock().unwrap();
+        let phases: Vec<Value> = g
+            .stacks
+            .iter()
+            .map(|(stack, agg)| {
+                json::obj(vec![
+                    ("stack", json::s(stack)),
+                    ("samples", json::num(agg.samples as f64)),
+                    ("wall_us", json::num(agg.wall_us as f64)),
+                    ("cpu_us", json::num(agg.cpu_us as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("running", Value::Bool(self.running())),
+            ("started_unix_ms", json::num(g.started_unix_ms as f64)),
+            ("duration_ms", json::num(g.duration_ms as f64)),
+            ("dropped_stacks", json::num(self.dropped.load(Ordering::Relaxed) as f64)),
+            ("folded", json::s(&folded)),
+            ("phases", json::arr(phases)),
+        ])
+    }
+
+    /// Compact status (the `start`/`stop` reply and the stats
+    /// `observability.profile` subsection).
+    pub fn status_json(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        json::obj(vec![
+            ("running", Value::Bool(self.running())),
+            ("started_unix_ms", json::num(g.started_unix_ms as f64)),
+            ("duration_ms", json::num(g.duration_ms as f64)),
+            ("phases", json::num(g.stacks.len() as f64)),
+            ("dropped_stacks", json::num(self.dropped.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Append the worker-pool telemetry families to a Prometheus
+/// exposition document (`icr_pool_worker_busy_seconds_total{worker=…}`,
+/// `icr_pool_dispatches_total`, `icr_pool_saturation`,
+/// `icr_pool_imbalance`). `busy_ns` is per execution lane, lane 0
+/// being the submitting thread.
+pub fn render_pool_prometheus(
+    out: &mut String,
+    busy_ns: &[u64],
+    dispatches: u64,
+    saturation: f64,
+    imbalance_last: f64,
+    imbalance_mean: f64,
+) {
+    use std::fmt::Write as _;
+    let fin = |v: f64| if v.is_finite() { v } else { 0.0 };
+    let _ = writeln!(
+        out,
+        "# HELP icr_pool_worker_busy_seconds_total Busy time per pool lane (0 = submitter)."
+    );
+    let _ = writeln!(out, "# TYPE icr_pool_worker_busy_seconds_total counter");
+    for (lane, ns) in busy_ns.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "icr_pool_worker_busy_seconds_total{{worker=\"{lane}\"}} {:.6}",
+            *ns as f64 / 1e9
+        );
+    }
+    let _ = writeln!(out, "# HELP icr_pool_dispatches_total Parallel sections dispatched.");
+    let _ = writeln!(out, "# TYPE icr_pool_dispatches_total counter");
+    let _ = writeln!(out, "icr_pool_dispatches_total {dispatches}");
+    let _ = writeln!(
+        out,
+        "# HELP icr_pool_saturation Lifetime busy fraction (busy / lanes x age), 0..1."
+    );
+    let _ = writeln!(out, "# TYPE icr_pool_saturation gauge");
+    let _ = writeln!(out, "icr_pool_saturation {:.6}", fin(saturation));
+    let _ = writeln!(
+        out,
+        "# HELP icr_pool_imbalance Max/mean per-lane busy ratio of the last dispatch."
+    );
+    let _ = writeln!(out, "# TYPE icr_pool_imbalance gauge");
+    let _ = writeln!(out, "icr_pool_imbalance {:.3}", fin(imbalance_last));
+    let _ = writeln!(
+        out,
+        "# HELP icr_pool_imbalance_mean Mean max/mean busy ratio across dispatches."
+    );
+    let _ = writeln!(out, "# TYPE icr_pool_imbalance_mean gauge");
+    let _ = writeln!(out, "icr_pool_imbalance_mean {:.3}", fin(imbalance_mean));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_clock_is_monotone_and_delta_never_negative() {
+        let a = thread_cpu_ns();
+        // Burn a little CPU so the clock has a chance to advance.
+        let mut acc = 0u64;
+        for i in 0..200_000u64 {
+            acc = acc.wrapping_add(i).rotate_left(7);
+        }
+        std::hint::black_box(acc);
+        let b = thread_cpu_ns();
+        // Either the platform has the clock (monotone) or both are the
+        // zero fallback; in every case the delta is non-negative.
+        assert!(b >= a, "thread cputime went backwards: {a} -> {b}");
+        let d = cpu_delta_us(a, b);
+        assert!(d < 60_000_000, "absurd cpu delta {d}us");
+        // The zero fallback and a backwards step both clamp to 0.
+        assert_eq!(cpu_delta_us(0, 5_000), 0);
+        assert_eq!(cpu_delta_us(5_000, 0), 0);
+        assert_eq!(cpu_delta_us(9_000, 4_000), 0);
+        // Process cputime covers thread cputime when both exist.
+        let p = process_cpu_ns();
+        assert!(p == 0 || p >= b / 2, "process cputime implausibly small");
+    }
+
+    #[test]
+    fn profiler_off_records_nothing() {
+        let p = PhaseProfiler::new();
+        assert!(!p.running());
+        p.record("request;panel_apply", 100, 50);
+        assert_eq!(p.folded(), "");
+        let doc = p.dump();
+        assert_eq!(doc.get("running"), Some(&Value::Bool(false)));
+        assert_eq!(doc.get("phases").and_then(Value::as_array).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn start_record_dump_roundtrip_with_folded_counts() {
+        let p = PhaseProfiler::new();
+        p.start(0);
+        assert!(p.running());
+        p.record("request;panel_apply", 100, 70);
+        p.record("request;panel_apply", 50, 30);
+        p.record("request;remote_wire", 900, 2);
+        let folded = p.folded();
+        assert!(folded.contains("request;panel_apply 100"), "{folded}");
+        assert!(folded.contains("request;remote_wire 2"), "{folded}");
+        let doc = p.dump();
+        let phases = doc.get("phases").and_then(Value::as_array).unwrap();
+        assert_eq!(phases.len(), 2);
+        let apply = phases
+            .iter()
+            .find(|ph| ph.get("stack").and_then(Value::as_str) == Some("request;panel_apply"))
+            .unwrap();
+        assert_eq!(apply.get("samples").and_then(Value::as_usize), Some(2));
+        assert_eq!(apply.get("wall_us").and_then(Value::as_usize), Some(150));
+        assert_eq!(apply.get("cpu_us").and_then(Value::as_usize), Some(100));
+        // stop freezes the aggregate but keeps it dumpable
+        p.stop();
+        assert!(!p.running());
+        p.record("request;panel_apply", 1000, 1000);
+        assert!(p.folded().contains("request;panel_apply 100"));
+        // restart clears
+        p.start(1000);
+        assert_eq!(p.folded(), "");
+    }
+
+    #[test]
+    fn stack_cap_drops_and_counts_overflow() {
+        let p = PhaseProfiler::new();
+        p.start(0);
+        for i in 0..(PROFILE_MAX_STACKS + 5) {
+            p.record(&format!("request;phase_{i}"), 1, 1);
+        }
+        let doc = p.dump();
+        let phases = doc.get("phases").and_then(Value::as_array).unwrap();
+        assert_eq!(phases.len(), PROFILE_MAX_STACKS);
+        assert_eq!(doc.get("dropped_stacks").and_then(Value::as_usize), Some(5));
+    }
+
+    #[test]
+    fn bounded_run_self_stops_after_deadline() {
+        let p = PhaseProfiler::new();
+        let status = p.start(1);
+        assert_eq!(status.get("duration_ms").and_then(Value::as_usize), Some(1));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        p.record("request;late", 1, 1);
+        assert!(!p.running(), "deadline must self-stop the run");
+        assert_eq!(p.folded(), "", "post-deadline samples are dropped");
+        // Client durations are clamped to the hard cap.
+        let status = p.start(PROFILE_MAX_DURATION_MS * 10);
+        assert_eq!(
+            status.get("duration_ms").and_then(Value::as_usize),
+            Some(PROFILE_MAX_DURATION_MS as usize)
+        );
+    }
+
+    #[test]
+    fn pool_prometheus_rendering_is_well_formed() {
+        let mut out = String::new();
+        render_pool_prometheus(&mut out, &[1_500_000_000, 900_000_000], 42, 0.37, 1.25, f64::NAN);
+        assert!(out.contains("icr_pool_worker_busy_seconds_total{worker=\"0\"} 1.500000"), "{out}");
+        assert!(out.contains("icr_pool_worker_busy_seconds_total{worker=\"1\"} 0.900000"), "{out}");
+        assert!(out.contains("# TYPE icr_pool_worker_busy_seconds_total counter"), "{out}");
+        assert!(out.contains("icr_pool_dispatches_total 42"), "{out}");
+        assert!(out.contains("icr_pool_saturation 0.370000"), "{out}");
+        assert!(out.contains("icr_pool_imbalance 1.250"), "{out}");
+        assert!(out.contains("icr_pool_imbalance_mean 0.000"), "no NaN leak: {out}");
+        assert!(!out.contains("NaN"), "{out}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Process self-stats: RSS, threads, fds, context switches
+//! (DESIGN.md §14).
+//!
+//! A [`sample`] reads `/proc/self/statm` (resident pages × page size)
+//! and `/proc/self/status` (`Threads`, `voluntary_ctxt_switches`,
+//! `nonvoluntary_ctxt_switches`), counts `/proc/self/fd`, and pairs
+//! the result with the process CPU clock. Off Linux every field is
+//! zero — consumers render zeros rather than guessing.
+//!
+//! The [`ResourceMonitor`] wraps sampling with peak-RSS tracking: the
+//! coordinator's monitor thread ticks it periodically so the peak is
+//! honest even when nobody scrapes, and the stats document / scrape
+//! path tick it again for a fresh snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::json::{self, Value};
+
+/// One snapshot of the process's resource usage. All zeros when the
+/// platform offers no `/proc` (the portable fallback).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SelfStats {
+    pub rss_bytes: u64,
+    pub vm_bytes: u64,
+    pub threads: u64,
+    pub open_fds: u64,
+    pub voluntary_ctxt_switches: u64,
+    pub involuntary_ctxt_switches: u64,
+    pub process_cpu_s: f64,
+}
+
+#[cfg(target_os = "linux")]
+fn page_size() -> u64 {
+    // Declared locally so the crate needs no libc dependency.
+    extern "C" {
+        fn sysconf(name: i32) -> i64;
+    }
+    const SC_PAGESIZE: i32 = 30;
+    // SAFETY: sysconf is async-signal-safe and takes no pointers.
+    let sz = unsafe { sysconf(SC_PAGESIZE) };
+    if sz > 0 {
+        sz as u64
+    } else {
+        4096
+    }
+}
+
+/// Take one snapshot (zeros off Linux, see module docs).
+#[cfg(target_os = "linux")]
+pub fn sample() -> SelfStats {
+    let mut out = SelfStats {
+        process_cpu_s: super::profile::process_cpu_ns() as f64 / 1e9,
+        ..SelfStats::default()
+    };
+    if let Ok(statm) = std::fs::read_to_string("/proc/self/statm") {
+        let mut fields = statm.split_whitespace();
+        let pages = page_size();
+        if let Some(vm) = fields.next().and_then(|v| v.parse::<u64>().ok()) {
+            out.vm_bytes = vm.saturating_mul(pages);
+        }
+        if let Some(rss) = fields.next().and_then(|v| v.parse::<u64>().ok()) {
+            out.rss_bytes = rss.saturating_mul(pages);
+        }
+    }
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            let mut kv = line.splitn(2, ':');
+            let (Some(key), Some(rest)) = (kv.next(), kv.next()) else { continue };
+            let num = || rest.split_whitespace().next().and_then(|v| v.parse::<u64>().ok());
+            match key {
+                "Threads" => out.threads = num().unwrap_or(0),
+                "voluntary_ctxt_switches" => out.voluntary_ctxt_switches = num().unwrap_or(0),
+                "nonvoluntary_ctxt_switches" => out.involuntary_ctxt_switches = num().unwrap_or(0),
+                _ => {}
+            }
+        }
+    }
+    if let Ok(dir) = std::fs::read_dir("/proc/self/fd") {
+        out.open_fds = dir.count() as u64;
+    }
+    out
+}
+
+/// Take one snapshot (portable fallback: all zeros).
+#[cfg(not(target_os = "linux"))]
+pub fn sample() -> SelfStats {
+    SelfStats::default()
+}
+
+impl SelfStats {
+    /// Stats-document rendering (`observability.process`).
+    pub fn to_json(&self, peak_rss_bytes: u64) -> Value {
+        json::obj(vec![
+            ("rss_bytes", json::num(self.rss_bytes as f64)),
+            ("peak_rss_bytes", json::num(peak_rss_bytes as f64)),
+            ("vm_bytes", json::num(self.vm_bytes as f64)),
+            ("threads", json::num(self.threads as f64)),
+            ("open_fds", json::num(self.open_fds as f64)),
+            ("voluntary_ctxt_switches", json::num(self.voluntary_ctxt_switches as f64)),
+            ("involuntary_ctxt_switches", json::num(self.involuntary_ctxt_switches as f64)),
+            ("process_cpu_s", json::num(self.process_cpu_s)),
+        ])
+    }
+}
+
+/// Periodically-ticked resource sampler with peak-RSS tracking.
+#[derive(Debug, Default)]
+pub struct ResourceMonitor {
+    peak_rss_bytes: AtomicU64,
+    ticks: AtomicU64,
+}
+
+impl ResourceMonitor {
+    pub fn new() -> ResourceMonitor {
+        ResourceMonitor::default()
+    }
+
+    /// Sample now, fold the RSS into the peak, return the snapshot.
+    pub fn tick(&self) -> SelfStats {
+        let s = sample();
+        self.peak_rss_bytes.fetch_max(s.rss_bytes, Ordering::Relaxed);
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        s
+    }
+
+    pub fn peak_rss_bytes(&self) -> u64 {
+        self.peak_rss_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+}
+
+/// Append the process self-stat families to a Prometheus exposition
+/// document.
+pub fn render_process_prometheus(out: &mut String, s: &SelfStats, peak_rss_bytes: u64) {
+    use std::fmt::Write as _;
+    let gauge = |out: &mut String, name: &str, help: &str, v: f64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {}", if v.is_finite() { v } else { 0.0 });
+    };
+    gauge(out, "icr_process_resident_memory_bytes", "Resident set size.", s.rss_bytes as f64);
+    let peak = peak_rss_bytes as f64;
+    gauge(out, "icr_process_peak_resident_memory_bytes", "Peak observed RSS.", peak);
+    gauge(out, "icr_process_virtual_memory_bytes", "Virtual memory size.", s.vm_bytes as f64);
+    gauge(out, "icr_process_threads", "OS threads in the process.", s.threads as f64);
+    gauge(out, "icr_process_open_fds", "Open file descriptors.", s.open_fds as f64);
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    counter(
+        out,
+        "icr_process_voluntary_ctxt_switches_total",
+        "Voluntary context switches.",
+        s.voluntary_ctxt_switches,
+    );
+    counter(
+        out,
+        "icr_process_involuntary_ctxt_switches_total",
+        "Involuntary context switches.",
+        s.involuntary_ctxt_switches,
+    );
+    let _ = writeln!(out, "# HELP icr_process_cpu_seconds_total Process CPU time.");
+    let _ = writeln!(out, "# TYPE icr_process_cpu_seconds_total counter");
+    let _ = writeln!(
+        out,
+        "icr_process_cpu_seconds_total {:.6}",
+        if s.process_cpu_s.is_finite() { s.process_cpu_s } else { 0.0 }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_is_sane_on_linux_and_zero_elsewhere() {
+        let s = sample();
+        if cfg!(target_os = "linux") {
+            assert!(s.rss_bytes > 0, "no RSS read from /proc/self/statm");
+            assert!(s.vm_bytes >= s.rss_bytes);
+            assert!(s.threads >= 1);
+            assert!(s.open_fds >= 1, "at least stdio should be open");
+        } else {
+            assert_eq!(s, SelfStats::default());
+        }
+    }
+
+    #[test]
+    fn monitor_tracks_peak_rss() {
+        let m = ResourceMonitor::new();
+        assert_eq!(m.peak_rss_bytes(), 0);
+        let s = m.tick();
+        assert_eq!(m.ticks(), 1);
+        assert!(m.peak_rss_bytes() >= s.rss_bytes);
+        m.tick();
+        assert_eq!(m.ticks(), 2);
+    }
+
+    #[test]
+    fn json_and_prometheus_rendering_are_well_formed() {
+        let s = SelfStats {
+            rss_bytes: 1024,
+            vm_bytes: 2048,
+            threads: 3,
+            open_fds: 7,
+            voluntary_ctxt_switches: 11,
+            involuntary_ctxt_switches: 13,
+            process_cpu_s: 0.25,
+        };
+        let doc = s.to_json(4096);
+        assert_eq!(doc.get("rss_bytes").and_then(Value::as_usize), Some(1024));
+        assert_eq!(doc.get("peak_rss_bytes").and_then(Value::as_usize), Some(4096));
+        assert_eq!(doc.get("threads").and_then(Value::as_usize), Some(3));
+        let mut out = String::new();
+        render_process_prometheus(&mut out, &s, 4096);
+        assert!(out.contains("icr_process_resident_memory_bytes 1024"), "{out}");
+        assert!(out.contains("icr_process_peak_resident_memory_bytes 4096"), "{out}");
+        assert!(out.contains("icr_process_open_fds 7"), "{out}");
+        assert!(out.contains("icr_process_voluntary_ctxt_switches_total 11"), "{out}");
+        assert!(out.contains("icr_process_involuntary_ctxt_switches_total 13"), "{out}");
+        assert!(out.contains("icr_process_cpu_seconds_total 0.250000"), "{out}");
+        assert!(!out.contains("NaN"), "{out}");
+    }
+}

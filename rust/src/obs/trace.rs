@@ -38,6 +38,10 @@ const ECHO_CAP: usize = 1024;
 /// One recorded phase of a request. `start_us` is microseconds since
 /// the trace began (monotonic clock); remote spans joined from a shard
 /// keep the shard's own timebase, offset to the local wire span start.
+/// `cpu_us` is thread CPU time burned inside the phase — zero when the
+/// platform offers no thread cputime clock or the phase was untimed,
+/// and omitted from the JSON rendering in that case so documents stay
+/// byte-identical to pre-profiling builds.
 #[derive(Debug, Clone)]
 pub struct Span {
     pub id: u32,
@@ -45,6 +49,7 @@ pub struct Span {
     pub name: String,
     pub start_us: u64,
     pub dur_us: u64,
+    pub cpu_us: u64,
     pub tags: Vec<(String, String)>,
 }
 
@@ -99,10 +104,25 @@ impl ActiveTrace {
         dur_us: u64,
         tags: Vec<(String, String)>,
     ) -> u32 {
+        self.record_cpu_tagged(name, parent, start_us, dur_us, 0, tags)
+    }
+
+    /// Record a completed phase with thread CPU-time attribution.
+    /// `cpu_us == 0` means "not measured" (portable fallback) and
+    /// keeps the span's JSON free of the `cpu_us` field.
+    pub fn record_cpu_tagged(
+        &self,
+        name: &str,
+        parent: u32,
+        start_us: u64,
+        dur_us: u64,
+        cpu_us: u64,
+        tags: Vec<(String, String)>,
+    ) -> u32 {
         let mut g = self.inner.lock().unwrap();
         let id = g.next;
         g.next += 1;
-        g.spans.push(Span { id, parent, name: name.to_string(), start_us, dur_us, tags });
+        g.spans.push(Span { id, parent, name: name.to_string(), start_us, dur_us, cpu_us, tags });
         id
     }
 
@@ -141,6 +161,7 @@ impl ActiveTrace {
                 start_us: wire_start
                     + s.get("start_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
                 dur_us: s.get("dur_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+                cpu_us: s.get("cpu_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
                 tags,
             });
         }
@@ -261,11 +282,13 @@ impl Tracer {
         if !commit {
             return (fin, None);
         }
-        let mut spans_json = vec![span_json(ROOT_SPAN, ROOT_SPAN, "request", 0, total_us, &[])];
+        let mut spans_json = vec![span_json(ROOT_SPAN, ROOT_SPAN, "request", 0, total_us, 0, &[])];
         {
             let g = t.inner.lock().unwrap();
             for s in &g.spans {
-                spans_json.push(span_json(s.id, s.parent, &s.name, s.start_us, s.dur_us, &s.tags));
+                spans_json.push(span_json(
+                    s.id, s.parent, &s.name, s.start_us, s.dur_us, s.cpu_us, &s.tags,
+                ));
             }
         }
         let doc = json::obj(vec![
@@ -325,6 +348,12 @@ impl Tracer {
 /// trace document. Ring-buffer copies intentionally end at request
 /// completion; only the reply echo carries serialization time.
 pub fn append_span(doc: &mut Value, name: &str, dur_us: u64) {
+    append_span_cpu(doc, name, dur_us, 0)
+}
+
+/// [`append_span`] with CPU-time attribution; `cpu_us == 0` keeps the
+/// span's byte layout identical to the wall-only form.
+pub fn append_span_cpu(doc: &mut Value, name: &str, dur_us: u64, cpu_us: u64) {
     let total = doc.get("total_us").and_then(Value::as_f64).unwrap_or(0.0) as u64;
     if let Value::Object(o) = doc {
         if let Some(Value::Array(spans)) = o.get_mut("spans") {
@@ -333,17 +362,19 @@ pub fn append_span(doc: &mut Value, name: &str, dur_us: u64) {
                 .filter_map(|s| s.get("id").and_then(Value::as_usize))
                 .max()
                 .unwrap_or(0) as u32;
-            spans.push(span_json(max_id + 1, ROOT_SPAN, name, total, dur_us, &[]));
+            spans.push(span_json(max_id + 1, ROOT_SPAN, name, total, dur_us, cpu_us, &[]));
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn span_json(
     id: u32,
     parent: u32,
     name: &str,
     start_us: u64,
     dur_us: u64,
+    cpu_us: u64,
     tags: &[(String, String)],
 ) -> Value {
     let mut fields = vec![
@@ -353,6 +384,11 @@ fn span_json(
         ("start_us", json::num(start_us as f64)),
         ("dur_us", json::num(dur_us as f64)),
     ];
+    // Emitted only when measured: zero-fallback spans keep the exact
+    // pre-profiling byte layout (§4 parity contract).
+    if cpu_us > 0 {
+        fields.push(("cpu_us", json::num(cpu_us as f64)));
+    }
     if !tags.is_empty() {
         fields.push((
             "tags",
@@ -520,5 +556,105 @@ mod tests {
         let b = t.admit(false).unwrap();
         assert_ne!(a.trace_id, b.trace_id);
         assert!(a.trace_id.starts_with("t-"));
+    }
+
+    #[test]
+    fn recent_on_empty_ring_is_an_empty_array() {
+        let t = Tracer::new(0.0, 0);
+        let recent = t.recent(10);
+        assert_eq!(recent.as_array().map(Vec::len), Some(0));
+        assert_eq!(t.recent(0).as_array().map(Vec::len), Some(0));
+    }
+
+    #[test]
+    fn recent_limit_zero_and_overlarge_clamp_to_ring_contents() {
+        let t = Tracer::with_capacity(1.0, 0, 3);
+        for _ in 0..3 {
+            let h = t.admit(false).unwrap();
+            t.finish(&h, "sample", "default", None);
+        }
+        assert_eq!(t.recent(0).as_array().map(Vec::len), Some(0));
+        assert_eq!(t.recent(1).as_array().map(Vec::len), Some(1));
+        assert_eq!(t.recent(usize::MAX).as_array().map(Vec::len), Some(3));
+    }
+
+    #[test]
+    fn recent_is_newest_first_across_ring_wrap() {
+        let t = Tracer::with_capacity(1.0, 0, 3);
+        let mut ids = Vec::new();
+        for _ in 0..7 {
+            let h = t.admit(false).unwrap();
+            ids.push(h.trace_id.clone());
+            t.finish(&h, "sample", "default", None);
+        }
+        assert_eq!(t.dropped_count(), 4, "wrapped past capacity");
+        let recent = t.recent(10);
+        let got: Vec<&str> = recent
+            .as_array()
+            .unwrap()
+            .iter()
+            .filter_map(|d| d.get("trace_id").and_then(Value::as_str))
+            .collect();
+        // The three survivors, newest first.
+        assert_eq!(got, vec![ids[6].as_str(), ids[5].as_str(), ids[4].as_str()]);
+    }
+
+    #[test]
+    fn cpu_time_zero_fallback_omits_the_field_and_nonzero_emits_it() {
+        let t = Tracer::new(0.0, 0);
+        let h = t.admit(true).unwrap();
+        // Portable fallback: cpu unavailable → recorded as 0.
+        h.record("queue_wait", ROOT_SPAN, 0, 5);
+        h.record_cpu_tagged("panel_apply", ROOT_SPAN, 5, 40, 37, Vec::new());
+        let (_, doc) = t.finish(&h, "sample", "default", None);
+        let doc = doc.unwrap();
+        let spans = doc.get("spans").and_then(Value::as_array).unwrap();
+        let qw = &spans[1];
+        assert_eq!(qw.get("name").and_then(Value::as_str), Some("queue_wait"));
+        assert!(qw.get("cpu_us").is_none(), "zero cpu must not be rendered: {qw:?}");
+        let pa = &spans[2];
+        assert_eq!(pa.get("cpu_us").and_then(Value::as_usize), Some(37));
+        // The rendered text of the zero-cpu span is byte-identical to
+        // the pre-profiling layout (no `cpu_us` key at all).
+        assert!(!qw.to_string().contains("cpu_us"));
+    }
+
+    #[test]
+    fn append_span_cpu_carries_cpu_only_when_measured() {
+        let t = Tracer::new(0.0, 0);
+        let h = t.admit(true).unwrap();
+        let (_, doc) = t.finish(&h, "sample", "default", None);
+        let mut doc = doc.unwrap();
+        append_span_cpu(&mut doc, "serialize_reply", 9, 4);
+        append_span(&mut doc, "flush", 2);
+        let spans = doc.get("spans").and_then(Value::as_array).unwrap();
+        let ser = &spans[spans.len() - 2];
+        assert_eq!(ser.get("cpu_us").and_then(Value::as_usize), Some(4));
+        let flush = spans.last().unwrap();
+        assert_eq!(flush.get("name").and_then(Value::as_str), Some("flush"));
+        assert!(flush.get("cpu_us").is_none());
+    }
+
+    #[test]
+    fn attach_remote_preserves_remote_cpu_attribution() {
+        let t = Tracer::new(0.0, 0);
+        let h = t.admit(true).unwrap();
+        let wire = h.record("remote_wire", ROOT_SPAN, 100, 900);
+        let remote = Value::parse(
+            r#"{"trace_id":"t-shard","total_us":800,"spans":[
+                {"id":0,"parent":0,"name":"request","start_us":0,"dur_us":800},
+                {"id":1,"parent":0,"name":"panel_apply","start_us":10,"dur_us":700,"cpu_us":650}
+            ]}"#,
+        )
+        .unwrap();
+        h.attach_remote(wire, &remote);
+        let (_, doc) = t.finish(&h, "sample", "default", None);
+        let doc = doc.unwrap();
+        let spans = doc.get("spans").and_then(Value::as_array).unwrap();
+        let pa = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Value::as_str) == Some("panel_apply"))
+            .unwrap();
+        assert_eq!(pa.get("cpu_us").and_then(Value::as_usize), Some(650));
     }
 }

@@ -19,8 +19,9 @@
 //! handle engines and models carry.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Resolve a thread-count knob: `0` means "one per available core".
 pub fn resolve_threads(requested: usize) -> usize {
@@ -207,22 +208,33 @@ struct Job {
     poisoned: AtomicBool,
     done: Mutex<bool>,
     done_cv: Condvar,
+    /// Per-lane busy nanoseconds for this dispatch (lane 0 = the
+    /// submitter, lanes 1.. = pool workers). Each lane records its
+    /// elapsed time *before* the `Release` decrement of `pending`, so
+    /// the last finisher's `Acquire` fence plus the `done` mutex make
+    /// every entry visible to the submitter after [`Job::wait_done`].
+    lane_busy: Vec<AtomicU64>,
 }
 
 impl Job {
-    /// Claim and run tasks until the job is exhausted.
-    fn run_tasks(&self) {
+    /// Claim and run tasks until the job is exhausted, charging busy
+    /// time to `lane`.
+    fn run_tasks(&self, lane: usize) {
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.n_tasks {
                 return;
             }
+            let t0 = Instant::now();
             // SAFETY: the submitter blocks in `wait_done` until `pending`
             // hits zero, so the closure (and everything it borrows) is
             // alive for every claimed task.
             let f = unsafe { &*self.task.0 };
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
                 self.poisoned.store(true, Ordering::Release);
+            }
+            if let Some(b) = self.lane_busy.get(lane) {
+                b.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
             if self.pending.fetch_sub(1, Ordering::Release) == 1 {
                 std::sync::atomic::fence(Ordering::Acquire);
@@ -246,6 +258,38 @@ struct PoolShared {
     shutdown: AtomicBool,
 }
 
+/// Cumulative pool telemetry (DESIGN.md §14), folded in by each
+/// submitter after its job completes. Counters only — reading them
+/// never takes the queue lock or perturbs the data path.
+struct PoolStats {
+    /// Cumulative busy nanoseconds per lane (lane 0 = submitters).
+    busy_ns: Vec<AtomicU64>,
+    dispatches: AtomicU64,
+    /// Chunk imbalance of the latest dispatch: `max_lane_busy /
+    /// mean_lane_busy` over lanes that did work, in permille (1000 =
+    /// perfectly balanced).
+    imbalance_last_permille: AtomicU64,
+    imbalance_sum_permille: AtomicU64,
+    imbalance_samples: AtomicU64,
+}
+
+thread_local! {
+    /// Busy nanoseconds of pool sections dispatched from this thread
+    /// since the last [`take_section_busy_ns`] call. Because every
+    /// lane's busy time is folded in on the *submitting* thread after
+    /// `wait_done`, a coordinator worker can attribute exactly the
+    /// pool work its own request caused — even with concurrent
+    /// submitters interleaving on the same pool.
+    static SECTION_BUSY_NS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Drain this thread's accumulated pool-section busy time (see
+/// [`SECTION_BUSY_NS`]). Returns 0 when every section since the last
+/// call ran inline (below [`PAR_MIN_ELEMS`]) or off-pool.
+pub fn take_section_busy_ns() -> u64 {
+    SECTION_BUSY_NS.with(|c| c.replace(0))
+}
+
 /// A persistent pool of worker threads parked on a condvar, dispatching
 /// the same disjoint-contiguous-chunk tasks [`run_chunked`] spawns scoped
 /// threads for. Replacing the per-section spawns with a parked-thread
@@ -261,6 +305,8 @@ pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     width: usize,
+    stats: PoolStats,
+    created: Instant,
 }
 
 impl std::fmt::Debug for WorkerPool {
@@ -284,16 +330,83 @@ impl WorkerPool {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("icr-pool-{w}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, w))
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { shared, handles, width }
+        let stats = PoolStats {
+            busy_ns: (0..width).map(|_| AtomicU64::new(0)).collect(),
+            dispatches: AtomicU64::new(0),
+            imbalance_last_permille: AtomicU64::new(0),
+            imbalance_sum_permille: AtomicU64::new(0),
+            imbalance_samples: AtomicU64::new(0),
+        };
+        WorkerPool { shared, handles, width, stats, created: Instant::now() }
     }
 
     /// Total execution lanes (spawned workers + the submitting thread).
     pub fn width(&self) -> usize {
         self.width
+    }
+
+    /// Cumulative busy nanoseconds per lane. Lane 0 aggregates every
+    /// submitting thread; lanes 1.. are the `icr-pool-{lane}` workers.
+    pub fn busy_ns_per_lane(&self) -> Vec<u64> {
+        self.stats.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Cumulative busy nanoseconds across all lanes.
+    pub fn total_busy_ns(&self) -> u64 {
+        self.stats.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Parallel sections dispatched (inline-gated sections excluded).
+    pub fn dispatches(&self) -> u64 {
+        self.stats.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Chunk imbalance of the latest dispatch, permille (1000 = even).
+    pub fn imbalance_last_permille(&self) -> u64 {
+        self.stats.imbalance_last_permille.load(Ordering::Relaxed)
+    }
+
+    /// Mean chunk imbalance over all dispatches, permille.
+    pub fn imbalance_mean_permille(&self) -> u64 {
+        let n = self.stats.imbalance_samples.load(Ordering::Relaxed);
+        if n == 0 {
+            0
+        } else {
+            self.stats.imbalance_sum_permille.load(Ordering::Relaxed) / n
+        }
+    }
+
+    /// Saturation gauge in `[0, 1]`: the fraction of the pool's total
+    /// lane-time (width × wall time since creation) spent busy.
+    pub fn saturation(&self) -> f64 {
+        let wall_ns = self.created.elapsed().as_nanos() as f64 * self.width as f64;
+        if wall_ns <= 0.0 {
+            return 0.0;
+        }
+        (self.total_busy_ns() as f64 / wall_ns).clamp(0.0, 1.0)
+    }
+
+    /// Stats-document rendering (the `observability.pool` section).
+    pub fn telemetry_json(&self) -> crate::json::Value {
+        use crate::json;
+        let lanes = self
+            .busy_ns_per_lane()
+            .into_iter()
+            .map(|ns| json::num(ns as f64 / 1e9))
+            .collect();
+        json::obj(vec![
+            ("width", json::num(self.width as f64)),
+            ("dispatches", json::num(self.dispatches() as f64)),
+            ("busy_s_per_lane", json::arr(lanes)),
+            ("busy_s_total", json::num(self.total_busy_ns() as f64 / 1e9)),
+            ("saturation", json::num(self.saturation())),
+            ("imbalance_last", json::num(self.imbalance_last_permille() as f64 / 1000.0)),
+            ("imbalance_mean", json::num(self.imbalance_mean_permille() as f64 / 1000.0)),
+        ])
     }
 
     /// Dispatch one parallel section: identical contract and identical
@@ -336,21 +449,51 @@ impl WorkerPool {
             poisoned: AtomicBool::new(false),
             done: Mutex::new(false),
             done_cv: Condvar::new(),
+            lane_busy: (0..self.width).map(|_| AtomicU64::new(0)).collect(),
         });
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push_back(job.clone());
         }
         self.shared.work_cv.notify_all();
-        job.run_tasks();
+        job.run_tasks(0);
         job.wait_done();
         {
             // Drop the queue's reference if no worker got to it.
             let mut q = self.shared.queue.lock().unwrap();
             q.retain(|j| !Arc::ptr_eq(j, &job));
         }
+        self.fold_job_stats(&job);
         if job.poisoned.load(Ordering::Acquire) {
             panic!("worker pool task panicked");
+        }
+    }
+
+    /// Fold a completed job's per-lane busy time into the cumulative
+    /// telemetry and this thread's section accumulator. Runs on the
+    /// submitting thread after `wait_done`, so every lane entry is
+    /// visible (see [`Job::lane_busy`]).
+    fn fold_job_stats(&self, job: &Job) {
+        let mut total = 0u64;
+        let mut max_busy = 0u64;
+        let mut active = 0u64;
+        for (lane, b) in job.lane_busy.iter().enumerate() {
+            let ns = b.load(Ordering::Relaxed);
+            if ns > 0 {
+                total += ns;
+                max_busy = max_busy.max(ns);
+                active += 1;
+                self.stats.busy_ns[lane].fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+        self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+        if total > 0 {
+            // max / mean over active lanes, in permille.
+            let imb = (max_busy as u128 * active as u128 * 1000 / total as u128) as u64;
+            self.stats.imbalance_last_permille.store(imb, Ordering::Relaxed);
+            self.stats.imbalance_sum_permille.fetch_add(imb, Ordering::Relaxed);
+            self.stats.imbalance_samples.fetch_add(1, Ordering::Relaxed);
+            SECTION_BUSY_NS.with(|c| c.set(c.get().saturating_add(total)));
         }
     }
 }
@@ -365,7 +508,7 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, lane: usize) {
     let mut q = shared.queue.lock().unwrap();
     loop {
         // Skip fully claimed jobs (their submitter cleans up too; this is
@@ -375,7 +518,7 @@ fn worker_loop(shared: &PoolShared) {
         }
         if let Some(job) = q.front().cloned() {
             drop(q);
-            job.run_tasks();
+            job.run_tasks(lane);
             q = shared.queue.lock().unwrap();
             continue;
         }
@@ -446,12 +589,35 @@ impl Exec {
     }
 
     /// Short human-readable description for banners and the `stats`
-    /// document: `serial`, `scoped(t)` or `pool(t)`.
+    /// document: `serial`, `scoped(t)` or `pool(t)`. Once a pool has
+    /// dispatched work the description appends its cumulative busy
+    /// time and saturation — a fresh pool keeps the bare `pool(t)`
+    /// form so startup banners stay stable.
     pub fn describe(&self) -> String {
         match self {
             Exec::Serial => "serial".to_string(),
             Exec::Scoped(t) => format!("scoped({t})"),
-            Exec::Pool(p) => format!("pool({})", p.width()),
+            Exec::Pool(p) => {
+                if p.dispatches() == 0 {
+                    format!("pool({})", p.width())
+                } else {
+                    format!(
+                        "pool({}; busy={:.3}s; sat={:.2})",
+                        p.width(),
+                        p.total_busy_ns() as f64 / 1e9,
+                        p.saturation()
+                    )
+                }
+            }
+        }
+    }
+
+    /// The underlying pool, when this executor dispatches to one —
+    /// telemetry consumers (stats, Prometheus) read its counters.
+    pub fn pool_handle(&self) -> Option<&Arc<WorkerPool>> {
+        match self {
+            Exec::Pool(p) => Some(p),
+            _ => None,
         }
     }
 
@@ -653,6 +819,77 @@ mod tests {
         assert_eq!(Exec::scoped(4).describe(), "scoped(4)");
         assert_eq!(Exec::pooled(4).describe(), "pool(4)");
         assert_eq!(Exec::pooled(1).describe(), "serial");
+    }
+
+    #[test]
+    fn pool_telemetry_accumulates_busy_dispatches_and_imbalance() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.dispatches(), 0);
+        assert_eq!(pool.total_busy_ns(), 0);
+        take_section_busy_ns(); // drain any prior test's residue
+        let items = 64;
+        let mut out = vec![0.0; items];
+        pool.run_chunked(&mut out, 1, items, 4, |start, count, chunk| {
+            // Enough arithmetic per chunk that busy time is nonzero.
+            for i in 0..count {
+                let mut acc = 0.0f64;
+                for k in 0..20_000 {
+                    acc += ((start + i + k) as f64 * 0.001).sin();
+                }
+                chunk[i] = acc;
+            }
+        });
+        assert_eq!(pool.dispatches(), 1);
+        assert!(pool.total_busy_ns() > 0, "busy time must be recorded");
+        assert_eq!(pool.busy_ns_per_lane().len(), 4);
+        // max/mean over active lanes is at least 1.0 by construction.
+        assert!(pool.imbalance_last_permille() >= 1000);
+        assert_eq!(pool.imbalance_mean_permille(), pool.imbalance_last_permille());
+        let sat = pool.saturation();
+        assert!((0.0..=1.0).contains(&sat), "saturation out of range: {sat}");
+        // The submitter's section accumulator saw exactly this job.
+        let section = take_section_busy_ns();
+        assert_eq!(section, pool.total_busy_ns());
+        assert_eq!(take_section_busy_ns(), 0, "drained on read");
+    }
+
+    #[test]
+    fn inline_gated_sections_record_no_dispatch() {
+        let pool = WorkerPool::new(4);
+        take_section_busy_ns();
+        let mut out = vec![0.0; 8];
+        pool.run_chunked(&mut out, 1, 8, 1, |start, count, chunk| {
+            for i in 0..count {
+                chunk[i] = (start + i) as f64;
+            }
+        });
+        assert_eq!(out[7], 7.0);
+        assert_eq!(pool.dispatches(), 0, "threads=1 runs inline");
+        assert_eq!(pool.total_busy_ns(), 0);
+        assert_eq!(take_section_busy_ns(), 0);
+    }
+
+    #[test]
+    fn describe_appends_telemetry_only_after_dispatch() {
+        let exec = Exec::pooled(4);
+        assert_eq!(exec.describe(), "pool(4)", "fresh pool keeps the bare form");
+        let pool = exec.pool_handle().expect("pooled exec exposes its pool").clone();
+        let mut out = vec![0.0; 32];
+        exec.run_chunked(&mut out, 1, 32, 4, |start, count, chunk| {
+            for i in 0..count {
+                chunk[i] = ((start + i) as f64).sqrt();
+            }
+        });
+        assert!(pool.dispatches() >= 1);
+        let d = exec.describe();
+        assert!(d.starts_with("pool(4; busy="), "telemetry missing: {d}");
+        assert!(d.contains("sat="), "{d}");
+        assert!(Exec::Serial.pool_handle().is_none());
+        let doc = pool.telemetry_json();
+        assert_eq!(doc.get("width").and_then(crate::json::Value::as_usize), Some(4));
+        assert_eq!(doc.get("dispatches").and_then(crate::json::Value::as_usize), Some(1));
+        let lanes = doc.get("busy_s_per_lane").and_then(crate::json::Value::as_array).unwrap();
+        assert_eq!(lanes.len(), 4);
     }
 
     #[test]

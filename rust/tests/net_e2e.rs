@@ -660,6 +660,86 @@ fn nondraining_reader_backpressure_buffers_and_keeps_order() {
 }
 
 #[test]
+fn metrics_scrapes_answer_during_a_graceful_drain() {
+    // `DESIGN.md` §14 satellite: the `--metrics-listen` endpoint must
+    // keep answering while the server drains in-flight work — an
+    // operator watches a drain through the scrape — and goes away only
+    // after every session has flushed.
+    let mut cfg = small_cfg();
+    cfg.workers = 1;
+    cfg.io_mode = IoMode::Threads;
+    cfg.metrics_listen = Some("tcp:127.0.0.1:0".into());
+    let path = sock_path();
+    cfg.listen = ListenAddr::Unix(path.clone());
+    let coord = Arc::new(Coordinator::start(cfg.clone()).expect("coordinator"));
+    let server = NetServer::bind(&cfg, coord.clone()).expect("bind");
+    let metrics_addr = server
+        .metrics_addr()
+        .expect("metrics endpoint")
+        .strip_prefix("tcp:")
+        .expect("tcp addr")
+        .to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let scrape = |addr: &str| -> String {
+        let mut conn = TcpStream::connect(addr).expect("connect metrics");
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").expect("scrape send");
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).expect("scrape read");
+        resp
+    };
+    assert!(scrape(&metrics_addr).starts_with("HTTP/1.1 200 OK"), "healthy scrape failed");
+
+    // Pin the single worker on a slow inference, then request a drain
+    // while its reply is still in flight.
+    let n_obs = coord.engine().obs_indices().len();
+    let y_json = vec!["0.1"; n_obs].join(",");
+    let mut c = Client::unix(&path);
+    c.send(&format!(
+        r#"{{"v": 2, "op": "infer", "id": 0, "y_obs": [{y_json}], "sigma": 0.5, "steps": 30000, "lr": 0.05}}"#
+    ));
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while coord.metrics().counter("requests_submitted").get() < 1 {
+        assert!(Instant::now() < deadline, "request never submitted");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::SeqCst);
+
+    // The drain window is open: the reply has not flushed, yet the
+    // scrape endpoint still answers a full exposition document.
+    assert!(!handle.is_finished(), "server drained before the scrape window opened");
+    let during = scrape(&metrics_addr);
+    assert!(during.starts_with("HTTP/1.1 200 OK"), "scrape during drain failed: {during}");
+    assert!(during.contains("icr_uptime_seconds"), "not an exposition document");
+    assert!(
+        !handle.is_finished(),
+        "drain finished before the scrape — the window was not exercised"
+    );
+
+    // The in-flight reply still arrives, the session hangs up, and only
+    // then does the scrape endpoint stop.
+    let v = c.recv();
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    assert!(c.at_eof(), "server must hang up after the drain");
+    handle.join().unwrap().unwrap();
+    match TcpStream::connect(&metrics_addr) {
+        Err(_) => {} // listener gone, as expected
+        Ok(mut conn) => {
+            // The connect can race the listener teardown; no scrape may
+            // be answered either way.
+            conn.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let _ = conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+            let mut resp = String::new();
+            let _ = conn.read_to_string(&mut resp);
+            assert!(resp.is_empty(), "scrape served after listener shutdown: {resp}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn io_modes_serve_identical_bytes() {
     // The identical request script — good frames, a protocol error, a
     // malformed line, interleaved v1/v2 — must come back byte-for-byte
